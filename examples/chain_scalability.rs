@@ -1,0 +1,44 @@
+//! Chain-scalability study: the paper's headline comparison as a single
+//! runnable — dd throughput, memory footprint and lookup cost for both
+//! drivers across chain lengths (a compact Fig 10+12+15 sweep).
+//!
+//!     cargo run --release --example chain_scalability
+
+use sqemu::bench::figures::{run_pair, ExpConfig};
+use sqemu::guest::dd::Dd;
+use sqemu::guest::Workload;
+use sqemu::qcow::image::DataMode;
+use sqemu::util::human_ns;
+
+fn main() -> anyhow::Result<()> {
+    println!(
+        "{:>6} | {:>10} {:>10} | {:>9} {:>9} | {:>10} {:>10}",
+        "chain", "vq MiB/s", "sq MiB/s", "vq MiB", "sq MiB", "vq lookup", "sq lookup"
+    );
+    println!("{}", "-".repeat(78));
+    for chain_len in [1usize, 10, 25, 50, 100, 200] {
+        let cfg = ExpConfig {
+            disk_size: 2 << 30,
+            chain_len,
+            populated: 0.9,
+            data_mode: DataMode::Synthetic,
+            ..Default::default()
+        };
+        let (v, s) = run_pair(&cfg, || Box::new(Dd::default()) as Box<dyn Workload>)?;
+        println!(
+            "{:>6} | {:>10.1} {:>10.1} | {:>9.1} {:>9.1} | {:>10} {:>10}",
+            chain_len,
+            v.stats.throughput_bps() / (1 << 20) as f64,
+            s.stats.throughput_bps() / (1 << 20) as f64,
+            v.mem_peak as f64 / (1 << 20) as f64,
+            s.mem_peak as f64 / (1 << 20) as f64,
+            human_ns(v.lookup_hist.mean() as u64),
+            human_ns(s.lookup_hist.mean() as u64),
+        );
+    }
+    println!(
+        "\nvanilla degrades in every column as the chain grows; sqemu stays flat \
+         (§4 problem, §5 fix, §6 evaluation)."
+    );
+    Ok(())
+}

@@ -1,0 +1,156 @@
+//! END-TO-END DRIVER: the full system on a realistic small workload.
+//!
+//! A coordinator with three storage nodes serves a mixed fleet:
+//!  * two SQEMU VMs and one vanilla VM on 60-snapshot chains;
+//!  * concurrent client threads issue batched read/write requests;
+//!  * mid-run the control plane takes a live snapshot of every VM and
+//!    stream-merges one chain window;
+//!  * the bulk PJRT path (boot prefetch planning) runs against a live
+//!    chain.
+//!
+//! Reports per-VM throughput/latency (virtual time), fleet wall-clock
+//! throughput, low-level cache counters and the memory account — the
+//! numbers recorded in EXPERIMENTS.md §E2E.
+//!
+//!     make artifacts && cargo run --release --example e2e_serving
+
+use sqemu::cache::CacheConfig;
+use sqemu::chaingen::ChainSpec;
+use sqemu::coordinator::server::VmChain;
+use sqemu::coordinator::{Coordinator, VmConfig};
+use sqemu::qcow::image::DataMode;
+use sqemu::qcow::Chain;
+use sqemu::util::rng::Rng;
+use sqemu::util::{human_bytes, human_ns};
+use sqemu::vdisk::DriverKind;
+use std::time::Instant;
+
+const DISK: u64 = 1 << 30;
+const CHAIN_LEN: usize = 60;
+const REQUESTS_PER_CLIENT: u64 = 4_000;
+const CLIENTS_PER_VM: usize = 2;
+
+fn main() -> anyhow::Result<()> {
+    let coord = Coordinator::with_fresh_nodes(3)?;
+    let fleet = [
+        ("vm-sq-0", DriverKind::Scalable),
+        ("vm-sq-1", DriverKind::Scalable),
+        ("vm-vq-0", DriverKind::Vanilla),
+    ];
+    println!("== launch: {} VMs on chains of {CHAIN_LEN} ==", fleet.len());
+    for (i, (name, kind)) in fleet.iter().enumerate() {
+        let t0 = Instant::now();
+        coord.launch_vm(
+            name,
+            VmConfig {
+                driver: *kind,
+                cache: CacheConfig::new(512, 2 << 20),
+                chain: VmChain::Generate(ChainSpec {
+                    disk_size: DISK,
+                    chain_len: CHAIN_LEN,
+                    populated: 0.5,
+                    stamped: *kind == DriverKind::Scalable,
+                    data_mode: DataMode::Synthetic,
+                    prefix: name.to_string(),
+                    seed: 0xE2E ^ i as u64,
+                    ..Default::default()
+                }),
+            },
+        )?;
+        println!("  {name} ({}) up in {:?}", kind.name(), t0.elapsed());
+    }
+
+    // bulk PJRT path: boot-prefetch plan for vm-sq-0's chain
+    let chain = Chain::open(
+        coord.nodes.as_ref(),
+        &format!("vm-sq-0-{}", CHAIN_LEN - 1),
+        DataMode::Synthetic,
+    )?;
+    let bt = coord.translator();
+    let plan = bt.prefetch_plan(&chain, 4096)?;
+    println!(
+        "\n== bulk translation ({}) ==\nboot-prefetch plan: {} of the first 4096 \
+         clusters resolve to backing files",
+        if bt.is_accelerated() { "PJRT artifacts" } else { "host fallback" },
+        plan.len()
+    );
+
+    // serve: concurrent clients against every VM
+    println!("\n== serving {REQUESTS_PER_CLIENT} reqs x {CLIENTS_PER_VM} clients per VM ==");
+    let wall0 = Instant::now();
+    let virt0 = coord.clock.now();
+    let mut handles = vec![];
+    for (name, _) in &fleet {
+        for c in 0..CLIENTS_PER_VM {
+            let client = coord.client(name)?;
+            let name = name.to_string();
+            handles.push(std::thread::spawn(move || -> anyhow::Result<()> {
+                let mut rng = Rng::new(c as u64 ^ 0xC11E27);
+                for i in 0..REQUESTS_PER_CLIENT {
+                    let voff = rng.below(DISK - 8192);
+                    if rng.chance(0.15) {
+                        client.write(voff, vec![(i % 251) as u8; 1024])?;
+                    } else {
+                        client.read(voff, 4096)?;
+                    }
+                }
+                let _ = name;
+                Ok(())
+            }));
+        }
+    }
+
+    // control plane acts while the fleet serves: live snapshots + stream
+    std::thread::sleep(std::time::Duration::from_millis(50));
+    for (name, _) in &fleet {
+        let ns = coord.snapshot_vm(name, &format!("{name}-live-snap"))?;
+        println!("  live snapshot of {name}: {}", human_ns(ns));
+    }
+    let report = coord.stream_vm("vm-sq-1", 5, 15)?;
+    println!(
+        "  streamed vm-sq-1 files 5..=15: {} clusters moved, chain {} -> {}, {}",
+        report.copied_clusters,
+        report.len_before,
+        report.len_after,
+        human_ns(report.merge_ns)
+    );
+
+    for h in handles {
+        h.join().unwrap()?;
+    }
+    let wall = wall0.elapsed();
+    let virt = coord.clock.now() - virt0;
+
+    println!("\n== results ==");
+    let mut total_ops = 0u64;
+    for (name, _) in &fleet {
+        let s = coord.vm_stats(name)?;
+        let c = coord.client(name)?.counters()?;
+        let ops = s.reads + s.writes;
+        total_ops += ops;
+        println!(
+            "  {name}: {ops} ops ({} read) | hits {} misses {} hit-unalloc {} | \
+             snapshots {} streams {}",
+            human_bytes(s.bytes_read),
+            c.hits,
+            c.misses,
+            c.hit_unallocated,
+            s.snapshots,
+            s.streams
+        );
+    }
+    println!(
+        "\nfleet: {total_ops} ops | wall {:.2}s = {:.0} ops/s | virtual {} \
+         (mean {} per op)",
+        wall.as_secs_f64(),
+        total_ops as f64 / wall.as_secs_f64(),
+        human_ns(virt),
+        human_ns(virt / total_ops.max(1))
+    );
+    println!("memory accounted across the fleet: {}", human_bytes(coord.acct.total()));
+    println!("storage usage per node: {:?}", coord.nodes.usage()
+        .iter().map(|(n, b)| format!("{n}={}", human_bytes(*b))).collect::<Vec<_>>());
+    coord.shutdown();
+    println!("\ne2e OK");
+    Ok(())
+}

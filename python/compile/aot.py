@@ -1,0 +1,82 @@
+"""AOT export: lower every L2 graph to HLO *text* + a manifest for Rust.
+
+HLO text (NOT serialized protos) is the interchange format: jax >= 0.5
+emits HloModuleProto with 64-bit instruction ids which xla_extension 0.5.1
+(the version behind the published ``xla`` 0.1.6 crate) rejects; the text
+parser reassigns ids and round-trips cleanly. See /opt/xla-example/README.md.
+
+Usage:  cd python && python -m compile.aot --outdir ../artifacts
+Writes ``<name>.hlo.txt`` per artifact plus ``manifest.json`` describing
+shapes/dtypes so the Rust runtime can validate its buffers.
+"""
+
+import argparse
+import json
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from .model import ARTIFACTS, BATCH, CHAIN, CLUSTERS, STREAM_DEPTH
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (ids reassigned by parser)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def export_all(outdir: str) -> dict:
+    os.makedirs(outdir, exist_ok=True)
+    manifest = {
+        "constants": {
+            "batch": BATCH,
+            "clusters": CLUSTERS,
+            "chain": CHAIN,
+            "stream_depth": STREAM_DEPTH,
+            "unallocated": -1,
+        },
+        "artifacts": {},
+    }
+    for name, (fn, example_args) in ARTIFACTS.items():
+        lowered = jax.jit(fn).lower(*example_args)
+        text = to_hlo_text(lowered)
+        path = os.path.join(outdir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        out_tree = jax.eval_shape(fn, *example_args)
+        flat_out = jax.tree_util.tree_leaves(out_tree)
+        manifest["artifacts"][name] = {
+            "file": os.path.basename(path),
+            "inputs": [
+                {"shape": list(a.shape), "dtype": str(a.dtype)}
+                for a in example_args
+            ],
+            "outputs": [
+                {"shape": list(o.shape), "dtype": str(o.dtype)}
+                for o in flat_out
+            ],
+        }
+        print(f"wrote {path} ({len(text)} chars, {len(flat_out)} outputs)")
+    mpath = os.path.join(outdir, "manifest.json")
+    with open(mpath, "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote {mpath}")
+    return manifest
+
+
+def main() -> None:
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--outdir", default="../artifacts")
+    # kept for Makefile back-compat; --out FILE means "outdir of FILE"
+    p.add_argument("--out", default=None, help=argparse.SUPPRESS)
+    args = p.parse_args()
+    outdir = os.path.dirname(args.out) if args.out else args.outdir
+    export_all(outdir or ".")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,53 @@
+"""Layer-1 Pallas kernel: L2-table merge / cache correction (§5.3, §5.4).
+
+The same precedence rule serves three paper operations:
+  * cache correction — refreshing a unified-cache slice from an on-disk
+    backing-file slice;
+  * SQEMU snapshot creation — stamping the new active volume with the full
+    L2 content of the previous one;
+  * streaming — folding the tables of merged (deleted) backing files.
+
+Rule: the entry from ``b`` wins iff ``bfi_v <= bfi_b`` (newer-or-equal
+backing file index takes precedence; -1 = unallocated loses to anything).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Elementwise over clusters; 1024 i32s per block keeps VMEM use trivial and
+# the grid long enough to pipeline HBM streams on real hardware.
+BLOCK_C = 1024
+
+
+def _merge_kernel(off_v_ref, bfi_v_ref, off_b_ref, bfi_b_ref,
+                  out_off_ref, out_bfi_ref):
+    bfi_v = bfi_v_ref[...]
+    bfi_b = bfi_b_ref[...]
+    take_b = bfi_v <= bfi_b
+    out_off_ref[...] = jnp.where(take_b, off_b_ref[...], off_v_ref[...])
+    out_bfi_ref[...] = jnp.where(take_b, bfi_b, bfi_v)
+
+
+@functools.partial(jax.jit, static_argnames=("block_c",))
+def merge_l2(off_v, bfi_v, off_b, bfi_b, *, block_c=BLOCK_C):
+    """Merge slice ``b`` into slice ``v`` under the §5.3 precedence rule.
+
+    All inputs are i32[c] with c % block_c == 0. Returns (off, bfi).
+    """
+    (c,) = off_v.shape
+    grid = (c // block_c,)
+    spec = pl.BlockSpec((block_c,), lambda i: (i,))
+    return pl.pallas_call(
+        _merge_kernel,
+        grid=grid,
+        in_specs=[spec] * 4,
+        out_specs=[spec, spec],
+        out_shape=[
+            jax.ShapeDtypeStruct((c,), jnp.int32),
+            jax.ShapeDtypeStruct((c,), jnp.int32),
+        ],
+        interpret=True,
+    )(off_v, bfi_v, off_b, bfi_b)

@@ -1,0 +1,78 @@
+"""Pure-jnp reference oracles for the Pallas kernels.
+
+These are the CORE correctness signal: every Pallas kernel in this package
+is checked against these functions by pytest/hypothesis at build time
+(python/tests/test_kernel.py). Keep them dead simple — no pallas, no
+cleverness.
+
+Data model (shared with the Rust side, see rust/src/runtime/):
+  * An L2 table is flattened per virtual disk into two i32 arrays of length
+    ``num_clusters``:
+      - ``off[c]``  : host cluster offset of virtual cluster ``c`` inside the
+                      backing file that owns it, or -1 if unallocated.
+      - ``bfi[c]``  : backing_file_index of the owning file (0 = base image,
+                      increasing towards the active volume), or -1.
+  * The vanilla (vQemu) driver has no ``bfi`` metadata; its view is a stack
+    ``tables[n, c]`` of per-backing-file offset arrays (-1 = not present in
+    that file) that must be walked from the active volume (n-1) downwards.
+"""
+
+import jax
+import jax.numpy as jnp
+
+UNALLOCATED = -1
+
+
+def direct_translate_ref(off, bfi, vbs):
+    """SQEMU direct access: one gather per request (§5.3).
+
+    Returns ``(bfi[vbs], off[vbs])`` — the owning backing file and host
+    cluster for each requested virtual cluster.
+    """
+    return jnp.take(bfi, vbs, axis=0), jnp.take(off, vbs, axis=0)
+
+
+def chain_walk_translate_ref(tables, vbs):
+    """vQemu chain walk: scan backing files from the active volume down.
+
+    ``tables`` is ``i32[n, c]``; for each request the first file (highest
+    index) holding the cluster wins. Returns ``(bfi, off)`` with -1/-1 when
+    no file in the chain holds the cluster.
+    """
+    n = tables.shape[0]
+    off0 = jnp.full(vbs.shape, UNALLOCATED, dtype=jnp.int32)
+    bfi0 = jnp.full(vbs.shape, UNALLOCATED, dtype=jnp.int32)
+
+    def body(i, carry):
+        off, bfi = carry
+        j = n - 1 - i
+        t = jnp.take(tables[j], vbs, axis=0)
+        found = (bfi == UNALLOCATED) & (t != UNALLOCATED)
+        return (
+            jnp.where(found, t, off),
+            jnp.where(found, jnp.int32(j), bfi),
+        )
+
+    off, bfi = jax.lax.fori_loop(0, n, body, (off0, bfi0))
+    return bfi, off
+
+
+def merge_l2_ref(off_v, bfi_v, off_b, bfi_b):
+    """Cache correction / L2 merge rule (§5.3, §5.4).
+
+    The entry from slice ``b`` replaces the entry in slice ``v`` iff
+    ``bfi_v <= bfi_b``. With the -1 unallocated sentinel this also covers
+    "v unallocated, b allocated" (take b) and "both unallocated" (no-op).
+    """
+    take_b = bfi_v <= bfi_b
+    return jnp.where(take_b, off_b, off_v), jnp.where(take_b, bfi_b, bfi_v)
+
+
+def bfi_histogram_ref(bfi, num_files):
+    """Per-backing-file lookup distribution (Fig 13c bulk path).
+
+    Counts how many resolved requests land on each backing file index;
+    index ``num_files`` accumulates unallocated (-1) results.
+    """
+    clipped = jnp.where(bfi == UNALLOCATED, num_files, bfi)
+    return jnp.bincount(clipped, length=num_files + 1).astype(jnp.int32)

@@ -1,0 +1,129 @@
+"""Layer-1 Pallas kernels: batched virtual-cluster -> host-cluster resolution.
+
+Two kernels implement the two driver designs the paper compares:
+
+  * ``direct_translate``   — SQEMU (§5.3): the L2 entry already carries the
+    ``backing_file_index`` of the owning file, so resolution is a single
+    gather regardless of chain length. O(1) table traffic per request.
+  * ``chain_walk_translate`` — vQemu baseline (§2, Fig 3): no ownership
+    metadata; the kernel walks the chain from the active volume downwards
+    with masked selects. O(N) table traffic per request — this asymmetry is
+    exactly the scalability problem of §4 expressed at the kernel level.
+
+TPU adaptation (DESIGN.md §Hardware-Adaptation): the L2 table block is the
+VMEM-resident analogue of the driver's slice cache; requests are tiled over
+the grid; the chain walk is a ``fori_loop`` over chain depth (sequential HBM
+block streams), not an unrolled loop. interpret=True everywhere — the CPU
+PJRT plugin cannot run Mosaic custom-calls; real-TPU perf is estimated in
+DESIGN.md.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import UNALLOCATED
+
+# Default block of requests resolved per grid step. 256 i32 lanes is a
+# multiple of the 8x128 VPU tile; the table block dominates VMEM instead.
+BLOCK_B = 256
+
+
+def _direct_kernel(vb_ref, off_ref, bfi_ref, out_bfi_ref, out_off_ref):
+    vb = vb_ref[...]
+    table_off = off_ref[...]
+    table_bfi = bfi_ref[...]
+    out_off_ref[...] = jnp.take(table_off, vb, axis=0)
+    out_bfi_ref[...] = jnp.take(table_bfi, vb, axis=0)
+
+
+@functools.partial(jax.jit, static_argnames=("block_b",))
+def direct_translate(off, bfi, vbs, *, block_b=BLOCK_B):
+    """Resolve ``vbs`` against a unified L2 table (SQEMU direct access).
+
+    Args:
+      off:  i32[c] host cluster offsets (-1 unallocated).
+      bfi:  i32[c] owning backing_file_index (-1 unallocated).
+      vbs:  i32[b] requested virtual cluster indices, b % block_b == 0.
+    Returns:
+      (bfi_out, off_out): i32[b] each.
+    """
+    (b,) = vbs.shape
+    (c,) = off.shape
+    grid = (b // block_b,)
+    return pl.pallas_call(
+        _direct_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_b,), lambda i: (i,)),
+            pl.BlockSpec((c,), lambda i: (0,)),  # whole table resident
+            pl.BlockSpec((c,), lambda i: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_b,), lambda i: (i,)),
+            pl.BlockSpec((block_b,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b,), jnp.int32),
+            jax.ShapeDtypeStruct((b,), jnp.int32),
+        ],
+        interpret=True,
+    )(vbs, off, bfi)
+
+
+def _walk_kernel(vb_ref, tables_ref, out_bfi_ref, out_off_ref):
+    vb = vb_ref[...]
+    tables = tables_ref[...]
+    n = tables.shape[0]
+    off0 = jnp.full(vb.shape, UNALLOCATED, dtype=jnp.int32)
+    bfi0 = jnp.full(vb.shape, UNALLOCATED, dtype=jnp.int32)
+
+    def body(i, carry):
+        off, bfi = carry
+        j = n - 1 - i
+        # One full table row streamed per chain hop: the O(N) traffic the
+        # paper's Eq. 1 charges to vQemu.
+        t = jnp.take(tables[j], vb, axis=0)
+        found = (bfi == UNALLOCATED) & (t != UNALLOCATED)
+        return (
+            jnp.where(found, t, off),
+            jnp.where(found, jnp.int32(j), bfi),
+        )
+
+    off, bfi = jax.lax.fori_loop(0, n, body, (off0, bfi0))
+    out_off_ref[...] = off
+    out_bfi_ref[...] = bfi
+
+
+@functools.partial(jax.jit, static_argnames=("block_b",))
+def chain_walk_translate(tables, vbs, *, block_b=BLOCK_B):
+    """Resolve ``vbs`` by walking a chain of per-file tables (vQemu).
+
+    Args:
+      tables: i32[n, c] per-backing-file host offsets (-1 = absent).
+      vbs:    i32[b] requested virtual cluster indices, b % block_b == 0.
+    Returns:
+      (bfi_out, off_out): i32[b] each.
+    """
+    (b,) = vbs.shape
+    n, c = tables.shape
+    grid = (b // block_b,)
+    return pl.pallas_call(
+        _walk_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_b,), lambda i: (i,)),
+            pl.BlockSpec((n, c), lambda i: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_b,), lambda i: (i,)),
+            pl.BlockSpec((block_b,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b,), jnp.int32),
+            jax.ShapeDtypeStruct((b,), jnp.int32),
+        ],
+        interpret=True,
+    )(vbs, tables)

@@ -1,0 +1,101 @@
+"""Layer-2: the exported compute graphs, composed from the L1 kernels.
+
+Each entry in ``ARTIFACTS`` is one AOT-compiled computation the Rust
+coordinator loads from ``artifacts/<name>.hlo.txt``. Shapes are static
+(PJRT AOT requires it); the Rust side chunks and pads bulk work to these
+shapes — see rust/src/runtime/.
+
+Exported graphs:
+  * ``translate_direct`` — SQEMU bulk resolution (boot prefetch, batch
+    translation in the coordinator): gather + per-file lookup histogram.
+  * ``translate_walk``   — vQemu baseline resolution, for the figure benches
+    that compare the two designs at the bulk level.
+  * ``merge_l2``         — cache-correction / snapshot-copy / streaming merge
+    of two flattened L2 tables.
+  * ``stream_fold``      — streaming planner: fold a whole stack of
+    backing-file tables into one table in a single call (scan of merge_l2),
+    used by the coordinator's streaming orchestrator.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.merge import merge_l2
+from .kernels.ref import UNALLOCATED
+from .kernels.translate import chain_walk_translate, direct_translate
+
+# Static export shapes. One artifact resolves BATCH requests against a table
+# of CLUSTERS virtual clusters; CHAIN is the chain-walk depth per call (the
+# Rust side loops calls for deeper chains). CLUSTERS=8192 indexes a 512 MiB
+# disk at the default 64 KiB cluster size; bulk ops tile bigger disks.
+# BATCH=4096 (was 256): one PJRT dispatch per 4096-request bulk op instead
+# of 16 — see EXPERIMENTS.md §Perf (3.5x on the bulk path).
+BATCH = 4096
+CLUSTERS = 8192
+CHAIN = 32
+STREAM_DEPTH = 8
+
+
+def translate_direct(off, bfi, vbs):
+    """(bfi[b], off[b], hist[n+1]) for SQEMU direct access.
+
+    The histogram over owning backing files (clamped to CHAIN files;
+    index CHAIN = unallocated) feeds Fig 13c's bulk accounting.
+    """
+    out_bfi, out_off = direct_translate(off, bfi, vbs)
+    clipped = jnp.clip(out_bfi, UNALLOCATED, CHAIN - 1)
+    clipped = jnp.where(clipped == UNALLOCATED, CHAIN, clipped)
+    hist = jnp.zeros((CHAIN + 1,), jnp.int32).at[clipped].add(1)
+    return out_bfi, out_off, hist
+
+
+def translate_walk(tables, vbs):
+    """(bfi[b], off[b]) for the vQemu chain walk baseline."""
+    out_bfi, out_off = chain_walk_translate(tables, vbs)
+    return out_bfi, out_off
+
+
+def stream_fold(offs, bfis):
+    """Fold ``STREAM_DEPTH`` stacked tables (oldest first) into one.
+
+    ``offs``/``bfis`` are i32[STREAM_DEPTH, CLUSTERS]; row order is chain
+    order, so later rows take precedence via the merge rule.
+    """
+
+    def step(carry, row):
+        off_v, bfi_v = carry
+        off_b, bfi_b = row
+        off, bfi = merge_l2(off_v, bfi_v, off_b, bfi_b)
+        return (off, bfi), None
+
+    init = (
+        jnp.full((CLUSTERS,), UNALLOCATED, jnp.int32),
+        jnp.full((CLUSTERS,), UNALLOCATED, jnp.int32),
+    )
+    (off, bfi), _ = jax.lax.scan(step, init, (offs, bfis))
+    return off, bfi
+
+
+def _i32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.int32)
+
+
+# name -> (fn, example_args). aot.py lowers each with these static shapes.
+ARTIFACTS = {
+    "translate_direct": (
+        translate_direct,
+        (_i32(CLUSTERS), _i32(CLUSTERS), _i32(BATCH)),
+    ),
+    "translate_walk": (
+        translate_walk,
+        (_i32(CHAIN, CLUSTERS), _i32(BATCH)),
+    ),
+    "merge_l2": (
+        merge_l2,
+        (_i32(CLUSTERS), _i32(CLUSTERS), _i32(CLUSTERS), _i32(CLUSTERS)),
+    ),
+    "stream_fold": (
+        stream_fold,
+        (_i32(STREAM_DEPTH, CLUSTERS), _i32(STREAM_DEPTH, CLUSTERS)),
+    ),
+}

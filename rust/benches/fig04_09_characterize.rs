@@ -1,0 +1,143 @@
+//! Figs 4, 5, 6, 8, 9 — the §3 characterization study, regenerated from
+//! the calibrated population model.
+
+use sqemu::bench::table::{f1, Table};
+use sqemu::bench::BenchArgs;
+use sqemu::characterize::population::{Fig9Key, Population, PopulationConfig};
+use sqemu::characterize::sizes::{size_cdf, Party};
+use sqemu::util::human_bytes;
+
+fn main() {
+    let args = BenchArgs::parse();
+    let n_chains = if args.full { 60_000 } else { 20_000 };
+
+    // ---------------------------------------------------------- Fig 4
+    let mut t = Table::new(
+        "fig04_size_cdf",
+        "CDF of requested virtual disk sizes",
+        &["quantile", "first_party", "third_party"],
+    );
+    let first = size_cdf(41, Party::First, 50_000);
+    let third = size_cdf(42, Party::Third, 50_000);
+    for q in [0.1, 0.25, 0.5, 0.75, 0.9, 0.99, 1.0] {
+        t.row(&[
+            format!("{q:.2}"),
+            human_bytes(first.quantile(q)),
+            human_bytes(third.quantile(q)),
+        ]);
+    }
+    t.finish();
+    println!("take-away 1: modes at 10 GiB (first) / 50 GiB (third), tail to ~10 TiB");
+
+    let pop = Population::simulate(PopulationConfig {
+        n_chains,
+        ..Default::default()
+    });
+
+    // ---------------------------------------------------------- Fig 5
+    let mut t = Table::new(
+        "fig05_longest_chain",
+        "longest chain over the year",
+        &["day", "longest_chain"],
+    );
+    for (day, len) in pop.longest_per_day.iter().step_by(30) {
+        t.row(&[day.to_string(), len.to_string()]);
+    }
+    let (d, l) = *pop.longest_per_day.last().unwrap();
+    t.row(&[d.to_string(), l.to_string()]);
+    t.finish();
+    println!("take-away 2: chains of several hundred to 1000+ files exist all year");
+
+    // ---------------------------------------------------------- Fig 6
+    let (chains, files) = pop.chain_length_cdfs();
+    let mut t = Table::new(
+        "fig06_chain_length_cdf",
+        "CDF of chain length (per chain / per file)",
+        &["length", "P_chains", "P_files"],
+    );
+    for len in [1u64, 5, 10, 20, 29, 30, 35, 50, 100, 300, 1000] {
+        t.row(&[
+            len.to_string(),
+            format!("{:.3}", chains.at(len)),
+            format!("{:.3}", files.at(len)),
+        ]);
+    }
+    t.finish();
+    println!(
+        "take-away 2: most chains short; visible mass at the streaming threshold (30-35)"
+    );
+
+    // ---------------------------------------------------------- Fig 8
+    let scatter = pop.sharing_scatter();
+    let mut t = Table::new(
+        "fig08_sharing",
+        "shared backing files vs chain length (bucketed scatter)",
+        &["len_bucket", "chains", "mean_shared", "max_shared", "pct_unshared"],
+    );
+    for (lo, hi) in [(1usize, 5), (6, 10), (11, 29), (30, 35), (36, 100), (101, 2000)] {
+        let bucket: Vec<&(usize, usize)> = scatter
+            .iter()
+            .filter(|(l, _)| *l >= lo && *l <= hi)
+            .collect();
+        if bucket.is_empty() {
+            continue;
+        }
+        let n = bucket.len();
+        let mean = bucket.iter().map(|(_, s)| *s).sum::<usize>() as f64 / n as f64;
+        let max = bucket.iter().map(|(_, s)| *s).max().unwrap();
+        let unshared = bucket.iter().filter(|(_, s)| *s == 0).count();
+        t.row(&[
+            format!("{lo}-{hi}"),
+            n.to_string(),
+            f1(mean),
+            max.to_string(),
+            f1(100.0 * unshared as f64 / n as f64),
+        ]);
+    }
+    t.finish();
+    println!("take-away 3: sharing highly variable; base images + disk copies");
+
+    // ---------------------------------------------------------- Fig 9
+    let mut t = Table::new(
+        "fig09_snapshot_frequency",
+        "snapshot creation events: position in chain vs elapsed since last",
+        &["position", "<1h", "<1d", "<1w", "<1mo", "<3mo", ">=3mo"],
+    );
+    let total: u64 = pop.fig9.values().sum();
+    for (lo, hi) in [(0u32, 5), (6, 10), (11, 29), (30, 35), (36, 100), (101, 5000)] {
+        let mut buckets = [0u64; 6];
+        for (k, &n) in &pop.fig9 {
+            if k.position >= lo && k.position <= hi {
+                buckets[k.elapsed_bucket as usize] += n;
+            }
+        }
+        let pct = |c: u64| format!("{:.2}%", 100.0 * c as f64 / total as f64);
+        t.row(&[
+            format!("{lo}-{hi}"),
+            pct(buckets[0]),
+            pct(buckets[1]),
+            pct(buckets[2]),
+            pct(buckets[3]),
+            pct(buckets[4]),
+            pct(buckets[5]),
+        ]);
+    }
+    t.finish();
+    // take-away 4 check: high positions dominated by fast snapshotting
+    let mut long_total = 0u64;
+    let mut long_fast = 0u64;
+    for (k, &n) in &pop.fig9 {
+        if k.position > 100 {
+            long_total += n;
+            if k.elapsed_bucket <= 2 {
+                long_fast += n;
+            }
+        }
+    }
+    println!(
+        "take-away 4: long chains built by daily-or-faster snapshots \
+         ({:.1}% of position>100 events)",
+        100.0 * long_fast as f64 / long_total.max(1) as f64
+    );
+    let _ = Fig9Key { position: 0, elapsed_bucket: 0 };
+}

@@ -1,0 +1,44 @@
+//! Fig 12 — memory overhead of SQEMU vs vanilla after a full-disk dd,
+//! while varying chain length (§6.2). Paper headline: 3.9x reduction at
+//! chain 50, 15.2x at 500, 17.6x at 1000.
+
+use sqemu::bench::figures::{run_pair, ExpConfig};
+use sqemu::bench::table::{f1, Table};
+use sqemu::bench::BenchArgs;
+use sqemu::guest::dd::Dd;
+use sqemu::guest::Workload;
+use sqemu::qcow::image::DataMode;
+
+fn main() {
+    let args = BenchArgs::parse();
+    let mut t = Table::new(
+        "fig12_memory",
+        "memory overhead after dd full read (MiB; lower is better)",
+        &["chain", "vqemu_MiB", "sqemu_MiB", "reduction_x"],
+    );
+    for len in args.chain_lengths() {
+        let cfg = ExpConfig {
+            disk_size: args.disk_size(),
+            chain_len: len,
+            populated: 0.9,
+            data_mode: DataMode::Synthetic,
+            ..Default::default()
+        };
+        let (v, s) = run_pair(&cfg, || {
+            Box::new(Dd::default()) as Box<dyn Workload>
+        })
+        .unwrap();
+        t.row(&[
+            len.to_string(),
+            f1(v.mem_peak as f64 / (1 << 20) as f64),
+            f1(s.mem_peak as f64 / (1 << 20) as f64),
+            f1(v.mem_peak as f64 / s.mem_peak as f64),
+        ]);
+    }
+    t.finish();
+    println!(
+        "\npaper shape: vanilla linear in chain length (per-file caches); sqemu \
+         near-flat with a slight per-snapshot residue; reduction grows with the \
+         chain (3.9x @ 50, 15.2x @ 500, 17.6x @ 1000 in the paper)."
+    );
+}

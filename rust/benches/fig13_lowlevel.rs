@@ -1,0 +1,120 @@
+//! Fig 13 — low-level metrics during a full-disk dd (§6.3):
+//! (a) cache misses vs chain, (b) cache hit unallocated vs chain,
+//! (c) distribution of cache lookups over the chain's files (with the
+//! boot-time spike on the base image) at a fixed chain length.
+
+use sqemu::bench::figures::{run_pair, run_workload, ExpConfig};
+use sqemu::bench::table::{f1, Table};
+use sqemu::bench::BenchArgs;
+use sqemu::guest::boot::BootTrace;
+use sqemu::guest::dd::Dd;
+use sqemu::guest::{Workload, WorkloadStats};
+use sqemu::metrics::clock::VirtClock;
+use sqemu::qcow::image::DataMode;
+use sqemu::vdisk::{Driver, DriverKind};
+use std::sync::Arc;
+
+/// Boot then dd — reproduces the Fig 13c base-image spike.
+struct BootThenDd;
+
+impl Workload for BootThenDd {
+    fn name(&self) -> &str {
+        "boot+dd"
+    }
+
+    fn run(
+        &mut self,
+        driver: &mut dyn Driver,
+        clock: &Arc<VirtClock>,
+    ) -> anyhow::Result<WorkloadStats> {
+        let mut boot = BootTrace {
+            sequential_bytes: 32 << 20,
+            scattered_reads: 200,
+            seed: 0xB007,
+        };
+        let b = boot.run(driver, clock)?;
+        let mut dd = Dd::default();
+        let mut d = dd.run(driver, clock)?;
+        d.ops += b.ops;
+        d.bytes += b.bytes;
+        d.elapsed_ns += b.elapsed_ns;
+        Ok(d)
+    }
+}
+
+fn main() {
+    let args = BenchArgs::parse();
+
+    // (a) + (b): misses and hit-unallocated vs chain length
+    let mut t = Table::new(
+        "fig13ab_misses_unallocated",
+        "cache misses / hit-unallocated during dd (lower is better)",
+        &["chain", "vq_miss", "sq_miss", "miss_x", "vq_unalloc", "sq_unalloc", "unalloc_x"],
+    );
+    for len in args.chain_lengths() {
+        let cfg = ExpConfig {
+            disk_size: args.disk_size(),
+            chain_len: len,
+            populated: 0.9,
+            data_mode: DataMode::Synthetic,
+            ..Default::default()
+        };
+        let (v, s) = run_pair(&cfg, || Box::new(Dd::default()) as Box<dyn Workload>)
+            .unwrap();
+        t.row(&[
+            len.to_string(),
+            v.counters.misses.to_string(),
+            s.counters.misses.to_string(),
+            f1(v.counters.misses as f64 / s.counters.misses.max(1) as f64),
+            v.counters.hit_unallocated.to_string(),
+            s.counters.hit_unallocated.to_string(),
+            f1(v.counters.hit_unallocated as f64
+                / s.counters.hit_unallocated.max(1) as f64),
+        ]);
+    }
+    t.finish();
+    println!(
+        "\npaper shape: sqemu misses flat & ~10x lower at depth; sqemu \
+         hit-unallocated constant while vanilla explodes with chain walks"
+    );
+
+    // (c): lookup distribution over files at a fixed chain
+    let len = if args.full { 500 } else { 100 };
+    let cfg = ExpConfig {
+        disk_size: args.disk_size(),
+        chain_len: len,
+        populated: 0.9,
+        data_mode: DataMode::Synthetic,
+        ..Default::default()
+    };
+    let mut t = Table::new(
+        "fig13c_lookup_distribution",
+        &format!("cache lookups per backing file (boot+dd, chain {len})"),
+        &["system", "file0_base", "mid_files_mean", "active", "total"],
+    );
+    for kind in [DriverKind::Vanilla, DriverKind::Scalable] {
+        let out = run_workload(kind, &cfg, &mut BootThenDd).unwrap();
+        let lk = &out.counters.per_file_lookups;
+        let base = lk.first().copied().unwrap_or(0);
+        let active = lk.last().copied().unwrap_or(0);
+        let mid: Vec<u64> = lk[1..lk.len().saturating_sub(1)].to_vec();
+        let mid_mean = if mid.is_empty() {
+            0.0
+        } else {
+            mid.iter().sum::<u64>() as f64 / mid.len() as f64
+        };
+        t.row(&[
+            kind.name().into(),
+            base.to_string(),
+            f1(mid_mean),
+            active.to_string(),
+            lk.iter().sum::<u64>().to_string(),
+        ]);
+    }
+    t.finish();
+    println!(
+        "\npaper shape: vanilla touches every file's cache (~15x more lookups \
+         total); sqemu concentrates on the active volume; base image shows the \
+         boot spike under vanilla"
+    );
+}

@@ -1,0 +1,67 @@
+//! Fig 16 — fio 4 KiB random-read throughput vs cache size at a fixed
+//! chain (§6.4.1). Both systems get the same *total* budget; vanilla
+//! splits it across the chain's per-file caches (S/L each).
+
+use sqemu::bench::figures::{run_workload, ExpConfig};
+use sqemu::bench::table::{f2, Table};
+use sqemu::bench::BenchArgs;
+use sqemu::guest::fio::Fio;
+use sqemu::qcow::image::DataMode;
+use sqemu::util::human_bytes;
+use sqemu::vdisk::DriverKind;
+
+fn main() {
+    let args = BenchArgs::parse();
+    let chain_len = if args.full { 500 } else { 100 };
+    let ops = if args.quick { 3_000 } else { 20_000 };
+    // cache budgets scale with the disk (the full sweep is the paper's
+    // 1 MiB..4 GiB on 50 GiB; the scaled sweep keeps the same
+    // budget/index ratios on the 4 GiB disk)
+    let cache_sizes: Vec<u64> = if args.full {
+        vec![1 << 20, 4 << 20, 16 << 20, 32 << 20, 128 << 20, 1 << 30, 4u64 << 30]
+    } else {
+        vec![64 << 10, 128 << 10, 256 << 10, 512 << 10, 1 << 20, 4 << 20, 32 << 20]
+    };
+
+    let mut t = Table::new(
+        "fig16_fio_cache",
+        &format!("fio 4K randread vs total cache budget (chain {chain_len})"),
+        &["cache_total", "vqemu_MBps", "sqemu_MBps", "sq_over_vq"],
+    );
+    for &cache in &cache_sizes {
+        let mk_cfg = |split| ExpConfig {
+            disk_size: args.disk_size(),
+            chain_len,
+            populated: 0.9,
+            cache_bytes: cache,
+            split_vanilla_cache: split,
+            data_mode: DataMode::Synthetic,
+            ..Default::default()
+        };
+        let v = run_workload(
+            DriverKind::Vanilla,
+            &mk_cfg(true),
+            &mut Fio { io_size: 4 << 10, ops, seed: 0xF16 },
+        )
+        .unwrap();
+        let s = run_workload(
+            DriverKind::Scalable,
+            &mk_cfg(false),
+            &mut Fio { io_size: 4 << 10, ops, seed: 0xF16 },
+        )
+        .unwrap();
+        let (vb, sb) = (v.stats.throughput_bps(), s.stats.throughput_bps());
+        t.row(&[
+            human_bytes(cache),
+            f2(vb / (1 << 20) as f64),
+            f2(sb / (1 << 20) as f64),
+            f2(sb / vb),
+        ]);
+    }
+    t.finish();
+    println!(
+        "\npaper shape: sqemu wins at every budget; sqemu nears peak from a \
+         modest cache (32 MiB in the paper) while vanilla needs orders of \
+         magnitude more (4 GiB) because the budget splinters across the chain"
+    );
+}

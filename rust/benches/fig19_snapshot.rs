@@ -1,0 +1,78 @@
+//! Fig 19 — the cost of SQEMU's snapshot-time L2 copy (§6.5):
+//! (a) per-snapshot disk-usage overhead vs disk size (Eq. 2),
+//! (b) snapshot creation time vs disk size. Paper: ~6 MiB and ~70 ms at
+//! 50 GiB; 7-12x slower than vanilla but O(ms).
+
+use sqemu::bench::table::{f1, f2, Table};
+use sqemu::bench::BenchArgs;
+use sqemu::chaingen::{generate, ChainSpec};
+use sqemu::metrics::clock::{CostModel, VirtClock};
+use sqemu::qcow::image::DataMode;
+use sqemu::qcow::layout::Geometry;
+use sqemu::qcow::snapshot;
+use sqemu::storage::node::StorageNode;
+use sqemu::util::human_bytes;
+
+fn main() {
+    let args = BenchArgs::parse();
+    // paper sweeps 50..200 GiB; scaled 4..16 GiB
+    let disks: Vec<u64> = if args.full {
+        vec![50 << 30, 100 << 30, 150 << 30, 200u64 << 30]
+    } else {
+        vec![4 << 30, 8 << 30, 12 << 30, 16 << 30]
+    };
+
+    let mut t = Table::new(
+        "fig19_snapshot",
+        "snapshot creation: disk overhead (worst case) + creation time",
+        &[
+            "disk", "eq2_MiB", "measured_MiB", "vq_snap_ms", "sq_snap_ms", "slowdown_x",
+        ],
+    );
+    for &disk in &disks {
+        let clock = VirtClock::new();
+        let node = StorageNode::new("s", clock.clone(), CostModel::default());
+        // worst case: every cluster allocated ("the disk is full")
+        let mut chain = generate(
+            &node,
+            &ChainSpec {
+                disk_size: disk,
+                chain_len: 1,
+                populated: 1.0,
+                stamped: true,
+                data_mode: DataMode::Synthetic,
+                prefix: format!("d{disk}"),
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        let geom = Geometry::new(16, disk).unwrap();
+        let eq2 = geom.num_vclusters() * 8; // Eq. 2: disk/cluster * entry
+
+        let t0 = clock.now();
+        snapshot::snapshot_sqemu(&mut chain, &node, &format!("d{disk}-sq")).unwrap();
+        let sq_ns = clock.now() - t0;
+        let s_sq = chain.active().file_len();
+
+        let t0 = clock.now();
+        snapshot::snapshot_vanilla(&mut chain, &node, &format!("d{disk}-vq")).unwrap();
+        let vq_ns = clock.now() - t0;
+        let s_vq = chain.active().file_len();
+
+        let overhead = s_sq.saturating_sub(s_vq);
+        t.row(&[
+            human_bytes(disk),
+            f1(eq2 as f64 / (1 << 20) as f64),
+            f1(overhead as f64 / (1 << 20) as f64),
+            f2(vq_ns as f64 / 1e6),
+            f2(sq_ns as f64 / 1e6),
+            f1(sq_ns as f64 / vq_ns.max(1) as f64),
+        ]);
+    }
+    t.finish();
+    println!(
+        "\npaper shape: overhead linear in disk size and matching Eq. 2 (~6 MiB \
+         per snapshot at 50 GiB); sqemu snapshotting 7-12x slower than vanilla \
+         but absolute cost stays in the ms range"
+    );
+}

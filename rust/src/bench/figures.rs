@@ -1,0 +1,196 @@
+//! Virtual-time experiment runner shared by the figure benches: build a
+//! chain per spec, run a guest workload under either driver, and collect
+//! every §6.1 metric in one pass.
+
+use crate::cache::CacheConfig;
+use crate::chaingen::{generate, ChainSpec};
+use crate::guest::{Workload, WorkloadStats};
+use crate::metrics::clock::{CostModel, VirtClock};
+use crate::metrics::counters::CounterSnapshot;
+use crate::metrics::histogram::Histogram;
+use crate::metrics::memory::MemoryAccountant;
+use crate::qcow::image::DataMode;
+use crate::qcow::Chain;
+use crate::storage::node::StorageNode;
+use crate::vdisk::scalable::ScalableDriver;
+use crate::vdisk::vanilla::VanillaDriver;
+use crate::vdisk::{Driver, DriverKind};
+use anyhow::Result;
+use std::sync::Arc;
+
+/// One experiment configuration (one point of a figure).
+#[derive(Clone, Debug)]
+pub struct ExpConfig {
+    pub disk_size: u64,
+    pub chain_len: usize,
+    pub populated: f64,
+    /// Cache bytes given to the system under test. For vanilla this is
+    /// the *per-file* cache size unless `split_vanilla_cache` is set, in
+    /// which case the budget is divided by the chain length (Fig 16's
+    /// equal-total-budget comparison).
+    pub cache_bytes: u64,
+    pub split_vanilla_cache: bool,
+    pub slice_entries: u64,
+    pub data_mode: DataMode,
+    pub seed: u64,
+}
+
+impl Default for ExpConfig {
+    fn default() -> Self {
+        ExpConfig {
+            disk_size: 4 << 30,
+            chain_len: 1,
+            populated: 0.9,
+            cache_bytes: 0, // 0 = full-disk cache (the §6.1 default)
+            split_vanilla_cache: false,
+            slice_entries: 512,
+            data_mode: DataMode::Synthetic,
+            seed: 0xF16,
+        }
+    }
+}
+
+impl ExpConfig {
+    pub fn chain_spec(&self, stamped: bool, prefix: &str) -> ChainSpec {
+        ChainSpec {
+            disk_size: self.disk_size,
+            cluster_bits: 16,
+            chain_len: self.chain_len,
+            populated: self.populated,
+            stamped,
+            data_mode: self.data_mode,
+            seed: self.seed,
+            prefix: prefix.into(),
+        }
+    }
+
+    fn cache_cfg(&self, kind: DriverKind) -> CacheConfig {
+        let geom = crate::qcow::layout::Geometry::new(16, self.disk_size).unwrap();
+        let mut bytes = if self.cache_bytes == 0 {
+            CacheConfig::full_disk_bytes(&geom)
+        } else {
+            self.cache_bytes
+        };
+        if kind == DriverKind::Vanilla && self.split_vanilla_cache {
+            bytes = (bytes / self.chain_len as u64).max(4096);
+        }
+        CacheConfig::new(self.slice_entries, bytes)
+    }
+}
+
+/// Everything a figure can need from one run.
+pub struct RunOutput {
+    pub kind: DriverKind,
+    pub stats: WorkloadStats,
+    pub counters: CounterSnapshot,
+    pub lookup_hist: Histogram,
+    /// Peak accounted memory (the paper's "Qemu overhead on top of guest
+    /// RAM"), bytes.
+    pub mem_peak: u64,
+    /// Resident cache bytes at the end of the run.
+    pub cache_bytes: u64,
+    /// Total physical bytes of the chain's files (Fig 19a).
+    pub chain_file_bytes: u64,
+    /// Virtual ns spent generating/snapshotting the chain (Fig 19b uses
+    /// dedicated measurements; this is informational).
+    pub setup_ns: u64,
+}
+
+/// Build the chain and driver for `kind`, run `workload`, collect.
+pub fn run_workload(
+    kind: DriverKind,
+    cfg: &ExpConfig,
+    workload: &mut dyn Workload,
+) -> Result<RunOutput> {
+    let clock = VirtClock::new();
+    let node = StorageNode::new("bench", clock.clone(), CostModel::default());
+    let spec = cfg.chain_spec(kind == DriverKind::Scalable, "d");
+    let (chain, setup_ns) = {
+        let t0 = clock.now();
+        let c = generate(&node, &spec)?;
+        (c, clock.now() - t0)
+    };
+    run_on_chain(kind, cfg, chain, clock, workload, setup_ns)
+}
+
+/// Run on an already-built chain (lets benches reuse expensive chains).
+pub fn run_on_chain(
+    kind: DriverKind,
+    cfg: &ExpConfig,
+    chain: Chain,
+    clock: Arc<VirtClock>,
+    workload: &mut dyn Workload,
+    setup_ns: u64,
+) -> Result<RunOutput> {
+    let acct = MemoryAccountant::new();
+    let cache_cfg = cfg.cache_cfg(kind);
+    let mut driver: Box<dyn Driver> = match kind {
+        DriverKind::Vanilla => Box::new(VanillaDriver::new(
+            chain,
+            cache_cfg,
+            clock.clone(),
+            CostModel::default(),
+            acct.clone(),
+        )),
+        DriverKind::Scalable => Box::new(ScalableDriver::new(
+            chain,
+            cache_cfg,
+            clock.clone(),
+            CostModel::default(),
+            acct.clone(),
+        )),
+    };
+    acct.reset_peak();
+    clock.reset();
+    let stats = workload.run(driver.as_mut(), &clock)?;
+    Ok(RunOutput {
+        kind,
+        stats,
+        counters: driver.counters(),
+        lookup_hist: driver.lookup_latency(),
+        mem_peak: acct.peak(),
+        cache_bytes: driver.cache_bytes(),
+        chain_file_bytes: driver.chain().total_file_bytes(),
+        setup_ns,
+    })
+}
+
+/// Run the same workload under both drivers (fresh chains, same spec).
+pub fn run_pair(
+    cfg: &ExpConfig,
+    mk: impl Fn() -> Box<dyn Workload>,
+) -> Result<(RunOutput, RunOutput)> {
+    let v = run_workload(DriverKind::Vanilla, cfg, mk().as_mut())?;
+    let s = run_workload(DriverKind::Scalable, cfg, mk().as_mut())?;
+    Ok((v, s))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::guest::dd::Dd;
+
+    #[test]
+    fn pair_runs_and_sqemu_wins_on_chains() {
+        let cfg = ExpConfig {
+            disk_size: 64 << 20,
+            chain_len: 12,
+            populated: 0.8,
+            ..Default::default()
+        };
+        let (v, s) = run_pair(&cfg, || {
+            Box::new(Dd { block_size: 1 << 20, limit: None })
+        })
+        .unwrap();
+        assert_eq!(v.stats.bytes, s.stats.bytes);
+        // the paper's claims, in miniature: faster and leaner
+        assert!(
+            s.stats.throughput_bps() > v.stats.throughput_bps(),
+            "sqemu {} <= vanilla {}",
+            s.stats.throughput_bps(),
+            v.stats.throughput_bps()
+        );
+        assert!(s.mem_peak < v.mem_peak);
+        assert!(s.counters.misses < v.counters.misses);
+    }
+}

@@ -1,0 +1,66 @@
+//! The figure-regeneration harness: everything `rust/benches/fig*.rs`
+//! share. (No `criterion` in the offline crate set — [`timer`] provides
+//! the wall-clock micro-bench loop for the hot-path benches, and
+//! [`figures`] the virtual-time experiment runner for the paper's
+//! tables/figures.)
+//!
+//! Conventions:
+//! * every bench prints a paper-shaped table to stdout and appends a CSV
+//!   copy under `target/figures/` so EXPERIMENTS.md can cite runs;
+//! * default scale is a reduced testbed (4 GiB disks, chains <= 200)
+//!   so `cargo bench` completes quickly; `--full` (or
+//!   `SQEMU_BENCH_FULL=1`) switches to paper scale (50 GiB, chains to
+//!   1000).
+
+pub mod figures;
+pub mod table;
+pub mod timer;
+
+pub use figures::{ExpConfig, RunOutput};
+pub use table::Table;
+pub use timer::Timer;
+
+/// Shared bench CLI: `cargo bench --bench figNN -- [--full] [--quick]`.
+#[derive(Clone, Debug, Default)]
+pub struct BenchArgs {
+    pub full: bool,
+    pub quick: bool,
+}
+
+impl BenchArgs {
+    pub fn parse() -> BenchArgs {
+        let mut a = BenchArgs {
+            full: std::env::var_os("SQEMU_BENCH_FULL").is_some(),
+            quick: std::env::var_os("SQEMU_BENCH_QUICK").is_some(),
+        };
+        for arg in std::env::args().skip(1) {
+            match arg.as_str() {
+                "--full" => a.full = true,
+                "--quick" => a.quick = true,
+                // cargo-bench passes --bench; ignore unknown flags
+                _ => {}
+            }
+        }
+        a
+    }
+
+    /// Chain lengths to sweep for the main scalability figures.
+    pub fn chain_lengths(&self) -> Vec<usize> {
+        if self.full {
+            vec![1, 5, 25, 50, 100, 200, 500, 1000]
+        } else if self.quick {
+            vec![1, 10, 50]
+        } else {
+            vec![1, 5, 25, 50, 100, 200]
+        }
+    }
+
+    /// Disk size for the sweeps (paper: 50 GiB).
+    pub fn disk_size(&self) -> u64 {
+        if self.full {
+            50 << 30
+        } else {
+            4 << 30
+        }
+    }
+}

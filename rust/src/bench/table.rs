@@ -1,0 +1,102 @@
+//! Aligned stdout tables + CSV copies under target/figures/.
+
+use std::io::Write;
+use std::path::PathBuf;
+
+pub struct Table {
+    id: String,
+    title: String,
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(id: &str, title: &str, headers: &[&str]) -> Table {
+        Table {
+            id: id.to_string(),
+            title: title.to_string(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.headers.len(), "ragged table row");
+        self.rows.push(cells.to_vec());
+    }
+
+    /// Print aligned to stdout and write `target/figures/<id>.csv`.
+    pub fn finish(&self) {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        println!("\n=== {} — {} ===", self.id, self.title);
+        let fmt_row = |cells: &[String]| {
+            cells
+                .iter()
+                .enumerate()
+                .map(|(i, c)| format!("{:>w$}", c, w = widths[i]))
+                .collect::<Vec<_>>()
+                .join("  ")
+        };
+        println!("{}", fmt_row(&self.headers));
+        println!("{}", "-".repeat(widths.iter().sum::<usize>() + 2 * widths.len()));
+        for row in &self.rows {
+            println!("{}", fmt_row(row));
+        }
+        if let Err(e) = self.write_csv() {
+            eprintln!("(csv write failed: {e})");
+        }
+    }
+
+    fn write_csv(&self) -> std::io::Result<()> {
+        let dir = csv_dir();
+        std::fs::create_dir_all(&dir)?;
+        let mut f = std::fs::File::create(dir.join(format!("{}.csv", self.id)))?;
+        writeln!(f, "{}", self.headers.join(","))?;
+        for row in &self.rows {
+            writeln!(f, "{}", row.join(","))?;
+        }
+        Ok(())
+    }
+}
+
+pub fn csv_dir() -> PathBuf {
+    PathBuf::from("target/figures")
+}
+
+/// Format helpers used across benches.
+pub fn f1(v: f64) -> String {
+    format!("{v:.1}")
+}
+
+pub fn f2(v: f64) -> String {
+    format!("{v:.2}")
+}
+
+pub fn mibs(bps: f64) -> String {
+    format!("{:.1}", bps / (1 << 20) as f64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    #[should_panic(expected = "ragged")]
+    fn rejects_ragged_rows() {
+        let mut t = Table::new("t", "x", &["a", "b"]);
+        t.row(&["1".into()]);
+    }
+
+    #[test]
+    fn builds_and_prints() {
+        let mut t = Table::new("test_table", "demo", &["k", "v"]);
+        t.row(&["a".into(), "1".into()]);
+        t.row(&["bb".into(), "22".into()]);
+        t.finish();
+    }
+}

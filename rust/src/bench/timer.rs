@@ -1,0 +1,78 @@
+//! Wall-clock micro-bench loop (the criterion stand-in) for the §Perf
+//! hot-path benches.
+
+use crate::util::stats::Summary;
+use std::time::Instant;
+
+pub struct Timer {
+    pub warmup_iters: u32,
+    pub samples: u32,
+    pub iters_per_sample: u32,
+}
+
+impl Default for Timer {
+    fn default() -> Self {
+        Timer { warmup_iters: 100, samples: 30, iters_per_sample: 100 }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct TimerReport {
+    pub name: String,
+    /// mean ns per iteration
+    pub mean_ns: f64,
+    pub stddev_ns: f64,
+    pub p50_ns: f64,
+    pub p99_ns: f64,
+}
+
+impl TimerReport {
+    pub fn print(&self) {
+        println!(
+            "{:<42} {:>12.0} ns/iter  (sd {:>8.0}, p50 {:>10.0}, p99 {:>10.0})",
+            self.name, self.mean_ns, self.stddev_ns, self.p50_ns, self.p99_ns
+        );
+    }
+}
+
+impl Timer {
+    /// Benchmark `f`, returning per-iteration stats. `f` should include
+    /// its own state; use `std::hint::black_box` on inputs/outputs.
+    pub fn bench(&self, name: &str, mut f: impl FnMut()) -> TimerReport {
+        for _ in 0..self.warmup_iters {
+            f();
+        }
+        let mut s = Summary::new();
+        for _ in 0..self.samples {
+            let t0 = Instant::now();
+            for _ in 0..self.iters_per_sample {
+                f();
+            }
+            let dt = t0.elapsed().as_nanos() as f64 / self.iters_per_sample as f64;
+            s.add(dt);
+        }
+        TimerReport {
+            name: name.to_string(),
+            mean_ns: s.mean(),
+            stddev_ns: s.stddev(),
+            p50_ns: s.median(),
+            p99_ns: s.percentile(99.0),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something() {
+        let t = Timer { warmup_iters: 5, samples: 5, iters_per_sample: 10 };
+        let mut x = 0u64;
+        let r = t.bench("noop-ish", || {
+            x = std::hint::black_box(x.wrapping_add(1));
+        });
+        assert!(r.mean_ns >= 0.0);
+        assert!(r.p99_ns >= r.p50_ns);
+    }
+}

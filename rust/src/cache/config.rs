@@ -1,0 +1,109 @@
+//! Cache sizing.
+
+use crate::qcow::layout::{Geometry, ENTRY_SIZE};
+
+/// Per-slice bookkeeping overhead (tag, dirty, ref, LRU links, map slot) —
+/// counted in the memory accountant alongside the entry payload.
+pub const SLICE_OVERHEAD: u64 = 64;
+
+/// Fixed per-cache overhead (the cache struct itself + table headroom);
+/// vanilla pays this once *per backing file*.
+pub const CACHE_FIXED_OVERHEAD: u64 = 4096;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct CacheConfig {
+    /// L2 entries per slice (Qemu's `l2-cache-entry-size` / 8; default
+    /// 4 KiB slices = 512 entries).
+    pub slice_entries: u64,
+    /// Maximum cache size in bytes (Qemu's `l2-cache-size`).
+    pub max_bytes: u64,
+}
+
+impl Default for CacheConfig {
+    fn default() -> Self {
+        CacheConfig { slice_entries: 512, max_bytes: 1 << 20 } // 1 MiB default [8]
+    }
+}
+
+impl CacheConfig {
+    pub fn new(slice_entries: u64, max_bytes: u64) -> Self {
+        CacheConfig { slice_entries, max_bytes }
+    }
+
+    /// Bytes of one resident slice (payload + bookkeeping).
+    pub fn slice_bytes(&self) -> u64 {
+        self.slice_entries * ENTRY_SIZE + SLICE_OVERHEAD
+    }
+
+    /// Capacity in slices.
+    pub fn capacity_slices(&self) -> u64 {
+        (self.max_bytes / self.slice_bytes()).max(1)
+    }
+
+    /// The cache size that holds *all* L2 entries of a disk ("the size of
+    /// the L2 cache needed to hold the entirety of L2 entries", §6.1 —
+    /// 6.25 MiB for a 50 GiB disk).
+    pub fn full_disk_bytes(geom: &Geometry) -> u64 {
+        let slices = crate::util::div_ceil(
+            geom.num_vclusters(),
+            CacheConfig::default().slice_entries,
+        );
+        slices * CacheConfig::default().slice_bytes() + CACHE_FIXED_OVERHEAD
+    }
+
+    /// Config sized to hold the entire disk index (the §6 default).
+    pub fn full_disk(geom: &Geometry) -> CacheConfig {
+        CacheConfig {
+            slice_entries: CacheConfig::default().slice_entries,
+            max_bytes: Self::full_disk_bytes(geom),
+        }
+    }
+
+    /// Logical slice key for a virtual cluster.
+    pub fn slice_key(&self, vcluster: u64) -> u64 {
+        vcluster / self.slice_entries
+    }
+
+    /// Index of a virtual cluster within its slice.
+    pub fn slice_index(&self, vcluster: u64) -> u64 {
+        vcluster % self.slice_entries
+    }
+
+    /// First virtual cluster of slice `key`.
+    pub fn slice_base(&self, key: u64) -> u64 {
+        key * self.slice_entries
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_match_qemu_doc() {
+        let c = CacheConfig::default();
+        assert_eq!(c.slice_entries, 512);
+        assert_eq!(c.max_bytes, 1 << 20);
+        assert!(c.capacity_slices() >= 250);
+    }
+
+    #[test]
+    fn full_disk_50g_is_about_6mib() {
+        // §6.1: 6.25 MiB of L2 entries for a 50 GiB disk
+        let geom = Geometry::new(16, 50 << 30).unwrap();
+        let bytes = CacheConfig::full_disk_bytes(&geom);
+        let payload = geom.num_vclusters() * ENTRY_SIZE;
+        assert!(bytes >= payload);
+        assert!(bytes < payload + payload / 8 + 2 * CACHE_FIXED_OVERHEAD);
+    }
+
+    #[test]
+    fn slice_addressing() {
+        let c = CacheConfig::new(32, 1 << 20);
+        assert_eq!(c.slice_key(0), 0);
+        assert_eq!(c.slice_key(31), 0);
+        assert_eq!(c.slice_key(32), 1);
+        assert_eq!(c.slice_index(33), 1);
+        assert_eq!(c.slice_base(2), 64);
+    }
+}

@@ -1,0 +1,248 @@
+//! Intrusive doubly-linked LRU over a slab — O(1) touch/insert/evict.
+//! (No `lru` crate in the offline set; eviction scans would be O(n) and
+//! the caches hold thousands of slices.)
+
+use std::collections::HashMap;
+
+/// Slab-backed LRU index mapping `u64` keys to values.
+pub struct LruIndex<V> {
+    map: HashMap<u64, usize>,
+    slab: Vec<Node<V>>,
+    free: Vec<usize>,
+    head: usize, // most recently used
+    tail: usize, // least recently used
+}
+
+struct Node<V> {
+    key: u64,
+    value: V,
+    prev: usize,
+    next: usize,
+}
+
+const NIL: usize = usize::MAX;
+
+impl<V> LruIndex<V> {
+    pub fn new() -> Self {
+        LruIndex {
+            map: HashMap::new(),
+            slab: Vec::new(),
+            free: Vec::new(),
+            head: NIL,
+            tail: NIL,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+
+    pub fn contains(&self, key: u64) -> bool {
+        self.map.contains_key(&key)
+    }
+
+    /// Get without touching recency.
+    pub fn peek(&self, key: u64) -> Option<&V> {
+        self.map.get(&key).map(|&i| &self.slab[i].value)
+    }
+
+    /// Get mutably and mark as most recently used.
+    pub fn touch(&mut self, key: u64) -> Option<&mut V> {
+        let &idx = self.map.get(&key)?;
+        self.unlink(idx);
+        self.link_front(idx);
+        Some(&mut self.slab[idx].value)
+    }
+
+    /// Insert (or replace) a value as most recently used.
+    pub fn insert(&mut self, key: u64, value: V) -> Option<V> {
+        if let Some(&idx) = self.map.get(&key) {
+            let old = std::mem::replace(&mut self.slab[idx].value, value);
+            self.unlink(idx);
+            self.link_front(idx);
+            return Some(old);
+        }
+        let idx = match self.free.pop() {
+            Some(i) => {
+                self.slab[i] = Node { key, value, prev: NIL, next: NIL };
+                i
+            }
+            None => {
+                self.slab.push(Node { key, value, prev: NIL, next: NIL });
+                self.slab.len() - 1
+            }
+        };
+        self.map.insert(key, idx);
+        self.link_front(idx);
+        None
+    }
+
+    /// Remove and return the least recently used entry.
+    pub fn pop_lru(&mut self) -> Option<(u64, V)>
+    where
+        V: Default,
+    {
+        if self.tail == NIL {
+            return None;
+        }
+        let idx = self.tail;
+        self.remove_idx(idx)
+    }
+
+    /// Remove a specific key.
+    pub fn remove(&mut self, key: u64) -> Option<(u64, V)>
+    where
+        V: Default,
+    {
+        let &idx = self.map.get(&key)?;
+        self.remove_idx(idx)
+    }
+
+    fn remove_idx(&mut self, idx: usize) -> Option<(u64, V)>
+    where
+        V: Default,
+    {
+        self.unlink(idx);
+        let key = self.slab[idx].key;
+        self.map.remove(&key);
+        self.free.push(idx);
+        let value = std::mem::take(&mut self.slab[idx].value);
+        Some((key, value))
+    }
+
+    /// Iterate (key, value) from most to least recently used.
+    pub fn iter(&self) -> impl Iterator<Item = (u64, &V)> {
+        LruIter { lru: self, cur: self.head }
+    }
+
+    fn unlink(&mut self, idx: usize) {
+        let (prev, next) = (self.slab[idx].prev, self.slab[idx].next);
+        if prev != NIL {
+            self.slab[prev].next = next;
+        } else if self.head == idx {
+            self.head = next;
+        }
+        if next != NIL {
+            self.slab[next].prev = prev;
+        } else if self.tail == idx {
+            self.tail = prev;
+        }
+        self.slab[idx].prev = NIL;
+        self.slab[idx].next = NIL;
+    }
+
+    fn link_front(&mut self, idx: usize) {
+        self.slab[idx].prev = NIL;
+        self.slab[idx].next = self.head;
+        if self.head != NIL {
+            self.slab[self.head].prev = idx;
+        }
+        self.head = idx;
+        if self.tail == NIL {
+            self.tail = idx;
+        }
+    }
+}
+
+impl<V> Default for LruIndex<V> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+struct LruIter<'a, V> {
+    lru: &'a LruIndex<V>,
+    cur: usize,
+}
+
+impl<'a, V> Iterator for LruIter<'a, V> {
+    type Item = (u64, &'a V);
+
+    fn next(&mut self) -> Option<Self::Item> {
+        if self.cur == NIL {
+            return None;
+        }
+        let node = &self.lru.slab[self.cur];
+        self.cur = node.next;
+        Some((node.key, &node.value))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn insert_touch_evict_order() {
+        let mut lru = LruIndex::new();
+        lru.insert(1, "a");
+        lru.insert(2, "b");
+        lru.insert(3, "c");
+        lru.touch(1); // order now (MRU) 1, 3, 2 (LRU)
+        assert_eq!(lru.pop_lru().unwrap(), (2, "b"));
+        assert_eq!(lru.pop_lru().unwrap(), (3, "c"));
+        assert_eq!(lru.pop_lru().unwrap(), (1, "a"));
+        assert!(lru.pop_lru().is_none());
+    }
+
+    #[test]
+    fn replace_keeps_single_entry() {
+        let mut lru = LruIndex::new();
+        lru.insert(5, 1u32);
+        assert_eq!(lru.insert(5, 2u32), Some(1));
+        assert_eq!(lru.len(), 1);
+        assert_eq!(*lru.peek(5).unwrap(), 2);
+    }
+
+    #[test]
+    fn remove_arbitrary() {
+        let mut lru = LruIndex::new();
+        for k in 0..10u64 {
+            lru.insert(k, k);
+        }
+        assert_eq!(lru.remove(4).unwrap(), (4, 4));
+        assert_eq!(lru.len(), 9);
+        assert!(!lru.contains(4));
+        // slab slot reused
+        lru.insert(100, 100);
+        assert_eq!(lru.len(), 10);
+    }
+
+    #[test]
+    fn iter_is_mru_first() {
+        let mut lru = LruIndex::new();
+        lru.insert(1, ());
+        lru.insert(2, ());
+        lru.insert(3, ());
+        let keys: Vec<u64> = lru.iter().map(|(k, _)| k).collect();
+        assert_eq!(keys, vec![3, 2, 1]);
+    }
+
+    #[test]
+    fn heavy_churn_consistent() {
+        let mut lru = LruIndex::new();
+        let mut rng = crate::util::rng::Rng::new(1);
+        for _ in 0..10_000 {
+            let k = rng.below(64);
+            match rng.below(3) {
+                0 => {
+                    lru.insert(k, k);
+                }
+                1 => {
+                    lru.touch(k);
+                }
+                _ => {
+                    lru.remove(k);
+                }
+            }
+            assert!(lru.len() <= 64);
+        }
+        // drain fully without panic
+        while lru.pop_lru().is_some() {}
+        assert!(lru.is_empty());
+    }
+}

@@ -1,0 +1,24 @@
+//! L2 indexing caches (§2 "Qcow2 Cache Organization").
+//!
+//! The same slice-granular LRU structure backs both designs:
+//! * vanilla — one [`SliceCache`] per backing file, managed independently
+//!   (the §4 scalability problem: footprint and lookups scale with chain
+//!   length);
+//! * SQEMU — a single [`unified::UnifiedCache`] for the whole chain,
+//!   keyed by the active volume's logical slice index, refreshed by the
+//!   §5.3 cache-correction rule.
+//!
+//! A slice is the unit of caching and eviction ("the slice is also the
+//! granularity of the cache eviction policy, which is LRU", §2). Cache
+//! keys are *logical*: `vcluster / slice_entries`, the virtual-disk slice
+//! index — equivalent to Qemu's `l2_slice_offset` tag but independent of
+//! where a given file physically placed its L2 table.
+
+pub mod config;
+pub mod lru;
+pub mod slice;
+pub mod unified;
+
+pub use config::CacheConfig;
+pub use slice::SliceCache;
+pub use unified::UnifiedCache;

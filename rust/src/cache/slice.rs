@@ -1,0 +1,199 @@
+//! The slice-granular LRU cache used by both driver designs.
+
+use super::config::{CacheConfig, CACHE_FIXED_OVERHEAD};
+use super::lru::LruIndex;
+use crate::metrics::memory::{MemCategory, MemoryAccountant, Registration};
+use std::sync::Arc;
+
+/// One resident slice: the L2 entries plus the §2 bookkeeping fields
+/// (`dirty`, `ref`; the tag is the LRU key).
+#[derive(Clone, Debug, Default)]
+pub struct Slice {
+    pub entries: Vec<u64>,
+    pub dirty: bool,
+    /// Threads currently using the slice (pinned slices are not evicted).
+    pub refcnt: u32,
+}
+
+/// An LRU cache of L2 slices for one file (vanilla) or one chain (SQEMU).
+pub struct SliceCache {
+    cfg: CacheConfig,
+    lru: LruIndex<Slice>,
+    mem: Registration,
+}
+
+impl SliceCache {
+    pub fn new(cfg: CacheConfig, acct: &Arc<MemoryAccountant>) -> Self {
+        SliceCache {
+            cfg,
+            lru: LruIndex::new(),
+            mem: acct.register(MemCategory::Cache, CACHE_FIXED_OVERHEAD),
+        }
+    }
+
+    pub fn cfg(&self) -> &CacheConfig {
+        &self.cfg
+    }
+
+    /// Look up a slice and mark it most recently used.
+    pub fn get(&mut self, key: u64) -> Option<&mut Slice> {
+        self.lru.touch(key)
+    }
+
+    /// Is the slice resident (no recency update)?
+    pub fn contains(&self, key: u64) -> bool {
+        self.lru.contains(key)
+    }
+
+    /// Insert a fetched slice; if the cache is at capacity the LRU victim
+    /// is returned for writeback when dirty ("a cache entry can be
+    /// evicted ... when the cache is full", §2).
+    pub fn insert(&mut self, key: u64, entries: Vec<u64>) -> Option<(u64, Slice)> {
+        debug_assert_eq!(entries.len() as u64, self.cfg.slice_entries);
+        let mut evicted = None;
+        if !self.lru.contains(key)
+            && self.lru.len() as u64 >= self.cfg.capacity_slices()
+        {
+            evicted = self.evict_one();
+        }
+        self.lru.insert(key, Slice { entries, dirty: false, refcnt: 0 });
+        self.update_mem();
+        evicted
+    }
+
+    /// Pop the least-recently-used unpinned slice.
+    fn evict_one(&mut self) -> Option<(u64, Slice)> {
+        // collect pinned slices we must skip (rare; refcnt is held only
+        // across a single request)
+        let mut skipped = Vec::new();
+        let victim = loop {
+            match self.lru.pop_lru() {
+                None => break None,
+                Some((k, s)) if s.refcnt > 0 => skipped.push((k, s)),
+                Some(v) => break Some(v),
+            }
+        };
+        for (k, s) in skipped {
+            self.lru.insert(k, s);
+        }
+        self.update_mem();
+        victim
+    }
+
+    /// Mark a resident slice dirty (write path).
+    pub fn mark_dirty(&mut self, key: u64) {
+        if let Some(s) = self.lru.touch(key) {
+            s.dirty = true;
+        }
+    }
+
+    /// Remove every slice, returning the dirty ones for writeback
+    /// (VM shutdown, §2).
+    pub fn drain(&mut self) -> Vec<(u64, Slice)> {
+        let mut dirty = Vec::new();
+        while let Some((k, s)) = self.lru.pop_lru() {
+            if s.dirty {
+                dirty.push((k, s));
+            }
+        }
+        self.update_mem();
+        dirty
+    }
+
+    pub fn resident_slices(&self) -> u64 {
+        self.lru.len() as u64
+    }
+
+    /// Live bytes attributed to this cache.
+    pub fn resident_bytes(&self) -> u64 {
+        CACHE_FIXED_OVERHEAD + self.resident_slices() * self.cfg.slice_bytes()
+    }
+
+    fn update_mem(&mut self) {
+        self.mem.resize(self.resident_bytes());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cache(slice_entries: u64, max_bytes: u64) -> (SliceCache, Arc<MemoryAccountant>) {
+        let acct = MemoryAccountant::new();
+        (
+            SliceCache::new(CacheConfig::new(slice_entries, max_bytes), &acct),
+            acct,
+        )
+    }
+
+    #[test]
+    fn insert_get_roundtrip() {
+        let (mut c, _a) = cache(4, 1 << 20);
+        assert!(c.get(0).is_none());
+        c.insert(0, vec![1, 2, 3, 4]);
+        assert_eq!(c.get(0).unwrap().entries, vec![1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn eviction_at_capacity_lru_order() {
+        let slice_bytes = CacheConfig::new(4, 0).slice_bytes();
+        let (mut c, _a) = cache(4, 2 * slice_bytes); // capacity 2
+        assert_eq!(c.cfg().capacity_slices(), 2);
+        assert!(c.insert(1, vec![0; 4]).is_none());
+        assert!(c.insert(2, vec![0; 4]).is_none());
+        c.get(1); // 2 becomes LRU
+        let (k, _) = c.insert(3, vec![0; 4]).unwrap();
+        assert_eq!(k, 2);
+        assert!(c.contains(1) && c.contains(3) && !c.contains(2));
+    }
+
+    #[test]
+    fn dirty_eviction_surfaces_for_writeback() {
+        let slice_bytes = CacheConfig::new(4, 0).slice_bytes();
+        let (mut c, _a) = cache(4, slice_bytes); // capacity 1
+        c.insert(7, vec![9; 4]);
+        c.mark_dirty(7);
+        let (k, s) = c.insert(8, vec![0; 4]).unwrap();
+        assert_eq!(k, 7);
+        assert!(s.dirty);
+        assert_eq!(s.entries, vec![9; 4]);
+    }
+
+    #[test]
+    fn pinned_slices_survive_eviction() {
+        let slice_bytes = CacheConfig::new(4, 0).slice_bytes();
+        let (mut c, _a) = cache(4, 2 * slice_bytes);
+        c.insert(1, vec![0; 4]);
+        c.get(1).unwrap().refcnt = 1;
+        c.insert(2, vec![0; 4]);
+        let (k, _) = c.insert(3, vec![0; 4]).unwrap();
+        assert_eq!(k, 2, "pinned slice 1 skipped");
+        assert!(c.contains(1));
+    }
+
+    #[test]
+    fn memory_accounting_tracks_residency() {
+        let (mut c, a) = cache(512, 1 << 20);
+        let base = a.live(MemCategory::Cache);
+        assert_eq!(base, CACHE_FIXED_OVERHEAD);
+        for k in 0..10 {
+            c.insert(k, vec![0; 512]);
+        }
+        let per_slice = c.cfg().slice_bytes();
+        assert_eq!(a.live(MemCategory::Cache), CACHE_FIXED_OVERHEAD + 10 * per_slice);
+        c.drain();
+        assert_eq!(a.live(MemCategory::Cache), CACHE_FIXED_OVERHEAD);
+    }
+
+    #[test]
+    fn drain_returns_only_dirty() {
+        let (mut c, _a) = cache(4, 1 << 20);
+        c.insert(1, vec![0; 4]);
+        c.insert(2, vec![0; 4]);
+        c.mark_dirty(2);
+        let dirty = c.drain();
+        assert_eq!(dirty.len(), 1);
+        assert_eq!(dirty[0].0, 2);
+        assert_eq!(c.resident_slices(), 0);
+    }
+}

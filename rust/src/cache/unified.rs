@@ -1,0 +1,253 @@
+//! The SQEMU unified indexing cache (§5.3).
+//!
+//! One cache for the whole chain. Cached entries are kept in *chain frame*:
+//! every entry is a stamped `(backing_file_index, offset)` reference
+//! regardless of which file it was read from, so a single slice can
+//! describe clusters living in many backing files ("one can find in the
+//! same slice L2 entries describing data clusters belonging to distinct
+//! backing files", §5.3).
+
+use super::config::CacheConfig;
+use super::slice::{Slice, SliceCache};
+use crate::metrics::memory::MemoryAccountant;
+use crate::qcow::entry::L2Entry;
+use std::sync::Arc;
+
+/// Unified cache + the cache-correction rule.
+pub struct UnifiedCache {
+    cache: SliceCache,
+    /// Chain index of the active volume (the frame of reference).
+    active_index: u16,
+}
+
+impl UnifiedCache {
+    pub fn new(cfg: CacheConfig, active_index: u16, acct: &Arc<MemoryAccountant>) -> Self {
+        UnifiedCache { cache: SliceCache::new(cfg, acct), active_index }
+    }
+
+    pub fn cfg(&self) -> &CacheConfig {
+        &self.cache.cfg()
+    }
+
+    pub fn active_index(&self) -> u16 {
+        self.active_index
+    }
+
+    /// Bring a slice read from file `from_index` into the cache,
+    /// normalizing entries to the chain frame. Returns an evicted dirty
+    /// slice (already denormalized for writeback to the active volume).
+    pub fn insert_from(
+        &mut self,
+        key: u64,
+        raw_entries: &[u64],
+        from_index: u16,
+    ) -> Option<(u64, Vec<u64>)> {
+        let entries: Vec<u64> = raw_entries
+            .iter()
+            .map(|&raw| normalize(raw, from_index))
+            .collect();
+        let evicted = self.cache.insert(key, entries);
+        evicted.map(|(k, s)| (k, self.denormalize_slice(&s)))
+    }
+
+    /// Look up the entry for `vcluster`. `Some(Some((bfi, off)))` = hit on
+    /// an owned cluster; `Some(None)` = slice resident but cluster
+    /// unallocated anywhere; `None` = slice not resident (cache miss).
+    pub fn lookup(&mut self, vcluster: u64) -> Option<Option<(u16, u64)>> {
+        let key = self.cache.cfg().slice_key(vcluster);
+        let idx = self.cache.cfg().slice_index(vcluster) as usize;
+        let slice = self.cache.get(key)?;
+        let e = L2Entry(slice.entries[idx]);
+        Some(e.bfi().map(|b| (b, e.host_offset())))
+    }
+
+    /// The §5.3 cache correction: merge a slice fetched from backing file
+    /// `from_index` into the resident slice — an entry is replaced iff its
+    /// stamp is `<=` the incoming one. Marks the slice dirty so it is
+    /// written back on eviction ("then it sets dirty to 1 in s_v", §5.3).
+    /// Returns the number of corrected entries.
+    pub fn correct(&mut self, key: u64, backing_raw: &[u64], from_index: u16) -> u64 {
+        let Some(slice) = self.cache.get(key) else { return 0 };
+        let mut corrected = 0;
+        for (i, &raw_b) in backing_raw.iter().enumerate() {
+            let b = normalize(raw_b, from_index);
+            let bfi_v = L2Entry(slice.entries[i]).bfi();
+            let bfi_b = L2Entry(b).bfi();
+            // None (unallocated) orders below any stamp
+            if bfi_v <= bfi_b && slice.entries[i] != b {
+                slice.entries[i] = b;
+                corrected += 1;
+            }
+        }
+        if corrected > 0 {
+            slice.dirty = true;
+        }
+        corrected
+    }
+
+    /// Record a write: the active volume now owns `vcluster` at `off`.
+    /// The slice must be resident.
+    pub fn record_write(&mut self, vcluster: u64, off: u64) {
+        let key = self.cache.cfg().slice_key(vcluster);
+        let idx = self.cache.cfg().slice_index(vcluster) as usize;
+        let active = self.active_index;
+        if let Some(slice) = self.cache.get(key) {
+            slice.entries[idx] = L2Entry::remote(off, active).raw();
+            slice.dirty = true;
+        }
+    }
+
+    pub fn contains(&self, key: u64) -> bool {
+        self.cache.contains(key)
+    }
+
+    /// Flush all dirty slices, denormalized for the active volume's L2
+    /// table on disk.
+    pub fn drain(&mut self) -> Vec<(u64, Vec<u64>)> {
+        let drained = self.cache.drain();
+        drained
+            .into_iter()
+            .map(|(k, s)| (k, self.denormalize_slice(&s)))
+            .collect()
+    }
+
+    pub fn resident_bytes(&self) -> u64 {
+        self.cache.resident_bytes()
+    }
+
+    pub fn resident_slices(&self) -> u64 {
+        self.cache.resident_slices()
+    }
+
+    fn denormalize_slice(&self, s: &Slice) -> Vec<u64> {
+        s.entries
+            .iter()
+            .map(|&raw| denormalize(raw, self.active_index))
+            .collect()
+    }
+}
+
+/// Convert a raw on-disk entry read from file `from_index` into the chain
+/// frame: a stamped remote reference (or zero for a true hole).
+pub fn normalize(raw: u64, from_index: u16) -> u64 {
+    let e = L2Entry(raw);
+    match e.sqemu_view(from_index) {
+        Some((bfi, off)) => L2Entry::remote(off, bfi).raw(),
+        None => 0,
+    }
+}
+
+/// Convert a chain-frame entry back to on-disk form for the active
+/// volume: clusters owned by the active volume become local (ALLOCATED)
+/// entries so vanilla drivers keep working (§5.1 backward compatibility).
+pub fn denormalize(raw: u64, active_index: u16) -> u64 {
+    let e = L2Entry(raw);
+    match e.bfi() {
+        Some(bfi) if bfi == active_index => {
+            L2Entry::local(e.host_offset(), Some(bfi)).raw()
+        }
+        _ => raw,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn uc(active: u16) -> UnifiedCache {
+        let acct = MemoryAccountant::new();
+        UnifiedCache::new(CacheConfig::new(4, 1 << 20), active, &acct)
+    }
+
+    #[test]
+    fn lookup_states() {
+        let mut c = uc(2);
+        assert_eq!(c.lookup(0), None); // miss: slice absent
+        // slice from the active volume: cluster 0 owned by file 0,
+        // cluster 1 owned by active (2), cluster 2 unallocated
+        let raw = vec![
+            L2Entry::remote(5 << 16, 0).raw(),
+            L2Entry::local(7 << 16, Some(2)).raw(),
+            0,
+            0,
+        ];
+        c.insert_from(0, &raw, 2);
+        assert_eq!(c.lookup(0), Some(Some((0, 5 << 16))));
+        assert_eq!(c.lookup(1), Some(Some((2, 7 << 16))));
+        assert_eq!(c.lookup(2), Some(None));
+    }
+
+    #[test]
+    fn normalize_unstamped_local() {
+        // vanilla entry read from file 1: local allocation, no stamp
+        let raw = L2Entry::local(3 << 16, None).raw();
+        let n = L2Entry(normalize(raw, 1));
+        assert_eq!(n.bfi(), Some(1));
+        assert_eq!(n.host_offset(), 3 << 16);
+        assert!(!n.is_allocated_here());
+    }
+
+    #[test]
+    fn denormalize_restores_local_form() {
+        let chain_frame = L2Entry::remote(3 << 16, 2).raw();
+        let d = L2Entry(denormalize(chain_frame, 2));
+        assert!(d.is_allocated_here());
+        assert_eq!(d.bfi(), Some(2));
+        // non-active stamps stay remote
+        let keep = L2Entry::remote(3 << 16, 1).raw();
+        assert_eq!(denormalize(keep, 2), keep);
+    }
+
+    #[test]
+    fn correction_takes_newer_or_equal() {
+        let mut c = uc(5);
+        // resident slice: entry 0 stamped bfi=1, entry 1 unallocated,
+        // entry 2 stamped bfi=4
+        let resident = vec![
+            L2Entry::remote(1 << 16, 1).raw(),
+            0,
+            L2Entry::remote(4 << 16, 4).raw(),
+            0,
+        ];
+        c.insert_from(0, &resident, 5);
+        // slice from backing file 3: owns entries 0, 1 and 2 locally
+        let backing = vec![
+            L2Entry::local(9 << 16, None).raw(),
+            L2Entry::local(8 << 16, None).raw(),
+            L2Entry::local(7 << 16, None).raw(),
+            0,
+        ];
+        let corrected = c.correct(0, &backing, 3);
+        // entry 0: 1 <= 3 -> corrected; entry 1: None <= 3 -> corrected;
+        // entry 2: 4 > 3 -> kept
+        assert_eq!(corrected, 2);
+        assert_eq!(c.lookup(0), Some(Some((3, 9 << 16))));
+        assert_eq!(c.lookup(1), Some(Some((3, 8 << 16))));
+        assert_eq!(c.lookup(2), Some(Some((4, 4 << 16))));
+    }
+
+    #[test]
+    fn correction_marks_dirty_and_drains_denormalized() {
+        let mut c = uc(1);
+        c.insert_from(0, &[0, 0, 0, 0], 1);
+        let backing = vec![L2Entry::local(2 << 16, None).raw(), 0, 0, 0];
+        assert_eq!(c.correct(0, &backing, 0), 1);
+        let dirty = c.drain();
+        assert_eq!(dirty.len(), 1);
+        let e = L2Entry(dirty[0].1[0]);
+        assert_eq!(e.bfi(), Some(0));
+        assert!(!e.is_allocated_here()); // remote stamp persisted
+    }
+
+    #[test]
+    fn record_write_claims_for_active() {
+        let mut c = uc(3);
+        c.insert_from(0, &[L2Entry::remote(1 << 16, 0).raw(), 0, 0, 0], 3);
+        c.record_write(0, 9 << 16);
+        assert_eq!(c.lookup(0), Some(Some((3, 9 << 16))));
+        let dirty = c.drain();
+        let e = L2Entry(dirty[0].1[0]);
+        assert!(e.is_allocated_here()); // written back in local form
+        assert_eq!(e.host_offset(), 9 << 16);
+    }
+}

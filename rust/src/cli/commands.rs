@@ -1,0 +1,260 @@
+//! Subcommand implementations.
+
+use super::Args;
+use crate::cache::CacheConfig;
+use crate::chaingen::ChainSpec;
+use crate::characterize::population::{Population, PopulationConfig};
+use crate::coordinator::server::VmChain;
+use crate::coordinator::{Coordinator, VmConfig};
+use crate::qcow::image::{DataMode, Image};
+use crate::qcow::layout::{Geometry, DEFAULT_CLUSTER_BITS, FEATURE_BFI};
+use crate::qcow::{qcheck, snapshot, Chain};
+use crate::runtime::service::{verify_service, RuntimeService};
+use crate::storage::dir::DirStore;
+use crate::storage::store::FileStore;
+use crate::util::{human_bytes, human_ns};
+use crate::vdisk::DriverKind;
+use anyhow::{bail, Result};
+
+fn store(args: &Args) -> Result<DirStore> {
+    DirStore::new(args.get("dir").unwrap_or("."))
+}
+
+pub fn create(args: &Args) -> Result<()> {
+    let s = store(args)?;
+    let name = args.require("name")?;
+    let size = args.size_or("size", 50 << 30)?;
+    let bits = args.u64_or("cluster-bits", DEFAULT_CLUSTER_BITS as u64)? as u32;
+    let flags = if args.bool("vanilla") { 0 } else { FEATURE_BFI };
+    let geom = Geometry::new(bits, size)?;
+    let backend = s.create_file(name)?;
+    Image::create(name, backend, geom, flags, 0, None, DataMode::Real)?;
+    println!(
+        "created '{name}': {} virtual, {} clusters of {}, format {}",
+        human_bytes(size),
+        geom.num_vclusters(),
+        human_bytes(geom.cluster_size()),
+        if flags & FEATURE_BFI != 0 { "sqemu" } else { "vanilla" },
+    );
+    Ok(())
+}
+
+pub fn snapshot(args: &Args) -> Result<()> {
+    let s = store(args)?;
+    let active = args.require("active")?;
+    let new = args.require("new")?;
+    let mut chain = Chain::open(&s, active, DataMode::Real)?;
+    let sqemu = chain.active().has_bfi() || chain.len() == 1 && !args.bool("vanilla");
+    let t0 = std::time::Instant::now();
+    if sqemu && !args.bool("vanilla") {
+        snapshot::snapshot_sqemu(&mut chain, &s, new)?;
+    } else {
+        snapshot::snapshot_vanilla(&mut chain, &s, new)?;
+    }
+    println!(
+        "snapshot '{new}' created on top of '{active}' in {} (chain length {})",
+        human_ns(t0.elapsed().as_nanos() as u64),
+        chain.len()
+    );
+    Ok(())
+}
+
+pub fn convert(args: &Args) -> Result<()> {
+    let s = store(args)?;
+    let active = args.require("active")?;
+    let chain = Chain::open(&s, active, DataMode::Real)?;
+    let stamped = snapshot::convert_to_sqemu(&chain)?;
+    println!("stamped {stamped} L2 entries in '{active}' (chain length {})", chain.len());
+    Ok(())
+}
+
+pub fn stream(args: &Args) -> Result<()> {
+    let s = store(args)?;
+    let active = args.require("active")?;
+    let from = args.u64_or("from", 0)? as u16;
+    let to = args.require("to")?.parse::<u16>()?;
+    let mut chain = Chain::open(&s, active, DataMode::Real)?;
+    let before = chain.len();
+    let copied = snapshot::stream_merge(&mut chain, from, to)?;
+    println!(
+        "streamed files {from}..={to}: {copied} clusters copied, chain {before} -> {}",
+        chain.len()
+    );
+    // merged predecessors are gone from the chain; delete their files
+    Ok(())
+}
+
+pub fn info(args: &Args) -> Result<()> {
+    let s = store(args)?;
+    let name = args.require("name")?;
+    let backend = s.open_file(name)?;
+    let img = Image::open(name, backend, DataMode::Real)?;
+    let geom = *img.geom();
+    println!("file:          {name}");
+    println!("virtual size:  {}", human_bytes(geom.virtual_size));
+    println!("cluster size:  {}", human_bytes(geom.cluster_size()));
+    println!("physical size: {}", human_bytes(img.file_len()));
+    println!("format:        {}", if img.has_bfi() { "sqemu (bfi-stamped)" } else { "vanilla" });
+    println!("chain index:   {}", img.chain_index());
+    println!("backing file:  {}", img.backing_name().unwrap_or_else(|| "(none)".into()));
+    println!("L1 entries:    {}", geom.l1_entries());
+    Ok(())
+}
+
+pub fn check(args: &Args) -> Result<()> {
+    let s = store(args)?;
+    let active = args.require("active")?;
+    let chain = Chain::open(&s, active, DataMode::Real)?;
+    let report = qcheck::check_chain(&chain)?;
+    println!(
+        "chain '{active}': {} files, {} consistent clusters, {} leaked",
+        chain.len(),
+        report.ok_clusters,
+        report.leaked_clusters
+    );
+    if report.is_clean() {
+        println!("no errors found");
+        Ok(())
+    } else {
+        for e in &report.errors {
+            eprintln!("ERROR: {e}");
+        }
+        bail!("{} consistency errors", report.errors.len());
+    }
+}
+
+pub fn characterize(args: &Args) -> Result<()> {
+    let cfg = PopulationConfig {
+        n_chains: args.u64_or("chains", 20_000)? as usize,
+        days: args.u64_or("days", 365)? as usize,
+        ..Default::default()
+    };
+    println!("simulating {} chains over {} days...", cfg.n_chains, cfg.days);
+    let pop = Population::simulate(cfg);
+    let (chains, files) = pop.chain_length_cdfs();
+    println!("\nchain-length CDF (Fig 6):");
+    for len in [1u64, 5, 10, 30, 35, 50, 100, 500, 1000] {
+        println!(
+            "  len <= {len:>5}: {:>5.1}% of chains, {:>5.1}% of files",
+            100.0 * chains.at(len),
+            100.0 * files.at(len)
+        );
+    }
+    let (_, longest) = *pop.longest_per_day.last().unwrap();
+    println!("\nlongest chain at year end (Fig 5): {longest}");
+    let scatter = pop.sharing_scatter();
+    let unshared = scatter.iter().filter(|(_, s)| *s == 0).count();
+    println!(
+        "sharing (Fig 8): {} chains, {:.1}% with no sharing, max shared {}",
+        scatter.len(),
+        100.0 * unshared as f64 / scatter.len() as f64,
+        scatter.iter().map(|(_, s)| *s).max().unwrap_or(0)
+    );
+    println!("\n(run `cargo bench --bench fig04_09_characterize` for the full tables)");
+    Ok(())
+}
+
+pub fn serve(args: &Args) -> Result<()> {
+    let vms = args.u64_or("vms", 4)?;
+    let chain_len = args.u64_or("chain", 50)? as usize;
+    let requests = args.u64_or("requests", 2_000)?;
+    let kind = if args.bool("vanilla") {
+        DriverKind::Vanilla
+    } else {
+        DriverKind::Scalable
+    };
+    let coord = Coordinator::with_fresh_nodes(3)?;
+    println!(
+        "coordinator: 3 storage nodes, {vms} x {} VMs on chains of {chain_len}",
+        kind.name()
+    );
+    for v in 0..vms {
+        let name = format!("vm-{v}");
+        coord.launch_vm(
+            &name,
+            VmConfig {
+                driver: kind,
+                cache: CacheConfig::new(512, 4 << 20),
+                chain: VmChain::Generate(ChainSpec {
+                    disk_size: 1 << 30,
+                    chain_len,
+                    populated: 0.5,
+                    stamped: kind == DriverKind::Scalable,
+                    data_mode: DataMode::Synthetic,
+                    prefix: name.clone(),
+                    seed: 0x5EED ^ v,
+                    ..Default::default()
+                }),
+            },
+        )?;
+    }
+    let t0 = std::time::Instant::now();
+    let mut handles = vec![];
+    for name in coord.vm_names() {
+        let client = coord.client(&name)?;
+        handles.push(std::thread::spawn(move || -> Result<()> {
+            let mut rng = crate::util::rng::Rng::new(fxhash(name.as_bytes()));
+            for _ in 0..requests {
+                let voff = rng.below((1 << 30) - 4096);
+                if rng.chance(0.2) {
+                    client.write(voff, vec![1u8; 512])?;
+                } else {
+                    client.read(voff, 4096)?;
+                }
+            }
+            Ok(())
+        }));
+    }
+    for h in handles {
+        h.join().unwrap()?;
+    }
+    let wall = t0.elapsed();
+    println!("\nper-VM stats after {requests} requests each:");
+    for name in coord.vm_names() {
+        let s = coord.vm_stats(&name)?;
+        println!(
+            "  {name}: {} reads / {} writes, {} read",
+            s.reads,
+            s.writes,
+            human_bytes(s.bytes_read)
+        );
+    }
+    let total_ops = vms * requests;
+    println!(
+        "\nfleet: {total_ops} ops in {:.2}s wall = {:.0} ops/s; virtual time {}",
+        wall.as_secs_f64(),
+        total_ops as f64 / wall.as_secs_f64(),
+        human_ns(coord.clock.now())
+    );
+    println!("memory accounted: {}", human_bytes(coord.acct.total()));
+    coord.shutdown();
+    Ok(())
+}
+
+pub fn selftest(_args: &Args) -> Result<()> {
+    print!("artifacts: ");
+    match RuntimeService::try_default() {
+        None => println!("NOT FOUND (run `make artifacts`); host fallback active"),
+        Some(svc) => {
+            println!(
+                "loaded (clusters={}, batch={}, chain={}, stream_depth={})",
+                svc.clusters, svc.batch, svc.chain, svc.stream_depth
+            );
+            print!("pjrt-vs-host differential: ");
+            verify_service(&svc)?;
+            println!("OK");
+            svc.shutdown();
+        }
+    }
+    println!("cli selftest passed");
+    Ok(())
+}
+
+fn fxhash(bytes: &[u8]) -> u64 {
+    let mut h = 0xcbf29ce484222325u64;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}

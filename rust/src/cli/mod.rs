@@ -1,0 +1,67 @@
+//! The `sqemu` CLI — hand-rolled argument parsing (no `clap` in the
+//! offline crate set). Subcommands cover the image tools (`qemu-img`
+//! analogues over real files), the simulation/figure harness and the
+//! coordinator demo.
+//!
+//! ```text
+//! sqemu create  --dir D --name N --size 50G [--vanilla]
+//! sqemu snapshot --dir D --active N --new M
+//! sqemu convert --dir D --active N            # stamp a vanilla chain
+//! sqemu stream  --dir D --active N --from I --to J
+//! sqemu info    --dir D --name N
+//! sqemu check   --dir D --active N
+//! sqemu characterize [--chains N]             # §3 figures
+//! sqemu serve   [--vms N] [--chain L]         # coordinator demo
+//! sqemu selftest                              # artifacts + runtime
+//! ```
+
+mod args;
+mod commands;
+
+use anyhow::{bail, Result};
+pub use args::Args;
+
+pub fn run(argv: Vec<String>) -> Result<()> {
+    let Some((cmd, rest)) = argv.split_first() else {
+        print_usage();
+        return Ok(());
+    };
+    let args = Args::parse(rest)?;
+    match cmd.as_str() {
+        "create" => commands::create(&args),
+        "snapshot" => commands::snapshot(&args),
+        "convert" => commands::convert(&args),
+        "stream" => commands::stream(&args),
+        "info" => commands::info(&args),
+        "check" => commands::check(&args),
+        "characterize" => commands::characterize(&args),
+        "serve" => commands::serve(&args),
+        "selftest" => commands::selftest(&args),
+        "help" | "--help" | "-h" => {
+            print_usage();
+            Ok(())
+        }
+        other => bail!("unknown command '{other}' (try `sqemu help`)"),
+    }
+}
+
+fn print_usage() {
+    println!(
+        "sqemu — Virtual Disk Snapshot Management at Scale (SQEMU reproduction)\n\
+         \n\
+         image tools (real files):\n\
+         \x20 create   --dir D --name N --size 50G [--vanilla] [--cluster-bits 16]\n\
+         \x20 snapshot --dir D --active N --new M\n\
+         \x20 convert  --dir D --active N\n\
+         \x20 stream   --dir D --active N --from I --to J\n\
+         \x20 info     --dir D --name N\n\
+         \x20 check    --dir D --active N\n\
+         \n\
+         study & demo:\n\
+         \x20 characterize [--chains N] [--days N]\n\
+         \x20 serve [--vms N] [--chain L] [--requests R] [--vanilla]\n\
+         \x20 selftest\n\
+         \n\
+         figures: cargo bench --bench fig12_memory (etc.); --full for paper scale"
+    );
+}

@@ -1,0 +1,153 @@
+//! Bulk translation: resolve many virtual clusters at once through the
+//! AOT-compiled kernels (L1/L2 of the stack), with the host kernels as a
+//! bit-exact fallback when artifacts are absent.
+//!
+//! Used by the coordinator for *bulk* control-plane work — boot-time
+//! prefetch planning, migration/copy planning, Fig 13c-style accounting —
+//! never on the per-request path (which is pure driver code).
+
+use crate::qcow::Chain;
+use crate::runtime::service::RuntimeService;
+use crate::runtime::{host, UNALLOCATED};
+use anyhow::Result;
+
+pub struct BulkTranslator {
+    runtime: Option<RuntimeService>,
+    /// histogram width when falling back to host kernels
+    hist_files: usize,
+}
+
+impl BulkTranslator {
+    pub fn new(runtime: Option<RuntimeService>) -> Self {
+        let hist_files = runtime.as_ref().map(|r| r.chain).unwrap_or(32);
+        BulkTranslator { runtime, hist_files }
+    }
+
+    pub fn is_accelerated(&self) -> bool {
+        self.runtime.is_some()
+    }
+
+    /// Flatten a stamped chain's active volume into the kernel-side
+    /// (off, bfi) arrays, where `off` is the host *cluster index* in the
+    /// owning file. Only indexes the first `max_clusters` virtual
+    /// clusters (kernel tiles are fixed-size; callers loop for more).
+    pub fn flatten_active(chain: &Chain, start: u64, max_clusters: usize) -> Result<(Vec<i32>, Vec<i32>)> {
+        let active = chain.active();
+        let geom = *active.geom();
+        let end = (start + max_clusters as u64).min(geom.num_vclusters());
+        let mut off = Vec::with_capacity((end - start) as usize);
+        let mut bfi = Vec::with_capacity((end - start) as usize);
+        for vc in start..end {
+            match active.l2_entry(vc)?.sqemu_view(active.chain_index()) {
+                Some((b, o)) => {
+                    off.push((o >> geom.cluster_bits) as i32);
+                    bfi.push(b as i32);
+                }
+                None => {
+                    off.push(UNALLOCATED);
+                    bfi.push(UNALLOCATED);
+                }
+            }
+        }
+        Ok((off, bfi))
+    }
+
+    /// Resolve `vbs` (virtual cluster indices, all < off.len()) against a
+    /// flattened table. Returns (bfi, host_cluster, per-file histogram).
+    pub fn translate(
+        &self,
+        off: &[i32],
+        bfi: &[i32],
+        vbs: &[i32],
+    ) -> Result<(Vec<i32>, Vec<i32>, Vec<i64>)> {
+        match &self.runtime {
+            Some(rt) if off.len() <= rt.clusters => rt.translate_direct(off, bfi, vbs),
+            _ => Ok(host::translate_direct(off, bfi, vbs, self.hist_files)),
+        }
+    }
+
+    /// Boot-prefetch plan for a VM: the set of (bfi, host cluster) pairs
+    /// the first `span` virtual clusters resolve to — the coordinator
+    /// warms the storage-node caches / unified cache with these.
+    pub fn prefetch_plan(&self, chain: &Chain, span: usize) -> Result<Vec<(i32, i32)>> {
+        let (off, bfi) = Self::flatten_active(chain, 0, span)?;
+        let vbs: Vec<i32> = (0..off.len() as i32).collect();
+        let (rb, ro, _) = self.translate(&off, &bfi, &vbs)?;
+        Ok(rb
+            .into_iter()
+            .zip(ro)
+            .filter(|&(b, _)| b != UNALLOCATED)
+            .collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::chaingen::{generate, ChainSpec};
+    use crate::metrics::clock::{CostModel, VirtClock};
+    use crate::qcow::image::DataMode;
+    use crate::storage::node::StorageNode;
+
+    fn chain() -> Chain {
+        let node = StorageNode::new("s", VirtClock::new(), CostModel::default());
+        generate(
+            &*node,
+            &ChainSpec {
+                disk_size: 16 << 20,
+                chain_len: 4,
+                populated: 0.6,
+                data_mode: DataMode::Real,
+                ..Default::default()
+            },
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn flatten_matches_resolve_walk() {
+        let c = chain();
+        let geom = *c.active().geom();
+        let (off, bfi) = BulkTranslator::flatten_active(&c, 0, 10_000).unwrap();
+        assert_eq!(off.len(), geom.num_vclusters() as usize);
+        for vc in 0..geom.num_vclusters() {
+            let walk = c.resolve_walk(vc).unwrap();
+            match walk {
+                None => assert_eq!(bfi[vc as usize], UNALLOCATED),
+                Some((b, o)) => {
+                    assert_eq!(bfi[vc as usize], b as i32);
+                    assert_eq!(off[vc as usize], (o >> geom.cluster_bits) as i32);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn host_fallback_translates() {
+        let c = chain();
+        let bt = BulkTranslator::new(None);
+        assert!(!bt.is_accelerated());
+        let plan = bt.prefetch_plan(&c, 256).unwrap();
+        assert!(!plan.is_empty());
+        for (b, o) in plan {
+            assert!(b >= 0 && o >= 0);
+        }
+    }
+
+    #[test]
+    fn accelerated_path_matches_host_when_available() {
+        let c = chain();
+        let Some(svc) = RuntimeService::try_default() else {
+            eprintln!("SKIP: no artifacts");
+            return;
+        };
+        let accel = BulkTranslator::new(Some(svc));
+        let host_bt = BulkTranslator::new(None);
+        let (off, bfi) = BulkTranslator::flatten_active(&c, 0, 4096).unwrap();
+        let vbs: Vec<i32> = (0..off.len() as i32).collect();
+        let (ab, ao, _) = accel.translate(&off, &bfi, &vbs).unwrap();
+        let (hb, ho, _) = host_bt.translate(&off, &bfi, &vbs).unwrap();
+        assert_eq!(ab, hb);
+        assert_eq!(ao, ho);
+    }
+}

@@ -1,0 +1,32 @@
+//! Layer-3 coordinator: the multi-VM storage service.
+//!
+//! The paper's infrastructure runs many VMs whose chains live on shared
+//! storage nodes; the provider's control plane creates snapshots, copies
+//! disks, streams chains and balances placement (§3). This module is that
+//! control plane, scaled to the simulation:
+//!
+//! * [`server::Coordinator`] — owns the storage nodes and the VM fleet;
+//!   one worker thread per VM owns its driver (drivers are single-owner,
+//!   like a Qemu process), requests flow through bounded queues
+//!   (backpressure = queue full).
+//! * [`placement::NodeSet`] — multi-node [`FileStore`]: new files go to
+//!   the least-loaded node with capacity (thin provisioning: a chain can
+//!   continue on another node, §4.1).
+//! * [`batcher::BulkTranslator`] — bulk virtual-cluster resolution via
+//!   the AOT PJRT kernels (boot prefetch, migration planning); falls back
+//!   to the bit-exact host kernels without artifacts.
+//! * [`streaming::StreamingOrchestrator`] — plans merges with the
+//!   `stream_fold` kernel, validates the plan, pauses the VM, executes
+//!   [`crate::qcow::snapshot::stream_merge`] and resumes.
+//!
+//! [`FileStore`]: crate::storage::store::FileStore
+
+pub mod batcher;
+pub mod placement;
+pub mod server;
+pub mod stats;
+pub mod streaming;
+
+pub use batcher::BulkTranslator;
+pub use placement::NodeSet;
+pub use server::{Coordinator, CoordinatorConfig, VmClient, VmConfig};

@@ -1,0 +1,423 @@
+//! The coordinator server: VM fleet management over a storage-node set.
+//!
+//! Architecture (thread-per-VM, like one Qemu process per VM):
+//!
+//! ```text
+//!  clients ──► VmClient ──► bounded queue ──► VM worker thread
+//!                               │                 │ owns the Driver
+//!                       (backpressure =           │ (vanilla | sqemu)
+//!                        full queue blocks)       ▼
+//!                                          Chain on NodeSet
+//!  control plane: launch / snapshot / stream / stop, bulk translation
+//! ```
+
+use super::batcher::BulkTranslator;
+use super::placement::NodeSet;
+use super::stats::{VmStats, VmStatsSnapshot};
+use super::streaming::{StreamReport, StreamingOrchestrator};
+use crate::cache::CacheConfig;
+use crate::chaingen::ChainSpec;
+use crate::metrics::clock::{CostModel, VirtClock};
+use crate::metrics::counters::CounterSnapshot;
+use crate::metrics::memory::MemoryAccountant;
+use crate::qcow::image::DataMode;
+use crate::qcow::{snapshot, Chain};
+use crate::runtime::service::RuntimeService;
+use crate::vdisk::scalable::ScalableDriver;
+use crate::vdisk::vanilla::VanillaDriver;
+use crate::vdisk::{Driver, DriverKind};
+use anyhow::{anyhow, bail, Result};
+use std::collections::HashMap;
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+/// Fleet-level configuration.
+pub struct CoordinatorConfig {
+    pub cost: CostModel,
+    /// Per-VM request queue depth (backpressure bound).
+    pub queue_depth: usize,
+}
+
+impl Default for CoordinatorConfig {
+    fn default() -> Self {
+        CoordinatorConfig { cost: CostModel::default(), queue_depth: 64 }
+    }
+}
+
+/// Per-VM launch configuration.
+#[derive(Clone, Debug)]
+pub struct VmConfig {
+    pub driver: DriverKind,
+    pub cache: CacheConfig,
+    /// Open an existing chain by active-volume name, or generate one.
+    pub chain: VmChain,
+}
+
+#[derive(Clone, Debug)]
+pub enum VmChain {
+    Existing { active_name: String, data_mode: DataMode },
+    Generate(ChainSpec),
+}
+
+enum Request {
+    Read { voff: u64, len: usize, reply: SyncSender<Result<Vec<u8>>> },
+    Write { voff: u64, data: Vec<u8>, reply: SyncSender<Result<()>> },
+    Flush { reply: SyncSender<Result<()>> },
+    Counters { reply: SyncSender<CounterSnapshot> },
+    /// Pause the worker and hand the chain to `f` (snapshot/stream).
+    WithChain {
+        f: Box<dyn FnOnce(&mut Chain) -> Result<String> + Send>,
+        reply: SyncSender<Result<String>>,
+    },
+    Stop,
+}
+
+struct VmHandle {
+    tx: SyncSender<Request>,
+    join: Option<JoinHandle<()>>,
+    stats: Arc<VmStats>,
+    driver_kind: DriverKind,
+    cache: CacheConfig,
+    data_mode: DataMode,
+}
+
+/// The coordinator: owns nodes, VMs and the AOT runtime.
+pub struct Coordinator {
+    pub nodes: Arc<NodeSet>,
+    pub clock: Arc<VirtClock>,
+    pub acct: Arc<MemoryAccountant>,
+    cfg: CoordinatorConfig,
+    runtime: Option<RuntimeService>,
+    vms: Mutex<HashMap<String, VmHandle>>,
+}
+
+impl Coordinator {
+    pub fn new(
+        nodes: Arc<NodeSet>,
+        clock: Arc<VirtClock>,
+        cfg: CoordinatorConfig,
+        runtime: Option<RuntimeService>,
+    ) -> Arc<Coordinator> {
+        Arc::new(Coordinator {
+            nodes,
+            clock,
+            acct: MemoryAccountant::new(),
+            cfg,
+            runtime,
+            vms: Mutex::new(HashMap::new()),
+        })
+    }
+
+    /// Convenience: a coordinator over `n` fresh unlimited nodes.
+    pub fn with_fresh_nodes(n: usize) -> Result<Arc<Coordinator>> {
+        let clock = VirtClock::new();
+        let nodes = (0..n)
+            .map(|i| {
+                crate::storage::node::StorageNode::new(
+                    &format!("node-{i}"),
+                    clock.clone(),
+                    CostModel::default(),
+                )
+            })
+            .collect();
+        let runtime = RuntimeService::try_default();
+        Ok(Coordinator::new(
+            Arc::new(NodeSet::new(nodes)?),
+            clock,
+            CoordinatorConfig::default(),
+            runtime,
+        ))
+    }
+
+    pub fn translator(&self) -> BulkTranslator {
+        BulkTranslator::new(self.runtime.clone())
+    }
+
+    pub fn streaming(&self) -> StreamingOrchestrator {
+        StreamingOrchestrator::new(self.runtime.clone())
+    }
+
+    fn build_driver(
+        &self,
+        chain: Chain,
+        cfg: &VmConfig,
+    ) -> Box<dyn Driver + Send> {
+        match cfg.driver {
+            DriverKind::Vanilla => Box::new(VanillaDriver::new(
+                chain,
+                cfg.cache,
+                self.clock.clone(),
+                self.cfg.cost,
+                self.acct.clone(),
+            )),
+            DriverKind::Scalable => Box::new(ScalableDriver::new(
+                chain,
+                cfg.cache,
+                self.clock.clone(),
+                self.cfg.cost,
+                self.acct.clone(),
+            )),
+        }
+    }
+
+    /// Launch a VM: open/generate its chain and start its worker thread.
+    pub fn launch_vm(self: &Arc<Self>, name: &str, cfg: VmConfig) -> Result<VmClient> {
+        let mut vms = self.vms.lock().unwrap();
+        if vms.contains_key(name) {
+            bail!("vm '{name}' already running");
+        }
+        let (chain, data_mode) = match &cfg.chain {
+            VmChain::Existing { active_name, data_mode } => (
+                Chain::open(self.nodes.as_ref(), active_name, *data_mode)?,
+                *data_mode,
+            ),
+            VmChain::Generate(spec) => (
+                crate::chaingen::generate(self.nodes.as_ref(), spec)?,
+                spec.data_mode,
+            ),
+        };
+        let driver = self.build_driver(chain, &cfg);
+        let stats = Arc::new(VmStats::default());
+        let (tx, rx) = sync_channel::<Request>(self.cfg.queue_depth);
+        let worker_stats = Arc::clone(&stats);
+        let vm_name = name.to_string();
+        let join = std::thread::Builder::new()
+            .name(format!("vm-{name}"))
+            .spawn(move || worker_loop(vm_name, driver, rx, worker_stats))
+            .expect("spawn vm worker");
+        vms.insert(
+            name.to_string(),
+            VmHandle {
+                tx: tx.clone(),
+                join: Some(join),
+                stats,
+                driver_kind: cfg.driver,
+                cache: cfg.cache,
+                data_mode,
+            },
+        );
+        Ok(VmClient { tx })
+    }
+
+    /// Get a fresh client handle for a running VM.
+    pub fn client(&self, name: &str) -> Result<VmClient> {
+        let vms = self.vms.lock().unwrap();
+        let h = vms.get(name).ok_or_else(|| anyhow!("no vm '{name}'"))?;
+        Ok(VmClient { tx: h.tx.clone() })
+    }
+
+    pub fn vm_stats(&self, name: &str) -> Result<VmStatsSnapshot> {
+        let vms = self.vms.lock().unwrap();
+        let h = vms.get(name).ok_or_else(|| anyhow!("no vm '{name}'"))?;
+        Ok(h.stats.snapshot())
+    }
+
+    pub fn vm_names(&self) -> Vec<String> {
+        let mut v: Vec<String> = self.vms.lock().unwrap().keys().cloned().collect();
+        v.sort();
+        v
+    }
+
+    /// Snapshot a running VM's disk: pause (drain), snapshot, swap the
+    /// worker onto the lengthened chain.
+    pub fn snapshot_vm(self: &Arc<Self>, name: &str, new_file: &str) -> Result<u64> {
+        let (kind, stats) = {
+            let vms = self.vms.lock().unwrap();
+            let h = vms.get(name).ok_or_else(|| anyhow!("no vm '{name}'"))?;
+            (h.driver_kind, Arc::clone(&h.stats))
+        };
+        let client = self.client(name)?;
+        let nodes = Arc::clone(&self.nodes);
+        let new_file = new_file.to_string();
+        let t0 = self.clock.now();
+        client.with_chain(Box::new(move |chain| {
+            match kind {
+                DriverKind::Scalable => {
+                    snapshot::snapshot_sqemu(chain, nodes.as_ref(), &new_file)?
+                }
+                DriverKind::Vanilla => {
+                    snapshot::snapshot_vanilla(chain, nodes.as_ref(), &new_file)?
+                }
+            }
+            Ok(new_file.clone())
+        }))??;
+        stats.snapshots.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        Ok(self.clock.now() - t0)
+    }
+
+    /// Stream-merge a window of a running VM's chain (paused).
+    pub fn stream_vm(self: &Arc<Self>, name: &str, from: u16, to: u16) -> Result<StreamReport> {
+        let stats = {
+            let vms = self.vms.lock().unwrap();
+            let h = vms.get(name).ok_or_else(|| anyhow!("no vm '{name}'"))?;
+            Arc::clone(&h.stats)
+        };
+        let orch = self.streaming();
+        let client = self.client(name)?;
+        let t0 = self.clock.now();
+        let report_json = client.with_chain(Box::new(move |chain| {
+            let report = orch.merge(chain, from, to)?;
+            Ok(format!(
+                "{} {} {} {}",
+                report.planned_clusters, report.copied_clusters,
+                report.len_before, report.len_after
+            ))
+        }))??;
+        stats.streams.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        let parts: Vec<u64> = report_json
+            .split_whitespace()
+            .map(|p| p.parse().unwrap_or(0))
+            .collect();
+        Ok(StreamReport {
+            from,
+            to,
+            planned_clusters: parts[0],
+            copied_clusters: parts[1],
+            len_before: parts[2] as usize,
+            len_after: parts[3] as usize,
+            merge_ns: self.clock.now() - t0,
+        })
+    }
+
+    /// Stop one VM (flushes its caches).
+    pub fn stop_vm(&self, name: &str) -> Result<()> {
+        let mut vms = self.vms.lock().unwrap();
+        let mut h = vms.remove(name).ok_or_else(|| anyhow!("no vm '{name}'"))?;
+        let _ = h.tx.send(Request::Stop);
+        if let Some(j) = h.join.take() {
+            let _ = j.join();
+        }
+        Ok(())
+    }
+
+    /// Stop the whole fleet.
+    pub fn shutdown(&self) {
+        let names = self.vm_names();
+        for n in names {
+            let _ = self.stop_vm(&n);
+        }
+    }
+
+    pub fn data_mode_of(&self, name: &str) -> Result<DataMode> {
+        let vms = self.vms.lock().unwrap();
+        Ok(vms
+            .get(name)
+            .ok_or_else(|| anyhow!("no vm '{name}'"))?
+            .data_mode)
+    }
+
+    pub fn cache_of(&self, name: &str) -> Result<CacheConfig> {
+        let vms = self.vms.lock().unwrap();
+        Ok(vms.get(name).ok_or_else(|| anyhow!("no vm '{name}'"))?.cache)
+    }
+}
+
+impl Drop for Coordinator {
+    fn drop(&mut self) {
+        let names: Vec<String> = self.vms.lock().unwrap().keys().cloned().collect();
+        for n in names {
+            let _ = self.stop_vm(&n);
+        }
+    }
+}
+
+/// Client handle to a running VM's request queue.
+#[derive(Clone)]
+pub struct VmClient {
+    tx: SyncSender<Request>,
+}
+
+impl VmClient {
+    pub fn read(&self, voff: u64, len: usize) -> Result<Vec<u8>> {
+        let (reply, rx) = sync_channel(1);
+        self.tx
+            .send(Request::Read { voff, len, reply })
+            .map_err(|_| anyhow!("vm worker gone"))?;
+        rx.recv().map_err(|_| anyhow!("vm worker gone"))?
+    }
+
+    pub fn write(&self, voff: u64, data: Vec<u8>) -> Result<()> {
+        let (reply, rx) = sync_channel(1);
+        self.tx
+            .send(Request::Write { voff, data, reply })
+            .map_err(|_| anyhow!("vm worker gone"))?;
+        rx.recv().map_err(|_| anyhow!("vm worker gone"))?
+    }
+
+    pub fn flush(&self) -> Result<()> {
+        let (reply, rx) = sync_channel(1);
+        self.tx
+            .send(Request::Flush { reply })
+            .map_err(|_| anyhow!("vm worker gone"))?;
+        rx.recv().map_err(|_| anyhow!("vm worker gone"))?
+    }
+
+    pub fn counters(&self) -> Result<CounterSnapshot> {
+        let (reply, rx) = sync_channel(1);
+        self.tx
+            .send(Request::Counters { reply })
+            .map_err(|_| anyhow!("vm worker gone"))?;
+        rx.recv().map_err(|_| anyhow!("vm worker gone"))
+    }
+
+    fn with_chain(
+        &self,
+        f: Box<dyn FnOnce(&mut Chain) -> Result<String> + Send>,
+    ) -> Result<Result<String>> {
+        let (reply, rx) = sync_channel(1);
+        self.tx
+            .send(Request::WithChain { f, reply })
+            .map_err(|_| anyhow!("vm worker gone"))?;
+        Ok(rx.recv().map_err(|_| anyhow!("vm worker gone"))?)
+    }
+}
+
+/// The worker: single owner of the VM's driver. Chain-level operations
+/// (snapshot/stream) tear the driver down, run on the bare chain, and
+/// rebuild it — mirroring how the provider pauses a VM's I/O for these.
+fn worker_loop(
+    _name: String,
+    mut driver: Box<dyn Driver + Send>,
+    rx: Receiver<Request>,
+    stats: Arc<VmStats>,
+) {
+    use std::sync::atomic::Ordering::Relaxed;
+    while let Ok(req) = rx.recv() {
+        match req {
+            Request::Read { voff, len, reply } => {
+                let mut buf = vec![0u8; len];
+                let r = driver.read(voff, &mut buf).map(|()| buf);
+                stats.reads.fetch_add(1, Relaxed);
+                stats.bytes_read.fetch_add(len as u64, Relaxed);
+                let _ = reply.send(r);
+            }
+            Request::Write { voff, data, reply } => {
+                let n = data.len() as u64;
+                let r = driver.write(voff, &data);
+                stats.writes.fetch_add(1, Relaxed);
+                stats.bytes_written.fetch_add(n, Relaxed);
+                let _ = reply.send(r);
+            }
+            Request::Flush { reply } => {
+                let _ = reply.send(driver.flush());
+            }
+            Request::Counters { reply } => {
+                let _ = reply.send(driver.counters());
+            }
+            Request::WithChain { f, reply } => {
+                let r = (|| -> Result<String> {
+                    driver.flush()?;
+                    let out = f(driver.chain_mut())?;
+                    driver.reopen()?;
+                    Ok(out)
+                })();
+                let _ = reply.send(r);
+            }
+            Request::Stop => {
+                let _ = driver.flush();
+                break;
+            }
+        }
+    }
+}

@@ -1,0 +1,56 @@
+//! Per-VM and fleet-level service statistics.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+#[derive(Debug, Default)]
+pub struct VmStats {
+    pub reads: AtomicU64,
+    pub writes: AtomicU64,
+    pub bytes_read: AtomicU64,
+    pub bytes_written: AtomicU64,
+    pub snapshots: AtomicU64,
+    pub streams: AtomicU64,
+    /// Requests rejected/blocked by a full queue (backpressure events).
+    pub backpressure: AtomicU64,
+}
+
+impl VmStats {
+    pub fn snapshot(&self) -> VmStatsSnapshot {
+        VmStatsSnapshot {
+            reads: self.reads.load(Ordering::Relaxed),
+            writes: self.writes.load(Ordering::Relaxed),
+            bytes_read: self.bytes_read.load(Ordering::Relaxed),
+            bytes_written: self.bytes_written.load(Ordering::Relaxed),
+            snapshots: self.snapshots.load(Ordering::Relaxed),
+            streams: self.streams.load(Ordering::Relaxed),
+            backpressure: self.backpressure.load(Ordering::Relaxed),
+        }
+    }
+}
+
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct VmStatsSnapshot {
+    pub reads: u64,
+    pub writes: u64,
+    pub bytes_read: u64,
+    pub bytes_written: u64,
+    pub snapshots: u64,
+    pub streams: u64,
+    pub backpressure: u64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn snapshot_copies_counters() {
+        let s = VmStats::default();
+        s.reads.fetch_add(3, Ordering::Relaxed);
+        s.bytes_read.fetch_add(100, Ordering::Relaxed);
+        let snap = s.snapshot();
+        assert_eq!(snap.reads, 3);
+        assert_eq!(snap.bytes_read, 100);
+        assert_eq!(snap.writes, 0);
+    }
+}

@@ -1,0 +1,89 @@
+//! `fio`: random small reads on the raw device (§6.1 / Fig 16:
+//! 4 KiB random reads "on the disk node in /dev").
+
+use super::{Workload, WorkloadStats};
+use crate::metrics::clock::VirtClock;
+use crate::util::rng::Rng;
+use crate::vdisk::Driver;
+use anyhow::Result;
+use std::sync::Arc;
+
+pub struct Fio {
+    /// I/O size (paper: 4 KiB).
+    pub io_size: usize,
+    /// Number of random reads to issue.
+    pub ops: u64,
+    pub seed: u64,
+}
+
+impl Default for Fio {
+    fn default() -> Self {
+        Fio { io_size: 4 << 10, ops: 10_000, seed: 0xF10 }
+    }
+}
+
+impl Workload for Fio {
+    fn name(&self) -> &str {
+        "fio-randread"
+    }
+
+    fn run(
+        &mut self,
+        driver: &mut dyn Driver,
+        clock: &Arc<VirtClock>,
+    ) -> Result<WorkloadStats> {
+        let disk = driver.chain().active().geom().virtual_size;
+        let span = disk - self.io_size as u64;
+        let mut rng = Rng::new(self.seed);
+        let mut buf = vec![0u8; self.io_size];
+        let t0 = clock.now();
+        let mut stats = WorkloadStats::default();
+        for _ in 0..self.ops {
+            // align to the I/O size like fio's default
+            let pos = rng.below(span / self.io_size as u64) * self.io_size as u64;
+            driver.read(pos, &mut buf)?;
+            stats.ops += 1;
+            stats.bytes += self.io_size as u64;
+        }
+        stats.elapsed_ns = clock.now() - t0;
+        Ok(stats)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cache::CacheConfig;
+    use crate::chaingen::{generate, ChainSpec};
+    use crate::metrics::clock::CostModel;
+    use crate::metrics::memory::MemoryAccountant;
+    use crate::qcow::image::DataMode;
+    use crate::storage::node::StorageNode;
+    use crate::vdisk::vanilla::VanillaDriver;
+
+    #[test]
+    fn issues_requested_ops() {
+        let clock = VirtClock::new();
+        let node = StorageNode::new("s", clock.clone(), CostModel::default());
+        let spec = ChainSpec {
+            disk_size: 8 << 20,
+            chain_len: 2,
+            populated: 0.6,
+            data_mode: DataMode::Synthetic,
+            ..Default::default()
+        };
+        let chain = generate(&node, &spec).unwrap();
+        let mut d = VanillaDriver::new(
+            chain,
+            CacheConfig::default(),
+            clock.clone(),
+            CostModel::default(),
+            MemoryAccountant::new(),
+        );
+        let mut fio = Fio { ops: 500, ..Default::default() };
+        let stats = fio.run(&mut d, &clock).unwrap();
+        assert_eq!(stats.ops, 500);
+        assert_eq!(stats.bytes, 500 * 4096);
+        assert!(stats.iops() > 0.0);
+    }
+}

@@ -1,0 +1,64 @@
+//! Simulated guest workloads — the benchmarks of §6.1 as request
+//! streams against a [`Driver`]:
+//!
+//! * [`dd`] — `dd if=/dev/sda of=/dev/null bs=4M`: sequential full-disk
+//!   read (Figs 10, 12, 13, 14, 15);
+//! * [`fio`] — random 4 KiB reads on the raw device (Fig 16);
+//! * [`kvstore`] + [`ycsb`] — an LSM key-value store on the virtual disk
+//!   driven by YCSB-C uniform point reads (the RocksDB stand-in, Fig 18);
+//! * [`boot`] — a VM boot read trace, concentrated on the base image
+//!   (Fig 17 and the file-0 spike of Fig 13c).
+//!
+//! All throughput/latency numbers are virtual-time based (deterministic).
+
+pub mod boot;
+pub mod dd;
+pub mod fio;
+pub mod kvstore;
+pub mod ycsb;
+
+use crate::metrics::clock::VirtClock;
+use crate::vdisk::Driver;
+use anyhow::Result;
+use std::sync::Arc;
+
+/// Common result of a workload run.
+#[derive(Clone, Debug, Default)]
+pub struct WorkloadStats {
+    /// Operations issued.
+    pub ops: u64,
+    /// Guest-visible bytes transferred.
+    pub bytes: u64,
+    /// Virtual nanoseconds elapsed.
+    pub elapsed_ns: u64,
+}
+
+impl WorkloadStats {
+    pub fn throughput_bps(&self) -> f64 {
+        if self.elapsed_ns == 0 {
+            return 0.0;
+        }
+        self.bytes as f64 / (self.elapsed_ns as f64 / 1e9)
+    }
+
+    pub fn iops(&self) -> f64 {
+        if self.elapsed_ns == 0 {
+            return 0.0;
+        }
+        self.ops as f64 / (self.elapsed_ns as f64 / 1e9)
+    }
+
+    pub fn mean_latency_ns(&self) -> f64 {
+        if self.ops == 0 {
+            return 0.0;
+        }
+        self.elapsed_ns as f64 / self.ops as f64
+    }
+}
+
+/// A guest benchmark that can be replayed against any driver.
+pub trait Workload {
+    fn name(&self) -> &str;
+    fn run(&mut self, driver: &mut dyn Driver, clock: &Arc<VirtClock>)
+        -> Result<WorkloadStats>;
+}

@@ -1,0 +1,98 @@
+//! YCSB-C: read-only point lookups with uniform key distribution
+//! (§6.4.2: "YCSB-C, which simulates a user performing read-only
+//! requests ... 500K requests"; the paper populates with "a uniform
+//! distribution of valid clusters").
+
+use super::kvstore::KvStore;
+use super::{Workload, WorkloadStats};
+use crate::metrics::clock::VirtClock;
+use crate::util::rng::Rng;
+use crate::vdisk::Driver;
+use anyhow::Result;
+use std::sync::Arc;
+
+pub struct YcsbC {
+    pub store: KvStore,
+    pub requests: u64,
+    pub seed: u64,
+    /// Verify record stamps (dense stores built through the driver);
+    /// spread-attached stores read pre-populated chain content instead.
+    pub checked: bool,
+}
+
+impl YcsbC {
+    pub fn new(store: KvStore, requests: u64, seed: u64) -> Self {
+        YcsbC { store, requests, seed, checked: true }
+    }
+
+    pub fn unchecked(store: KvStore, requests: u64, seed: u64) -> Self {
+        YcsbC { store, requests, seed, checked: false }
+    }
+}
+
+impl Workload for YcsbC {
+    fn name(&self) -> &str {
+        "ycsb-c"
+    }
+
+    fn run(
+        &mut self,
+        driver: &mut dyn Driver,
+        clock: &Arc<VirtClock>,
+    ) -> Result<WorkloadStats> {
+        let mut rng = Rng::new(self.seed);
+        let t0 = clock.now();
+        let mut stats = WorkloadStats::default();
+        for _ in 0..self.requests {
+            let key = rng.below(self.store.records);
+            let v = if self.checked {
+                self.store.get(driver, key)?
+            } else {
+                self.store.get_unchecked(driver, key)?
+            };
+            stats.ops += 1;
+            stats.bytes += v.len() as u64;
+        }
+        stats.elapsed_ns = clock.now() - t0;
+        Ok(stats)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cache::CacheConfig;
+    use crate::chaingen::{generate, ChainSpec};
+    use crate::metrics::clock::CostModel;
+    use crate::metrics::memory::MemoryAccountant;
+    use crate::qcow::image::DataMode;
+    use crate::storage::node::StorageNode;
+    use crate::vdisk::scalable::ScalableDriver;
+
+    #[test]
+    fn runs_requested_requests() {
+        let clock = VirtClock::new();
+        let node = StorageNode::new("s", clock.clone(), CostModel::default());
+        let spec = ChainSpec {
+            disk_size: 8 << 20,
+            chain_len: 1,
+            populated: 0.0,
+            data_mode: DataMode::Real,
+            ..Default::default()
+        };
+        let chain = generate(&node, &spec).unwrap();
+        let mut d = ScalableDriver::new(
+            chain,
+            CacheConfig::default(),
+            clock.clone(),
+            CostModel::default(),
+            MemoryAccountant::new(),
+        );
+        let store = KvStore::build(&mut d, 0.3, 7).unwrap();
+        let mut y = YcsbC::new(store, 200, 11);
+        let stats = y.run(&mut d, &clock).unwrap();
+        assert_eq!(stats.ops, 200);
+        assert!(stats.throughput_bps() > 0.0);
+        assert!(stats.mean_latency_ns() > 0.0);
+    }
+}

@@ -1,0 +1,43 @@
+//! # sqemu-rs — Virtual Disk Snapshot Management at Scale
+//!
+//! Reproduction of the SQEMU paper (CS.DC 2022): a cluster-granular
+//! copy-on-write virtual-disk format with external snapshot chains, the two
+//! driver designs the paper compares (vanilla per-backing-file recursion vs.
+//! SQEMU direct access + unified indexing cache), a simulated cloud storage
+//! substrate (virtual-time latency model, NFS-like storage nodes, guest
+//! workloads), and a multi-VM storage coordinator whose bulk paths execute
+//! AOT-compiled JAX/Pallas kernels through PJRT.
+//!
+//! Layering (see DESIGN.md):
+//! * [`util`], [`metrics`] — substrate: errors, JSON, PRNG, virtual clock,
+//!   histograms, memory accounting.
+//! * [`storage`] — pluggable backends + the Eq. 1 latency model.
+//! * [`qcow`] — the on-disk format (vanilla + the `backing_file_index`
+//!   extension) and snapshot operations.
+//! * [`cache`] — L2 slice caches: per-backing-file (vanilla) and unified
+//!   with cache correction (SQEMU).
+//! * [`vdisk`] — the two request-path drivers and their low-level metrics.
+//! * [`guest`] — simulated guest workloads (dd, fio, YCSB over an LSM
+//!   key-value store, VM boot).
+//! * [`chaingen`], [`characterize`] — chain generation + the §3 study.
+//! * [`runtime`] — PJRT artifact loading/execution (the AOT bridge).
+//! * [`coordinator`] — the multi-VM storage node: router, batcher,
+//!   streaming orchestrator, placement.
+//! * [`bench`] — the figure-regeneration harness used by `cargo bench`.
+
+pub mod bench;
+pub mod cache;
+pub mod chaingen;
+pub mod characterize;
+pub mod cli;
+pub mod coordinator;
+pub mod guest;
+pub mod metrics;
+pub mod qcow;
+pub mod runtime;
+pub mod storage;
+pub mod util;
+pub mod vdisk;
+
+pub use qcow::{Chain, Image};
+

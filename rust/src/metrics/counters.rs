@@ -1,0 +1,129 @@
+//! Low-level event counters — the paper's §6.3 metrics: cache misses,
+//! cache hits, cache hit unallocated, per-backing-file lookup counts.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+/// Counters for one driver instance (shared across its caches).
+#[derive(Debug, Default)]
+pub struct CacheCounters {
+    /// Entry found in cache and allocated ("cache hit").
+    pub hits: AtomicU64,
+    /// Slice absent from cache — a device fetch was required.
+    pub misses: AtomicU64,
+    /// Entry found but cluster not allocated in this file — the chain
+    /// walk (vanilla) / backing-file fetch (sqemu) trigger ("cache hit
+    /// unallocated").
+    pub hit_unallocated: AtomicU64,
+    /// Total cache lookups, attributed per backing file index (Fig 13c).
+    per_file_lookups: Mutex<Vec<u64>>,
+}
+
+impl CacheCounters {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn hit(&self) {
+        self.hits.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn miss(&self) {
+        self.misses.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn unallocated(&self) {
+        self.hit_unallocated.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record one cache lookup against backing file `bfi`.
+    pub fn lookup_on(&self, bfi: usize) {
+        let mut v = self.per_file_lookups.lock().unwrap();
+        if v.len() <= bfi {
+            v.resize(bfi + 1, 0);
+        }
+        v[bfi] += 1;
+    }
+
+    pub fn snapshot(&self) -> CounterSnapshot {
+        CounterSnapshot {
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            hit_unallocated: self.hit_unallocated.load(Ordering::Relaxed),
+            per_file_lookups: self.per_file_lookups.lock().unwrap().clone(),
+        }
+    }
+
+    pub fn reset(&self) {
+        self.hits.store(0, Ordering::Relaxed);
+        self.misses.store(0, Ordering::Relaxed);
+        self.hit_unallocated.store(0, Ordering::Relaxed);
+        self.per_file_lookups.lock().unwrap().clear();
+    }
+}
+
+/// Point-in-time copy of the counters, for reports and assertions.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct CounterSnapshot {
+    pub hits: u64,
+    pub misses: u64,
+    pub hit_unallocated: u64,
+    pub per_file_lookups: Vec<u64>,
+}
+
+impl CounterSnapshot {
+    pub fn total_lookups(&self) -> u64 {
+        self.hits + self.misses + self.hit_unallocated
+    }
+
+    /// Ratios for Eq. 1 (hit%, miss%, unalloc%).
+    pub fn ratios(&self) -> (f64, f64, f64) {
+        let t = self.total_lookups() as f64;
+        if t == 0.0 {
+            return (0.0, 0.0, 0.0);
+        }
+        (
+            self.hits as f64 / t,
+            self.misses as f64 / t,
+            self.hit_unallocated as f64 / t,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counts_and_snapshots() {
+        let c = CacheCounters::new();
+        c.hit();
+        c.hit();
+        c.miss();
+        c.unallocated();
+        c.lookup_on(3);
+        c.lookup_on(3);
+        c.lookup_on(0);
+        let s = c.snapshot();
+        assert_eq!(s.hits, 2);
+        assert_eq!(s.misses, 1);
+        assert_eq!(s.hit_unallocated, 1);
+        assert_eq!(s.total_lookups(), 4);
+        assert_eq!(s.per_file_lookups, vec![1, 0, 0, 2]);
+        let (h, m, u) = s.ratios();
+        assert!((h - 0.5).abs() < 1e-9);
+        assert!((m - 0.25).abs() < 1e-9);
+        assert!((u - 0.25).abs() < 1e-9);
+    }
+
+    #[test]
+    fn reset_clears() {
+        let c = CacheCounters::new();
+        c.hit();
+        c.lookup_on(1);
+        c.reset();
+        let s = c.snapshot();
+        assert_eq!(s.total_lookups(), 0);
+        assert!(s.per_file_lookups.is_empty());
+    }
+}

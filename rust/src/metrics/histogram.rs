@@ -1,0 +1,209 @@
+//! Log-bucketed latency histogram (Fig 14's lookup-latency distributions).
+
+/// Histogram over u64 nanosecond values with ~4% resolution: buckets are
+/// (power-of-two, 16 sub-buckets) — the HdrHistogram idea, sized small.
+#[derive(Clone, Debug)]
+pub struct Histogram {
+    counts: Vec<u64>,
+    total: u64,
+    sum: u128,
+    min: u64,
+    max: u64,
+}
+
+const SUB_BITS: u32 = 4; // 16 sub-buckets per octave
+const SUB: u64 = 1 << SUB_BITS;
+const BUCKETS: usize = (64 - SUB_BITS as usize) * SUB as usize;
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Self {
+        Histogram {
+            counts: vec![0; BUCKETS],
+            total: 0,
+            sum: 0,
+            min: u64::MAX,
+            max: 0,
+        }
+    }
+
+    fn index(v: u64) -> usize {
+        if v < SUB {
+            return v as usize;
+        }
+        let msb = 63 - v.leading_zeros() as u64;
+        let octave = msb - SUB_BITS as u64 + 1;
+        let sub = (v >> (msb - SUB_BITS as u64)) - SUB;
+        (octave * SUB + SUB + sub) as usize - SUB as usize
+    }
+
+    /// Lower bound of the bucket containing `v` (representative value).
+    fn bucket_value(idx: usize) -> u64 {
+        let idx = idx as u64;
+        if idx < SUB {
+            return idx;
+        }
+        let octave = (idx - SUB) / SUB + 1;
+        let sub = (idx - SUB) % SUB;
+        (SUB + sub) << (octave - 1)
+    }
+
+    pub fn record(&mut self, v: u64) {
+        let idx = Self::index(v).min(BUCKETS - 1);
+        self.counts[idx] += 1;
+        self.total += 1;
+        self.sum += v as u128;
+        self.min = self.min.min(v);
+        self.max = self.max.max(v);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.total
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.total == 0 {
+            0.0
+        } else {
+            self.sum as f64 / self.total as f64
+        }
+    }
+
+    pub fn min(&self) -> u64 {
+        if self.total == 0 {
+            0
+        } else {
+            self.min
+        }
+    }
+
+    pub fn max(&self) -> u64 {
+        self.max
+    }
+
+    /// Approximate quantile (q in [0,1]) via bucket representative values.
+    pub fn quantile(&self, q: f64) -> u64 {
+        if self.total == 0 {
+            return 0;
+        }
+        let target = (q * self.total as f64).ceil().max(1.0) as u64;
+        let mut acc = 0;
+        for (i, &c) in self.counts.iter().enumerate() {
+            acc += c;
+            if acc >= target {
+                return Self::bucket_value(i);
+            }
+        }
+        self.max
+    }
+
+    /// Merge another histogram into this one.
+    pub fn merge(&mut self, other: &Histogram) {
+        for (a, b) in self.counts.iter_mut().zip(&other.counts) {
+            *a += b;
+        }
+        self.total += other.total;
+        self.sum += other.sum;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+    }
+
+    /// Non-empty (bucket_low_value, count) pairs — the Fig 14 series.
+    pub fn series(&self) -> Vec<(u64, u64)> {
+        self.counts
+            .iter()
+            .enumerate()
+            .filter(|(_, &c)| c > 0)
+            .map(|(i, &c)| (Self::bucket_value(i), c))
+            .collect()
+    }
+
+    /// Detect multi-modality: representative values of local maxima whose
+    /// count exceeds `frac` of the total (Fig 14 reports two modes under
+    /// SQEMU — hit vs hit-unallocated).
+    pub fn modes(&self, frac: f64) -> Vec<u64> {
+        let thresh = (self.total as f64 * frac) as u64;
+        let mut out = vec![];
+        for i in 0..self.counts.len() {
+            let c = self.counts[i];
+            if c == 0 || c < thresh {
+                continue;
+            }
+            let prev = if i > 0 { self.counts[i - 1] } else { 0 };
+            let next = if i + 1 < self.counts.len() { self.counts[i + 1] } else { 0 };
+            if c >= prev && c >= next {
+                out.push(Self::bucket_value(i));
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn index_monotone() {
+        let mut last = 0;
+        for v in [0u64, 1, 15, 16, 17, 31, 32, 100, 1000, 1 << 20, 1 << 40] {
+            let idx = Histogram::index(v);
+            assert!(idx >= last, "v={v} idx={idx} last={last}");
+            last = idx;
+        }
+    }
+
+    #[test]
+    fn bucket_value_within_4pct() {
+        for v in [100u64, 1_000, 80_000, 1_000_000, 123_456_789] {
+            let bv = Histogram::bucket_value(Histogram::index(v));
+            assert!(bv <= v, "bv={bv} v={v}");
+            assert!((v - bv) as f64 / (v as f64) < 1.0 / 16.0 + 1e-9);
+        }
+    }
+
+    #[test]
+    fn mean_and_quantiles() {
+        let mut h = Histogram::new();
+        for _ in 0..900 {
+            h.record(100);
+        }
+        for _ in 0..100 {
+            h.record(80_000);
+        }
+        assert_eq!(h.count(), 1000);
+        assert!((h.mean() - (900.0 * 100.0 + 100.0 * 80_000.0) / 1000.0).abs() < 1.0);
+        assert!(h.quantile(0.5) <= 100);
+        assert!(h.quantile(0.95) >= 75_000);
+    }
+
+    #[test]
+    fn bimodal_detection() {
+        let mut h = Histogram::new();
+        for _ in 0..500 {
+            h.record(120);
+        }
+        for _ in 0..500 {
+            h.record(270_000);
+        }
+        let modes = h.modes(0.1);
+        assert_eq!(modes.len(), 2, "modes={modes:?}");
+    }
+
+    #[test]
+    fn merge_adds() {
+        let mut a = Histogram::new();
+        let mut b = Histogram::new();
+        a.record(10);
+        b.record(1000);
+        a.merge(&b);
+        assert_eq!(a.count(), 2);
+        assert_eq!(a.min(), 10);
+        assert_eq!(a.max(), 1000);
+    }
+}

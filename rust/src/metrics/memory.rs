@@ -1,0 +1,187 @@
+//! Explicit memory accountant — the stand-in for the paper's Qemu RSS
+//! measurements.
+//!
+//! §4.3 attributes the footprint growth to per-snapshot structures: the L2
+//! indexing caches (dominant) plus per-snapshot driver state. Every such
+//! allocation in this codebase registers its live bytes here, so Figs 10
+//! and 12 are regenerated from exactly the structures the paper blames.
+
+use std::sync::atomic::{AtomicI64, Ordering};
+use std::sync::Arc;
+
+/// Memory categories tracked separately (massif-style attribution).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MemCategory {
+    /// L2 slice caches (the dominant §4.3 culprit).
+    Cache,
+    /// Per-snapshot driver instance state (BDS-like structs).
+    DriverState,
+    /// In-RAM L1 tables (loaded at open, one per file).
+    L1Table,
+    /// Coordinator-level state (queues, routing tables).
+    Coordinator,
+}
+
+const N_CATEGORIES: usize = 4;
+
+impl MemCategory {
+    fn idx(self) -> usize {
+        match self {
+            MemCategory::Cache => 0,
+            MemCategory::DriverState => 1,
+            MemCategory::L1Table => 2,
+            MemCategory::Coordinator => 3,
+        }
+    }
+
+    pub const ALL: [MemCategory; N_CATEGORIES] = [
+        MemCategory::Cache,
+        MemCategory::DriverState,
+        MemCategory::L1Table,
+        MemCategory::Coordinator,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            MemCategory::Cache => "cache",
+            MemCategory::DriverState => "driver_state",
+            MemCategory::L1Table => "l1_table",
+            MemCategory::Coordinator => "coordinator",
+        }
+    }
+}
+
+/// Shared accountant; `Registration` guards release on drop.
+#[derive(Debug, Default)]
+pub struct MemoryAccountant {
+    live: [AtomicI64; N_CATEGORIES],
+    peak: AtomicI64,
+}
+
+impl MemoryAccountant {
+    pub fn new() -> Arc<Self> {
+        Arc::new(Self::default())
+    }
+
+    /// Register `bytes` of live memory; returns a guard that releases it.
+    pub fn register(
+        self: &Arc<Self>,
+        cat: MemCategory,
+        bytes: u64,
+    ) -> Registration {
+        self.live[cat.idx()].fetch_add(bytes as i64, Ordering::Relaxed);
+        self.bump_peak();
+        Registration { acct: Arc::clone(self), cat, bytes }
+    }
+
+    fn bump_peak(&self) {
+        let t = self.total() as i64;
+        self.peak.fetch_max(t, Ordering::Relaxed);
+    }
+
+    pub fn live(&self, cat: MemCategory) -> u64 {
+        self.live[cat.idx()].load(Ordering::Relaxed).max(0) as u64
+    }
+
+    /// Total live bytes across categories — the "Qemu overhead on top of
+    /// guest RAM" the paper plots.
+    pub fn total(&self) -> u64 {
+        MemCategory::ALL.iter().map(|&c| self.live(c)).sum()
+    }
+
+    /// Peak total observed since construction/reset (the paper reports
+    /// peak RSS during the benchmark run).
+    pub fn peak(&self) -> u64 {
+        self.peak.load(Ordering::Relaxed).max(0) as u64
+    }
+
+    pub fn reset_peak(&self) {
+        self.peak.store(self.total() as i64, Ordering::Relaxed);
+    }
+
+    pub fn report(&self) -> String {
+        let mut s = String::new();
+        for c in MemCategory::ALL {
+            s.push_str(&format!(
+                "{:>14}: {}\n",
+                c.name(),
+                crate::util::human_bytes(self.live(c))
+            ));
+        }
+        s.push_str(&format!(
+            "{:>14}: {} (peak {})\n",
+            "total",
+            crate::util::human_bytes(self.total()),
+            crate::util::human_bytes(self.peak())
+        ));
+        s
+    }
+}
+
+/// RAII guard: releases the registered bytes when dropped. `resize` adjusts
+/// a live registration (cache growth/shrink).
+#[derive(Debug)]
+pub struct Registration {
+    acct: Arc<MemoryAccountant>,
+    cat: MemCategory,
+    bytes: u64,
+}
+
+impl Registration {
+    pub fn bytes(&self) -> u64 {
+        self.bytes
+    }
+
+    pub fn resize(&mut self, new_bytes: u64) {
+        let delta = new_bytes as i64 - self.bytes as i64;
+        self.acct.live[self.cat.idx()].fetch_add(delta, Ordering::Relaxed);
+        self.bytes = new_bytes;
+        self.acct.bump_peak();
+    }
+}
+
+impl Drop for Registration {
+    fn drop(&mut self) {
+        self.acct.live[self.cat.idx()]
+            .fetch_sub(self.bytes as i64, Ordering::Relaxed);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn register_release() {
+        let a = MemoryAccountant::new();
+        {
+            let _r1 = a.register(MemCategory::Cache, 1000);
+            let _r2 = a.register(MemCategory::DriverState, 500);
+            assert_eq!(a.live(MemCategory::Cache), 1000);
+            assert_eq!(a.total(), 1500);
+        }
+        assert_eq!(a.total(), 0);
+        assert_eq!(a.peak(), 1500);
+    }
+
+    #[test]
+    fn resize_adjusts() {
+        let a = MemoryAccountant::new();
+        let mut r = a.register(MemCategory::Cache, 100);
+        r.resize(250);
+        assert_eq!(a.live(MemCategory::Cache), 250);
+        r.resize(50);
+        assert_eq!(a.live(MemCategory::Cache), 50);
+        assert_eq!(a.peak(), 250);
+    }
+
+    #[test]
+    fn peak_reset() {
+        let a = MemoryAccountant::new();
+        let r = a.register(MemCategory::Cache, 100);
+        drop(r);
+        assert_eq!(a.peak(), 100);
+        a.reset_peak();
+        assert_eq!(a.peak(), 0);
+    }
+}

@@ -1,0 +1,13 @@
+//! Measurement substrate: virtual time, counters, latency histograms and
+//! the explicit memory accountant that stands in for the paper's RSS
+//! measurements (§4.3, Fig 10/12).
+
+pub mod clock;
+pub mod counters;
+pub mod histogram;
+pub mod memory;
+
+pub use clock::VirtClock;
+pub use counters::CacheCounters;
+pub use histogram::Histogram;
+pub use memory::{MemCategory, MemoryAccountant};

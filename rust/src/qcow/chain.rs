@@ -1,0 +1,195 @@
+//! Snapshot chains: an ordered list of images, base (index 0) to active
+//! volume (last). "The virtual disk of a VM can thus be seen as a chain
+//! linking multiple backing files" (§1).
+
+use super::image::{DataMode, Image};
+use crate::storage::store::FileStore;
+use anyhow::{bail, Result};
+use std::sync::Arc;
+
+/// An open chain. Index 0 is the base image; the last image is the active
+/// volume receiving all writes.
+pub struct Chain {
+    images: Vec<Arc<Image>>,
+}
+
+impl Chain {
+    /// Start a chain from a single base image.
+    pub fn new(base: Arc<Image>) -> Result<Chain> {
+        if base.chain_index() != 0 {
+            bail!("base image has chain_index {}", base.chain_index());
+        }
+        Ok(Chain { images: vec![base] })
+    }
+
+    /// Open a chain by its active volume's file name, following backing
+    /// names across the storage node ("Qemu initializes a linked list
+    /// corresponding to the snapshot chain at VM startup", §2).
+    pub fn open(node: &dyn FileStore, active_name: &str, data_mode: DataMode) -> Result<Chain> {
+        let mut rev = Vec::new();
+        let mut cursor = Some(active_name.to_string());
+        while let Some(name) = cursor {
+            let backend = node.open_file(&name)?;
+            let img = Image::open(&name, backend, data_mode)?;
+            cursor = img.backing_name();
+            rev.push(Arc::new(img));
+            if rev.len() > u16::MAX as usize {
+                bail!("backing chain loop detected via '{active_name}'");
+            }
+        }
+        rev.reverse();
+        // validate chain indices are consistent
+        for (i, img) in rev.iter().enumerate() {
+            if img.chain_index() as usize != i {
+                bail!(
+                    "chain index mismatch: file '{}' says {} but sits at {}",
+                    img.name,
+                    img.chain_index(),
+                    i
+                );
+            }
+        }
+        Ok(Chain { images: rev })
+    }
+
+    /// Append a freshly created active volume.
+    pub fn push(&mut self, img: Arc<Image>) -> Result<()> {
+        if img.chain_index() as usize != self.images.len() {
+            bail!(
+                "new volume chain_index {} != expected {}",
+                img.chain_index(),
+                self.images.len()
+            );
+        }
+        if img.backing_name().as_deref() != Some(self.active().name.as_str()) {
+            bail!("new volume does not back onto the current active volume");
+        }
+        self.images.push(img);
+        Ok(())
+    }
+
+    /// Replace the whole image list (streaming/merge rebuilds).
+    pub fn replace_images(&mut self, images: Vec<Arc<Image>>) {
+        self.images = images;
+    }
+
+    pub fn len(&self) -> usize {
+        self.images.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.images.is_empty()
+    }
+
+    /// The active volume (all writes land here).
+    pub fn active(&self) -> &Arc<Image> {
+        self.images.last().expect("chain is never empty")
+    }
+
+    pub fn get(&self, idx: u16) -> Option<&Arc<Image>> {
+        self.images.get(idx as usize)
+    }
+
+    pub fn images(&self) -> &[Arc<Image>] {
+        &self.images
+    }
+
+    /// Resolve a virtual cluster by walking the chain (uncached reference
+    /// path — the semantic ground truth both drivers must agree with).
+    pub fn resolve_walk(&self, vcluster: u64) -> Result<Option<(u16, u64)>> {
+        for idx in (0..self.images.len()).rev() {
+            let e = self.images[idx].l2_entry(vcluster)?;
+            if let Some(off) = e.vanilla_view() {
+                return Ok(Some((idx as u16, off)));
+            }
+        }
+        Ok(None)
+    }
+
+    /// Total physical bytes across all files (Fig 19a).
+    pub fn total_file_bytes(&self) -> u64 {
+        self.images.iter().map(|i| i.file_len()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::clock::{CostModel, VirtClock};
+    use crate::qcow::entry::L2Entry;
+    use crate::qcow::layout::Geometry;
+    use crate::qcow::snapshot;
+    use crate::storage::node::StorageNode;
+
+    fn node() -> Arc<StorageNode> {
+        StorageNode::new("s", VirtClock::new(), CostModel::default())
+    }
+
+    fn base_on(node: &crate::storage::node::StorageNode) -> Arc<Image> {
+        let backend = node.create_file("img-0").unwrap();
+        Arc::new(
+            Image::create(
+                "img-0",
+                backend,
+                Geometry::new(16, 64 << 20).unwrap(),
+                0,
+                0,
+                None,
+                DataMode::Real,
+            )
+            .unwrap(),
+        )
+    }
+
+    #[test]
+    fn open_follows_backing_names() {
+        let node = node();
+        let mut chain = Chain::new(base_on(&node)).unwrap();
+        snapshot::snapshot_vanilla(&mut chain, &node, "img-1").unwrap();
+        snapshot::snapshot_vanilla(&mut chain, &node, "img-2").unwrap();
+        let reopened = Chain::open(&node, "img-2", DataMode::Real).unwrap();
+        assert_eq!(reopened.len(), 3);
+        assert_eq!(reopened.get(0).unwrap().name, "img-0");
+        assert_eq!(reopened.active().name, "img-2");
+    }
+
+    #[test]
+    fn resolve_walk_prefers_newest() {
+        let node = node();
+        let mut chain = Chain::new(base_on(&node)).unwrap();
+        let base_off = chain.active().alloc_data_cluster().unwrap();
+        chain
+            .active()
+            .set_l2_entry(9, L2Entry::local(base_off, None))
+            .unwrap();
+        snapshot::snapshot_vanilla(&mut chain, &node, "img-1").unwrap();
+        // overwritten in the new active volume
+        let new_off = chain.active().alloc_data_cluster().unwrap();
+        chain
+            .active()
+            .set_l2_entry(9, L2Entry::local(new_off, None))
+            .unwrap();
+        assert_eq!(chain.resolve_walk(9).unwrap(), Some((1, new_off)));
+        assert_eq!(chain.resolve_walk(10).unwrap(), None);
+    }
+
+    #[test]
+    fn push_validates_linkage() {
+        let node = node();
+        let mut chain = Chain::new(base_on(&node)).unwrap();
+        let b = node.create_file("stray").unwrap();
+        let stray = Arc::new(
+            Image::create(
+                "stray",
+                b,
+                *chain.active().geom(),
+                0,
+                5, // wrong index
+                Some("img-0"),
+                DataMode::Real,
+            )
+            .unwrap(),
+        );
+        assert!(chain.push(stray).is_err());
+    }
+}

@@ -1,0 +1,156 @@
+//! L2 table entry encoding.
+//!
+//! 64-bit entry layout (the §5.2 extension lives in formerly reserved
+//! bits, preserving backward compatibility):
+//!
+//! ```text
+//! bit  63       ALLOCATED — cluster data lives in *this* file (vanilla
+//!               semantics; the only bit a vanilla driver interprets)
+//! bits 62..47   bfi_plus_1 — 16-bit backing_file_index + 1 of the file
+//!               holding the latest version of the cluster; 0 = unstamped
+//!               (vanilla image). The paper uses 16 bits (§5.2).
+//! bits 46..0    host byte offset of the data cluster inside the owning
+//!               file (cluster aligned)
+//! ```
+
+/// The paper's unallocated sentinel on the kernel side is -1; on disk an
+/// all-zero entry means "no information in this file".
+pub const BFI_BITS: u32 = 16;
+const BFI_SHIFT: u32 = 47;
+const BFI_MASK: u64 = ((1 << BFI_BITS) - 1) << BFI_SHIFT;
+const ALLOCATED: u64 = 1 << 63;
+const OFFSET_MASK: u64 = (1 << BFI_SHIFT) - 1;
+
+/// Decoded view of one L2 entry.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct L2Entry(pub u64);
+
+impl L2Entry {
+    pub const ZERO: L2Entry = L2Entry(0);
+
+    /// Entry for a cluster allocated in this file, optionally stamped with
+    /// this file's own chain index.
+    pub fn local(host_off: u64, own_index: Option<u16>) -> L2Entry {
+        debug_assert_eq!(host_off & !OFFSET_MASK, 0, "offset too large");
+        let mut v = ALLOCATED | (host_off & OFFSET_MASK);
+        if let Some(idx) = own_index {
+            v |= ((idx as u64 + 1) << BFI_SHIFT) & BFI_MASK;
+        }
+        L2Entry(v)
+    }
+
+    /// Stamped reference to a cluster owned by backing file `bfi`
+    /// (SQEMU snapshot-copy entries, §5.4). Not ALLOCATED: a vanilla
+    /// driver must treat it as a hole.
+    pub fn remote(host_off: u64, bfi: u16) -> L2Entry {
+        debug_assert_eq!(host_off & !OFFSET_MASK, 0, "offset too large");
+        L2Entry(((bfi as u64 + 1) << BFI_SHIFT) | (host_off & OFFSET_MASK))
+    }
+
+    /// Cluster data present in this very file?
+    pub fn is_allocated_here(&self) -> bool {
+        self.0 & ALLOCATED != 0
+    }
+
+    /// Completely empty entry (no local data, no stamp)?
+    pub fn is_zero(&self) -> bool {
+        self.0 == 0
+    }
+
+    /// The stamped backing_file_index, if any.
+    pub fn bfi(&self) -> Option<u16> {
+        let raw = (self.0 & BFI_MASK) >> BFI_SHIFT;
+        if raw == 0 {
+            None
+        } else {
+            Some((raw - 1) as u16)
+        }
+    }
+
+    /// Host byte offset of the data cluster in the owning file.
+    pub fn host_offset(&self) -> u64 {
+        self.0 & OFFSET_MASK
+    }
+
+    /// What a *vanilla* driver sees: allocated-here offset or hole.
+    pub fn vanilla_view(&self) -> Option<u64> {
+        if self.is_allocated_here() {
+            Some(self.host_offset())
+        } else {
+            None
+        }
+    }
+
+    /// What the *SQEMU* driver sees: (owning bfi, offset) if the entry is
+    /// stamped or locally allocated; None for a true hole.
+    ///
+    /// `own_index` is the chain index of the file the entry was read from
+    /// (used for unstamped-but-allocated vanilla entries).
+    pub fn sqemu_view(&self, own_index: u16) -> Option<(u16, u64)> {
+        match (self.bfi(), self.is_allocated_here()) {
+            (Some(bfi), _) => Some((bfi, self.host_offset())),
+            (None, true) => Some((own_index, self.host_offset())),
+            (None, false) => None,
+        }
+    }
+
+    pub fn raw(&self) -> u64 {
+        self.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn local_roundtrip() {
+        let e = L2Entry::local(7 << 16, Some(12));
+        assert!(e.is_allocated_here());
+        assert_eq!(e.bfi(), Some(12));
+        assert_eq!(e.host_offset(), 7 << 16);
+        assert_eq!(e.vanilla_view(), Some(7 << 16));
+        assert_eq!(e.sqemu_view(12), Some((12, 7 << 16)));
+    }
+
+    #[test]
+    fn remote_is_hole_for_vanilla() {
+        let e = L2Entry::remote(3 << 16, 4);
+        assert!(!e.is_allocated_here());
+        assert_eq!(e.vanilla_view(), None); // backward compat (§5.1)
+        assert_eq!(e.sqemu_view(9), Some((4, 3 << 16)));
+    }
+
+    #[test]
+    fn unstamped_local_uses_own_index() {
+        let e = L2Entry::local(5 << 16, None);
+        assert_eq!(e.bfi(), None);
+        assert_eq!(e.sqemu_view(3), Some((3, 5 << 16)));
+        assert_eq!(e.vanilla_view(), Some(5 << 16));
+    }
+
+    #[test]
+    fn zero_is_hole_for_both() {
+        let e = L2Entry::ZERO;
+        assert!(e.is_zero());
+        assert_eq!(e.vanilla_view(), None);
+        assert_eq!(e.sqemu_view(0), None);
+    }
+
+    #[test]
+    fn bfi_16bit_range() {
+        // the paper reserves 16 bits for backing_file_index (§5.2)
+        let e = L2Entry::remote(1 << 16, u16::MAX - 1);
+        assert_eq!(e.bfi(), Some(u16::MAX - 1));
+        assert_eq!(e.host_offset(), 1 << 16);
+    }
+
+    #[test]
+    fn max_offset_preserved() {
+        let off = ((1u64 << 47) - 1) & !0xffff; // max cluster-aligned
+        let e = L2Entry::local(off, Some(0));
+        assert_eq!(e.host_offset(), off);
+        assert_eq!(e.bfi(), Some(0));
+        assert!(e.is_allocated_here());
+    }
+}

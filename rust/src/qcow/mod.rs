@@ -1,0 +1,34 @@
+//! The virtual-disk format substrate: a cluster-granular copy-on-write
+//! format with external snapshot chains, modeled on Qcow2 (§2) plus the
+//! paper's SQEMU extension (§5.2): a 16-bit `backing_file_index` stored in
+//! reserved bits of each L2 entry, enabling direct access to the owning
+//! backing file without walking the chain.
+//!
+//! Layout of one image file (see [`layout`]):
+//!
+//! ```text
+//! cluster 0        header (magic, geometry, flags, backing-file name)
+//! cluster 1..      L1 table, contiguous ("right after the header", §2)
+//! next clusters    refcount table (preallocated, two-level)
+//! remaining        L2 tables, refcount blocks and data clusters, allocated
+//!                  on demand
+//! ```
+//!
+//! Backward compatibility (§5.1–5.2): the extension only occupies formerly
+//! reserved L2-entry bits and a header feature flag. A vanilla driver
+//! ignores both and falls back to chain walking; the SQEMU driver detects
+//! unstamped images and degrades the same way. `tests/compat.rs` verifies
+//! both directions.
+
+pub mod chain;
+pub mod entry;
+pub mod image;
+pub mod layout;
+pub mod qcheck;
+pub mod refcount;
+pub mod snapshot;
+
+pub use chain::Chain;
+pub use entry::L2Entry;
+pub use image::{DataMode, Image};
+pub use layout::{Geometry, Header, FEATURE_BFI};

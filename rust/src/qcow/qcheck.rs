@@ -1,0 +1,298 @@
+//! Image consistency checker — the `qemu-img check` analogue. Used by
+//! integration tests after every mutating operation sequence, and exposed
+//! through the CLI (`sqemu check`).
+
+use super::chain::Chain;
+use super::entry::L2Entry;
+use super::image::Image;
+use crate::util::div_ceil;
+use anyhow::Result;
+use std::collections::HashMap;
+
+/// Outcome of checking one image.
+#[derive(Clone, Debug, Default)]
+pub struct CheckReport {
+    /// Hard inconsistencies (corruption): misaligned/out-of-range offsets,
+    /// reachable clusters with zero refcount, bad stamps.
+    pub errors: Vec<String>,
+    /// Clusters with a refcount but unreachable from any table (space
+    /// leaks; tolerated, like `qemu-img check` leaks).
+    pub leaked_clusters: u64,
+    /// Reachable, correctly refcounted clusters.
+    pub ok_clusters: u64,
+}
+
+impl CheckReport {
+    pub fn is_clean(&self) -> bool {
+        self.errors.is_empty()
+    }
+}
+
+/// Check structural consistency of a single image.
+pub fn check_image(img: &Image) -> Result<CheckReport> {
+    let geom = *img.geom();
+    let cs = geom.cluster_size();
+    let file_len = img.file_len();
+    let own = img.chain_index();
+    let mut report = CheckReport::default();
+    // expected refcounts: cluster index -> count
+    let mut expected: HashMap<u64, u16> = HashMap::new();
+    for c in 0..geom.first_free_cluster() {
+        expected.insert(c, 1);
+    }
+
+    for l1_idx in 0..geom.l1_entries() {
+        let l2_off = img.l1_entry(l1_idx);
+        if l2_off == 0 {
+            continue;
+        }
+        if l2_off % cs != 0 {
+            report
+                .errors
+                .push(format!("L1[{l1_idx}] misaligned L2 offset {l2_off:#x}"));
+            continue;
+        }
+        if l2_off >= file_len {
+            report
+                .errors
+                .push(format!("L1[{l1_idx}] L2 offset {l2_off:#x} beyond EOF"));
+            continue;
+        }
+        *expected.entry(l2_off / cs).or_default() += 1;
+        let entries = img.read_l2_slice(l2_off, 0, geom.entries_per_l2())?;
+        for (l2_idx, &raw) in entries.iter().enumerate() {
+            let e = L2Entry(raw);
+            if e.is_zero() {
+                continue;
+            }
+            let off = e.host_offset();
+            if off % cs != 0 {
+                report.errors.push(format!(
+                    "L2[{l1_idx}/{l2_idx}] misaligned data offset {off:#x}"
+                ));
+                continue;
+            }
+            match e.bfi() {
+                Some(bfi) if e.is_allocated_here() && bfi != own => {
+                    report.errors.push(format!(
+                        "L2[{l1_idx}/{l2_idx}] local entry stamped {bfi} != own {own}"
+                    ));
+                }
+                Some(bfi) if !e.is_allocated_here() && bfi >= own => {
+                    report.errors.push(format!(
+                        "L2[{l1_idx}/{l2_idx}] remote stamp {bfi} not below own {own}"
+                    ));
+                }
+                _ => {}
+            }
+            if e.is_allocated_here() {
+                if off >= file_len {
+                    report.errors.push(format!(
+                        "L2[{l1_idx}/{l2_idx}] data offset {off:#x} beyond EOF"
+                    ));
+                    continue;
+                }
+                *expected.entry(off / cs).or_default() += 1;
+            }
+        }
+    }
+
+    // refcount blocks are themselves refcounted
+    let max_cluster = div_ceil(file_len, cs);
+    let reftable =
+        img.read_l2_slice(geom.reftable_offset(), 0, geom.reftable_clusters() * cs / 8)?;
+    for &block_off in reftable.iter().filter(|&&o| o != 0) {
+        if block_off % cs != 0 || block_off >= file_len {
+            report
+                .errors
+                .push(format!("refcount block offset {block_off:#x} invalid"));
+            continue;
+        }
+        *expected.entry(block_off / cs).or_default() += 1;
+    }
+
+    // compare expected vs stored refcounts
+    for cluster in 0..max_cluster {
+        let stored = stored_refcount(img, cluster)?;
+        let exp = expected.get(&cluster).copied().unwrap_or(0);
+        if stored == exp {
+            if exp > 0 {
+                report.ok_clusters += 1;
+            }
+        } else if stored > exp {
+            // over-refcounted (or allocated but unreachable): a leak
+            report.leaked_clusters += 1;
+        } else {
+            report.errors.push(format!(
+                "cluster {cluster}: refcount {stored} < expected {exp}"
+            ));
+        }
+    }
+    Ok(report)
+}
+
+/// Check a whole chain: every image individually, plus cross-file stamp
+/// validity (remote offsets must exist in the referenced file).
+pub fn check_chain(chain: &Chain) -> Result<CheckReport> {
+    let mut total = CheckReport::default();
+    for (pos, img) in chain.images().iter().enumerate() {
+        let r = check_image(img)?;
+        total.errors.extend(
+            r.errors
+                .into_iter()
+                .map(|e| format!("[{}] {e}", img.name)),
+        );
+        total.leaked_clusters += r.leaked_clusters;
+        total.ok_clusters += r.ok_clusters;
+        if img.chain_index() as usize != pos {
+            total.errors.push(format!(
+                "[{}] chain_index {} but position {pos}",
+                img.name,
+                img.chain_index()
+            ));
+        }
+        // remote stamps must reference an existing cluster of the target
+        if img.has_bfi() {
+            let geom = *img.geom();
+            for l1_idx in 0..geom.l1_entries() {
+                let l2_off = img.l1_entry(l1_idx);
+                if l2_off == 0 {
+                    continue;
+                }
+                let entries = img.read_l2_slice(l2_off, 0, geom.entries_per_l2())?;
+                for (l2_idx, &raw) in entries.iter().enumerate() {
+                    let e = L2Entry(raw);
+                    let Some(bfi) = e.bfi() else { continue };
+                    if e.is_allocated_here() {
+                        continue;
+                    }
+                    match chain.get(bfi) {
+                        None => total.errors.push(format!(
+                            "[{}] L2[{l1_idx}/{l2_idx}] stamp to missing file {bfi}",
+                            img.name
+                        )),
+                        Some(owner) => {
+                            if e.host_offset() >= owner.file_len() {
+                                total.errors.push(format!(
+                                    "[{}] L2[{l1_idx}/{l2_idx}] stamp offset beyond \
+                                     '{}' EOF",
+                                    img.name, owner.name
+                                ));
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+    Ok(total)
+}
+
+fn stored_refcount(img: &Image, cluster: u64) -> Result<u16> {
+    let geom = *img.geom();
+    let block_idx = cluster / geom.refcounts_per_block();
+    let slot = geom.reftable_offset() + block_idx * 8;
+    let block_off = crate::storage::backend::read_u64(img.backend().as_ref(), slot)?;
+    if block_off == 0 {
+        return Ok(0);
+    }
+    let idx = cluster % geom.refcounts_per_block();
+    let mut b = [0u8; 2];
+    img.backend().read_at(&mut b, block_off + idx * 2)?;
+    Ok(u16::from_le_bytes(b))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::clock::{CostModel, VirtClock};
+    use crate::qcow::image::DataMode;
+    use crate::qcow::layout::{Geometry, FEATURE_BFI};
+    use crate::qcow::snapshot;
+    use crate::storage::node::StorageNode;
+    use std::sync::Arc;
+
+    fn setup() -> (Arc<StorageNode>, Chain) {
+        let node = StorageNode::new("s", VirtClock::new(), CostModel::default());
+        let b = node.create_file("img-0").unwrap();
+        let img = Image::create(
+            "img-0",
+            b,
+            Geometry::new(16, 16 << 20).unwrap(),
+            FEATURE_BFI,
+            0,
+            None,
+            DataMode::Real,
+        )
+        .unwrap();
+        let chain = Chain::new(Arc::new(img)).unwrap();
+        (node, chain)
+    }
+
+    fn write_cluster(chain: &Chain, vc: u64) {
+        let img = chain.active();
+        let off = img.alloc_data_cluster().unwrap();
+        img.write_data(off, 0, &[7u8; 16]).unwrap();
+        img.set_l2_entry(vc, L2Entry::local(off, Some(img.chain_index())))
+            .unwrap();
+    }
+
+    #[test]
+    fn fresh_image_is_clean() {
+        let (_n, chain) = setup();
+        let r = check_image(chain.active()).unwrap();
+        assert!(r.is_clean(), "{:?}", r.errors);
+        assert!(r.ok_clusters >= 3); // header + L1 + reftable
+    }
+
+    #[test]
+    fn populated_chain_is_clean() {
+        let (node, mut chain) = setup();
+        for vc in 0..10 {
+            write_cluster(&chain, vc);
+        }
+        snapshot::snapshot_sqemu(&mut chain, &node, "img-1").unwrap();
+        for vc in 5..15 {
+            write_cluster(&chain, vc);
+        }
+        let r = check_chain(&chain).unwrap();
+        assert!(r.is_clean(), "{:?}", r.errors);
+    }
+
+    #[test]
+    fn detects_bad_stamp() {
+        let (_n, chain) = setup();
+        // a base image (own index 0) cannot hold remote stamps
+        chain
+            .active()
+            .set_l2_entry(0, L2Entry::remote(1 << 16, 3))
+            .unwrap();
+        let r = check_chain(&chain).unwrap();
+        assert!(!r.is_clean());
+    }
+
+    #[test]
+    fn detects_misaligned_entry() {
+        let (_n, chain) = setup();
+        chain
+            .active()
+            .set_l2_entry(0, L2Entry::local((1 << 16) + 5, Some(0)))
+            .unwrap();
+        let r = check_image(chain.active()).unwrap();
+        assert!(!r.is_clean());
+    }
+
+    #[test]
+    fn stream_merge_leaves_clean_chain() {
+        let (node, mut chain) = setup();
+        write_cluster(&chain, 0);
+        snapshot::snapshot_sqemu(&mut chain, &node, "img-1").unwrap();
+        write_cluster(&chain, 1);
+        snapshot::snapshot_sqemu(&mut chain, &node, "img-2").unwrap();
+        write_cluster(&chain, 2);
+        snapshot::snapshot_sqemu(&mut chain, &node, "img-3").unwrap();
+        snapshot::stream_merge(&mut chain, 0, 2).unwrap();
+        let r = check_chain(&chain).unwrap();
+        assert!(r.is_clean(), "{:?}", r.errors);
+    }
+}

@@ -1,0 +1,368 @@
+//! Snapshot creation — vanilla (§2) and SQEMU (§5.4) — plus format
+//! conversion and streaming (backing-file merge, §3/§4.1).
+
+use super::chain::Chain;
+use super::entry::L2Entry;
+use super::image::Image;
+use super::layout::FEATURE_BFI;
+use crate::storage::store::FileStore;
+use anyhow::{bail, Result};
+use std::sync::Arc;
+
+/// Vanilla snapshot: a new, *empty* active volume backing onto the old one
+/// ("a new Qcow2 active volume is created, with very few information",
+/// §5.4).
+pub fn snapshot_vanilla(chain: &mut Chain, node: &dyn FileStore, new_name: &str) -> Result<()> {
+    let old = Arc::clone(chain.active());
+    let backend = node.create_file(new_name)?;
+    let img = Image::create(
+        new_name,
+        backend,
+        *old.geom(),
+        old.flags() & !FEATURE_BFI,
+        chain.len() as u16,
+        Some(&old.name),
+        old.data_mode(),
+    )?;
+    chain.push(Arc::new(img))
+}
+
+/// SQEMU snapshot (§5.4): the new active volume receives a full copy of
+/// the old volume's L1+L2 tables, with every entry stamped with the
+/// backing_file_index of the file actually owning the cluster. After this,
+/// the active volume alone resolves any cluster in one step.
+///
+/// Requires the old active volume to be fully stamped (create chains with
+/// [`snapshot_sqemu`] throughout, or run [`convert_to_sqemu`] first).
+pub fn snapshot_sqemu(chain: &mut Chain, node: &dyn FileStore, new_name: &str) -> Result<()> {
+    let old = Arc::clone(chain.active());
+    if chain.len() > 1 && !old.has_bfi() {
+        bail!(
+            "active volume '{}' is not stamped; run convert_to_sqemu first",
+            old.name
+        );
+    }
+    let backend = node.create_file(new_name)?;
+    let img = Image::create(
+        new_name,
+        backend,
+        *old.geom(),
+        old.flags() | FEATURE_BFI,
+        chain.len() as u16,
+        Some(&old.name),
+        old.data_mode(),
+    )?;
+    copy_stamped_tables(&old, &img)?;
+    chain.push(Arc::new(img))
+}
+
+/// The §5.4 copy: for each old L1 entry, allocate the L2 table in the new
+/// volume and copy the old table's content, rewriting entries as stamped
+/// remote references.
+fn copy_stamped_tables(old: &Image, new: &Image) -> Result<()> {
+    let geom = *old.geom();
+    let per_l2 = geom.entries_per_l2();
+    let own = old.chain_index();
+    for l1_idx in 0..geom.l1_entries() {
+        let old_l2 = old.l1_entry(l1_idx);
+        if old_l2 == 0 {
+            continue;
+        }
+        // one read of the whole old table, one write of the new table
+        let old_entries = old.read_l2_slice(old_l2, 0, per_l2)?;
+        let mut new_entries = Vec::with_capacity(old_entries.len());
+        for raw in old_entries {
+            let e = L2Entry(raw);
+            let out = match e.sqemu_view(own) {
+                Some((bfi, off)) => L2Entry::remote(off, bfi),
+                None => L2Entry::ZERO,
+            };
+            new_entries.push(out.raw());
+        }
+        let new_l2 = new.ensure_l2(l1_idx)?;
+        new.write_l2_slice(new_l2, 0, &new_entries)?;
+    }
+    Ok(())
+}
+
+/// Convert a vanilla chain in place: walk the chain for every virtual
+/// cluster and stamp the active volume's table with (bfi, offset) remote
+/// references ("vanilla disk images can be easily converted to our
+/// format", §5.1). Returns the number of entries stamped.
+pub fn convert_to_sqemu(chain: &Chain) -> Result<u64> {
+    let active = chain.active();
+    let geom = *active.geom();
+    let mut stamped = 0u64;
+    for vc in 0..geom.num_vclusters() {
+        if let Some((bfi, off)) = chain.resolve_walk(vc)? {
+            let entry = if bfi == active.chain_index() {
+                L2Entry::local(off, Some(bfi))
+            } else {
+                L2Entry::remote(off, bfi)
+            };
+            active.set_l2_entry(vc, entry)?;
+            stamped += 1;
+        }
+    }
+    Ok(stamped)
+}
+
+/// Streaming (§3, §4.1): merge the data of backing files
+/// `[from, to]` (inclusive, by chain index) into file `to`, then drop the
+/// merged predecessors from the chain. Data clusters owned by dropped
+/// files are copied into `to`; entries already owned by newer files are
+/// untouched. The rebuilt chain reuses the original file names for the
+/// surviving suffix.
+///
+/// Returns the number of data clusters copied.
+pub fn stream_merge(chain: &mut Chain, from: u16, to: u16) -> Result<u64> {
+    if from > to || (to as usize) >= chain.len() {
+        bail!("invalid stream range {from}..={to} for chain len {}", chain.len());
+    }
+    if from == to {
+        return Ok(0);
+    }
+    let geom = *chain.active().geom();
+    let target = Arc::clone(chain.get(to).expect("in range"));
+    let mut copied = 0u64;
+    for vc in 0..geom.num_vclusters() {
+        // find the owner within the merged window, unless a newer file
+        // (index > to) already shadows this cluster
+        let mut owner: Option<(u16, u64)> = None;
+        for idx in (from..=to).rev() {
+            let e = chain.get(idx).unwrap().l2_entry(vc)?;
+            if let Some(off) = e.vanilla_view() {
+                owner = Some((idx, off));
+                break;
+            }
+        }
+        let Some((idx, off)) = owner else { continue };
+        if idx == to {
+            continue; // already in the target
+        }
+        // copy the data cluster into the target file
+        let src = chain.get(idx).unwrap();
+        let new_off = target.alloc_data_cluster()?;
+        let mut buf = vec![0u8; geom.cluster_size() as usize];
+        src.read_data(off, 0, &mut buf)?;
+        target.write_data(new_off, 0, &buf)?;
+        let stamp = if target.has_bfi() { Some(target.chain_index()) } else { None };
+        target.set_l2_entry(vc, L2Entry::local(new_off, stamp))?;
+        copied += 1;
+    }
+    // Rebuild the chain as [0, from) + [to, len): merged predecessors are
+    // dropped. Surviving files need their chain_index, backing link and
+    // (for stamped images) their L2 bfi stamps remapped to the new
+    // positions — an old index i maps to i (i < from), to `from`
+    // (from <= i <= to, all merged into the target) or i - (to - from)
+    // (i > to).
+    let shift = to - from;
+    let mut images: Vec<Arc<Image>> = Vec::new();
+    for (i, img) in chain.images().iter().enumerate() {
+        if i < from as usize || i >= to as usize {
+            images.push(Arc::clone(img));
+        }
+    }
+    for (new_idx, img) in images.iter().enumerate() {
+        let backing = if new_idx == 0 {
+            None
+        } else {
+            Some(images[new_idx - 1].name.clone())
+        };
+        img.update_header(new_idx as u16, backing.as_deref())?;
+        if img.has_bfi() && new_idx >= from as usize {
+            restamp_after_merge(img, &target, from, to, shift)?;
+        }
+    }
+    chain.replace_images(images);
+    Ok(copied)
+}
+
+/// Rewrite the bfi stamps of `img` after merging window `[from, to]` into
+/// `target`:
+/// * stamps below the window are untouched;
+/// * stamps into the window are redirected to the cluster's new home in
+///   `target` (looked up by virtual cluster — merged data moved, so the
+///   stamped *offset* changes too);
+/// * stamps above the window shift down by `shift`.
+fn restamp_after_merge(
+    img: &Image,
+    target: &Image,
+    from: u16,
+    to: u16,
+    shift: u16,
+) -> Result<u64> {
+    let geom = *img.geom();
+    let per_l2 = geom.entries_per_l2();
+    let is_target = std::ptr::eq(img as *const _, target as *const _)
+        || img.name == target.name;
+    let mut rewritten = 0u64;
+    for l1_idx in 0..geom.l1_entries() {
+        let l2_off = img.l1_entry(l1_idx);
+        if l2_off == 0 {
+            continue;
+        }
+        let mut entries = img.read_l2_slice(l2_off, 0, per_l2)?;
+        let mut dirty = false;
+        for (l2_idx, raw) in entries.iter_mut().enumerate() {
+            let e = L2Entry(*raw);
+            let Some(bfi) = e.bfi() else { continue };
+            let out = if bfi < from {
+                continue;
+            } else if bfi > to {
+                let nb = bfi - shift;
+                if e.is_allocated_here() {
+                    L2Entry::local(e.host_offset(), Some(nb))
+                } else {
+                    L2Entry::remote(e.host_offset(), nb)
+                }
+            } else if is_target && e.is_allocated_here() {
+                // the target's own data (pre-existing or just copied in):
+                // only the index changes
+                L2Entry::local(e.host_offset(), Some(from))
+            } else {
+                // stamp into the merged window: the data now lives in the
+                // target; find its new offset by virtual cluster
+                let vc = l1_idx * per_l2 + l2_idx as u64;
+                match target.l2_entry(vc)?.vanilla_view() {
+                    Some(off) => L2Entry::remote(off, from),
+                    None => L2Entry::ZERO,
+                }
+            };
+            if out != e {
+                *raw = out.raw();
+                dirty = true;
+                rewritten += 1;
+            }
+        }
+        if dirty {
+            img.write_l2_slice(l2_off, 0, &entries)?;
+        }
+    }
+    Ok(rewritten)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::clock::{CostModel, VirtClock};
+    use crate::qcow::image::DataMode;
+    use crate::qcow::layout::Geometry;
+    use crate::storage::node::StorageNode;
+
+    fn node() -> Arc<StorageNode> {
+        StorageNode::new("s", VirtClock::new(), CostModel::default())
+    }
+
+    fn sq_base(node: &crate::storage::node::StorageNode) -> Chain {
+        let b = node.create_file("img-0").unwrap();
+        let img = Image::create(
+            "img-0",
+            b,
+            Geometry::new(16, 16 << 20).unwrap(),
+            FEATURE_BFI,
+            0,
+            None,
+            DataMode::Real,
+        )
+        .unwrap();
+        Chain::new(Arc::new(img)).unwrap()
+    }
+
+    fn write_cluster(chain: &Chain, vc: u64, byte: u8) {
+        let img = chain.active();
+        let off = img.alloc_data_cluster().unwrap();
+        let data = vec![byte; img.geom().cluster_size() as usize];
+        img.write_data(off, 0, &data).unwrap();
+        let stamp = if img.has_bfi() { Some(img.chain_index()) } else { None };
+        img.set_l2_entry(vc, L2Entry::local(off, stamp)).unwrap();
+    }
+
+    #[test]
+    fn sqemu_snapshot_copies_stamped_tables() {
+        let node = node();
+        let mut chain = sq_base(&node);
+        write_cluster(&chain, 3, 0xAA);
+        snapshot_sqemu(&mut chain, &node, "img-1").unwrap();
+        // new active volume resolves cluster 3 without the chain
+        let e = chain.active().l2_entry(3).unwrap();
+        assert!(!e.is_allocated_here());
+        assert_eq!(e.bfi(), Some(0));
+        assert_eq!(
+            e.host_offset(),
+            chain.get(0).unwrap().l2_entry(3).unwrap().host_offset()
+        );
+    }
+
+    #[test]
+    fn sqemu_snapshot_chains_deepen_stamps() {
+        let node = node();
+        let mut chain = sq_base(&node);
+        write_cluster(&chain, 1, 1);
+        snapshot_sqemu(&mut chain, &node, "img-1").unwrap();
+        write_cluster(&chain, 2, 2);
+        snapshot_sqemu(&mut chain, &node, "img-2").unwrap();
+        let active = chain.active();
+        assert_eq!(active.l2_entry(1).unwrap().bfi(), Some(0));
+        assert_eq!(active.l2_entry(2).unwrap().bfi(), Some(1));
+        assert_eq!(active.l2_entry(3).unwrap(), L2Entry::ZERO);
+    }
+
+    #[test]
+    fn vanilla_snapshot_is_empty() {
+        let node = node();
+        let mut chain = sq_base(&node);
+        write_cluster(&chain, 1, 1);
+        snapshot_vanilla(&mut chain, &node, "img-1").unwrap();
+        assert_eq!(chain.active().l2_entry(1).unwrap(), L2Entry::ZERO);
+        assert!(!chain.active().has_bfi());
+        // but the chain still resolves through the backing file
+        assert!(chain.resolve_walk(1).unwrap().is_some());
+    }
+
+    #[test]
+    fn convert_stamps_vanilla_chain() {
+        let node = node();
+        let mut chain = sq_base(&node);
+        write_cluster(&chain, 1, 1);
+        snapshot_vanilla(&mut chain, &node, "img-1").unwrap();
+        write_cluster(&chain, 2, 2);
+        let stamped = convert_to_sqemu(&chain).unwrap();
+        assert_eq!(stamped, 2);
+        let active = chain.active();
+        assert_eq!(active.l2_entry(1).unwrap().sqemu_view(1), Some((0, {
+            chain.get(0).unwrap().l2_entry(1).unwrap().host_offset()
+        })));
+        assert_eq!(active.l2_entry(2).unwrap().bfi(), Some(1));
+    }
+
+    #[test]
+    fn stream_merge_compacts_and_preserves_content() {
+        let node = node();
+        let mut chain = sq_base(&node);
+        write_cluster(&chain, 0, 10);
+        snapshot_sqemu(&mut chain, &node, "img-1").unwrap();
+        write_cluster(&chain, 1, 11);
+        snapshot_sqemu(&mut chain, &node, "img-2").unwrap();
+        write_cluster(&chain, 2, 12);
+        snapshot_sqemu(&mut chain, &node, "img-3").unwrap();
+        write_cluster(&chain, 0, 99); // shadows cluster 0
+        assert_eq!(chain.len(), 4);
+
+        // merge files 0..=2 into file 2
+        let copied = stream_merge(&mut chain, 0, 2).unwrap();
+        assert_eq!(copied, 2); // clusters 0 and 1 copied into img-2
+        assert_eq!(chain.len(), 2);
+        // content: cluster 0 must still resolve to the newest write
+        let (bfi, off) = chain.resolve_walk(0).unwrap().unwrap();
+        assert_eq!(bfi as usize, chain.len() - 1);
+        let mut buf = [0u8; 8];
+        chain.get(bfi).unwrap().read_data(off, 0, &mut buf).unwrap();
+        assert_eq!(buf, [99u8; 8]);
+        // cluster 1 now lives in the merged target
+        let (bfi1, off1) = chain.resolve_walk(1).unwrap().unwrap();
+        let mut buf1 = [0u8; 8];
+        chain.get(bfi1).unwrap().read_data(off1, 0, &mut buf1).unwrap();
+        assert_eq!(buf1, [11u8; 8]);
+    }
+}

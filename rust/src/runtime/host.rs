@@ -1,0 +1,144 @@
+//! Bit-exact host (pure Rust) implementations of the exported kernels.
+//!
+//! Two roles: (1) fallback so the library runs without compiled
+//! artifacts, (2) differential oracle — `tests/runtime_artifacts.rs`
+//! asserts PJRT results equal these for random inputs (the same contract
+//! pytest enforces between the Pallas kernels and ref.py).
+
+use super::UNALLOCATED;
+
+/// SQEMU direct resolution: gather (bfi, off) per request plus the
+/// per-file histogram (`hist_files` + 1 buckets; last = unallocated).
+pub fn translate_direct(
+    off: &[i32],
+    bfi: &[i32],
+    vbs: &[i32],
+    hist_files: usize,
+) -> (Vec<i32>, Vec<i32>, Vec<i64>) {
+    let mut out_bfi = Vec::with_capacity(vbs.len());
+    let mut out_off = Vec::with_capacity(vbs.len());
+    let mut hist = vec![0i64; hist_files + 1];
+    for &vb in vbs {
+        let i = vb as usize;
+        let (b, o) = if i < off.len() {
+            (bfi[i], off[i])
+        } else {
+            (UNALLOCATED, UNALLOCATED)
+        };
+        out_bfi.push(b);
+        out_off.push(o);
+        let idx = if b == UNALLOCATED {
+            hist_files
+        } else {
+            (b as usize).min(hist_files - 1)
+        };
+        hist[idx] += 1;
+    }
+    (out_bfi, out_off, hist)
+}
+
+/// vQemu chain walk: newest file holding the cluster wins.
+pub fn translate_walk(tables: &[Vec<i32>], vbs: &[i32]) -> (Vec<i32>, Vec<i32>) {
+    let mut out_bfi = vec![UNALLOCATED; vbs.len()];
+    let mut out_off = vec![UNALLOCATED; vbs.len()];
+    for (r, &vb) in vbs.iter().enumerate() {
+        for j in (0..tables.len()).rev() {
+            let t = tables[j].get(vb as usize).copied().unwrap_or(UNALLOCATED);
+            if t != UNALLOCATED {
+                out_bfi[r] = j as i32;
+                out_off[r] = t;
+                break;
+            }
+        }
+    }
+    (out_bfi, out_off)
+}
+
+/// §5.3 merge: entry b wins iff bfi_v <= bfi_b.
+pub fn merge_l2(
+    off_v: &[i32],
+    bfi_v: &[i32],
+    off_b: &[i32],
+    bfi_b: &[i32],
+) -> (Vec<i32>, Vec<i32>) {
+    let mut off = Vec::with_capacity(off_v.len());
+    let mut bfi = Vec::with_capacity(off_v.len());
+    for i in 0..off_v.len() {
+        if bfi_v[i] <= bfi_b[i] {
+            off.push(off_b[i]);
+            bfi.push(bfi_b[i]);
+        } else {
+            off.push(off_v[i]);
+            bfi.push(bfi_v[i]);
+        }
+    }
+    (off, bfi)
+}
+
+/// Fold tables oldest-first through [`merge_l2`].
+pub fn stream_fold(offs: &[Vec<i32>], bfis: &[Vec<i32>]) -> (Vec<i32>, Vec<i32>) {
+    let len = offs.first().map_or(0, |r| r.len());
+    let mut off = vec![UNALLOCATED; len];
+    let mut bfi = vec![UNALLOCATED; len];
+    for (o_row, b_row) in offs.iter().zip(bfis) {
+        let (no, nb) = merge_l2(&off, &bfi, o_row, b_row);
+        off = no;
+        bfi = nb;
+    }
+    (off, bfi)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn direct_gather_and_histogram() {
+        let off = vec![10, UNALLOCATED, 30];
+        let bfi = vec![0, UNALLOCATED, 2];
+        let (b, o, h) = translate_direct(&off, &bfi, &[2, 0, 1, 2], 4);
+        assert_eq!(b, vec![2, 0, UNALLOCATED, 2]);
+        assert_eq!(o, vec![30, 10, UNALLOCATED, 30]);
+        assert_eq!(h, vec![1, 0, 2, 0, 1]);
+    }
+
+    #[test]
+    fn walk_newest_wins() {
+        let tables = vec![
+            vec![1, UNALLOCATED],
+            vec![UNALLOCATED, 5],
+            vec![9, UNALLOCATED],
+        ];
+        let (b, o) = translate_walk(&tables, &[0, 1]);
+        assert_eq!(b, vec![2, 1]);
+        assert_eq!(o, vec![9, 5]);
+    }
+
+    #[test]
+    fn merge_rule_ties_to_b() {
+        let (o, b) = merge_l2(&[1, 2], &[3, 3], &[9, 9], &[3, 2]);
+        assert_eq!(o, vec![9, 2]);
+        assert_eq!(b, vec![3, 3]);
+    }
+
+    #[test]
+    fn stream_fold_equals_walk_flatten() {
+        // folding per-file tables stamped with their index == chain walk
+        let tables = vec![
+            vec![10, 20, UNALLOCATED],
+            vec![UNALLOCATED, 21, UNALLOCATED],
+        ];
+        let bfis: Vec<Vec<i32>> = (0..2)
+            .map(|j| {
+                tables[j]
+                    .iter()
+                    .map(|&t| if t == UNALLOCATED { UNALLOCATED } else { j as i32 })
+                    .collect()
+            })
+            .collect();
+        let (off, bfi) = stream_fold(&tables, &bfis);
+        let (wb, wo) = translate_walk(&tables, &[0, 1, 2]);
+        assert_eq!(off, wo);
+        assert_eq!(bfi, wb);
+    }
+}

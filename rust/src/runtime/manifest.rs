@@ -1,0 +1,140 @@
+//! AOT manifest: shapes/dtypes of the exported artifacts
+//! (`artifacts/manifest.json`, written by python/compile/aot.py).
+
+use crate::util::json::Json;
+use anyhow::{anyhow, Context, Result};
+use std::collections::BTreeMap;
+use std::path::Path;
+
+#[derive(Clone, Debug)]
+pub struct ArtifactMeta {
+    pub file: String,
+    /// Input shapes (each a dim list; all int32 in this project).
+    pub inputs: Vec<Vec<usize>>,
+    pub outputs: Vec<Vec<usize>>,
+}
+
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    /// Exported request batch size.
+    pub batch: usize,
+    /// Exported table width in clusters.
+    pub clusters: usize,
+    /// Exported chain-walk depth per call.
+    pub chain: usize,
+    /// Exported stream_fold depth.
+    pub stream_depth: usize,
+    pub artifacts: BTreeMap<String, ArtifactMeta>,
+}
+
+impl Manifest {
+    pub fn load(path: impl AsRef<Path>) -> Result<Manifest> {
+        let text = std::fs::read_to_string(path.as_ref())
+            .with_context(|| format!("read {:?}", path.as_ref()))?;
+        Self::parse(&text)
+    }
+
+    pub fn parse(text: &str) -> Result<Manifest> {
+        let j = Json::parse(text).map_err(|e| anyhow!("{e}"))?;
+        let consts = j.get("constants").ok_or_else(|| anyhow!("no constants"))?;
+        let get = |k: &str| -> Result<usize> {
+            consts
+                .get(k)
+                .and_then(Json::as_u64)
+                .map(|v| v as usize)
+                .ok_or_else(|| anyhow!("missing constant '{k}'"))
+        };
+        let mut artifacts = BTreeMap::new();
+        let arts = j
+            .get("artifacts")
+            .and_then(Json::as_obj)
+            .ok_or_else(|| anyhow!("no artifacts"))?;
+        for (name, meta) in arts {
+            let file = meta
+                .get("file")
+                .and_then(Json::as_str)
+                .ok_or_else(|| anyhow!("artifact '{name}' missing file"))?
+                .to_string();
+            let shapes = |key: &str| -> Result<Vec<Vec<usize>>> {
+                meta.get(key)
+                    .and_then(Json::as_arr)
+                    .ok_or_else(|| anyhow!("artifact '{name}' missing {key}"))?
+                    .iter()
+                    .map(|io| {
+                        io.get("shape")
+                            .and_then(Json::as_arr)
+                            .ok_or_else(|| anyhow!("artifact '{name}' bad shape"))
+                            .map(|dims| {
+                                dims.iter()
+                                    .filter_map(Json::as_u64)
+                                    .map(|d| d as usize)
+                                    .collect()
+                            })
+                    })
+                    .collect()
+            };
+            artifacts.insert(
+                name.clone(),
+                ArtifactMeta { file, inputs: shapes("inputs")?, outputs: shapes("outputs")? },
+            );
+        }
+        Ok(Manifest {
+            batch: get("batch")?,
+            clusters: get("clusters")?,
+            chain: get("chain")?,
+            stream_depth: get("stream_depth")?,
+            artifacts,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "constants": {"batch": 256, "clusters": 8192, "chain": 32,
+                    "stream_depth": 8, "unallocated": -1},
+      "artifacts": {
+        "merge_l2": {
+          "file": "merge_l2.hlo.txt",
+          "inputs": [{"shape": [8192], "dtype": "int32"},
+                     {"shape": [8192], "dtype": "int32"},
+                     {"shape": [8192], "dtype": "int32"},
+                     {"shape": [8192], "dtype": "int32"}],
+          "outputs": [{"shape": [8192], "dtype": "int32"},
+                      {"shape": [8192], "dtype": "int32"}]
+        }
+      }
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.batch, 256);
+        assert_eq!(m.clusters, 8192);
+        assert_eq!(m.chain, 32);
+        assert_eq!(m.stream_depth, 8);
+        let a = &m.artifacts["merge_l2"];
+        assert_eq!(a.file, "merge_l2.hlo.txt");
+        assert_eq!(a.inputs.len(), 4);
+        assert_eq!(a.inputs[0], vec![8192]);
+        assert_eq!(a.outputs.len(), 2);
+    }
+
+    #[test]
+    fn rejects_missing_constants() {
+        assert!(Manifest::parse(r#"{"artifacts": {}}"#).is_err());
+    }
+
+    #[test]
+    fn loads_real_manifest_if_present() {
+        // integration sanity when `make artifacts` has run
+        let p = std::path::Path::new("artifacts/manifest.json");
+        if p.exists() {
+            let m = Manifest::load(p).unwrap();
+            assert!(m.artifacts.contains_key("translate_direct"));
+            assert!(m.artifacts.contains_key("stream_fold"));
+        }
+    }
+}

@@ -1,0 +1,260 @@
+//! The AOT bridge: load the JAX/Pallas computations exported by
+//! `python/compile/aot.py` (HLO text + manifest) and execute them on the
+//! PJRT CPU client from the request path's *bulk* operations.
+//!
+//! Python never runs at request time: `make artifacts` compiles once; this
+//! module loads `artifacts/*.hlo.txt` with
+//! `HloModuleProto::from_text_file`, compiles through the `xla` crate and
+//! executes with concrete buffers. HLO *text* is the interchange format —
+//! jax >= 0.5 emits 64-bit instruction ids in serialized protos which
+//! xla_extension 0.5.1 rejects; the text parser reassigns ids.
+//!
+//! Every kernel has a bit-exact host fallback ([`host`]) so the library
+//! works without artifacts (and so tests can diff runtime vs host).
+
+pub mod host;
+pub mod manifest;
+pub mod service;
+
+use anyhow::{anyhow, bail, Context, Result};
+use manifest::Manifest;
+use std::collections::HashMap;
+use std::path::Path;
+
+/// The chain-frame sentinel shared with the kernels (ref.py UNALLOCATED).
+pub const UNALLOCATED: i32 = -1;
+
+/// Loaded PJRT executables for all exported artifacts.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    exes: HashMap<String, xla::PjRtLoadedExecutable>,
+    pub manifest: Manifest,
+}
+
+impl Runtime {
+    /// Load and compile every artifact listed in `<dir>/manifest.json`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Runtime> {
+        let dir = dir.as_ref();
+        let manifest = Manifest::load(dir.join("manifest.json"))
+            .with_context(|| format!("load manifest from {dir:?} (run `make artifacts`)"))?;
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| anyhow!("PJRT CPU client: {e:?}"))?;
+        let mut exes = HashMap::new();
+        for (name, art) in &manifest.artifacts {
+            let path = dir.join(&art.file);
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().ok_or_else(|| anyhow!("bad path {path:?}"))?,
+            )
+            .map_err(|e| anyhow!("parse {path:?}: {e:?}"))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client
+                .compile(&comp)
+                .map_err(|e| anyhow!("compile {name}: {e:?}"))?;
+            exes.insert(name.clone(), exe);
+        }
+        Ok(Runtime { client, exes, manifest })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn artifact_names(&self) -> Vec<String> {
+        let mut v: Vec<String> = self.exes.keys().cloned().collect();
+        v.sort();
+        v
+    }
+
+    fn run(&self, name: &str, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let exe = self
+            .exes
+            .get(name)
+            .ok_or_else(|| anyhow!("no artifact '{name}'"))?;
+        let result = exe
+            .execute::<xla::Literal>(inputs)
+            .map_err(|e| anyhow!("execute {name}: {e:?}"))?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch {name} result: {e:?}"))?;
+        // lowered with return_tuple=True
+        lit.to_tuple().map_err(|e| anyhow!("untuple {name}: {e:?}"))
+    }
+
+    /// SQEMU bulk resolution (`translate_direct` artifact): resolve a
+    /// batch of virtual clusters against the unified (off, bfi) table.
+    /// `vbs` is chunked/padded to the exported batch size; tables larger
+    /// than the exported `clusters` dimension are rejected (callers tile).
+    ///
+    /// Returns (bfi, off) per request plus the per-backing-file lookup
+    /// histogram (index `chain` = unallocated).
+    pub fn translate_direct(
+        &self,
+        off: &[i32],
+        bfi: &[i32],
+        vbs: &[i32],
+    ) -> Result<(Vec<i32>, Vec<i32>, Vec<i64>)> {
+        let c = self.manifest.clusters;
+        let b = self.manifest.batch;
+        if off.len() != bfi.len() {
+            bail!("off/bfi length mismatch");
+        }
+        if off.len() > c {
+            bail!("table of {} clusters exceeds exported {c}", off.len());
+        }
+        let mut off_p = off.to_vec();
+        let mut bfi_p = bfi.to_vec();
+        off_p.resize(c, UNALLOCATED);
+        bfi_p.resize(c, UNALLOCATED);
+        let off_lit = xla::Literal::vec1(&off_p);
+        let bfi_lit = xla::Literal::vec1(&bfi_p);
+
+        let mut out_bfi = Vec::with_capacity(vbs.len());
+        let mut out_off = Vec::with_capacity(vbs.len());
+        let mut hist = vec![0i64; self.manifest.chain + 1];
+        for chunk in vbs.chunks(b) {
+            let mut v = chunk.to_vec();
+            v.resize(b, 0); // padding resolves cluster 0; subtracted below
+            let v_lit = xla::Literal::vec1(&v);
+            let outs =
+                self.run("translate_direct", &[off_lit.clone(), bfi_lit.clone(), v_lit])?;
+            let rb = outs[0].to_vec::<i32>().map_err(wrap)?;
+            let ro = outs[1].to_vec::<i32>().map_err(wrap)?;
+            let rh = outs[2].to_vec::<i32>().map_err(wrap)?;
+            out_bfi.extend_from_slice(&rb[..chunk.len()]);
+            out_off.extend_from_slice(&ro[..chunk.len()]);
+            for (i, &h) in rh.iter().enumerate() {
+                hist[i] += h as i64;
+            }
+            // remove padding contributions from the histogram
+            for &padded in &rb[chunk.len()..] {
+                let idx = if padded == UNALLOCATED {
+                    self.manifest.chain
+                } else {
+                    (padded as usize).min(self.manifest.chain - 1)
+                };
+                hist[idx] -= 1;
+            }
+        }
+        Ok((out_bfi, out_off, hist))
+    }
+
+    /// vQemu bulk baseline (`translate_walk`): resolve against a stack of
+    /// per-file tables. `tables` is `[n][c]`; n and c must not exceed the
+    /// exported dims (callers tile/loop deeper chains).
+    pub fn translate_walk(
+        &self,
+        tables: &[Vec<i32>],
+        vbs: &[i32],
+    ) -> Result<(Vec<i32>, Vec<i32>)> {
+        let c = self.manifest.clusters;
+        let n = self.manifest.chain;
+        let b = self.manifest.batch;
+        if tables.len() > n {
+            bail!("chain of {} exceeds exported depth {n}", tables.len());
+        }
+        let mut flat = Vec::with_capacity(n * c);
+        for row in tables {
+            if row.len() > c {
+                bail!("table of {} clusters exceeds exported {c}", row.len());
+            }
+            flat.extend_from_slice(row);
+            flat.resize(flat.len() + (c - row.len()), UNALLOCATED);
+        }
+        flat.resize(n * c, UNALLOCATED);
+        let t_lit = xla::Literal::vec1(&flat)
+            .reshape(&[n as i64, c as i64])
+            .map_err(wrap)?;
+        let mut out_bfi = Vec::with_capacity(vbs.len());
+        let mut out_off = Vec::with_capacity(vbs.len());
+        for chunk in vbs.chunks(b) {
+            let mut v = chunk.to_vec();
+            v.resize(b, 0);
+            let v_lit = xla::Literal::vec1(&v);
+            let outs = self.run("translate_walk", &[t_lit.clone(), v_lit])?;
+            out_bfi
+                .extend_from_slice(&outs[0].to_vec::<i32>().map_err(wrap)?[..chunk.len()]);
+            out_off
+                .extend_from_slice(&outs[1].to_vec::<i32>().map_err(wrap)?[..chunk.len()]);
+        }
+        Ok((out_bfi, out_off))
+    }
+
+    /// §5.3 merge (`merge_l2`): fold slice b into slice v under the
+    /// precedence rule. Inputs padded to the exported cluster count.
+    pub fn merge_l2(
+        &self,
+        off_v: &[i32],
+        bfi_v: &[i32],
+        off_b: &[i32],
+        bfi_b: &[i32],
+    ) -> Result<(Vec<i32>, Vec<i32>)> {
+        let c = self.manifest.clusters;
+        let len = off_v.len();
+        if len > c {
+            bail!("table of {len} clusters exceeds exported {c}");
+        }
+        let pad = |xs: &[i32]| {
+            let mut v = xs.to_vec();
+            v.resize(c, UNALLOCATED);
+            xla::Literal::vec1(&v)
+        };
+        let outs = self.run(
+            "merge_l2",
+            &[pad(off_v), pad(bfi_v), pad(off_b), pad(bfi_b)],
+        )?;
+        let mut off = outs[0].to_vec::<i32>().map_err(wrap)?;
+        let mut bfi = outs[1].to_vec::<i32>().map_err(wrap)?;
+        off.truncate(len);
+        bfi.truncate(len);
+        Ok((off, bfi))
+    }
+
+    /// Streaming planner (`stream_fold`): fold up to `stream_depth` tables
+    /// (oldest first) into one flattened view in a single PJRT call.
+    pub fn stream_fold(
+        &self,
+        offs: &[Vec<i32>],
+        bfis: &[Vec<i32>],
+    ) -> Result<(Vec<i32>, Vec<i32>)> {
+        let c = self.manifest.clusters;
+        let d = self.manifest.stream_depth;
+        if offs.len() != bfis.len() {
+            bail!("offs/bfis row count mismatch");
+        }
+        if offs.len() > d {
+            bail!("{} tables exceed exported stream depth {d}", offs.len());
+        }
+        let len = offs.first().map_or(0, |r| r.len());
+        let flatten = |rows: &[Vec<i32>]| -> Result<xla::Literal> {
+            let mut flat = Vec::with_capacity(d * c);
+            for row in rows {
+                if row.len() != len {
+                    bail!("ragged table rows");
+                }
+                flat.extend_from_slice(row);
+                flat.resize(flat.len() + (c - row.len()), UNALLOCATED);
+            }
+            flat.resize(d * c, UNALLOCATED);
+            xla::Literal::vec1(&flat)
+                .reshape(&[d as i64, c as i64])
+                .map_err(wrap)
+        };
+        let outs = self.run("stream_fold", &[flatten(offs)?, flatten(bfis)?])?;
+        let mut off = outs[0].to_vec::<i32>().map_err(wrap)?;
+        let mut bfi = outs[1].to_vec::<i32>().map_err(wrap)?;
+        off.truncate(len);
+        bfi.truncate(len);
+        Ok((off, bfi))
+    }
+}
+
+fn wrap(e: xla::Error) -> anyhow::Error {
+    anyhow!("{e:?}")
+}
+
+/// Default artifacts directory (overridable via `SQEMU_ARTIFACTS`).
+pub fn default_artifacts_dir() -> std::path::PathBuf {
+    std::env::var_os("SQEMU_ARTIFACTS")
+        .map(Into::into)
+        .unwrap_or_else(|| "artifacts".into())
+}

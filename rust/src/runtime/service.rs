@@ -1,0 +1,209 @@
+//! RuntimeService: a single executor thread owning the PJRT client.
+//!
+//! The `xla` crate's client is `Rc`-based (not `Send`), but the
+//! coordinator is multi-threaded — so all PJRT execution is funneled
+//! through one dedicated thread (the "leader" executor), reached by a
+//! cloneable, `Send + Sync` handle. Bulk callers block on a reply
+//! channel; per-request driver paths never touch this.
+
+use super::{host, Runtime};
+use anyhow::{anyhow, Result};
+use std::path::PathBuf;
+use std::sync::mpsc::{sync_channel, SyncSender};
+
+type Reply<T> = SyncSender<Result<T>>;
+
+enum Job {
+    TranslateDirect {
+        off: Vec<i32>,
+        bfi: Vec<i32>,
+        vbs: Vec<i32>,
+        reply: Reply<(Vec<i32>, Vec<i32>, Vec<i64>)>,
+    },
+    TranslateWalk {
+        tables: Vec<Vec<i32>>,
+        vbs: Vec<i32>,
+        reply: Reply<(Vec<i32>, Vec<i32>)>,
+    },
+    MergeL2 {
+        off_v: Vec<i32>,
+        bfi_v: Vec<i32>,
+        off_b: Vec<i32>,
+        bfi_b: Vec<i32>,
+        reply: Reply<(Vec<i32>, Vec<i32>)>,
+    },
+    StreamFold {
+        offs: Vec<Vec<i32>>,
+        bfis: Vec<Vec<i32>>,
+        reply: Reply<(Vec<i32>, Vec<i32>)>,
+    },
+    Shutdown,
+}
+
+/// Cloneable handle to the executor thread.
+#[derive(Clone)]
+pub struct RuntimeService {
+    tx: SyncSender<Job>,
+    /// Tiling limits copied out of the manifest.
+    pub clusters: usize,
+    pub chain: usize,
+    pub stream_depth: usize,
+    pub batch: usize,
+}
+
+impl RuntimeService {
+    /// Spawn the executor; fails if the artifacts cannot be loaded.
+    pub fn spawn(dir: impl Into<PathBuf>) -> Result<RuntimeService> {
+        let dir = dir.into();
+        let (tx, rx) = sync_channel::<Job>(16);
+        let (init_tx, init_rx) = sync_channel::<Result<(usize, usize, usize, usize)>>(1);
+        std::thread::Builder::new()
+            .name("pjrt-exec".into())
+            .spawn(move || {
+                let rt = match Runtime::load(&dir) {
+                    Ok(rt) => {
+                        let m = &rt.manifest;
+                        let _ = init_tx
+                            .send(Ok((m.clusters, m.chain, m.stream_depth, m.batch)));
+                        rt
+                    }
+                    Err(e) => {
+                        let _ = init_tx.send(Err(e));
+                        return;
+                    }
+                };
+                while let Ok(job) = rx.recv() {
+                    match job {
+                        Job::TranslateDirect { off, bfi, vbs, reply } => {
+                            let _ = reply.send(rt.translate_direct(&off, &bfi, &vbs));
+                        }
+                        Job::TranslateWalk { tables, vbs, reply } => {
+                            let _ = reply.send(rt.translate_walk(&tables, &vbs));
+                        }
+                        Job::MergeL2 { off_v, bfi_v, off_b, bfi_b, reply } => {
+                            let _ =
+                                reply.send(rt.merge_l2(&off_v, &bfi_v, &off_b, &bfi_b));
+                        }
+                        Job::StreamFold { offs, bfis, reply } => {
+                            let _ = reply.send(rt.stream_fold(&offs, &bfis));
+                        }
+                        Job::Shutdown => break,
+                    }
+                }
+            })
+            .expect("spawn pjrt executor");
+        let (clusters, chain, stream_depth, batch) =
+            init_rx.recv().map_err(|_| anyhow!("executor died during init"))??;
+        Ok(RuntimeService { tx, clusters, chain, stream_depth, batch })
+    }
+
+    /// Spawn against the default artifacts dir, or None if unavailable.
+    pub fn try_default() -> Option<RuntimeService> {
+        RuntimeService::spawn(super::default_artifacts_dir()).ok()
+    }
+
+    fn call<T>(&self, build: impl FnOnce(Reply<T>) -> Job) -> Result<T> {
+        let (reply, rx) = sync_channel(1);
+        self.tx
+            .send(build(reply))
+            .map_err(|_| anyhow!("pjrt executor gone"))?;
+        rx.recv().map_err(|_| anyhow!("pjrt executor gone"))?
+    }
+
+    pub fn translate_direct(
+        &self,
+        off: &[i32],
+        bfi: &[i32],
+        vbs: &[i32],
+    ) -> Result<(Vec<i32>, Vec<i32>, Vec<i64>)> {
+        self.call(|reply| Job::TranslateDirect {
+            off: off.to_vec(),
+            bfi: bfi.to_vec(),
+            vbs: vbs.to_vec(),
+            reply,
+        })
+    }
+
+    pub fn translate_walk(
+        &self,
+        tables: &[Vec<i32>],
+        vbs: &[i32],
+    ) -> Result<(Vec<i32>, Vec<i32>)> {
+        self.call(|reply| Job::TranslateWalk {
+            tables: tables.to_vec(),
+            vbs: vbs.to_vec(),
+            reply,
+        })
+    }
+
+    pub fn merge_l2(
+        &self,
+        off_v: &[i32],
+        bfi_v: &[i32],
+        off_b: &[i32],
+        bfi_b: &[i32],
+    ) -> Result<(Vec<i32>, Vec<i32>)> {
+        self.call(|reply| Job::MergeL2 {
+            off_v: off_v.to_vec(),
+            bfi_v: bfi_v.to_vec(),
+            off_b: off_b.to_vec(),
+            bfi_b: bfi_b.to_vec(),
+            reply,
+        })
+    }
+
+    pub fn stream_fold(
+        &self,
+        offs: &[Vec<i32>],
+        bfis: &[Vec<i32>],
+    ) -> Result<(Vec<i32>, Vec<i32>)> {
+        self.call(|reply| Job::StreamFold {
+            offs: offs.to_vec(),
+            bfis: bfis.to_vec(),
+            reply,
+        })
+    }
+
+    pub fn shutdown(&self) {
+        let _ = self.tx.send(Job::Shutdown);
+    }
+}
+
+/// Differential helper: run a translate through the service and the host
+/// kernels, asserting equality (used by tests and `sqemu selftest`).
+pub fn verify_service(svc: &RuntimeService) -> Result<()> {
+    let off = vec![5, -1, 7, 9];
+    let bfi = vec![0, -1, 2, 1];
+    let vbs = vec![0, 1, 2, 3, 2];
+    let (gb, go, gh) = svc.translate_direct(&off, &bfi, &vbs)?;
+    let (hb, ho, hh) = host::translate_direct(&off, &bfi, &vbs, svc.chain);
+    if gb != hb || go != ho || gh != hh {
+        anyhow::bail!("service/host mismatch");
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn service_roundtrip_if_artifacts_present() {
+        let Some(svc) = RuntimeService::try_default() else {
+            eprintln!("SKIP: no artifacts");
+            return;
+        };
+        verify_service(&svc).unwrap();
+        // handle is cloneable and usable from other threads
+        let svc2 = svc.clone();
+        std::thread::spawn(move || verify_service(&svc2).unwrap())
+            .join()
+            .unwrap();
+        svc.shutdown();
+    }
+
+    #[test]
+    fn spawn_fails_on_missing_dir() {
+        assert!(RuntimeService::spawn("/nonexistent-dir-xyz").is_err());
+    }
+}

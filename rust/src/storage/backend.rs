@@ -1,0 +1,51 @@
+//! The byte-store trait all virtual-disk files are written through.
+
+use anyhow::Result;
+use std::sync::Arc;
+
+/// A random-access byte store for one on-"disk" file. Implementations use
+/// interior mutability so a file can be shared (`Arc<dyn Backend>`)
+/// between a driver, the snapshot machinery and the coordinator.
+pub trait Backend: Send + Sync {
+    /// Read `buf.len()` bytes at `off`. Reads past `len()` zero-fill
+    /// (sparse-file semantics, matching holes in Qcow2 files).
+    fn read_at(&self, buf: &mut [u8], off: u64) -> Result<()>;
+
+    /// Write at `off`, growing the file if needed.
+    fn write_at(&self, data: &[u8], off: u64) -> Result<()>;
+
+    /// Current file length in bytes.
+    fn len(&self) -> u64;
+
+    fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Grow (never shrinks) to at least `len` bytes.
+    fn truncate_to(&self, len: u64) -> Result<()>;
+
+    /// Charge the cost of touching `len` bytes at `off` *without* storing
+    /// them — used by synthetic-data mode where benches skip materializing
+    /// data clusters but must still pay their I/O time. Default: no cost
+    /// (free backends have no clock).
+    fn charge(&self, _off: u64, _len: u64) {}
+
+    /// Physically stored bytes (for sparse accounting / Fig 19a).
+    fn stored_bytes(&self) -> u64 {
+        self.len()
+    }
+}
+
+/// Shared handle to a backend.
+pub type BackendRef = Arc<dyn Backend>;
+
+/// Helpers common to all backends.
+pub fn read_u64(b: &dyn Backend, off: u64) -> Result<u64> {
+    let mut buf = [0u8; 8];
+    b.read_at(&mut buf, off)?;
+    Ok(u64::from_le_bytes(buf))
+}
+
+pub fn write_u64(b: &dyn Backend, off: u64, v: u64) -> Result<()> {
+    b.write_at(&v.to_le_bytes(), off)
+}

@@ -1,0 +1,93 @@
+//! `DirStore`: a [`FileStore`] over a host directory with real files —
+//! the CLI's image store (`sqemu create/snapshot/check` operate on actual
+//! on-disk images that survive across invocations).
+
+use super::backend::BackendRef;
+use super::file::FileBackend;
+use super::store::FileStore;
+use anyhow::{bail, Context, Result};
+use std::path::PathBuf;
+use std::sync::Arc;
+
+pub struct DirStore {
+    dir: PathBuf,
+}
+
+impl DirStore {
+    pub fn new(dir: impl Into<PathBuf>) -> Result<DirStore> {
+        let dir = dir.into();
+        std::fs::create_dir_all(&dir)
+            .with_context(|| format!("create dir {dir:?}"))?;
+        Ok(DirStore { dir })
+    }
+
+    fn path(&self, name: &str) -> Result<PathBuf> {
+        if name.contains('/') || name.contains("..") {
+            bail!("file name '{name}' must be a plain name");
+        }
+        Ok(self.dir.join(name))
+    }
+}
+
+impl FileStore for DirStore {
+    fn create_file(&self, name: &str) -> Result<BackendRef> {
+        let path = self.path(name)?;
+        if path.exists() {
+            bail!("{path:?} already exists");
+        }
+        Ok(Arc::new(FileBackend::create(path)?))
+    }
+
+    fn open_file(&self, name: &str) -> Result<BackendRef> {
+        Ok(Arc::new(FileBackend::open(self.path(name)?)?))
+    }
+
+    fn delete_file(&self, name: &str) -> Result<()> {
+        std::fs::remove_file(self.path(name)?).map_err(Into::into)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::qcow::image::{DataMode, Image};
+    use crate::qcow::layout::{Geometry, FEATURE_BFI};
+    use crate::qcow::{snapshot, Chain};
+
+    fn tmp() -> PathBuf {
+        let d = std::env::temp_dir().join(format!(
+            "sqemu-dirstore-{}-{:?}",
+            std::process::id(),
+            std::thread::current().id()
+        ));
+        let _ = std::fs::remove_dir_all(&d);
+        d
+    }
+
+    #[test]
+    fn chain_on_real_directory() {
+        let dir = tmp();
+        let store = DirStore::new(&dir).unwrap();
+        let geom = Geometry::new(16, 16 << 20).unwrap();
+        let b = store.create_file("base.sq").unwrap();
+        let img =
+            Image::create("base.sq", b, geom, FEATURE_BFI, 0, None, DataMode::Real)
+                .unwrap();
+        let mut chain = Chain::new(Arc::new(img)).unwrap();
+        snapshot::snapshot_sqemu(&mut chain, &store, "snap1.sq").unwrap();
+        drop(chain);
+        // reopen purely from the files on disk
+        let chain = Chain::open(&store, "snap1.sq", DataMode::Real).unwrap();
+        assert_eq!(chain.len(), 2);
+        assert!(dir.join("base.sq").exists());
+        assert!(dir.join("snap1.sq").exists());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn rejects_path_tricks() {
+        let store = DirStore::new(tmp()).unwrap();
+        assert!(store.create_file("../evil").is_err());
+        assert!(store.create_file("a/b").is_err());
+    }
+}

@@ -1,0 +1,23 @@
+//! Storage substrate: where virtual-disk files physically live.
+//!
+//! The paper's testbed serves Qcow2 files from a storage node over NFS
+//! (10 GbE, SATA SSD). Here a [`Backend`] is the byte store for one file;
+//! [`timed::Timed`] wraps any backend with the Eq. 1 cost model charged to
+//! a shared virtual clock; [`node::StorageNode`] groups the files of a
+//! simulated storage server (the NFS stand-in).
+
+pub mod backend;
+pub mod dir;
+pub mod file;
+pub mod mem;
+pub mod node;
+pub mod store;
+pub mod timed;
+
+pub use backend::{Backend, BackendRef};
+pub use dir::DirStore;
+pub use file::FileBackend;
+pub use mem::MemBackend;
+pub use node::StorageNode;
+pub use store::FileStore;
+pub use timed::Timed;

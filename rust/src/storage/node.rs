@@ -1,0 +1,152 @@
+//! Storage node: the simulated NFS server holding virtual-disk files.
+//!
+//! The paper's infrastructure spreads chains over storage nodes (a chain
+//! can continue on another node when a disk grows past a physical disk —
+//! §3/§4.1 thin provisioning). A `StorageNode` is a named collection of
+//! files sharing one cost model and virtual clock; the coordinator's
+//! placement module assigns backing files to nodes.
+
+use super::backend::BackendRef;
+use super::mem::MemBackend;
+use super::timed::Timed;
+use crate::metrics::clock::{CostModel, VirtClock};
+use anyhow::{bail, Result};
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+/// A named storage server: files are created on it and served through its
+/// latency model.
+pub struct StorageNode {
+    pub name: String,
+    clock: Arc<VirtClock>,
+    cost: CostModel,
+    files: Mutex<HashMap<String, BackendRef>>,
+    /// physical capacity in bytes (thin-provisioning trigger); u64::MAX =
+    /// unlimited
+    pub capacity: u64,
+}
+
+impl StorageNode {
+    pub fn new(name: &str, clock: Arc<VirtClock>, cost: CostModel) -> Arc<Self> {
+        Arc::new(StorageNode {
+            name: name.to_string(),
+            clock,
+            cost,
+            files: Mutex::new(HashMap::new()),
+            capacity: u64::MAX,
+        })
+    }
+
+    pub fn with_capacity(
+        name: &str,
+        clock: Arc<VirtClock>,
+        cost: CostModel,
+        capacity: u64,
+    ) -> Arc<Self> {
+        Arc::new(StorageNode {
+            name: name.to_string(),
+            clock,
+            cost,
+            files: Mutex::new(HashMap::new()),
+            capacity,
+        })
+    }
+
+    /// Create a new (timed, in-memory) file on this node.
+    pub fn create_file(&self, name: &str) -> Result<BackendRef> {
+        let mut files = self.files.lock().unwrap();
+        if files.contains_key(name) {
+            bail!("file '{name}' already exists on node '{}'", self.name);
+        }
+        let backend: BackendRef = Arc::new(Timed::new(
+            MemBackend::new(),
+            Arc::clone(&self.clock),
+            self.cost,
+        ));
+        files.insert(name.to_string(), Arc::clone(&backend));
+        Ok(backend)
+    }
+
+    pub fn open_file(&self, name: &str) -> Result<BackendRef> {
+        self.files
+            .lock()
+            .unwrap()
+            .get(name)
+            .cloned()
+            .ok_or_else(|| anyhow::anyhow!("no file '{name}' on node '{}'", self.name))
+    }
+
+    pub fn delete_file(&self, name: &str) -> Result<()> {
+        match self.files.lock().unwrap().remove(name) {
+            Some(_) => Ok(()),
+            None => bail!("no file '{name}' on node '{}'", self.name),
+        }
+    }
+
+    pub fn file_names(&self) -> Vec<String> {
+        self.files.lock().unwrap().keys().cloned().collect()
+    }
+
+    /// Bytes physically stored across all files (capacity pressure).
+    pub fn used_bytes(&self) -> u64 {
+        self.files
+            .lock()
+            .unwrap()
+            .values()
+            .map(|f| f.stored_bytes())
+            .sum()
+    }
+
+    /// Would adding `bytes` exceed this node's capacity?
+    pub fn would_overflow(&self, bytes: u64) -> bool {
+        self.used_bytes().saturating_add(bytes) > self.capacity
+    }
+
+    pub fn clock(&self) -> &Arc<VirtClock> {
+        &self.clock
+    }
+
+    pub fn cost(&self) -> CostModel {
+        self.cost
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn node() -> Arc<StorageNode> {
+        StorageNode::new("s1", VirtClock::new(), CostModel::default())
+    }
+
+    #[test]
+    fn create_open_delete() {
+        let n = node();
+        let f = n.create_file("disk-0").unwrap();
+        f.write_at(b"x", 0).unwrap();
+        let g = n.open_file("disk-0").unwrap();
+        assert_eq!(g.len(), 1);
+        assert!(n.create_file("disk-0").is_err());
+        n.delete_file("disk-0").unwrap();
+        assert!(n.open_file("disk-0").is_err());
+    }
+
+    #[test]
+    fn io_charges_node_clock() {
+        let n = node();
+        let f = n.create_file("d").unwrap();
+        let t0 = n.clock().now();
+        f.write_at(&[0u8; 512], 0).unwrap();
+        assert!(n.clock().now() > t0);
+    }
+
+    #[test]
+    fn capacity_accounting() {
+        let clock = VirtClock::new();
+        let n = StorageNode::with_capacity("tiny", clock, CostModel::default(), 128 << 10);
+        let f = n.create_file("d").unwrap();
+        f.write_at(&[1u8; 64 << 10], 0).unwrap();
+        assert!(!n.would_overflow(0));
+        assert!(n.would_overflow(128 << 10));
+    }
+}

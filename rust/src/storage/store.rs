@@ -1,0 +1,45 @@
+//! `FileStore`: the namespace abstraction chains are opened through —
+//! a single [`super::node::StorageNode`] or a multi-node
+//! [`crate::coordinator::placement::NodeSet`] (chains can span storage
+//! servers, §3 thin provisioning).
+
+use super::backend::BackendRef;
+use super::node::StorageNode;
+use anyhow::Result;
+
+/// A namespace of virtual-disk files.
+pub trait FileStore: Send + Sync {
+    fn create_file(&self, name: &str) -> Result<BackendRef>;
+    fn open_file(&self, name: &str) -> Result<BackendRef>;
+    fn delete_file(&self, name: &str) -> Result<()>;
+}
+
+impl<T: FileStore + ?Sized> FileStore for std::sync::Arc<T> {
+    fn create_file(&self, name: &str) -> Result<BackendRef> {
+        (**self).create_file(name)
+    }
+
+    fn open_file(&self, name: &str) -> Result<BackendRef> {
+        (**self).open_file(name)
+    }
+
+    fn delete_file(&self, name: &str) -> Result<()> {
+        (**self).delete_file(name)
+    }
+}
+
+impl FileStore for StorageNode {
+    fn create_file(&self, name: &str) -> Result<BackendRef> {
+        // inherent methods take precedence in resolution, so these calls
+        // are not recursive
+        StorageNode::create_file(self, name)
+    }
+
+    fn open_file(&self, name: &str) -> Result<BackendRef> {
+        StorageNode::open_file(self, name)
+    }
+
+    fn delete_file(&self, name: &str) -> Result<()> {
+        StorageNode::delete_file(self, name)
+    }
+}

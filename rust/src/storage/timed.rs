@@ -1,0 +1,104 @@
+//! Latency-charging wrapper: the Eq. 1 cost model applied to a backend.
+//!
+//! Every `read_at`/`write_at`/`charge` advances the shared virtual clock by
+//! `T_L + T_D + len/bandwidth` — one software/network hop plus one device
+//! access plus the transfer. This is the NFS-served SSD of the paper's
+//! testbed, reduced to its cost structure.
+
+use super::backend::Backend;
+use crate::metrics::clock::{CostModel, VirtClock};
+use anyhow::Result;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+/// Backend decorator charging virtual time per operation.
+pub struct Timed<B: Backend> {
+    inner: B,
+    clock: Arc<VirtClock>,
+    cost: CostModel,
+    ios: AtomicU64,
+    bytes: AtomicU64,
+}
+
+impl<B: Backend> Timed<B> {
+    pub fn new(inner: B, clock: Arc<VirtClock>, cost: CostModel) -> Self {
+        Timed { inner, clock, cost, ios: AtomicU64::new(0), bytes: AtomicU64::new(0) }
+    }
+
+    /// Total device I/O operations issued through this file.
+    pub fn io_count(&self) -> u64 {
+        self.ios.load(Ordering::Relaxed)
+    }
+
+    /// Total bytes transferred through this file.
+    pub fn byte_count(&self) -> u64 {
+        self.bytes.load(Ordering::Relaxed)
+    }
+
+    fn pay(&self, len: u64) {
+        self.clock.advance(self.cost.io_ns(len));
+        self.ios.fetch_add(1, Ordering::Relaxed);
+        self.bytes.fetch_add(len, Ordering::Relaxed);
+    }
+}
+
+impl<B: Backend> Backend for Timed<B> {
+    fn read_at(&self, buf: &mut [u8], off: u64) -> Result<()> {
+        self.pay(buf.len() as u64);
+        self.inner.read_at(buf, off)
+    }
+
+    fn write_at(&self, data: &[u8], off: u64) -> Result<()> {
+        self.pay(data.len() as u64);
+        self.inner.write_at(data, off)
+    }
+
+    fn len(&self) -> u64 {
+        self.inner.len()
+    }
+
+    fn truncate_to(&self, len: u64) -> Result<()> {
+        // metadata-only op: one layer traversal, no device transfer
+        self.clock.advance(self.cost.t_layers);
+        self.inner.truncate_to(len)
+    }
+
+    fn charge(&self, _off: u64, len: u64) {
+        self.pay(len);
+    }
+
+    fn stored_bytes(&self) -> u64 {
+        self.inner.stored_bytes()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::storage::mem::MemBackend;
+
+    #[test]
+    fn charges_reads_and_writes() {
+        let clock = VirtClock::new();
+        let cost = CostModel::default();
+        let b = Timed::new(MemBackend::new(), clock.clone(), cost);
+        let t0 = clock.now();
+        b.write_at(&[0u8; 4096], 0).unwrap();
+        let after_write = clock.now();
+        assert_eq!(after_write - t0, cost.io_ns(4096));
+        let mut buf = [0u8; 64 << 10];
+        b.read_at(&mut buf, 0).unwrap();
+        assert_eq!(clock.now() - after_write, cost.io_ns(64 << 10));
+        assert_eq!(b.io_count(), 2);
+        assert_eq!(b.byte_count(), 4096 + (64 << 10));
+    }
+
+    #[test]
+    fn charge_without_data() {
+        let clock = VirtClock::new();
+        let b = Timed::new(MemBackend::new(), clock.clone(), CostModel::default());
+        b.charge(0, 64 << 10);
+        assert!(clock.now() > 0);
+        assert_eq!(b.len(), 0); // nothing stored
+    }
+}

@@ -1,0 +1,92 @@
+//! Substrate utilities built from scratch for the offline environment:
+//! a minimal JSON reader (AOT manifest), a deterministic PRNG, a tiny
+//! property-testing driver, size/format helpers and summary statistics.
+
+pub mod json;
+pub mod prop;
+pub mod rng;
+pub mod stats;
+
+/// Format a byte count using binary units (the units the paper plots in).
+pub fn human_bytes(n: u64) -> String {
+    const UNITS: [&str; 6] = ["B", "KiB", "MiB", "GiB", "TiB", "PiB"];
+    let mut v = n as f64;
+    let mut u = 0;
+    while v >= 1024.0 && u + 1 < UNITS.len() {
+        v /= 1024.0;
+        u += 1;
+    }
+    if u == 0 {
+        format!("{n} B")
+    } else {
+        format!("{v:.1} {}", UNITS[u])
+    }
+}
+
+/// Format nanoseconds with an adaptive unit.
+pub fn human_ns(ns: u64) -> String {
+    match ns {
+        0..=999 => format!("{ns} ns"),
+        1_000..=999_999 => format!("{:.1} µs", ns as f64 / 1e3),
+        1_000_000..=999_999_999 => format!("{:.2} ms", ns as f64 / 1e6),
+        _ => format!("{:.3} s", ns as f64 / 1e9),
+    }
+}
+
+/// Parse sizes like `64K`, `2M`, `50G`, `4096` (binary multipliers).
+pub fn parse_size(s: &str) -> Option<u64> {
+    let s = s.trim();
+    let (num, mult) = match s.chars().last()? {
+        'k' | 'K' => (&s[..s.len() - 1], 1u64 << 10),
+        'm' | 'M' => (&s[..s.len() - 1], 1u64 << 20),
+        'g' | 'G' => (&s[..s.len() - 1], 1u64 << 30),
+        't' | 'T' => (&s[..s.len() - 1], 1u64 << 40),
+        _ => (s, 1),
+    };
+    let num = num.trim();
+    if let Ok(v) = num.parse::<u64>() {
+        return Some(v * mult);
+    }
+    num.parse::<f64>().ok().map(|v| (v * mult as f64) as u64)
+}
+
+/// Integer division rounding up.
+pub const fn div_ceil(a: u64, b: u64) -> u64 {
+    (a + b - 1) / b
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn human_bytes_units() {
+        assert_eq!(human_bytes(17), "17 B");
+        assert_eq!(human_bytes(2048), "2.0 KiB");
+        assert_eq!(human_bytes(50 << 30), "50.0 GiB");
+    }
+
+    #[test]
+    fn human_ns_units() {
+        assert_eq!(human_ns(80_000), "80.0 µs");
+        assert_eq!(human_ns(100), "100 ns");
+        assert_eq!(human_ns(1_500_000), "1.50 ms");
+    }
+
+    #[test]
+    fn parse_size_suffixes() {
+        assert_eq!(parse_size("64K"), Some(64 << 10));
+        assert_eq!(parse_size("50G"), Some(50 << 30));
+        assert_eq!(parse_size("4096"), Some(4096));
+        assert_eq!(parse_size("2.5M"), Some((2.5 * 1024.0 * 1024.0) as u64));
+        assert_eq!(parse_size("bogus"), None);
+    }
+
+    #[test]
+    fn div_ceil_edges() {
+        assert_eq!(div_ceil(0, 8), 0);
+        assert_eq!(div_ceil(1, 8), 1);
+        assert_eq!(div_ceil(8, 8), 1);
+        assert_eq!(div_ceil(9, 8), 2);
+    }
+}

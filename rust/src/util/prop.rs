@@ -1,0 +1,54 @@
+//! Tiny property-testing driver (no `proptest` in the offline crate set).
+//!
+//! `forall(seed, cases, |rng| ...)` runs a closure over `cases` independent
+//! deterministic RNG streams; on failure it reports the failing case seed so
+//! the case can be replayed exactly (`replay(case_seed, |rng| ...)`).
+//! No shrinking — cases are kept small instead.
+
+use super::rng::Rng;
+
+/// Run `f` for `cases` random cases. Panics with the case seed on failure.
+pub fn forall(seed: u64, cases: u32, f: impl Fn(&mut Rng)) {
+    for case in 0..cases {
+        let case_seed = seed ^ ((case as u64) << 32) ^ 0xA5A5_5A5A;
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let mut rng = Rng::new(case_seed);
+            f(&mut rng);
+        }));
+        if let Err(e) = result {
+            eprintln!(
+                "property failed at case {case}/{cases}; replay with \
+                 util::prop::replay({case_seed:#x}, ...)"
+            );
+            std::panic::resume_unwind(e);
+        }
+    }
+}
+
+/// Re-run a single failing case by its reported seed.
+pub fn replay(case_seed: u64, f: impl Fn(&mut Rng)) {
+    let mut rng = Rng::new(case_seed);
+    f(&mut rng);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_trivial_property() {
+        forall(1, 50, |rng| {
+            let a = rng.below(100);
+            let b = rng.below(100);
+            assert_eq!(a + b, b + a);
+        });
+    }
+
+    #[test]
+    fn reports_failures() {
+        let r = std::panic::catch_unwind(|| {
+            forall(2, 50, |rng| assert!(rng.below(10) < 9));
+        });
+        assert!(r.is_err());
+    }
+}

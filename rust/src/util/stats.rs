@@ -1,0 +1,151 @@
+//! Summary statistics for the bench harness and reports.
+
+/// Online summary of a sample set (used by the bench harness).
+#[derive(Clone, Debug, Default)]
+pub struct Summary {
+    samples: Vec<f64>,
+}
+
+impl Summary {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn add(&mut self, v: f64) {
+        self.samples.push(v);
+    }
+
+    pub fn len(&self) -> usize {
+        self.samples.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.samples.is_empty()
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.samples.is_empty() {
+            return 0.0;
+        }
+        self.samples.iter().sum::<f64>() / self.samples.len() as f64
+    }
+
+    pub fn stddev(&self) -> f64 {
+        let n = self.samples.len();
+        if n < 2 {
+            return 0.0;
+        }
+        let m = self.mean();
+        let var =
+            self.samples.iter().map(|v| (v - m) * (v - m)).sum::<f64>() / (n - 1) as f64;
+        var.sqrt()
+    }
+
+    pub fn min(&self) -> f64 {
+        self.samples.iter().copied().fold(f64::INFINITY, f64::min)
+    }
+
+    pub fn max(&self) -> f64 {
+        self.samples.iter().copied().fold(f64::NEG_INFINITY, f64::max)
+    }
+
+    /// Percentile by nearest-rank on a sorted copy (q in [0, 100]).
+    pub fn percentile(&self, q: f64) -> f64 {
+        if self.samples.is_empty() {
+            return 0.0;
+        }
+        let mut s = self.samples.clone();
+        s.sort_by(|a, b| a.total_cmp(b));
+        let rank = ((q / 100.0) * (s.len() as f64 - 1.0)).round() as usize;
+        s[rank.min(s.len() - 1)]
+    }
+
+    pub fn median(&self) -> f64 {
+        self.percentile(50.0)
+    }
+}
+
+/// Empirical CDF over u64 values — the §3 characterization figures plot
+/// CDFs, so this is the common output type of `characterize::`.
+#[derive(Clone, Debug)]
+pub struct Cdf {
+    /// sorted values
+    pub values: Vec<u64>,
+}
+
+impl Cdf {
+    pub fn new(mut values: Vec<u64>) -> Self {
+        values.sort_unstable();
+        Cdf { values }
+    }
+
+    /// Fraction of samples <= v.
+    pub fn at(&self, v: u64) -> f64 {
+        if self.values.is_empty() {
+            return 0.0;
+        }
+        self.values.partition_point(|&x| x <= v) as f64 / self.values.len() as f64
+    }
+
+    /// Value at the given quantile (q in [0,1]).
+    pub fn quantile(&self, q: f64) -> u64 {
+        if self.values.is_empty() {
+            return 0;
+        }
+        let rank = (q * (self.values.len() as f64 - 1.0)).round() as usize;
+        self.values[rank.min(self.values.len() - 1)]
+    }
+
+    /// Sampled (value, fraction) points for printing a figure-like series.
+    pub fn series(&self, points: usize) -> Vec<(u64, f64)> {
+        if self.values.is_empty() {
+            return vec![];
+        }
+        (0..=points)
+            .map(|i| {
+                let q = i as f64 / points as f64;
+                let v = self.quantile(q);
+                (v, self.at(v))
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_basics() {
+        let mut s = Summary::new();
+        for v in [1.0, 2.0, 3.0, 4.0, 5.0] {
+            s.add(v);
+        }
+        assert_eq!(s.mean(), 3.0);
+        assert_eq!(s.median(), 3.0);
+        assert_eq!(s.min(), 1.0);
+        assert_eq!(s.max(), 5.0);
+        assert!((s.stddev() - 1.5811).abs() < 1e-3);
+    }
+
+    #[test]
+    fn percentiles() {
+        let mut s = Summary::new();
+        for v in 0..100 {
+            s.add(v as f64);
+        }
+        assert_eq!(s.percentile(0.0), 0.0);
+        assert_eq!(s.percentile(100.0), 99.0);
+        assert!((s.percentile(90.0) - 89.0).abs() <= 1.0);
+    }
+
+    #[test]
+    fn cdf_fractions() {
+        let c = Cdf::new(vec![1, 2, 2, 3, 10]);
+        assert_eq!(c.at(0), 0.0);
+        assert_eq!(c.at(2), 0.6);
+        assert_eq!(c.at(10), 1.0);
+        assert_eq!(c.quantile(0.0), 1);
+        assert_eq!(c.quantile(1.0), 10);
+    }
+}

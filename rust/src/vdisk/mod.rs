@@ -1,0 +1,77 @@
+//! Virtual-disk drivers: the two request paths the paper compares.
+//!
+//! * [`vanilla::VanillaDriver`] — §2's recursive design: one L2 slice
+//!   cache per backing file, chain walked file-by-file from the active
+//!   volume ("Qemu manages a chain snapshot-by-snapshot").
+//! * [`scalable::ScalableDriver`] — §5's SQEMU design: a single unified
+//!   cache over the chain plus direct access to the owning backing file
+//!   via the `backing_file_index` stamps; falls back to a
+//!   correction-driven walk on unstamped (vanilla) images, preserving
+//!   backward compatibility.
+//!
+//! Both implement [`Driver`] and must return byte-identical data for any
+//! chain (`tests/driver_equivalence.rs`); they differ only in cost
+//! structure (virtual time, event counters, memory footprint).
+
+pub mod common;
+pub mod scalable;
+pub mod vanilla;
+
+use crate::metrics::counters::CounterSnapshot;
+use crate::metrics::histogram::Histogram;
+use crate::qcow::Chain;
+use anyhow::Result;
+
+/// Which request-path design a VM runs on.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DriverKind {
+    /// vQemu: per-backing-file caches + recursive chain walk.
+    Vanilla,
+    /// SQEMU: unified cache + direct access (§5).
+    Scalable,
+}
+
+impl DriverKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            DriverKind::Vanilla => "vqemu",
+            DriverKind::Scalable => "sqemu",
+        }
+    }
+}
+
+/// A guest-facing block driver over a snapshot chain.
+pub trait Driver: Send {
+    /// Read `buf.len()` bytes at virtual offset `voff`. Unallocated
+    /// ranges read as zeros.
+    fn read(&mut self, voff: u64, buf: &mut [u8]) -> Result<()>;
+
+    /// Write at virtual offset `voff` (copy-on-write into the active
+    /// volume when the cluster is owned by a backing file).
+    fn write(&mut self, voff: u64, data: &[u8]) -> Result<()>;
+
+    /// Write back all dirty cache slices.
+    fn flush(&mut self) -> Result<()>;
+
+    fn kind(&self) -> DriverKind;
+
+    fn chain(&self) -> &Chain;
+
+    /// Mutable access to the chain for paused-VM operations (snapshot,
+    /// streaming). Callers must `flush()` first and `reopen()` after.
+    fn chain_mut(&mut self) -> &mut Chain;
+
+    /// Rebuild caches and per-snapshot state after the chain changed
+    /// shape (snapshot appended a volume / streaming dropped files).
+    fn reopen(&mut self) -> Result<()>;
+
+    /// Low-level event counters (§6.3): hits, misses, hit-unallocated,
+    /// per-file lookup distribution.
+    fn counters(&self) -> CounterSnapshot;
+
+    /// Distribution of cache lookup latencies in virtual ns (Fig 14).
+    fn lookup_latency(&self) -> Histogram;
+
+    /// Live cache bytes (for reports; the accountant tracks the total).
+    fn cache_bytes(&self) -> u64;
+}

@@ -1,0 +1,395 @@
+//! The SQEMU driver (§5): direct access + unified indexing cache.
+//!
+//! On a fully stamped chain a resolve is O(1) in chain length: one probe
+//! of the unified cache; a miss fetches a single slice from the active
+//! volume (whose table is complete after the §5.4 snapshot copy); an
+//! entry stamped for a backing file is served directly from that file.
+//!
+//! On unstamped (vanilla) images the driver stays correct but degrades to
+//! a correction-driven chain walk — the §5.1 backward-compatibility
+//! story: "existing Qcow2 images lacking our format's metadata should
+//! still work ... without performance/memory consumption gains".
+
+use super::common::DriverBase;
+use super::{Driver, DriverKind};
+use crate::cache::{CacheConfig, UnifiedCache};
+use crate::metrics::clock::{CostModel, VirtClock};
+use crate::metrics::counters::CounterSnapshot;
+use crate::metrics::histogram::Histogram;
+use crate::metrics::memory::MemoryAccountant;
+use crate::qcow::Chain;
+use anyhow::Result;
+use std::sync::Arc;
+
+pub struct ScalableDriver {
+    base: DriverBase,
+    cache: UnifiedCache,
+    cache_cfg: CacheConfig,
+    /// Active volume's table is complete (all-sqemu chain): misses need
+    /// only consult the active volume; `Some(None)` lookups are
+    /// definitive holes.
+    complete_index: bool,
+}
+
+impl ScalableDriver {
+    pub fn new(
+        chain: Chain,
+        cache_cfg: CacheConfig,
+        clock: Arc<VirtClock>,
+        cost: CostModel,
+        acct: Arc<MemoryAccountant>,
+    ) -> Self {
+        let active_index = (chain.len() - 1) as u16;
+        // a single-image chain is trivially complete
+        let complete_index = chain.active().has_bfi() || chain.len() == 1;
+        let cache = UnifiedCache::new(cache_cfg, active_index, &acct);
+        ScalableDriver {
+            base: DriverBase::new(chain, clock, cost, acct),
+            cache,
+            cache_cfg,
+            complete_index,
+        }
+    }
+
+    /// Fetch the slice covering `vcluster` from file `from_idx` into the
+    /// unified cache (insert on the first fetch, §5.3 correction
+    /// otherwise). Returns false if that file has no table for the range.
+    fn fetch_slice_from(&mut self, vcluster: u64, from_idx: u16) -> Result<bool> {
+        let cfg = *self.cache.cfg();
+        let key = cfg.slice_key(vcluster);
+        let img = self
+            .base
+            .chain
+            .get(from_idx)
+            .ok_or_else(|| anyhow::anyhow!("no file {from_idx}"))?;
+        let (l1_idx, _) = img.geom().split_vcluster(vcluster);
+        let l2_off = img.l1_entry(l1_idx);
+        if l2_off == 0 {
+            return Ok(false);
+        }
+        let slice_start = cfg.slice_base(key) % img.geom().entries_per_l2();
+        let entries = img.read_l2_slice(l2_off, slice_start, cfg.slice_entries)?;
+        if self.cache.contains(key) {
+            self.cache.correct(key, &entries, from_idx);
+        } else if let Some((ek, evicted)) = self.cache.insert_from(key, &entries, from_idx)
+        {
+            self.writeback(ek, &evicted)?;
+        }
+        Ok(true)
+    }
+
+    /// Insert an all-zero slice (active volume has no table for the range
+    /// on a complete chain: definitive hole).
+    fn insert_hole_slice(&mut self, vcluster: u64) -> Result<()> {
+        let cfg = *self.cache.cfg();
+        let key = cfg.slice_key(vcluster);
+        let zeros = vec![0u64; cfg.slice_entries as usize];
+        let active_index = self.cache.active_index();
+        if let Some((ek, evicted)) = self.cache.insert_from(key, &zeros, active_index) {
+            self.writeback(ek, &evicted)?;
+        }
+        Ok(())
+    }
+
+    /// §5.3 resolution.
+    fn resolve(&mut self, vcluster: u64) -> Result<Option<(u16, u64)>> {
+        let active_index = self.cache.active_index();
+        self.base.counters.lookup_on(active_index as usize);
+        self.base.charge_ram();
+        // 1) probe the unified cache — one lookup on the hit path (§Perf:
+        // the old contains+lookup double probe cost ~6% of a warm read)
+        let mut looked = self.cache.lookup(vcluster);
+        if looked.is_none() {
+            // cache miss: one fetch from the active volume
+            if self.fetch_slice_from(vcluster, active_index)? {
+                self.base.counters.miss();
+            } else {
+                // active volume has no table here: definitive hole on a
+                // complete chain; on a vanilla chain the correction walk
+                // below consults the backing files
+                self.insert_hole_slice(vcluster)?;
+            }
+            self.base.charge_ram();
+            looked = self.cache.lookup(vcluster);
+        }
+        match looked.expect("slice resident") {
+            Some((bfi, off)) if bfi == active_index => {
+                self.base.counters.hit();
+                Ok(Some((bfi, off)))
+            }
+            Some((bfi, off)) => {
+                // owned by a backing file: "cache hit unallocated" —
+                // direct access, O(1) regardless of chain position (§5.3)
+                self.base.counters.unallocated();
+                self.base.charge_ram();
+                Ok(Some((bfi, off)))
+            }
+            None if self.complete_index => Ok(None),
+            None => {
+                // backward-compat path: walk backing files with cache
+                // correction until the entry resolves or the chain ends
+                self.base.counters.unallocated();
+                for idx in (0..active_index).rev() {
+                    self.base.counters.lookup_on(idx as usize);
+                    if self.fetch_slice_from(vcluster, idx)? {
+                        self.base.counters.miss();
+                        self.base.charge_ram();
+                        if let Some(Some((bfi, off))) = self.cache.lookup(vcluster) {
+                            self.base.counters.unallocated();
+                            return Ok(Some((bfi, off)));
+                        }
+                    }
+                }
+                Ok(None)
+            }
+        }
+    }
+
+    fn writeback(&self, key: u64, entries: &[u64]) -> Result<()> {
+        let active = self.base.chain.active();
+        let cfg = self.cache.cfg();
+        let vc = cfg.slice_base(key);
+        let (l1_idx, _) = active.geom().split_vcluster(vc);
+        let l2_off = active.ensure_l2(l1_idx)?;
+        let slice_start = cfg.slice_base(key) % active.geom().entries_per_l2();
+        active.write_l2_slice(l2_off, slice_start, entries)
+    }
+}
+
+impl Driver for ScalableDriver {
+    fn read(&mut self, voff: u64, buf: &mut [u8]) -> Result<()> {
+        let mut cursor = 0usize;
+        for (vc, within, len) in self.base.segments(voff, buf.len()) {
+            let (resolved, dt) = {
+                let t0 = self.base.clock.now();
+                let r = self.resolve(vc)?;
+                (r, self.base.clock.now() - t0)
+            };
+            self.base.record_lookup(dt);
+            self.base
+                .read_segment(resolved, within, &mut buf[cursor..cursor + len])?;
+            cursor += len;
+        }
+        Ok(())
+    }
+
+    fn write(&mut self, voff: u64, data: &[u8]) -> Result<()> {
+        let active_index = self.cache.active_index();
+        let mut cursor = 0usize;
+        for (vc, within, len) in self.base.segments(voff, data.len()) {
+            let (resolved, dt) = {
+                let t0 = self.base.clock.now();
+                let r = self.resolve(vc)?;
+                (r, self.base.clock.now() - t0)
+            };
+            self.base.record_lookup(dt);
+            let chunk = &data[cursor..cursor + len];
+            match resolved {
+                Some((bfi, off)) if bfi == active_index => {
+                    self.base.chain.active().write_data(off, within, chunk)?;
+                }
+                other => {
+                    let new_off = self.base.cow_write(vc, other, within, chunk)?;
+                    self.cache.record_write(vc, new_off);
+                }
+            }
+            cursor += len;
+        }
+        Ok(())
+    }
+
+    fn flush(&mut self) -> Result<()> {
+        for (key, entries) in self.cache.drain() {
+            self.writeback(key, &entries)?;
+        }
+        Ok(())
+    }
+
+    fn kind(&self) -> DriverKind {
+        DriverKind::Scalable
+    }
+
+    fn chain(&self) -> &Chain {
+        &self.base.chain
+    }
+
+    fn chain_mut(&mut self) -> &mut Chain {
+        &mut self.base.chain
+    }
+
+    fn reopen(&mut self) -> Result<()> {
+        let active_index = (self.base.chain.len() - 1) as u16;
+        self.complete_index =
+            self.base.chain.active().has_bfi() || self.base.chain.len() == 1;
+        self.cache = UnifiedCache::new(self.cache_cfg, active_index, &self.base.acct);
+        self.base.refresh_mem();
+        Ok(())
+    }
+
+    fn counters(&self) -> CounterSnapshot {
+        self.base.counters.snapshot()
+    }
+
+    fn lookup_latency(&self) -> Histogram {
+        self.base.lookup_hist.lock().unwrap().clone()
+    }
+
+    fn cache_bytes(&self) -> u64 {
+        self.cache.resident_bytes()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::qcow::entry::L2Entry;
+    use crate::qcow::image::{DataMode, Image};
+    use crate::qcow::layout::{Geometry, FEATURE_BFI};
+    use crate::qcow::snapshot;
+    use crate::storage::node::StorageNode;
+
+    fn sq_chain(n_snapshots: usize) -> (Arc<StorageNode>, Chain, Arc<VirtClock>) {
+        let clock = VirtClock::new();
+        let node = StorageNode::new("s", clock.clone(), CostModel::default());
+        let b = node.create_file("img-0").unwrap();
+        let img = Image::create(
+            "img-0",
+            b,
+            Geometry::new(16, 16 << 20).unwrap(),
+            FEATURE_BFI,
+            0,
+            None,
+            DataMode::Real,
+        )
+        .unwrap();
+        let mut chain = Chain::new(Arc::new(img)).unwrap();
+        for i in 0..n_snapshots {
+            let img = chain.active();
+            let off = img.alloc_data_cluster().unwrap();
+            img.write_data(off, 0, &[i as u8 + 1; 32]).unwrap();
+            img.set_l2_entry(
+                i as u64,
+                L2Entry::local(off, Some(img.chain_index())),
+            )
+            .unwrap();
+            snapshot::snapshot_sqemu(&mut chain, &node, &format!("img-{}", i + 1))
+                .unwrap();
+        }
+        (node, chain, clock)
+    }
+
+    fn driver(chain: Chain, clock: Arc<VirtClock>) -> ScalableDriver {
+        ScalableDriver::new(
+            chain,
+            CacheConfig::new(32, 1 << 20),
+            clock,
+            CostModel::default(),
+            MemoryAccountant::new(),
+        )
+    }
+
+    #[test]
+    fn reads_layers_directly() {
+        let (_n, chain, clock) = sq_chain(3);
+        let mut d = driver(chain, clock);
+        let cs = 64 << 10;
+        let mut buf = [0u8; 4];
+        for i in 0..3u64 {
+            d.read(i * cs, &mut buf).unwrap();
+            assert_eq!(buf, [i as u8 + 1; 4], "layer {i}");
+        }
+        d.read(9 * cs, &mut buf).unwrap();
+        assert_eq!(buf, [0; 4]);
+    }
+
+    #[test]
+    fn lookups_touch_only_the_unified_cache() {
+        let (_n, chain, clock) = sq_chain(3);
+        let mut d = driver(chain, clock);
+        let mut buf = [0u8; 1];
+        d.read(0, &mut buf).unwrap(); // deepest layer
+        let s = d.counters();
+        // all probes attributed to the active index; no per-file walk
+        assert_eq!(s.per_file_lookups.iter().filter(|&&c| c > 0).count(), 1);
+        assert_eq!(s.misses, 1, "one slice fetch from the active volume");
+        assert_eq!(s.hit_unallocated, 1, "direct access to backing file");
+    }
+
+    #[test]
+    fn one_miss_per_slice_regardless_of_owner() {
+        let (_n, chain, clock) = sq_chain(4);
+        let mut d = driver(chain, clock);
+        let cs = 64 << 10;
+        let mut buf = [0u8; 1];
+        // clusters 0..4 are owned by 4 different layers but share a slice
+        for i in 0..4u64 {
+            d.read(i * cs, &mut buf).unwrap();
+        }
+        assert_eq!(d.counters().misses, 1);
+        assert_eq!(d.counters().hit_unallocated, 4);
+    }
+
+    #[test]
+    fn write_cows_and_future_reads_hit() {
+        let (_n, chain, clock) = sq_chain(2);
+        let mut d = driver(chain, clock);
+        d.write(3, &[0xBB; 4]).unwrap();
+        let mut buf = [0u8; 8];
+        d.read(0, &mut buf).unwrap();
+        assert_eq!(&buf[..3], &[1; 3]);
+        assert_eq!(&buf[3..7], &[0xBB; 4]);
+        let before = d.counters().hit_unallocated;
+        d.read(0, &mut buf).unwrap();
+        let after = d.counters();
+        assert_eq!(after.hit_unallocated, before, "now owned by active");
+        assert!(after.hits >= 1);
+    }
+
+    #[test]
+    fn vanilla_chain_fallback_is_correct() {
+        // build a vanilla (unstamped) chain, read through ScalableDriver
+        let clock = VirtClock::new();
+        let node = StorageNode::new("s", clock.clone(), CostModel::default());
+        let b = node.create_file("img-0").unwrap();
+        let img = Image::create(
+            "img-0",
+            b,
+            Geometry::new(16, 16 << 20).unwrap(),
+            0,
+            0,
+            None,
+            DataMode::Real,
+        )
+        .unwrap();
+        let mut chain = Chain::new(Arc::new(img)).unwrap();
+        for i in 0..2 {
+            let img = chain.active();
+            let off = img.alloc_data_cluster().unwrap();
+            img.write_data(off, 0, &[i as u8 + 1; 16]).unwrap();
+            img.set_l2_entry(i as u64, L2Entry::local(off, None)).unwrap();
+            snapshot::snapshot_vanilla(&mut chain, &node, &format!("img-{}", i + 1))
+                .unwrap();
+        }
+        let mut d = driver(chain, clock);
+        assert!(!d.complete_index);
+        let cs = 64 << 10;
+        let mut buf = [0u8; 4];
+        d.read(0, &mut buf).unwrap();
+        assert_eq!(buf, [1; 4]);
+        d.read(cs, &mut buf).unwrap();
+        assert_eq!(buf, [2; 4]);
+        d.read(5 * cs, &mut buf).unwrap();
+        assert_eq!(buf, [0; 4]);
+    }
+
+    #[test]
+    fn flush_writes_corrections_back() {
+        let (_n, chain, clock) = sq_chain(2);
+        let mut d = driver(chain, clock);
+        d.write(0, &[9; 4]).unwrap();
+        d.flush().unwrap();
+        let e = d.chain().active().l2_entry(0).unwrap();
+        assert!(e.is_allocated_here());
+        assert_eq!(e.bfi(), Some(d.chain().active().chain_index()));
+    }
+}

@@ -1,0 +1,352 @@
+//! The vanilla (vQemu) driver: §2's recursive, per-backing-file design.
+//!
+//! Resolution walks the chain from the active volume downwards. Each file
+//! has its own independently managed L2 slice cache; a lookup probes the
+//! file's cache (hit / hit-unallocated), fetching the slice from that
+//! file on a miss — Fig 3's "journey of an IO request", faithfully. Cost:
+//! O(chain length) cache probes (and potentially fetches) per request,
+//! and per-file cache memory — the two §4 scalability problems.
+
+use super::common::DriverBase;
+use super::{Driver, DriverKind};
+use crate::cache::{CacheConfig, SliceCache};
+use crate::metrics::clock::{CostModel, VirtClock};
+use crate::metrics::counters::CounterSnapshot;
+use crate::metrics::histogram::Histogram;
+use crate::metrics::memory::MemoryAccountant;
+use crate::qcow::entry::L2Entry;
+use crate::qcow::Chain;
+use anyhow::Result;
+use std::sync::Arc;
+
+pub struct VanillaDriver {
+    base: DriverBase,
+    /// One cache per file, index-aligned with the chain ("one cache for
+    /// the active volume and one cache per backing file", §2).
+    caches: Vec<SliceCache>,
+    per_file_cache: CacheConfig,
+}
+
+impl VanillaDriver {
+    pub fn new(
+        chain: Chain,
+        per_file_cache: CacheConfig,
+        clock: Arc<VirtClock>,
+        cost: CostModel,
+        acct: Arc<MemoryAccountant>,
+    ) -> Self {
+        let caches = chain
+            .images()
+            .iter()
+            .map(|_| SliceCache::new(per_file_cache, &acct))
+            .collect();
+        VanillaDriver {
+            base: DriverBase::new(chain, clock, cost, acct),
+            caches,
+            per_file_cache,
+        }
+    }
+
+    /// Resolve one virtual cluster by walking the chain (Fig 3).
+    fn resolve(&mut self, vcluster: u64) -> Result<Option<(u16, u64)>> {
+        let n = self.base.chain.len();
+        let cfg = *self.caches[0].cfg();
+        let key = cfg.slice_key(vcluster);
+        let idx_in_slice = cfg.slice_index(vcluster) as usize;
+        for idx in (0..n).rev() {
+            self.base.counters.lookup_on(idx);
+            self.base.charge_ram();
+            // 1) probe this file's cache
+            if let Some(slice) = self.caches[idx].get(key) {
+                let e = L2Entry(slice.entries[idx_in_slice]);
+                match e.vanilla_view() {
+                    Some(off) => {
+                        self.base.counters.hit();
+                        return Ok(Some((idx as u16, off)));
+                    }
+                    None => {
+                        // "cache hit unallocated" -> move to the next
+                        // file: one Eq. 1 hop (T_F) of driver call chain
+                        self.base.counters.unallocated();
+                        self.base.charge_hop();
+                        continue;
+                    }
+                }
+            }
+            // 2) slice not cached: try to fetch it from this file
+            let img = &self.base.chain.images()[idx];
+            let (l1_idx, _) = img.geom().split_vcluster(vcluster);
+            let l2_off = img.l1_entry(l1_idx);
+            if l2_off == 0 {
+                // no L2 table at all in this file: nothing to fetch,
+                // move down the chain (in-RAM L1 check only)
+                continue;
+            }
+            // device fetch of the slice ("brought into the cache", §2)
+            let slice_start = cfg.slice_base(key) % img.geom().entries_per_l2();
+            let entries = img.read_l2_slice(l2_off, slice_start, cfg.slice_entries)?;
+            self.base.counters.miss();
+            if let Some((ek, evicted)) = self.caches[idx].insert(key, entries) {
+                // only the active volume's cache can hold dirty slices
+                if evicted.dirty && idx == n - 1 {
+                    self.writeback(idx, ek, &evicted.entries)?;
+                }
+            }
+            // 3) re-examine the (now cached) entry — Fig 3 steps 5-6
+            self.base.charge_ram();
+            let slice = self.caches[idx].get(key).expect("just inserted");
+            let e = L2Entry(slice.entries[idx_in_slice]);
+            match e.vanilla_view() {
+                Some(off) => {
+                    self.base.counters.hit();
+                    return Ok(Some((idx as u16, off)));
+                }
+                None => {
+                    self.base.counters.unallocated();
+                    self.base.charge_hop();
+                }
+            }
+        }
+        Ok(None)
+    }
+
+    fn writeback(&self, idx: usize, key: u64, entries: &[u64]) -> Result<()> {
+        let img = &self.base.chain.images()[idx];
+        let cfg = self.caches[idx].cfg();
+        let vc = cfg.slice_base(key);
+        let (l1_idx, _) = img.geom().split_vcluster(vc);
+        let l2_off = img.ensure_l2(l1_idx)?;
+        let slice_start = cfg.slice_base(key) % img.geom().entries_per_l2();
+        img.write_l2_slice(l2_off, slice_start, entries)
+    }
+
+    /// Update the active volume's cached slice after a write (the on-disk
+    /// entry is updated write-through by `cow_write`).
+    fn update_cache_after_write(&mut self, vcluster: u64, new_off: u64) {
+        let n = self.base.chain.len();
+        let cfg = *self.caches[n - 1].cfg();
+        let key = cfg.slice_key(vcluster);
+        let idx_in_slice = cfg.slice_index(vcluster) as usize;
+        let active = self.base.chain.active();
+        let stamp = if active.has_bfi() {
+            Some(active.chain_index())
+        } else {
+            None
+        };
+        if let Some(slice) = self.caches[n - 1].get(key) {
+            slice.entries[idx_in_slice] = L2Entry::local(new_off, stamp).raw();
+            // entry already persisted write-through; keep slice clean
+        }
+    }
+}
+
+impl Driver for VanillaDriver {
+    fn read(&mut self, voff: u64, buf: &mut [u8]) -> Result<()> {
+        let mut cursor = 0usize;
+        for (vc, within, len) in self.base.segments(voff, buf.len()) {
+            let (resolved, dt) = {
+                let t0 = self.base.clock.now();
+                let r = self.resolve(vc)?;
+                (r, self.base.clock.now() - t0)
+            };
+            self.base.record_lookup(dt);
+            self.base
+                .read_segment(resolved, within, &mut buf[cursor..cursor + len])?;
+            cursor += len;
+        }
+        Ok(())
+    }
+
+    fn write(&mut self, voff: u64, data: &[u8]) -> Result<()> {
+        let mut cursor = 0usize;
+        let active_idx = (self.base.chain.len() - 1) as u16;
+        for (vc, within, len) in self.base.segments(voff, data.len()) {
+            let (resolved, dt) = {
+                let t0 = self.base.clock.now();
+                let r = self.resolve(vc)?;
+                (r, self.base.clock.now() - t0)
+            };
+            self.base.record_lookup(dt);
+            let chunk = &data[cursor..cursor + len];
+            match resolved {
+                Some((bfi, off)) if bfi == active_idx => {
+                    // in-place write to the active volume
+                    self.base.chain.active().write_data(off, within, chunk)?;
+                    let key = self.caches[0].cfg().slice_key(vc);
+                    self.caches[active_idx as usize].mark_dirty(key);
+                }
+                other => {
+                    let new_off = self.base.cow_write(vc, other, within, chunk)?;
+                    self.update_cache_after_write(vc, new_off);
+                }
+            }
+            cursor += len;
+        }
+        Ok(())
+    }
+
+    fn flush(&mut self) -> Result<()> {
+        let n = self.base.chain.len();
+        for idx in 0..n {
+            let dirty = self.caches[idx].drain();
+            for (key, slice) in dirty {
+                self.writeback(idx, key, &slice.entries)?;
+            }
+        }
+        Ok(())
+    }
+
+    fn kind(&self) -> DriverKind {
+        DriverKind::Vanilla
+    }
+
+    fn chain(&self) -> &Chain {
+        &self.base.chain
+    }
+
+    fn chain_mut(&mut self) -> &mut Chain {
+        &mut self.base.chain
+    }
+
+    fn reopen(&mut self) -> Result<()> {
+        // one fresh cache per (possibly different) file; per-snapshot
+        // memory re-registered for the new shape
+        self.caches = self
+            .base
+            .chain
+            .images()
+            .iter()
+            .map(|_| SliceCache::new(self.per_file_cache, &self.base.acct))
+            .collect();
+        self.base.refresh_mem();
+        Ok(())
+    }
+
+    fn counters(&self) -> CounterSnapshot {
+        self.base.counters.snapshot()
+    }
+
+    fn lookup_latency(&self) -> Histogram {
+        self.base.lookup_hist.lock().unwrap().clone()
+    }
+
+    fn cache_bytes(&self) -> u64 {
+        self.caches.iter().map(|c| c.resident_bytes()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::qcow::image::{DataMode, Image};
+    use crate::qcow::layout::Geometry;
+    use crate::qcow::snapshot;
+    use crate::storage::node::StorageNode;
+
+    fn chain_with_layers(n_snapshots: usize) -> (Arc<StorageNode>, Chain, Arc<VirtClock>) {
+        let clock = VirtClock::new();
+        let node = StorageNode::new("s", clock.clone(), CostModel::default());
+        let b = node.create_file("img-0").unwrap();
+        let img = Image::create(
+            "img-0",
+            b,
+            Geometry::new(16, 16 << 20).unwrap(),
+            0,
+            0,
+            None,
+            DataMode::Real,
+        )
+        .unwrap();
+        let mut chain = Chain::new(Arc::new(img)).unwrap();
+        for i in 0..n_snapshots {
+            // write one distinct cluster per layer before snapshotting
+            let img = chain.active();
+            let off = img.alloc_data_cluster().unwrap();
+            img.write_data(off, 0, &[i as u8 + 1; 32]).unwrap();
+            img.set_l2_entry(i as u64, L2Entry::local(off, None)).unwrap();
+            snapshot::snapshot_vanilla(&mut chain, &node, &format!("img-{}", i + 1))
+                .unwrap();
+        }
+        (node, chain, clock)
+    }
+
+    fn driver(chain: Chain, clock: Arc<VirtClock>) -> VanillaDriver {
+        VanillaDriver::new(
+            chain,
+            CacheConfig::new(32, 1 << 20),
+            clock,
+            CostModel::default(),
+            MemoryAccountant::new(),
+        )
+    }
+
+    #[test]
+    fn reads_layers_through_chain() {
+        let (_n, chain, clock) = chain_with_layers(3);
+        let mut d = driver(chain, clock);
+        let cs = 64 << 10;
+        let mut buf = [0u8; 4];
+        for i in 0..3u64 {
+            d.read(i * cs, &mut buf).unwrap();
+            assert_eq!(buf, [i as u8 + 1; 4], "layer {i}");
+        }
+        // unallocated cluster reads zeros
+        d.read(10 * cs, &mut buf).unwrap();
+        assert_eq!(buf, [0; 4]);
+    }
+
+    #[test]
+    fn chain_walk_costs_grow_with_depth() {
+        let (_n, chain, clock) = chain_with_layers(3);
+        let mut d = driver(chain, clock);
+        let mut buf = [0u8; 1];
+        d.read(0, &mut buf).unwrap(); // cluster 0 lives at the base
+        let s = d.counters();
+        // walked all 4 files: probes attributed to every index
+        assert_eq!(s.per_file_lookups.len(), 4);
+        assert!(s.hit_unallocated >= 1 || s.misses >= 1);
+        assert_eq!(s.hits, 1);
+    }
+
+    #[test]
+    fn write_cows_into_active_volume() {
+        let (_n, chain, clock) = chain_with_layers(2);
+        let mut d = driver(chain, clock);
+        d.write(5, &[0xEE; 3]).unwrap();
+        let mut buf = [0u8; 8];
+        d.read(0, &mut buf).unwrap();
+        // first 5 bytes preserved from the base layer, then the write
+        assert_eq!(&buf[..5], &[1; 5]);
+        assert_eq!(&buf[5..8], &[0xEE; 3]);
+        // the active volume owns the cluster now
+        let (bfi, _) = d.chain().resolve_walk(0).unwrap().unwrap();
+        assert_eq!(bfi as usize, d.chain().len() - 1);
+        // backing file content untouched (COW invariant)
+        let (b0, off0) = (0u16, d.chain().get(0).unwrap().l2_entry(0).unwrap().host_offset());
+        let mut orig = [0u8; 8];
+        d.chain().get(b0).unwrap().read_data(off0, 0, &mut orig).unwrap();
+        assert_eq!(orig, [1; 8]);
+    }
+
+    #[test]
+    fn second_read_hits_cache() {
+        let (_n, chain, clock) = chain_with_layers(1);
+        let mut d = driver(chain, clock);
+        let mut buf = [0u8; 1];
+        d.read(0, &mut buf).unwrap();
+        let m1 = d.counters().misses;
+        d.read(1, &mut buf).unwrap(); // same slice
+        assert_eq!(d.counters().misses, m1, "no new miss within the slice");
+    }
+
+    #[test]
+    fn flush_persists_dirty_slices() {
+        let (_n, chain, clock) = chain_with_layers(1);
+        let mut d = driver(chain, clock);
+        d.write(0, &[7; 16]).unwrap();
+        d.flush().unwrap();
+        // reopen-style check via uncached entry read
+        let e = d.chain().active().l2_entry(0).unwrap();
+        assert!(e.is_allocated_here());
+    }
+}

@@ -1,0 +1,166 @@
+//! Backward compatibility (§5.1), both directions:
+//! * an SQEMU-created (stamped) chain must be fully readable by the
+//!   *vanilla* driver — the extension lives in bits vanilla ignores;
+//! * a vanilla chain must be fully readable by the *SQEMU* driver
+//!   (degraded, correction-driven path), and `convert_to_sqemu` must
+//!   upgrade it to the fast path.
+
+use sqemu::cache::CacheConfig;
+use sqemu::metrics::clock::{CostModel, VirtClock};
+use sqemu::metrics::memory::MemoryAccountant;
+use sqemu::qcow::entry::L2Entry;
+use sqemu::qcow::image::{DataMode, Image};
+use sqemu::qcow::layout::{Geometry, FEATURE_BFI};
+use sqemu::qcow::{snapshot, Chain};
+use sqemu::storage::node::StorageNode;
+use sqemu::util::rng::Rng;
+use sqemu::vdisk::scalable::ScalableDriver;
+use sqemu::vdisk::vanilla::VanillaDriver;
+use sqemu::vdisk::Driver;
+use std::collections::HashMap;
+use std::sync::Arc;
+
+const CS: u64 = 64 << 10;
+const VCLUSTERS: u64 = 48;
+
+struct Setup {
+    node: Arc<StorageNode>,
+    clock: Arc<VirtClock>,
+    active: String,
+    model: HashMap<u64, Vec<u8>>,
+}
+
+fn build(stamped: bool, seed: u64) -> Setup {
+    let clock = VirtClock::new();
+    let node = StorageNode::new("s", clock.clone(), CostModel::default());
+    let geom = Geometry::new(16, VCLUSTERS * CS).unwrap();
+    let flags = if stamped { FEATURE_BFI } else { 0 };
+    let b = node.create_file("img-0").unwrap();
+    let img = Image::create("img-0", b, geom, flags, 0, None, DataMode::Real).unwrap();
+    let mut chain = Chain::new(Arc::new(img)).unwrap();
+    let mut rng = Rng::new(seed);
+    let mut model = HashMap::new();
+    for layer in 0..4 {
+        for _ in 0..8 {
+            let vc = rng.below(VCLUSTERS);
+            let img = chain.active();
+            let off = img.alloc_data_cluster().unwrap();
+            let mut data = vec![0u8; CS as usize];
+            rng.fill_bytes(&mut data);
+            img.write_data(off, 0, &data).unwrap();
+            let stamp = if stamped { Some(img.chain_index()) } else { None };
+            img.set_l2_entry(vc, L2Entry::local(off, stamp)).unwrap();
+            model.insert(vc, data);
+        }
+        let name = format!("img-{}", layer + 1);
+        if stamped {
+            snapshot::snapshot_sqemu(&mut chain, &node, &name).unwrap();
+        } else {
+            snapshot::snapshot_vanilla(&mut chain, &node, &name).unwrap();
+        }
+    }
+    Setup { node, clock, active: chain.active().name.clone(), model }
+}
+
+fn verify_driver(d: &mut dyn Driver, model: &HashMap<u64, Vec<u8>>) {
+    let mut buf = vec![0u8; CS as usize];
+    for vc in 0..VCLUSTERS {
+        d.read(vc * CS, &mut buf).unwrap();
+        match model.get(&vc) {
+            Some(data) => assert_eq!(&buf, data, "vc={vc}"),
+            None => assert!(buf.iter().all(|&b| b == 0), "vc={vc} not zero"),
+        }
+    }
+}
+
+#[test]
+fn vanilla_driver_reads_sqemu_images() {
+    let s = build(true, 101);
+    let mut d = VanillaDriver::new(
+        Chain::open(&s.node, &s.active, DataMode::Real).unwrap(),
+        CacheConfig::new(32, 256 << 10),
+        s.clock.clone(),
+        CostModel::default(),
+        MemoryAccountant::new(),
+    );
+    verify_driver(&mut d, &s.model);
+}
+
+#[test]
+fn sqemu_driver_reads_vanilla_images() {
+    let s = build(false, 202);
+    let mut d = ScalableDriver::new(
+        Chain::open(&s.node, &s.active, DataMode::Real).unwrap(),
+        CacheConfig::new(32, 256 << 10),
+        s.clock.clone(),
+        CostModel::default(),
+        MemoryAccountant::new(),
+    );
+    verify_driver(&mut d, &s.model);
+}
+
+#[test]
+fn convert_upgrades_vanilla_chain_to_fast_path() {
+    let s = build(false, 303);
+    let chain = Chain::open(&s.node, &s.active, DataMode::Real).unwrap();
+    let stamped = snapshot::convert_to_sqemu(&chain).unwrap();
+    assert_eq!(stamped as usize, s.model.len());
+    // after conversion the active volume resolves everything alone
+    for (vc, _) in &s.model {
+        let e = chain.active().l2_entry(*vc).unwrap();
+        assert!(
+            e.sqemu_view(chain.active().chain_index()).is_some(),
+            "vc={vc} unstamped after convert"
+        );
+    }
+    // content still correct through both drivers
+    let mut d = ScalableDriver::new(
+        Chain::open(&s.node, &s.active, DataMode::Real).unwrap(),
+        CacheConfig::new(32, 256 << 10),
+        s.clock.clone(),
+        CostModel::default(),
+        MemoryAccountant::new(),
+    );
+    verify_driver(&mut d, &s.model);
+    let mut v = VanillaDriver::new(
+        Chain::open(&s.node, &s.active, DataMode::Real).unwrap(),
+        CacheConfig::new(32, 256 << 10),
+        s.clock.clone(),
+        CostModel::default(),
+        MemoryAccountant::new(),
+    );
+    verify_driver(&mut v, &s.model);
+}
+
+#[test]
+fn sqemu_snapshot_of_stamped_chain_readable_by_vanilla() {
+    // full §5.4 snapshot on a stamped chain, then vanilla-driver read
+    let s = build(true, 404);
+    let mut chain = Chain::open(&s.node, &s.active, DataMode::Real).unwrap();
+    snapshot::snapshot_sqemu(&mut chain, &s.node, "img-final").unwrap();
+    let mut d = VanillaDriver::new(
+        Chain::open(&s.node, "img-final", DataMode::Real).unwrap(),
+        CacheConfig::new(32, 256 << 10),
+        s.clock.clone(),
+        CostModel::default(),
+        MemoryAccountant::new(),
+    );
+    verify_driver(&mut d, &s.model);
+}
+
+#[test]
+fn mixed_chain_vanilla_snapshot_on_sqemu_base() {
+    // provider converts mid-chain: sqemu snapshots, then a vanilla one
+    let s = build(true, 505);
+    let mut chain = Chain::open(&s.node, &s.active, DataMode::Real).unwrap();
+    snapshot::snapshot_vanilla(&mut chain, &s.node, "img-mixed").unwrap();
+    // the active volume is now unstamped: sqemu driver must degrade
+    let mut d = ScalableDriver::new(
+        Chain::open(&s.node, "img-mixed", DataMode::Real).unwrap(),
+        CacheConfig::new(32, 256 << 10),
+        s.clock.clone(),
+        CostModel::default(),
+        MemoryAccountant::new(),
+    );
+    verify_driver(&mut d, &s.model);
+}

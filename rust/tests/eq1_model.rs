@@ -1,0 +1,120 @@
+//! Eq. 1 validation: the measured average lookup cost of the *vanilla*
+//! driver tracks the paper's analytic model
+//!
+//!   Y = [Hit% * T_M + Miss% * (T_D + T_L + T_F) + UnAl% * T_F] * N
+//!
+//! within model error, and the SQEMU driver's cost is flat in N.
+
+use sqemu::cache::CacheConfig;
+use sqemu::metrics::clock::{CostModel, VirtClock};
+use sqemu::metrics::memory::MemoryAccountant;
+use sqemu::qcow::entry::L2Entry;
+use sqemu::qcow::image::{DataMode, Image};
+use sqemu::qcow::layout::{Geometry, FEATURE_BFI};
+use sqemu::qcow::{snapshot, Chain};
+use sqemu::storage::node::StorageNode;
+use sqemu::util::rng::Rng;
+use sqemu::vdisk::scalable::ScalableDriver;
+use sqemu::vdisk::vanilla::VanillaDriver;
+use sqemu::vdisk::Driver;
+use std::sync::Arc;
+
+const CS: u64 = 64 << 10;
+const VCLUSTERS: u64 = 512;
+
+/// Chain with valid clusters uniformly distributed over layers (§6.1).
+fn build(stamped: bool, layers: usize) -> (Arc<StorageNode>, Arc<VirtClock>, String) {
+    let clock = VirtClock::new();
+    let node = StorageNode::new("s", clock.clone(), CostModel::default());
+    let geom = Geometry::new(16, VCLUSTERS * CS).unwrap();
+    let flags = if stamped { FEATURE_BFI } else { 0 };
+    let b = node.create_file("img-0").unwrap();
+    let img =
+        Image::create("img-0", b, geom, flags, 0, None, DataMode::Synthetic).unwrap();
+    let mut chain = Chain::new(Arc::new(img)).unwrap();
+    let mut rng = Rng::new(9);
+    let mut vcs: Vec<u64> = (0..VCLUSTERS).collect();
+    rng.shuffle(&mut vcs);
+    let per_layer = VCLUSTERS as usize * 9 / 10 / (layers + 1);
+    let mut cursor = 0;
+    for layer in 0..=layers {
+        for _ in 0..per_layer {
+            let vc = vcs[cursor % vcs.len()];
+            cursor += 1;
+            let img = chain.active();
+            let off = img.alloc_data_cluster().unwrap();
+            let stamp = if stamped { Some(img.chain_index()) } else { None };
+            img.set_l2_entry(vc, L2Entry::local(off, stamp)).unwrap();
+        }
+        if layer < layers {
+            let name = format!("img-{}", layer + 1);
+            if stamped {
+                snapshot::snapshot_sqemu(&mut chain, &node, &name).unwrap();
+            } else {
+                snapshot::snapshot_vanilla(&mut chain, &node, &name).unwrap();
+            }
+        }
+    }
+    (node, clock, chain.active().name.clone())
+}
+
+fn mean_lookup_ns(d: &mut dyn Driver) -> (f64, sqemu::metrics::counters::CounterSnapshot) {
+    let mut buf = [0u8; 1];
+    for vc in 0..VCLUSTERS {
+        d.read(vc * CS, &mut buf).unwrap();
+    }
+    (d.lookup_latency().mean(), d.counters())
+}
+
+#[test]
+fn vanilla_cost_tracks_eq1_and_grows_linearly() {
+    let cost = CostModel::default();
+    let mut means = Vec::new();
+    for layers in [4usize, 16] {
+        let (node, clock, active) = build(false, layers);
+        let mut d = VanillaDriver::new(
+            Chain::open(&node, &active, DataMode::Synthetic).unwrap(),
+            CacheConfig::new(32, 16 << 20),
+            clock,
+            cost,
+            MemoryAccountant::new(),
+        );
+        let (mean, snap) = mean_lookup_ns(&mut d);
+        // Eq. 1 with measured event ratios: per-level cost * levels walked
+        let (h, m, u) = snap.ratios();
+        let levels = snap.total_lookups() as f64 / VCLUSTERS as f64;
+        let eq1 = cost.eq1_avg_lookup_ns(h, m, u, 1) * levels;
+        let err = (mean - eq1).abs() / eq1;
+        assert!(
+            err < 0.5,
+            "layers={layers}: measured {mean:.0} vs eq1 {eq1:.0} (err {err:.2})"
+        );
+        means.push(mean);
+    }
+    // 4 -> 16 layers: cost should grow clearly (the §4 problem)
+    assert!(
+        means[1] > means[0] * 2.0,
+        "no linear growth: {means:?}"
+    );
+}
+
+#[test]
+fn sqemu_cost_is_flat_in_chain_length() {
+    let cost = CostModel::default();
+    let mut means = Vec::new();
+    for layers in [4usize, 16, 64] {
+        let (node, clock, active) = build(true, layers);
+        let mut d = ScalableDriver::new(
+            Chain::open(&node, &active, DataMode::Synthetic).unwrap(),
+            CacheConfig::new(32, 16 << 20),
+            clock,
+            cost,
+            MemoryAccountant::new(),
+        );
+        let (mean, _) = mean_lookup_ns(&mut d);
+        means.push(mean);
+    }
+    let spread = means.iter().cloned().fold(0.0f64, f64::max)
+        / means.iter().cloned().fold(f64::INFINITY, f64::min);
+    assert!(spread < 1.5, "sqemu lookup cost not flat: {means:?}");
+}

@@ -1,0 +1,134 @@
+//! Differential test: PJRT-executed artifacts == host kernels, the Rust
+//! half of the L1 correctness contract (pytest covers Pallas vs ref.py).
+//!
+//! Requires `make artifacts`; skips (with a loud note) when absent so
+//! `cargo test` works on a fresh checkout.
+
+use sqemu::runtime::{host, Runtime, UNALLOCATED};
+use sqemu::util::rng::Rng;
+
+fn runtime() -> Option<Runtime> {
+    let dir = sqemu::runtime::default_artifacts_dir();
+    match Runtime::load(&dir) {
+        Ok(rt) => Some(rt),
+        Err(e) => {
+            eprintln!("SKIP runtime tests (no artifacts at {dir:?}): {e:#}");
+            None
+        }
+    }
+}
+
+fn random_table(rng: &mut Rng, clusters: usize, files: i32, fill: f64) -> (Vec<i32>, Vec<i32>) {
+    let mut off = vec![UNALLOCATED; clusters];
+    let mut bfi = vec![UNALLOCATED; clusters];
+    for i in 0..clusters {
+        if rng.chance(fill) {
+            off[i] = rng.below(1 << 20) as i32;
+            bfi[i] = rng.below(files as u64) as i32;
+        }
+    }
+    (off, bfi)
+}
+
+#[test]
+fn loads_all_artifacts() {
+    let Some(rt) = runtime() else { return };
+    assert_eq!(rt.platform(), "cpu");
+    let names = rt.artifact_names();
+    for expect in ["merge_l2", "stream_fold", "translate_direct", "translate_walk"] {
+        assert!(names.iter().any(|n| n == expect), "missing {expect}");
+    }
+}
+
+#[test]
+fn translate_direct_matches_host() {
+    let Some(rt) = runtime() else { return };
+    let mut rng = Rng::new(42);
+    for case in 0..3 {
+        let clusters = [100, 4096, rt.manifest.clusters][case];
+        let files = rt.manifest.chain as i32;
+        let (off, bfi) = random_table(&mut rng, clusters, files, 0.8);
+        // batch larger than one chunk to exercise chunking + padding
+        let vbs: Vec<i32> = (0..rt.manifest.batch as i32 * 2 + 17)
+            .map(|_| rng.below(clusters as u64) as i32)
+            .collect();
+        let (gb, go, gh) = rt.translate_direct(&off, &bfi, &vbs).unwrap();
+        let (hb, ho, hh) = host::translate_direct(&off, &bfi, &vbs, rt.manifest.chain);
+        assert_eq!(gb, hb, "bfi mismatch case {case}");
+        assert_eq!(go, ho, "off mismatch case {case}");
+        assert_eq!(gh, hh, "hist mismatch case {case}");
+    }
+}
+
+#[test]
+fn translate_walk_matches_host() {
+    let Some(rt) = runtime() else { return };
+    let mut rng = Rng::new(7);
+    let clusters = 2048;
+    for n_files in [1usize, 3, rt.manifest.chain] {
+        let tables: Vec<Vec<i32>> = (0..n_files)
+            .map(|_| {
+                (0..clusters)
+                    .map(|_| {
+                        if rng.chance(0.4) {
+                            rng.below(1 << 20) as i32
+                        } else {
+                            UNALLOCATED
+                        }
+                    })
+                    .collect()
+            })
+            .collect();
+        let vbs: Vec<i32> = (0..300).map(|_| rng.below(clusters as u64) as i32).collect();
+        let (gb, go) = rt.translate_walk(&tables, &vbs).unwrap();
+        let (hb, ho) = host::translate_walk(&tables, &vbs);
+        assert_eq!(gb, hb, "bfi mismatch n_files={n_files}");
+        assert_eq!(go, ho, "off mismatch n_files={n_files}");
+    }
+}
+
+#[test]
+fn merge_matches_host() {
+    let Some(rt) = runtime() else { return };
+    let mut rng = Rng::new(11);
+    for _ in 0..3 {
+        let c = 3000;
+        let (off_v, bfi_v) = random_table(&mut rng, c, 32, 0.7);
+        let (off_b, bfi_b) = random_table(&mut rng, c, 32, 0.7);
+        let (go, gb) = rt.merge_l2(&off_v, &bfi_v, &off_b, &bfi_b).unwrap();
+        let (ho, hb) = host::merge_l2(&off_v, &bfi_v, &off_b, &bfi_b);
+        assert_eq!(go, ho);
+        assert_eq!(gb, hb);
+    }
+}
+
+#[test]
+fn stream_fold_matches_host() {
+    let Some(rt) = runtime() else { return };
+    let mut rng = Rng::new(13);
+    let c = 1024;
+    for depth in [1usize, 4, rt.manifest.stream_depth] {
+        let mut offs = Vec::new();
+        let mut bfis = Vec::new();
+        for _ in 0..depth {
+            let (o, b) = random_table(&mut rng, c, 64, 0.5);
+            offs.push(o);
+            bfis.push(b);
+        }
+        let (go, gb) = rt.stream_fold(&offs, &bfis).unwrap();
+        let (ho, hb) = host::stream_fold(&offs, &bfis);
+        assert_eq!(go, ho, "off mismatch depth={depth}");
+        assert_eq!(gb, hb, "bfi mismatch depth={depth}");
+    }
+}
+
+#[test]
+fn merge_is_idempotent_via_runtime() {
+    // property: merging a table into itself is the identity
+    let Some(rt) = runtime() else { return };
+    let mut rng = Rng::new(17);
+    let (off, bfi) = random_table(&mut rng, 2000, 16, 0.6);
+    let (o2, b2) = rt.merge_l2(&off, &bfi, &off, &bfi).unwrap();
+    assert_eq!(o2, off);
+    assert_eq!(b2, bfi);
+}

@@ -1,0 +1,208 @@
+//! Fig 20 (beyond the paper — §4.1 extended to the online setting):
+//! guest-visible latency while a chain is being shortened.
+//!
+//! The paper measures streaming as an offline, stop-the-world merge and
+//! reports guests suffering a ~100x latency hit. This bench compares:
+//!
+//! * **offline** — `stream_merge` of the whole chain with the VM
+//!   paused: every guest request arriving during the merge waits for
+//!   the full pause window.
+//! * **live** — the `blockjob` engine at several rate limits: requests
+//!   keep being served between bounded increments; a request waits for
+//!   at most one increment plus its own service time.
+//!
+//! Open-loop harness: guest requests arrive every `ARRIVAL_NS` of
+//! virtual time; the job soaks idle time between arrivals (its I/O
+//! charges the same virtual clock, so any overshoot past an arrival
+//! shows up as queueing delay in that request's latency).
+
+use sqemu::bench::table::{f1, f2, Table};
+use sqemu::bench::BenchArgs;
+use sqemu::blockjob::{JobKind, JobRunner, JobShared, LiveStreamJob, Step};
+use sqemu::cache::CacheConfig;
+use sqemu::chaingen::{generate, ChainSpec};
+use sqemu::metrics::clock::{CostModel, VirtClock};
+use sqemu::metrics::histogram::Histogram;
+use sqemu::metrics::memory::MemoryAccountant;
+use sqemu::qcow::image::DataMode;
+use sqemu::qcow::snapshot;
+use sqemu::storage::node::StorageNode;
+use sqemu::util::rng::Rng;
+use sqemu::vdisk::scalable::ScalableDriver;
+use sqemu::vdisk::Driver;
+use std::sync::Arc;
+
+const ARRIVAL_NS: u64 = 300_000; // one guest request per 300 µs
+const OP_BYTES: usize = 4096;
+
+fn spec(disk: u64, chain_len: usize) -> ChainSpec {
+    ChainSpec {
+        disk_size: disk,
+        chain_len,
+        populated: 0.3,
+        stamped: true,
+        data_mode: DataMode::Synthetic,
+        prefix: "live".into(),
+        seed: 0xF16_20,
+        ..Default::default()
+    }
+}
+
+fn fresh_driver(
+    disk: u64,
+    chain_len: usize,
+) -> (Arc<VirtClock>, ScalableDriver) {
+    let clock = VirtClock::new();
+    let node = StorageNode::new("s", clock.clone(), CostModel::default());
+    let chain = generate(&*node, &spec(disk, chain_len)).unwrap();
+    let d = ScalableDriver::new(
+        chain,
+        CacheConfig::new(512, 2 << 20),
+        clock.clone(),
+        CostModel::default(),
+        MemoryAccountant::new(),
+    );
+    (clock, d)
+}
+
+fn guest_op(d: &mut ScalableDriver, rng: &mut Rng, disk: u64) {
+    let voff = rng.below(disk - OP_BYTES as u64);
+    if rng.chance(0.2) {
+        d.write(voff, &[7u8; OP_BYTES]).unwrap();
+    } else {
+        let mut buf = vec![0u8; OP_BYTES];
+        d.read(voff, &mut buf).unwrap();
+    }
+}
+
+/// Offline baseline: merge the whole chain with the guest paused; the
+/// pause window is the worst-case latency of any request queued behind
+/// it. Returns (merge_ns, copied_clusters).
+fn offline_merge(disk: u64, chain_len: usize) -> (u64, u64) {
+    let (clock, mut d) = fresh_driver(disk, chain_len);
+    let t0 = clock.now();
+    let to = (d.chain().len() - 1) as u16;
+    let copied = snapshot::stream_merge(d.chain_mut(), 0, to).unwrap();
+    d.reopen().unwrap();
+    (clock.now() - t0, copied)
+}
+
+/// Live run at `rate_bps` (0 = unlimited). Returns (job_ns, copied,
+/// served_during_job, latency histogram of requests served while the
+/// job ran).
+fn live_run(disk: u64, chain_len: usize, rate_bps: u64) -> (u64, u64, u64, Histogram) {
+    let (clock, mut d) = fresh_driver(disk, chain_len);
+    let fence = Arc::clone(d.fence());
+    let shared = Arc::new(JobShared::new("fig20", JobKind::Stream, rate_bps));
+    let job = Box::new(LiveStreamJob::new(d.chain(), Arc::clone(&fence)));
+    let cluster = d.chain().active().geom().cluster_size();
+    let mut runner = JobRunner::new(job, Arc::clone(&shared), fence, 32, 32 * cluster, clock.now());
+    let t0 = clock.now();
+    let mut rng = Rng::new(0x6E57);
+    let mut hist = Histogram::new();
+    let mut next_arrival = clock.now() + ARRIVAL_NS;
+    let mut served = 0u64;
+    let mut finished_at = None;
+    while finished_at.is_none() {
+        // job soaks the time until the next guest arrival
+        loop {
+            let now = clock.now();
+            if now >= next_arrival {
+                break;
+            }
+            match runner.step(&mut d, now) {
+                Step::Ran => {}
+                Step::Starved { ready_at } => {
+                    let target = ready_at.min(next_arrival);
+                    if target > now {
+                        clock.advance(target - now);
+                    }
+                    if ready_at >= next_arrival {
+                        break;
+                    }
+                }
+                Step::Finished => {
+                    finished_at = Some(clock.now());
+                    break;
+                }
+                Step::Paused => break,
+            }
+        }
+        if finished_at.is_some() {
+            break;
+        }
+        // serve one request; overshoot past the arrival is queueing delay
+        let now = clock.now();
+        if now < next_arrival {
+            clock.advance(next_arrival - now);
+        }
+        let arrival = next_arrival;
+        guest_op(&mut d, &mut rng, disk);
+        hist.record(clock.now() - arrival);
+        served += 1;
+        next_arrival = arrival + ARRIVAL_NS;
+    }
+    let st = shared.status();
+    assert!(st.error.is_none(), "job failed: {:?}", st.error);
+    assert_eq!(d.chain().len(), 1, "chain collapsed live");
+    (finished_at.unwrap() - t0, st.copied, served, hist)
+}
+
+fn main() {
+    let args = BenchArgs::parse();
+    let (disk, chain_len) = if args.full {
+        (1u64 << 30, 1000)
+    } else if args.quick {
+        (64u64 << 20, 50)
+    } else {
+        (256u64 << 20, 100)
+    };
+    // ≥3 rate-limit settings plus unlimited
+    let rates: [u64; 4] = [64 << 20, 256 << 20, 1 << 30, 0];
+
+    let mut t = Table::new(
+        "fig20_live_blockjobs",
+        "guest latency while shortening the chain: offline merge vs live stream",
+        &[
+            "mode", "rate_MiBps", "chain", "copied", "job_ms", "served",
+            "p50_us", "p99_us", "max_us",
+        ],
+    );
+
+    let (pause_ns, copied) = offline_merge(disk, chain_len);
+    // a request arriving mid-merge waits for the remaining pause: the
+    // whole window is the worst case and ~the p99 of queued requests
+    t.row(&[
+        "offline".into(),
+        "-".into(),
+        format!("{chain_len}"),
+        format!("{copied}"),
+        f2(pause_ns as f64 / 1e6),
+        "0".into(),
+        f1(pause_ns as f64 / 1e3),
+        f1(pause_ns as f64 / 1e3),
+        f1(pause_ns as f64 / 1e3),
+    ]);
+
+    for &rate in &rates {
+        let (job_ns, copied, served, hist) = live_run(disk, chain_len, rate);
+        t.row(&[
+            "live".into(),
+            if rate == 0 { "inf".into() } else { format!("{}", rate >> 20) },
+            format!("{chain_len}"),
+            format!("{copied}"),
+            f2(job_ns as f64 / 1e6),
+            format!("{served}"),
+            f1(hist.quantile(0.50) as f64 / 1e3),
+            f1(hist.quantile(0.99) as f64 / 1e3),
+            f1(hist.max() as f64 / 1e3),
+        ]);
+    }
+    t.finish();
+    println!(
+        "\npaper shape: the offline merge stalls the guest for the whole window \
+         (§4.1's disruption); the live job keeps serving — p99 stays within one \
+         increment of the no-job baseline and falls as the rate limit tightens, \
+         trading job completion time for guest latency"
+    );
+}

@@ -1,0 +1,273 @@
+//! The job driver: runs one [`BlockJob`] against a VM's [`Driver`] in
+//! bounded, rate-limited steps, and owns the completion protocol.
+//!
+//! The runner lives on the VM worker thread next to the driver. Between
+//! guest requests (and while the queue is idle) the worker calls
+//! [`JobRunner::step`]; each step runs at most one increment, so a
+//! queued guest request waits for at most `increment_clusters` of job
+//! work — that bound, together with the [`RateLimiter`], is what keeps
+//! the guest's p99 flat while the chain shrinks (the bench
+//! `fig20_live_blockjobs` sweeps it).
+//!
+//! Completion protocol: flush the driver (persist guest-dirty cache
+//! slices), run the job's `finalize` (catch-up + chain rewrite), reopen
+//! the driver (rebuild caches for the new shape), end the fence, then
+//! run [`qcheck`] over the result — a job only reports `Completed` if
+//! the chain checks clean; any error flips it to `Failed` with the
+//! errors recorded.
+
+use super::{BlockJob, JobFence, JobShared, JobState, RateLimiter};
+use crate::qcow::qcheck;
+use crate::vdisk::Driver;
+use std::sync::atomic::Ordering::Relaxed;
+use std::sync::Arc;
+
+/// What one call to [`JobRunner::step`] did.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Step {
+    /// Ran one increment.
+    Ran,
+    /// Token bucket empty; runnable again at `ready_at` (ns).
+    Starved { ready_at: u64 },
+    /// Job is paused; nothing to do until resumed.
+    Paused,
+    /// Job reached a terminal state; drop the runner.
+    Finished,
+}
+
+pub struct JobRunner {
+    job: Box<dyn BlockJob>,
+    limiter: RateLimiter,
+    shared: Arc<JobShared>,
+    fence: Arc<JobFence>,
+    increment_clusters: u64,
+    copy_done: bool,
+}
+
+impl JobRunner {
+    /// Begin a job: raises the fence and stamps the start time. The
+    /// caller stores the runner next to the driver it will step.
+    pub fn new(
+        job: Box<dyn BlockJob>,
+        shared: Arc<JobShared>,
+        fence: Arc<JobFence>,
+        increment_clusters: u64,
+        burst_bytes: u64,
+        now_ns: u64,
+    ) -> JobRunner {
+        fence.begin();
+        shared.total.store(job.total_clusters(), Relaxed);
+        shared.started_ns.store(now_ns, Relaxed);
+        shared.set_state(JobState::Running);
+        let limiter = RateLimiter::new(shared.rate_bps, burst_bytes.max(1), now_ns);
+        JobRunner {
+            job,
+            limiter,
+            shared,
+            fence,
+            increment_clusters: increment_clusters.max(1),
+            copy_done: false,
+        }
+    }
+
+    pub fn shared(&self) -> &Arc<JobShared> {
+        &self.shared
+    }
+
+    /// Should the worker poll the queue instead of blocking on it?
+    pub fn wants_cpu(&self) -> bool {
+        !self.shared.state().is_terminal() && !self.shared.paused()
+    }
+
+    /// Advance the job by at most one increment.
+    pub fn step(&mut self, driver: &mut dyn Driver, now_ns: u64) -> Step {
+        if self.shared.state().is_terminal() {
+            return Step::Finished;
+        }
+        if self.shared.cancelled() {
+            // cooperative cancel: leave the chain as-is (partial copies
+            // are consistent — they duplicate, never replace, data)
+            self.fence.end();
+            self.shared.set_state(JobState::Cancelled);
+            self.shared.finished_ns.store(now_ns, Relaxed);
+            return Step::Finished;
+        }
+        if self.shared.paused() {
+            return Step::Paused;
+        }
+        if !self.copy_done {
+            let ready_at = self.limiter.ready_at(now_ns);
+            if ready_at > now_ns {
+                return Step::Starved { ready_at };
+            }
+            match self.job.run_increment(driver.chain_mut(), self.increment_clusters) {
+                Err(e) => return self.fail(now_ns, format!("increment failed: {e:#}")),
+                Ok(inc) => {
+                    self.shared.processed.fetch_add(inc.processed, Relaxed);
+                    self.shared.copied.fetch_add(inc.copied, Relaxed);
+                    self.shared.bytes_copied.fetch_add(inc.bytes, Relaxed);
+                    self.shared.increments.fetch_add(1, Relaxed);
+                    self.limiter.consume(inc.bytes, now_ns);
+                    self.copy_done = inc.complete;
+                }
+            }
+            return Step::Ran;
+        }
+        self.finish(driver, now_ns)
+    }
+
+    /// Flush → finalize → reopen → qcheck. Only a clean check completes.
+    fn finish(&mut self, driver: &mut dyn Driver, now_ns: u64) -> Step {
+        if let Err(e) = driver.flush() {
+            return self.fail(now_ns, format!("pre-finalize flush failed: {e:#}"));
+        }
+        if let Err(e) = self.job.finalize(driver.chain_mut()) {
+            let _ = driver.reopen();
+            return self.fail(now_ns, format!("finalize failed: {e:#}"));
+        }
+        if let Err(e) = driver.reopen() {
+            return self.fail(now_ns, format!("post-finalize reopen failed: {e:#}"));
+        }
+        self.fence.end();
+        match qcheck::check_chain(driver.chain()) {
+            Err(e) => self.fail(now_ns, format!("qcheck failed to run: {e:#}")),
+            Ok(report) if !report.is_clean() => self.fail(
+                now_ns,
+                format!(
+                    "qcheck found {} errors after {} job: {}",
+                    report.errors.len(),
+                    self.job.kind().name(),
+                    report.errors.join("; ")
+                ),
+            ),
+            Ok(_) => {
+                self.shared.set_state(JobState::Completed);
+                self.shared.finished_ns.store(now_ns, Relaxed);
+                Step::Finished
+            }
+        }
+    }
+
+    fn fail(&mut self, now_ns: u64, msg: String) -> Step {
+        self.fence.end();
+        self.shared.set_error(msg);
+        self.shared.set_state(JobState::Failed);
+        self.shared.finished_ns.store(now_ns, Relaxed);
+        Step::Finished
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::blockjob::{JobKind, LiveStreamJob};
+    use crate::cache::CacheConfig;
+    use crate::chaingen::{generate, ChainSpec};
+    use crate::metrics::clock::{CostModel, VirtClock};
+    use crate::metrics::memory::MemoryAccountant;
+    use crate::qcow::image::DataMode;
+    use crate::storage::node::StorageNode;
+    use crate::vdisk::scalable::ScalableDriver;
+    use crate::vdisk::Driver as _;
+
+    fn driver_on_chain(len: usize) -> (Arc<VirtClock>, ScalableDriver) {
+        let clock = VirtClock::new();
+        let node = StorageNode::new("s", clock.clone(), CostModel::default());
+        let chain = generate(
+            &*node,
+            &ChainSpec {
+                disk_size: 8 << 20,
+                chain_len: len,
+                populated: 0.5,
+                data_mode: DataMode::Real,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        let d = ScalableDriver::new(
+            chain,
+            CacheConfig::new(16, 256 << 10),
+            clock.clone(),
+            CostModel::default(),
+            MemoryAccountant::new(),
+        );
+        (clock, d)
+    }
+
+    fn stream_runner(d: &ScalableDriver, rate_bps: u64, now: u64) -> JobRunner {
+        let fence = Arc::clone(d.fence());
+        let shared = Arc::new(JobShared::new("job-1", JobKind::Stream, rate_bps));
+        let job = Box::new(LiveStreamJob::new(d.chain(), Arc::clone(&fence)));
+        JobRunner::new(job, shared, fence, 16, 1 << 20, now)
+    }
+
+    #[test]
+    fn runs_to_completion_and_checks_clean() {
+        let (clock, mut d) = driver_on_chain(5);
+        let mut r = stream_runner(&d, 0, clock.now());
+        loop {
+            match r.step(&mut d, clock.now()) {
+                Step::Finished => break,
+                Step::Starved { ready_at } => {
+                    let now = clock.now();
+                    clock.advance(ready_at - now);
+                }
+                _ => {}
+            }
+        }
+        let st = r.shared().status();
+        assert_eq!(st.state, JobState::Completed, "error: {:?}", st.error);
+        assert_eq!(d.chain().len(), 1, "chain collapsed");
+        assert!(st.increments > 1, "work was incremental");
+        assert_eq!(st.processed, st.total);
+    }
+
+    #[test]
+    fn rate_limit_starves_and_virtual_time_unstarves() {
+        let (clock, mut d) = driver_on_chain(4);
+        // 1 MiB/s with 64 KiB clusters: every cluster copied starves the
+        // bucket for ~62 ms of virtual time
+        let mut r = stream_runner(&d, 1 << 20, clock.now());
+        let mut starved = 0u32;
+        loop {
+            match r.step(&mut d, clock.now()) {
+                Step::Finished => break,
+                Step::Starved { ready_at } => {
+                    starved += 1;
+                    let now = clock.now();
+                    assert!(ready_at > now);
+                    clock.advance(ready_at - now);
+                }
+                _ => {}
+            }
+        }
+        assert!(starved > 0, "limiter never engaged");
+        assert_eq!(r.shared().status().state, JobState::Completed);
+    }
+
+    #[test]
+    fn cancel_is_cooperative_and_leaves_chain_intact() {
+        let (clock, mut d) = driver_on_chain(4);
+        let mut r = stream_runner(&d, 0, clock.now());
+        assert_eq!(r.step(&mut d, clock.now()), Step::Ran);
+        r.shared().cancel();
+        assert_eq!(r.step(&mut d, clock.now()), Step::Finished);
+        assert_eq!(r.shared().status().state, JobState::Cancelled);
+        assert_eq!(d.chain().len(), 4, "chain shape untouched");
+        assert!(!d.fence().is_active(), "fence lowered on cancel");
+        let report = crate::qcow::qcheck::check_chain(d.chain()).unwrap();
+        assert!(report.is_clean(), "{:?}", report.errors);
+    }
+
+    #[test]
+    fn pause_and_resume() {
+        let (clock, mut d) = driver_on_chain(3);
+        let r0 = stream_runner(&d, 0, clock.now());
+        r0.shared().pause();
+        let mut r = r0;
+        assert_eq!(r.step(&mut d, clock.now()), Step::Paused);
+        assert!(!r.wants_cpu());
+        r.shared().resume();
+        assert_eq!(r.step(&mut d, clock.now()), Step::Ran);
+    }
+}

@@ -1,0 +1,117 @@
+//! Admission control for background jobs: per-storage-node maintenance
+//! bandwidth budgets.
+//!
+//! The coordinator runs many VMs whose chains share storage nodes; if
+//! every VM streamed at once, maintenance I/O would crowd out guest I/O
+//! (§4.1's disruption, fleet-wide). The scheduler grants each job a
+//! bytes/second reservation against the node holding the VM's active
+//! volume and rejects jobs once a node's budget is spent; reservations
+//! are released when jobs reach a terminal state.
+
+use anyhow::{bail, Result};
+use std::collections::HashMap;
+use std::sync::Mutex;
+
+/// Per-node maintenance-bandwidth ledger.
+pub struct JobScheduler {
+    /// Max aggregate job bytes/second per node.
+    budget_bps: u64,
+    reserved: Mutex<HashMap<String, u64>>,
+}
+
+/// A granted reservation; hand it back via [`JobScheduler::release`].
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Reservation {
+    pub node: String,
+    pub rate_bps: u64,
+}
+
+impl JobScheduler {
+    pub fn new(budget_bps: u64) -> JobScheduler {
+        JobScheduler {
+            budget_bps,
+            reserved: Mutex::new(HashMap::new()),
+        }
+    }
+
+    pub fn budget_bps(&self) -> u64 {
+        self.budget_bps
+    }
+
+    /// Reserve `rate_bps` on `node`. An unlimited job (`rate_bps == 0`)
+    /// reserves the node's whole budget — it will saturate whatever it
+    /// is given, so nothing else should be admitted beside it.
+    pub fn admit(&self, node: &str, rate_bps: u64) -> Result<Reservation> {
+        let need = if rate_bps == 0 { self.budget_bps } else { rate_bps };
+        if need > self.budget_bps {
+            bail!(
+                "job rate {need} B/s exceeds the per-node maintenance budget \
+                 {} B/s",
+                self.budget_bps
+            );
+        }
+        let mut reserved = self.reserved.lock().unwrap();
+        let used = reserved.get(node).copied().unwrap_or(0);
+        if used + need > self.budget_bps {
+            bail!(
+                "node '{node}' maintenance budget exhausted: {used} of {} B/s \
+                 reserved, {need} requested",
+                self.budget_bps
+            );
+        }
+        reserved.insert(node.to_string(), used + need);
+        Ok(Reservation { node: node.to_string(), rate_bps: need })
+    }
+
+    /// Release a reservation (job completed, failed, or was cancelled).
+    pub fn release(&self, r: &Reservation) {
+        let mut reserved = self.reserved.lock().unwrap();
+        if let Some(used) = reserved.get_mut(&r.node) {
+            *used = used.saturating_sub(r.rate_bps);
+            if *used == 0 {
+                reserved.remove(&r.node);
+            }
+        }
+    }
+
+    /// Currently reserved bytes/second on `node`.
+    pub fn reserved_bps(&self, node: &str) -> u64 {
+        self.reserved.lock().unwrap().get(node).copied().unwrap_or(0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn admits_until_budget_then_rejects() {
+        let s = JobScheduler::new(100);
+        let a = s.admit("n0", 60).unwrap();
+        assert!(s.admit("n0", 60).is_err(), "over budget");
+        let b = s.admit("n0", 40).unwrap();
+        // a different node has its own budget
+        let _c = s.admit("n1", 100).unwrap();
+        s.release(&a);
+        s.release(&b);
+        assert_eq!(s.reserved_bps("n0"), 0);
+        assert_eq!(s.reserved_bps("n1"), 100);
+    }
+
+    #[test]
+    fn unlimited_job_takes_the_whole_node() {
+        let s = JobScheduler::new(1 << 20);
+        let r = s.admit("n0", 0).unwrap();
+        assert_eq!(r.rate_bps, 1 << 20);
+        assert!(s.admit("n0", 1).is_err());
+        s.release(&r);
+        assert!(s.admit("n0", 1).is_ok());
+    }
+
+    #[test]
+    fn oversized_request_rejected_outright() {
+        let s = JobScheduler::new(100);
+        assert!(s.admit("n0", 200).is_err());
+        assert_eq!(s.reserved_bps("n0"), 0);
+    }
+}

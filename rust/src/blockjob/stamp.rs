@@ -1,0 +1,220 @@
+//! Live stamp: online vanilla→SQEMU conversion.
+//!
+//! The offline [`crate::qcow::snapshot::convert_to_sqemu`] walks the
+//! whole chain with the VM paused. This job performs the same
+//! stamping — every virtual cluster's `(backing_file_index, offset)`
+//! owner written into the active volume's L2 table — in bounded
+//! increments interleaved with guest I/O. Guest writes during the job
+//! produce local entries that are newer than any stamp, and the
+//! [`JobFence`] keeps the job from overwriting them. `finalize` runs a
+//! catch-up pass (stale cache writebacks may have wiped stamps from
+//! disk) and then sets the `FEATURE_BFI` header flag, so the running
+//! VM's chain is migrated to the scalable format with no downtime: on
+//! the next driver reopen the unified cache treats the active volume's
+//! index as complete.
+
+use super::{BlockJob, Increment, JobFence, JobKind};
+use crate::qcow::entry::L2Entry;
+use crate::qcow::layout::ENTRY_SIZE;
+use crate::qcow::Chain;
+use anyhow::Result;
+use std::sync::Arc;
+
+pub struct LiveStampJob {
+    cursor: u64,
+    total: u64,
+    fence: Arc<JobFence>,
+    /// Stamps this job wrote — the only entries a stale cache
+    /// writeback can have wiped, hence `finalize`'s exact work list.
+    written: Vec<(u64, L2Entry)>,
+}
+
+impl LiveStampJob {
+    pub fn new(chain: &Chain, fence: Arc<JobFence>) -> LiveStampJob {
+        LiveStampJob {
+            cursor: 0,
+            total: chain.active().geom().num_vclusters(),
+            fence,
+            written: Vec::new(),
+        }
+    }
+
+    /// Stamp one cluster's owner into the active volume. Returns the
+    /// metadata bytes written (0 if the entry was already correct).
+    fn stamp_cluster(&mut self, chain: &Chain, vc: u64) -> Result<u64> {
+        let active = chain.active();
+        let own = active.chain_index();
+        let current = active.l2_entry(vc)?;
+        if current.is_allocated_here() {
+            // locally owned (pre-existing or a guest write during the
+            // job): already resolvable in one step; leave it alone
+            return Ok(0);
+        }
+        let Some((bfi, off)) = chain.resolve_walk(vc)? else {
+            return Ok(0); // true hole
+        };
+        let entry = if bfi == own {
+            L2Entry::local(off, Some(bfi))
+        } else {
+            L2Entry::remote(off, bfi)
+        };
+        if entry == current {
+            return Ok(0);
+        }
+        active.set_l2_entry(vc, entry)?;
+        self.written.push((vc, entry));
+        Ok(ENTRY_SIZE)
+    }
+}
+
+impl BlockJob for LiveStampJob {
+    fn kind(&self) -> JobKind {
+        JobKind::Stamp
+    }
+
+    fn total_clusters(&self) -> u64 {
+        self.total
+    }
+
+    fn run_increment(&mut self, chain: &mut Chain, budget: u64) -> Result<Increment> {
+        let mut inc = Increment::default();
+        while inc.processed < budget && self.cursor < self.total {
+            let vc = self.cursor;
+            self.cursor += 1;
+            inc.processed += 1;
+            if self.fence.guest_wrote(vc) {
+                continue; // the guest's local entry is newer than any stamp
+            }
+            let bytes = self.stamp_cluster(chain, vc)?;
+            if bytes > 0 {
+                inc.copied += 1;
+                inc.bytes += bytes;
+            }
+        }
+        inc.complete = self.cursor >= self.total;
+        Ok(inc)
+    }
+
+    fn finalize(&mut self, chain: &mut Chain) -> Result<()> {
+        // Catch-up: re-write any stamp a stale cache writeback wiped.
+        // Only stamps this job wrote can have been clobbered (entries
+        // that predate the job were already in any fetched slice), so
+        // the recorded list is the exact work list — the pause here is
+        // O(stamps written), with no chain re-walk. A cluster the guest
+        // wrote meanwhile is locally allocated and must keep the
+        // guest's newer entry.
+        let active = chain.active();
+        for &(vc, entry) in &self.written {
+            let current = active.l2_entry(vc)?;
+            if current != entry && !current.is_allocated_here() {
+                active.set_l2_entry(vc, entry)?;
+            }
+        }
+        // The active volume's index is now complete: flip the format
+        // flag so drivers (and future snapshots) treat it as SQEMU.
+        active.set_feature_bfi()?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::clock::{CostModel, VirtClock};
+    use crate::qcow::image::{DataMode, Image};
+    use crate::qcow::layout::Geometry;
+    use crate::qcow::{qcheck, snapshot};
+    use crate::storage::node::StorageNode;
+
+    fn vanilla_chain(n: usize) -> (Arc<StorageNode>, Chain) {
+        let node = StorageNode::new("s", VirtClock::new(), CostModel::default());
+        let b = node.create_file("img-0").unwrap();
+        let img = Image::create(
+            "img-0",
+            b,
+            Geometry::new(16, 16 << 20).unwrap(),
+            0,
+            0,
+            None,
+            DataMode::Real,
+        )
+        .unwrap();
+        let mut chain = Chain::new(Arc::new(img)).unwrap();
+        for i in 0..n {
+            let img = chain.active();
+            let off = img.alloc_data_cluster().unwrap();
+            img.write_data(off, 0, &[i as u8 + 1; 32]).unwrap();
+            img.set_l2_entry(i as u64, L2Entry::local(off, None)).unwrap();
+            snapshot::snapshot_vanilla(&mut chain, &node, &format!("img-{}", i + 1)).unwrap();
+        }
+        (node, chain)
+    }
+
+    #[test]
+    fn stamps_match_offline_conversion_and_flip_the_flag() {
+        let (_n, mut chain) = vanilla_chain(4);
+        assert!(!chain.active().has_bfi());
+        let fence = Arc::new(JobFence::default());
+        fence.begin();
+        let mut job = LiveStampJob::new(&chain, Arc::clone(&fence));
+        let mut inc = Increment::default();
+        let mut stamped = 0;
+        while !inc.complete {
+            inc = job.run_increment(&mut chain, 5).unwrap();
+            stamped += inc.copied;
+        }
+        assert_eq!(stamped, 4, "one owned cluster per layer");
+        job.finalize(&mut chain).unwrap();
+        fence.end();
+        assert!(chain.active().has_bfi(), "format flag flipped");
+        // every stamp agrees with the chain walk (the §5 invariant)
+        let active = chain.active();
+        let own = active.chain_index();
+        for vc in 0..active.geom().num_vclusters() {
+            assert_eq!(
+                active.l2_entry(vc).unwrap().sqemu_view(own),
+                chain.resolve_walk(vc).unwrap(),
+                "vc={vc}"
+            );
+        }
+        assert!(qcheck::check_chain(&chain).unwrap().is_clean());
+    }
+
+    #[test]
+    fn flag_survives_reopen_and_enables_sqemu_snapshots() {
+        let (node, mut chain) = vanilla_chain(2);
+        let fence = Arc::new(JobFence::default());
+        fence.begin();
+        let mut job = LiveStampJob::new(&chain, Arc::clone(&fence));
+        while !job.run_increment(&mut chain, 64).unwrap().complete {}
+        job.finalize(&mut chain).unwrap();
+        fence.end();
+        let active_name = chain.active().name.clone();
+        drop(chain);
+        let reopened = Chain::open(&*node, &active_name, DataMode::Real).unwrap();
+        assert!(reopened.active().has_bfi());
+        // a stamped chain can now take SQEMU snapshots
+        let mut c = reopened;
+        snapshot::snapshot_sqemu(&mut c, &*node, "img-sq").unwrap();
+        assert!(qcheck::check_chain(&c).unwrap().is_clean());
+    }
+
+    #[test]
+    fn idempotent_on_already_stamped_chain() {
+        let (_n, mut chain) = vanilla_chain(3);
+        snapshot::convert_to_sqemu(&chain).unwrap();
+        chain.active().set_feature_bfi().unwrap();
+        let fence = Arc::new(JobFence::default());
+        fence.begin();
+        let mut job = LiveStampJob::new(&chain, Arc::clone(&fence));
+        let mut restamped = 0;
+        let mut inc = Increment::default();
+        while !inc.complete {
+            inc = job.run_increment(&mut chain, 64).unwrap();
+            restamped += inc.copied;
+        }
+        job.finalize(&mut chain).unwrap();
+        fence.end();
+        assert_eq!(restamped, 0, "no entry rewritten on a stamped chain");
+    }
+}

@@ -1,0 +1,285 @@
+//! Live stream: incremental top-down copy of backing clusters into the
+//! active volume, concurrent with guest I/O.
+//!
+//! The offline [`crate::qcow::snapshot::stream_merge`] pauses the VM for
+//! the whole merge. This job walks the virtual-cluster space in bounded
+//! increments instead; each increment copies clusters whose newest
+//! version lives in a backing file into the active volume. Guest writes
+//! that land during the job mark their cluster in the [`JobFence`] as
+//! already-newer and are never clobbered. When every cluster has been
+//! examined, `finalize` runs a catch-up pass (repairing entries that a
+//! stale cache writeback clobbered, reusing the already-copied data
+//! cluster recorded in the fence) and collapses the chain to the active
+//! volume alone.
+//!
+//! Backing files are never mutated, so any stale cached mapping a driver
+//! holds mid-job still reads bit-identical data.
+
+use super::{BlockJob, Increment, JobFence, JobKind};
+use crate::qcow::entry::L2Entry;
+use crate::qcow::{Chain, Image};
+use anyhow::{bail, Result};
+use std::sync::Arc;
+
+pub struct LiveStreamJob {
+    cursor: u64,
+    total: u64,
+    fence: Arc<JobFence>,
+    /// Scratch cluster buffer, reused across increments.
+    buf: Vec<u8>,
+}
+
+impl LiveStreamJob {
+    pub fn new(chain: &Chain, fence: Arc<JobFence>) -> LiveStreamJob {
+        let geom = *chain.active().geom();
+        LiveStreamJob {
+            cursor: 0,
+            total: geom.num_vclusters(),
+            fence,
+            buf: vec![0u8; geom.cluster_size() as usize],
+        }
+    }
+
+    /// Copy `vc`'s newest backing version into the active volume, if any.
+    /// Returns the bytes copied (0 when the cluster needs no work).
+    fn pull_cluster(&mut self, chain: &Chain, vc: u64) -> Result<u64> {
+        let active = chain.active();
+        let active_idx = (chain.len() - 1) as u16;
+        if active.l2_entry(vc)?.is_allocated_here() {
+            return Ok(0); // already local (guest write or earlier copy)
+        }
+        // a stale cache writeback may have clobbered an entry this job
+        // already wrote; the data cluster is still ours — just re-link it
+        if let Some(off) = self.fence.job_moved(vc) {
+            let stamp = if active.has_bfi() { Some(active_idx) } else { None };
+            active.set_l2_entry(vc, L2Entry::local(off, stamp))?;
+            return Ok(0);
+        }
+        let Some((bfi, off)) = chain.resolve_walk(vc)? else {
+            return Ok(0); // hole
+        };
+        if bfi == active_idx {
+            return Ok(0);
+        }
+        let src = chain.get(bfi).expect("walk returned in-range index");
+        let new_off = active.alloc_data_cluster()?;
+        src.read_data(off, 0, &mut self.buf)?;
+        active.write_data(new_off, 0, &self.buf)?;
+        let stamp = if active.has_bfi() { Some(active_idx) } else { None };
+        active.set_l2_entry(vc, L2Entry::local(new_off, stamp))?;
+        self.fence.note_job_move(vc, new_off);
+        Ok(self.buf.len() as u64)
+    }
+}
+
+impl BlockJob for LiveStreamJob {
+    fn kind(&self) -> JobKind {
+        JobKind::Stream
+    }
+
+    fn total_clusters(&self) -> u64 {
+        self.total
+    }
+
+    fn run_increment(&mut self, chain: &mut Chain, budget: u64) -> Result<Increment> {
+        let mut inc = Increment::default();
+        while inc.processed < budget && self.cursor < self.total {
+            let vc = self.cursor;
+            self.cursor += 1;
+            inc.processed += 1;
+            if self.fence.guest_wrote(vc) {
+                continue; // guest data is newer; never clobber
+            }
+            let bytes = self.pull_cluster(chain, vc)?;
+            if bytes > 0 {
+                inc.copied += 1;
+                inc.bytes += bytes;
+            }
+        }
+        inc.complete = self.cursor >= self.total;
+        Ok(inc)
+    }
+
+    fn finalize(&mut self, chain: &mut Chain) -> Result<()> {
+        // Catch-up: the driver's flush may have written back slices
+        // whose cached entries predate this job's copies. Only clusters
+        // this job relocated can have been clobbered (pre-existing
+        // local entries and guest writes were in the cache when their
+        // slice was fetched), so the fence's moved set is the exact
+        // work list — the pause here is O(clusters copied by the job),
+        // not O(disk). This call is atomic with respect to guest I/O.
+        for (vc, _off) in self.fence.moved_snapshot() {
+            self.pull_cluster(chain, vc)?;
+        }
+        // Collapse the chain: the active volume becomes a base image.
+        let active: Arc<Image> = Arc::clone(chain.active());
+        active.update_header(0, None)?;
+        if active.has_bfi() {
+            restamp_base(&active)?;
+        }
+        chain.replace_images(vec![active]);
+        Ok(())
+    }
+}
+
+/// Rewrite the stamps of a freshly collapsed active volume: every entry
+/// must be local data stamped with the new chain index 0 (or a hole).
+fn restamp_base(img: &Image) -> Result<u64> {
+    let geom = *img.geom();
+    let per_l2 = geom.entries_per_l2();
+    let mut rewritten = 0u64;
+    for l1_idx in 0..geom.l1_entries() {
+        let l2_off = img.l1_entry(l1_idx);
+        if l2_off == 0 {
+            continue;
+        }
+        let mut entries = img.read_l2_slice(l2_off, 0, per_l2)?;
+        let mut dirty = false;
+        for raw in entries.iter_mut() {
+            let e = L2Entry(*raw);
+            if e.is_zero() {
+                continue;
+            }
+            if !e.is_allocated_here() {
+                bail!(
+                    "live stream finalize: L1[{l1_idx}] holds a remote entry \
+                     after the catch-up pass (stamp {:?})",
+                    e.bfi()
+                );
+            }
+            let out = L2Entry::local(e.host_offset(), Some(0));
+            if out != e {
+                *raw = out.raw();
+                dirty = true;
+                rewritten += 1;
+            }
+        }
+        if dirty {
+            img.write_l2_slice(l2_off, 0, &entries)?;
+        }
+    }
+    Ok(rewritten)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::clock::{CostModel, VirtClock};
+    use crate::qcow::image::DataMode;
+    use crate::qcow::layout::{Geometry, FEATURE_BFI};
+    use crate::qcow::{qcheck, snapshot};
+    use crate::storage::node::StorageNode;
+
+    const CS: u64 = 64 << 10;
+
+    fn chain_with_layers(n: usize) -> (Arc<StorageNode>, Chain) {
+        let node = StorageNode::new("s", VirtClock::new(), CostModel::default());
+        let b = node.create_file("img-0").unwrap();
+        let img = Image::create(
+            "img-0",
+            b,
+            Geometry::new(16, 16 << 20).unwrap(),
+            FEATURE_BFI,
+            0,
+            None,
+            DataMode::Real,
+        )
+        .unwrap();
+        let mut chain = Chain::new(Arc::new(img)).unwrap();
+        for i in 0..n {
+            let img = chain.active();
+            let off = img.alloc_data_cluster().unwrap();
+            img.write_data(off, 0, &[i as u8 + 1; 64]).unwrap();
+            img.set_l2_entry(i as u64, L2Entry::local(off, Some(img.chain_index())))
+                .unwrap();
+            snapshot::snapshot_sqemu(&mut chain, &node, &format!("img-{}", i + 1)).unwrap();
+        }
+        (node, chain)
+    }
+
+    #[test]
+    fn streams_whole_chain_into_active_volume() {
+        let (_n, mut chain) = chain_with_layers(4);
+        let fence = Arc::new(JobFence::default());
+        fence.begin();
+        let mut job = LiveStreamJob::new(&chain, Arc::clone(&fence));
+        let mut inc = Increment::default();
+        let mut copied = 0;
+        while !inc.complete {
+            inc = job.run_increment(&mut chain, 7).unwrap();
+            assert!(inc.processed <= 7, "budget respected");
+            copied += inc.copied;
+        }
+        assert_eq!(copied, 4, "one cluster per layer");
+        job.finalize(&mut chain).unwrap();
+        fence.end();
+        assert_eq!(chain.len(), 1);
+        assert_eq!(chain.active().chain_index(), 0);
+        assert_eq!(chain.active().backing_name(), None);
+        let r = qcheck::check_chain(&chain).unwrap();
+        assert!(r.is_clean(), "{:?}", r.errors);
+        for i in 0..4u64 {
+            let (bfi, off) = chain.resolve_walk(i).unwrap().unwrap();
+            assert_eq!(bfi, 0);
+            let mut buf = [0u8; 8];
+            chain.get(0).unwrap().read_data(off, 0, &mut buf).unwrap();
+            assert_eq!(buf, [i as u8 + 1; 8]);
+        }
+    }
+
+    #[test]
+    fn guest_written_clusters_are_never_clobbered() {
+        let (_n, mut chain) = chain_with_layers(3);
+        let fence = Arc::new(JobFence::default());
+        fence.begin();
+        let mut job = LiveStreamJob::new(&chain, Arc::clone(&fence));
+        // simulate a guest COW write to cluster 1 before the job gets there
+        let active = Arc::clone(chain.active());
+        let own = active.chain_index();
+        let off = active.alloc_data_cluster().unwrap();
+        active.write_data(off, 0, &[0xAB; 64]).unwrap();
+        active.set_l2_entry(1, L2Entry::local(off, Some(own))).unwrap();
+        fence.note_guest_write(1);
+
+        let mut inc = Increment::default();
+        while !inc.complete {
+            inc = job.run_increment(&mut chain, 100).unwrap();
+        }
+        job.finalize(&mut chain).unwrap();
+        fence.end();
+        let (_bfi, o) = chain.resolve_walk(1).unwrap().unwrap();
+        let mut buf = [0u8; 8];
+        chain.get(0).unwrap().read_data(o, 0, &mut buf).unwrap();
+        assert_eq!(buf, [0xAB; 8], "guest write survived the stream");
+    }
+
+    #[test]
+    fn clobbered_entry_is_relinked_not_recopied() {
+        let (_n, mut chain) = chain_with_layers(2);
+        let fence = Arc::new(JobFence::default());
+        fence.begin();
+        let mut job = LiveStreamJob::new(&chain, Arc::clone(&fence));
+        let mut inc = Increment::default();
+        while !inc.complete {
+            inc = job.run_increment(&mut chain, 100).unwrap();
+        }
+        // simulate a stale cache writeback clobbering cluster 0's entry
+        // back to its pre-job remote stamp
+        let moved_off = fence.job_moved(0).unwrap();
+        let base_off = chain.get(0).unwrap().l2_entry(0).unwrap().host_offset();
+        chain
+            .active()
+            .set_l2_entry(0, L2Entry::remote(base_off, 0))
+            .unwrap();
+        let len_before = chain.active().file_len();
+        job.finalize(&mut chain).unwrap();
+        fence.end();
+        // finalize reused the already-copied cluster: no new allocation
+        assert_eq!(chain.active().file_len(), len_before);
+        assert_eq!(
+            chain.active().l2_entry(0).unwrap().host_offset(),
+            moved_off
+        );
+        assert!(qcheck::check_chain(&chain).unwrap().is_clean());
+    }
+}

@@ -1,6 +1,7 @@
 //! Subcommand implementations.
 
 use super::Args;
+use crate::blockjob::{BlockJob, JobFence, JobKind, LiveStampJob, LiveStreamJob, RateLimiter};
 use crate::cache::CacheConfig;
 use crate::chaingen::ChainSpec;
 use crate::characterize::population::{Population, PopulationConfig};
@@ -81,6 +82,180 @@ pub fn stream(args: &Args) -> Result<()> {
         chain.len()
     );
     // merged predecessors are gone from the chain; delete their files
+    Ok(())
+}
+
+/// `sqemu job <verb>`: incremental, rate-limited chain maintenance over
+/// a directory store. Unlike `sqemu stream`/`convert` (which run to
+/// completion in one blocking pass), a job runs in bounded increments,
+/// honours a bytes/second rate limit against wall time, records its
+/// lifecycle in `<dir>/sqemu-jobs.log`, and polls for a cooperative
+/// cancel marker between increments — so `sqemu job cancel` from
+/// another terminal stops it at the next increment boundary.
+pub fn job(verb: &str, args: &Args) -> Result<()> {
+    match verb {
+        "start" => job_start(args),
+        "list" => job_list(args),
+        "cancel" => job_cancel(args),
+        other => bail!("unknown job verb '{other}' (try start|list|cancel)"),
+    }
+}
+
+fn journal_path(dir: &str) -> std::path::PathBuf {
+    std::path::Path::new(dir).join("sqemu-jobs.log")
+}
+
+fn cancel_marker(dir: &str, id: &str) -> std::path::PathBuf {
+    std::path::Path::new(dir).join(format!("sqemu-job-{id}.cancel"))
+}
+
+fn journal_append(
+    dir: &str,
+    id: &str,
+    kind: JobKind,
+    state: &str,
+    processed: u64,
+    total: u64,
+    copied: u64,
+) -> Result<()> {
+    use std::io::Write;
+    let mut f = std::fs::OpenOptions::new()
+        .create(true)
+        .append(true)
+        .open(journal_path(dir))?;
+    writeln!(f, "{id} {} {state} {processed}/{total} {copied}", kind.name())?;
+    Ok(())
+}
+
+fn job_start(args: &Args) -> Result<()> {
+    let s = store(args)?;
+    let dir = args.get("dir").unwrap_or(".").to_string();
+    let active = args.require("active")?;
+    let kind_s = args.get("kind").unwrap_or("stream");
+    let kind = JobKind::parse(kind_s)
+        .ok_or_else(|| anyhow::anyhow!("--kind expects stream|stamp, got '{kind_s}'"))?;
+    let rate = args.size_or("rate", 0)?; // bytes/s; 0 = unlimited
+    let increment = args.u64_or("increment", 32)?.max(1);
+    let id = args
+        .get("id")
+        .map(str::to_string)
+        .unwrap_or_else(|| format!("job-{}", std::process::id()));
+
+    let mut chain = Chain::open(&s, active, DataMode::Real)?;
+    let cluster = chain.active().geom().cluster_size();
+    let fence = std::sync::Arc::new(JobFence::default());
+    fence.begin();
+    let mut job: Box<dyn BlockJob> = match kind {
+        JobKind::Stream => Box::new(LiveStreamJob::new(&chain, std::sync::Arc::clone(&fence))),
+        JobKind::Stamp => Box::new(LiveStampJob::new(&chain, std::sync::Arc::clone(&fence))),
+    };
+    let total = job.total_clusters();
+    let len_before = chain.len();
+    journal_append(&dir, &id, kind, "running", 0, total, 0)?;
+    println!(
+        "job '{id}': {} over '{active}' ({total} clusters, chain length \
+         {len_before}, rate {})",
+        kind.name(),
+        if rate == 0 { "unlimited".to_string() } else { format!("{}/s", human_bytes(rate)) },
+    );
+
+    let t0 = std::time::Instant::now();
+    let now_ns = |t0: &std::time::Instant| t0.elapsed().as_nanos() as u64;
+    let mut limiter = RateLimiter::new(rate, increment * cluster, now_ns(&t0));
+    let marker = cancel_marker(&dir, &id);
+    // a marker left over from cancelling an already-finished job (or a
+    // recycled default id) must not kill this fresh job
+    let _ = std::fs::remove_file(&marker);
+    let (mut processed, mut copied) = (0u64, 0u64);
+    loop {
+        if marker.exists() {
+            let _ = std::fs::remove_file(&marker);
+            journal_append(&dir, &id, kind, "cancelled", processed, total, copied)?;
+            println!("job '{id}' cancelled at {processed}/{total} clusters");
+            return Ok(());
+        }
+        let now = now_ns(&t0);
+        let ready = limiter.ready_at(now);
+        if ready > now {
+            std::thread::sleep(std::time::Duration::from_nanos(ready - now));
+        }
+        let inc = job.run_increment(&mut chain, increment)?;
+        processed += inc.processed;
+        copied += inc.copied;
+        limiter.consume(inc.bytes, now_ns(&t0));
+        if inc.complete {
+            break;
+        }
+    }
+    job.finalize(&mut chain)?;
+    fence.end();
+    // fail loudly if the finished job left anything inconsistent
+    let report = qcheck::check_chain(&chain)?;
+    if !report.is_clean() {
+        journal_append(&dir, &id, kind, "failed", processed, total, copied)?;
+        for e in &report.errors {
+            eprintln!("ERROR: {e}");
+        }
+        bail!("post-job qcheck found {} errors", report.errors.len());
+    }
+    journal_append(&dir, &id, kind, "completed", processed, total, copied)?;
+    match kind {
+        JobKind::Stream => println!(
+            "job '{id}' completed: {copied} clusters copied, chain {len_before} -> {} \
+             (merged backing files can now be deleted)",
+            chain.len()
+        ),
+        JobKind::Stamp => println!(
+            "job '{id}' completed: {copied} entries stamped; '{}' now carries the \
+             sqemu format flag",
+            chain.active().name
+        ),
+    }
+    println!("qcheck: clean ({} consistent clusters)", report.ok_clusters);
+    Ok(())
+}
+
+fn job_list(args: &Args) -> Result<()> {
+    let dir = args.get("dir").unwrap_or(".");
+    let path = journal_path(dir);
+    let content = match std::fs::read_to_string(&path) {
+        Ok(c) => c,
+        Err(_) => {
+            println!("no jobs recorded in {}", path.display());
+            return Ok(());
+        }
+    };
+    // latest journal line per job id, in first-seen order
+    let mut order: Vec<&str> = Vec::new();
+    let mut latest: std::collections::BTreeMap<&str, &str> = Default::default();
+    for line in content.lines() {
+        let Some(id) = line.split_whitespace().next() else { continue };
+        if !latest.contains_key(id) {
+            order.push(id);
+        }
+        latest.insert(id, line);
+    }
+    println!("{:<16} {:<8} {:<10} {:>14} {:>8}", "ID", "KIND", "STATE", "PROGRESS", "COPIED");
+    for id in order {
+        let fields: Vec<&str> = latest[id].split_whitespace().collect();
+        if fields.len() >= 5 {
+            println!(
+                "{:<16} {:<8} {:<10} {:>14} {:>8}",
+                fields[0], fields[1], fields[2], fields[3], fields[4]
+            );
+        }
+    }
+    Ok(())
+}
+
+fn job_cancel(args: &Args) -> Result<()> {
+    let dir = args.get("dir").unwrap_or(".");
+    let id = args.require("id")?;
+    std::fs::write(cancel_marker(dir, id), b"cancel")?;
+    println!(
+        "cancel requested for job '{id}'; a running `sqemu job start` in \
+         {dir} will stop at its next increment boundary"
+    );
     Ok(())
 }
 

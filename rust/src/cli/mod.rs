@@ -8,6 +8,9 @@
 //! sqemu snapshot --dir D --active N --new M
 //! sqemu convert --dir D --active N            # stamp a vanilla chain
 //! sqemu stream  --dir D --active N --from I --to J
+//! sqemu job start --dir D --active N --kind stream|stamp [--rate 64M]
+//! sqemu job list --dir D                      # job journal
+//! sqemu job cancel --dir D --id J             # cooperative cancel
 //! sqemu info    --dir D --name N
 //! sqemu check   --dir D --active N
 //! sqemu characterize [--chains N]             # §3 figures
@@ -26,6 +29,14 @@ pub fn run(argv: Vec<String>) -> Result<()> {
         print_usage();
         return Ok(());
     };
+    if cmd == "job" {
+        // `sqemu job <verb> --flags ...` — the verb is positional
+        let Some((verb, rest)) = rest.split_first() else {
+            bail!("usage: sqemu job start|list|cancel --dir D ...");
+        };
+        let args = Args::parse(rest)?;
+        return commands::job(verb, &args);
+    }
     let args = Args::parse(rest)?;
     match cmd.as_str() {
         "create" => commands::create(&args),
@@ -54,6 +65,10 @@ fn print_usage() {
          \x20 snapshot --dir D --active N --new M\n\
          \x20 convert  --dir D --active N\n\
          \x20 stream   --dir D --active N --from I --to J\n\
+         \x20 job start --dir D --active N --kind stream|stamp [--rate 64M] \
+         [--increment 32] [--id J]\n\
+         \x20 job list --dir D\n\
+         \x20 job cancel --dir D --id J\n\
          \x20 info     --dir D --name N\n\
          \x20 check    --dir D --active N\n\
          \n\

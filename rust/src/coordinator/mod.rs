@@ -17,7 +17,13 @@
 //!   to the bit-exact host kernels without artifacts.
 //! * [`streaming::StreamingOrchestrator`] — plans merges with the
 //!   `stream_fold` kernel, validates the plan, pauses the VM, executes
-//!   [`crate::qcow::snapshot::stream_merge`] and resumes.
+//!   [`crate::qcow::snapshot::stream_merge`], verifies with `qcheck`
+//!   and resumes (the offline baseline).
+//! * live block jobs — [`server::Coordinator::start_job`] admits a
+//!   [`crate::blockjob`] stream/stamp job against the per-node
+//!   bandwidth budget and runs it on the VM worker interleaved with
+//!   guest I/O (no pause); lifecycle via `list_jobs` / `cancel_job` /
+//!   `pause_job` / `resume_job` and `sqemu job ...`.
 //!
 //! [`FileStore`]: crate::storage::store::FileStore
 
@@ -29,4 +35,4 @@ pub mod streaming;
 
 pub use batcher::BulkTranslator;
 pub use placement::NodeSet;
-pub use server::{Coordinator, CoordinatorConfig, VmClient, VmConfig};
+pub use server::{Coordinator, CoordinatorConfig, JobSpec, VmClient, VmConfig};

@@ -6,15 +6,30 @@
 //!  clients ──► VmClient ──► bounded queue ──► VM worker thread
 //!                               │                 │ owns the Driver
 //!                       (backpressure =           │ (vanilla | sqemu)
-//!                        full queue blocks)       ▼
+//!                        full queue blocks)       │ + at most one live
+//!                                                 ▼   block-job runner
 //!                                          Chain on NodeSet
-//!  control plane: launch / snapshot / stream / stop, bulk translation
+//!  control plane: launch / snapshot / stream / stop, bulk translation,
+//!  live block jobs (admission via the per-node JobScheduler)
 //! ```
+//!
+//! Live jobs and guest requests interleave on the worker thread: after
+//! every guest request the worker gives the job runner one bounded step,
+//! and while the queue is idle it drains the job continuously (advancing
+//! the virtual clock across rate-limiter stalls). Guest requests always
+//! preempt the next increment, so the guest-visible latency tail is
+//! bounded by one increment — the contrast with the offline
+//! [`Coordinator::stream_vm`] pause is the subject of
+//! `benches/fig20_live_blockjobs.rs`.
 
 use super::batcher::BulkTranslator;
 use super::placement::NodeSet;
 use super::stats::{VmStats, VmStatsSnapshot};
 use super::streaming::{StreamReport, StreamingOrchestrator};
+use crate::blockjob::scheduler::{JobScheduler, Reservation};
+use crate::blockjob::{
+    JobKind, JobRunner, JobShared, JobStatus, LiveStampJob, LiveStreamJob, Step,
+};
 use crate::cache::CacheConfig;
 use crate::chaingen::ChainSpec;
 use crate::metrics::clock::{CostModel, VirtClock};
@@ -28,7 +43,8 @@ use crate::vdisk::vanilla::VanillaDriver;
 use crate::vdisk::{Driver, DriverKind};
 use anyhow::{anyhow, bail, Result};
 use std::collections::HashMap;
-use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
+use std::sync::atomic::Ordering::Relaxed;
+use std::sync::mpsc::{sync_channel, Receiver, RecvTimeoutError, SyncSender, TryRecvError};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 
@@ -37,11 +53,22 @@ pub struct CoordinatorConfig {
     pub cost: CostModel,
     /// Per-VM request queue depth (backpressure bound).
     pub queue_depth: usize,
+    /// Aggregate background-job bandwidth budget per storage node
+    /// (bytes/second) — the admission ceiling of the [`JobScheduler`].
+    pub job_budget_bps: u64,
+    /// Clusters a job may process per increment (the guest's worst-case
+    /// wait behind one job step).
+    pub job_increment_clusters: u64,
 }
 
 impl Default for CoordinatorConfig {
     fn default() -> Self {
-        CoordinatorConfig { cost: CostModel::default(), queue_depth: 64 }
+        CoordinatorConfig {
+            cost: CostModel::default(),
+            queue_depth: 64,
+            job_budget_bps: 512 << 20,
+            job_increment_clusters: 32,
+        }
     }
 }
 
@@ -60,15 +87,49 @@ pub enum VmChain {
     Generate(ChainSpec),
 }
 
+/// Parameters of a live block job (`sqemu job start`).
+#[derive(Clone, Copy, Debug)]
+pub struct JobSpec {
+    pub kind: JobKind,
+    /// Bytes/second of job I/O; 0 = unlimited (reserves the node's whole
+    /// maintenance budget at admission).
+    pub rate_bps: u64,
+    /// Create the job paused; it holds its bandwidth reservation but
+    /// runs no increments until [`Coordinator::resume_job`].
+    pub start_paused: bool,
+}
+
+impl JobSpec {
+    pub fn stream(rate_bps: u64) -> JobSpec {
+        JobSpec { kind: JobKind::Stream, rate_bps, start_paused: false }
+    }
+
+    pub fn stamp(rate_bps: u64) -> JobSpec {
+        JobSpec { kind: JobKind::Stamp, rate_bps, start_paused: false }
+    }
+
+    pub fn paused(mut self) -> JobSpec {
+        self.start_paused = true;
+        self
+    }
+}
+
 enum Request {
-    Read { voff: u64, len: usize, reply: SyncSender<Result<Vec<u8>>> },
-    Write { voff: u64, data: Vec<u8>, reply: SyncSender<Result<()>> },
+    Read { voff: u64, len: usize, t_enq: u64, reply: SyncSender<Result<Vec<u8>>> },
+    Write { voff: u64, data: Vec<u8>, t_enq: u64, reply: SyncSender<Result<()>> },
     Flush { reply: SyncSender<Result<()>> },
     Counters { reply: SyncSender<CounterSnapshot> },
     /// Pause the worker and hand the chain to `f` (snapshot/stream).
     WithChain {
         f: Box<dyn FnOnce(&mut Chain) -> Result<String> + Send>,
         reply: SyncSender<Result<String>>,
+    },
+    /// Begin a live block job on this VM's worker.
+    JobStart {
+        spec: JobSpec,
+        shared: Arc<JobShared>,
+        increment_clusters: u64,
+        reply: SyncSender<Result<()>>,
     },
     Stop,
 }
@@ -82,7 +143,15 @@ struct VmHandle {
     data_mode: DataMode,
 }
 
-/// The coordinator: owns nodes, VMs and the AOT runtime.
+/// Registry entry for a job: its cross-thread handle plus the bandwidth
+/// reservation to give back once the job is terminal.
+struct JobEntry {
+    vm: String,
+    shared: Arc<JobShared>,
+    reservation: Option<Reservation>,
+}
+
+/// The coordinator: owns nodes, VMs, the AOT runtime and the job ledger.
 pub struct Coordinator {
     pub nodes: Arc<NodeSet>,
     pub clock: Arc<VirtClock>,
@@ -90,6 +159,9 @@ pub struct Coordinator {
     cfg: CoordinatorConfig,
     runtime: Option<RuntimeService>,
     vms: Mutex<HashMap<String, VmHandle>>,
+    scheduler: JobScheduler,
+    jobs: Mutex<Vec<JobEntry>>,
+    next_job_id: Mutex<u64>,
 }
 
 impl Coordinator {
@@ -99,6 +171,7 @@ impl Coordinator {
         cfg: CoordinatorConfig,
         runtime: Option<RuntimeService>,
     ) -> Arc<Coordinator> {
+        let scheduler = JobScheduler::new(cfg.job_budget_bps);
         Arc::new(Coordinator {
             nodes,
             clock,
@@ -106,6 +179,9 @@ impl Coordinator {
             cfg,
             runtime,
             vms: Mutex::new(HashMap::new()),
+            scheduler,
+            jobs: Mutex::new(Vec::new()),
+            next_job_id: Mutex::new(0),
         })
     }
 
@@ -181,10 +257,11 @@ impl Coordinator {
         let stats = Arc::new(VmStats::default());
         let (tx, rx) = sync_channel::<Request>(self.cfg.queue_depth);
         let worker_stats = Arc::clone(&stats);
+        let worker_clock = Arc::clone(&self.clock);
         let vm_name = name.to_string();
         let join = std::thread::Builder::new()
             .name(format!("vm-{name}"))
-            .spawn(move || worker_loop(vm_name, driver, rx, worker_stats))
+            .spawn(move || worker_loop(vm_name, driver, rx, worker_stats, worker_clock))
             .expect("spawn vm worker");
         vms.insert(
             name.to_string(),
@@ -197,14 +274,14 @@ impl Coordinator {
                 data_mode,
             },
         );
-        Ok(VmClient { tx })
+        Ok(VmClient { tx, clock: Arc::clone(&self.clock) })
     }
 
     /// Get a fresh client handle for a running VM.
     pub fn client(&self, name: &str) -> Result<VmClient> {
         let vms = self.vms.lock().unwrap();
         let h = vms.get(name).ok_or_else(|| anyhow!("no vm '{name}'"))?;
-        Ok(VmClient { tx: h.tx.clone() })
+        Ok(VmClient { tx: h.tx.clone(), clock: Arc::clone(&self.clock) })
     }
 
     pub fn vm_stats(&self, name: &str) -> Result<VmStatsSnapshot> {
@@ -242,11 +319,12 @@ impl Coordinator {
             }
             Ok(new_file.clone())
         }))??;
-        stats.snapshots.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        stats.snapshots.fetch_add(1, Relaxed);
         Ok(self.clock.now() - t0)
     }
 
-    /// Stream-merge a window of a running VM's chain (paused).
+    /// Stream-merge a window of a running VM's chain (paused — the
+    /// offline baseline; [`Coordinator::start_job`] is the live path).
     pub fn stream_vm(self: &Arc<Self>, name: &str, from: u16, to: u16) -> Result<StreamReport> {
         let stats = {
             let vms = self.vms.lock().unwrap();
@@ -264,7 +342,7 @@ impl Coordinator {
                 report.len_before, report.len_after
             ))
         }))??;
-        stats.streams.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        stats.streams.fetch_add(1, Relaxed);
         let parts: Vec<u64> = report_json
             .split_whitespace()
             .map(|p| p.parse().unwrap_or(0))
@@ -280,7 +358,131 @@ impl Coordinator {
         })
     }
 
-    /// Stop one VM (flushes its caches).
+    // ------------------------------------------------------- live jobs
+
+    /// Start a live block job on a running VM. Admission reserves
+    /// `spec.rate_bps` of maintenance bandwidth on the storage node
+    /// holding the VM's active volume; the reservation is released when
+    /// the job reaches a terminal state (checked lazily by the job
+    /// APIs). Returns the job's cross-thread handle.
+    pub fn start_job(self: &Arc<Self>, vm: &str, spec: JobSpec) -> Result<Arc<JobShared>> {
+        self.reap_jobs();
+        let client = self.client(vm)?;
+        // locate the active volume's node for admission
+        let active_name =
+            client.with_chain(Box::new(|chain| Ok(chain.active().name.clone())))??;
+        let node = self.nodes.locate(&active_name).ok_or_else(|| {
+            anyhow!("cannot locate the node holding '{active_name}' for job admission")
+        })?;
+        let reservation = self.scheduler.admit(&node, spec.rate_bps)?;
+        let id = {
+            let mut n = self.next_job_id.lock().unwrap();
+            *n += 1;
+            format!("job-{}", *n)
+        };
+        let shared = Arc::new(JobShared::new(&id, spec.kind, spec.rate_bps));
+        if spec.start_paused {
+            shared.pause();
+        }
+        let (reply, rx) = sync_channel(1);
+        let started: Result<()> = (|| {
+            client
+                .tx
+                .send(Request::JobStart {
+                    spec,
+                    shared: Arc::clone(&shared),
+                    increment_clusters: self.cfg.job_increment_clusters,
+                    reply,
+                })
+                .map_err(|_| anyhow!("vm worker gone"))?;
+            rx.recv().map_err(|_| anyhow!("vm worker gone"))?
+        })();
+        if let Err(e) = started {
+            self.scheduler.release(&reservation);
+            return Err(e);
+        }
+        let stats = {
+            let vms = self.vms.lock().unwrap();
+            vms.get(vm).map(|h| Arc::clone(&h.stats))
+        };
+        if let Some(stats) = stats {
+            stats.jobs_started.fetch_add(1, Relaxed);
+        }
+        self.jobs.lock().unwrap().push(JobEntry {
+            vm: vm.to_string(),
+            shared: Arc::clone(&shared),
+            reservation: Some(reservation),
+        });
+        Ok(shared)
+    }
+
+    /// All jobs ever started (newest last), with live status.
+    pub fn list_jobs(&self) -> Vec<(String, JobStatus)> {
+        self.reap_jobs();
+        self.jobs
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|e| (e.vm.clone(), e.shared.status()))
+            .collect()
+    }
+
+    /// Status of one job by id.
+    pub fn job_status(&self, id: &str) -> Result<JobStatus> {
+        self.reap_jobs();
+        self.jobs
+            .lock()
+            .unwrap()
+            .iter()
+            .find(|e| e.shared.id == id)
+            .map(|e| e.shared.status())
+            .ok_or_else(|| anyhow!("no job '{id}'"))
+    }
+
+    /// Request cooperative cancellation of a job.
+    pub fn cancel_job(&self, id: &str) -> Result<()> {
+        let jobs = self.jobs.lock().unwrap();
+        let e = jobs
+            .iter()
+            .find(|e| e.shared.id == id)
+            .ok_or_else(|| anyhow!("no job '{id}'"))?;
+        e.shared.cancel();
+        Ok(())
+    }
+
+    pub fn pause_job(&self, id: &str) -> Result<()> {
+        let jobs = self.jobs.lock().unwrap();
+        let e = jobs
+            .iter()
+            .find(|e| e.shared.id == id)
+            .ok_or_else(|| anyhow!("no job '{id}'"))?;
+        e.shared.pause();
+        Ok(())
+    }
+
+    pub fn resume_job(&self, id: &str) -> Result<()> {
+        let jobs = self.jobs.lock().unwrap();
+        let e = jobs
+            .iter()
+            .find(|e| e.shared.id == id)
+            .ok_or_else(|| anyhow!("no job '{id}'"))?;
+        e.shared.resume();
+        Ok(())
+    }
+
+    /// Release bandwidth reservations of terminal jobs (lazy reaping).
+    fn reap_jobs(&self) {
+        let mut jobs = self.jobs.lock().unwrap();
+        for e in jobs.iter_mut() {
+            if e.shared.state().is_terminal() {
+                if let Some(r) = e.reservation.take() {
+                    self.scheduler.release(&r);
+                }
+            }
+        }
+    }
+
+    /// Stop one VM (flushes its caches; cancels any running job).
     pub fn stop_vm(&self, name: &str) -> Result<()> {
         let mut vms = self.vms.lock().unwrap();
         let mut h = vms.remove(name).ok_or_else(|| anyhow!("no vm '{name}'"))?;
@@ -288,6 +490,8 @@ impl Coordinator {
         if let Some(j) = h.join.take() {
             let _ = j.join();
         }
+        drop(vms);
+        self.reap_jobs();
         Ok(())
     }
 
@@ -326,13 +530,14 @@ impl Drop for Coordinator {
 #[derive(Clone)]
 pub struct VmClient {
     tx: SyncSender<Request>,
+    clock: Arc<VirtClock>,
 }
 
 impl VmClient {
     pub fn read(&self, voff: u64, len: usize) -> Result<Vec<u8>> {
         let (reply, rx) = sync_channel(1);
         self.tx
-            .send(Request::Read { voff, len, reply })
+            .send(Request::Read { voff, len, t_enq: self.clock.now(), reply })
             .map_err(|_| anyhow!("vm worker gone"))?;
         rx.recv().map_err(|_| anyhow!("vm worker gone"))?
     }
@@ -340,7 +545,7 @@ impl VmClient {
     pub fn write(&self, voff: u64, data: Vec<u8>) -> Result<()> {
         let (reply, rx) = sync_channel(1);
         self.tx
-            .send(Request::Write { voff, data, reply })
+            .send(Request::Write { voff, data, t_enq: self.clock.now(), reply })
             .map_err(|_| anyhow!("vm worker gone"))?;
         rx.recv().map_err(|_| anyhow!("vm worker gone"))?
     }
@@ -373,30 +578,76 @@ impl VmClient {
     }
 }
 
-/// The worker: single owner of the VM's driver. Chain-level operations
-/// (snapshot/stream) tear the driver down, run on the bare chain, and
-/// rebuild it — mirroring how the provider pauses a VM's I/O for these.
+/// The worker: single owner of the VM's driver and (at most one) live
+/// job runner. Chain-level operations (snapshot/stream) tear the driver
+/// down, run on the bare chain, and rebuild it; they are refused while a
+/// job is running (conflicting chain rewrites). Job increments run after
+/// each guest request and continuously while the queue is idle.
 fn worker_loop(
     _name: String,
     mut driver: Box<dyn Driver + Send>,
     rx: Receiver<Request>,
     stats: Arc<VmStats>,
+    clock: Arc<VirtClock>,
 ) {
-    use std::sync::atomic::Ordering::Relaxed;
-    while let Ok(req) = rx.recv() {
+    let mut runner: Option<JobRunner> = None;
+    loop {
+        // poll (don't block) while a runnable job wants the CPU
+        let req = if runner.as_ref().map_or(false, |r| r.wants_cpu()) {
+            match rx.try_recv() {
+                Ok(r) => Some(r),
+                Err(TryRecvError::Empty) => None,
+                Err(TryRecvError::Disconnected) => break,
+            }
+        } else if runner.is_some() {
+            // paused job: wake periodically to notice resume/cancel
+            match rx.recv_timeout(std::time::Duration::from_millis(2)) {
+                Ok(r) => Some(r),
+                Err(RecvTimeoutError::Timeout) => None,
+                Err(RecvTimeoutError::Disconnected) => break,
+            }
+        } else {
+            match rx.recv() {
+                Ok(r) => Some(r),
+                Err(_) => break,
+            }
+        };
+        let Some(req) = req else {
+            // idle: drain the job, advancing virtual time over stalls
+            let step = runner
+                .as_mut()
+                .map(|r| r.step(driver.as_mut(), clock.now()));
+            match step {
+                Some(Step::Starved { ready_at }) => {
+                    // advance idle virtual time in bounded quanta: a
+                    // request enqueued concurrently is charged at most
+                    // one quantum of the stall, not all of it
+                    const IDLE_QUANTUM_NS: u64 = 100_000;
+                    let now = clock.now();
+                    if ready_at > now {
+                        clock.advance((ready_at - now).min(IDLE_QUANTUM_NS));
+                    }
+                }
+                Some(Step::Finished) => finish_job(&mut runner, &stats),
+                _ => {}
+            }
+            continue;
+        };
         match req {
-            Request::Read { voff, len, reply } => {
+            Request::Read { voff, len, t_enq, reply } => {
                 let mut buf = vec![0u8; len];
                 let r = driver.read(voff, &mut buf).map(|()| buf);
                 stats.reads.fetch_add(1, Relaxed);
                 stats.bytes_read.fetch_add(len as u64, Relaxed);
+                stats.record_latency(clock.now().saturating_sub(t_enq));
                 let _ = reply.send(r);
             }
-            Request::Write { voff, data, reply } => {
+            Request::Write { voff, data, t_enq, reply } => {
                 let n = data.len() as u64;
                 let r = driver.write(voff, &data);
                 stats.writes.fetch_add(1, Relaxed);
                 stats.bytes_written.fetch_add(n, Relaxed);
+                stats.record_latency(clock.now().saturating_sub(t_enq));
                 let _ = reply.send(r);
             }
             Request::Flush { reply } => {
@@ -406,18 +657,87 @@ fn worker_loop(
                 let _ = reply.send(driver.counters());
             }
             Request::WithChain { f, reply } => {
-                let r = (|| -> Result<String> {
-                    driver.flush()?;
-                    let out = f(driver.chain_mut())?;
-                    driver.reopen()?;
-                    Ok(out)
-                })();
+                let r = if runner.is_some() {
+                    Err(anyhow!(
+                        "chain operation refused: a live block job is running"
+                    ))
+                } else {
+                    (|| -> Result<String> {
+                        driver.flush()?;
+                        let out = f(driver.chain_mut())?;
+                        driver.reopen()?;
+                        Ok(out)
+                    })()
+                };
+                let _ = reply.send(r);
+            }
+            Request::JobStart { spec, shared, increment_clusters, reply } => {
+                let r = if runner.is_some() {
+                    Err(anyhow!("a block job is already running on this vm"))
+                } else {
+                    let fence = Arc::clone(driver.fence());
+                    let job: Box<dyn crate::blockjob::BlockJob> = match spec.kind {
+                        JobKind::Stream => {
+                            Box::new(LiveStreamJob::new(driver.chain(), Arc::clone(&fence)))
+                        }
+                        JobKind::Stamp => {
+                            Box::new(LiveStampJob::new(driver.chain(), Arc::clone(&fence)))
+                        }
+                    };
+                    let burst = increment_clusters
+                        .saturating_mul(driver.chain().active().geom().cluster_size());
+                    runner = Some(JobRunner::new(
+                        job,
+                        shared,
+                        fence,
+                        increment_clusters,
+                        burst,
+                        clock.now(),
+                    ));
+                    Ok(())
+                };
                 let _ = reply.send(r);
             }
             Request::Stop => {
+                if let Some(r) = runner.take() {
+                    // the worker is going away: a running job cannot
+                    // make further progress — record it as cancelled
+                    r.shared().cancel();
+                    stats.jobs_cancelled.fetch_add(1, Relaxed);
+                    r.shared().set_state(crate::blockjob::JobState::Cancelled);
+                    driver.fence().end();
+                }
                 let _ = driver.flush();
                 break;
             }
         }
+        // one bounded job step rides behind every request (no clock
+        // advance here: a starved job waits for idle time)
+        let step = match runner.as_mut() {
+            Some(r) if r.wants_cpu() => Some(r.step(driver.as_mut(), clock.now())),
+            _ => None,
+        };
+        if let Some(Step::Finished) = step {
+            finish_job(&mut runner, &stats);
+        }
     }
+}
+
+/// Account a finished job and drop its runner.
+fn finish_job(runner: &mut Option<JobRunner>, stats: &Arc<VmStats>) {
+    let Some(r) = runner.take() else { return };
+    let st = r.shared().status();
+    match st.state {
+        crate::blockjob::JobState::Completed => {
+            stats.jobs_completed.fetch_add(1, Relaxed);
+        }
+        crate::blockjob::JobState::Cancelled => {
+            stats.jobs_cancelled.fetch_add(1, Relaxed);
+        }
+        _ => {
+            stats.jobs_failed.fetch_add(1, Relaxed);
+        }
+    }
+    stats.job_increments.fetch_add(st.increments, Relaxed);
+    stats.job_copied_clusters.fetch_add(st.copied, Relaxed);
 }

@@ -1,6 +1,8 @@
 //! Per-VM and fleet-level service statistics.
 
+use crate::metrics::histogram::Histogram;
 use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
 
 #[derive(Debug, Default)]
 pub struct VmStats {
@@ -12,10 +14,25 @@ pub struct VmStats {
     pub streams: AtomicU64,
     /// Requests rejected/blocked by a full queue (backpressure events).
     pub backpressure: AtomicU64,
+    /// Live block jobs (see [`crate::blockjob`]).
+    pub jobs_started: AtomicU64,
+    pub jobs_completed: AtomicU64,
+    pub jobs_cancelled: AtomicU64,
+    pub jobs_failed: AtomicU64,
+    pub job_increments: AtomicU64,
+    pub job_copied_clusters: AtomicU64,
+    /// Guest-visible request latency (enqueue → reply) in virtual ns —
+    /// the number a live job must keep flat while it drains the chain.
+    pub req_latency: Mutex<Histogram>,
 }
 
 impl VmStats {
+    pub fn record_latency(&self, ns: u64) {
+        self.req_latency.lock().unwrap().record(ns);
+    }
+
     pub fn snapshot(&self) -> VmStatsSnapshot {
+        let lat = self.req_latency.lock().unwrap();
         VmStatsSnapshot {
             reads: self.reads.load(Ordering::Relaxed),
             writes: self.writes.load(Ordering::Relaxed),
@@ -24,6 +41,17 @@ impl VmStats {
             snapshots: self.snapshots.load(Ordering::Relaxed),
             streams: self.streams.load(Ordering::Relaxed),
             backpressure: self.backpressure.load(Ordering::Relaxed),
+            jobs_started: self.jobs_started.load(Ordering::Relaxed),
+            jobs_completed: self.jobs_completed.load(Ordering::Relaxed),
+            jobs_cancelled: self.jobs_cancelled.load(Ordering::Relaxed),
+            jobs_failed: self.jobs_failed.load(Ordering::Relaxed),
+            job_increments: self.job_increments.load(Ordering::Relaxed),
+            job_copied_clusters: self.job_copied_clusters.load(Ordering::Relaxed),
+            req_count: lat.count(),
+            req_mean_ns: lat.mean() as u64,
+            req_p50_ns: lat.quantile(0.50),
+            req_p99_ns: lat.quantile(0.99),
+            req_max_ns: lat.max(),
         }
     }
 }
@@ -37,6 +65,17 @@ pub struct VmStatsSnapshot {
     pub snapshots: u64,
     pub streams: u64,
     pub backpressure: u64,
+    pub jobs_started: u64,
+    pub jobs_completed: u64,
+    pub jobs_cancelled: u64,
+    pub jobs_failed: u64,
+    pub job_increments: u64,
+    pub job_copied_clusters: u64,
+    pub req_count: u64,
+    pub req_mean_ns: u64,
+    pub req_p50_ns: u64,
+    pub req_p99_ns: u64,
+    pub req_max_ns: u64,
 }
 
 #[cfg(test)]
@@ -52,5 +91,20 @@ mod tests {
         assert_eq!(snap.reads, 3);
         assert_eq!(snap.bytes_read, 100);
         assert_eq!(snap.writes, 0);
+        assert_eq!(snap.jobs_started, 0);
+    }
+
+    #[test]
+    fn latency_percentiles_surface_in_snapshot() {
+        let s = VmStats::default();
+        for _ in 0..99 {
+            s.record_latency(1_000);
+        }
+        s.record_latency(1_000_000);
+        let snap = s.snapshot();
+        assert_eq!(snap.req_count, 100);
+        assert!(snap.req_p50_ns <= 1_000);
+        assert!(snap.req_p99_ns >= 900_000 || snap.req_max_ns >= 1_000_000);
+        assert!(snap.req_mean_ns > 1_000);
     }
 }

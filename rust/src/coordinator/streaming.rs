@@ -8,7 +8,7 @@
 //! cost so operators can schedule it.
 
 use super::batcher::BulkTranslator;
-use crate::qcow::{snapshot, Chain};
+use crate::qcow::{qcheck, snapshot, Chain};
 use crate::runtime::service::RuntimeService;
 use crate::runtime::{host, UNALLOCATED};
 use anyhow::{bail, Result};
@@ -105,6 +105,16 @@ impl StreamingOrchestrator {
         let copied = snapshot::stream_merge(chain, from, to)?;
         if copied != planned {
             bail!("stream plan mismatch: planned {planned}, copied {copied}");
+        }
+        // post-merge consistency gate: a merge that corrupted the chain
+        // must fail loudly, not hand the VM a broken disk
+        let check = qcheck::check_chain(chain)?;
+        if !check.is_clean() {
+            bail!(
+                "post-merge qcheck found {} errors: {}",
+                check.errors.len(),
+                check.errors.join("; ")
+            );
         }
         Ok(StreamReport {
             from,

@@ -17,6 +17,8 @@
 //! * [`cache`] — L2 slice caches: per-backing-file (vanilla) and unified
 //!   with cache correction (SQEMU).
 //! * [`vdisk`] — the two request-path drivers and their low-level metrics.
+//! * [`blockjob`] — live chain maintenance: incremental, rate-limited
+//!   stream/stamp jobs interleaved with guest I/O.
 //! * [`guest`] — simulated guest workloads (dd, fio, YCSB over an LSM
 //!   key-value store, VM boot).
 //! * [`chaingen`], [`characterize`] — chain generation + the §3 study.
@@ -26,6 +28,7 @@
 //! * [`bench`] — the figure-regeneration harness used by `cargo bench`.
 
 pub mod bench;
+pub mod blockjob;
 pub mod cache;
 pub mod chaingen;
 pub mod characterize;

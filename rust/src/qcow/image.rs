@@ -11,6 +11,7 @@ use super::layout::{Geometry, Header, ENTRY_SIZE, FEATURE_BFI};
 use super::refcount::Allocator;
 use crate::storage::backend::{read_u64, write_u64, BackendRef};
 use anyhow::{bail, Context, Result};
+use std::sync::atomic::{AtomicU32, Ordering};
 use std::sync::{Mutex, RwLock};
 
 /// How data clusters are materialized.
@@ -31,7 +32,9 @@ pub struct Image {
     pub name: String,
     backend: BackendRef,
     geom: Geometry,
-    flags: u32,
+    /// Feature flags; mutable because a live stamp job promotes a
+    /// vanilla image to the SQEMU format in place ([`Image::set_feature_bfi`]).
+    flags: AtomicU32,
     /// Mutable chain linkage: (chain_index, backing file name). Rewritten
     /// by streaming/placement via [`Image::update_header`].
     link: RwLock<(u16, Option<String>)>,
@@ -77,7 +80,7 @@ impl Image {
             name: name.to_string(),
             backend,
             geom: header.geom,
-            flags: header.flags,
+            flags: AtomicU32::new(header.flags),
             link: RwLock::new((header.chain_index, header.backing_name)),
             l1: RwLock::new(l1),
             alloc: Mutex::new(alloc),
@@ -103,7 +106,7 @@ impl Image {
             name: name.to_string(),
             backend,
             geom: header.geom,
-            flags: header.flags,
+            flags: AtomicU32::new(header.flags),
             link: RwLock::new((header.chain_index, header.backing_name)),
             l1: RwLock::new(l1),
             alloc: Mutex::new(alloc),
@@ -119,12 +122,12 @@ impl Image {
     }
 
     pub fn flags(&self) -> u32 {
-        self.flags
+        self.flags.load(Ordering::Relaxed)
     }
 
     /// Does this image carry §5.2 backing_file_index stamps?
     pub fn has_bfi(&self) -> bool {
-        self.flags & FEATURE_BFI != 0
+        self.flags() & FEATURE_BFI != 0
     }
 
     /// This file's position in its chain (0 = base image).
@@ -298,9 +301,26 @@ impl Image {
     ) -> Result<()> {
         let mut link = self.link.write().unwrap();
         *link = (chain_index, backing_name.map(str::to_string));
+        self.write_header_locked(&link)
+    }
+
+    /// Promote a vanilla image to the SQEMU format in place (live stamp
+    /// job, §5.1's "vanilla disk images can be easily converted"): sets
+    /// `FEATURE_BFI` in RAM and persists the header. The caller must
+    /// have stamped the L2 tables first — after this, drivers treat the
+    /// image's index as complete.
+    pub fn set_feature_bfi(&self) -> Result<()> {
+        let link = self.link.write().unwrap();
+        self.flags.fetch_or(FEATURE_BFI, Ordering::Relaxed);
+        self.write_header_locked(&link)
+    }
+
+    /// Rewrite cluster 0 from the current in-RAM header state. The
+    /// caller holds the `link` lock, serializing header writers.
+    fn write_header_locked(&self, link: &(u16, Option<String>)) -> Result<()> {
         let header = Header {
             geom: self.geom,
-            flags: self.flags,
+            flags: self.flags(),
             chain_index: link.0,
             backing_name: link.1.clone(),
         };

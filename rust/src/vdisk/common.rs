@@ -1,5 +1,6 @@
 //! State and helpers shared by both drivers.
 
+use crate::blockjob::JobFence;
 use crate::metrics::clock::{CostModel, VirtClock};
 use crate::metrics::counters::CacheCounters;
 use crate::metrics::histogram::Histogram;
@@ -27,6 +28,10 @@ pub struct DriverBase {
     pub counters: Arc<CacheCounters>,
     pub lookup_hist: Mutex<Histogram>,
     pub acct: Arc<MemoryAccountant>,
+    /// Write intercept shared with a live block job, if one is running
+    /// (see [`crate::blockjob`]): guest writes mark clusters as newer
+    /// than the job; job moves mark cached mappings as possibly stale.
+    pub fence: Arc<JobFence>,
     /// One registration per image: driver struct + in-RAM L1 mirror.
     mem: Vec<Registration>,
 }
@@ -45,6 +50,7 @@ impl DriverBase {
             counters: Arc::new(CacheCounters::new()),
             lookup_hist: Mutex::new(Histogram::new()),
             acct,
+            fence: Arc::new(JobFence::default()),
             mem,
         }
     }

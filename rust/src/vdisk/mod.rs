@@ -17,10 +17,12 @@ pub mod common;
 pub mod scalable;
 pub mod vanilla;
 
+use crate::blockjob::JobFence;
 use crate::metrics::counters::CounterSnapshot;
 use crate::metrics::histogram::Histogram;
 use crate::qcow::Chain;
 use anyhow::Result;
+use std::sync::Arc;
 
 /// Which request-path design a VM runs on.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -64,6 +66,11 @@ pub trait Driver: Send {
     /// Rebuild caches and per-snapshot state after the chain changed
     /// shape (snapshot appended a volume / streaming dropped files).
     fn reopen(&mut self) -> Result<()>;
+
+    /// The write intercept a live block job shares with this driver
+    /// (see [`crate::blockjob::JobFence`]). Inactive unless a job is
+    /// running against this VM.
+    fn fence(&self) -> &Arc<JobFence>;
 
     /// Low-level event counters (§6.3): hits, misses, hit-unallocated,
     /// per-file lookup distribution.

@@ -17,6 +17,7 @@ use crate::metrics::clock::{CostModel, VirtClock};
 use crate::metrics::counters::CounterSnapshot;
 use crate::metrics::histogram::Histogram;
 use crate::metrics::memory::MemoryAccountant;
+use crate::qcow::entry::L2Entry;
 use crate::qcow::Chain;
 use anyhow::Result;
 use std::sync::Arc;
@@ -177,16 +178,44 @@ impl Driver for ScalableDriver {
         let active_index = self.cache.active_index();
         let mut cursor = 0usize;
         for (vc, within, len) in self.base.segments(voff, data.len()) {
-            let (resolved, dt) = {
+            let (mut resolved, dt) = {
                 let t0 = self.base.clock.now();
                 let r = self.resolve(vc)?;
                 (r, self.base.clock.now() - t0)
             };
             self.base.record_lookup(dt);
+            // write intercept (live block jobs): mark this cluster as
+            // newer than the job, and — if the job already relocated
+            // it — bypass the (possibly stale) cached mapping. If a
+            // stale writeback clobbered the job's on-disk entry, re-link
+            // to the job's copy rather than trusting the clobbered
+            // entry (a zero entry would zero-fill and lose data).
+            self.base.fence.note_guest_write(vc);
+            let job_moved = self.base.fence.job_moved(vc);
+            if let Some(moved_off) = job_moved {
+                let active = self.base.chain.active();
+                resolved = match active.l2_entry(vc)?.sqemu_view(active_index) {
+                    Some((bfi, off)) if bfi == active_index => Some((bfi, off)),
+                    _ => {
+                        let stamp = if active.has_bfi() {
+                            Some(active_index)
+                        } else {
+                            None
+                        };
+                        active.set_l2_entry(vc, L2Entry::local(moved_off, stamp))?;
+                        Some((active_index, moved_off))
+                    }
+                };
+            }
             let chunk = &data[cursor..cursor + len];
             match resolved {
                 Some((bfi, off)) if bfi == active_index => {
                     self.base.chain.active().write_data(off, within, chunk)?;
+                    if job_moved.is_some() {
+                        // resync the cached entry with the bypassed
+                        // on-disk mapping
+                        self.cache.record_write(vc, off);
+                    }
                 }
                 other => {
                     let new_off = self.base.cow_write(vc, other, within, chunk)?;
@@ -224,6 +253,10 @@ impl Driver for ScalableDriver {
         self.cache = UnifiedCache::new(self.cache_cfg, active_index, &self.base.acct);
         self.base.refresh_mem();
         Ok(())
+    }
+
+    fn fence(&self) -> &Arc<crate::blockjob::JobFence> {
+        &self.base.fence
     }
 
     fn counters(&self) -> CounterSnapshot {

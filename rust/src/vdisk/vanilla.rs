@@ -161,19 +161,47 @@ impl Driver for VanillaDriver {
         let mut cursor = 0usize;
         let active_idx = (self.base.chain.len() - 1) as u16;
         for (vc, within, len) in self.base.segments(voff, data.len()) {
-            let (resolved, dt) = {
+            let (mut resolved, dt) = {
                 let t0 = self.base.clock.now();
                 let r = self.resolve(vc)?;
                 (r, self.base.clock.now() - t0)
             };
             self.base.record_lookup(dt);
+            // write intercept (live block jobs): mark this cluster as
+            // newer than the job; if the job already copied it into the
+            // active volume, the cached mapping may be stale — use the
+            // on-disk entry. If a stale writeback clobbered that entry,
+            // re-link to the job's copy rather than trusting it (a zero
+            // entry would make cow_write zero-fill and lose data).
+            self.base.fence.note_guest_write(vc);
+            let job_moved = self.base.fence.job_moved(vc);
+            if let Some(moved_off) = job_moved {
+                let active = self.base.chain.active();
+                resolved = match active.l2_entry(vc)?.vanilla_view() {
+                    Some(off) => Some((active_idx, off)),
+                    None => {
+                        let stamp = if active.has_bfi() {
+                            Some(active_idx)
+                        } else {
+                            None
+                        };
+                        active.set_l2_entry(vc, L2Entry::local(moved_off, stamp))?;
+                        Some((active_idx, moved_off))
+                    }
+                };
+            }
             let chunk = &data[cursor..cursor + len];
             match resolved {
                 Some((bfi, off)) if bfi == active_idx => {
                     // in-place write to the active volume
                     self.base.chain.active().write_data(off, within, chunk)?;
-                    let key = self.caches[0].cfg().slice_key(vc);
-                    self.caches[active_idx as usize].mark_dirty(key);
+                    if job_moved.is_some() {
+                        // resync the cached entry with the on-disk one
+                        self.update_cache_after_write(vc, off);
+                    } else {
+                        let key = self.caches[0].cfg().slice_key(vc);
+                        self.caches[active_idx as usize].mark_dirty(key);
+                    }
                 }
                 other => {
                     let new_off = self.base.cow_write(vc, other, within, chunk)?;
@@ -220,6 +248,10 @@ impl Driver for VanillaDriver {
             .collect();
         self.base.refresh_mem();
         Ok(())
+    }
+
+    fn fence(&self) -> &Arc<crate::blockjob::JobFence> {
+        &self.base.fence
     }
 
     fn counters(&self) -> CounterSnapshot {

@@ -1,0 +1,293 @@
+//! Live block-job invariants (DESIGN.md §7): a live-stream job
+//! interleaved with random guest writes converges to a chain whose
+//! guest reads are bit-identical to the offline `stream_merge` result;
+//! live stamp migrates a running vanilla chain to the SQEMU format; the
+//! coordinator serves guest I/O throughout (no pause), admits jobs
+//! under per-node budgets, and every completed job leaves a clean
+//! `CheckReport`.
+
+use sqemu::blockjob::{JobKind, JobRunner, JobShared, JobState, LiveStreamJob, Step};
+use sqemu::cache::CacheConfig;
+use sqemu::chaingen::{generate, ChainSpec};
+use sqemu::coordinator::server::VmChain;
+use sqemu::coordinator::{Coordinator, JobSpec, VmConfig};
+use sqemu::metrics::clock::{CostModel, VirtClock};
+use sqemu::metrics::memory::MemoryAccountant;
+use sqemu::qcow::image::DataMode;
+use sqemu::qcow::{qcheck, snapshot, Chain};
+use sqemu::storage::node::StorageNode;
+use sqemu::util::prop::forall;
+use sqemu::vdisk::scalable::ScalableDriver;
+use sqemu::vdisk::{Driver, DriverKind};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+const CS: u64 = 64 << 10;
+
+fn prop_spec(seed: u64) -> ChainSpec {
+    ChainSpec {
+        disk_size: 64 * CS, // 64 virtual clusters
+        chain_len: 6,
+        populated: 0.5,
+        stamped: true,
+        data_mode: DataMode::Real,
+        prefix: "p".into(),
+        seed,
+        ..Default::default()
+    }
+}
+
+fn driver_for(chain: Chain, clock: Arc<VirtClock>) -> ScalableDriver {
+    ScalableDriver::new(
+        chain,
+        CacheConfig::new(16, 128 << 10),
+        clock,
+        CostModel::default(),
+        MemoryAccountant::new(),
+    )
+}
+
+/// The tentpole property: live stream + concurrent random guest writes
+/// ≡ offline merge of the same chain with the same writes applied.
+#[test]
+fn live_stream_with_guest_writes_matches_offline_merge_bit_for_bit() {
+    forall(0x11FE, 5, |rng| {
+        let spec = prop_spec(0x5EED ^ rng.below(1 << 20));
+        let clock_a = VirtClock::new();
+        let node_a = StorageNode::new("a", clock_a.clone(), CostModel::default());
+        let clock_b = VirtClock::new();
+        let node_b = StorageNode::new("b", clock_b.clone(), CostModel::default());
+        // two bit-identical chains (generation is deterministic)
+        let chain_a = generate(&*node_a, &spec).unwrap();
+        let chain_b = generate(&*node_b, &spec).unwrap();
+        let len = chain_a.len();
+        let mut da = driver_for(chain_a, clock_a.clone());
+        let mut db = driver_for(chain_b, clock_b.clone());
+
+        // live job on A, interleaved with guest writes applied to BOTH
+        let fence = Arc::clone(da.fence());
+        let rate = if rng.chance(0.5) { 0 } else { 2 << 20 };
+        let shared = Arc::new(JobShared::new("prop", JobKind::Stream, rate));
+        let job = Box::new(LiveStreamJob::new(da.chain(), Arc::clone(&fence)));
+        let mut runner =
+            JobRunner::new(job, Arc::clone(&shared), fence, 8, 8 * CS, clock_a.now());
+        let mut finished = false;
+        let mut guard = 0u32;
+        while !finished {
+            guard += 1;
+            assert!(guard < 100_000, "job never converged");
+            // a burst of guest traffic against the live VM
+            for _ in 0..rng.below(4) {
+                let vc = rng.below(64);
+                let within = rng.below(CS - 64);
+                let mut data = vec![0u8; 1 + rng.below(63) as usize];
+                rng.fill_bytes(&mut data);
+                da.write(vc * CS + within, &data).unwrap();
+                db.write(vc * CS + within, &data).unwrap();
+                if rng.chance(0.3) {
+                    let mut back = vec![0u8; data.len()];
+                    da.read(vc * CS + within, &mut back).unwrap();
+                    assert_eq!(back, data, "read-your-write during job");
+                }
+            }
+            match runner.step(&mut da, clock_a.now()) {
+                Step::Finished => finished = true,
+                Step::Starved { ready_at } => {
+                    let now = clock_a.now();
+                    clock_a.advance(ready_at - now);
+                }
+                _ => {}
+            }
+        }
+        let st = shared.status();
+        assert_eq!(st.state, JobState::Completed, "error: {:?}", st.error);
+        assert_eq!(da.chain().len(), 1, "live chain collapsed");
+
+        // offline baseline on B: full stop-the-world merge
+        db.flush().unwrap();
+        snapshot::stream_merge(db.chain_mut(), 0, (len - 1) as u16).unwrap();
+        db.reopen().unwrap();
+
+        // guest view must agree bit-for-bit across the whole disk
+        let mut buf_a = vec![0u8; CS as usize];
+        let mut buf_b = vec![0u8; CS as usize];
+        for vc in 0..64u64 {
+            da.read(vc * CS, &mut buf_a).unwrap();
+            db.read(vc * CS, &mut buf_b).unwrap();
+            assert_eq!(buf_a, buf_b, "vc={vc} diverged from offline merge");
+        }
+        da.flush().unwrap();
+        let ra = qcheck::check_chain(da.chain()).unwrap();
+        assert!(ra.is_clean(), "{:?}", ra.errors);
+        let rb = qcheck::check_chain(db.chain()).unwrap();
+        assert!(rb.is_clean(), "{:?}", rb.errors);
+    });
+}
+
+fn vm_cfg(kind: DriverKind, chain_len: usize, prefix: &str, stamped: bool) -> VmConfig {
+    VmConfig {
+        driver: kind,
+        cache: CacheConfig::new(64, 256 << 10),
+        chain: VmChain::Generate(ChainSpec {
+            disk_size: 16 << 20,
+            chain_len,
+            populated: 0.3,
+            stamped,
+            data_mode: DataMode::Real,
+            prefix: prefix.into(),
+            ..Default::default()
+        }),
+    }
+}
+
+fn wait_terminal(shared: &Arc<sqemu::blockjob::JobShared>) -> JobState {
+    let t0 = Instant::now();
+    loop {
+        let s = shared.state();
+        if s.is_terminal() {
+            return s;
+        }
+        assert!(t0.elapsed() < Duration::from_secs(60), "job stuck: {s:?}");
+        std::thread::sleep(Duration::from_millis(1));
+    }
+}
+
+/// Acceptance: a live-stream job on a length-100 chain completes while
+/// the VM keeps serving reads and writes, the result passes qcheck, and
+/// content is preserved.
+#[test]
+fn live_stream_on_hundred_deep_chain_while_serving() {
+    let coord = Coordinator::with_fresh_nodes(2).unwrap();
+    let c = coord
+        .launch_vm("vm", vm_cfg(DriverKind::Scalable, 100, "e", true))
+        .unwrap();
+    // pre-job content probes
+    let offsets: Vec<u64> = (0..24).map(|i| i * 650_000).collect();
+    let before: Vec<Vec<u8>> = offsets.iter().map(|&o| c.read(o, 64).unwrap()).collect();
+
+    // start paused: deterministically prove the VM serves guest I/O
+    // while an incomplete job is pending (no stop-the-world pause)
+    let h = coord
+        .start_job("vm", JobSpec::stream(256 << 20).paused())
+        .unwrap();
+    let mut served = 0u64;
+    for (i, &o) in offsets.iter().enumerate() {
+        assert_eq!(c.read(o, 64).unwrap(), before[i], "read blocked by pending job");
+        served += 1;
+    }
+    c.write(1 << 20, vec![0xC4; 128]).unwrap();
+    served += 1;
+    assert!(!h.state().is_terminal(), "paused job cannot have finished");
+    coord.resume_job(&h.id).unwrap();
+    // keep serving while the job drains the 100-deep chain
+    while !h.state().is_terminal() {
+        for (i, &o) in offsets.iter().enumerate() {
+            assert_eq!(c.read(o, 64).unwrap(), before[i], "content changed mid-job");
+        }
+        served += offsets.len() as u64;
+    }
+    assert_eq!(wait_terminal(&h), JobState::Completed, "err: {:?}", h.status().error);
+    assert!(served > 0, "no guest requests overlapped the job");
+    // post-job: same content, short chain, clean check, stats recorded
+    for (i, &o) in offsets.iter().enumerate() {
+        assert_eq!(c.read(o, 64).unwrap(), before[i], "content lost by job");
+    }
+    let stats = coord.vm_stats("vm").unwrap();
+    assert_eq!(stats.jobs_started, 1);
+    assert_eq!(stats.jobs_completed, 1);
+    assert!(stats.job_copied_clusters > 0);
+    assert!(stats.req_count > 0 && stats.req_p99_ns > 0, "latency tracked");
+    let st = h.status();
+    assert_eq!(st.processed, st.total);
+    assert!(st.increments > 1, "work was incremental, not one pause");
+
+    coord.stop_vm("vm").unwrap();
+    let chain = Chain::open(coord.nodes.as_ref(), "e-99", DataMode::Real).unwrap();
+    assert_eq!(chain.len(), 1, "chain collapsed to the active volume");
+    assert!(qcheck::check_chain(&chain).unwrap().is_clean());
+}
+
+/// Live stamp migrates a running vanilla chain to the SQEMU format.
+#[test]
+fn live_stamp_converts_running_vanilla_chain() {
+    let coord = Coordinator::with_fresh_nodes(1).unwrap();
+    let c = coord
+        .launch_vm("vm", vm_cfg(DriverKind::Scalable, 20, "s", false))
+        .unwrap();
+    let h = coord.start_job("vm", JobSpec::stamp(0)).unwrap();
+    // one concurrent write lands regardless of how fast the job runs
+    c.write(2 << 20, vec![9u8; 64]).unwrap();
+    while !h.state().is_terminal() {
+        let _ = c.read(5 << 20, 64).unwrap();
+    }
+    assert_eq!(wait_terminal(&h), JobState::Completed, "err: {:?}", h.status().error);
+    assert_eq!(c.read(2 << 20, 64).unwrap(), vec![9u8; 64]);
+    coord.stop_vm("vm").unwrap();
+
+    let chain = Chain::open(coord.nodes.as_ref(), "s-19", DataMode::Real).unwrap();
+    assert_eq!(chain.len(), 20, "stamping does not shorten the chain");
+    let active = chain.active();
+    assert!(active.has_bfi(), "format flag flipped live");
+    let own = active.chain_index();
+    for vc in 0..active.geom().num_vclusters() {
+        assert_eq!(
+            active.l2_entry(vc).unwrap().sqemu_view(own),
+            chain.resolve_walk(vc).unwrap(),
+            "stamp disagrees with walk at vc={vc}"
+        );
+    }
+    assert!(qcheck::check_chain(&chain).unwrap().is_clean());
+}
+
+/// Job lifecycle: paused jobs hold their reservation and block
+/// conflicting chain operations; cancel is cooperative; the scheduler
+/// rejects jobs past the per-node budget and releases on completion.
+#[test]
+fn job_lifecycle_admission_and_cancel() {
+    let coord = Coordinator::with_fresh_nodes(1).unwrap();
+    coord
+        .launch_vm("vm", vm_cfg(DriverKind::Scalable, 6, "l", true))
+        .unwrap();
+    let h = coord
+        .start_job("vm", JobSpec::stream(1 << 20).paused())
+        .unwrap();
+    assert_eq!(h.state(), JobState::Paused);
+    // conflicting chain ops are refused while a job exists
+    assert!(coord.snapshot_vm("vm", "l-snap").is_err());
+    // only one job per VM
+    assert!(coord.start_job("vm", JobSpec::stream(1 << 20)).is_err());
+    // cooperative cancel from the control plane
+    coord.cancel_job(&h.id).unwrap();
+    assert_eq!(wait_terminal(&h), JobState::Cancelled);
+    let stats = coord.vm_stats("vm").unwrap();
+    assert_eq!(stats.jobs_cancelled, 1);
+    // reservation released: a new job is admitted and chain ops resume
+    let h2 = coord.start_job("vm", JobSpec::stream(0)).unwrap();
+    assert_eq!(wait_terminal(&h2), JobState::Completed, "err: {:?}", h2.status().error);
+    coord.snapshot_vm("vm", "l-snap").unwrap();
+    assert_eq!(coord.list_jobs().len(), 2);
+    coord.shutdown();
+}
+
+/// A vanilla-driver VM can also be streamed live (the intercept rides
+/// the vanilla write path too).
+#[test]
+fn live_stream_under_vanilla_driver() {
+    let coord = Coordinator::with_fresh_nodes(1).unwrap();
+    let c = coord
+        .launch_vm("vm", vm_cfg(DriverKind::Vanilla, 12, "v", false))
+        .unwrap();
+    let before = c.read(3 << 20, 64).unwrap();
+    let h = coord.start_job("vm", JobSpec::stream(0)).unwrap();
+    c.write(7 << 20, vec![3u8; 32]).unwrap();
+    while !h.state().is_terminal() {
+        let _ = c.read(3 << 20, 64).unwrap();
+    }
+    assert_eq!(wait_terminal(&h), JobState::Completed, "err: {:?}", h.status().error);
+    assert_eq!(c.read(3 << 20, 64).unwrap(), before);
+    assert_eq!(c.read(7 << 20, 32).unwrap(), vec![3u8; 32]);
+    coord.stop_vm("vm").unwrap();
+    let chain = Chain::open(coord.nodes.as_ref(), "v-11", DataMode::Real).unwrap();
+    assert_eq!(chain.len(), 1);
+    assert!(qcheck::check_chain(&chain).unwrap().is_clean());
+}

@@ -66,6 +66,10 @@ pub enum JobKind {
     /// Stamp `backing_file_index` entries into the active volume, then
     /// set the format flag (live analogue of `convert_to_sqemu`).
     Stamp,
+    /// Sweep the GC deferred-delete set: rate-limited physical deletion
+    /// of unreferenced files ([`crate::gc::GcJob`]). Runs on the
+    /// coordinator, not a VM worker — it owns no chain.
+    Gc,
 }
 
 impl JobKind {
@@ -73,6 +77,7 @@ impl JobKind {
         match self {
             JobKind::Stream => "stream",
             JobKind::Stamp => "stamp",
+            JobKind::Gc => "gc",
         }
     }
 
@@ -80,6 +85,7 @@ impl JobKind {
         match s {
             "stream" => Some(JobKind::Stream),
             "stamp" => Some(JobKind::Stamp),
+            "gc" => Some(JobKind::Gc),
             _ => None,
         }
     }

@@ -81,7 +81,11 @@ pub fn stream(args: &Args) -> Result<()> {
         "streamed files {from}..={to}: {copied} clusters copied, chain {before} -> {}",
         chain.len()
     );
-    // merged predecessors are gone from the chain; delete their files
+    println!(
+        "merged predecessors are no longer part of the chain; reclaim their \
+         files with `sqemu gc run --dir <dir> --active <heads>` once no other \
+         chain shares them"
+    );
     Ok(())
 }
 
@@ -148,6 +152,7 @@ fn job_start(args: &Args) -> Result<()> {
     let mut job: Box<dyn BlockJob> = match kind {
         JobKind::Stream => Box::new(LiveStreamJob::new(&chain, std::sync::Arc::clone(&fence))),
         JobKind::Stamp => Box::new(LiveStampJob::new(&chain, std::sync::Arc::clone(&fence))),
+        JobKind::Gc => bail!("garbage collection runs via `sqemu gc run`, not `job start`"),
     };
     let total = job.total_clusters();
     let len_before = chain.len();
@@ -210,6 +215,7 @@ fn job_start(args: &Args) -> Result<()> {
              sqemu format flag",
             chain.active().name
         ),
+        JobKind::Gc => unreachable!("rejected above"),
     }
     println!("qcheck: clean ({} consistent clusters)", report.ok_clusters);
     Ok(())
@@ -256,6 +262,90 @@ fn job_cancel(args: &Args) -> Result<()> {
         "cancel requested for job '{id}'; a running `sqemu job start` in \
          {dir} will stop at its next increment boundary"
     );
+    Ok(())
+}
+
+/// `sqemu gc <verb>`: capacity reclamation over a directory store.
+///
+/// The live chain heads are named with `--active a,b,...`; every image
+/// file in the directory that no head's backing walk reaches is garbage
+/// (the leftovers of `sqemu stream` / `job start --kind stream`, which
+/// drop files from the chain but cannot know whether another chain still
+/// shares them — the operator's `--active` list is that knowledge here;
+/// in the coordinator the GC registry tracks it automatically).
+///
+/// * `gc status` (or `gc run --dry-run`) — the leak audit: report
+///   reachable / garbage files and reclaimable bytes, delete nothing.
+/// * `gc run` — physically delete the garbage files.
+pub fn gc(verb: &str, args: &Args) -> Result<()> {
+    let dry = match verb {
+        "run" => args.bool("dry-run"),
+        "status" => true,
+        other => bail!("unknown gc verb '{other}' (try run|status)"),
+    };
+    let s = store(args)?;
+    let dir = args.get("dir").unwrap_or(".").to_string();
+    let actives = args.require("active")?;
+    let heads: Vec<&str> = actives.split(',').filter(|h| !h.is_empty()).collect();
+    if heads.is_empty() {
+        // an empty head list would make *everything* garbage — refuse
+        bail!("--active must name at least one live chain head");
+    }
+
+    // reachable set: walk backing names from every live chain head
+    let mut reachable = std::collections::HashSet::new();
+    for head in &heads {
+        crate::gc::walk_backing(&s, head, &mut reachable)?;
+    }
+
+    // diff the directory against reachability
+    let mut garbage: Vec<(String, u64)> = Vec::new();
+    let mut skipped = 0usize;
+    for entry in std::fs::read_dir(&dir)? {
+        let entry = entry?;
+        if !entry.file_type()?.is_file() {
+            continue;
+        }
+        let name = entry.file_name().to_string_lossy().to_string();
+        if reachable.contains(&name) {
+            continue;
+        }
+        // only files that parse as images are GC candidates; journals,
+        // cancel markers and foreign files are never touched
+        let is_image = s
+            .open_file(&name)
+            .and_then(|b| Image::open(&name, b, DataMode::Real))
+            .is_ok();
+        if is_image {
+            garbage.push((name, entry.metadata()?.len()));
+        } else {
+            skipped += 1;
+        }
+    }
+    garbage.sort();
+
+    let total: u64 = garbage.iter().map(|(_, b)| *b).sum();
+    println!(
+        "gc over '{dir}': {} reachable from {} chain head(s), {} garbage \
+         image(s) ({}), {skipped} non-image file(s) ignored",
+        reachable.len(),
+        heads.len(),
+        garbage.len(),
+        human_bytes(total),
+    );
+    for (name, bytes) in &garbage {
+        if dry {
+            println!("  would delete {name} ({})", human_bytes(*bytes));
+        } else {
+            s.delete_file(name)?;
+            println!("  deleted {name} ({})", human_bytes(*bytes));
+        }
+    }
+    if dry {
+        println!("dry run: nothing deleted; `sqemu gc run` reclaims {}", human_bytes(total));
+    } else {
+        println!("reclaimed {}", human_bytes(total));
+    }
     Ok(())
 }
 

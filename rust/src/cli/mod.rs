@@ -11,6 +11,8 @@
 //! sqemu job start --dir D --active N --kind stream|stamp [--rate 64M]
 //! sqemu job list --dir D                      # job journal
 //! sqemu job cancel --dir D --id J             # cooperative cancel
+//! sqemu gc run --dir D --active A[,B,...] [--dry-run]
+//! sqemu gc status --dir D --active A[,B,...]  # leak audit, deletes nothing
 //! sqemu info    --dir D --name N
 //! sqemu check   --dir D --active N
 //! sqemu characterize [--chains N]             # §3 figures
@@ -36,6 +38,14 @@ pub fn run(argv: Vec<String>) -> Result<()> {
         };
         let args = Args::parse(rest)?;
         return commands::job(verb, &args);
+    }
+    if cmd == "gc" {
+        // `sqemu gc <verb> --flags ...` — the verb is positional
+        let Some((verb, rest)) = rest.split_first() else {
+            bail!("usage: sqemu gc run|status --dir D --active A[,B,...] [--dry-run]");
+        };
+        let args = Args::parse(rest)?;
+        return commands::gc(verb, &args);
     }
     let args = Args::parse(rest)?;
     match cmd.as_str() {
@@ -69,6 +79,8 @@ fn print_usage() {
          [--increment 32] [--id J]\n\
          \x20 job list --dir D\n\
          \x20 job cancel --dir D --id J\n\
+         \x20 gc run    --dir D --active A[,B,...] [--dry-run]\n\
+         \x20 gc status --dir D --active A[,B,...]\n\
          \x20 info     --dir D --name N\n\
          \x20 check    --dir D --active N\n\
          \n\

@@ -24,6 +24,11 @@
 //!   bandwidth budget and runs it on the VM worker interleaved with
 //!   guest I/O (no pause); lifecycle via `list_jobs` / `cancel_job` /
 //!   `pause_job` / `resume_job` and `sqemu job ...`.
+//! * garbage collection — the coordinator owns the [`crate::gc`]
+//!   reference registry; chain-shape changes (launch, snapshot, stream,
+//!   live-job completion, decommission) re-declare each chain's file
+//!   set, and [`server::Coordinator::run_gc`] sweeps the deferred-delete
+//!   set under the same admission/rate machinery as the live jobs.
 //!
 //! [`FileStore`]: crate::storage::store::FileStore
 

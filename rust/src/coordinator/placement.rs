@@ -27,11 +27,13 @@ impl NodeSet {
         Ok(NodeSet { nodes, index: Mutex::new(HashMap::new()) })
     }
 
-    /// Least-used node that still has capacity headroom.
+    /// Least-used node that still has capacity headroom. Pressure, not
+    /// raw usage: condemned (pending GC delete) bytes do not block
+    /// placement — their reclamation is already scheduled.
     fn pick_node(&self) -> Result<usize> {
         let mut best: Option<(usize, u64)> = None;
         for (i, n) in self.nodes.iter().enumerate() {
-            let used = n.used_bytes();
+            let used = n.pressure_bytes();
             if used >= n.capacity {
                 continue;
             }
@@ -53,6 +55,12 @@ impl NodeSet {
         Some(self.nodes[idx].name.clone())
     }
 
+    /// The node holding `name` (GC needs the node itself, not its name).
+    pub fn node_of(&self, name: &str) -> Option<Arc<StorageNode>> {
+        let idx = *self.index.lock().unwrap().get(name)?;
+        Some(Arc::clone(&self.nodes[idx]))
+    }
+
     /// Per-node stored bytes (load-balance report).
     pub fn usage(&self) -> Vec<(String, u64)> {
         self.nodes
@@ -60,6 +68,47 @@ impl NodeSet {
             .map(|n| (n.name.clone(), n.used_bytes()))
             .collect()
     }
+
+    /// Per-node capacity report including the GC view.
+    pub fn node_stats(&self) -> Vec<NodeStats> {
+        self.nodes
+            .iter()
+            .map(|n| NodeStats {
+                name: n.name.clone(),
+                used_bytes: n.used_bytes(),
+                condemned_bytes: n.condemned_bytes(),
+                pressure_bytes: n.pressure_bytes(),
+                reclaimed_bytes: n.reclaimed_bytes(),
+                gc_deletes: n.gc_deletes(),
+            })
+            .collect()
+    }
+
+    /// Aggregate stored bytes across the whole set.
+    pub fn total_used_bytes(&self) -> u64 {
+        self.nodes.iter().map(|n| n.used_bytes()).sum()
+    }
+
+    /// Aggregate thin-provisioning pressure across the whole set.
+    pub fn total_pressure_bytes(&self) -> u64 {
+        self.nodes.iter().map(|n| n.pressure_bytes()).sum()
+    }
+}
+
+/// One node's capacity / reclamation snapshot.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct NodeStats {
+    pub name: String,
+    /// Physically stored bytes (everything, condemned included).
+    pub used_bytes: u64,
+    /// Bytes awaiting a GC sweep.
+    pub condemned_bytes: u64,
+    /// used - condemned: what thin provisioning counts.
+    pub pressure_bytes: u64,
+    /// Bytes returned by GC sweeps so far.
+    pub reclaimed_bytes: u64,
+    /// Files deleted by GC sweeps so far.
+    pub gc_deletes: u64,
 }
 
 impl FileStore for NodeSet {
@@ -159,6 +208,27 @@ mod tests {
         assert!(located.len() > 1, "all files on one node");
         let reopened = Chain::open(&ns, "img-6", DataMode::Real).unwrap();
         assert_eq!(reopened.len(), 7);
+    }
+
+    #[test]
+    fn condemned_capacity_reopens_placement() {
+        let ns = set(&[256 << 10, 256 << 10]);
+        let f0 = ns.create_file("f0").unwrap(); // lands on node-0
+        f0.write_at(&[1u8; 100 << 10], 0).unwrap();
+        let f1 = ns.create_file("f1").unwrap(); // least-used: node-1
+        f1.write_at(&[1u8; 40 << 10], 0).unwrap();
+        // normally the next file would land on node-1 (40K < 100K); with
+        // f0 condemned, node-0's pressure drops to zero and wins
+        let n0 = ns.node_of("f0").unwrap();
+        n0.mark_condemned("f0");
+        let f = ns.create_file("f-new").unwrap();
+        f.write_at(&[1u8; 8 << 10], 0).unwrap();
+        assert_eq!(ns.locate("f-new").unwrap(), n0.name);
+        let stats = ns.node_stats();
+        let s0 = stats.iter().find(|s| s.name == n0.name).unwrap();
+        assert_eq!(s0.condemned_bytes, 100 << 10);
+        assert_eq!(s0.pressure_bytes, 8 << 10);
+        assert_eq!(s0.used_bytes, (100 << 10) + (8 << 10));
     }
 
     #[test]

@@ -32,6 +32,7 @@ use crate::blockjob::{
 };
 use crate::cache::CacheConfig;
 use crate::chaingen::ChainSpec;
+use crate::gc::{GcJob, GcRegistry, GcReport};
 use crate::metrics::clock::{CostModel, VirtClock};
 use crate::metrics::counters::CounterSnapshot;
 use crate::metrics::memory::MemoryAccountant;
@@ -151,7 +152,8 @@ struct JobEntry {
     reservation: Option<Reservation>,
 }
 
-/// The coordinator: owns nodes, VMs, the AOT runtime and the job ledger.
+/// The coordinator: owns nodes, VMs, the AOT runtime, the job ledger and
+/// the GC reference registry.
 pub struct Coordinator {
     pub nodes: Arc<NodeSet>,
     pub clock: Arc<VirtClock>,
@@ -162,6 +164,7 @@ pub struct Coordinator {
     scheduler: JobScheduler,
     jobs: Mutex<Vec<JobEntry>>,
     next_job_id: Mutex<u64>,
+    gc: Arc<GcRegistry>,
 }
 
 impl Coordinator {
@@ -172,6 +175,7 @@ impl Coordinator {
         runtime: Option<RuntimeService>,
     ) -> Arc<Coordinator> {
         let scheduler = JobScheduler::new(cfg.job_budget_bps);
+        let gc = Arc::new(GcRegistry::new(Arc::clone(&nodes)));
         Arc::new(Coordinator {
             nodes,
             clock,
@@ -182,6 +186,7 @@ impl Coordinator {
             scheduler,
             jobs: Mutex::new(Vec::new()),
             next_job_id: Mutex::new(0),
+            gc,
         })
     }
 
@@ -253,15 +258,21 @@ impl Coordinator {
                 spec.data_mode,
             ),
         };
+        // the chain's files are now referenced by this VM's chain (GC
+        // refcounts; shared bases gain one reference per chain)
+        self.gc.sync_chain(name, chain.file_names());
         let driver = self.build_driver(chain, &cfg);
         let stats = Arc::new(VmStats::default());
         let (tx, rx) = sync_channel::<Request>(self.cfg.queue_depth);
         let worker_stats = Arc::clone(&stats);
         let worker_clock = Arc::clone(&self.clock);
+        let worker_gc = Arc::clone(&self.gc);
         let vm_name = name.to_string();
         let join = std::thread::Builder::new()
             .name(format!("vm-{name}"))
-            .spawn(move || worker_loop(vm_name, driver, rx, worker_stats, worker_clock))
+            .spawn(move || {
+                worker_loop(vm_name, driver, rx, worker_stats, worker_clock, worker_gc)
+            })
             .expect("spawn vm worker");
         vms.insert(
             name.to_string(),
@@ -296,6 +307,24 @@ impl Coordinator {
         v
     }
 
+    /// The file names of a running VM's chain, base first (pauses the
+    /// worker for the read).
+    pub fn chain_files(&self, name: &str) -> Result<Vec<String>> {
+        let client = self.client(name)?;
+        let joined =
+            client.with_chain(Box::new(|chain| Ok(chain.file_names().join("\n"))))??;
+        Ok(joined.lines().map(str::to_string).collect())
+    }
+
+    /// Re-declare a VM chain's file set to the GC registry (after any
+    /// chain-shape change): files the chain dropped lose a reference and
+    /// are condemned once nothing else references them.
+    fn sync_vm_chain(&self, name: &str) -> Result<()> {
+        let files = self.chain_files(name)?;
+        self.gc.sync_chain(name, files);
+        Ok(())
+    }
+
     /// Snapshot a running VM's disk: pause (drain), snapshot, swap the
     /// worker onto the lengthened chain.
     pub fn snapshot_vm(self: &Arc<Self>, name: &str, new_file: &str) -> Result<u64> {
@@ -320,6 +349,7 @@ impl Coordinator {
             Ok(new_file.clone())
         }))??;
         stats.snapshots.fetch_add(1, Relaxed);
+        self.sync_vm_chain(name)?;
         Ok(self.clock.now() - t0)
     }
 
@@ -343,6 +373,12 @@ impl Coordinator {
             ))
         }))??;
         stats.streams.fetch_add(1, Relaxed);
+        // measure the disruption window before the GC bookkeeping below —
+        // the registry sync pauses the worker again and must not inflate
+        // the merge cost the benches compare live jobs against
+        let merge_ns = self.clock.now() - t0;
+        // the merged window's files just left the chain: hand them to GC
+        self.sync_vm_chain(name)?;
         let parts: Vec<u64> = report_json
             .split_whitespace()
             .map(|p| p.parse().unwrap_or(0))
@@ -354,7 +390,7 @@ impl Coordinator {
             copied_clusters: parts[1],
             len_before: parts[2] as usize,
             len_after: parts[3] as usize,
-            merge_ns: self.clock.now() - t0,
+            merge_ns,
         })
     }
 
@@ -367,6 +403,9 @@ impl Coordinator {
     /// APIs). Returns the job's cross-thread handle.
     pub fn start_job(self: &Arc<Self>, vm: &str, spec: JobSpec) -> Result<Arc<JobShared>> {
         self.reap_jobs();
+        if spec.kind == JobKind::Gc {
+            bail!("gc jobs own no chain; use Coordinator::run_gc");
+        }
         let client = self.client(vm)?;
         // locate the active volume's node for admission
         let active_name =
@@ -467,6 +506,135 @@ impl Coordinator {
             .find(|e| e.shared.id == id)
             .ok_or_else(|| anyhow!("no job '{id}'"))?;
         e.shared.resume();
+        Ok(())
+    }
+
+    // -------------------------------------------------- garbage collection
+
+    /// The cross-chain reference registry (refcounts, deferred deletes).
+    pub fn gc_registry(&self) -> &Arc<GcRegistry> {
+        &self.gc
+    }
+
+    /// Audit node files against chain reachability (`gc --dry-run`).
+    pub fn gc_audit(&self) -> crate::gc::AuditReport {
+        crate::gc::audit(self.nodes.as_ref(), &self.gc)
+    }
+
+    /// Run a GC sweep: physically delete the deferred-delete set at
+    /// `rate_bps` bytes/second of reclamation I/O (0 = unlimited). The
+    /// sweep is a [`GcJob`] driven through the standard [`JobRunner`]
+    /// (it appears in `list_jobs` and honours `cancel_job`), admitted
+    /// against the maintenance budget of every node holding condemned
+    /// files. Reclaimed bytes are attributed to the VMs whose chains
+    /// dropped the files.
+    pub fn run_gc(&self, rate_bps: u64) -> Result<GcReport> {
+        self.reap_jobs();
+        // admission: one reservation per node with condemned files
+        let mut node_names: Vec<String> = Vec::new();
+        for (file, _) in self.gc.condemned() {
+            if let Some(n) = self.nodes.locate(&file) {
+                if !node_names.contains(&n) {
+                    node_names.push(n);
+                }
+            }
+        }
+        let mut reservations = Vec::new();
+        for n in &node_names {
+            match self.scheduler.admit(n, rate_bps) {
+                Ok(r) => reservations.push(r),
+                Err(e) => {
+                    for r in &reservations {
+                        self.scheduler.release(r);
+                    }
+                    return Err(e);
+                }
+            }
+        }
+        let id = {
+            let mut n = self.next_job_id.lock().unwrap();
+            *n += 1;
+            format!("job-{}", *n)
+        };
+        let shared = Arc::new(JobShared::new(&id, JobKind::Gc, rate_bps));
+        self.jobs.lock().unwrap().push(JobEntry {
+            vm: "(gc)".to_string(),
+            shared: Arc::clone(&shared),
+            reservation: None,
+        });
+        let run = (|| -> Result<()> {
+            let mut driver =
+                crate::gc::scratch_driver(Arc::clone(&self.clock), self.cfg.cost)?;
+            let fence = Arc::clone(driver.fence());
+            let job = Box::new(GcJob::new(Arc::clone(&self.gc)));
+            let mut runner = JobRunner::new(
+                job,
+                Arc::clone(&shared),
+                fence,
+                self.cfg.job_increment_clusters.max(1),
+                4 << 20,
+                self.clock.now(),
+            );
+            loop {
+                match runner.step(&mut driver, self.clock.now()) {
+                    Step::Finished => break,
+                    Step::Starved { ready_at } => {
+                        // advance the shared clock in bounded quanta, like
+                        // the worker idle loop: VMs serving guests
+                        // concurrently must not see one giant time jump
+                        // attributed to their in-flight requests
+                        const GC_IDLE_QUANTUM_NS: u64 = 100_000_000;
+                        let now = self.clock.now();
+                        if ready_at > now {
+                            self.clock.advance((ready_at - now).min(GC_IDLE_QUANTUM_NS));
+                        }
+                    }
+                    // run_gc is synchronous: wait out an external pause
+                    // instead of spinning
+                    Step::Paused => {
+                        std::thread::sleep(std::time::Duration::from_millis(1))
+                    }
+                    Step::Ran => {}
+                }
+            }
+            Ok(())
+        })();
+        for r in &reservations {
+            self.scheduler.release(r);
+        }
+        run?;
+        let t = shared.status();
+        // per-VM attribution: bytes reclaimed from files each VM's chain
+        // dropped (decommissioned chains have no VM entry left — their
+        // share stays fleet-level in the registry totals)
+        let by_origin = self.gc.drain_reclaimed_by();
+        {
+            let vms = self.vms.lock().unwrap();
+            for (origin, bytes) in by_origin {
+                if let Some(h) = vms.get(&origin) {
+                    h.stats.reclaimed_bytes.fetch_add(bytes, Relaxed);
+                    h.stats.gc_runs.fetch_add(1, Relaxed);
+                }
+            }
+        }
+        if let Some(err) = t.error {
+            bail!("gc sweep failed: {err}");
+        }
+        Ok(GcReport {
+            files_deleted: t.copied,
+            reclaimed_bytes: t.bytes_copied,
+            gc_ns: t.finished_ns.saturating_sub(t.started_ns),
+            remaining_condemned: self.gc.condemned_count() as u64,
+        })
+    }
+
+    /// Decommission a VM *and its chain*: stop the worker and release
+    /// every file reference the chain held. Files referenced by no other
+    /// chain are condemned for the next GC sweep — the snapshot-deletion
+    /// path; shared bases survive as long as any other chain uses them.
+    pub fn decommission_vm(&self, name: &str) -> Result<()> {
+        self.stop_vm(name)?;
+        self.gc.drop_chain(name);
         Ok(())
     }
 
@@ -584,11 +752,12 @@ impl VmClient {
 /// job is running (conflicting chain rewrites). Job increments run after
 /// each guest request and continuously while the queue is idle.
 fn worker_loop(
-    _name: String,
+    name: String,
     mut driver: Box<dyn Driver + Send>,
     rx: Receiver<Request>,
     stats: Arc<VmStats>,
     clock: Arc<VirtClock>,
+    gc: Arc<GcRegistry>,
 ) {
     let mut runner: Option<JobRunner> = None;
     loop {
@@ -628,7 +797,9 @@ fn worker_loop(
                         clock.advance((ready_at - now).min(IDLE_QUANTUM_NS));
                     }
                 }
-                Some(Step::Finished) => finish_job(&mut runner, &stats),
+                Some(Step::Finished) => {
+                    finish_job(&name, driver.as_ref(), &mut runner, &stats, &gc)
+                }
                 _ => {}
             }
             continue;
@@ -674,6 +845,8 @@ fn worker_loop(
             Request::JobStart { spec, shared, increment_clusters, reply } => {
                 let r = if runner.is_some() {
                     Err(anyhow!("a block job is already running on this vm"))
+                } else if spec.kind == JobKind::Gc {
+                    Err(anyhow!("gc jobs own no chain; use Coordinator::run_gc"))
                 } else {
                     let fence = Arc::clone(driver.fence());
                     let job: Box<dyn crate::blockjob::BlockJob> = match spec.kind {
@@ -683,6 +856,7 @@ fn worker_loop(
                         JobKind::Stamp => {
                             Box::new(LiveStampJob::new(driver.chain(), Arc::clone(&fence)))
                         }
+                        JobKind::Gc => unreachable!("rejected above"),
                     };
                     let burst = increment_clusters
                         .saturating_mul(driver.chain().active().geom().cluster_size());
@@ -718,18 +892,28 @@ fn worker_loop(
             _ => None,
         };
         if let Some(Step::Finished) = step {
-            finish_job(&mut runner, &stats);
+            finish_job(&name, driver.as_ref(), &mut runner, &stats, &gc);
         }
     }
 }
 
-/// Account a finished job and drop its runner.
-fn finish_job(runner: &mut Option<JobRunner>, stats: &Arc<VmStats>) {
+/// Account a finished job and drop its runner. A *completed* job changed
+/// the chain's shape (stream collapses it), so the new file set is
+/// re-declared to the GC registry: dropped backing files lose this
+/// chain's reference and are condemned once nothing else holds one.
+fn finish_job(
+    name: &str,
+    driver: &dyn Driver,
+    runner: &mut Option<JobRunner>,
+    stats: &Arc<VmStats>,
+    gc: &Arc<GcRegistry>,
+) {
     let Some(r) = runner.take() else { return };
     let st = r.shared().status();
     match st.state {
         crate::blockjob::JobState::Completed => {
             stats.jobs_completed.fetch_add(1, Relaxed);
+            gc.sync_chain(name, driver.chain().file_names());
         }
         crate::blockjob::JobState::Cancelled => {
             stats.jobs_cancelled.fetch_add(1, Relaxed);

@@ -21,6 +21,11 @@ pub struct VmStats {
     pub jobs_failed: AtomicU64,
     pub job_increments: AtomicU64,
     pub job_copied_clusters: AtomicU64,
+    /// Bytes GC physically reclaimed from files this VM's chain dropped
+    /// (streamed-away backing files, deleted snapshots).
+    pub reclaimed_bytes: AtomicU64,
+    /// GC sweeps that reclaimed capacity on behalf of this VM.
+    pub gc_runs: AtomicU64,
     /// Guest-visible request latency (enqueue → reply) in virtual ns —
     /// the number a live job must keep flat while it drains the chain.
     pub req_latency: Mutex<Histogram>,
@@ -47,6 +52,8 @@ impl VmStats {
             jobs_failed: self.jobs_failed.load(Ordering::Relaxed),
             job_increments: self.job_increments.load(Ordering::Relaxed),
             job_copied_clusters: self.job_copied_clusters.load(Ordering::Relaxed),
+            reclaimed_bytes: self.reclaimed_bytes.load(Ordering::Relaxed),
+            gc_runs: self.gc_runs.load(Ordering::Relaxed),
             req_count: lat.count(),
             req_mean_ns: lat.mean() as u64,
             req_p50_ns: lat.quantile(0.50),
@@ -71,6 +78,8 @@ pub struct VmStatsSnapshot {
     pub jobs_failed: u64,
     pub job_increments: u64,
     pub job_copied_clusters: u64,
+    pub reclaimed_bytes: u64,
+    pub gc_runs: u64,
     pub req_count: u64,
     pub req_mean_ns: u64,
     pub req_p50_ns: u64,

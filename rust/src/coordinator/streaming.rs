@@ -43,15 +43,34 @@ impl StreamingOrchestrator {
     /// (those must be copied). Uses the `stream_fold` PJRT kernel when
     /// loaded, tiling over both depth and table width.
     pub fn plan(&self, chain: &Chain, from: u16, to: u16) -> Result<u64> {
+        let (tile_c, tile_d) = match &self.runtime {
+            Some(rt) => (rt.clusters, rt.stream_depth),
+            None => (8192, 8),
+        };
+        self.plan_with_tiles(chain, from, to, tile_c, tile_d)
+    }
+
+    /// [`StreamingOrchestrator::plan`] with explicit tile sizes. A depth
+    /// tile holds the carried accumulator row plus `tile_d - 1` table
+    /// rows, clamped to at least one table row per pass — a `tile_d` of 1
+    /// (a runtime exporting `stream_depth: 1`) must still advance the
+    /// fold cursor, not spin forever; such a pass exceeds the kernel's
+    /// row capacity and folds on the host instead.
+    fn plan_with_tiles(
+        &self,
+        chain: &Chain,
+        from: u16,
+        to: u16,
+        tile_c: usize,
+        tile_d: usize,
+    ) -> Result<u64> {
         if from >= to || (to as usize) >= chain.len() {
             bail!("invalid stream window {from}..={to}");
         }
         let geom = *chain.active().geom();
         let total = geom.num_vclusters() as usize;
-        let (tile_c, tile_d) = match &self.runtime {
-            Some(rt) => (rt.clusters, rt.stream_depth),
-            None => (8192, 8),
-        };
+        let tile_c = tile_c.max(1);
+        let rows_per_pass = tile_d.saturating_sub(1).max(1);
         let mut planned = 0u64;
         let mut start = 0usize;
         while start < total {
@@ -62,7 +81,7 @@ impl StreamingOrchestrator {
             let mut acc_bfi = vec![UNALLOCATED; width];
             let mut idx = from;
             while idx <= to {
-                let depth = ((to - idx + 1) as usize).min(tile_d - 1);
+                let depth = ((to - idx + 1) as usize).min(rows_per_pass);
                 let mut offs = vec![(acc_off.clone(), acc_bfi.clone())];
                 for d in 0..depth {
                     let img = chain.get(idx + d as u16).unwrap();
@@ -79,8 +98,11 @@ impl StreamingOrchestrator {
                 let off_rows: Vec<Vec<i32>> = offs.iter().map(|(o, _)| o.clone()).collect();
                 let bfi_rows: Vec<Vec<i32>> = offs.iter().map(|(_, b)| b.clone()).collect();
                 let (no, nb) = match &self.runtime {
-                    Some(rt) => rt.stream_fold(&off_rows, &bfi_rows)?,
-                    None => Ok::<_, anyhow::Error>(host::stream_fold(&off_rows, &bfi_rows))?,
+                    // accumulator + depth rows must fit the exported depth
+                    Some(rt) if off_rows.len() <= rt.stream_depth => {
+                        rt.stream_fold(&off_rows, &bfi_rows)?
+                    }
+                    _ => host::stream_fold(&off_rows, &bfi_rows),
                 };
                 acc_off = no;
                 acc_bfi = nb;
@@ -100,8 +122,10 @@ impl StreamingOrchestrator {
     pub fn merge(&self, chain: &mut Chain, from: u16, to: u16) -> Result<StreamReport> {
         let planned = self.plan(chain, from, to)?;
         let len_before = chain.len();
-        let clock_probe = chain.active().backend().len(); // cheap state probe
-        let _ = clock_probe;
+        // the disruption window is measured on the chain's own node
+        // clock, so CLI/test callers get a real number, not a
+        // server-filled placeholder (clock-less backends report 0-0)
+        let t0 = chain.active().backend().now_ns();
         let copied = snapshot::stream_merge(chain, from, to)?;
         if copied != planned {
             bail!("stream plan mismatch: planned {planned}, copied {copied}");
@@ -123,7 +147,7 @@ impl StreamingOrchestrator {
             copied_clusters: copied,
             len_before,
             len_after: chain.len(),
-            merge_ns: 0, // filled by the server, which owns the clock
+            merge_ns: chain.active().backend().now_ns().saturating_sub(t0),
         })
     }
 
@@ -192,5 +216,36 @@ mod tests {
         let orch = StreamingOrchestrator::new(None);
         assert!(orch.plan(&c, 2, 2).is_err());
         assert!(orch.plan(&c, 0, 5).is_err());
+    }
+
+    #[test]
+    fn plan_terminates_and_agrees_at_depth_tile_one() {
+        // regression: a runtime exporting stream_depth = 1 used to clamp
+        // the per-pass depth to 0, so the fold cursor never advanced and
+        // plan() spun forever; the pass must carry at least one table row
+        let c = chain(6);
+        let orch = StreamingOrchestrator::new(None);
+        let reference = orch.plan(&c, 1, 4).unwrap();
+        for tile_d in [1usize, 2, 3] {
+            let planned = orch.plan_with_tiles(&c, 1, 4, 8192, tile_d).unwrap();
+            assert_eq!(planned, reference, "tile_d={tile_d}");
+        }
+        // narrow width tiles must agree too
+        assert_eq!(orch.plan_with_tiles(&c, 1, 4, 7, 1).unwrap(), reference);
+    }
+
+    #[test]
+    fn merge_reports_nonzero_disruption_window() {
+        // regression: merge_ns was hardcoded 0 ("filled by the server"),
+        // so CLI/test callers reported a zero disruption window; it is
+        // now measured on the chain's node clock inside merge()
+        let mut c = chain(6);
+        let orch = StreamingOrchestrator::new(None);
+        let report = orch.merge(&mut c, 1, 3).unwrap();
+        assert!(report.copied_clusters > 0, "merge did real work");
+        assert!(
+            report.merge_ns > 0,
+            "disruption window must be measured, not a placeholder"
+        );
     }
 }

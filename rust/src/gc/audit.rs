@@ -1,0 +1,184 @@
+//! Leak audit: diff the files physically present on the storage nodes
+//! against chain reachability — the `qcheck` of capacity.
+//!
+//! Reachability is computed from the *on-disk truth*: for every
+//! registered chain we walk backing-file pointers from its active
+//! volume, exactly like [`crate::qcow::Chain::open`] would. A file on a
+//! node that no walk reaches and that is not already condemned is a
+//! **leak** — capacity stranded forever unless an operator intervenes
+//! (the pre-GC repo leaked every streamed-away backing file this way).
+
+use super::registry::GcRegistry;
+use crate::coordinator::placement::NodeSet;
+use crate::qcow::image::{DataMode, Image};
+use crate::storage::store::FileStore;
+use anyhow::{bail, Result};
+use std::collections::HashSet;
+
+/// Outcome of a leak audit (`sqemu gc --dry-run` analogue).
+#[derive(Clone, Debug, Default)]
+pub struct AuditReport {
+    /// Files reachable from a registered chain's active volume.
+    pub reachable: u64,
+    /// Files in the deferred-delete set (awaiting a GC sweep).
+    pub condemned: Vec<String>,
+    /// Files on nodes that are neither reachable nor condemned, with
+    /// their stored bytes: stranded capacity.
+    pub leaked: Vec<(String, u64)>,
+    /// Walk failures (broken backing links, unopenable images).
+    pub errors: Vec<String>,
+}
+
+impl AuditReport {
+    pub fn is_clean(&self) -> bool {
+        self.leaked.is_empty() && self.errors.is_empty()
+    }
+
+    /// Bytes stranded by leaks.
+    pub fn leaked_bytes(&self) -> u64 {
+        self.leaked.iter().map(|(_, b)| *b).sum()
+    }
+}
+
+/// Walk the backing-file pointers from chain head `head`, inserting
+/// every visited file name into `reachable`. Fails on an unopenable
+/// image or a backing loop. Shared by the coordinator audit and the
+/// CLI `sqemu gc` reachability pass, so the loop guard and error
+/// handling cannot drift apart.
+pub fn walk_backing(
+    store: &dyn FileStore,
+    head: &str,
+    reachable: &mut HashSet<String>,
+) -> Result<()> {
+    let mut cursor = Some(head.to_string());
+    let mut hops = 0usize;
+    while let Some(name) = cursor.take() {
+        hops += 1;
+        if hops > u16::MAX as usize {
+            bail!("backing loop via '{name}'");
+        }
+        let img = store
+            .open_file(&name)
+            .and_then(|b| Image::open(&name, b, DataMode::Real))
+            .map_err(|e| anyhow::anyhow!("cannot open '{name}': {e:#}"))?;
+        cursor = img.backing_name();
+        reachable.insert(name);
+    }
+    Ok(())
+}
+
+/// Audit `nodes` against the chains registered in `registry`.
+pub fn audit(nodes: &NodeSet, registry: &GcRegistry) -> AuditReport {
+    let mut report = AuditReport::default();
+    let mut reachable: HashSet<String> = HashSet::new();
+    for (chain_id, files) in registry.chains() {
+        let Some(active) = files.last() else { continue };
+        if let Err(e) = walk_backing(nodes, active, &mut reachable) {
+            report.errors.push(format!("chain '{chain_id}': {e:#}"));
+        }
+    }
+    report.reachable = reachable.len() as u64;
+    let condemned: HashSet<String> = registry
+        .condemned()
+        .into_iter()
+        .map(|(name, _)| name)
+        .collect();
+    for node in nodes.nodes() {
+        for f in node.file_names() {
+            if reachable.contains(&f) {
+                continue;
+            }
+            if condemned.contains(&f) {
+                report.condemned.push(f);
+                continue;
+            }
+            let bytes = node.open_file(&f).map(|b| b.stored_bytes()).unwrap_or(0);
+            report.leaked.push((f, bytes));
+        }
+    }
+    report.condemned.sort();
+    report.leaked.sort();
+    report
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::clock::{CostModel, VirtClock};
+    use crate::qcow::layout::{Geometry, FEATURE_BFI};
+    use crate::qcow::{snapshot, Chain};
+    use crate::storage::node::StorageNode;
+    use crate::storage::store::FileStore;
+    use std::sync::Arc;
+
+    fn setup() -> (Arc<NodeSet>, Arc<GcRegistry>) {
+        let clock = VirtClock::new();
+        let nodes = Arc::new(
+            NodeSet::new(vec![StorageNode::new(
+                "n0",
+                clock,
+                CostModel::default(),
+            )])
+            .unwrap(),
+        );
+        let reg = Arc::new(GcRegistry::new(Arc::clone(&nodes)));
+        (nodes, reg)
+    }
+
+    fn make_chain(nodes: &NodeSet, reg: &GcRegistry, id: &str, len: usize) {
+        let b = nodes.create_file(&format!("{id}-0")).unwrap();
+        let img = Image::create(
+            &format!("{id}-0"),
+            b,
+            Geometry::new(16, 4 << 20).unwrap(),
+            FEATURE_BFI,
+            0,
+            None,
+            DataMode::Real,
+        )
+        .unwrap();
+        let mut chain = Chain::new(Arc::new(img)).unwrap();
+        for i in 1..len {
+            snapshot::snapshot_sqemu(&mut chain, nodes, &format!("{id}-{i}")).unwrap();
+        }
+        reg.sync_chain(
+            id,
+            chain.images().iter().map(|i| i.name.clone()).collect(),
+        );
+    }
+
+    #[test]
+    fn clean_fleet_audits_clean() {
+        let (nodes, reg) = setup();
+        make_chain(&nodes, &reg, "a", 3);
+        let r = audit(&nodes, &reg);
+        assert!(r.is_clean(), "{:?}", r.leaked);
+        assert_eq!(r.reachable, 3);
+    }
+
+    #[test]
+    fn orphan_file_is_flagged_as_leak() {
+        let (nodes, reg) = setup();
+        make_chain(&nodes, &reg, "a", 2);
+        // a file nobody references and nobody condemned
+        let b = nodes.create_file("orphan").unwrap();
+        b.write_at(&[9u8; 8 << 10], 0).unwrap();
+        let r = audit(&nodes, &reg);
+        assert!(!r.is_clean());
+        assert_eq!(r.leaked.len(), 1);
+        assert_eq!(r.leaked[0].0, "orphan");
+        assert_eq!(r.leaked_bytes(), 8 << 10);
+    }
+
+    #[test]
+    fn condemned_files_are_not_leaks() {
+        let (nodes, reg) = setup();
+        make_chain(&nodes, &reg, "a", 2);
+        make_chain(&nodes, &reg, "b", 2);
+        reg.drop_chain("b");
+        let r = audit(&nodes, &reg);
+        assert!(r.is_clean(), "condemned != leaked: {:?}", r.leaked);
+        assert_eq!(r.condemned, vec!["b-0".to_string(), "b-1".to_string()]);
+        assert_eq!(r.reachable, 2);
+    }
+}

@@ -1,0 +1,308 @@
+//! The cross-chain reference registry and deferred-delete set.
+//!
+//! §3's characterization shows base images are shared by many chains
+//! (Fig 8), so reclamation must be reference-counted, never a blind
+//! delete: a file is only *condemned* (moved to the deferred-delete set)
+//! when the last chain referencing it drops it, and it is only
+//! *physically* deleted by a [`super::GcJob`] sweep — with a final
+//! refcount re-check at delete time, so a chain opened between
+//! condemnation and the sweep resurrects the file instead of losing it.
+
+use crate::coordinator::placement::NodeSet;
+use crate::storage::store::FileStore;
+use std::collections::{BTreeMap, HashMap, HashSet};
+use std::sync::atomic::{AtomicU64, Ordering::Relaxed};
+use std::sync::{Arc, Mutex};
+
+/// A file awaiting physical deletion.
+#[derive(Clone, Debug)]
+pub struct Condemned {
+    /// Stored bytes at condemnation time (refreshed at delete time).
+    pub bytes: u64,
+    /// The chain whose drop condemned the file (stats attribution).
+    pub origin: String,
+}
+
+#[derive(Default)]
+struct Inner {
+    /// file name -> chain ids referencing it
+    refs: HashMap<String, HashSet<String>>,
+    /// chain id -> its file list, base first, active last
+    chains: HashMap<String, Vec<String>>,
+    /// deferred-delete set (BTreeMap: deterministic sweep order)
+    condemned: BTreeMap<String, Condemned>,
+    /// bytes reclaimed per origin chain since the last drain
+    reclaimed_by: HashMap<String, u64>,
+}
+
+/// Fleet-wide GC state: who references what, and what may be deleted.
+pub struct GcRegistry {
+    nodes: Arc<NodeSet>,
+    inner: Mutex<Inner>,
+    gc_runs: AtomicU64,
+    reclaimed_bytes: AtomicU64,
+    files_deleted: AtomicU64,
+}
+
+impl GcRegistry {
+    pub fn new(nodes: Arc<NodeSet>) -> GcRegistry {
+        GcRegistry {
+            nodes,
+            inner: Mutex::new(Inner::default()),
+            gc_runs: AtomicU64::new(0),
+            reclaimed_bytes: AtomicU64::new(0),
+            files_deleted: AtomicU64::new(0),
+        }
+    }
+
+    /// Declare the current file set of a chain (called after open,
+    /// snapshot, offline stream and live-job completion). Files the chain
+    /// no longer references are unref'd; files whose last reference this
+    /// was are condemned. Newly referenced files are resurrected from the
+    /// deferred-delete set if a sweep had not reached them yet.
+    pub fn sync_chain(&self, chain_id: &str, files: Vec<String>) {
+        let mut inner = self.inner.lock().unwrap();
+        let new_set: HashSet<String> = files.iter().cloned().collect();
+        let old = inner
+            .chains
+            .insert(chain_id.to_string(), files.clone())
+            .unwrap_or_default();
+        for f in &files {
+            inner
+                .refs
+                .entry(f.clone())
+                .or_default()
+                .insert(chain_id.to_string());
+            if inner.condemned.remove(f).is_some() {
+                if let Some(node) = self.nodes.node_of(f) {
+                    node.uncondemn(f);
+                }
+            }
+        }
+        for f in old {
+            if !new_set.contains(&f) {
+                unref(&self.nodes, &mut inner, &f, chain_id);
+            }
+        }
+    }
+
+    /// Drop a chain entirely (decommission / snapshot-chain deletion):
+    /// release all its references; files it referenced alone are
+    /// condemned.
+    pub fn drop_chain(&self, chain_id: &str) {
+        let mut inner = self.inner.lock().unwrap();
+        let files = inner.chains.remove(chain_id).unwrap_or_default();
+        for f in files {
+            unref(&self.nodes, &mut inner, &f, chain_id);
+        }
+    }
+
+    /// How many chains reference `file`?
+    pub fn refcount(&self, file: &str) -> usize {
+        self.inner
+            .lock()
+            .unwrap()
+            .refs
+            .get(file)
+            .map_or(0, |s| s.len())
+    }
+
+    pub fn is_condemned(&self, file: &str) -> bool {
+        self.inner.lock().unwrap().condemned.contains_key(file)
+    }
+
+    pub fn condemned_count(&self) -> usize {
+        self.inner.lock().unwrap().condemned.len()
+    }
+
+    /// Snapshot of the deferred-delete set (name, info), sweep order.
+    pub fn condemned(&self) -> Vec<(String, Condemned)> {
+        self.inner
+            .lock()
+            .unwrap()
+            .condemned
+            .iter()
+            .map(|(k, v)| (k.clone(), v.clone()))
+            .collect()
+    }
+
+    /// Bytes awaiting reclamation.
+    pub fn condemned_bytes(&self) -> u64 {
+        self.inner
+            .lock()
+            .unwrap()
+            .condemned
+            .values()
+            .map(|c| c.bytes)
+            .sum()
+    }
+
+    /// Registered chains and their file lists (leak-audit input).
+    pub fn chains(&self) -> Vec<(String, Vec<String>)> {
+        let inner = self.inner.lock().unwrap();
+        let mut v: Vec<(String, Vec<String>)> = inner
+            .chains
+            .iter()
+            .map(|(k, f)| (k.clone(), f.clone()))
+            .collect();
+        v.sort();
+        v
+    }
+
+    /// Physically delete one condemned file, oldest name first. The
+    /// deferred entry is only removed together with the deletion, so a
+    /// cancelled sweep leaves every untouched file still condemned (no
+    /// half states). Returns `(name, reclaimed_bytes)`, or `None` when
+    /// the deferred-delete set is empty.
+    pub fn sweep_one(&self) -> Option<(String, u64)> {
+        let mut inner = self.inner.lock().unwrap();
+        loop {
+            let name = inner.condemned.keys().next()?.clone();
+            let c = inner.condemned.remove(&name).expect("key just seen");
+            // safety gate: never delete a file a chain re-referenced
+            // after condemnation
+            if inner.refs.get(&name).is_some_and(|s| !s.is_empty()) {
+                if let Some(node) = self.nodes.node_of(&name) {
+                    node.uncondemn(&name);
+                }
+                continue;
+            }
+            let Some(node) = self.nodes.node_of(&name) else {
+                continue; // already gone from every node
+            };
+            let bytes = node
+                .open_file(&name)
+                .map(|b| b.stored_bytes())
+                .unwrap_or(c.bytes);
+            if self.nodes.delete_file(&name).is_err() {
+                continue;
+            }
+            node.note_reclaimed(bytes);
+            self.reclaimed_bytes.fetch_add(bytes, Relaxed);
+            self.files_deleted.fetch_add(1, Relaxed);
+            *inner.reclaimed_by.entry(c.origin).or_default() += bytes;
+            return Some((name, bytes));
+        }
+    }
+
+    /// Take the per-origin reclaimed-bytes ledger (per-VM stats).
+    pub fn drain_reclaimed_by(&self) -> Vec<(String, u64)> {
+        let mut inner = self.inner.lock().unwrap();
+        std::mem::take(&mut inner.reclaimed_by).into_iter().collect()
+    }
+
+    pub fn note_run(&self) {
+        self.gc_runs.fetch_add(1, Relaxed);
+    }
+
+    pub fn gc_runs(&self) -> u64 {
+        self.gc_runs.load(Relaxed)
+    }
+
+    pub fn reclaimed_total(&self) -> u64 {
+        self.reclaimed_bytes.load(Relaxed)
+    }
+
+    pub fn files_deleted(&self) -> u64 {
+        self.files_deleted.load(Relaxed)
+    }
+
+    pub fn nodes(&self) -> &Arc<NodeSet> {
+        &self.nodes
+    }
+}
+
+/// Drop `origin`'s reference to `file`; condemn the file when that was
+/// the last reference and it still exists on a node.
+fn unref(nodes: &NodeSet, inner: &mut Inner, file: &str, origin: &str) {
+    if let Some(set) = inner.refs.get_mut(file) {
+        set.remove(origin);
+        if !set.is_empty() {
+            return;
+        }
+        inner.refs.remove(file);
+    }
+    let Some(node) = nodes.node_of(file) else {
+        return;
+    };
+    let bytes = node.open_file(file).map(|b| b.stored_bytes()).unwrap_or(0);
+    node.mark_condemned(file);
+    inner.condemned.insert(
+        file.to_string(),
+        Condemned { bytes, origin: origin.to_string() },
+    );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::clock::{CostModel, VirtClock};
+    use crate::storage::node::StorageNode;
+
+    fn setup(files: &[&str]) -> (Arc<NodeSet>, Arc<GcRegistry>) {
+        let clock = VirtClock::new();
+        let nodes = Arc::new(
+            NodeSet::new(vec![StorageNode::new(
+                "n0",
+                clock,
+                CostModel::default(),
+            )])
+            .unwrap(),
+        );
+        for f in files {
+            let b = nodes.create_file(f).unwrap();
+            b.write_at(&[1u8; 1 << 10], 0).unwrap();
+        }
+        let reg = Arc::new(GcRegistry::new(Arc::clone(&nodes)));
+        (nodes, reg)
+    }
+
+    #[test]
+    fn shared_file_survives_until_last_reference() {
+        let (_nodes, reg) = setup(&["base", "a-1", "b-1"]);
+        reg.sync_chain("a", vec!["base".into(), "a-1".into()]);
+        reg.sync_chain("b", vec!["base".into(), "b-1".into()]);
+        assert_eq!(reg.refcount("base"), 2);
+        // chain a collapses to its active alone
+        reg.sync_chain("a", vec!["a-1".into()]);
+        assert_eq!(reg.refcount("base"), 1);
+        assert!(!reg.is_condemned("base"));
+        // chain b collapses too: now base is condemned
+        reg.sync_chain("b", vec!["b-1".into()]);
+        assert_eq!(reg.refcount("base"), 0);
+        assert!(reg.is_condemned("base"));
+        assert!(reg.condemned_bytes() >= 1 << 10);
+    }
+
+    #[test]
+    fn resurrect_before_sweep() {
+        let (nodes, reg) = setup(&["base"]);
+        reg.sync_chain("a", vec!["base".into()]);
+        reg.drop_chain("a");
+        assert!(reg.is_condemned("base"));
+        // a new chain opens the file before GC runs
+        reg.sync_chain("b", vec!["base".into()]);
+        assert!(!reg.is_condemned("base"));
+        assert_eq!(reg.sweep_one(), None, "nothing deletable");
+        assert!(nodes.open_file("base").is_ok());
+    }
+
+    #[test]
+    fn sweep_deletes_and_accounts() {
+        let (nodes, reg) = setup(&["f0", "f1"]);
+        reg.sync_chain("c", vec!["f0".into(), "f1".into()]);
+        reg.drop_chain("c");
+        let (n0, b0) = reg.sweep_one().unwrap();
+        assert_eq!(n0, "f0");
+        assert_eq!(b0, 1 << 10);
+        assert!(nodes.open_file("f0").is_err());
+        assert!(nodes.open_file("f1").is_ok());
+        reg.sweep_one().unwrap();
+        assert_eq!(reg.sweep_one(), None);
+        assert_eq!(reg.files_deleted(), 2);
+        assert_eq!(reg.reclaimed_total(), 2 << 10);
+        let by = reg.drain_reclaimed_by();
+        assert_eq!(by, vec![("c".to_string(), 2u64 << 10)]);
+        assert!(reg.drain_reclaimed_by().is_empty(), "ledger drained");
+    }
+}

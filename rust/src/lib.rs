@@ -19,6 +19,8 @@
 //! * [`vdisk`] — the two request-path drivers and their low-level metrics.
 //! * [`blockjob`] — live chain maintenance: incremental, rate-limited
 //!   stream/stamp jobs interleaved with guest I/O.
+//! * [`gc`] — chain garbage collection: cross-chain reference registry,
+//!   deferred-delete set, rate-limited sweep job and leak audit.
 //! * [`guest`] — simulated guest workloads (dd, fio, YCSB over an LSM
 //!   key-value store, VM boot).
 //! * [`chaingen`], [`characterize`] — chain generation + the §3 study.
@@ -34,6 +36,7 @@ pub mod chaingen;
 pub mod characterize;
 pub mod cli;
 pub mod coordinator;
+pub mod gc;
 pub mod guest;
 pub mod metrics;
 pub mod qcow;

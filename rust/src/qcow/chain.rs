@@ -110,6 +110,12 @@ impl Chain {
     pub fn total_file_bytes(&self) -> u64 {
         self.images.iter().map(|i| i.file_len()).sum()
     }
+
+    /// File names, base first, active last (the GC registry's unit of
+    /// reference).
+    pub fn file_names(&self) -> Vec<String> {
+        self.images.iter().map(|i| i.name.clone()).collect()
+    }
 }
 
 #[cfg(test)]

@@ -114,6 +114,13 @@ pub fn convert_to_sqemu(chain: &Chain) -> Result<u64> {
 /// untouched. The rebuilt chain reuses the original file names for the
 /// surviving suffix.
 ///
+/// The dropped files are *not* deleted from their store here: a merged
+/// predecessor may be a base image shared by other chains (§3, Fig 8),
+/// and only the coordinator's [`crate::gc`] registry has the
+/// cross-chain refcounts to know. Callers that own that knowledge hand
+/// the drop set to GC (the coordinator does this automatically;
+/// `sqemu gc run` is the offline-tool path).
+///
 /// Returns the number of data clusters copied.
 pub fn stream_merge(chain: &mut Chain, from: u16, to: u16) -> Result<u64> {
     if from > to || (to as usize) >= chain.len() {

@@ -34,6 +34,15 @@ pub trait Backend: Send + Sync {
     fn stored_bytes(&self) -> u64 {
         self.len()
     }
+
+    /// The backend's notion of current time in ns, if it has one — the
+    /// virtual node clock for [`super::timed::Timed`] files. Lets code
+    /// holding only a file handle (e.g. the streaming orchestrator)
+    /// measure the virtual duration of an operation. Clock-less backends
+    /// report 0, making such measurements degrade to 0 rather than lie.
+    fn now_ns(&self) -> u64 {
+        0
+    }
 }
 
 /// Shared handle to a backend.

@@ -11,7 +11,8 @@ use super::mem::MemBackend;
 use super::timed::Timed;
 use crate::metrics::clock::{CostModel, VirtClock};
 use anyhow::{bail, Result};
-use std::collections::HashMap;
+use std::collections::{HashMap, HashSet};
+use std::sync::atomic::{AtomicU64, Ordering::Relaxed};
 use std::sync::{Arc, Mutex};
 
 /// A named storage server: files are created on it and served through its
@@ -21,6 +22,13 @@ pub struct StorageNode {
     clock: Arc<VirtClock>,
     cost: CostModel,
     files: Mutex<HashMap<String, BackendRef>>,
+    /// Files condemned by the GC registry (deferred delete): still
+    /// physically present, but excluded from thin-provisioning pressure.
+    condemned: Mutex<HashSet<String>>,
+    /// Bytes returned by GC sweeps over this node's lifetime.
+    reclaimed: AtomicU64,
+    /// Files deleted by GC sweeps.
+    gc_deletes: AtomicU64,
     /// physical capacity in bytes (thin-provisioning trigger); u64::MAX =
     /// unlimited
     pub capacity: u64,
@@ -28,13 +36,7 @@ pub struct StorageNode {
 
 impl StorageNode {
     pub fn new(name: &str, clock: Arc<VirtClock>, cost: CostModel) -> Arc<Self> {
-        Arc::new(StorageNode {
-            name: name.to_string(),
-            clock,
-            cost,
-            files: Mutex::new(HashMap::new()),
-            capacity: u64::MAX,
-        })
+        Self::with_capacity(name, clock, cost, u64::MAX)
     }
 
     pub fn with_capacity(
@@ -48,6 +50,9 @@ impl StorageNode {
             clock,
             cost,
             files: Mutex::new(HashMap::new()),
+            condemned: Mutex::new(HashSet::new()),
+            reclaimed: AtomicU64::new(0),
+            gc_deletes: AtomicU64::new(0),
             capacity,
         })
     }
@@ -78,7 +83,10 @@ impl StorageNode {
 
     pub fn delete_file(&self, name: &str) -> Result<()> {
         match self.files.lock().unwrap().remove(name) {
-            Some(_) => Ok(()),
+            Some(_) => {
+                self.condemned.lock().unwrap().remove(name);
+                Ok(())
+            }
             None => bail!("no file '{name}' on node '{}'", self.name),
         }
     }
@@ -97,9 +105,67 @@ impl StorageNode {
             .sum()
     }
 
-    /// Would adding `bytes` exceed this node's capacity?
+    /// Mark `name` as condemned (GC deferred delete): its bytes stop
+    /// counting against thin-provisioning pressure while the sweep is
+    /// pending. No-op for files not on this node.
+    pub fn mark_condemned(&self, name: &str) {
+        let present = self.files.lock().unwrap().contains_key(name);
+        if present {
+            self.condemned.lock().unwrap().insert(name.to_string());
+        }
+    }
+
+    /// Resurrect a condemned file (a chain re-referenced it before the
+    /// sweep): its bytes count as pressure again.
+    pub fn uncondemn(&self, name: &str) {
+        self.condemned.lock().unwrap().remove(name);
+    }
+
+    /// Bytes held by condemned (pending-delete) files.
+    pub fn condemned_bytes(&self) -> u64 {
+        let files = self.files.lock().unwrap();
+        self.condemned
+            .lock()
+            .unwrap()
+            .iter()
+            .filter_map(|n| files.get(n))
+            .map(|f| f.stored_bytes())
+            .sum()
+    }
+
+    /// Capacity pressure: stored bytes minus condemned bytes — what the
+    /// placement layer sees. Condemned files are as good as deleted for
+    /// thin provisioning; the GC sweep makes it physical.
+    pub fn pressure_bytes(&self) -> u64 {
+        let files = self.files.lock().unwrap();
+        let condemned = self.condemned.lock().unwrap();
+        files
+            .iter()
+            .filter(|(n, _)| !condemned.contains(n.as_str()))
+            .map(|(_, f)| f.stored_bytes())
+            .sum()
+    }
+
+    /// Account a GC deletion of `bytes` (called by the sweep).
+    pub fn note_reclaimed(&self, bytes: u64) {
+        self.reclaimed.fetch_add(bytes, Relaxed);
+        self.gc_deletes.fetch_add(1, Relaxed);
+    }
+
+    /// Bytes reclaimed by GC over this node's lifetime.
+    pub fn reclaimed_bytes(&self) -> u64 {
+        self.reclaimed.load(Relaxed)
+    }
+
+    /// Files deleted by GC over this node's lifetime.
+    pub fn gc_deletes(&self) -> u64 {
+        self.gc_deletes.load(Relaxed)
+    }
+
+    /// Would adding `bytes` exceed this node's capacity? Condemned files
+    /// do not count: their deletion is already scheduled.
     pub fn would_overflow(&self, bytes: u64) -> bool {
-        self.used_bytes().saturating_add(bytes) > self.capacity
+        self.pressure_bytes().saturating_add(bytes) > self.capacity
     }
 
     pub fn clock(&self) -> &Arc<VirtClock> {
@@ -138,6 +204,38 @@ mod tests {
         let t0 = n.clock().now();
         f.write_at(&[0u8; 512], 0).unwrap();
         assert!(n.clock().now() > t0);
+    }
+
+    #[test]
+    fn condemned_files_drop_out_of_pressure_not_usage() {
+        let clock = VirtClock::new();
+        let n = StorageNode::with_capacity("tiny", clock, CostModel::default(), 128 << 10);
+        let f = n.create_file("d").unwrap();
+        f.write_at(&[1u8; 96 << 10], 0).unwrap();
+        assert!(n.would_overflow(64 << 10));
+        n.mark_condemned("d");
+        // physically still there, but no longer thin-provisioning pressure
+        assert_eq!(n.used_bytes(), 96 << 10);
+        assert_eq!(n.condemned_bytes(), 96 << 10);
+        assert_eq!(n.pressure_bytes(), 0);
+        assert!(!n.would_overflow(64 << 10));
+        // resurrect: pressure returns
+        n.uncondemn("d");
+        assert!(n.would_overflow(64 << 10));
+        // deleting clears the mark and the usage together
+        n.mark_condemned("d");
+        n.delete_file("d").unwrap();
+        assert_eq!(n.used_bytes(), 0);
+        assert_eq!(n.condemned_bytes(), 0);
+    }
+
+    #[test]
+    fn reclaim_counters_accumulate() {
+        let n = node();
+        n.note_reclaimed(100);
+        n.note_reclaimed(28);
+        assert_eq!(n.reclaimed_bytes(), 128);
+        assert_eq!(n.gc_deletes(), 2);
     }
 
     #[test]

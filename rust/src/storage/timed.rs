@@ -70,6 +70,10 @@ impl<B: Backend> Backend for Timed<B> {
     fn stored_bytes(&self) -> u64 {
         self.inner.stored_bytes()
     }
+
+    fn now_ns(&self) -> u64 {
+        self.clock.now()
+    }
 }
 
 #[cfg(test)]

@@ -139,6 +139,11 @@ impl ScalableDriver {
                             self.base.counters.unallocated();
                             return Ok(Some((bfi, off)));
                         }
+                        // present-but-unallocated entry: one Eq. 1 chain
+                        // hop (T_F) down to the next backing file — the
+                        // same call-chain cost VanillaDriver pays, so the
+                        // compat walk is not free in the cost model
+                        self.base.charge_hop();
                     }
                 }
                 Ok(None)
@@ -247,6 +252,11 @@ impl Driver for ScalableDriver {
     }
 
     fn reopen(&mut self) -> Result<()> {
+        // drain before rebuilding: the cache may hold dirty corrected
+        // slices due for writeback — rebuilding without flushing would
+        // silently discard them (the callers that flush first make this
+        // a no-op; direct reopens must not lose corrections)
+        self.flush()?;
         let active_index = (self.base.chain.len() - 1) as u16;
         self.complete_index =
             self.base.chain.active().has_bfi() || self.base.chain.len() == 1;
@@ -424,5 +434,107 @@ mod tests {
         let e = d.chain().active().l2_entry(0).unwrap();
         assert!(e.is_allocated_here());
         assert_eq!(e.bfi(), Some(d.chain().active().chain_index()));
+    }
+
+    /// Build a vanilla (unstamped) chain where files 0..n-1 each own one
+    /// cluster and the active volume is empty, under a cost model where
+    /// virtual time advances only in T_L units (t_ram = t_disk = 0): the
+    /// clock then counts exactly device I/Os + chain hops.
+    fn hop_cost_chain(n_layers: usize) -> (Chain, Arc<VirtClock>, CostModel) {
+        let cost = CostModel {
+            t_ram: 0,
+            t_layers: 1_000,
+            t_disk: 0,
+            bandwidth: u64::MAX,
+        };
+        let clock = VirtClock::new();
+        let node = StorageNode::new("s", clock.clone(), cost);
+        let b = node.create_file("img-0").unwrap();
+        let img = Image::create(
+            "img-0",
+            b,
+            Geometry::new(16, 16 << 20).unwrap(),
+            0,
+            0,
+            None,
+            DataMode::Real,
+        )
+        .unwrap();
+        let mut chain = Chain::new(Arc::new(img)).unwrap();
+        for i in 0..n_layers {
+            let img = chain.active();
+            let off = img.alloc_data_cluster().unwrap();
+            img.write_data(off, 0, &[i as u8 + 1; 16]).unwrap();
+            img.set_l2_entry(i as u64, L2Entry::local(off, None)).unwrap();
+            snapshot::snapshot_vanilla(&mut chain, &node, &format!("img-{}", i + 1))
+                .unwrap();
+        }
+        (chain, clock, cost)
+    }
+
+    #[test]
+    fn fallback_walk_charges_hops_like_vanilla() {
+        // regression: the backward-compat chain walk never called
+        // charge_hop(), so it was free in the cost model while
+        // VanillaDriver pays one T_F per present-but-unallocated file —
+        // reading the base cluster must cost the same through both
+        use crate::vdisk::vanilla::VanillaDriver;
+        let cache = CacheConfig::new(32, 1 << 20);
+        let mut buf = [0u8; 4];
+
+        let (chain_v, clock_v, cost_v) = hop_cost_chain(3);
+        let mut dv = VanillaDriver::new(
+            chain_v,
+            cache,
+            clock_v.clone(),
+            cost_v,
+            MemoryAccountant::new(),
+        );
+        let t0 = clock_v.now();
+        dv.read(0, &mut buf).unwrap();
+        let vanilla_ns = clock_v.now() - t0;
+        assert_eq!(buf, [1; 4]);
+
+        let (chain_s, clock_s, cost_s) = hop_cost_chain(3);
+        let mut ds = ScalableDriver::new(
+            chain_s,
+            cache,
+            clock_s.clone(),
+            cost_s,
+            MemoryAccountant::new(),
+        );
+        assert!(!ds.complete_index, "this is the compat path");
+        let t0 = clock_s.now();
+        ds.read(0, &mut buf).unwrap();
+        let scalable_ns = clock_s.now() - t0;
+        assert_eq!(buf, [1; 4]);
+
+        // both walks: 3 slice fetches + 1 data read + 2 chain hops
+        assert_eq!(
+            scalable_ns, vanilla_ns,
+            "the compat walk must pay the same T_F hops as VanillaDriver"
+        );
+        assert!(vanilla_ns >= 6 * cost_v.t_layers, "hops are in the bill");
+    }
+
+    #[test]
+    fn reopen_persists_corrected_slices() {
+        // regression: reopen() rebuilt the unified cache without draining
+        // it, silently discarding dirty corrected slices due for
+        // writeback
+        let (chain, clock, _cost) = hop_cost_chain(2);
+        let mut d = driver(chain, clock);
+        let mut buf = [0u8; 4];
+        d.read(0, &mut buf).unwrap(); // correction now dirty in the cache
+        assert_eq!(buf, [1; 4]);
+        let before = d.chain().active().l2_entry(0).unwrap();
+        assert!(before.is_zero(), "correction not yet written back");
+        d.reopen().unwrap();
+        let e = d.chain().active().l2_entry(0).unwrap();
+        assert_eq!(e.bfi(), Some(0), "corrected stamp persisted by reopen");
+        assert!(!e.is_allocated_here(), "stamp, not a bogus local claim");
+        // and the chain still reads correctly through a fresh cache
+        d.read(0, &mut buf).unwrap();
+        assert_eq!(buf, [1; 4]);
     }
 }

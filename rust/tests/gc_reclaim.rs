@@ -1,0 +1,306 @@
+//! GC end-to-end invariants: streaming a chain to length 1 and running
+//! GC returns the dropped files' capacity to the node (within 10% of the
+//! single-file footprint); a base image shared by 8 chains survives
+//! until the *last* chain streams; cancelling mid-sweep leaves a
+//! consistent deferred-delete set (files are deleted atomically, never
+//! half-collected); the leak audit catches files no chain reaches.
+
+use sqemu::blockjob::{JobKind, JobRunner, JobShared, JobState, Step};
+use sqemu::cache::CacheConfig;
+use sqemu::chaingen::ChainSpec;
+use sqemu::coordinator::server::VmChain;
+use sqemu::coordinator::{Coordinator, NodeSet, VmConfig};
+use sqemu::gc::{GcJob, GcRegistry};
+use sqemu::metrics::clock::{CostModel, VirtClock};
+use sqemu::qcow::entry::L2Entry;
+use sqemu::qcow::image::{DataMode, Image};
+use sqemu::qcow::layout::{Geometry, FEATURE_BFI};
+use sqemu::qcow::{snapshot, Chain};
+use sqemu::storage::node::StorageNode;
+use sqemu::storage::store::FileStore;
+use sqemu::vdisk::{Driver, DriverKind};
+use std::sync::Arc;
+
+fn launch_generated(coord: &Arc<Coordinator>, name: &str, chain_len: usize) {
+    coord
+        .launch_vm(
+            name,
+            VmConfig {
+                driver: DriverKind::Scalable,
+                cache: CacheConfig::new(64, 1 << 20),
+                chain: VmChain::Generate(ChainSpec {
+                    disk_size: 16 << 20,
+                    chain_len,
+                    populated: 0.5,
+                    stamped: true,
+                    data_mode: DataMode::Real,
+                    prefix: name.into(),
+                    seed: 0x6C0 ^ name.len() as u64,
+                    ..Default::default()
+                }),
+            },
+        )
+        .unwrap();
+}
+
+#[test]
+fn stream_100_deep_then_gc_reclaims_capacity() {
+    let coord = Coordinator::with_fresh_nodes(1).unwrap();
+    launch_generated(&coord, "vm-a", 100);
+    let node = Arc::clone(&coord.nodes.nodes()[0]);
+    let used_before = node.used_bytes();
+    assert_eq!(coord.chain_files("vm-a").unwrap().len(), 100);
+
+    let report = coord.stream_vm("vm-a", 0, 99).unwrap();
+    assert_eq!(report.len_after, 1);
+    // files are dropped from the chain but still on the node: condemned,
+    // so pressure falls ahead of the physical sweep
+    assert_eq!(coord.gc_registry().condemned_count(), 99);
+    // nothing deleted yet (the merge even grows the target file)
+    assert!(node.used_bytes() >= used_before);
+    assert!(node.pressure_bytes() < node.used_bytes());
+
+    let gc = coord.run_gc(0).unwrap();
+    assert_eq!(gc.files_deleted, 99);
+    assert_eq!(gc.remaining_condemned, 0);
+    assert!(gc.reclaimed_bytes > 0);
+
+    // within 10% of (here: exactly) the surviving single-file footprint
+    let files = coord.chain_files("vm-a").unwrap();
+    assert_eq!(files.len(), 1);
+    let active_bytes = coord.nodes.open_file(&files[0]).unwrap().stored_bytes();
+    let used = node.used_bytes();
+    assert!(used >= active_bytes);
+    assert!(
+        used * 10 <= active_bytes * 11,
+        "used {used} not within 10% of single-file footprint {active_bytes}"
+    );
+
+    // stats surfaced per VM and per node
+    let s = coord.vm_stats("vm-a").unwrap();
+    assert_eq!(s.reclaimed_bytes, gc.reclaimed_bytes);
+    assert_eq!(s.gc_runs, 1);
+    assert_eq!(node.reclaimed_bytes(), gc.reclaimed_bytes);
+    assert_eq!(node.gc_deletes(), 99);
+    assert_eq!(coord.gc_registry().gc_runs(), 1);
+
+    // and the VM still serves its (collapsed) disk
+    let client = coord.client("vm-a").unwrap();
+    client.read(0, 4096).unwrap();
+    coord.shutdown();
+}
+
+/// Build `n_chains` sqemu chains of `depth` snapshots each, all backing
+/// onto one shared base image, and launch a VM on each.
+fn shared_base_fleet(
+    coord: &Arc<Coordinator>,
+    n_chains: usize,
+    depth: usize,
+) -> Vec<String> {
+    let nodes = Arc::clone(&coord.nodes);
+    let b = nodes.create_file("base").unwrap();
+    let base = Image::create(
+        "base",
+        b,
+        Geometry::new(16, 8 << 20).unwrap(),
+        FEATURE_BFI,
+        0,
+        None,
+        DataMode::Real,
+    )
+    .unwrap();
+    {
+        // one cluster of real data in the shared base
+        let off = base.alloc_data_cluster().unwrap();
+        base.write_data(off, 0, &[0xBB; 64]).unwrap();
+        base.set_l2_entry(0, L2Entry::local(off, Some(0))).unwrap();
+    }
+    drop(base);
+    let mut vms = Vec::new();
+    for k in 0..n_chains {
+        let mut chain = Chain::open(nodes.as_ref(), "base", DataMode::Real).unwrap();
+        for d in 1..=depth {
+            snapshot::snapshot_sqemu(&mut chain, nodes.as_ref(), &format!("c{k}-{d}"))
+                .unwrap();
+            let img = chain.active();
+            let off = img.alloc_data_cluster().unwrap();
+            img.write_data(off, 0, &[(k * 16 + d) as u8; 64]).unwrap();
+            img.set_l2_entry(d as u64, L2Entry::local(off, Some(img.chain_index())))
+                .unwrap();
+        }
+        let vm = format!("vm-{k}");
+        coord
+            .launch_vm(
+                &vm,
+                VmConfig {
+                    driver: DriverKind::Scalable,
+                    cache: CacheConfig::new(64, 1 << 20),
+                    chain: VmChain::Existing {
+                        active_name: format!("c{k}-{depth}"),
+                        data_mode: DataMode::Real,
+                    },
+                },
+            )
+            .unwrap();
+        vms.push(vm);
+    }
+    vms
+}
+
+#[test]
+fn shared_base_survives_until_the_last_chain_streams() {
+    let coord = Coordinator::with_fresh_nodes(1).unwrap();
+    let depth = 12usize;
+    let vms = shared_base_fleet(&coord, 8, depth);
+    assert_eq!(coord.gc_registry().refcount("base"), 8);
+
+    for (k, vm) in vms.iter().enumerate() {
+        let report = coord.stream_vm(vm, 0, depth as u16).unwrap();
+        assert_eq!(report.len_after, 1);
+        let gc = coord.run_gc(0).unwrap();
+        assert!(gc.files_deleted >= depth as u64 - 1);
+        // this chain's own intermediate files are gone...
+        assert!(coord.nodes.open_file(&format!("c{k}-1")).is_err());
+        if k + 1 < vms.len() {
+            // ...but the shared base survives while any chain references it
+            assert!(
+                coord.nodes.open_file("base").is_ok(),
+                "base deleted while {} chain(s) still reference it",
+                vms.len() - k - 1
+            );
+            assert_eq!(coord.gc_registry().refcount("base"), vms.len() - k - 1);
+            // an unstreamed chain still reads the base's cluster
+            let probe = coord.client(&vms[k + 1]).unwrap();
+            let buf = probe.read(0, 64).unwrap();
+            assert_eq!(&buf[..8], &[0xBB; 8][..], "shared base data intact");
+        } else {
+            // the last reference is gone: base reclaimed
+            assert!(
+                coord.nodes.open_file("base").is_err(),
+                "base must be reclaimed once no chain references it"
+            );
+        }
+    }
+    // fleet fully streamed: one file per chain remains
+    let audit = coord.gc_audit();
+    assert!(audit.is_clean(), "leaks: {:?}", audit.leaked);
+    assert_eq!(audit.reachable, 8);
+    coord.shutdown();
+}
+
+#[test]
+fn cancel_mid_sweep_leaves_consistent_deferred_set() {
+    let clock = VirtClock::new();
+    let nodes = Arc::new(
+        NodeSet::new(vec![StorageNode::new(
+            "n0",
+            clock.clone(),
+            CostModel::default(),
+        )])
+        .unwrap(),
+    );
+    let reg = Arc::new(GcRegistry::new(Arc::clone(&nodes)));
+    for i in 0..6 {
+        let f = nodes.create_file(&format!("f{i}")).unwrap();
+        f.write_at(&[3u8; 2 << 10], 0).unwrap();
+    }
+    reg.sync_chain("c", (0..6).map(|i| format!("f{i}")).collect());
+    reg.drop_chain("c");
+    assert_eq!(reg.condemned_count(), 6);
+
+    let mut d = sqemu::gc::scratch_driver(clock.clone(), CostModel::default()).unwrap();
+    let shared = Arc::new(JobShared::new("gc-x", JobKind::Gc, 0));
+    let fence = Arc::clone(d.fence());
+    let job = Box::new(GcJob::new(Arc::clone(&reg)));
+    // 2 files per increment: one step deletes f0, f1 then we cancel
+    let mut r = JobRunner::new(job, Arc::clone(&shared), fence, 2, 1 << 20, clock.now());
+    assert_eq!(r.step(&mut d, clock.now()), Step::Ran);
+    shared.cancel();
+    assert_eq!(r.step(&mut d, clock.now()), Step::Finished);
+    assert_eq!(shared.status().state, JobState::Cancelled);
+
+    // invariant: every file is either fully deleted (and no longer
+    // condemned) or fully present (and still condemned) — no half states
+    let mut present = 0;
+    for i in 0..6 {
+        let name = format!("f{i}");
+        let exists = nodes.open_file(&name).is_ok();
+        assert_eq!(
+            exists,
+            reg.is_condemned(&name),
+            "file '{name}' in a half-collected state"
+        );
+        if exists {
+            present += 1;
+        }
+    }
+    assert_eq!(present, 4, "exactly one increment of deletions happened");
+
+    // a later sweep finishes the job from the consistent set
+    let shared2 = Arc::new(JobShared::new("gc-y", JobKind::Gc, 0));
+    let fence2 = Arc::clone(d.fence());
+    let job2 = Box::new(GcJob::new(Arc::clone(&reg)));
+    let mut r2 = JobRunner::new(job2, Arc::clone(&shared2), fence2, 16, 1 << 20, clock.now());
+    loop {
+        match r2.step(&mut d, clock.now()) {
+            Step::Finished => break,
+            Step::Starved { ready_at } => {
+                let now = clock.now();
+                clock.advance(ready_at - now);
+            }
+            _ => {}
+        }
+    }
+    assert_eq!(shared2.status().state, JobState::Completed);
+    assert_eq!(reg.condemned_count(), 0);
+    for i in 0..6 {
+        assert!(nodes.open_file(&format!("f{i}")).is_err());
+    }
+}
+
+#[test]
+fn leak_audit_catches_orphaned_file() {
+    let coord = Coordinator::with_fresh_nodes(1).unwrap();
+    launch_generated(&coord, "vm-a", 5);
+    let audit = coord.gc_audit();
+    assert!(audit.is_clean(), "fresh fleet leaks: {:?}", audit.leaked);
+    assert_eq!(audit.reachable, 5);
+
+    // a file no chain references and GC was never told about
+    let orphan = coord.nodes.create_file("orphaned-img").unwrap();
+    orphan.write_at(&[7u8; 32 << 10], 0).unwrap();
+    let audit = coord.gc_audit();
+    assert!(!audit.is_clean());
+    assert_eq!(audit.leaked.len(), 1);
+    assert_eq!(audit.leaked[0].0, "orphaned-img");
+    assert_eq!(audit.leaked_bytes(), 32 << 10);
+
+    // condemned files are *not* leaks: they are scheduled work
+    coord.stream_vm("vm-a", 0, 4).unwrap();
+    let audit = coord.gc_audit();
+    assert_eq!(audit.condemned.len(), 4);
+    assert_eq!(audit.leaked.len(), 1, "orphan still the only leak");
+
+    // GC sweeps the condemned set but never touches unknown files —
+    // deleting a leak is an operator decision (the audit's output)
+    coord.run_gc(0).unwrap();
+    let audit = coord.gc_audit();
+    assert!(audit.condemned.is_empty());
+    assert_eq!(audit.leaked.len(), 1);
+    coord.nodes.delete_file("orphaned-img").unwrap();
+    assert!(coord.gc_audit().is_clean());
+    coord.shutdown();
+}
+
+#[test]
+fn decommission_condemns_unshared_files_and_gc_empties_the_node() {
+    let coord = Coordinator::with_fresh_nodes(1).unwrap();
+    launch_generated(&coord, "vm-a", 8);
+    let node = Arc::clone(&coord.nodes.nodes()[0]);
+    assert!(node.used_bytes() > 0);
+    coord.decommission_vm("vm-a").unwrap();
+    assert_eq!(coord.gc_registry().condemned_count(), 8);
+    let gc = coord.run_gc(0).unwrap();
+    assert_eq!(gc.files_deleted, 8);
+    assert_eq!(node.used_bytes(), 0, "decommissioned chain fully reclaimed");
+}

@@ -90,6 +90,34 @@ fn main() {
             .print();
     }
 
+    // vectored warm path: one 1 MiB readv (16 clusters, one slice-group
+    // probe, coalesced device run) vs 16 per-cluster reads
+    for (kind, len) in [(DriverKind::Scalable, 64usize), (DriverKind::Vanilla, 64)] {
+        let prefix = format!("vec-{}-{}", kind.name(), len);
+        let mut d = driver(&node, &clock, kind, len, &prefix);
+        let mut big = vec![0u8; 1 << 20];
+        // pre-allocate the L2 table, then 1 MiB of contiguous clusters in
+        // the active volume so runs actually merge
+        d.write(17 << 16, &[1u8; 64]).unwrap();
+        d.write(0, &big).unwrap();
+        timer
+            .bench(&format!("warm 1M readv {} chain={}", kind.name(), len), || {
+                let mut iovs: Vec<(u64, &mut [u8])> = vec![(0, big.as_mut_slice())];
+                d.readv(black_box(&mut iovs)).unwrap();
+            })
+            .print();
+        timer
+            .bench(
+                &format!("warm 1M per-cluster {} chain={}", kind.name(), len),
+                || {
+                    for c in 0..16u64 {
+                        d.read(black_box(c << 16), &mut big[..64 << 10]).unwrap();
+                    }
+                },
+            )
+            .print();
+    }
+
     // cold-miss path (fresh driver each iteration region; approximate by
     // cycling a huge region so slices keep missing)
     {

@@ -13,6 +13,7 @@
 //!   1000).
 
 pub mod figures;
+pub mod smoke;
 pub mod table;
 pub mod timer;
 

@@ -1,0 +1,252 @@
+//! `sqemu bench --json`: a reduced-scale smoke run of the hot-path and
+//! vectored-throughput benches that emits a machine-readable
+//! `BENCH_hotpath.json` (wall-clock ns/op plus simulated MB/s and
+//! device-I/O counts per path). CI uploads the file as an artifact so
+//! the perf trajectory is tracked per commit instead of only existing on
+//! developer machines.
+
+use crate::bench::timer::Timer;
+use crate::cache::CacheConfig;
+use crate::chaingen::{generate, ChainSpec};
+use crate::metrics::clock::{CostModel, VirtClock};
+use crate::metrics::memory::MemoryAccountant;
+use crate::qcow::image::DataMode;
+use crate::storage::node::StorageNode;
+use crate::vdisk::scalable::ScalableDriver;
+use crate::vdisk::Driver;
+use anyhow::{Context, Result};
+use std::fmt::Write as _;
+use std::sync::Arc;
+
+const CS: u64 = 64 << 10;
+
+/// Total device I/O operations the chain's files have served.
+pub fn device_ios(d: &dyn Driver) -> u64 {
+    d.chain()
+        .images()
+        .iter()
+        .map(|i| i.backend().device_ios())
+        .sum()
+}
+
+/// Total cache probes (per-file lookups) the driver has performed.
+pub fn probes(d: &dyn Driver) -> u64 {
+    d.counters().per_file_lookups.iter().sum()
+}
+
+/// Result of one [`seq4k_compare`] run.
+pub struct Seq4kCompare {
+    pub scalar_ns: u64,
+    pub vectored_ns: u64,
+    pub scalar_device_ios: u64,
+    pub vectored_device_ios: u64,
+    pub vectored_probes: u64,
+    pub merged_ios: u64,
+}
+
+/// THE sequential-4K measurement: warm the caches over `region` bytes,
+/// then read the region once with per-request 4 KiB reads and once with
+/// vectored 1 MiB submissions of 4 KiB iovs (`region` must be a multiple
+/// of 1 MiB). Shared by `fig22_vectored_throughput`, the CI smoke run
+/// and the acceptance tests so the methodology cannot drift.
+pub fn seq4k_compare(
+    d: &mut dyn Driver,
+    clock: &VirtClock,
+    region: u64,
+) -> Result<Seq4kCompare> {
+    let cs = d.chain().active().geom().cluster_size();
+    let mut buf = vec![0u8; 4096];
+    let mut vc = 0u64;
+    while vc * cs < region {
+        d.read(vc * cs, &mut buf[..1])?;
+        vc += 1;
+    }
+    let ios0 = device_ios(d);
+    let t0 = clock.now();
+    let mut off = 0u64;
+    while off < region {
+        d.read(off, &mut buf)?;
+        off += 4096;
+    }
+    let scalar_ns = clock.now() - t0;
+    let scalar_device_ios = device_ios(d) - ios0;
+
+    let mut big = vec![0u8; 1 << 20];
+    let ios1 = device_ios(d);
+    let probes1 = probes(d);
+    let merged1 = d.vec_io().merged_ios;
+    let t1 = clock.now();
+    let mut base = 0u64;
+    while base < region {
+        let mut iovs: Vec<(u64, &mut [u8])> = big
+            .chunks_mut(4096)
+            .enumerate()
+            .map(|(i, c)| (base + i as u64 * 4096, c))
+            .collect();
+        d.readv(&mut iovs)?;
+        base += 1 << 20;
+    }
+    let vectored_ns = clock.now() - t1;
+    Ok(Seq4kCompare {
+        scalar_ns,
+        vectored_ns,
+        scalar_device_ios,
+        vectored_device_ios: device_ios(d) - ios1,
+        vectored_probes: probes(d) - probes1,
+        merged_ios: d.vec_io().merged_ios - merged1,
+    })
+}
+
+fn sq_driver(
+    node: &StorageNode,
+    clock: &Arc<VirtClock>,
+    len: usize,
+    prefix: &str,
+) -> Result<ScalableDriver> {
+    let chain = generate(
+        node,
+        &ChainSpec {
+            disk_size: 64 << 20,
+            chain_len: len,
+            populated: 1.0,
+            stamped: true,
+            data_mode: DataMode::Synthetic,
+            prefix: prefix.into(),
+            ..Default::default()
+        },
+    )?;
+    Ok(ScalableDriver::new(
+        chain,
+        CacheConfig::new(512, 8 << 20),
+        clock.clone(),
+        CostModel::default(),
+        MemoryAccountant::new(),
+    ))
+}
+
+/// Virtual-time throughput in MiB/s.
+pub fn mbps(bytes: u64, ns: u64) -> f64 {
+    if ns == 0 {
+        return 0.0;
+    }
+    bytes as f64 / (1 << 20) as f64 / (ns as f64 / 1e9)
+}
+
+/// One virtual-time comparison row: sequential 4 KiB reads over `region`
+/// bytes, per-request vs vectored in 1 MiB submissions.
+struct VecRow {
+    chain: usize,
+    scalar_mbps: f64,
+    vectored_mbps: f64,
+    scalar_device_ios: u64,
+    vectored_device_ios: u64,
+    merged_ios: u64,
+}
+
+fn vectored_row(len: usize) -> Result<VecRow> {
+    let clock = VirtClock::new();
+    let node = StorageNode::new("smoke", clock.clone(), CostModel::default());
+    let mut d = sq_driver(&node, &clock, len, &format!("smoke-{len}"))?;
+    let region: u64 = 4 << 20;
+    let cmp = seq4k_compare(&mut d, &clock, region)?;
+    Ok(VecRow {
+        chain: len,
+        scalar_mbps: mbps(region, cmp.scalar_ns),
+        vectored_mbps: mbps(region, cmp.vectored_ns),
+        scalar_device_ios: cmp.scalar_device_ios,
+        vectored_device_ios: cmp.vectored_device_ios,
+        merged_ios: cmp.merged_ios,
+    })
+}
+
+/// Run the smoke suite and write `json_path`.
+pub fn run_smoke(json_path: &str) -> Result<()> {
+    let timer = Timer { warmup_iters: 10, samples: 5, iters_per_sample: 20 };
+    let clock = VirtClock::new();
+    let node = StorageNode::new("smoke-hot", clock.clone(), CostModel::default());
+    let mut hot = Vec::new();
+    {
+        let mut d = sq_driver(&node, &clock, 64, "hot")?;
+        let mut buf = vec![0u8; 4096];
+        for vc in 0..64u64 {
+            d.read(vc * CS, &mut buf[..1])?;
+        }
+        let mut vc = 0u64;
+        hot.push(timer.bench("warm 4K read sqemu chain=64", || {
+            vc = (vc + 1) % 64;
+            d.read(vc * CS, &mut buf).unwrap();
+        }));
+        let mut big = vec![0u8; 1 << 20];
+        // pre-allocate the L2 table, then 1 MiB of contiguous clusters in
+        // the active volume so the vectored path has a run to merge
+        d.write(17 * CS, &[1u8; 64])?;
+        d.write(0, &big)?;
+        hot.push(timer.bench("warm 1M readv sqemu chain=64", || {
+            let mut iovs: Vec<(u64, &mut [u8])> = vec![(0, big.as_mut_slice())];
+            d.readv(&mut iovs).unwrap();
+        }));
+        hot.push(timer.bench("warm 1M per-cluster reads sqemu chain=64", || {
+            for c in 0..16u64 {
+                d.read(c * CS, &mut big[..CS as usize]).unwrap();
+            }
+        }));
+    }
+
+    println!("=== bench smoke — wall clock ===");
+    for r in &hot {
+        r.print();
+    }
+    let mut rows = Vec::new();
+    for len in [1usize, 100, 500] {
+        rows.push(vectored_row(len)?);
+    }
+    println!("\n=== bench smoke — simulated sequential 4K reads ===");
+    for r in &rows {
+        println!(
+            "chain={:<4} scalar {:>8.1} MB/s ({} IOs) | vectored {:>8.1} MB/s \
+             ({} IOs, {} merged)",
+            r.chain,
+            r.scalar_mbps,
+            r.scalar_device_ios,
+            r.vectored_mbps,
+            r.vectored_device_ios,
+            r.merged_ios
+        );
+    }
+
+    let mut json = String::new();
+    json.push_str("{\n  \"schema\": \"sqemu-bench-smoke/1\",\n  \"hotpath\": [\n");
+    for (i, r) in hot.iter().enumerate() {
+        let _ = writeln!(
+            json,
+            "    {{\"name\": \"{}\", \"mean_ns\": {:.1}, \"p50_ns\": {:.1}, \
+             \"p99_ns\": {:.1}}}{}",
+            r.name,
+            r.mean_ns,
+            r.p50_ns,
+            r.p99_ns,
+            if i + 1 < hot.len() { "," } else { "" }
+        );
+    }
+    json.push_str("  ],\n  \"vectored_seq4k\": [\n");
+    for (i, r) in rows.iter().enumerate() {
+        let _ = writeln!(
+            json,
+            "    {{\"chain\": {}, \"scalar_mbps\": {:.1}, \"vectored_mbps\": {:.1}, \
+             \"scalar_device_ios\": {}, \"vectored_device_ios\": {}, \
+             \"merged_ios\": {}}}{}",
+            r.chain,
+            r.scalar_mbps,
+            r.vectored_mbps,
+            r.scalar_device_ios,
+            r.vectored_device_ios,
+            r.merged_ios,
+            if i + 1 < rows.len() { "," } else { "" }
+        );
+    }
+    json.push_str("  ]\n}\n");
+    std::fs::write(json_path, &json)
+        .with_context(|| format!("write bench json to {json_path}"))?;
+    println!("\nwrote {json_path}");
+    Ok(())
+}

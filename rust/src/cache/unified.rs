@@ -33,20 +33,13 @@ impl UnifiedCache {
         self.active_index
     }
 
-    /// Bring a slice read from file `from_index` into the cache,
-    /// normalizing entries to the chain frame. Returns an evicted dirty
-    /// slice (already denormalized for writeback to the active volume).
-    pub fn insert_from(
-        &mut self,
-        key: u64,
-        raw_entries: &[u64],
-        from_index: u16,
-    ) -> Option<(u64, Vec<u64>)> {
-        let entries: Vec<u64> = raw_entries
-            .iter()
-            .map(|&raw| normalize(raw, from_index))
-            .collect();
-        let evicted = self.cache.insert(key, entries);
+    /// Bring a slice of chain-frame entries into the cache — the drivers'
+    /// scratch fetch path normalizes in place (via [`normalize`]) before
+    /// insertion, so a miss costs one cache-owned allocation, not three.
+    /// Returns an evicted slice, already denormalized for writeback to
+    /// the active volume.
+    pub fn insert_normalized(&mut self, key: u64, entries: &[u64]) -> Option<(u64, Vec<u64>)> {
+        let evicted = self.cache.insert(key, entries.to_vec());
         evicted.map(|(k, s)| (k, self.denormalize_slice(&s)))
     }
 
@@ -61,16 +54,28 @@ impl UnifiedCache {
         Some(e.bfi().map(|b| (b, e.host_offset())))
     }
 
-    /// The §5.3 cache correction: merge a slice fetched from backing file
-    /// `from_index` into the resident slice — an entry is replaced iff its
-    /// stamp is `<=` the incoming one. Marks the slice dirty so it is
-    /// written back on eviction ("then it sets dirty to 1 in s_v", §5.3).
-    /// Returns the number of corrected entries.
-    pub fn correct(&mut self, key: u64, backing_raw: &[u64], from_index: u16) -> u64 {
-        let Some(slice) = self.cache.get(key) else { return 0 };
+    /// One probe for a whole request batch: the resident slice's
+    /// chain-frame entries, or `None` on a cache miss. The batch resolver
+    /// decodes every cluster of a slice group from this single probe.
+    pub fn lookup_slice(&mut self, key: u64) -> Option<&[u64]> {
+        self.cache.get(key).map(|s| s.entries.as_slice())
+    }
+
+    /// The §5.3 cache correction with chain-frame entries: merge a
+    /// (normalized) slice fetched from a backing file into the resident
+    /// slice — an entry is replaced iff its stamp is `<=` the incoming
+    /// one. Marks the slice dirty so it is written back on eviction
+    /// ("then it sets dirty to 1 in s_v", §5.3). Returns
+    /// `(corrected_count, merged_slice)` so the caller resolves from the
+    /// merge result without a second cache probe.
+    pub fn correct_normalized(
+        &mut self,
+        key: u64,
+        normalized: &[u64],
+    ) -> Option<(u64, &[u64])> {
+        let slice = self.cache.get(key)?;
         let mut corrected = 0;
-        for (i, &raw_b) in backing_raw.iter().enumerate() {
-            let b = normalize(raw_b, from_index);
+        for (i, &b) in normalized.iter().enumerate() {
             let bfi_v = L2Entry(slice.entries[i]).bfi();
             let bfi_b = L2Entry(b).bfi();
             // None (unallocated) orders below any stamp
@@ -82,7 +87,7 @@ impl UnifiedCache {
         if corrected > 0 {
             slice.dirty = true;
         }
-        corrected
+        Some((corrected, slice.entries.as_slice()))
     }
 
     /// Record a write: the active volume now owns `vcluster` at `off`.
@@ -159,6 +164,18 @@ mod tests {
         UnifiedCache::new(CacheConfig::new(4, 1 << 20), active, &acct)
     }
 
+    /// Test shorthand for the drivers' fetch path: normalize a raw
+    /// on-disk slice read from `from`, then insert/correct it.
+    fn insert_raw(c: &mut UnifiedCache, key: u64, raw: &[u64], from: u16) {
+        let n: Vec<u64> = raw.iter().map(|&r| normalize(r, from)).collect();
+        c.insert_normalized(key, &n);
+    }
+
+    fn correct_raw(c: &mut UnifiedCache, key: u64, raw: &[u64], from: u16) -> u64 {
+        let n: Vec<u64> = raw.iter().map(|&r| normalize(r, from)).collect();
+        c.correct_normalized(key, &n).map(|(cnt, _)| cnt).unwrap_or(0)
+    }
+
     #[test]
     fn lookup_states() {
         let mut c = uc(2);
@@ -171,7 +188,7 @@ mod tests {
             0,
             0,
         ];
-        c.insert_from(0, &raw, 2);
+        insert_raw(&mut c, 0, &raw, 2);
         assert_eq!(c.lookup(0), Some(Some((0, 5 << 16))));
         assert_eq!(c.lookup(1), Some(Some((2, 7 << 16))));
         assert_eq!(c.lookup(2), Some(None));
@@ -209,7 +226,7 @@ mod tests {
             L2Entry::remote(4 << 16, 4).raw(),
             0,
         ];
-        c.insert_from(0, &resident, 5);
+        insert_raw(&mut c, 0, &resident, 5);
         // slice from backing file 3: owns entries 0, 1 and 2 locally
         let backing = vec![
             L2Entry::local(9 << 16, None).raw(),
@@ -217,7 +234,7 @@ mod tests {
             L2Entry::local(7 << 16, None).raw(),
             0,
         ];
-        let corrected = c.correct(0, &backing, 3);
+        let corrected = correct_raw(&mut c, 0, &backing, 3);
         // entry 0: 1 <= 3 -> corrected; entry 1: None <= 3 -> corrected;
         // entry 2: 4 > 3 -> kept
         assert_eq!(corrected, 2);
@@ -229,9 +246,9 @@ mod tests {
     #[test]
     fn correction_marks_dirty_and_drains_denormalized() {
         let mut c = uc(1);
-        c.insert_from(0, &[0, 0, 0, 0], 1);
+        insert_raw(&mut c, 0, &[0, 0, 0, 0], 1);
         let backing = vec![L2Entry::local(2 << 16, None).raw(), 0, 0, 0];
-        assert_eq!(c.correct(0, &backing, 0), 1);
+        assert_eq!(correct_raw(&mut c, 0, &backing, 0), 1);
         let dirty = c.drain();
         assert_eq!(dirty.len(), 1);
         let e = L2Entry(dirty[0].1[0]);
@@ -240,9 +257,39 @@ mod tests {
     }
 
     #[test]
+    fn slice_lookup_and_normalized_paths_match_raw_ones() {
+        let mut c = uc(2);
+        assert!(c.lookup_slice(0).is_none());
+        let raw = vec![
+            L2Entry::remote(5 << 16, 0).raw(),
+            L2Entry::local(7 << 16, Some(2)).raw(),
+            0,
+            0,
+        ];
+        // the scratch path: normalize in place, insert without re-normalizing
+        let normalized: Vec<u64> = raw.iter().map(|&r| normalize(r, 2)).collect();
+        c.insert_normalized(0, &normalized);
+        let slice = c.lookup_slice(0).unwrap().to_vec();
+        assert_eq!(L2Entry(slice[0]).bfi(), Some(0));
+        assert_eq!(L2Entry(slice[1]).bfi(), Some(2));
+        assert_eq!(c.lookup(0), Some(Some((0, 5 << 16))));
+        assert_eq!(c.lookup(2), Some(None));
+        // correction through the normalized path returns the merged slice
+        let backing: Vec<u64> =
+            [L2Entry::local(9 << 16, None).raw(), 0, 0, 0]
+                .iter()
+                .map(|&r| normalize(r, 1))
+                .collect();
+        let (n, merged) = c.correct_normalized(0, &backing).unwrap();
+        assert_eq!(n, 1);
+        assert_eq!(L2Entry(merged[0]).bfi(), Some(1));
+        assert_eq!(c.lookup(0), Some(Some((1, 9 << 16))));
+    }
+
+    #[test]
     fn record_write_claims_for_active() {
         let mut c = uc(3);
-        c.insert_from(0, &[L2Entry::remote(1 << 16, 0).raw(), 0, 0, 0], 3);
+        insert_raw(&mut c, 0, &[L2Entry::remote(1 << 16, 0).raw(), 0, 0, 0], 3);
         c.record_write(0, 9 << 16);
         assert_eq!(c.lookup(0), Some(Some((3, 9 << 16))));
         let dirty = c.drain();

@@ -460,9 +460,15 @@ pub fn serve(args: &Args) -> Result<()> {
         handles.push(std::thread::spawn(move || -> Result<()> {
             let mut rng = crate::util::rng::Rng::new(fxhash(name.as_bytes()));
             for _ in 0..requests {
-                let voff = rng.below((1 << 30) - 4096);
+                let voff = rng.below((1 << 30) - (64 << 10));
                 if rng.chance(0.2) {
                     client.write(voff, vec![1u8; 512])?;
+                } else if rng.chance(0.125) {
+                    // a vectored burst: 8 sequential 4 KiB reads in one
+                    // round-trip (they coalesce into merged device reads)
+                    let reqs: Vec<(u64, usize)> =
+                        (0..8).map(|i| (voff + i * 4096, 4096)).collect();
+                    client.readv(&reqs)?;
                 } else {
                     client.read(voff, 4096)?;
                 }
@@ -478,10 +484,14 @@ pub fn serve(args: &Args) -> Result<()> {
     for name in coord.vm_names() {
         let s = coord.vm_stats(&name)?;
         println!(
-            "  {name}: {} reads / {} writes, {} read",
+            "  {name}: {} reads / {} writes, {} read; {} batched ops, \
+             {} merged device reads ({} coalesced)",
             s.reads,
             s.writes,
-            human_bytes(s.bytes_read)
+            human_bytes(s.bytes_read),
+            s.batched_ops,
+            s.merged_ios,
+            human_bytes(s.coalesced_bytes)
         );
     }
     let total_ops = vms * requests;
@@ -494,6 +504,17 @@ pub fn serve(args: &Args) -> Result<()> {
     println!("memory accounted: {}", human_bytes(coord.acct.total()));
     coord.shutdown();
     Ok(())
+}
+
+/// `sqemu bench [--json [path]]`: the CI smoke run of the hot-path and
+/// vectored benches; always writes the JSON artifact (default
+/// `BENCH_hotpath.json`) so the perf trajectory is tracked.
+pub fn bench(args: &Args) -> Result<()> {
+    let path = match args.get("json") {
+        None | Some("true") => "BENCH_hotpath.json",
+        Some(p) => p,
+    };
+    crate::bench::smoke::run_smoke(path)
 }
 
 pub fn selftest(_args: &Args) -> Result<()> {

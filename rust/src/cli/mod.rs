@@ -17,6 +17,7 @@
 //! sqemu check   --dir D --active N
 //! sqemu characterize [--chains N]             # §3 figures
 //! sqemu serve   [--vms N] [--chain L]         # coordinator demo
+//! sqemu bench   [--json [path]]               # CI perf smoke artifact
 //! sqemu selftest                              # artifacts + runtime
 //! ```
 
@@ -57,6 +58,7 @@ pub fn run(argv: Vec<String>) -> Result<()> {
         "check" => commands::check(&args),
         "characterize" => commands::characterize(&args),
         "serve" => commands::serve(&args),
+        "bench" => commands::bench(&args),
         "selftest" => commands::selftest(&args),
         "help" | "--help" | "-h" => {
             print_usage();
@@ -87,6 +89,7 @@ fn print_usage() {
          study & demo:\n\
          \x20 characterize [--chains N] [--days N]\n\
          \x20 serve [--vms N] [--chain L] [--requests R] [--vanilla]\n\
+         \x20 bench [--json [path]]   # CI smoke run -> BENCH_hotpath.json\n\
          \x20 selftest\n\
          \n\
          figures: cargo bench --bench fig12_memory (etc.); --full for paper scale"

@@ -40,4 +40,6 @@ pub mod streaming;
 
 pub use batcher::BulkTranslator;
 pub use placement::NodeSet;
-pub use server::{Coordinator, CoordinatorConfig, JobSpec, VmClient, VmConfig};
+pub use server::{
+    BatchOp, BatchReply, Coordinator, CoordinatorConfig, JobSpec, VmClient, VmConfig,
+};

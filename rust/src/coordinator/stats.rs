@@ -26,6 +26,14 @@ pub struct VmStats {
     pub reclaimed_bytes: AtomicU64,
     /// GC sweeps that reclaimed capacity on behalf of this VM.
     pub gc_runs: AtomicU64,
+    /// Guest operations served through the vectored path (explicit
+    /// `Request::Batch` submissions plus worker-drained bursts).
+    pub batched_ops: AtomicU64,
+    /// Mirror of the driver's coalescer counters (device reads that
+    /// merged >= 2 cluster segments, and their bytes), refreshed after
+    /// every batched request.
+    pub merged_ios: AtomicU64,
+    pub coalesced_bytes: AtomicU64,
     /// Guest-visible request latency (enqueue → reply) in virtual ns —
     /// the number a live job must keep flat while it drains the chain.
     pub req_latency: Mutex<Histogram>,
@@ -54,6 +62,9 @@ impl VmStats {
             job_copied_clusters: self.job_copied_clusters.load(Ordering::Relaxed),
             reclaimed_bytes: self.reclaimed_bytes.load(Ordering::Relaxed),
             gc_runs: self.gc_runs.load(Ordering::Relaxed),
+            batched_ops: self.batched_ops.load(Ordering::Relaxed),
+            merged_ios: self.merged_ios.load(Ordering::Relaxed),
+            coalesced_bytes: self.coalesced_bytes.load(Ordering::Relaxed),
             req_count: lat.count(),
             req_mean_ns: lat.mean() as u64,
             req_p50_ns: lat.quantile(0.50),
@@ -80,6 +91,9 @@ pub struct VmStatsSnapshot {
     pub job_copied_clusters: u64,
     pub reclaimed_bytes: u64,
     pub gc_runs: u64,
+    pub batched_ops: u64,
+    pub merged_ios: u64,
+    pub coalesced_bytes: u64,
     pub req_count: u64,
     pub req_mean_ns: u64,
     pub req_p50_ns: u64,

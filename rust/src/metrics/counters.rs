@@ -36,6 +36,15 @@ impl CacheCounters {
         self.hit_unallocated.fetch_add(1, Ordering::Relaxed);
     }
 
+    /// Bulk variants for the batched resolvers (one call per slice group).
+    pub fn add_hits(&self, n: u64) {
+        self.hits.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn add_unallocated(&self, n: u64) {
+        self.hit_unallocated.fetch_add(n, Ordering::Relaxed);
+    }
+
     /// Record one cache lookup against backing file `bfi`.
     pub fn lookup_on(&self, bfi: usize) {
         let mut v = self.per_file_lookups.lock().unwrap();

@@ -195,13 +195,33 @@ impl Image {
     /// `slice_start` of the table at `l2_off`). One device I/O — this is
     /// the cache-miss fetch ("Qemu brings into the cache a slice", §2).
     pub fn read_l2_slice(&self, l2_off: u64, slice_start: u64, len: u64) -> Result<Vec<u64>> {
-        let mut raw = vec![0u8; (len * ENTRY_SIZE) as usize];
+        let (mut raw, mut out) = (Vec::new(), Vec::new());
+        self.read_l2_slice_into(l2_off, slice_start, len, &mut raw, &mut out)?;
+        Ok(out)
+    }
+
+    /// Allocation-free variant of [`Image::read_l2_slice`]: decodes into
+    /// caller-owned scratch buffers (§Perf: the drivers' miss path reuses
+    /// one scratch pair across all fetches instead of allocating twice
+    /// per miss).
+    pub fn read_l2_slice_into(
+        &self,
+        l2_off: u64,
+        slice_start: u64,
+        len: u64,
+        raw: &mut Vec<u8>,
+        out: &mut Vec<u64>,
+    ) -> Result<()> {
+        raw.clear();
+        raw.resize((len * ENTRY_SIZE) as usize, 0);
         self.backend
-            .read_at(&mut raw, l2_off + slice_start * ENTRY_SIZE)?;
-        Ok(raw
-            .chunks_exact(8)
-            .map(|c| u64::from_le_bytes(c.try_into().unwrap()))
-            .collect())
+            .read_at(raw, l2_off + slice_start * ENTRY_SIZE)?;
+        out.clear();
+        out.extend(
+            raw.chunks_exact(8)
+                .map(|c| u64::from_le_bytes(c.try_into().unwrap())),
+        );
+        Ok(())
     }
 
     /// Write back a dirty slice (cache eviction / VM shutdown, §2).
@@ -269,6 +289,38 @@ impl Image {
             DataMode::Synthetic => {
                 self.backend.charge(host_off + within, buf.len() as u64);
                 synth_fill(self.seed, host_off + within, buf);
+                Ok(())
+            }
+        }
+    }
+
+    /// Read one physically contiguous run of guest data starting at
+    /// absolute offset `run_off`, scattered into `bufs` in order: the
+    /// vectored fast path. The run was coalesced by the driver across
+    /// cluster boundaries, so it is billed as ONE device I/O (one seek
+    /// plus bandwidth for the total bytes) regardless of how many
+    /// clusters or destination buffers it spans.
+    pub fn read_run_vectored(&self, run_off: u64, bufs: &mut [&mut [u8]]) -> Result<()> {
+        match self.data_mode {
+            DataMode::Real => {
+                let mut iovs: Vec<(u64, &mut [u8])> = Vec::with_capacity(bufs.len());
+                let mut off = run_off;
+                for b in bufs.iter_mut() {
+                    let dst: &mut [u8] = b;
+                    let len = dst.len() as u64;
+                    iovs.push((off, dst));
+                    off += len;
+                }
+                self.backend.read_vectored(&mut iovs)
+            }
+            DataMode::Synthetic => {
+                let total: u64 = bufs.iter().map(|b| b.len() as u64).sum();
+                self.backend.charge(run_off, total);
+                let mut off = run_off;
+                for b in bufs.iter_mut() {
+                    synth_fill(self.seed, off, b);
+                    off += b.len() as u64;
+                }
                 Ok(())
             }
         }

@@ -24,6 +24,26 @@ pub trait Backend: Send + Sync {
     /// Grow (never shrinks) to at least `len` bytes.
     fn truncate_to(&self, len: u64) -> Result<()>;
 
+    /// Scatter-gather read: fill every `(off, buf)` pair. The default
+    /// loops `read_at` (one device I/O each); cost-charging backends
+    /// override it to bill a run of physically contiguous pairs as ONE
+    /// seek plus bandwidth for the total bytes (the vectored fast path).
+    fn read_vectored(&self, iovs: &mut [(u64, &mut [u8])]) -> Result<()> {
+        for iov in iovs.iter_mut() {
+            self.read_at(iov.1, iov.0)?;
+        }
+        Ok(())
+    }
+
+    /// Gather write of every `(off, data)` pair; same contiguous-run
+    /// billing contract as [`Backend::read_vectored`].
+    fn write_vectored(&self, iovs: &[(u64, &[u8])]) -> Result<()> {
+        for (off, data) in iovs {
+            self.write_at(data, *off)?;
+        }
+        Ok(())
+    }
+
     /// Charge the cost of touching `len` bytes at `off` *without* storing
     /// them — used by synthetic-data mode where benches skip materializing
     /// data clusters but must still pay their I/O time. Default: no cost
@@ -33,6 +53,14 @@ pub trait Backend: Send + Sync {
     /// Physically stored bytes (for sparse accounting / Fig 19a).
     fn stored_bytes(&self) -> u64 {
         self.len()
+    }
+
+    /// Device I/O operations issued through this file so far, if the
+    /// backend counts them (the timed backend does; a coalesced run
+    /// counts once). Clock-less backends report 0 — counter-based tests
+    /// and benches use this to assert how many seeks a path paid.
+    fn device_ios(&self) -> u64 {
+        0
     }
 
     /// The backend's notion of current time in ns, if it has one — the

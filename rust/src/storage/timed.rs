@@ -42,6 +42,26 @@ impl<B: Backend> Timed<B> {
     }
 }
 
+impl<B: Backend> Timed<B> {
+    /// Bill a sorted iov list: each maximal physically contiguous run is
+    /// ONE device I/O (`T_L + T_D` once) plus bandwidth for the run's
+    /// total bytes — the Eq. 1 accounting of a merged device command.
+    fn pay_runs(&self, spans: &[(u64, u64)]) {
+        let mut i = 0;
+        while i < spans.len() {
+            let (start, len) = spans[i];
+            let mut end = start + len;
+            let mut j = i + 1;
+            while j < spans.len() && spans[j].0 == end {
+                end += spans[j].1;
+                j += 1;
+            }
+            self.pay(end - start);
+            i = j;
+        }
+    }
+}
+
 impl<B: Backend> Backend for Timed<B> {
     fn read_at(&self, buf: &mut [u8], off: u64) -> Result<()> {
         self.pay(buf.len() as u64);
@@ -51,6 +71,26 @@ impl<B: Backend> Backend for Timed<B> {
     fn write_at(&self, data: &[u8], off: u64) -> Result<()> {
         self.pay(data.len() as u64);
         self.inner.write_at(data, off)
+    }
+
+    fn read_vectored(&self, iovs: &mut [(u64, &mut [u8])]) -> Result<()> {
+        let spans: Vec<(u64, u64)> =
+            iovs.iter().map(|(off, buf)| (*off, buf.len() as u64)).collect();
+        self.pay_runs(&spans);
+        for iov in iovs.iter_mut() {
+            self.inner.read_at(iov.1, iov.0)?;
+        }
+        Ok(())
+    }
+
+    fn write_vectored(&self, iovs: &[(u64, &[u8])]) -> Result<()> {
+        let spans: Vec<(u64, u64)> =
+            iovs.iter().map(|(off, data)| (*off, data.len() as u64)).collect();
+        self.pay_runs(&spans);
+        for (off, data) in iovs {
+            self.inner.write_at(data, *off)?;
+        }
+        Ok(())
     }
 
     fn len(&self) -> u64 {
@@ -74,6 +114,10 @@ impl<B: Backend> Backend for Timed<B> {
     fn now_ns(&self) -> u64 {
         self.clock.now()
     }
+
+    fn device_ios(&self) -> u64 {
+        self.io_count()
+    }
 }
 
 #[cfg(test)]
@@ -95,6 +139,58 @@ mod tests {
         assert_eq!(clock.now() - after_write, cost.io_ns(64 << 10));
         assert_eq!(b.io_count(), 2);
         assert_eq!(b.byte_count(), 4096 + (64 << 10));
+    }
+
+    #[test]
+    fn vectored_contiguous_run_bills_one_seek() {
+        let clock = VirtClock::new();
+        let cost = CostModel::default();
+        let b = Timed::new(MemBackend::new(), clock.clone(), cost);
+        b.write_at(&[7u8; 128 << 10], 0).unwrap();
+        let ios0 = b.io_count();
+        let t0 = clock.now();
+        let mut b1 = [0u8; 64 << 10];
+        let mut b2 = [0u8; 64 << 10];
+        let mut iovs: Vec<(u64, &mut [u8])> =
+            vec![(0, b1.as_mut_slice()), (64 << 10, b2.as_mut_slice())];
+        b.read_vectored(&mut iovs).unwrap();
+        // one seek + bandwidth for 128 KiB, not two seeks
+        assert_eq!(clock.now() - t0, cost.io_ns(128 << 10));
+        assert_eq!(b.io_count() - ios0, 1);
+        assert_eq!(b1, [7u8; 64 << 10]);
+        assert_eq!(b2, [7u8; 64 << 10]);
+    }
+
+    #[test]
+    fn vectored_write_run_bills_one_seek() {
+        let clock = VirtClock::new();
+        let cost = CostModel::default();
+        let b = Timed::new(MemBackend::new(), clock.clone(), cost);
+        let t0 = clock.now();
+        let d1 = [1u8; 4096];
+        let d2 = [2u8; 4096];
+        b.write_vectored(&[(0, &d1[..]), (4096, &d2[..])]).unwrap();
+        assert_eq!(clock.now() - t0, cost.io_ns(8192));
+        assert_eq!(b.device_ios(), 1);
+        let mut back = [0u8; 8192];
+        b.read_at(&mut back, 0).unwrap();
+        assert_eq!(&back[..4096], &d1);
+        assert_eq!(&back[4096..], &d2);
+    }
+
+    #[test]
+    fn vectored_discontiguous_pairs_bill_separately() {
+        let clock = VirtClock::new();
+        let cost = CostModel::default();
+        let b = Timed::new(MemBackend::new(), clock.clone(), cost);
+        let t0 = clock.now();
+        let mut b1 = [0u8; 4096];
+        let mut b2 = [0u8; 4096];
+        let mut iovs: Vec<(u64, &mut [u8])> =
+            vec![(0, b1.as_mut_slice()), (1 << 20, b2.as_mut_slice())];
+        b.read_vectored(&mut iovs).unwrap();
+        assert_eq!(clock.now() - t0, 2 * cost.io_ns(4096));
+        assert_eq!(b.device_ios(), 2);
     }
 
     #[test]

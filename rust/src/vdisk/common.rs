@@ -8,7 +8,7 @@ use crate::metrics::memory::{MemCategory, MemoryAccountant, Registration};
 use crate::qcow::entry::L2Entry;
 use crate::qcow::Chain;
 use anyhow::Result;
-use std::sync::{Arc, Mutex};
+use std::sync::Arc;
 
 /// Per-snapshot driver state a hypervisor keeps besides the caches (BDS,
 /// AIO rings, refcount caches, throttling state, ...) — §4.3 found these
@@ -18,20 +18,40 @@ use std::sync::{Arc, Mutex};
 /// Calibrated to Fig 12's sqemu residue: ~0.2 MiB per snapshot.
 pub const DRIVER_STATE_BYTES: u64 = 200 << 10;
 
+/// Reusable fetch-path scratch: the raw slice bytes and decoded entries
+/// of the most recent cache-miss fetch (§Perf: one scratch pair reused
+/// across all misses instead of two allocations per miss).
+#[derive(Default)]
+pub struct SliceScratch {
+    pub raw: Vec<u8>,
+    pub entries: Vec<u64>,
+}
+
 /// Everything both drivers share: the chain, the clock/cost model, the
 /// §6.3 event counters and the memory registrations for per-snapshot
 /// structures.
+///
+/// The driver is single-owner by design — one worker thread per VM holds
+/// it exclusively (`&mut self` request paths) — so the lookup histogram
+/// and the vectored-I/O counters are plain fields, not locked ones;
+/// readers go through `&self` accessors that clone/copy.
 pub struct DriverBase {
     pub chain: Chain,
     pub clock: Arc<VirtClock>,
     pub cost: CostModel,
     pub counters: Arc<CacheCounters>,
-    pub lookup_hist: Mutex<Histogram>,
+    pub lookup_hist: Histogram,
     pub acct: Arc<MemoryAccountant>,
     /// Write intercept shared with a live block job, if one is running
     /// (see [`crate::blockjob`]): guest writes mark clusters as newer
     /// than the job; job moves mark cached mappings as possibly stale.
     pub fence: Arc<JobFence>,
+    /// Fetch-path scratch buffers (see [`SliceScratch`]).
+    pub scratch: SliceScratch,
+    /// Device reads that merged >= 2 cluster segments into one seek.
+    pub merged_ios: u64,
+    /// Bytes carried by those merged reads.
+    pub coalesced_bytes: u64,
     /// One registration per image: driver struct + in-RAM L1 mirror.
     mem: Vec<Registration>,
 }
@@ -48,9 +68,12 @@ impl DriverBase {
             clock,
             cost,
             counters: Arc::new(CacheCounters::new()),
-            lookup_hist: Mutex::new(Histogram::new()),
+            lookup_hist: Histogram::new(),
             acct,
             fence: Arc::new(JobFence::default()),
+            scratch: SliceScratch::default(),
+            merged_ios: 0,
+            coalesced_bytes: 0,
             mem,
         }
     }
@@ -78,9 +101,15 @@ impl DriverBase {
         self.clock.advance(self.cost.t_layers);
     }
 
-    /// Record a resolve latency sample.
-    pub fn record_lookup(&self, ns: u64) {
-        self.lookup_hist.lock().unwrap().record(ns);
+    /// Record a resolve latency sample (plain field: the worker thread is
+    /// the single owner, no lock on the hot path).
+    pub fn record_lookup(&mut self, ns: u64) {
+        self.lookup_hist.record(ns);
+    }
+
+    /// Clone of the lookup-latency distribution for readers (Fig 14).
+    pub fn lookup_latency(&self) -> Histogram {
+        self.lookup_hist.clone()
     }
 
     /// Read guest data for one resolved cluster segment; zero-fills holes.
@@ -152,6 +181,117 @@ impl DriverBase {
         let geom = *self.chain.active().geom();
         SegmentIter { cs: geom.cluster_size(), bits: geom.cluster_bits, pos: voff, end: voff + len as u64 }
     }
+
+    /// Split a scatter-gather request list into cluster segments, in iov
+    /// order. Each iov's buffer is partitioned exactly by its segments.
+    pub fn vsegments(&self, iovs: &[(u64, &mut [u8])]) -> Vec<VSeg> {
+        let mut segs = Vec::new();
+        for (i, (voff, buf)) in iovs.iter().enumerate() {
+            for (vc, within, len) in self.segments(*voff, buf.len()) {
+                segs.push(VSeg { iov: i, len, vc, within });
+            }
+        }
+        segs
+    }
+
+    /// The contiguity coalescer: serve resolved segments with ONE device
+    /// read per maximal physically contiguous same-file run; holes
+    /// zero-fill. `resolved[i]` is segment `i`'s `(bfi, cluster host
+    /// offset)` mapping. Sequential reads on a warm chain collapse from
+    /// one device I/O per cluster to one per run.
+    pub fn read_resolved(
+        &mut self,
+        segs: &[VSeg],
+        resolved: &[Option<(u16, u64)>],
+        iovs: &mut [(u64, &mut [u8])],
+    ) -> Result<()> {
+        debug_assert_eq!(segs.len(), resolved.len());
+        // carve every iov buffer into per-segment destination slices
+        // (segments were generated in iov order and cover each buffer)
+        let mut dests: Vec<&mut [u8]> = Vec::with_capacity(segs.len());
+        let mut k = 0usize;
+        for (i, (_voff, buf)) in iovs.iter_mut().enumerate() {
+            let mut rest: &mut [u8] = buf;
+            while k < segs.len() && segs[k].iov == i {
+                let (head, tail) = rest.split_at_mut(segs[k].len);
+                dests.push(head);
+                rest = tail;
+                k += 1;
+            }
+            debug_assert!(rest.is_empty(), "segments must cover the buffer");
+        }
+        let mut i = 0usize;
+        while i < segs.len() {
+            let Some((bfi, off)) = resolved[i] else {
+                dests[i].fill(0);
+                i += 1;
+                continue;
+            };
+            // grow the run while the next segment continues the same
+            // file's physical byte range
+            let run_start = off + segs[i].within;
+            let mut run_end = run_start + segs[i].len as u64;
+            let mut j = i + 1;
+            while j < segs.len() {
+                match resolved[j] {
+                    Some((b2, o2)) if b2 == bfi && o2 + segs[j].within == run_end => {
+                        run_end += segs[j].len as u64;
+                        j += 1;
+                    }
+                    _ => break,
+                }
+            }
+            let img = self
+                .chain
+                .get(bfi)
+                .ok_or_else(|| anyhow::anyhow!("stamp to missing file {bfi}"))?;
+            if j == i + 1 {
+                // lone segment: the existing single-cluster path
+                img.read_data(off, segs[i].within, dests[i])?;
+            } else {
+                let mut run_bufs: Vec<&mut [u8]> =
+                    dests[i..j].iter_mut().map(std::mem::take).collect();
+                img.read_run_vectored(run_start, &mut run_bufs)?;
+                self.merged_ios += 1;
+                self.coalesced_bytes += run_end - run_start;
+            }
+            i = j;
+        }
+        Ok(())
+    }
+}
+
+/// A cluster segment of a vectored request: the next `len` bytes of iov
+/// `iov` map to virtual cluster `vc` at offset `within` (segments of an
+/// iov partition its buffer in order).
+#[derive(Clone, Copy, Debug)]
+pub struct VSeg {
+    pub iov: usize,
+    pub len: usize,
+    pub vc: u64,
+    pub within: u64,
+}
+
+/// Partition `segs` into consecutive runs sharing one slice key
+/// (`vc / slice_entries`) and resolve each run with `resolve_group` —
+/// the shared grouping loop of both drivers' `readv`.
+pub fn resolve_grouped(
+    segs: &[VSeg],
+    slice_entries: u64,
+    mut resolve_group: impl FnMut(&[VSeg], u64, &mut Vec<Option<(u16, u64)>>) -> Result<()>,
+) -> Result<Vec<Option<(u16, u64)>>> {
+    let mut resolved = Vec::with_capacity(segs.len());
+    let mut i = 0usize;
+    while i < segs.len() {
+        let key = segs[i].vc / slice_entries;
+        let mut j = i + 1;
+        while j < segs.len() && segs[j].vc / slice_entries == key {
+            j += 1;
+        }
+        resolve_group(&segs[i..j], key, &mut resolved)?;
+        i = j;
+    }
+    Ok(resolved)
 }
 
 /// Iterator over (vcluster, offset-within-cluster, length) segments.

@@ -42,6 +42,15 @@ impl DriverKind {
     }
 }
 
+/// Counters of the vectored request path (see `DriverBase`): device
+/// reads that merged two or more cluster segments into one seek, and the
+/// bytes those merged reads carried.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct VecIoSnapshot {
+    pub merged_ios: u64,
+    pub coalesced_bytes: u64,
+}
+
 /// A guest-facing block driver over a snapshot chain.
 pub trait Driver: Send {
     /// Read `buf.len()` bytes at virtual offset `voff`. Unallocated
@@ -51,6 +60,30 @@ pub trait Driver: Send {
     /// Write at virtual offset `voff` (copy-on-write into the active
     /// volume when the cluster is owned by a backing file).
     fn write(&mut self, voff: u64, data: &[u8]) -> Result<()>;
+
+    /// Scatter-gather read: fill every `(voff, buf)` pair. Must be
+    /// bit-identical to issuing the `read`s one by one (the vectored
+    /// property tests enforce this). The default loops for compat; both
+    /// in-tree drivers override it with batched slice resolution and
+    /// run-coalesced device reads.
+    fn readv(&mut self, iovs: &mut [(u64, &mut [u8])]) -> Result<()> {
+        for iov in iovs.iter_mut() {
+            self.read(iov.0, iov.1)?;
+        }
+        Ok(())
+    }
+
+    /// Gather write of every `(voff, data)` pair, in order. Must be
+    /// bit-identical to issuing the `write`s one by one — writes keep
+    /// per-cluster copy-on-write semantics (each cluster write may
+    /// allocate), so the win is amortized submission, not merged device
+    /// commands.
+    fn writev(&mut self, iovs: &[(u64, &[u8])]) -> Result<()> {
+        for (voff, data) in iovs {
+            self.write(*voff, data)?;
+        }
+        Ok(())
+    }
 
     /// Write back all dirty cache slices.
     fn flush(&mut self) -> Result<()>;
@@ -77,7 +110,14 @@ pub trait Driver: Send {
     fn counters(&self) -> CounterSnapshot;
 
     /// Distribution of cache lookup latencies in virtual ns (Fig 14).
+    /// Batched resolution records one sample per slice group.
     fn lookup_latency(&self) -> Histogram;
+
+    /// Vectored-path counters (merged device reads and their bytes).
+    /// Default: zeros, for drivers without a coalescer.
+    fn vec_io(&self) -> VecIoSnapshot {
+        VecIoSnapshot::default()
+    }
 
     /// Live cache bytes (for reports; the accountant tracks the total).
     fn cache_bytes(&self) -> u64;

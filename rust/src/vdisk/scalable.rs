@@ -10,8 +10,9 @@
 //! story: "existing Qcow2 images lacking our format's metadata should
 //! still work ... without performance/memory consumption gains".
 
-use super::common::DriverBase;
-use super::{Driver, DriverKind};
+use super::common::{resolve_grouped, DriverBase, VSeg};
+use super::{Driver, DriverKind, VecIoSnapshot};
+use crate::cache::unified::normalize;
 use crate::cache::{CacheConfig, UnifiedCache};
 use crate::metrics::clock::{CostModel, VirtClock};
 use crate::metrics::counters::CounterSnapshot;
@@ -54,29 +55,54 @@ impl ScalableDriver {
 
     /// Fetch the slice covering `vcluster` from file `from_idx` into the
     /// unified cache (insert on the first fetch, §5.3 correction
-    /// otherwise). Returns false if that file has no table for the range.
-    fn fetch_slice_from(&mut self, vcluster: u64, from_idx: u16) -> Result<bool> {
+    /// otherwise) and return the authoritative chain-frame entry for
+    /// `vcluster` — the miss path resolves from the fetch result itself,
+    /// with no second cache probe (mirroring the PR-2 hit-path fix).
+    /// `Ok(None)` = that file has no table for the range. The raw slice
+    /// is decoded into the driver-owned scratch and normalized in place,
+    /// so a miss costs no transient allocations.
+    fn fetch_slice_from(&mut self, vcluster: u64, from_idx: u16) -> Result<Option<L2Entry>> {
         let cfg = *self.cache.cfg();
         let key = cfg.slice_key(vcluster);
-        let img = self
-            .base
-            .chain
-            .get(from_idx)
-            .ok_or_else(|| anyhow::anyhow!("no file {from_idx}"))?;
+        let idx_in_slice = cfg.slice_index(vcluster) as usize;
+        let img = Arc::clone(
+            self.base
+                .chain
+                .get(from_idx)
+                .ok_or_else(|| anyhow::anyhow!("no file {from_idx}"))?,
+        );
         let (l1_idx, _) = img.geom().split_vcluster(vcluster);
         let l2_off = img.l1_entry(l1_idx);
         if l2_off == 0 {
-            return Ok(false);
+            return Ok(None);
         }
         let slice_start = cfg.slice_base(key) % img.geom().entries_per_l2();
-        let entries = img.read_l2_slice(l2_off, slice_start, cfg.slice_entries)?;
-        if self.cache.contains(key) {
-            self.cache.correct(key, &entries, from_idx);
-        } else if let Some((ek, evicted)) = self.cache.insert_from(key, &entries, from_idx)
-        {
-            self.writeback(ek, &evicted)?;
+        img.read_l2_slice_into(
+            l2_off,
+            slice_start,
+            cfg.slice_entries,
+            &mut self.base.scratch.raw,
+            &mut self.base.scratch.entries,
+        )?;
+        for e in self.base.scratch.entries.iter_mut() {
+            *e = normalize(*e, from_idx);
         }
-        Ok(true)
+        if self.cache.contains(key) {
+            let merged = self
+                .cache
+                .correct_normalized(key, &self.base.scratch.entries)
+                .map(|(_, s)| L2Entry(s[idx_in_slice]))
+                .expect("slice resident");
+            Ok(Some(merged))
+        } else {
+            let entry = L2Entry(self.base.scratch.entries[idx_in_slice]);
+            if let Some((ek, evicted)) =
+                self.cache.insert_normalized(key, &self.base.scratch.entries)
+            {
+                self.writeback(ek, &evicted)?;
+            }
+            Ok(Some(entry))
+        }
     }
 
     /// Insert an all-zero slice (active volume has no table for the range
@@ -84,9 +110,14 @@ impl ScalableDriver {
     fn insert_hole_slice(&mut self, vcluster: u64) -> Result<()> {
         let cfg = *self.cache.cfg();
         let key = cfg.slice_key(vcluster);
-        let zeros = vec![0u64; cfg.slice_entries as usize];
-        let active_index = self.cache.active_index();
-        if let Some((ek, evicted)) = self.cache.insert_from(key, &zeros, active_index) {
+        self.base.scratch.entries.clear();
+        self.base
+            .scratch
+            .entries
+            .resize(cfg.slice_entries as usize, 0);
+        if let Some((ek, evicted)) =
+            self.cache.insert_normalized(key, &self.base.scratch.entries)
+        {
             self.writeback(ek, &evicted)?;
         }
         Ok(())
@@ -99,21 +130,29 @@ impl ScalableDriver {
         self.base.charge_ram();
         // 1) probe the unified cache — one lookup on the hit path (§Perf:
         // the old contains+lookup double probe cost ~6% of a warm read)
-        let mut looked = self.cache.lookup(vcluster);
-        if looked.is_none() {
-            // cache miss: one fetch from the active volume
-            if self.fetch_slice_from(vcluster, active_index)? {
-                self.base.counters.miss();
-            } else {
-                // active volume has no table here: definitive hole on a
-                // complete chain; on a vanilla chain the correction walk
-                // below consults the backing files
-                self.insert_hole_slice(vcluster)?;
+        let looked = match self.cache.lookup(vcluster) {
+            Some(view) => view,
+            None => {
+                // cache miss: one fetch from the active volume; the fetch
+                // result doubles as the probe (no second lookup)
+                let fetched = self.fetch_slice_from(vcluster, active_index)?;
+                self.base.charge_ram(); // re-examine the cached entry (Fig 3 steps 5-6)
+                match fetched {
+                    Some(e) => {
+                        self.base.counters.miss();
+                        e.bfi().map(|b| (b, e.host_offset()))
+                    }
+                    None => {
+                        // active volume has no table here: definitive hole
+                        // on a complete chain; on a vanilla chain the
+                        // correction walk below consults the backing files
+                        self.insert_hole_slice(vcluster)?;
+                        None
+                    }
+                }
             }
-            self.base.charge_ram();
-            looked = self.cache.lookup(vcluster);
-        }
-        match looked.expect("slice resident") {
+        };
+        match looked {
             Some((bfi, off)) if bfi == active_index => {
                 self.base.counters.hit();
                 Ok(Some((bfi, off)))
@@ -132,10 +171,10 @@ impl ScalableDriver {
                 self.base.counters.unallocated();
                 for idx in (0..active_index).rev() {
                     self.base.counters.lookup_on(idx as usize);
-                    if self.fetch_slice_from(vcluster, idx)? {
+                    if let Some(e) = self.fetch_slice_from(vcluster, idx)? {
                         self.base.counters.miss();
                         self.base.charge_ram();
-                        if let Some(Some((bfi, off))) = self.cache.lookup(vcluster) {
+                        if let Some((bfi, off)) = e.bfi().map(|b| (b, e.host_offset())) {
                             self.base.counters.unallocated();
                             return Ok(Some((bfi, off)));
                         }
@@ -149,6 +188,70 @@ impl ScalableDriver {
                 Ok(None)
             }
         }
+    }
+
+    /// Batched §5.3 resolution for one slice group: every segment in
+    /// `group` shares slice key `key`, so the whole group is resolved
+    /// from ONE cache probe — one T_M charge and one histogram sample
+    /// for the group, not one per cluster.
+    fn resolve_group(
+        &mut self,
+        group: &[VSeg],
+        key: u64,
+        out: &mut Vec<Option<(u16, u64)>>,
+    ) -> Result<()> {
+        let cfg = *self.cache.cfg();
+        let active_index = self.cache.active_index();
+        let t0 = self.base.clock.now();
+        self.base.counters.lookup_on(active_index as usize);
+        self.base.charge_ram();
+        if self.cache.lookup_slice(key).is_none() {
+            // group miss: one fetch from the active volume covers every
+            // cluster of the slice
+            let fetched = self.fetch_slice_from(group[0].vc, active_index)?;
+            self.base.charge_ram();
+            match fetched {
+                Some(_) => self.base.counters.miss(),
+                None => self.insert_hole_slice(group[0].vc)?,
+            }
+        }
+        let base_idx = out.len();
+        let mut any_remote = false;
+        let mut any_unresolved = false;
+        {
+            let entries = self.cache.lookup_slice(key).expect("slice resident");
+            for s in group {
+                let e = L2Entry(entries[cfg.slice_index(s.vc) as usize]);
+                let view = e.bfi().map(|b| (b, e.host_offset()));
+                match view {
+                    Some((bfi, _)) if bfi == active_index => self.base.counters.hit(),
+                    Some(_) => {
+                        self.base.counters.unallocated();
+                        any_remote = true;
+                    }
+                    None => any_unresolved = true,
+                }
+                out.push(view);
+            }
+        }
+        if any_remote {
+            // direct backing-file access: one amortized T_M per group
+            self.base.charge_ram();
+        }
+        if any_unresolved && !self.complete_index {
+            // backward-compat: unresolved clusters of an unstamped chain
+            // fall back to the scalar correction walk
+            for (k, s) in group.iter().enumerate() {
+                if out[base_idx + k].is_none() {
+                    out[base_idx + k] = self.resolve(s.vc)?;
+                }
+            }
+        }
+        // one histogram sample for the whole group — including any
+        // compat-walk fallback, which dominates on unstamped chains
+        let dt = self.base.clock.now() - t0;
+        self.base.record_lookup(dt);
+        Ok(())
     }
 
     fn writeback(&self, key: u64, entries: &[u64]) -> Result<()> {
@@ -177,6 +280,18 @@ impl Driver for ScalableDriver {
             cursor += len;
         }
         Ok(())
+    }
+
+    /// The vectored read path: segments of all iovs are resolved in
+    /// slice groups (one unified-cache probe per group) and served
+    /// through the [`DriverBase::read_resolved`] contiguity coalescer.
+    fn readv(&mut self, iovs: &mut [(u64, &mut [u8])]) -> Result<()> {
+        let segs = self.base.vsegments(iovs);
+        let slice_entries = self.cache.cfg().slice_entries;
+        let resolved = resolve_grouped(&segs, slice_entries, |g, k, out| {
+            self.resolve_group(g, k, out)
+        })?;
+        self.base.read_resolved(&segs, &resolved, iovs)
     }
 
     fn write(&mut self, voff: u64, data: &[u8]) -> Result<()> {
@@ -274,7 +389,14 @@ impl Driver for ScalableDriver {
     }
 
     fn lookup_latency(&self) -> Histogram {
-        self.base.lookup_hist.lock().unwrap().clone()
+        self.base.lookup_latency()
+    }
+
+    fn vec_io(&self) -> VecIoSnapshot {
+        VecIoSnapshot {
+            merged_ios: self.base.merged_ios,
+            coalesced_bytes: self.base.coalesced_bytes,
+        }
     }
 
     fn cache_bytes(&self) -> u64 {

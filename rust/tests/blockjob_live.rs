@@ -124,6 +124,128 @@ fn live_stream_with_guest_writes_matches_offline_merge_bit_for_bit() {
     });
 }
 
+/// Same property as above, but the concurrent guest writes arrive as
+/// vectored batches (`writev`) and the mid-job probes as `readv`:
+/// batching must not change what the live job sees or produces.
+#[test]
+fn live_stream_with_batched_guest_writes_matches_offline_merge() {
+    forall(0x11FF, 3, |rng| {
+        let spec = prop_spec(0xB5EED ^ rng.below(1 << 20));
+        let clock_a = VirtClock::new();
+        let node_a = StorageNode::new("a", clock_a.clone(), CostModel::default());
+        let clock_b = VirtClock::new();
+        let node_b = StorageNode::new("b", clock_b.clone(), CostModel::default());
+        let chain_a = generate(&*node_a, &spec).unwrap();
+        let chain_b = generate(&*node_b, &spec).unwrap();
+        let len = chain_a.len();
+        let mut da = driver_for(chain_a, clock_a.clone());
+        let mut db = driver_for(chain_b, clock_b.clone());
+
+        let fence = Arc::clone(da.fence());
+        let rate = if rng.chance(0.5) { 0 } else { 2 << 20 };
+        let shared = Arc::new(JobShared::new("propv", JobKind::Stream, rate));
+        let job = Box::new(LiveStreamJob::new(da.chain(), Arc::clone(&fence)));
+        let mut runner =
+            JobRunner::new(job, Arc::clone(&shared), fence, 8, 8 * CS, clock_a.now());
+        let mut finished = false;
+        let mut guard = 0u32;
+        while !finished {
+            guard += 1;
+            assert!(guard < 100_000, "job never converged");
+            // one batched burst of guest writes, applied to BOTH sides
+            let n = rng.below(4) as usize;
+            let batch: Vec<(u64, Vec<u8>)> = (0..n)
+                .map(|_| {
+                    let vc = rng.below(64);
+                    let within = rng.below(CS - 64);
+                    let mut data = vec![0u8; 1 + rng.below(63) as usize];
+                    rng.fill_bytes(&mut data);
+                    (vc * CS + within, data)
+                })
+                .collect();
+            {
+                let iovs: Vec<(u64, &[u8])> =
+                    batch.iter().map(|(v, d)| (*v, d.as_slice())).collect();
+                da.writev(&iovs).unwrap();
+            }
+            for (v, d) in &batch {
+                db.write(*v, d.clone()).unwrap();
+            }
+            if rng.chance(0.3) {
+                // mid-job vectored probes: the live side must read the
+                // same bytes as the untouched side at all times
+                let reqs: Vec<(u64, usize)> = (0..4)
+                    .map(|_| (rng.below(64 * CS - 128), 64usize))
+                    .collect();
+                let mut ba: Vec<Vec<u8>> = reqs.iter().map(|r| vec![0u8; r.1]).collect();
+                let mut bb: Vec<Vec<u8>> = reqs.iter().map(|r| vec![0u8; r.1]).collect();
+                {
+                    let mut iovs: Vec<(u64, &mut [u8])> = reqs
+                        .iter()
+                        .zip(ba.iter_mut())
+                        .map(|(r, b)| (r.0, b.as_mut_slice()))
+                        .collect();
+                    da.readv(&mut iovs).unwrap();
+                }
+                {
+                    let mut iovs: Vec<(u64, &mut [u8])> = reqs
+                        .iter()
+                        .zip(bb.iter_mut())
+                        .map(|(r, b)| (r.0, b.as_mut_slice()))
+                        .collect();
+                    db.readv(&mut iovs).unwrap();
+                }
+                assert_eq!(ba, bb, "mid-job vectored read diverged");
+            }
+            match runner.step(&mut da, clock_a.now()) {
+                Step::Finished => finished = true,
+                Step::Starved { ready_at } => {
+                    let now = clock_a.now();
+                    clock_a.advance(ready_at - now);
+                }
+                _ => {}
+            }
+        }
+        let st = shared.status();
+        assert_eq!(st.state, JobState::Completed, "error: {:?}", st.error);
+        assert_eq!(da.chain().len(), 1, "live chain collapsed");
+
+        db.flush().unwrap();
+        snapshot::stream_merge(db.chain_mut(), 0, (len - 1) as u16).unwrap();
+        db.reopen().unwrap();
+
+        // post-merge: whole-disk vectored comparison, 8 clusters a batch
+        for base in (0..64u64).step_by(8) {
+            let reqs: Vec<(u64, usize)> =
+                (0..8).map(|i| ((base + i) * CS, CS as usize)).collect();
+            let mut ba: Vec<Vec<u8>> = reqs.iter().map(|r| vec![0u8; r.1]).collect();
+            let mut bb: Vec<Vec<u8>> = reqs.iter().map(|r| vec![0u8; r.1]).collect();
+            {
+                let mut iovs: Vec<(u64, &mut [u8])> = reqs
+                    .iter()
+                    .zip(ba.iter_mut())
+                    .map(|(r, b)| (r.0, b.as_mut_slice()))
+                    .collect();
+                da.readv(&mut iovs).unwrap();
+            }
+            {
+                let mut iovs: Vec<(u64, &mut [u8])> = reqs
+                    .iter()
+                    .zip(bb.iter_mut())
+                    .map(|(r, b)| (r.0, b.as_mut_slice()))
+                    .collect();
+                db.readv(&mut iovs).unwrap();
+            }
+            assert_eq!(ba, bb, "base={base} diverged from offline merge");
+        }
+        da.flush().unwrap();
+        let ra = qcheck::check_chain(da.chain()).unwrap();
+        assert!(ra.is_clean(), "{:?}", ra.errors);
+        let rb = qcheck::check_chain(db.chain()).unwrap();
+        assert!(rb.is_clean(), "{:?}", rb.errors);
+    });
+}
+
 fn vm_cfg(kind: DriverKind, chain_len: usize, prefix: &str, stamped: bool) -> VmConfig {
     VmConfig {
         driver: kind,

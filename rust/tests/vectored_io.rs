@@ -1,0 +1,295 @@
+//! Vectored I/O invariants (DESIGN.md §9):
+//!
+//! * `readv`/`writev` are bit-for-bit identical to the equivalent
+//!   sequence of scalar `read`/`write` calls, on random stamped and
+//!   vanilla chains, under both drivers;
+//! * a warm sequential 1 MiB `readv` on a 500-deep stamped chain costs
+//!   one slice-group cache probe and ONE coalesced device read;
+//! * vectored sequential 4 KiB reads are >= 2x the per-request path in
+//!   simulated throughput under the default cost model;
+//! * the coordinator batch path executes in submission order (a write is
+//!   visible to later reads of the same batch) and feeds the new
+//!   `batched_ops`/`merged_ios` stats.
+
+use sqemu::bench::smoke::{device_ios, seq4k_compare};
+use sqemu::cache::CacheConfig;
+use sqemu::chaingen::{generate, ChainSpec};
+use sqemu::coordinator::server::{BatchOp, BatchReply, VmChain};
+use sqemu::coordinator::{Coordinator, VmConfig};
+use sqemu::metrics::clock::{CostModel, VirtClock};
+use sqemu::metrics::memory::MemoryAccountant;
+use sqemu::qcow::image::DataMode;
+use sqemu::qcow::qcheck;
+use sqemu::storage::node::StorageNode;
+use sqemu::util::prop::forall;
+use sqemu::vdisk::scalable::ScalableDriver;
+use sqemu::vdisk::vanilla::VanillaDriver;
+use sqemu::vdisk::{Driver, DriverKind};
+
+const CS: u64 = 64 << 10;
+
+fn spec(stamped: bool, seed: u64, prefix: &str) -> ChainSpec {
+    ChainSpec {
+        disk_size: 64 * CS,
+        chain_len: 6,
+        populated: 0.5,
+        stamped,
+        data_mode: DataMode::Real,
+        prefix: prefix.into(),
+        seed,
+        ..Default::default()
+    }
+}
+
+/// Two bit-identical chains on separate nodes (generation is
+/// deterministic), one per driver design.
+fn drivers(stamped: bool, seed: u64) -> (ScalableDriver, VanillaDriver) {
+    let ca = VirtClock::new();
+    let na = StorageNode::new("a", ca.clone(), CostModel::default());
+    let chain_a = generate(&*na, &spec(stamped, seed, "v")).unwrap();
+    let cb = VirtClock::new();
+    let nb = StorageNode::new("b", cb.clone(), CostModel::default());
+    let chain_b = generate(&*nb, &spec(stamped, seed, "v")).unwrap();
+    let cfg = CacheConfig::new(16, 128 << 10);
+    (
+        ScalableDriver::new(chain_a, cfg, ca, CostModel::default(), MemoryAccountant::new()),
+        VanillaDriver::new(chain_b, cfg, cb, CostModel::default(), MemoryAccountant::new()),
+    )
+}
+
+fn readv_into(d: &mut dyn Driver, reqs: &[(u64, usize)]) -> Vec<Vec<u8>> {
+    let mut bufs: Vec<Vec<u8>> = reqs.iter().map(|r| vec![0u8; r.1]).collect();
+    {
+        let mut iovs: Vec<(u64, &mut [u8])> = reqs
+            .iter()
+            .zip(bufs.iter_mut())
+            .map(|(r, b)| (r.0, b.as_mut_slice()))
+            .collect();
+        d.readv(&mut iovs).unwrap();
+    }
+    bufs
+}
+
+#[test]
+fn readv_matches_scalar_reads_bit_for_bit() {
+    forall(0x5EC1, 6, |rng| {
+        let stamped = rng.chance(0.5);
+        let (mut ds, mut dv) = drivers(stamped, rng.below(1 << 20));
+        for _ in 0..8 {
+            let n = 1 + rng.below(6) as usize;
+            let reqs: Vec<(u64, usize)> = (0..n)
+                .map(|_| {
+                    let len = 1 + rng.below(3 * CS) as usize;
+                    let voff = rng.below(64 * CS - len as u64);
+                    (voff, len)
+                })
+                .collect();
+            let got_s = readv_into(&mut ds, &reqs);
+            let got_v = readv_into(&mut dv, &reqs);
+            for (i, &(voff, len)) in reqs.iter().enumerate() {
+                let mut reference = vec![0u8; len];
+                ds.read(voff, &mut reference).unwrap();
+                assert_eq!(got_s[i], reference, "scalable voff={voff} len={len}");
+                assert_eq!(got_v[i], reference, "vanilla voff={voff} len={len}");
+            }
+        }
+    });
+}
+
+#[test]
+fn writev_matches_scalar_writes_bit_for_bit() {
+    forall(0x5EC2, 5, |rng| {
+        let stamped = rng.chance(0.5);
+        let (mut ds, mut dv) = drivers(stamped, rng.below(1 << 20));
+        for _ in 0..6 {
+            let n = 1 + rng.below(5) as usize;
+            let reqs: Vec<(u64, Vec<u8>)> = (0..n)
+                .map(|_| {
+                    let len = 1 + rng.below(200) as usize;
+                    let voff = rng.below(64 * CS - len as u64);
+                    let mut data = vec![0u8; len];
+                    rng.fill_bytes(&mut data);
+                    (voff, data)
+                })
+                .collect();
+            // batched on the scalable driver, scalar loop on vanilla
+            let iovs: Vec<(u64, &[u8])> =
+                reqs.iter().map(|(v, d)| (*v, d.as_slice())).collect();
+            ds.writev(&iovs).unwrap();
+            for (v, d) in &reqs {
+                dv.write(*v, d).unwrap();
+            }
+        }
+        let mut ba = vec![0u8; CS as usize];
+        let mut bb = vec![0u8; CS as usize];
+        for vc in 0..64u64 {
+            ds.read(vc * CS, &mut ba).unwrap();
+            dv.read(vc * CS, &mut bb).unwrap();
+            assert_eq!(ba, bb, "vc={vc} diverged");
+        }
+        ds.flush().unwrap();
+        dv.flush().unwrap();
+        assert!(qcheck::check_chain(ds.chain()).unwrap().is_clean());
+        assert!(qcheck::check_chain(dv.chain()).unwrap().is_clean());
+    });
+}
+
+/// The acceptance criterion: on a warm 500-deep stamped chain, a 1 MiB
+/// sequential readv performs one batched cache probe (16 clusters share
+/// one 512-entry slice) and ONE coalesced device read for the whole
+/// physically contiguous run.
+#[test]
+fn warm_seq_readv_on_deep_chain_one_probe_one_device_read() {
+    let clock = VirtClock::new();
+    let node = StorageNode::new("deep", clock.clone(), CostModel::default());
+    let chain = generate(
+        &*node,
+        &ChainSpec {
+            disk_size: 64 * CS,
+            chain_len: 500,
+            populated: 0.0, // our writes below populate the active volume
+            stamped: true,
+            data_mode: DataMode::Real,
+            prefix: "d".into(),
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    assert_eq!(chain.len(), 500);
+    let mut d = ScalableDriver::new(
+        chain,
+        CacheConfig::new(512, 1 << 20),
+        clock,
+        CostModel::default(),
+        MemoryAccountant::new(),
+    );
+    // force the L2-table allocation first, then lay down 16 physically
+    // contiguous clusters in the active volume
+    d.write(17 * CS, &[1u8; 4]).unwrap();
+    let data: Vec<u8> = (0..(16 * CS) as usize).map(|i| (i % 251) as u8).collect();
+    d.write(0, &data).unwrap();
+
+    let mut buf = vec![0u8; (16 * CS) as usize];
+    let readv_once = |d: &mut ScalableDriver, buf: &mut Vec<u8>| {
+        let mut iovs: Vec<(u64, &mut [u8])> = vec![(0, buf.as_mut_slice())];
+        d.readv(&mut iovs).unwrap();
+    };
+    readv_once(&mut d, &mut buf); // warm
+    let c0 = d.counters();
+    let v0 = d.vec_io();
+    let ios0 = device_ios(&d);
+    readv_once(&mut d, &mut buf);
+    let c1 = d.counters();
+    let v1 = d.vec_io();
+    let ios1 = device_ios(&d);
+
+    let probes = c1.per_file_lookups.iter().sum::<u64>()
+        - c0.per_file_lookups.iter().sum::<u64>();
+    assert_eq!(probes, 1, "16 clusters in one slice -> one batched probe");
+    assert_eq!(c1.misses, c0.misses, "warm cache: no slice fetch");
+    assert_eq!(v1.merged_ios - v0.merged_ios, 1, "one coalesced run");
+    assert_eq!(v1.coalesced_bytes - v0.coalesced_bytes, 16 * CS);
+    assert_eq!(ios1 - ios0, 1, "exactly one device read for the 1 MiB");
+    assert_eq!(buf, data, "content intact through the coalesced path");
+}
+
+/// The acceptance criterion: vectored sequential 4 KiB reads >= 2x the
+/// per-request path in simulated throughput (default cost model; the
+/// per-request path pays one seek per 4 KiB, the vectored one one seek
+/// per contiguous run).
+#[test]
+fn vectored_sequential_throughput_at_least_2x_scalar() {
+    let clock = VirtClock::new();
+    let node = StorageNode::new("tp", clock.clone(), CostModel::default());
+    let chain = generate(
+        &*node,
+        &ChainSpec {
+            disk_size: 16 << 20,
+            chain_len: 100,
+            populated: 1.0,
+            stamped: true,
+            data_mode: DataMode::Synthetic,
+            prefix: "tp".into(),
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    let geom = *chain.active().geom();
+    let mut d = ScalableDriver::new(
+        chain,
+        CacheConfig::full_disk(&geom),
+        clock.clone(),
+        CostModel::default(),
+        MemoryAccountant::new(),
+    );
+    let region: u64 = 4 << 20;
+    let cmp = seq4k_compare(&mut d, &clock, region).unwrap();
+    assert!(
+        cmp.vectored_ns * 2 <= cmp.scalar_ns,
+        "vectored {} ns not 2x faster than scalar {} ns",
+        cmp.vectored_ns,
+        cmp.scalar_ns
+    );
+    assert!(
+        cmp.vectored_device_ios < cmp.scalar_device_ios / 2,
+        "vectored path must merge device reads ({} vs {})",
+        cmp.vectored_device_ios,
+        cmp.scalar_device_ios
+    );
+}
+
+/// Coordinator batches: in-order execution (read-your-batched-write),
+/// scatter-gather replies, and the new per-VM stats.
+#[test]
+fn coordinator_batch_orders_and_counts() {
+    let coord = Coordinator::with_fresh_nodes(1).unwrap();
+    let c = coord
+        .launch_vm(
+            "vm",
+            VmConfig {
+                driver: DriverKind::Scalable,
+                cache: CacheConfig::new(64, 256 << 10),
+                chain: VmChain::Generate(ChainSpec {
+                    disk_size: 8 << 20,
+                    chain_len: 3,
+                    populated: 0.3,
+                    stamped: true,
+                    data_mode: DataMode::Real,
+                    prefix: "b".into(),
+                    ..Default::default()
+                }),
+            },
+        )
+        .unwrap();
+    // a write is visible to later reads of the same batch
+    let replies = c
+        .submit(vec![
+            BatchOp::Write { voff: 1 << 20, data: vec![0xAB; 64] },
+            BatchOp::Read { voff: 1 << 20, len: 64 },
+            BatchOp::Write { voff: (1 << 20) + 64, data: vec![0xCD; 32] },
+            BatchOp::Read { voff: (1 << 20) + 64, len: 32 },
+        ])
+        .unwrap();
+    assert!(matches!(replies[0], BatchReply::Write));
+    match (&replies[1], &replies[3]) {
+        (BatchReply::Read(a), BatchReply::Read(b)) => {
+            assert_eq!(a.as_slice(), &[0xABu8; 64][..]);
+            assert_eq!(b.as_slice(), &[0xCDu8; 32][..]);
+        }
+        other => panic!("unexpected replies: {other:?}"),
+    }
+    // sequential batched reads over freshly written clusters coalesce
+    c.write(0, vec![0x11; 128 << 10]).unwrap();
+    let seq: Vec<(u64, usize)> = (0..32).map(|i| (i * 4096, 4096)).collect();
+    let bufs = c.readv(&seq).unwrap();
+    for (i, &(voff, len)) in seq.iter().enumerate() {
+        assert_eq!(bufs[i], c.read(voff, len).unwrap(), "i={i}");
+    }
+    let stats = coord.vm_stats("vm").unwrap();
+    assert_eq!(stats.reads, 2 + 32 + 32);
+    assert_eq!(stats.writes, 3);
+    assert!(stats.batched_ops >= 36, "batched_ops={}", stats.batched_ops);
+    assert!(stats.merged_ios >= 1, "sequential batched reads must coalesce");
+    assert!(stats.coalesced_bytes > 0);
+    coord.shutdown();
+}

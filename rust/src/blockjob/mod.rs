@@ -52,6 +52,7 @@ pub use stamp::LiveStampJob;
 pub use stream::LiveStreamJob;
 
 use crate::qcow::Chain;
+use crate::util::lock_unpoisoned;
 use anyhow::Result;
 use std::collections::{HashMap, HashSet};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
@@ -170,15 +171,15 @@ pub struct JobFence {
 
 impl JobFence {
     pub fn begin(&self) {
-        self.guest.lock().unwrap().clear();
-        self.moved.lock().unwrap().clear();
+        lock_unpoisoned(&self.guest).clear();
+        lock_unpoisoned(&self.moved).clear();
         self.active.store(true, Ordering::Release);
     }
 
     pub fn end(&self) {
         self.active.store(false, Ordering::Release);
-        self.guest.lock().unwrap().clear();
-        self.moved.lock().unwrap().clear();
+        lock_unpoisoned(&self.guest).clear();
+        lock_unpoisoned(&self.moved).clear();
     }
 
     pub fn is_active(&self) -> bool {
@@ -188,18 +189,18 @@ impl JobFence {
     /// Guest wrote `vc`: the job must treat the cluster as newer.
     pub fn note_guest_write(&self, vc: u64) {
         if self.is_active() {
-            self.guest.lock().unwrap().insert(vc);
+            lock_unpoisoned(&self.guest).insert(vc);
         }
     }
 
     pub fn guest_wrote(&self, vc: u64) -> bool {
-        self.is_active() && self.guest.lock().unwrap().contains(&vc)
+        self.is_active() && lock_unpoisoned(&self.guest).contains(&vc)
     }
 
     /// Job relocated `vc` into the active volume at `host_off`.
     pub fn note_job_move(&self, vc: u64, host_off: u64) {
         if self.is_active() {
-            self.moved.lock().unwrap().insert(vc, host_off);
+            lock_unpoisoned(&self.moved).insert(vc, host_off);
         }
     }
 
@@ -208,14 +209,18 @@ impl JobFence {
         if !self.is_active() {
             return None;
         }
-        self.moved.lock().unwrap().get(&vc).copied()
+        lock_unpoisoned(&self.moved).get(&vc).copied()
     }
 
     /// Snapshot of every (vc, host_off) the job relocated — the only
     /// clusters a stale cache writeback can have clobbered, hence the
-    /// exact work list of `finalize`'s catch-up pass.
+    /// exact work list of `finalize`'s catch-up pass. Sorted by virtual
+    /// cluster so recovery replays are deterministic.
     pub fn moved_snapshot(&self) -> Vec<(u64, u64)> {
-        self.moved.lock().unwrap().iter().map(|(&k, &v)| (k, v)).collect()
+        let mut v: Vec<(u64, u64)> =
+            lock_unpoisoned(&self.moved).iter().map(|(&k, &v)| (k, v)).collect();
+        v.sort_unstable();
+        v
     }
 }
 
@@ -261,7 +266,7 @@ impl JobShared {
     }
 
     pub fn state(&self) -> JobState {
-        let s = *self.state.lock().unwrap();
+        let s = *lock_unpoisoned(&self.state);
         if s == JobState::Running && self.pause.load(Ordering::Relaxed) {
             JobState::Paused
         } else {
@@ -270,11 +275,11 @@ impl JobShared {
     }
 
     pub fn set_state(&self, s: JobState) {
-        *self.state.lock().unwrap() = s;
+        *lock_unpoisoned(&self.state) = s;
     }
 
     pub fn set_error(&self, msg: String) {
-        *self.error.lock().unwrap() = Some(msg);
+        *lock_unpoisoned(&self.error) = Some(msg);
     }
 
     pub fn cancel(&self) {
@@ -311,7 +316,7 @@ impl JobShared {
             rate_bps: self.rate_bps,
             started_ns: self.started_ns.load(Ordering::Relaxed),
             finished_ns: self.finished_ns.load(Ordering::Relaxed),
-            error: self.error.lock().unwrap().clone(),
+            error: lock_unpoisoned(&self.error).clone(),
         }
     }
 }

@@ -39,6 +39,21 @@ impl LiveStampJob {
         }
     }
 
+    /// Resume an interrupted stamp run from a checkpointed cursor.
+    /// Stamping is idempotent (an entry equal to the walk result is
+    /// skipped), so any checkpoint at or before the real progress is
+    /// safe.
+    pub fn resume_at(chain: &Chain, fence: Arc<JobFence>, cursor: u64) -> LiveStampJob {
+        let mut job = LiveStampJob::new(chain, fence);
+        job.cursor = cursor.min(job.total);
+        job
+    }
+
+    /// Clusters examined so far — the checkpoint a journal persists.
+    pub fn cursor(&self) -> u64 {
+        self.cursor
+    }
+
     /// Stamp one cluster's owner into the active volume. Returns the
     /// metadata bytes written (0 if the entry was already correct).
     fn stamp_cluster(&mut self, chain: &Chain, vc: u64) -> Result<u64> {

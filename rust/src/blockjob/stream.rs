@@ -40,6 +40,21 @@ impl LiveStreamJob {
         }
     }
 
+    /// Resume an interrupted stream from a checkpointed cursor. Copies
+    /// are idempotent (they duplicate, never replace, data), so any
+    /// checkpoint at or before the real progress is safe — clusters
+    /// already pulled are skipped as already-local.
+    pub fn resume_at(chain: &Chain, fence: Arc<JobFence>, cursor: u64) -> LiveStreamJob {
+        let mut job = LiveStreamJob::new(chain, fence);
+        job.cursor = cursor.min(job.total);
+        job
+    }
+
+    /// Clusters examined so far — the checkpoint a journal persists.
+    pub fn cursor(&self) -> u64 {
+        self.cursor
+    }
+
     /// Copy `vc`'s newest backing version into the active volume, if any.
     /// Returns the bytes copied (0 when the cluster needs no work).
     fn pull_cluster(&mut self, chain: &Chain, vc: u64) -> Result<u64> {

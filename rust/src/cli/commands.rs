@@ -128,8 +128,61 @@ fn journal_append(
         .append(true)
         .open(journal_path(dir))?;
     writeln!(f, "{id} {} {state} {processed}/{total} {copied}", kind.name())?;
+    // the journal is the job's crash-recovery record: a checkpoint that
+    // is not on stable storage is a checkpoint that never happened
+    f.sync_all()?;
     Ok(())
 }
+
+/// A journal line is well-formed when it carries all five fields and a
+/// parsable progress fraction — anything else (typically the torn tail
+/// of a crashed append) is skipped, never fatal.
+fn journal_parse(line: &str) -> Option<(&str, &str, &str, u64, u64, u64)> {
+    let f: Vec<&str> = line.split_whitespace().collect();
+    if f.len() < 5 {
+        return None;
+    }
+    let (processed, total) = f[3].split_once('/')?;
+    Some((
+        f[0],
+        f[1],
+        f[2],
+        processed.parse().ok()?,
+        total.parse().ok()?,
+        f[4].parse().ok()?,
+    ))
+}
+
+/// The cluster cursor a crashed/cancelled job of this id can resume
+/// from: its last durably journalled progress (0 when the journal knows
+/// nothing useful, e.g. the job completed).
+fn journal_resume_point(dir: &str, id: &str, kind: JobKind) -> Result<u64> {
+    let content = std::fs::read_to_string(journal_path(dir)).unwrap_or_default();
+    let mut cursor = None;
+    for line in content.lines() {
+        let Some((lid, lkind, state, processed, _total, _copied)) =
+            journal_parse(line)
+        else {
+            continue; // torn line: the progress it recorded is lost
+        };
+        if lid != id {
+            continue;
+        }
+        if lkind != kind.name() {
+            bail!("journal has job '{id}' as kind '{lkind}', not '{}'", kind.name());
+        }
+        cursor = match state {
+            "completed" => Some(0),
+            _ => Some(processed),
+        };
+    }
+    Ok(cursor.unwrap_or(0))
+}
+
+/// Durably checkpoint a running job: the image state the checkpoint
+/// describes is flushed BEFORE the journal line that claims it (the
+/// same data-before-mapping ordering the format itself uses).
+const CHECKPOINT_EVERY_INCREMENTS: u64 = 32;
 
 fn job_start(args: &Args) -> Result<()> {
     let s = store(args)?;
@@ -145,23 +198,42 @@ fn job_start(args: &Args) -> Result<()> {
         .map(str::to_string)
         .unwrap_or_else(|| format!("job-{}", std::process::id()));
 
+    let resume_from = if args.bool("resume") {
+        journal_resume_point(&dir, &id, kind)?
+    } else {
+        0
+    };
+
     let mut chain = Chain::open(&s, active, DataMode::Real)?;
     let cluster = chain.active().geom().cluster_size();
     let fence = std::sync::Arc::new(JobFence::default());
     fence.begin();
     let mut job: Box<dyn BlockJob> = match kind {
-        JobKind::Stream => Box::new(LiveStreamJob::new(&chain, std::sync::Arc::clone(&fence))),
-        JobKind::Stamp => Box::new(LiveStampJob::new(&chain, std::sync::Arc::clone(&fence))),
+        JobKind::Stream => Box::new(LiveStreamJob::resume_at(
+            &chain,
+            std::sync::Arc::clone(&fence),
+            resume_from,
+        )),
+        JobKind::Stamp => Box::new(LiveStampJob::resume_at(
+            &chain,
+            std::sync::Arc::clone(&fence),
+            resume_from,
+        )),
         JobKind::Gc => bail!("garbage collection runs via `sqemu gc run`, not `job start`"),
     };
     let total = job.total_clusters();
     let len_before = chain.len();
-    journal_append(&dir, &id, kind, "running", 0, total, 0)?;
+    journal_append(&dir, &id, kind, "running", resume_from, total, 0)?;
     println!(
         "job '{id}': {} over '{active}' ({total} clusters, chain length \
-         {len_before}, rate {})",
+         {len_before}, rate {}{})",
         kind.name(),
         if rate == 0 { "unlimited".to_string() } else { format!("{}/s", human_bytes(rate)) },
+        if resume_from > 0 {
+            format!(", resumed at cluster {resume_from}")
+        } else {
+            String::new()
+        },
     );
 
     let t0 = std::time::Instant::now();
@@ -171,10 +243,15 @@ fn job_start(args: &Args) -> Result<()> {
     // a marker left over from cancelling an already-finished job (or a
     // recycled default id) must not kill this fresh job
     let _ = std::fs::remove_file(&marker);
-    let (mut processed, mut copied) = (0u64, 0u64);
+    let (mut processed, mut copied) = (resume_from, 0u64);
+    let mut increments = 0u64;
     loop {
         if marker.exists() {
             let _ = std::fs::remove_file(&marker);
+            // same ordering as a checkpoint: the image state this line
+            // claims must be durable before the line exists, or a later
+            // `--resume` could skip past copies a power cut destroyed
+            chain.active().flush()?;
             journal_append(&dir, &id, kind, "cancelled", processed, total, copied)?;
             println!("job '{id}' cancelled at {processed}/{total} clusters");
             return Ok(());
@@ -187,9 +264,16 @@ fn job_start(args: &Args) -> Result<()> {
         let inc = job.run_increment(&mut chain, increment)?;
         processed += inc.processed;
         copied += inc.copied;
+        increments += 1;
         limiter.consume(inc.bytes, now_ns(&t0));
         if inc.complete {
             break;
+        }
+        if increments % CHECKPOINT_EVERY_INCREMENTS == 0 {
+            // image state first, then the journal line that claims it:
+            // a crash between the two resumes a little early, never late
+            chain.active().flush()?;
+            journal_append(&dir, &id, kind, "checkpoint", processed, total, copied)?;
         }
     }
     job.finalize(&mut chain)?;
@@ -231,25 +315,41 @@ fn job_list(args: &Args) -> Result<()> {
             return Ok(());
         }
     };
-    // latest journal line per job id, in first-seen order
+    // latest WELL-FORMED journal line per job id, in first-seen order: a
+    // torn trailing line (the crashed append of a dead job) is skipped
+    // instead of shadowing the job's last good state or failing the list
     let mut order: Vec<&str> = Vec::new();
-    let mut latest: std::collections::BTreeMap<&str, &str> = Default::default();
+    let mut latest: std::collections::BTreeMap<&str, (&str, &str, u64, u64, u64)> =
+        Default::default();
+    let mut torn = 0usize;
     for line in content.lines() {
-        let Some(id) = line.split_whitespace().next() else { continue };
+        if line.trim().is_empty() {
+            continue;
+        }
+        let Some((id, kind, state, processed, total, copied)) = journal_parse(line)
+        else {
+            torn += 1;
+            continue;
+        };
         if !latest.contains_key(id) {
             order.push(id);
         }
-        latest.insert(id, line);
+        latest.insert(id, (kind, state, processed, total, copied));
     }
     println!("{:<16} {:<8} {:<10} {:>14} {:>8}", "ID", "KIND", "STATE", "PROGRESS", "COPIED");
     for id in order {
-        let fields: Vec<&str> = latest[id].split_whitespace().collect();
-        if fields.len() >= 5 {
-            println!(
-                "{:<16} {:<8} {:<10} {:>14} {:>8}",
-                fields[0], fields[1], fields[2], fields[3], fields[4]
-            );
-        }
+        let (kind, state, processed, total, copied) = latest[id];
+        println!(
+            "{:<16} {:<8} {:<10} {:>14} {:>8}",
+            id,
+            kind,
+            state,
+            format!("{processed}/{total}"),
+            copied
+        );
+    }
+    if torn > 0 {
+        eprintln!("(skipped {torn} torn journal line(s) from an interrupted append)");
     }
     Ok(())
 }
@@ -370,6 +470,26 @@ pub fn check(args: &Args) -> Result<()> {
     let s = store(args)?;
     let active = args.require("active")?;
     let chain = Chain::open(&s, active, DataMode::Real)?;
+    if args.bool("repair") {
+        let rep = qcheck::repair_chain(&chain)?;
+        if rep.changed() {
+            println!(
+                "repair: {} L1 pointer(s) cleared, {} dangling mapping(s) \
+                 cleared, {} stamp(s) fixed, {} reftable slot(s) cleared, \
+                 {} refcount(s) rewritten ({} leaked cluster(s) reclaimed), \
+                 {} orphaned tail cluster(s) truncated",
+                rep.l1_cleared,
+                rep.entries_cleared,
+                rep.stamps_fixed,
+                rep.reftable_cleared,
+                rep.refcounts_rewritten,
+                rep.leaks_reclaimed,
+                rep.tail_clusters_truncated,
+            );
+        } else {
+            println!("repair: nothing to fix");
+        }
+    }
     let report = qcheck::check_chain(&chain)?;
     println!(
         "chain '{active}': {} files, {} consistent clusters, {} leaked",
@@ -543,4 +663,45 @@ fn fxhash(bytes: &[u8]) -> u64 {
         h = h.wrapping_mul(0x100000001b3);
     }
     h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn journal_parser_accepts_wellformed_rejects_torn() {
+        let parsed = journal_parse("job-1 stream running 5/10 3").unwrap();
+        assert_eq!(parsed, ("job-1", "stream", "running", 5, 10, 3));
+        // the torn tail of a crashed append, in various stages of loss
+        assert!(journal_parse("job-1 stream running 5/10").is_none());
+        assert!(journal_parse("job-1 stream runn").is_none());
+        assert!(journal_parse("job-1 stream running 5x10 3").is_none());
+        assert!(journal_parse("job-1 stream running a/10 3").is_none());
+        assert!(journal_parse("").is_none());
+    }
+
+    #[test]
+    fn resume_point_uses_last_wellformed_checkpoint() {
+        let dir = std::env::temp_dir().join(format!(
+            "sqemu-journal-test-{}",
+            std::process::id()
+        ));
+        std::fs::create_dir_all(&dir).unwrap();
+        let d = dir.to_str().unwrap();
+        std::fs::write(
+            journal_path(d),
+            "job-1 stream running 0/64 0\n\
+             job-1 stream checkpoint 32/64 20\n\
+             job-1 stream chec",
+        )
+        .unwrap();
+        // the torn trailing line is ignored; the durable checkpoint wins
+        assert_eq!(journal_resume_point(d, "job-1", JobKind::Stream).unwrap(), 32);
+        // unknown job: start from scratch
+        assert_eq!(journal_resume_point(d, "job-2", JobKind::Stream).unwrap(), 0);
+        // kind mismatch is an operator error, not a silent restart
+        assert!(journal_resume_point(d, "job-1", JobKind::Stamp).is_err());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
 }

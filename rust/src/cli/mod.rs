@@ -8,13 +8,13 @@
 //! sqemu snapshot --dir D --active N --new M
 //! sqemu convert --dir D --active N            # stamp a vanilla chain
 //! sqemu stream  --dir D --active N --from I --to J
-//! sqemu job start --dir D --active N --kind stream|stamp [--rate 64M]
+//! sqemu job start --dir D --active N --kind stream|stamp [--rate 64M] [--resume]
 //! sqemu job list --dir D                      # job journal
 //! sqemu job cancel --dir D --id J             # cooperative cancel
 //! sqemu gc run --dir D --active A[,B,...] [--dry-run]
 //! sqemu gc status --dir D --active A[,B,...]  # leak audit, deletes nothing
 //! sqemu info    --dir D --name N
-//! sqemu check   --dir D --active N
+//! sqemu check   --dir D --active N [--repair] # verify; --repair recovers
 //! sqemu characterize [--chains N]             # §3 figures
 //! sqemu serve   [--vms N] [--chain L]         # coordinator demo
 //! sqemu bench   [--json [path]]               # CI perf smoke artifact
@@ -78,13 +78,13 @@ fn print_usage() {
          \x20 convert  --dir D --active N\n\
          \x20 stream   --dir D --active N --from I --to J\n\
          \x20 job start --dir D --active N --kind stream|stamp [--rate 64M] \
-         [--increment 32] [--id J]\n\
+         [--increment 32] [--id J] [--resume]\n\
          \x20 job list --dir D\n\
          \x20 job cancel --dir D --id J\n\
          \x20 gc run    --dir D --active A[,B,...] [--dry-run]\n\
          \x20 gc status --dir D --active A[,B,...]\n\
          \x20 info     --dir D --name N\n\
-         \x20 check    --dir D --active N\n\
+         \x20 check    --dir D --active N [--repair]\n\
          \n\
          study & demo:\n\
          \x20 characterize [--chains N] [--days N]\n\

@@ -41,5 +41,6 @@ pub mod streaming;
 pub use batcher::BulkTranslator;
 pub use placement::NodeSet;
 pub use server::{
-    BatchOp, BatchReply, Coordinator, CoordinatorConfig, JobSpec, VmClient, VmConfig,
+    BatchOp, BatchReply, Coordinator, CoordinatorConfig, JobSpec, RecoveryReport,
+    VmClient, VmConfig,
 };

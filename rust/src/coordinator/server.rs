@@ -37,8 +37,9 @@ use crate::metrics::clock::{CostModel, VirtClock};
 use crate::metrics::counters::CounterSnapshot;
 use crate::metrics::memory::MemoryAccountant;
 use crate::qcow::image::DataMode;
-use crate::qcow::{snapshot, Chain};
+use crate::qcow::{qcheck, snapshot, Chain};
 use crate::runtime::service::RuntimeService;
+use crate::util::lock_unpoisoned;
 use crate::vdisk::scalable::ScalableDriver;
 use crate::vdisk::vanilla::VanillaDriver;
 use crate::vdisk::{Driver, DriverKind};
@@ -113,6 +114,23 @@ impl JobSpec {
         self.start_paused = true;
         self
     }
+}
+
+/// Outcome of [`Coordinator::recover`]: the crash-recovery sweep a node
+/// runs over its images before admitting guest I/O.
+#[derive(Clone, Debug, Default)]
+pub struct RecoveryReport {
+    /// Image files found and checked.
+    pub images_checked: u64,
+    /// Images `qcheck --repair` had to change.
+    pub images_repaired: u64,
+    /// Chain heads walked for cross-file validation.
+    pub chains_checked: u64,
+    /// Chains that needed a chain-level repair pass.
+    pub chains_repaired: u64,
+    /// Files that would not open/repair (orphans of interrupted creates,
+    /// foreign files) with the reason — GC's business, not a hard error.
+    pub unopenable: Vec<String>,
 }
 
 /// One operation of a batched guest submission ([`VmClient::submit`]).
@@ -261,21 +279,67 @@ impl Coordinator {
     }
 
     /// Launch a VM: open/generate its chain and start its worker thread.
+    ///
+    /// The fleet map is NOT held while the chain is opened or generated:
+    /// chain construction is heavy and fallible, and holding the map
+    /// across it both serialized launches and (worse) poisoned the whole
+    /// fleet if construction panicked — one bad launch killed
+    /// stats/list/launch for every other VM.
     pub fn launch_vm(self: &Arc<Self>, name: &str, cfg: VmConfig) -> Result<VmClient> {
-        let mut vms = self.vms.lock().unwrap();
-        if vms.contains_key(name) {
+        if lock_unpoisoned(&self.vms).contains_key(name) {
             bail!("vm '{name}' already running");
         }
         let (chain, data_mode) = match &cfg.chain {
-            VmChain::Existing { active_name, data_mode } => (
-                Chain::open(self.nodes.as_ref(), active_name, *data_mode)?,
-                *data_mode,
-            ),
+            VmChain::Existing { active_name, data_mode } => {
+                let chain =
+                    Chain::open(self.nodes.as_ref(), active_name, *data_mode)?;
+                // Recovery gate: a pre-existing Real chain may be the
+                // survivor of a crash — it must pass (or be repaired to
+                // pass) qcheck before guest I/O is admitted. Leaks count
+                // too: a crash in the sanctioned refcount-before-
+                // reference window leaves a leak-only chain (is_clean()
+                // but leaked > 0) that only repair ever reclaims.
+                // Synthetic chains are simulation fixtures, not crash
+                // survivors — skip the walk (it would also charge the
+                // shared node clock before the benchmark starts).
+                if *data_mode == DataMode::Real {
+                    let report = qcheck::check_chain(&chain)?;
+                    if !report.is_clean() || report.leaked_clusters != 0 {
+                        // repair mutates image files in place; a file
+                        // shared with a *running* chain (GC refcount
+                        // held by another VM) must not be rewritten
+                        // under concurrent readers — that needs the
+                        // quiesced startup pass instead
+                        if chain.file_names().iter().any(|f| self.gc.refcount(f) > 0)
+                        {
+                            bail!(
+                                "chain '{active_name}' needs repair but shares \
+                                 files with running chains; quiesce the fleet \
+                                 and run Coordinator::recover()"
+                            );
+                        }
+                        qcheck::repair_chain(&chain)?;
+                        let after = qcheck::check_chain(&chain)?;
+                        if !after.is_clean() || after.leaked_clusters != 0 {
+                            bail!(
+                                "chain '{active_name}' unrecoverable: {} leaks, {}",
+                                after.leaked_clusters,
+                                after.errors.join("; ")
+                            );
+                        }
+                    }
+                }
+                (chain, *data_mode)
+            }
             VmChain::Generate(spec) => (
                 crate::chaingen::generate(self.nodes.as_ref(), spec)?,
                 spec.data_mode,
             ),
         };
+        let mut vms = lock_unpoisoned(&self.vms);
+        if vms.contains_key(name) {
+            bail!("vm '{name}' already running");
+        }
         // the chain's files are now referenced by this VM's chain (GC
         // refcounts; shared bases gain one reference per chain)
         self.gc.sync_chain(name, chain.file_names());
@@ -289,7 +353,25 @@ impl Coordinator {
         let join = std::thread::Builder::new()
             .name(format!("vm-{name}"))
             .spawn(move || {
-                worker_loop(vm_name, driver, rx, worker_stats, worker_clock, worker_gc)
+                // contain panics to this VM: the worker dies (its clients
+                // see "vm worker gone"), the fleet does not. The shared
+                // locks it might have held recover via lock_unpoisoned.
+                let panic_stats = Arc::clone(&worker_stats);
+                let caught = std::panic::catch_unwind(std::panic::AssertUnwindSafe(
+                    move || {
+                        worker_loop(
+                            vm_name,
+                            driver,
+                            rx,
+                            worker_stats,
+                            worker_clock,
+                            worker_gc,
+                        )
+                    },
+                ));
+                if caught.is_err() {
+                    panic_stats.worker_panics.fetch_add(1, Relaxed);
+                }
             })
             .expect("spawn vm worker");
         vms.insert(
@@ -308,19 +390,19 @@ impl Coordinator {
 
     /// Get a fresh client handle for a running VM.
     pub fn client(&self, name: &str) -> Result<VmClient> {
-        let vms = self.vms.lock().unwrap();
+        let vms = lock_unpoisoned(&self.vms);
         let h = vms.get(name).ok_or_else(|| anyhow!("no vm '{name}'"))?;
         Ok(VmClient { tx: h.tx.clone(), clock: Arc::clone(&self.clock) })
     }
 
     pub fn vm_stats(&self, name: &str) -> Result<VmStatsSnapshot> {
-        let vms = self.vms.lock().unwrap();
+        let vms = lock_unpoisoned(&self.vms);
         let h = vms.get(name).ok_or_else(|| anyhow!("no vm '{name}'"))?;
         Ok(h.stats.snapshot())
     }
 
     pub fn vm_names(&self) -> Vec<String> {
-        let mut v: Vec<String> = self.vms.lock().unwrap().keys().cloned().collect();
+        let mut v: Vec<String> = lock_unpoisoned(&self.vms).keys().cloned().collect();
         v.sort();
         v
     }
@@ -347,7 +429,7 @@ impl Coordinator {
     /// worker onto the lengthened chain.
     pub fn snapshot_vm(self: &Arc<Self>, name: &str, new_file: &str) -> Result<u64> {
         let (kind, stats) = {
-            let vms = self.vms.lock().unwrap();
+            let vms = lock_unpoisoned(&self.vms);
             let h = vms.get(name).ok_or_else(|| anyhow!("no vm '{name}'"))?;
             (h.driver_kind, Arc::clone(&h.stats))
         };
@@ -375,7 +457,7 @@ impl Coordinator {
     /// offline baseline; [`Coordinator::start_job`] is the live path).
     pub fn stream_vm(self: &Arc<Self>, name: &str, from: u16, to: u16) -> Result<StreamReport> {
         let stats = {
-            let vms = self.vms.lock().unwrap();
+            let vms = lock_unpoisoned(&self.vms);
             let h = vms.get(name).ok_or_else(|| anyhow!("no vm '{name}'"))?;
             Arc::clone(&h.stats)
         };
@@ -433,7 +515,7 @@ impl Coordinator {
         })?;
         let reservation = self.scheduler.admit(&node, spec.rate_bps)?;
         let id = {
-            let mut n = self.next_job_id.lock().unwrap();
+            let mut n = lock_unpoisoned(&self.next_job_id);
             *n += 1;
             format!("job-{}", *n)
         };
@@ -459,13 +541,13 @@ impl Coordinator {
             return Err(e);
         }
         let stats = {
-            let vms = self.vms.lock().unwrap();
+            let vms = lock_unpoisoned(&self.vms);
             vms.get(vm).map(|h| Arc::clone(&h.stats))
         };
         if let Some(stats) = stats {
             stats.jobs_started.fetch_add(1, Relaxed);
         }
-        self.jobs.lock().unwrap().push(JobEntry {
+        lock_unpoisoned(&self.jobs).push(JobEntry {
             vm: vm.to_string(),
             shared: Arc::clone(&shared),
             reservation: Some(reservation),
@@ -498,7 +580,7 @@ impl Coordinator {
 
     /// Request cooperative cancellation of a job.
     pub fn cancel_job(&self, id: &str) -> Result<()> {
-        let jobs = self.jobs.lock().unwrap();
+        let jobs = lock_unpoisoned(&self.jobs);
         let e = jobs
             .iter()
             .find(|e| e.shared.id == id)
@@ -508,7 +590,7 @@ impl Coordinator {
     }
 
     pub fn pause_job(&self, id: &str) -> Result<()> {
-        let jobs = self.jobs.lock().unwrap();
+        let jobs = lock_unpoisoned(&self.jobs);
         let e = jobs
             .iter()
             .find(|e| e.shared.id == id)
@@ -518,7 +600,7 @@ impl Coordinator {
     }
 
     pub fn resume_job(&self, id: &str) -> Result<()> {
-        let jobs = self.jobs.lock().unwrap();
+        let jobs = lock_unpoisoned(&self.jobs);
         let e = jobs
             .iter()
             .find(|e| e.shared.id == id)
@@ -570,12 +652,12 @@ impl Coordinator {
             }
         }
         let id = {
-            let mut n = self.next_job_id.lock().unwrap();
+            let mut n = lock_unpoisoned(&self.next_job_id);
             *n += 1;
             format!("job-{}", *n)
         };
         let shared = Arc::new(JobShared::new(&id, JobKind::Gc, rate_bps));
-        self.jobs.lock().unwrap().push(JobEntry {
+        lock_unpoisoned(&self.jobs).push(JobEntry {
             vm: "(gc)".to_string(),
             shared: Arc::clone(&shared),
             reservation: None,
@@ -627,7 +709,7 @@ impl Coordinator {
         // share stays fleet-level in the registry totals)
         let by_origin = self.gc.drain_reclaimed_by();
         {
-            let vms = self.vms.lock().unwrap();
+            let vms = lock_unpoisoned(&self.vms);
             for (origin, bytes) in by_origin {
                 if let Some(h) = vms.get(&origin) {
                     h.stats.reclaimed_bytes.fetch_add(bytes, Relaxed);
@@ -656,9 +738,72 @@ impl Coordinator {
         Ok(())
     }
 
+    /// Crash-recovery pass over every image on this coordinator's
+    /// nodes: each file that parses as an image gets `qcheck --repair`
+    /// if dirty, then every chain head (an image no other image backs
+    /// onto) is re-checked as a chain so cross-file stamps are validated
+    /// too. Run at node startup, BEFORE launching VMs — the images must
+    /// not be concurrently open ([`Coordinator::launch_vm`] additionally
+    /// gates each `Existing` chain on a clean check at launch).
+    pub fn recover(&self) -> RecoveryReport {
+        let mut report = RecoveryReport::default();
+        let mut backed: std::collections::HashSet<String> =
+            std::collections::HashSet::new();
+        let mut images: Vec<String> = Vec::new();
+        for node in self.nodes.nodes() {
+            for name in node.file_names() {
+                let opened = node
+                    .open_file(&name)
+                    .and_then(|b| crate::qcow::Image::open(&name, b, DataMode::Real));
+                let img = match opened {
+                    Ok(img) => img,
+                    Err(e) => {
+                        report.unopenable.push(format!("{name}: {e:#}"));
+                        continue;
+                    }
+                };
+                report.images_checked += 1;
+                if let Some(b) = img.backing_name() {
+                    backed.insert(b);
+                }
+                images.push(name.clone());
+                match qcheck::check_image(&img) {
+                    Ok(r) if r.is_clean() && r.leaked_clusters == 0 => {}
+                    _ => match qcheck::repair_image(&img) {
+                        Ok(rep) if rep.changed() => report.images_repaired += 1,
+                        Ok(_) => {}
+                        Err(e) => {
+                            report.unopenable.push(format!("{name}: repair: {e:#}"))
+                        }
+                    },
+                }
+            }
+        }
+        for head in images.iter().filter(|n| !backed.contains(*n)) {
+            report.chains_checked += 1;
+            let recovered = Chain::open(self.nodes.as_ref(), head, DataMode::Real)
+                .and_then(|chain| {
+                    let before = qcheck::check_chain(&chain)?;
+                    if !before.is_clean() {
+                        qcheck::repair_chain(&chain)?;
+                        report.chains_repaired += 1;
+                        let after = qcheck::check_chain(&chain)?;
+                        if !after.is_clean() {
+                            bail!("still dirty: {}", after.errors.join("; "));
+                        }
+                    }
+                    Ok(())
+                });
+            if let Err(e) = recovered {
+                report.unopenable.push(format!("chain {head}: {e:#}"));
+            }
+        }
+        report
+    }
+
     /// Release bandwidth reservations of terminal jobs (lazy reaping).
     fn reap_jobs(&self) {
-        let mut jobs = self.jobs.lock().unwrap();
+        let mut jobs = lock_unpoisoned(&self.jobs);
         for e in jobs.iter_mut() {
             if e.shared.state().is_terminal() {
                 if let Some(r) = e.reservation.take() {
@@ -670,7 +815,7 @@ impl Coordinator {
 
     /// Stop one VM (flushes its caches; cancels any running job).
     pub fn stop_vm(&self, name: &str) -> Result<()> {
-        let mut vms = self.vms.lock().unwrap();
+        let mut vms = lock_unpoisoned(&self.vms);
         let mut h = vms.remove(name).ok_or_else(|| anyhow!("no vm '{name}'"))?;
         let _ = h.tx.send(Request::Stop);
         if let Some(j) = h.join.take() {
@@ -690,7 +835,7 @@ impl Coordinator {
     }
 
     pub fn data_mode_of(&self, name: &str) -> Result<DataMode> {
-        let vms = self.vms.lock().unwrap();
+        let vms = lock_unpoisoned(&self.vms);
         Ok(vms
             .get(name)
             .ok_or_else(|| anyhow!("no vm '{name}'"))?
@@ -698,14 +843,14 @@ impl Coordinator {
     }
 
     pub fn cache_of(&self, name: &str) -> Result<CacheConfig> {
-        let vms = self.vms.lock().unwrap();
+        let vms = lock_unpoisoned(&self.vms);
         Ok(vms.get(name).ok_or_else(|| anyhow!("no vm '{name}'"))?.cache)
     }
 }
 
 impl Drop for Coordinator {
     fn drop(&mut self) {
-        let names: Vec<String> = self.vms.lock().unwrap().keys().cloned().collect();
+        let names: Vec<String> = lock_unpoisoned(&self.vms).keys().cloned().collect();
         for n in names {
             let _ = self.stop_vm(&n);
         }

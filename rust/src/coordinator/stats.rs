@@ -1,6 +1,7 @@
 //! Per-VM and fleet-level service statistics.
 
 use crate::metrics::histogram::Histogram;
+use crate::util::lock_unpoisoned;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 
@@ -34,6 +35,9 @@ pub struct VmStats {
     /// every batched request.
     pub merged_ios: AtomicU64,
     pub coalesced_bytes: AtomicU64,
+    /// Worker threads of this VM that died panicking: the VM is dead
+    /// (its clients see "vm worker gone") but the fleet lives on.
+    pub worker_panics: AtomicU64,
     /// Guest-visible request latency (enqueue → reply) in virtual ns —
     /// the number a live job must keep flat while it drains the chain.
     pub req_latency: Mutex<Histogram>,
@@ -41,11 +45,11 @@ pub struct VmStats {
 
 impl VmStats {
     pub fn record_latency(&self, ns: u64) {
-        self.req_latency.lock().unwrap().record(ns);
+        lock_unpoisoned(&self.req_latency).record(ns);
     }
 
     pub fn snapshot(&self) -> VmStatsSnapshot {
-        let lat = self.req_latency.lock().unwrap();
+        let lat = lock_unpoisoned(&self.req_latency);
         VmStatsSnapshot {
             reads: self.reads.load(Ordering::Relaxed),
             writes: self.writes.load(Ordering::Relaxed),
@@ -65,6 +69,7 @@ impl VmStats {
             batched_ops: self.batched_ops.load(Ordering::Relaxed),
             merged_ios: self.merged_ios.load(Ordering::Relaxed),
             coalesced_bytes: self.coalesced_bytes.load(Ordering::Relaxed),
+            worker_panics: self.worker_panics.load(Ordering::Relaxed),
             req_count: lat.count(),
             req_mean_ns: lat.mean() as u64,
             req_p50_ns: lat.quantile(0.50),
@@ -94,6 +99,7 @@ pub struct VmStatsSnapshot {
     pub batched_ops: u64,
     pub merged_ios: u64,
     pub coalesced_bytes: u64,
+    pub worker_panics: u64,
     pub req_count: u64,
     pub req_mean_ns: u64,
     pub req_p50_ns: u64,
@@ -115,6 +121,21 @@ mod tests {
         assert_eq!(snap.bytes_read, 100);
         assert_eq!(snap.writes, 0);
         assert_eq!(snap.jobs_started, 0);
+    }
+
+    #[test]
+    fn snapshot_survives_a_poisoned_latency_lock() {
+        // regression (lock-poison cascade): a worker that panics while
+        // holding the histogram lock must not take vm_stats down with it
+        let s = VmStats::default();
+        s.record_latency(500);
+        let _ = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let _g = s.req_latency.lock().unwrap();
+            panic!("worker dies mid-record");
+        }));
+        s.record_latency(700);
+        let snap = s.snapshot();
+        assert_eq!(snap.req_count, 2, "stats keep working after the panic");
     }
 
     #[test]

@@ -7,7 +7,7 @@
 //! paths on top. Snapshot creation lives in [`crate::qcow::snapshot`].
 
 use super::entry::L2Entry;
-use super::layout::{Geometry, Header, ENTRY_SIZE, FEATURE_BFI};
+use super::layout::{Geometry, Header, ENTRY_SIZE, FEATURE_BFI, HEADER_SLOT_SIZE};
 use super::refcount::Allocator;
 use crate::storage::backend::{read_u64, write_u64, BackendRef};
 use anyhow::{bail, Context, Result};
@@ -45,6 +45,10 @@ pub struct Image {
     data_mode: DataMode,
     /// Seed for synthetic data generation (per-file, deterministic).
     seed: u64,
+    /// Generation of the on-disk header (see [`Header::slot_offset`]):
+    /// each rewrite bumps it and lands in the other slot, making header
+    /// updates old-valid-or-new-valid under any crash.
+    hdr_gen: AtomicU32,
 }
 
 impl Image {
@@ -63,10 +67,11 @@ impl Image {
             flags,
             chain_index,
             backing_name: backing_name.map(str::to_string),
+            generation: 0,
         };
         let enc = header.encode();
-        if enc.len() as u64 > geom.cluster_size() {
-            bail!("backing file name does not fit the header cluster");
+        if enc.len() > HEADER_SLOT_SIZE {
+            bail!("backing file name does not fit a header slot");
         }
         backend.write_at(&enc, 0)?;
         backend.truncate_to(geom.first_free_cluster() * geom.cluster_size())?;
@@ -75,6 +80,10 @@ impl Image {
         for c in 0..geom.first_free_cluster() {
             alloc_set_one(&mut alloc, &geom, backend.as_ref(), c)?;
         }
+        // barrier: the image must be fully formed before its creation is
+        // acknowledged (a crash before this point leaves an orphan file
+        // recovery can safely delete, never a half-valid image in a chain)
+        backend.flush()?;
         let l1 = vec![0u64; geom.l1_entries() as usize];
         Ok(Image {
             name: name.to_string(),
@@ -86,14 +95,16 @@ impl Image {
             alloc: Mutex::new(alloc),
             data_mode,
             seed: fxhash(name.as_bytes()),
+            hdr_gen: AtomicU32::new(0),
         })
     }
 
-    /// Open an existing image, loading the header and the L1 table.
+    /// Open an existing image, loading the header (newest valid slot)
+    /// and the L1 table.
     pub fn open(name: &str, backend: BackendRef, data_mode: DataMode) -> Result<Image> {
-        let mut hdr_buf = vec![0u8; 4096];
+        let mut hdr_buf = vec![0u8; 2 * HEADER_SLOT_SIZE];
         backend.read_at(&mut hdr_buf, 0)?;
-        let header = Header::decode(&hdr_buf).context("decode header")?;
+        let header = Header::decode_slots(&hdr_buf).context("decode header")?;
         let geom = header.geom;
         let mut l1_raw = vec![0u8; (geom.l1_entries() * ENTRY_SIZE) as usize];
         backend.read_at(&mut l1_raw, geom.l1_offset())?;
@@ -101,7 +112,7 @@ impl Image {
             .chunks_exact(8)
             .map(|c| u64::from_le_bytes(c.try_into().unwrap()))
             .collect();
-        let alloc = Allocator::from_file(&geom, backend.len());
+        let alloc = Allocator::from_file(&geom, backend.as_ref())?;
         Ok(Image {
             name: name.to_string(),
             backend,
@@ -112,6 +123,7 @@ impl Image {
             alloc: Mutex::new(alloc),
             data_mode,
             seed: fxhash(name.as_bytes()),
+            hdr_gen: AtomicU32::new(header.generation),
         })
     }
 
@@ -367,23 +379,61 @@ impl Image {
         self.write_header_locked(&link)
     }
 
-    /// Rewrite cluster 0 from the current in-RAM header state. The
-    /// caller holds the `link` lock, serializing header writers.
+    /// Rewrite the header from the current in-RAM state: write-new-then-
+    /// flip. The new revision (generation + 1, checksummed) goes to the
+    /// slot the current generation does NOT occupy, followed by a
+    /// durability barrier; the opener picks the newest valid slot, so a
+    /// crash anywhere in here leaves the header old-valid or new-valid,
+    /// never garbage. The caller holds the `link` lock, serializing
+    /// header writers.
     fn write_header_locked(&self, link: &(u16, Option<String>)) -> Result<()> {
+        let generation = self.hdr_gen.load(Ordering::Relaxed).wrapping_add(1);
         let header = Header {
             geom: self.geom,
             flags: self.flags(),
             chain_index: link.0,
             backing_name: link.1.clone(),
+            generation,
         };
         let enc = header.encode();
-        if enc.len() as u64 > self.geom.cluster_size() {
-            bail!("backing file name does not fit the header cluster");
+        if enc.len() > HEADER_SLOT_SIZE {
+            bail!("backing file name does not fit a header slot");
         }
-        // wipe the old name tail before writing the new header
-        let zeros = vec![0u8; 512];
-        self.backend.write_at(&zeros, 0)?;
-        self.backend.write_at(&enc, 0)
+        self.backend.write_at(&enc, Header::slot_offset(generation))?;
+        // the flip is durable before anything depends on the new header
+        self.backend.flush()?;
+        self.hdr_gen.store(generation, Ordering::Relaxed);
+        Ok(())
+    }
+
+    // --------------------------------------------------- crash recovery
+
+    /// Durability barrier on this image's file: everything written
+    /// before the call survives a crash once it returns (the drivers'
+    /// `flush` ends with this — the ack-vs-durable line of DESIGN.md §10).
+    pub fn flush(&self) -> Result<()> {
+        self.backend.flush()
+    }
+
+    /// Clear a dangling L1 pointer (repair only): zeroes the on-disk
+    /// entry and the RAM mirror together.
+    pub fn clear_l1_entry(&self, l1_idx: u64) -> Result<()> {
+        write_u64(
+            self.backend.as_ref(),
+            self.geom.l1_offset() + l1_idx * ENTRY_SIZE,
+            0,
+        )?;
+        self.l1.write().unwrap()[l1_idx as usize] = 0;
+        Ok(())
+    }
+
+    /// Rebuild the in-RAM allocator from the on-disk refcounts — after
+    /// `qcheck --repair` rewrote them, the bump pointer and free list
+    /// must reflect the repaired state, not the pre-repair scan.
+    pub fn reset_allocator(&self) -> Result<()> {
+        let rebuilt = Allocator::from_file(&self.geom, self.backend.as_ref())?;
+        *self.alloc.lock().unwrap() = rebuilt;
+        Ok(())
     }
 }
 

@@ -5,7 +5,17 @@ use anyhow::{bail, Result};
 
 /// Magic at offset 0: "SQRW" (SQemu ReWrite).
 pub const MAGIC: u32 = 0x5351_5257;
-pub const VERSION: u32 = 1;
+/// v2 added the crash-consistent header: a generation counter and a
+/// checksum, written alternately to one of two slots in cluster 0
+/// (write-new-then-flip — the generation IS the flip).
+pub const VERSION: u32 = 2;
+
+/// Each header revision occupies one fixed-size slot; slot A at offset 0,
+/// slot B at [`HEADER_SLOT_B`]. Both fit the minimum cluster (512 B), so
+/// the pair always lives inside cluster 0 regardless of geometry. A
+/// header (fixed fields + backing name) must fit one slot.
+pub const HEADER_SLOT_SIZE: usize = 256;
+pub const HEADER_SLOT_B: u64 = HEADER_SLOT_SIZE as u64;
 
 /// Header feature flag: L2 entries carry `backing_file_index` stamps
 /// (the §5.2 format extension). A vanilla driver ignores this flag.
@@ -112,6 +122,22 @@ pub struct Header {
     /// SQEMU driver can stamp entries it allocates.
     pub chain_index: u16,
     pub backing_name: Option<String>,
+    /// Monotonic revision counter: each header rewrite bumps it and
+    /// lands in the *other* slot, so a torn rewrite leaves the previous
+    /// revision untouched and the opener picks the newest valid slot.
+    pub generation: u32,
+}
+
+/// FNV-1a over the encoded header with the checksum field zeroed — the
+/// validity proof of one slot (a torn slot write fails it).
+fn header_checksum(buf: &[u8]) -> u32 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for (i, &b) in buf.iter().enumerate() {
+        let b = if (60..64).contains(&i) { 0 } else { b };
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0100_0000_01b3);
+    }
+    (h ^ (h >> 32)) as u32
 }
 
 impl Header {
@@ -130,7 +156,10 @@ impl Header {
         buf[48..52]
             .copy_from_slice(&(self.geom.reftable_clusters() as u32).to_le_bytes());
         buf[52..56].copy_from_slice(&(name.len() as u32).to_le_bytes());
+        buf[56..60].copy_from_slice(&self.generation.to_le_bytes());
         buf[HEADER_FIXED..].copy_from_slice(name.as_bytes());
+        let ck = header_checksum(&buf);
+        buf[60..64].copy_from_slice(&ck.to_le_bytes());
         buf
     }
 
@@ -144,7 +173,21 @@ impl Header {
             bail!("bad magic {:#x}", rd32(0));
         }
         if rd32(4) != VERSION {
-            bail!("unsupported version {}", rd32(4));
+            bail!(
+                "unsupported header version {} (v1 images predate the \
+                 crash-consistent checksummed header and are not readable \
+                 by this build)",
+                rd32(4)
+            );
+        }
+        let name_len = rd32(52) as usize;
+        if HEADER_FIXED + name_len > buf.len() {
+            bail!("backing name overruns header slot");
+        }
+        // the checksum covers the exact encoded bytes (fixed + name); a
+        // torn or stale slot fails here before anything is trusted
+        if header_checksum(&buf[..HEADER_FIXED + name_len]) != rd32(60) {
+            bail!("header checksum mismatch (torn or stale slot)");
         }
         let geom = Geometry::new(rd32(8), rd64(16))?;
         // sanity: stored derived fields must match the geometry
@@ -153,19 +196,45 @@ impl Header {
         }
         let flags = rd32(12);
         let chain_index = u16::from_le_bytes(buf[36..38].try_into().unwrap());
-        let name_len = rd32(52) as usize;
+        let generation = rd32(56);
         let backing_name = if name_len == 0 {
             None
         } else {
-            if HEADER_FIXED + name_len > buf.len() {
-                bail!("backing name overruns header cluster");
-            }
             Some(
                 std::str::from_utf8(&buf[HEADER_FIXED..HEADER_FIXED + name_len])?
                     .to_string(),
             )
         };
-        Ok(Header { geom, flags, chain_index, backing_name })
+        Ok(Header { geom, flags, chain_index, backing_name, generation })
+    }
+
+    /// Decode the newest valid header of a buffer holding both slots
+    /// (≥ 2 × [`HEADER_SLOT_SIZE`] bytes): each slot is validated
+    /// independently and the highest valid generation wins — the
+    /// read side of write-new-then-flip.
+    pub fn decode_slots(buf: &[u8]) -> Result<Header> {
+        if buf.len() < 2 * HEADER_SLOT_SIZE {
+            bail!("header region too short for both slots");
+        }
+        let a = Header::decode(&buf[..HEADER_SLOT_SIZE]);
+        let b = Header::decode(&buf[HEADER_SLOT_SIZE..2 * HEADER_SLOT_SIZE]);
+        match (a, b) {
+            (Ok(a), Ok(b)) => Ok(if b.generation > a.generation { b } else { a }),
+            (Ok(a), Err(_)) => Ok(a),
+            (Err(_), Ok(b)) => Ok(b),
+            (Err(ea), Err(_)) => Err(ea.context("no valid header slot")),
+        }
+    }
+
+    /// The slot byte offset a given generation is written to: even
+    /// generations live in slot A, odd in slot B, so consecutive
+    /// revisions never overwrite each other.
+    pub fn slot_offset(generation: u32) -> u64 {
+        if generation % 2 == 0 {
+            0
+        } else {
+            HEADER_SLOT_B
+        }
     }
 }
 
@@ -211,6 +280,7 @@ mod tests {
             flags: FEATURE_BFI,
             chain_index: 42,
             backing_name: Some("snap-41".into()),
+            generation: 7,
         };
         let enc = h.encode();
         let dec = Header::decode(&enc).unwrap();
@@ -224,6 +294,7 @@ mod tests {
             flags: 0,
             chain_index: 0,
             backing_name: None,
+            generation: 0,
         };
         assert_eq!(Header::decode(&h.encode()).unwrap(), h);
     }
@@ -236,10 +307,68 @@ mod tests {
             flags: 0,
             chain_index: 0,
             backing_name: None,
+            generation: 0,
         };
         let mut enc = h.encode();
         enc[24] ^= 0xff; // corrupt stored l1_offset
         assert!(Header::decode(&enc).is_err());
+    }
+
+    #[test]
+    fn checksum_catches_any_single_byte_tear() {
+        let h = Header {
+            geom: Geometry::new(16, 1 << 30).unwrap(),
+            flags: FEATURE_BFI,
+            chain_index: 3,
+            backing_name: Some("base".into()),
+            generation: 5,
+        };
+        let enc = h.encode();
+        for i in 0..enc.len() {
+            let mut torn = enc.clone();
+            torn[i] ^= 0x5A;
+            assert!(
+                Header::decode(&torn).is_err(),
+                "byte {i} corruption accepted"
+            );
+        }
+    }
+
+    #[test]
+    fn decode_slots_picks_newest_valid_generation() {
+        let geom = Geometry::new(16, 1 << 30).unwrap();
+        let old = Header {
+            geom,
+            flags: 0,
+            chain_index: 1,
+            backing_name: Some("old".into()),
+            generation: 4,
+        };
+        let new = Header {
+            geom,
+            flags: FEATURE_BFI,
+            chain_index: 1,
+            backing_name: Some("new".into()),
+            generation: 5,
+        };
+        let mut buf = vec![0u8; 2 * HEADER_SLOT_SIZE];
+        let (eo, en) = (old.encode(), new.encode());
+        buf[..eo.len()].copy_from_slice(&eo); // gen 4 -> slot A
+        buf[HEADER_SLOT_SIZE..HEADER_SLOT_SIZE + en.len()].copy_from_slice(&en);
+        assert_eq!(Header::decode_slots(&buf).unwrap(), new);
+        // tear the newer slot: the opener falls back to the old header
+        buf[HEADER_SLOT_SIZE + 20] ^= 0xFF;
+        assert_eq!(Header::decode_slots(&buf).unwrap(), old);
+        // both torn: unopenable, never garbage
+        buf[10] ^= 0xFF;
+        assert!(Header::decode_slots(&buf).is_err());
+    }
+
+    #[test]
+    fn slot_alternates_by_generation() {
+        assert_eq!(Header::slot_offset(0), 0);
+        assert_eq!(Header::slot_offset(1), HEADER_SLOT_B);
+        assert_eq!(Header::slot_offset(2), 0);
     }
 
     #[test]

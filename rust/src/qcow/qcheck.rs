@@ -1,10 +1,22 @@
-//! Image consistency checker — the `qemu-img check` analogue. Used by
-//! integration tests after every mutating operation sequence, and exposed
-//! through the CLI (`sqemu check`).
+//! Image consistency checker and repairer — the `qemu-img check
+//! [--repair]` analogue. Used by integration tests after every mutating
+//! operation sequence, exposed through the CLI (`sqemu check [--repair]`)
+//! and run by the coordinator's crash-recovery pass before a node's
+//! images serve guest I/O again.
+//!
+//! Repair relies on the metadata write-ordering rules of DESIGN.md §10
+//! (data before mapping, refcount before reference, header flips via
+//! checksummed double slot): under those rules the L1/L2 walk is always
+//! the ground truth after a crash, so refcounts can be rebuilt from it,
+//! dangling mappings cleared, and orphaned tail clusters truncated — the
+//! only state a crash can lose is data that was never acknowledged as
+//! flushed.
 
 use super::chain::Chain;
 use super::entry::L2Entry;
 use super::image::Image;
+use super::layout::ENTRY_SIZE;
+use crate::storage::backend::write_u64;
 use crate::util::div_ceil;
 use anyhow::Result;
 use std::collections::HashMap;
@@ -188,6 +200,288 @@ pub fn check_chain(chain: &Chain) -> Result<CheckReport> {
     Ok(total)
 }
 
+/// What one repair pass fixed (all zero on an already-clean image,
+/// except possibly a tail truncation of freed clusters).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct RepairReport {
+    /// Dangling L1 pointers (misaligned / beyond EOF) cleared.
+    pub l1_cleared: u64,
+    /// Dangling L2 mappings cleared (local beyond EOF, garbage offsets,
+    /// remote stamps that cannot be valid).
+    pub entries_cleared: u64,
+    /// Local entries whose `backing_file_index` stamp was rewritten to
+    /// the owning file's index (torn restamp passes).
+    pub stamps_fixed: u64,
+    /// Invalid refcount-table slots cleared.
+    pub reftable_cleared: u64,
+    /// Refcounts rewritten to match the L1/L2 walk.
+    pub refcounts_rewritten: u64,
+    /// Clusters that had a refcount but no reference (leaks reclaimed).
+    pub leaks_reclaimed: u64,
+    /// Orphaned clusters cut off the end of the file.
+    pub tail_clusters_truncated: u64,
+}
+
+impl RepairReport {
+    pub fn changed(&self) -> bool {
+        self.l1_cleared
+            + self.entries_cleared
+            + self.stamps_fixed
+            + self.reftable_cleared
+            + self.refcounts_rewritten
+            + self.leaks_reclaimed
+            + self.tail_clusters_truncated
+            > 0
+    }
+
+    fn absorb(&mut self, other: RepairReport) {
+        self.l1_cleared += other.l1_cleared;
+        self.entries_cleared += other.entries_cleared;
+        self.stamps_fixed += other.stamps_fixed;
+        self.reftable_cleared += other.reftable_cleared;
+        self.refcounts_rewritten += other.refcounts_rewritten;
+        self.leaks_reclaimed += other.leaks_reclaimed;
+        self.tail_clusters_truncated += other.tail_clusters_truncated;
+    }
+}
+
+/// Repair a single image in place so [`check_image`] passes clean:
+/// clear dangling table pointers, fix torn stamps, rebuild every
+/// refcount from the L1/L2 walk, truncate the orphaned tail, and
+/// rebuild the in-RAM allocator from the repaired state.
+pub fn repair_image(img: &Image) -> Result<RepairReport> {
+    let geom = *img.geom();
+    let cs = geom.cluster_size();
+    let own = img.chain_index();
+    let meta_end = geom.first_free_cluster() * cs;
+    let mut rep = RepairReport::default();
+    let file_len = img.file_len();
+
+    // 1. L1 pointers: a valid L2 table lives on a cluster boundary in
+    //    the allocatable region of this file.
+    for l1_idx in 0..geom.l1_entries() {
+        let l2_off = img.l1_entry(l1_idx);
+        if l2_off == 0 {
+            continue;
+        }
+        if l2_off % cs != 0 || l2_off >= file_len || l2_off < meta_end {
+            img.clear_l1_entry(l1_idx)?;
+            rep.l1_cleared += 1;
+        }
+    }
+
+    // 2. L2 entries: clear dangling local mappings (the data write that
+    //    should have preceded them is beyond EOF, so it never happened),
+    //    restamp local entries torn mid-restamp, clear impossible
+    //    remote stamps. The repaired tables are simultaneously the
+    //    ground truth for the refcount rebuild (one metadata pass, not
+    //    two): `expected` accumulates while each table is in memory.
+    let per_l2 = geom.entries_per_l2();
+    let per_block = geom.refcounts_per_block();
+    let mut expected: HashMap<u64, u16> = HashMap::new();
+    for c in 0..geom.first_free_cluster() {
+        expected.insert(c, 1);
+    }
+    for l1_idx in 0..geom.l1_entries() {
+        let l2_off = img.l1_entry(l1_idx);
+        if l2_off == 0 {
+            continue;
+        }
+        let mut entries = img.read_l2_slice(l2_off, 0, per_l2)?;
+        let mut dirty = false;
+        for raw in entries.iter_mut() {
+            let e = L2Entry(*raw);
+            if e.is_zero() {
+                continue;
+            }
+            let off = e.host_offset();
+            let out = if off % cs != 0 {
+                rep.entries_cleared += 1;
+                L2Entry::ZERO
+            } else if e.is_allocated_here() {
+                if off >= file_len || off < meta_end {
+                    rep.entries_cleared += 1;
+                    L2Entry::ZERO
+                } else {
+                    match e.bfi() {
+                        Some(b) if b != own => {
+                            rep.stamps_fixed += 1;
+                            L2Entry::local(off, Some(own))
+                        }
+                        _ => continue,
+                    }
+                }
+            } else {
+                match e.bfi() {
+                    Some(b) if b >= own => {
+                        rep.entries_cleared += 1;
+                        L2Entry::ZERO
+                    }
+                    _ => continue,
+                }
+            };
+            *raw = out.raw();
+            dirty = true;
+        }
+        if dirty {
+            img.write_l2_slice(l2_off, 0, &entries)?;
+        }
+        *expected.entry(l2_off / cs).or_default() += 1;
+        for raw in &entries {
+            let e = L2Entry(*raw);
+            if e.is_allocated_here() {
+                *expected.entry(e.host_offset() / cs).or_default() += 1;
+            }
+        }
+    }
+
+    // 3. Refcount table: drop slots that cannot point at a block.
+    let nslots = geom.reftable_clusters() * cs / ENTRY_SIZE;
+    let mut table = img.read_l2_slice(geom.reftable_offset(), 0, nslots)?;
+    for (slot_idx, slot) in table.iter_mut().enumerate() {
+        if *slot == 0 {
+            continue;
+        }
+        if *slot % cs != 0 || *slot >= file_len {
+            write_u64(
+                img.backend().as_ref(),
+                geom.reftable_offset() + slot_idx as u64 * ENTRY_SIZE,
+                0,
+            )?;
+            *slot = 0;
+            rep.reftable_cleared += 1;
+        }
+    }
+
+    // 4. The surviving refcount blocks are referenced by the table.
+    for &slot in table.iter().filter(|&&s| s != 0) {
+        *expected.entry(slot / cs).or_default() += 1;
+    }
+
+    // 5. Every expected cluster needs a covering refcount block. Under
+    //    the refcount-before-reference rule the block always exists;
+    //    if a cleared slot orphaned one, grow replacement blocks at the
+    //    end of the file (they join `expected` and are filled in 6).
+    let mut end_cluster = div_ceil(file_len, cs);
+    loop {
+        let missing: Vec<u64> = expected
+            .keys()
+            .map(|c| c / per_block)
+            .filter(|&bi| table.get(bi as usize) == Some(&0))
+            .collect();
+        if missing.is_empty() {
+            break;
+        }
+        let mut grown = false;
+        for block_idx in missing {
+            if table.get(block_idx as usize) != Some(&0) {
+                continue;
+            }
+            let block_off = end_cluster * cs;
+            img.backend().truncate_to(block_off + cs)?;
+            write_u64(
+                img.backend().as_ref(),
+                geom.reftable_offset() + block_idx * ENTRY_SIZE,
+                block_off,
+            )?;
+            table[block_idx as usize] = block_off;
+            expected.insert(end_cluster, 1);
+            end_cluster += 1;
+            grown = true;
+        }
+        if !grown {
+            break;
+        }
+    }
+
+    // 6. Rewrite refcounts wholesale from the expected map.
+    let mut block_buf = vec![0u8; cs as usize];
+    for (block_idx, &block_off) in table.iter().enumerate() {
+        if block_off == 0 {
+            continue;
+        }
+        img.backend().read_at(&mut block_buf, block_off)?;
+        let base = block_idx as u64 * per_block;
+        let mut dirty = false;
+        for i in 0..per_block {
+            let stored = u16::from_le_bytes(
+                block_buf[(i * 2) as usize..(i * 2 + 2) as usize]
+                    .try_into()
+                    .unwrap(),
+            );
+            let want = expected.get(&(base + i)).copied().unwrap_or(0);
+            if stored != want {
+                rep.refcounts_rewritten += 1;
+                if want == 0 && stored > 0 {
+                    rep.leaks_reclaimed += 1;
+                }
+                block_buf[(i * 2) as usize..(i * 2 + 2) as usize]
+                    .copy_from_slice(&want.to_le_bytes());
+                dirty = true;
+            }
+        }
+        if dirty {
+            img.backend().write_at(&block_buf, block_off)?;
+        }
+    }
+
+    // 7. Orphaned tail: nothing referenced lives past the last expected
+    //    cluster — give the space back.
+    let last_used = expected.keys().copied().max().unwrap_or(0);
+    let want_len = (last_used + 1) * cs;
+    let cur_len = img.file_len();
+    if cur_len > want_len {
+        let got = img.backend().shrink_to(want_len)?;
+        rep.tail_clusters_truncated = div_ceil(cur_len.saturating_sub(got), cs);
+    }
+
+    // 8. The allocator must see the repaired refcounts, not its scan of
+    //    the crashed state.
+    img.reset_allocator()?;
+    Ok(rep)
+}
+
+/// Repair a whole chain: every image individually, then clear remote
+/// stamps whose cross-file target no longer exists (the owner's repair
+/// may have truncated it). Re-run [`check_chain`] afterwards to verify.
+pub fn repair_chain(chain: &Chain) -> Result<RepairReport> {
+    let mut total = RepairReport::default();
+    for img in chain.images() {
+        total.absorb(repair_image(img)?);
+    }
+    for img in chain.images() {
+        let geom = *img.geom();
+        let per_l2 = geom.entries_per_l2();
+        for l1_idx in 0..geom.l1_entries() {
+            let l2_off = img.l1_entry(l1_idx);
+            if l2_off == 0 {
+                continue;
+            }
+            let mut entries = img.read_l2_slice(l2_off, 0, per_l2)?;
+            let mut dirty = false;
+            for raw in entries.iter_mut() {
+                let e = L2Entry(*raw);
+                let Some(bfi) = e.bfi() else { continue };
+                if e.is_allocated_here() {
+                    continue;
+                }
+                let valid = chain
+                    .get(bfi)
+                    .is_some_and(|owner| e.host_offset() < owner.file_len());
+                if !valid {
+                    *raw = L2Entry::ZERO.raw();
+                    dirty = true;
+                    total.entries_cleared += 1;
+                }
+            }
+            if dirty {
+                img.write_l2_slice(l2_off, 0, &entries)?;
+            }
+        }
+    }
+    Ok(total)
+}
+
 fn stored_refcount(img: &Image, cluster: u64) -> Result<u16> {
     let geom = *img.geom();
     let block_idx = cluster / geom.refcounts_per_block();
@@ -280,6 +574,97 @@ mod tests {
             .unwrap();
         let r = check_image(chain.active()).unwrap();
         assert!(!r.is_clean());
+    }
+
+    #[test]
+    fn repair_clears_dangling_mapping_and_reclaims_leak() {
+        let (_n, chain) = setup();
+        write_cluster(&chain, 0);
+        let img = chain.active();
+        // dangling mapping far beyond EOF: the ordered-write rules mean
+        // its data write never happened, so clearing it is lossless
+        img.set_l2_entry(9, L2Entry::local(1 << 40, Some(0))).unwrap();
+        // leaked cluster: refcounted, referenced by nothing
+        img.alloc_data_cluster().unwrap();
+        assert!(!check_image(img).unwrap().is_clean());
+        let rep = repair_image(img).unwrap();
+        assert!(rep.entries_cleared >= 1, "{rep:?}");
+        assert!(rep.leaks_reclaimed >= 1, "{rep:?}");
+        let after = check_image(img).unwrap();
+        assert!(after.is_clean(), "{:?}", after.errors);
+        assert_eq!(after.leaked_clusters, 0);
+        // the good mapping survived
+        assert!(img.l2_entry(0).unwrap().is_allocated_here());
+        assert_eq!(img.l2_entry(9).unwrap(), L2Entry::ZERO);
+    }
+
+    #[test]
+    fn repair_fixes_torn_stamp_without_losing_data() {
+        let (_n, chain) = setup();
+        write_cluster(&chain, 3);
+        let img = chain.active();
+        let off = img.l2_entry(3).unwrap().host_offset();
+        // a crash mid-restamp left a local entry with a foreign index
+        img.set_l2_entry(3, L2Entry::local(off, Some(7))).unwrap();
+        assert!(!check_image(img).unwrap().is_clean());
+        let rep = repair_image(img).unwrap();
+        assert_eq!(rep.stamps_fixed, 1, "{rep:?}");
+        assert!(check_image(img).unwrap().is_clean());
+        let e = img.l2_entry(3).unwrap();
+        assert_eq!(e.host_offset(), off, "data mapping preserved");
+        assert_eq!(e.bfi(), Some(0));
+        let mut buf = [0u8; 16];
+        img.read_data(off, 0, &mut buf).unwrap();
+        assert_eq!(buf, [7u8; 16]);
+    }
+
+    #[test]
+    fn repair_truncates_orphaned_tail() {
+        let (_n, chain) = setup();
+        write_cluster(&chain, 0);
+        let img = chain.active();
+        // orphaned tail: clusters allocated (refcount + truncate) whose
+        // mappings were lost in the crash
+        img.alloc_data_cluster().unwrap();
+        img.alloc_data_cluster().unwrap();
+        let before = img.file_len();
+        let rep = repair_image(img).unwrap();
+        assert_eq!(rep.tail_clusters_truncated, 2, "{rep:?}");
+        assert!(img.file_len() < before);
+        assert!(check_image(img).unwrap().is_clean());
+        // reclaimed space is handed out again (allocator rebuilt)
+        let off = img.alloc_data_cluster().unwrap();
+        assert!(off < before, "truncated tail is reusable");
+    }
+
+    #[test]
+    fn repair_chain_clears_dangling_cross_file_stamp() {
+        let (node, mut chain) = setup();
+        write_cluster(&chain, 0);
+        snapshot::snapshot_sqemu(&mut chain, &node, "img-1").unwrap();
+        // remote stamp pointing past the base's EOF
+        chain
+            .active()
+            .set_l2_entry(8, L2Entry::remote(1 << 40, 0))
+            .unwrap();
+        assert!(!check_chain(&chain).unwrap().is_clean());
+        let rep = repair_chain(&chain).unwrap();
+        assert!(rep.entries_cleared >= 1, "{rep:?}");
+        let after = check_chain(&chain).unwrap();
+        assert!(after.is_clean(), "{:?}", after.errors);
+        // the valid inherited stamp still resolves
+        assert_eq!(chain.active().l2_entry(0).unwrap().bfi(), Some(0));
+    }
+
+    #[test]
+    fn repair_is_a_noop_on_a_clean_image() {
+        let (_n, chain) = setup();
+        for vc in 0..5 {
+            write_cluster(&chain, vc);
+        }
+        let rep = repair_image(chain.active()).unwrap();
+        assert!(!rep.changed(), "{rep:?}");
+        assert!(check_image(chain.active()).unwrap().is_clean());
     }
 
     #[test]

@@ -23,14 +23,45 @@ impl Allocator {
         Allocator { next_fresh: geom.first_free_cluster(), free: Vec::new() }
     }
 
-    /// Rebuild allocator state from an existing file: the bump pointer is
-    /// the end of the file (freed-cluster reuse does not survive reopen).
-    pub fn from_file(geom: &Geometry, file_len: u64) -> Allocator {
-        let used = crate::util::div_ceil(file_len, geom.cluster_size());
-        Allocator {
-            next_fresh: used.max(geom.first_free_cluster()),
-            free: Vec::new(),
+    /// Rebuild allocator state from an existing file by scanning its
+    /// refcount blocks: the bump pointer stays conservatively at the end
+    /// of the file (clusters whose refcount update was lost in a crash
+    /// must never be handed out twice before repair), and every cluster
+    /// below it with a zero refcount goes back on the free list — so
+    /// clusters freed before a reopen are reusable instead of leaked
+    /// forever.
+    pub fn from_file(geom: &Geometry, backend: &dyn Backend) -> Result<Allocator> {
+        let cs = geom.cluster_size();
+        let file_len = backend.len();
+        let next_fresh =
+            crate::util::div_ceil(file_len, cs).max(geom.first_free_cluster());
+        let mut free = Vec::new();
+        // one read of the (small, preallocated) refcount table, then one
+        // read per allocated refcount block
+        let table_bytes = (geom.reftable_clusters() * cs) as usize;
+        let mut table = vec![0u8; table_bytes];
+        backend.read_at(&mut table, geom.reftable_offset())?;
+        let per_block = geom.refcounts_per_block();
+        let mut block = vec![0u8; cs as usize];
+        for (block_idx, slot) in table.chunks_exact(8).enumerate() {
+            let block_off = u64::from_le_bytes(slot.try_into().unwrap());
+            if block_off == 0 || block_off % cs != 0 || block_off >= file_len {
+                // absent (or corrupt — repair's business, not ours)
+                continue;
+            }
+            backend.read_at(&mut block, block_off)?;
+            let base = block_idx as u64 * per_block;
+            for (i, rc) in block.chunks_exact(2).enumerate() {
+                let cluster = base + i as u64;
+                if cluster < geom.first_free_cluster() || cluster >= next_fresh {
+                    continue;
+                }
+                if u16::from_le_bytes(rc.try_into().unwrap()) == 0 {
+                    free.push(cluster);
+                }
+            }
         }
+        Ok(Allocator { next_fresh, free })
     }
 
     /// Allocate one host cluster; returns its byte offset. Updates the
@@ -230,8 +261,32 @@ mod tests {
     fn reopen_state_is_safe() {
         let (geom, b, mut a) = setup();
         let o1 = a.alloc(&geom, &b).unwrap();
-        let mut a2 = Allocator::from_file(&geom, b.len());
+        let mut a2 = Allocator::from_file(&geom, &b).unwrap();
         let o2 = a2.alloc(&geom, &b).unwrap();
         assert!(o2 > o1, "fresh allocations never collide after reopen");
+    }
+
+    #[test]
+    fn freed_clusters_survive_reopen_as_reusable() {
+        // regression: the old bump-pointer-from-file-length rebuild
+        // leaked every cluster freed before a reopen, forever
+        let (geom, b, mut a) = setup();
+        let o1 = a.alloc(&geom, &b).unwrap();
+        let o2 = a.alloc(&geom, &b).unwrap();
+        let o3 = a.alloc(&geom, &b).unwrap();
+        a.free(&geom, &b, o1).unwrap();
+        a.free(&geom, &b, o3).unwrap();
+        let mut a2 = Allocator::from_file(&geom, &b).unwrap();
+        let r1 = a2.alloc(&geom, &b).unwrap();
+        let r2 = a2.alloc(&geom, &b).unwrap();
+        let mut reused = vec![r1, r2];
+        reused.sort_unstable();
+        let mut freed = vec![o1, o3];
+        freed.sort_unstable();
+        assert_eq!(reused, freed, "freed clusters are reused after reopen");
+        // the next allocation after the free list drains is fresh space
+        let r3 = a2.alloc(&geom, &b).unwrap();
+        assert!(r3 > o3.max(o2), "bump pointer cleared the old file end");
+        assert_eq!(a2.refcount(&geom, &b, r1 / geom.cluster_size()).unwrap(), 1);
     }
 }

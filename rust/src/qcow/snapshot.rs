@@ -43,16 +43,23 @@ pub fn snapshot_sqemu(chain: &mut Chain, node: &dyn FileStore, new_name: &str) -
         );
     }
     let backend = node.create_file(new_name)?;
+    // Crash ordering (DESIGN.md §10): the new volume is created WITHOUT
+    // the BFI flag, tables are copied, and only then is the flag flipped
+    // (an atomic, checksummed header rewrite). A crash mid-copy leaves an
+    // unflagged image whose partial stamps drivers ignore — they fall
+    // back to the chain walk — instead of a flagged image with an
+    // incomplete index silently reading holes.
     let img = Image::create(
         new_name,
         backend,
         *old.geom(),
-        old.flags() | FEATURE_BFI,
+        old.flags() & !FEATURE_BFI,
         chain.len() as u16,
         Some(&old.name),
         old.data_mode(),
     )?;
     copy_stamped_tables(&old, &img)?;
+    img.set_feature_bfi()?;
     chain.push(Arc::new(img))
 }
 

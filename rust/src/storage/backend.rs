@@ -24,6 +24,23 @@ pub trait Backend: Send + Sync {
     /// Grow (never shrinks) to at least `len` bytes.
     fn truncate_to(&self, len: u64) -> Result<()>;
 
+    /// Durability barrier: when this returns `Ok`, every write issued
+    /// before the call is stable across a crash (power cut). The crash
+    /// -consistency ordering rules (DESIGN.md §10) hang off this fence.
+    /// Default: no-op, for backends that are exactly as durable as the
+    /// process (pure in-memory stores have no weaker failure domain).
+    fn flush(&self) -> Result<()> {
+        Ok(())
+    }
+
+    /// Shrink the file to exactly `len` bytes, discarding the tail —
+    /// `qcheck --repair`'s orphaned-tail reclaim. Returns the resulting
+    /// length; backends that cannot shrink return their current length
+    /// unchanged so callers can report honestly.
+    fn shrink_to(&self, _len: u64) -> Result<u64> {
+        Ok(self.len())
+    }
+
     /// Scatter-gather read: fill every `(off, buf)` pair. The default
     /// loops `read_at` (one device I/O each); cost-charging backends
     /// override it to bill a run of physically contiguous pairs as ONE

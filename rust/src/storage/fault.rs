@@ -1,0 +1,340 @@
+//! Fault injection: a power-cut / torn-write harness for crash-
+//! consistency testing.
+//!
+//! A [`FaultInjector`] is the shared "power supply" of one simulated
+//! storage node: every mutating operation on any file wrapped by a
+//! [`FaultInjectingBackend`] is one *durable event* on a global event
+//! counter. Arming the injector schedules a power cut at an arbitrary
+//! event index; the cut event either persists nothing or — for torn
+//! writes — only a prefix of its bytes, and every later operation fails
+//! until [`FaultInjector::revive`] simulates the node coming back up.
+//!
+//! The crash model is the classic synchronous-disk one: completed writes
+//! are durable, the cut write is lost or torn, nothing after it happens.
+//! Real disks guarantee sector (512 B) atomicity, so the crash-everywhere
+//! property test tears at sector granularity; the header tests tear at
+//! arbitrary byte offsets to prove the checksummed double-slot header
+//! survives even that.
+//!
+//! [`FaultStore`] is a [`FileStore`] of fault-wrapped in-memory files
+//! sharing one injector — the whole-node harness the crash-recovery
+//! suite (`tests/crash_recovery.rs`) replays workloads on.
+
+use super::backend::{Backend, BackendRef};
+use super::mem::MemBackend;
+use super::store::FileStore;
+use anyhow::{anyhow, bail, Result};
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// Sector size assumed atomic by the ordering rules (DESIGN.md §10).
+pub const SECTOR: u64 = 512;
+
+/// What the injector decided for one durable event.
+enum Outcome {
+    /// Persist the operation in full.
+    Proceed,
+    /// Persist only the first `n` bytes of the write, then lose power.
+    Tear(u64),
+    /// Lose power before the operation persists anything.
+    Cut,
+}
+
+/// Shared power supply for a set of fault-wrapped files.
+#[derive(Debug)]
+pub struct FaultInjector {
+    /// Durable events observed so far (writes, truncates, creates,
+    /// deletes — everything that mutates what a crash would preserve).
+    events: AtomicU64,
+    /// Event index at which power is lost; `u64::MAX` = disarmed.
+    cut_at: AtomicU64,
+    /// Bytes of the cut write to persist; `u64::MAX` = persist nothing.
+    keep_bytes: AtomicU64,
+    /// Power is out: every operation fails until `revive`.
+    dead: AtomicBool,
+}
+
+impl FaultInjector {
+    pub fn new() -> Arc<FaultInjector> {
+        Arc::new(FaultInjector {
+            events: AtomicU64::new(0),
+            cut_at: AtomicU64::new(u64::MAX),
+            keep_bytes: AtomicU64::new(u64::MAX),
+            dead: AtomicBool::new(false),
+        })
+    }
+
+    /// Schedule a power cut: the next `cut_after` events succeed, the
+    /// event *at* index `events() + cut_after` is cut — persisting only
+    /// `tear_keep` bytes if given (tearing applies to plain writes; any
+    /// other cut event persists nothing).
+    pub fn arm(&self, cut_after: u64, tear_keep: Option<u64>) {
+        self.keep_bytes
+            .store(tear_keep.unwrap_or(u64::MAX), Ordering::SeqCst);
+        self.cut_at.store(
+            self.events.load(Ordering::SeqCst).saturating_add(cut_after),
+            Ordering::SeqCst,
+        );
+    }
+
+    /// Cancel any scheduled cut (power stays on).
+    pub fn disarm(&self) {
+        self.cut_at.store(u64::MAX, Ordering::SeqCst);
+    }
+
+    /// Power the node back up (the recovery path reopens files next).
+    pub fn revive(&self) {
+        self.disarm();
+        self.dead.store(false, Ordering::SeqCst);
+    }
+
+    /// Total durable events observed (the crash-everywhere loop bound).
+    pub fn events(&self) -> u64 {
+        self.events.load(Ordering::SeqCst)
+    }
+
+    pub fn is_dead(&self) -> bool {
+        self.dead.load(Ordering::SeqCst)
+    }
+
+    fn power_err(&self) -> anyhow::Error {
+        anyhow!("simulated power failure: storage node is down")
+    }
+
+    /// Account one durable event and decide its fate.
+    fn begin_event(&self) -> Outcome {
+        if self.is_dead() {
+            return Outcome::Cut;
+        }
+        let idx = self.events.fetch_add(1, Ordering::SeqCst);
+        if idx < self.cut_at.load(Ordering::SeqCst) {
+            return Outcome::Proceed;
+        }
+        self.dead.store(true, Ordering::SeqCst);
+        match self.keep_bytes.load(Ordering::SeqCst) {
+            u64::MAX => Outcome::Cut,
+            keep => Outcome::Tear(keep),
+        }
+    }
+}
+
+/// Backend decorator routing every mutation through a [`FaultInjector`].
+pub struct FaultInjectingBackend {
+    inner: BackendRef,
+    injector: Arc<FaultInjector>,
+}
+
+impl FaultInjectingBackend {
+    pub fn new(inner: BackendRef, injector: Arc<FaultInjector>) -> FaultInjectingBackend {
+        FaultInjectingBackend { inner, injector }
+    }
+
+    pub fn injector(&self) -> &Arc<FaultInjector> {
+        &self.injector
+    }
+}
+
+impl Backend for FaultInjectingBackend {
+    fn read_at(&self, buf: &mut [u8], off: u64) -> Result<()> {
+        if self.injector.is_dead() {
+            return Err(self.injector.power_err());
+        }
+        self.inner.read_at(buf, off)
+    }
+
+    fn write_at(&self, data: &[u8], off: u64) -> Result<()> {
+        match self.injector.begin_event() {
+            Outcome::Proceed => self.inner.write_at(data, off),
+            Outcome::Tear(keep) => {
+                let k = (keep as usize).min(data.len());
+                if k > 0 {
+                    self.inner.write_at(&data[..k], off)?;
+                }
+                Err(self.injector.power_err())
+            }
+            Outcome::Cut => Err(self.injector.power_err()),
+        }
+    }
+
+    fn len(&self) -> u64 {
+        self.inner.len()
+    }
+
+    fn truncate_to(&self, len: u64) -> Result<()> {
+        match self.injector.begin_event() {
+            Outcome::Proceed => self.inner.truncate_to(len),
+            _ => Err(self.injector.power_err()),
+        }
+    }
+
+    fn flush(&self) -> Result<()> {
+        // a barrier moves no new data: it fails when the node is down
+        // but is not itself a cuttable durable event
+        if self.injector.is_dead() {
+            return Err(self.injector.power_err());
+        }
+        self.inner.flush()
+    }
+
+    fn shrink_to(&self, len: u64) -> Result<u64> {
+        match self.injector.begin_event() {
+            Outcome::Proceed => self.inner.shrink_to(len),
+            _ => Err(self.injector.power_err()),
+        }
+    }
+
+    fn stored_bytes(&self) -> u64 {
+        self.inner.stored_bytes()
+    }
+
+    fn device_ios(&self) -> u64 {
+        self.inner.device_ios()
+    }
+
+    fn now_ns(&self) -> u64 {
+        self.inner.now_ns()
+    }
+}
+
+/// A whole storage node under fault injection: named in-memory files,
+/// each wrapped in a [`FaultInjectingBackend`] sharing one injector.
+/// Files persist across "reboots" (`open_file` returns the same durable
+/// state the crash left behind), which is what lets the crash-recovery
+/// tests reopen and repair after a cut.
+pub struct FaultStore {
+    injector: Arc<FaultInjector>,
+    files: Mutex<HashMap<String, BackendRef>>,
+}
+
+impl FaultStore {
+    pub fn new(injector: Arc<FaultInjector>) -> FaultStore {
+        FaultStore { injector, files: Mutex::new(HashMap::new()) }
+    }
+
+    pub fn injector(&self) -> &Arc<FaultInjector> {
+        &self.injector
+    }
+
+    pub fn file_names(&self) -> Vec<String> {
+        let mut v: Vec<String> =
+            self.files.lock().unwrap().keys().cloned().collect();
+        v.sort();
+        v
+    }
+}
+
+impl FileStore for FaultStore {
+    fn create_file(&self, name: &str) -> Result<BackendRef> {
+        let mut files = self.files.lock().unwrap();
+        if files.contains_key(name) {
+            bail!("file '{name}' already exists");
+        }
+        // creating the directory entry is itself a durable event
+        match self.injector.begin_event() {
+            Outcome::Proceed => {}
+            _ => return Err(self.injector.power_err()),
+        }
+        let backend: BackendRef = Arc::new(FaultInjectingBackend::new(
+            Arc::new(MemBackend::new()),
+            Arc::clone(&self.injector),
+        ));
+        files.insert(name.to_string(), Arc::clone(&backend));
+        Ok(backend)
+    }
+
+    fn open_file(&self, name: &str) -> Result<BackendRef> {
+        if self.injector.is_dead() {
+            return Err(self.injector.power_err());
+        }
+        self.files
+            .lock()
+            .unwrap()
+            .get(name)
+            .cloned()
+            .ok_or_else(|| anyhow!("no file '{name}'"))
+    }
+
+    fn delete_file(&self, name: &str) -> Result<()> {
+        match self.injector.begin_event() {
+            Outcome::Proceed => {}
+            _ => return Err(self.injector.power_err()),
+        }
+        match self.files.lock().unwrap().remove(name) {
+            Some(_) => Ok(()),
+            None => bail!("no file '{name}'"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn wrapped() -> (Arc<FaultInjector>, FaultInjectingBackend) {
+        let inj = FaultInjector::new();
+        let b = FaultInjectingBackend::new(
+            Arc::new(MemBackend::new()),
+            Arc::clone(&inj),
+        );
+        (inj, b)
+    }
+
+    #[test]
+    fn cut_after_n_writes_preserves_prefix() {
+        let (inj, b) = wrapped();
+        inj.arm(2, None);
+        b.write_at(b"one", 0).unwrap();
+        b.write_at(b"two", 10).unwrap();
+        assert!(b.write_at(b"three", 20).is_err(), "third write is cut");
+        assert!(b.write_at(b"four", 30).is_err(), "node stays down");
+        assert!(b.read_at(&mut [0u8; 1], 0).is_err(), "reads fail too");
+        inj.revive();
+        let mut buf = [0u8; 3];
+        b.read_at(&mut buf, 10).unwrap();
+        assert_eq!(&buf, b"two");
+        b.read_at(&mut buf, 20).unwrap();
+        assert_eq!(buf, [0u8; 3], "the cut write left nothing behind");
+    }
+
+    #[test]
+    fn torn_write_keeps_exact_prefix() {
+        let (inj, b) = wrapped();
+        b.write_at(&[0xAA; 8], 0).unwrap();
+        inj.arm(0, Some(3));
+        assert!(b.write_at(&[0xBB; 8], 0).is_err());
+        inj.revive();
+        let mut buf = [0u8; 8];
+        b.read_at(&mut buf, 0).unwrap();
+        assert_eq!(&buf[..3], &[0xBB; 3], "torn prefix persisted");
+        assert_eq!(&buf[3..], &[0xAA; 5], "tail keeps the old bytes");
+    }
+
+    #[test]
+    fn events_count_all_mutations() {
+        let (inj, b) = wrapped();
+        b.write_at(&[1], 0).unwrap();
+        b.truncate_to(100).unwrap();
+        b.flush().unwrap(); // a barrier is not a durable event
+        assert_eq!(inj.events(), 2);
+    }
+
+    #[test]
+    fn store_survives_reboot_with_durable_state() {
+        let inj = FaultInjector::new();
+        let store = FaultStore::new(Arc::clone(&inj));
+        let f = store.create_file("disk").unwrap();
+        f.write_at(b"durable", 0).unwrap();
+        inj.arm(0, None);
+        assert!(f.write_at(b"lost", 100).is_err());
+        assert!(store.open_file("disk").is_err(), "node is down");
+        inj.revive();
+        let g = store.open_file("disk").unwrap();
+        let mut buf = [0u8; 7];
+        g.read_at(&mut buf, 0).unwrap();
+        assert_eq!(&buf, b"durable");
+        let mut tail = [9u8; 4];
+        g.read_at(&mut tail, 100).unwrap();
+        assert_eq!(tail, [0u8; 4], "the lost write never happened");
+    }
+}

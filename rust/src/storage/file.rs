@@ -72,6 +72,19 @@ impl Backend for FileBackend {
         }
         Ok(())
     }
+
+    fn flush(&self) -> Result<()> {
+        self.file.sync_all().map_err(Into::into)
+    }
+
+    fn shrink_to(&self, new_len: u64) -> Result<u64> {
+        let mut len = self.len.lock().unwrap();
+        if new_len < *len {
+            self.file.set_len(new_len)?;
+            *len = new_len;
+        }
+        Ok(*len)
+    }
 }
 
 #[cfg(test)]

@@ -83,6 +83,27 @@ impl Backend for MemBackend {
         Ok(())
     }
 
+    fn shrink_to(&self, len: u64) -> Result<u64> {
+        let mut inner = self.inner.write().unwrap();
+        if len >= inner.len {
+            return Ok(inner.len);
+        }
+        // drop pages entirely beyond the new length; zero the tail of a
+        // straddling page so a later re-grow reads holes, not stale bytes
+        let boundary_page = len >> PAGE_BITS;
+        let in_page = (len & (PAGE as u64 - 1)) as usize;
+        inner
+            .pages
+            .retain(|&page_no, _| page_no < boundary_page + u64::from(in_page > 0));
+        if in_page > 0 {
+            if let Some(p) = inner.pages.get_mut(&boundary_page) {
+                p[in_page..].fill(0);
+            }
+        }
+        inner.len = len;
+        Ok(len)
+    }
+
     fn stored_bytes(&self) -> u64 {
         (self.page_count() as u64) << PAGE_BITS
     }
@@ -129,6 +150,25 @@ mod tests {
         b.write_at(&[1], 100 << 20).unwrap();
         assert_eq!(b.page_count(), 2); // not 1600 pages
         assert!(b.len() > 100 << 20);
+    }
+
+    #[test]
+    fn shrink_drops_pages_and_zeroes_tail() {
+        let b = MemBackend::new();
+        let data = vec![7u8; 3 * PAGE];
+        b.write_at(&data, 0).unwrap();
+        assert_eq!(b.page_count(), 3);
+        let new_len = b.shrink_to(PAGE as u64 + 100).unwrap();
+        assert_eq!(new_len, PAGE as u64 + 100);
+        assert_eq!(b.len(), PAGE as u64 + 100);
+        assert_eq!(b.page_count(), 2, "pages beyond the cut dropped");
+        // re-grow: the zapped region reads as zeros, not stale bytes
+        b.truncate_to(3 * PAGE as u64).unwrap();
+        let mut buf = [9u8; 8];
+        b.read_at(&mut buf, PAGE as u64 + 200).unwrap();
+        assert_eq!(buf, [0u8; 8]);
+        b.read_at(&mut buf, 50).unwrap();
+        assert_eq!(buf, [7u8; 8], "bytes below the cut survive");
     }
 
     #[test]

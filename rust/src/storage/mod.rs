@@ -8,6 +8,7 @@
 
 pub mod backend;
 pub mod dir;
+pub mod fault;
 pub mod file;
 pub mod mem;
 pub mod node;
@@ -16,6 +17,7 @@ pub mod timed;
 
 pub use backend::{Backend, BackendRef};
 pub use dir::DirStore;
+pub use fault::{FaultInjectingBackend, FaultInjector, FaultStore};
 pub use file::FileBackend;
 pub use mem::MemBackend;
 pub use node::StorageNode;

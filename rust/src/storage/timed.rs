@@ -103,6 +103,18 @@ impl<B: Backend> Backend for Timed<B> {
         self.inner.truncate_to(len)
     }
 
+    fn flush(&self) -> Result<()> {
+        // a durability barrier is one round trip to the device (NFS
+        // COMMIT): layer traversal + device access, no data transfer
+        self.clock.advance(self.cost.io_ns(0));
+        self.inner.flush()
+    }
+
+    fn shrink_to(&self, len: u64) -> Result<u64> {
+        self.clock.advance(self.cost.t_layers);
+        self.inner.shrink_to(len)
+    }
+
     fn charge(&self, _off: u64, len: u64) {
         self.pay(len);
     }

@@ -55,6 +55,37 @@ pub const fn div_ceil(a: u64, b: u64) -> u64 {
     (a + b - 1) / b
 }
 
+/// Lock a mutex, recovering from poison: a panic on one VM worker must
+/// not cascade into every other client of the coordinator's shared maps
+/// and stats (the dead VM surfaces as an error on its own channel only).
+/// The guarded data here is counters/registries whose invariants hold
+/// between individual writes, so the poison flag carries no information
+/// worth dying for.
+pub fn lock_unpoisoned<T: ?Sized>(
+    m: &std::sync::Mutex<T>,
+) -> std::sync::MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(std::sync::PoisonError::into_inner)
+}
+
+#[cfg(test)]
+mod poison_tests {
+    use super::lock_unpoisoned;
+    use std::sync::Mutex;
+
+    #[test]
+    fn recovers_data_after_a_panicking_holder() {
+        let m = Mutex::new(7u32);
+        let _ = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let _g = m.lock().unwrap();
+            panic!("holder dies");
+        }));
+        assert!(m.is_poisoned());
+        assert_eq!(*lock_unpoisoned(&m), 7);
+        *lock_unpoisoned(&m) = 9;
+        assert_eq!(*lock_unpoisoned(&m), 9);
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -351,7 +351,9 @@ impl Driver for ScalableDriver {
         for (key, entries) in self.cache.drain() {
             self.writeback(key, &entries)?;
         }
-        Ok(())
+        // durability barrier: flush acknowledges the guest's FLUSH — all
+        // data and metadata written so far must survive a crash
+        self.base.chain.active().flush()
     }
 
     fn kind(&self) -> DriverKind {

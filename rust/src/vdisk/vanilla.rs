@@ -306,7 +306,9 @@ impl Driver for VanillaDriver {
                 self.writeback(idx, key, &slice.entries)?;
             }
         }
-        Ok(())
+        // durability barrier: flush acknowledges the guest's FLUSH — all
+        // data and metadata written so far must survive a crash
+        self.base.chain.active().flush()
     }
 
     fn kind(&self) -> DriverKind {

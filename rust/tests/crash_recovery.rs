@@ -1,0 +1,531 @@
+//! Crash-everywhere property suite: power-cut a randomized workload at
+//! EVERY durable-write index (clean cuts and sector-torn cuts), on both
+//! drivers, then reopen + `qcheck --repair` and assert the chain is
+//! clean (zero hard inconsistencies, zero leaked clusters) with every
+//! byte acknowledged before the last successful flush bit-identical.
+//!
+//! On failure, the failing (driver, seed, cut index, tear) tuple is
+//! written to `$CRASH_REPRO_PATH` (default `crash_repro.txt`) so CI can
+//! attach the shrunken repro to a bug report.
+
+use sqemu::blockjob::{BlockJob, LiveStreamJob};
+use sqemu::cache::CacheConfig;
+use sqemu::chaingen::ChainSpec;
+use sqemu::coordinator::server::VmChain;
+use sqemu::coordinator::{Coordinator, VmConfig};
+use sqemu::metrics::clock::{CostModel, VirtClock};
+use sqemu::metrics::memory::MemoryAccountant;
+use sqemu::qcow::entry::L2Entry;
+use sqemu::qcow::image::{DataMode, Image};
+use sqemu::qcow::layout::{Geometry, FEATURE_BFI};
+use sqemu::qcow::{qcheck, snapshot, Chain};
+use sqemu::storage::fault::{FaultInjector, FaultStore, SECTOR};
+use sqemu::storage::store::FileStore;
+use sqemu::util::rng::Rng;
+use sqemu::vdisk::scalable::ScalableDriver;
+use sqemu::vdisk::vanilla::VanillaDriver;
+use sqemu::vdisk::{Driver, DriverKind};
+use std::sync::Arc;
+
+const CLUSTER_BITS: u32 = 12; // 4 KiB clusters
+const CS: usize = 1 << CLUSTER_BITS;
+const VCLUSTERS: usize = 64;
+const DISK: usize = VCLUSTERS * CS; // 256 KiB
+const N_OPS: usize = 18;
+
+fn geom() -> Geometry {
+    Geometry::new(CLUSTER_BITS, DISK as u64).unwrap()
+}
+
+fn build_driver(kind: DriverKind, chain: Chain, clock: &Arc<VirtClock>) -> Box<dyn Driver> {
+    let cache = CacheConfig::new(16, 32 << 10);
+    match kind {
+        DriverKind::Scalable => Box::new(ScalableDriver::new(
+            chain,
+            cache,
+            Arc::clone(clock),
+            CostModel::default(),
+            MemoryAccountant::new(),
+        )),
+        DriverKind::Vanilla => Box::new(VanillaDriver::new(
+            chain,
+            cache,
+            Arc::clone(clock),
+            CostModel::default(),
+            MemoryAccountant::new(),
+        )),
+    }
+}
+
+/// End state of one (possibly crashed) workload replay: the byte-level
+/// oracle of what MUST survive (`durable`/`durable_mask`, committed at
+/// each acknowledged flush) and the last acknowledged chain head.
+struct Outcome {
+    durable: Vec<u8>,
+    durable_mask: Vec<bool>,
+    /// Bytes overwritten in place AFTER the last acknowledged flush:
+    /// like a real disk, a crash may leave old, new, or a sector-level
+    /// mix there, so the oracle must not assert their content.
+    overwritten: Vec<bool>,
+    head: Option<String>,
+    crashed: bool,
+}
+
+/// Replay the seeded workload (guest writes, flushes, snapshots, a live
+/// stream job with interleaved writes) until it completes or the power
+/// cut kills it. Every driver acknowledgment updates the model; every
+/// acknowledged flush commits the model to the durable oracle.
+fn run_workload(kind: DriverKind, seed: u64, store: &Arc<FaultStore>) -> Outcome {
+    let geom = geom();
+    let cs = geom.cluster_size();
+    let mut model = vec![0u8; DISK];
+    let mut mask = vec![false; DISK];
+    let mut durable = vec![0u8; DISK];
+    let mut durable_mask = vec![false; DISK];
+    let mut overwritten = vec![false; DISK];
+    let mut head: Option<String> = None;
+    let mut rng = Rng::new(seed);
+
+    let result = (|| -> anyhow::Result<()> {
+        let flags = if kind == DriverKind::Scalable { FEATURE_BFI } else { 0 };
+        let backend = store.create_file("img-0")?;
+        let img = Image::create("img-0", backend, geom, flags, 0, None, DataMode::Real)?;
+        head = Some("img-0".to_string());
+        let chain = Chain::new(Arc::new(img))?;
+        let clock = VirtClock::new();
+        let mut driver = build_driver(kind, chain, &clock);
+        let mut snap_no = 0usize;
+
+        // deterministic skeleton (snapshots at 4 and 9, the live stream
+        // at 12) with randomized writes/flushes in between, so every
+        // seed exercises snapshot creation, a mid-chain stream job and
+        // plain guest I/O
+        for opi in 0..N_OPS {
+            let pick = match opi {
+                4 | 9 => 75u64,  // snapshot
+                12 => 90,        // live stream job
+                _ => rng.below(70),
+            };
+            if pick < 55 {
+                // guest write within one cluster
+                let vc = rng.below(geom.num_vclusters());
+                let off = rng.below(cs - 600);
+                let len = (rng.below(512) + 1) as usize;
+                let val = (opi as u8 ^ vc as u8).wrapping_mul(37).wrapping_add(1);
+                let voff = (vc * cs + off) as usize;
+                let data = vec![val; len];
+                driver.write(voff as u64, &data)?;
+                model[voff..voff + len].copy_from_slice(&data);
+                mask[voff..voff + len].fill(true);
+                overwritten[voff..voff + len].fill(true);
+            } else if pick < 70 {
+                // guest FLUSH: once acknowledged, everything written so
+                // far is promised to survive any crash
+                driver.flush()?;
+                durable.copy_from_slice(&model);
+                durable_mask.copy_from_slice(&mask);
+                overwritten.fill(false);
+            } else if pick < 85 {
+                // paused-VM snapshot, coordinator-style
+                driver.flush()?;
+                durable.copy_from_slice(&model);
+                durable_mask.copy_from_slice(&mask);
+                overwritten.fill(false);
+                snap_no += 1;
+                let name = format!("img-{snap_no}");
+                match kind {
+                    DriverKind::Scalable => {
+                        snapshot::snapshot_sqemu(driver.chain_mut(), &**store, &name)?
+                    }
+                    DriverKind::Vanilla => {
+                        snapshot::snapshot_vanilla(driver.chain_mut(), &**store, &name)?
+                    }
+                }
+                driver.reopen()?;
+                head = Some(name);
+            } else {
+                // live stream job, interleaved with guest writes
+                if driver.chain().len() < 2 {
+                    continue;
+                }
+                let fence = Arc::clone(driver.fence());
+                fence.begin();
+                let mut job = LiveStreamJob::new(driver.chain(), Arc::clone(&fence));
+                loop {
+                    let inc = job.run_increment(driver.chain_mut(), 8)?;
+                    if rng.chance(0.5) {
+                        let vc = rng.below(geom.num_vclusters());
+                        let val = 0xC0u8 ^ vc as u8;
+                        let voff = (vc * cs) as usize;
+                        let data = vec![val; 128];
+                        driver.write(voff as u64, &data)?;
+                        model[voff..voff + 128].copy_from_slice(&data);
+                        mask[voff..voff + 128].fill(true);
+                        overwritten[voff..voff + 128].fill(true);
+                    }
+                    if inc.complete {
+                        break;
+                    }
+                }
+                // completion protocol, JobRunner-style
+                driver.flush()?;
+                durable.copy_from_slice(&model);
+                durable_mask.copy_from_slice(&mask);
+                overwritten.fill(false);
+                job.finalize(driver.chain_mut())?;
+                driver.reopen()?;
+                fence.end();
+            }
+        }
+        driver.flush()?;
+        durable.copy_from_slice(&model);
+        durable_mask.copy_from_slice(&mask);
+        overwritten.fill(false);
+        Ok(())
+    })();
+
+    Outcome { durable, durable_mask, overwritten, head, crashed: result.is_err() }
+}
+
+/// Write the failing tuple where CI can pick it up, then panic with it.
+fn fail_repro(kind: DriverKind, seed: u64, cut: u64, tear: Option<u64>, msg: &str) -> ! {
+    let path = std::env::var("CRASH_REPRO_PATH")
+        .unwrap_or_else(|_| "crash_repro.txt".to_string());
+    let note = format!(
+        "crash-recovery failure\ndriver={} seed={seed:#x} cut_at_event={cut} \
+         tear_keep_bytes={tear:?}\n{msg}\n(cache eviction order can vary \
+         between processes; the cut index may need a small scan around the \
+         recorded value)\n",
+        kind.name(),
+    );
+    let _ = std::fs::write(&path, &note);
+    panic!("{note}");
+}
+
+/// Power back on, reopen the acknowledged head, repair, and assert the
+/// crash-consistency contract; then GC unreachable files and re-verify.
+fn verify_recovery(
+    store: &Arc<FaultStore>,
+    kind: DriverKind,
+    seed: u64,
+    cut: u64,
+    tear: Option<u64>,
+    out: &Outcome,
+) {
+    store.injector().revive();
+    let Some(head) = &out.head else { return };
+
+    // 1. the head must reopen: headers are crash-atomic by construction
+    let chain = match Chain::open(&**store, head, DataMode::Real) {
+        Ok(c) => c,
+        Err(e) => fail_repro(kind, seed, cut, tear, &format!("reopen failed: {e:#}")),
+    };
+    // 2. repair must succeed and leave a fully clean chain
+    if let Err(e) = qcheck::repair_chain(&chain) {
+        fail_repro(kind, seed, cut, tear, &format!("repair failed: {e:#}"));
+    }
+    let report = match qcheck::check_chain(&chain) {
+        Ok(r) => r,
+        Err(e) => fail_repro(kind, seed, cut, tear, &format!("qcheck failed: {e:#}")),
+    };
+    if !report.is_clean() || report.leaked_clusters != 0 {
+        fail_repro(
+            kind,
+            seed,
+            cut,
+            tear,
+            &format!(
+                "post-repair chain not clean: {} errors, {} leaks: {:?}",
+                report.errors.len(),
+                report.leaked_clusters,
+                report.errors
+            ),
+        );
+    }
+    // 3. every acknowledged-flushed byte is intact
+    let clock = VirtClock::new();
+    let mut driver = build_driver(kind, chain, &clock);
+    let mut buf = vec![0u8; CS];
+    for vc in 0..VCLUSTERS {
+        if let Err(e) = driver.read((vc * CS) as u64, &mut buf) {
+            fail_repro(kind, seed, cut, tear, &format!("read vc {vc} failed: {e:#}"));
+        }
+        for i in 0..CS {
+            let g = vc * CS + i;
+            if out.durable_mask[g] && !out.overwritten[g] && buf[i] != out.durable[g] {
+                fail_repro(
+                    kind,
+                    seed,
+                    cut,
+                    tear,
+                    &format!(
+                        "durable byte lost at voff {g}: got {:#x}, want {:#x}",
+                        buf[i], out.durable[g]
+                    ),
+                );
+            }
+        }
+    }
+    drop(driver);
+
+    // 4. recovery GC: drop every file the head's backing walk cannot
+    //    reach (orphans of interrupted creates/streams) and re-verify
+    let mut reachable = std::collections::HashSet::new();
+    if let Err(e) = sqemu::gc::walk_backing(&**store, head, &mut reachable) {
+        fail_repro(kind, seed, cut, tear, &format!("backing walk failed: {e:#}"));
+    }
+    for name in store.file_names() {
+        if !reachable.contains(&name) {
+            if let Err(e) = store.delete_file(&name) {
+                fail_repro(kind, seed, cut, tear, &format!("gc delete failed: {e:#}"));
+            }
+        }
+    }
+    let chain = match Chain::open(&**store, head, DataMode::Real) {
+        Ok(c) => c,
+        Err(e) => {
+            fail_repro(kind, seed, cut, tear, &format!("post-gc reopen failed: {e:#}"))
+        }
+    };
+    match qcheck::check_chain(&chain) {
+        Ok(r) if r.is_clean() => {}
+        Ok(r) => fail_repro(
+            kind,
+            seed,
+            cut,
+            tear,
+            &format!("post-gc chain dirty: {:?}", r.errors),
+        ),
+        Err(e) => fail_repro(kind, seed, cut, tear, &format!("post-gc qcheck: {e:#}")),
+    }
+}
+
+/// The tentpole property: crash at EVERY durable-event index (clean and
+/// sector-torn), reopen + repair, and the contract holds.
+fn crash_everywhere(kind: DriverKind, seed: u64) {
+    // fault-free pass: bounds the cut range and sanity-checks the oracle
+    let injector = FaultInjector::new();
+    let store = Arc::new(FaultStore::new(Arc::clone(&injector)));
+    let out = run_workload(kind, seed, &store);
+    assert!(!out.crashed, "fault-free run must complete");
+    let n = injector.events(); // before verification adds its own events
+    verify_recovery(&store, kind, seed, u64::MAX, None, &out);
+    assert!(n > 60, "workload too small to be interesting: {n} events");
+
+    let step = if n > 240 { 3 } else { 1 };
+    let mut k = 0u64;
+    while k < n {
+        // clean power cut at event k
+        let injector = FaultInjector::new();
+        let store = Arc::new(FaultStore::new(Arc::clone(&injector)));
+        injector.arm(k, None);
+        let out = run_workload(kind, seed, &store);
+        verify_recovery(&store, kind, seed, k, None, &out);
+
+        // sector-torn cut at event k (sectors are atomic; multi-sector
+        // writes can persist any sector prefix)
+        let keep = SECTOR * (k % 8);
+        let injector = FaultInjector::new();
+        let store = Arc::new(FaultStore::new(Arc::clone(&injector)));
+        injector.arm(k, Some(keep));
+        let out = run_workload(kind, seed, &store);
+        verify_recovery(&store, kind, seed, k, Some(keep), &out);
+
+        k += step;
+    }
+}
+
+#[test]
+fn crash_everywhere_scalable() {
+    crash_everywhere(DriverKind::Scalable, 0xC0FFEE);
+}
+
+#[test]
+fn crash_everywhere_vanilla() {
+    crash_everywhere(DriverKind::Vanilla, 0x5EED_BEEF);
+}
+
+// ---------------------------------------------------------------- header
+
+/// Satellite: `set_feature_bfi` under byte-granular torn writes — the
+/// header flip is atomic (old-valid or new-valid, never garbage), even
+/// without sector atomicity, thanks to the checksummed double slot.
+#[test]
+fn feature_flip_is_atomic_under_arbitrary_tearing() {
+    let make = |injector: &Arc<FaultInjector>| -> (Arc<FaultStore>, Image) {
+        let store = Arc::new(FaultStore::new(Arc::clone(injector)));
+        let b = store.create_file("img").unwrap();
+        let img = Image::create("img", b, geom(), 0, 0, None, DataMode::Real).unwrap();
+        (store, img)
+    };
+    for tear in 0..96u64 {
+        let injector = FaultInjector::new();
+        let (store, img) = make(&injector);
+        injector.arm(0, Some(tear));
+        let r = img.set_feature_bfi();
+        injector.revive();
+        let reopened =
+            Image::open("img", store.open_file("img").unwrap(), DataMode::Real)
+                .unwrap_or_else(|e| panic!("tear={tear}: header unopenable: {e:#}"));
+        if r.is_ok() {
+            assert!(reopened.has_bfi(), "tear={tear}: acknowledged flip lost");
+        } else {
+            // old-valid or new-valid — never a half-state beyond the flag
+            assert_eq!(reopened.chain_index(), 0, "tear={tear}");
+            assert_eq!(reopened.backing_name(), None, "tear={tear}");
+        }
+    }
+}
+
+/// Satellite: `update_header` (chain relink) under torn writes — the
+/// reopened image shows the old link or the new link in full.
+#[test]
+fn update_header_is_atomic_under_arbitrary_tearing() {
+    for tear in 0..96u64 {
+        let injector = FaultInjector::new();
+        let store = Arc::new(FaultStore::new(Arc::clone(&injector)));
+        let b = store.create_file("img").unwrap();
+        let img = Image::create(
+            "img",
+            b,
+            geom(),
+            FEATURE_BFI,
+            2,
+            Some("old-parent"),
+            DataMode::Real,
+        )
+        .unwrap();
+        injector.arm(0, Some(tear));
+        let r = img.update_header(1, Some("new-parent"));
+        injector.revive();
+        let reopened =
+            Image::open("img", store.open_file("img").unwrap(), DataMode::Real)
+                .unwrap_or_else(|e| panic!("tear={tear}: header unopenable: {e:#}"));
+        let link = (reopened.chain_index(), reopened.backing_name());
+        if r.is_ok() {
+            assert_eq!(link, (1, Some("new-parent".to_string())), "tear={tear}");
+        } else {
+            assert!(
+                link == (2, Some("old-parent".to_string()))
+                    || link == (1, Some("new-parent".to_string())),
+                "tear={tear}: torn header mixed states: {link:?}"
+            );
+        }
+    }
+}
+
+/// Header updates keep alternating slots: tearing the SECOND update must
+/// fall back to the durable first update, not the original.
+#[test]
+fn torn_second_update_falls_back_to_first() {
+    let injector = FaultInjector::new();
+    let store = Arc::new(FaultStore::new(Arc::clone(&injector)));
+    let b = store.create_file("img").unwrap();
+    let img =
+        Image::create("img", b, geom(), 0, 0, None, DataMode::Real).unwrap();
+    img.update_header(1, Some("first")).unwrap();
+    injector.arm(0, Some(16));
+    assert!(img.update_header(2, Some("second")).is_err());
+    injector.revive();
+    let reopened =
+        Image::open("img", store.open_file("img").unwrap(), DataMode::Real).unwrap();
+    assert_eq!(reopened.chain_index(), 1);
+    assert_eq!(reopened.backing_name().as_deref(), Some("first"));
+}
+
+// ----------------------------------------------------------- coordinator
+
+/// The coordinator's recovery pass repairs a node's images before guest
+/// I/O is admitted, and `launch_vm` refuses nothing afterwards.
+#[test]
+fn coordinator_recover_repairs_node_images_before_launch() {
+    let coord = Coordinator::with_fresh_nodes(1).unwrap();
+    let geom = geom();
+    // build a 2-deep chain directly on the node, then corrupt it the way
+    // a crash would: a dangling mapping and a leaked cluster
+    {
+        let b = coord.nodes.create_file("img-0").unwrap();
+        let img = Image::create("img-0", b, geom, FEATURE_BFI, 0, None, DataMode::Real)
+            .unwrap();
+        let mut chain = Chain::new(Arc::new(img)).unwrap();
+        let active = Arc::clone(chain.active());
+        let off = active.alloc_data_cluster().unwrap();
+        active.write_data(off, 0, &[0x5A; 64]).unwrap();
+        active.set_l2_entry(0, L2Entry::local(off, Some(0))).unwrap();
+        snapshot::snapshot_sqemu(&mut chain, coord.nodes.as_ref(), "img-1").unwrap();
+        let active = Arc::clone(chain.active());
+        active
+            .set_l2_entry(7, L2Entry::local(1 << 40, Some(1)))
+            .unwrap();
+        active.alloc_data_cluster().unwrap(); // leak
+    }
+    let report = coord.recover();
+    assert_eq!(report.images_checked, 2, "{report:?}");
+    assert!(report.images_repaired >= 1, "{report:?}");
+    assert!(report.unopenable.is_empty(), "{report:?}");
+    assert_eq!(report.chains_checked, 1);
+
+    let client = coord
+        .launch_vm(
+            "vm",
+            VmConfig {
+                driver: DriverKind::Scalable,
+                cache: CacheConfig::new(16, 32 << 10),
+                chain: VmChain::Existing {
+                    active_name: "img-1".to_string(),
+                    data_mode: DataMode::Real,
+                },
+            },
+        )
+        .unwrap();
+    let got = client.read(0, 64).unwrap();
+    assert_eq!(got, vec![0x5A; 64], "repaired chain serves its data");
+    assert_eq!(client.read(7 * geom.cluster_size(), 8).unwrap(), vec![0u8; 8]);
+    coord.shutdown();
+}
+
+/// Satellite: a panicking VM worker no longer takes the fleet down — its
+/// own client errors, every other VM and coordinator API keeps working.
+#[test]
+fn worker_panic_does_not_cascade() {
+    let coord = Coordinator::with_fresh_nodes(1).unwrap();
+    let spec = |name: &str, seed: u64| VmConfig {
+        driver: DriverKind::Scalable,
+        cache: CacheConfig::new(16, 32 << 10),
+        chain: VmChain::Generate(ChainSpec {
+            disk_size: 1 << 20,
+            chain_len: 2,
+            populated: 0.5,
+            stamped: true,
+            data_mode: DataMode::Real,
+            prefix: name.to_string(),
+            seed,
+            ..Default::default()
+        }),
+    };
+    let a = coord.launch_vm("vm-a", spec("vm-a", 1)).unwrap();
+    let b = coord.launch_vm("vm-b", spec("vm-b", 2)).unwrap();
+
+    // a request no allocator can satisfy panics the worker mid-serve
+    assert!(a.read(0, usize::MAX).is_err(), "dead vm errors its own client");
+    // the panic is surfaced in the dead VM's stats (poll: the worker
+    // records it while unwinding, racing this read)
+    let mut panics = 0;
+    for _ in 0..200 {
+        panics = coord.vm_stats("vm-a").unwrap().worker_panics;
+        if panics > 0 {
+            break;
+        }
+        std::thread::sleep(std::time::Duration::from_millis(5));
+    }
+    assert_eq!(panics, 1, "worker panic recorded");
+
+    // the fleet lives on: the other VM serves, control plane works
+    assert!(b.read(0, 4096).is_ok());
+    assert_eq!(coord.vm_names(), vec!["vm-a".to_string(), "vm-b".to_string()]);
+    assert!(coord.list_jobs().is_empty());
+    let c = coord.launch_vm("vm-c", spec("vm-c", 3)).unwrap();
+    assert!(c.read(0, 512).is_ok());
+    assert!(coord.vm_stats("vm-b").unwrap().reads >= 1);
+    coord.shutdown();
+}

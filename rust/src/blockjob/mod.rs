@@ -71,6 +71,10 @@ pub enum JobKind {
     /// of unreferenced files ([`crate::gc::GcJob`]). Runs on the
     /// coordinator, not a VM worker — it owns no chain.
     Gc,
+    /// Mirror the VM's whole chain to another storage node and switch
+    /// over atomically ([`crate::migrate::MirrorJob`]) — the live
+    /// migration that turns static placement into a managed fleet.
+    Mirror,
 }
 
 impl JobKind {
@@ -79,6 +83,7 @@ impl JobKind {
             JobKind::Stream => "stream",
             JobKind::Stamp => "stamp",
             JobKind::Gc => "gc",
+            JobKind::Mirror => "mirror",
         }
     }
 
@@ -87,6 +92,7 @@ impl JobKind {
             "stream" => Some(JobKind::Stream),
             "stamp" => Some(JobKind::Stamp),
             "gc" => Some(JobKind::Gc),
+            "mirror" => Some(JobKind::Mirror),
             _ => None,
         }
     }

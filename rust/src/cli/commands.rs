@@ -220,6 +220,10 @@ fn job_start(args: &Args) -> Result<()> {
             resume_from,
         )),
         JobKind::Gc => bail!("garbage collection runs via `sqemu gc run`, not `job start`"),
+        JobKind::Mirror => bail!(
+            "chain migration needs a multi-node fleet; try `sqemu migrate` \
+             (coordinator demo)"
+        ),
     };
     let total = job.total_clusters();
     let len_before = chain.len();
@@ -299,7 +303,7 @@ fn job_start(args: &Args) -> Result<()> {
              sqemu format flag",
             chain.active().name
         ),
-        JobKind::Gc => unreachable!("rejected above"),
+        JobKind::Gc | JobKind::Mirror => unreachable!("rejected above"),
     }
     println!("qcheck: clean ({} consistent clusters)", report.ok_clusters);
     Ok(())
@@ -622,6 +626,186 @@ pub fn serve(args: &Args) -> Result<()> {
         human_ns(coord.clock.now())
     );
     println!("memory accounted: {}", human_bytes(coord.acct.total()));
+    coord.shutdown();
+    Ok(())
+}
+
+// --------------------------------------------------- fleet demos
+// `migrate`, `rebalance` and `node status` operate a live multi-node
+// coordinator. The CLI's directory store is a single namespace with no
+// notion of nodes, so these commands build a deterministic in-process
+// fleet (deliberately skewed onto node-0, the shape §3 says placement
+// drifts into) and act on it — the `serve` convention.
+
+fn demo_fleet(args: &Args) -> Result<std::sync::Arc<Coordinator>> {
+    use crate::chaingen::generate;
+    let n_nodes = (args.u64_or("nodes", 3)? as usize).max(2);
+    let vms = args.u64_or("vms", 6)? as usize;
+    let chain_len = (args.u64_or("chain", 12)? as usize).max(1);
+    let coord = Coordinator::with_fresh_nodes(n_nodes)?;
+    for v in 0..vms {
+        // two thirds of the fleet lands on node-0, the rest round-robin
+        let pin = if 3 * v < 2 * vms {
+            "node-0".to_string()
+        } else {
+            format!("node-{}", 1 + v % (n_nodes - 1))
+        };
+        let store = coord.nodes.pinned(&pin)?;
+        let name = format!("vm-{v}");
+        generate(
+            &store,
+            &ChainSpec {
+                disk_size: 64 << 20,
+                chain_len,
+                populated: 0.4,
+                stamped: true,
+                data_mode: DataMode::Synthetic,
+                prefix: name.clone(),
+                seed: 0x517E ^ v as u64,
+                ..Default::default()
+            },
+        )?;
+        coord.launch_vm(
+            &name,
+            VmConfig {
+                driver: DriverKind::Scalable,
+                cache: CacheConfig::new(128, 2 << 20),
+                chain: VmChain::Existing {
+                    active_name: format!("{name}-{}", chain_len - 1),
+                    data_mode: DataMode::Synthetic,
+                },
+            },
+        )?;
+    }
+    Ok(coord)
+}
+
+fn print_node_status(coord: &Coordinator) {
+    println!(
+        "{:<10} {:>10} {:>12} {:>10} {:>10} {:>12} {:>6}",
+        "NODE", "used", "pressure", "condemned", "reserved", "reclaimed", "gc"
+    );
+    for s in coord.nodes.node_stats() {
+        println!(
+            "{:<10} {:>10} {:>12} {:>10} {:>10} {:>12} {:>6}",
+            s.name,
+            human_bytes(s.used_bytes),
+            human_bytes(s.pressure_bytes),
+            human_bytes(s.condemned_bytes),
+            human_bytes(s.reserved_bytes),
+            human_bytes(s.reclaimed_bytes),
+            s.gc_deletes,
+        );
+    }
+    let pressures: Vec<u64> = coord
+        .nodes
+        .nodes()
+        .iter()
+        .map(|n| n.committed_bytes())
+        .collect();
+    println!(
+        "fleet max/min pressure ratio: {:.2}",
+        crate::migrate::rebalance::pressure_ratio(&pressures)
+    );
+}
+
+/// `sqemu node status`: per-node used/pressure/condemned/reclaimed bytes
+/// and migration reservations over the demo fleet.
+pub fn node(verb: &str, args: &Args) -> Result<()> {
+    match verb {
+        "status" => {
+            let coord = demo_fleet(args)?;
+            print_node_status(&coord);
+            coord.shutdown();
+            Ok(())
+        }
+        other => bail!("unknown node verb '{other}' (try status)"),
+    }
+}
+
+/// `sqemu migrate --vm V --to NODE [--rate 64M]`: live-migrate one VM's
+/// chain in the demo fleet while its guest keeps reading.
+pub fn migrate(args: &Args) -> Result<()> {
+    let coord = demo_fleet(args)?;
+    let vm = args.get("vm").unwrap_or("vm-0").to_string();
+    let to = args.require("to")?;
+    let rate = args.size_or("rate", 0)?;
+    println!("before migration:");
+    print_node_status(&coord);
+    let shared = coord.migrate_vm(&vm, to, rate)?;
+    // the guest keeps serving while the mirror converges
+    let client = coord.client(&vm)?;
+    let mut guest_reads = 0u64;
+    while !shared.state().is_terminal() {
+        client.read((guest_reads % 64) * 4096, 4096)?;
+        guest_reads += 1;
+    }
+    let st = coord.wait_job(&shared);
+    match st.error {
+        Some(e) => bail!("migration failed: {e}"),
+        None => println!(
+            "\nmigrated '{vm}' to '{to}': {} chunks copied ({}), {} increments, \
+             {guest_reads} guest reads served during the move",
+            st.copied,
+            human_bytes(st.bytes_copied),
+            st.increments,
+        ),
+    }
+    let gc = coord.run_gc(0)?;
+    println!(
+        "gc: {} superseded source copies reclaimed ({})",
+        gc.files_deleted,
+        human_bytes(gc.reclaimed_bytes)
+    );
+    println!("\nafter migration + gc:");
+    print_node_status(&coord);
+    coord.shutdown();
+    Ok(())
+}
+
+/// `sqemu rebalance [--dry-run] [--threshold 1.5] [--rate 256M]`: plan
+/// (and unless dry-run, execute) migrations until the fleet's max/min
+/// pressure ratio is under the threshold.
+pub fn rebalance(args: &Args) -> Result<()> {
+    let coord = demo_fleet(args)?;
+    let dry = args.bool("dry-run");
+    let threshold: f64 = match args.get("threshold") {
+        None => 1.5,
+        Some(v) => v
+            .parse()
+            .map_err(|_| anyhow::anyhow!("--threshold expects a number, got '{v}'"))?,
+    };
+    let rate = args.size_or("rate", 0)?;
+    println!("before rebalance:");
+    print_node_status(&coord);
+    let report = coord.rebalance(threshold, rate, dry)?;
+    println!(
+        "\nplan: {} move(s), ratio {:.2} -> {:.2} (threshold {threshold})",
+        report.plan.moves.len(),
+        report.plan.ratio_before,
+        report.plan.ratio_projected,
+    );
+    for m in &report.plan.moves {
+        println!(
+            "  {} {}: {} -> {} ({})",
+            if dry { "would move" } else { "moved" },
+            m.vm,
+            m.from,
+            m.to,
+            human_bytes(m.bytes)
+        );
+    }
+    if !dry {
+        let gc = coord.run_gc(0)?;
+        println!(
+            "executed {} move(s); gc reclaimed {} source copies ({})",
+            report.executed,
+            gc.files_deleted,
+            human_bytes(gc.reclaimed_bytes)
+        );
+        println!("\nafter rebalance + gc (final ratio {:.2}):", report.final_ratio);
+        print_node_status(&coord);
+    }
     coord.shutdown();
     Ok(())
 }

@@ -17,6 +17,9 @@
 //! sqemu check   --dir D --active N [--repair] # verify; --repair recovers
 //! sqemu characterize [--chains N]             # §3 figures
 //! sqemu serve   [--vms N] [--chain L]         # coordinator demo
+//! sqemu migrate --to node-1 [--vm vm-0] [--rate 64M]  # live-migrate a chain
+//! sqemu rebalance [--dry-run] [--threshold 1.5]       # fleet rebalancer
+//! sqemu node status [--nodes N] [--vms V]     # per-node capacity report
 //! sqemu bench   [--json [path]]               # CI perf smoke artifact
 //! sqemu selftest                              # artifacts + runtime
 //! ```
@@ -48,6 +51,14 @@ pub fn run(argv: Vec<String>) -> Result<()> {
         let args = Args::parse(rest)?;
         return commands::gc(verb, &args);
     }
+    if cmd == "node" {
+        // `sqemu node <verb> --flags ...` — the verb is positional
+        let Some((verb, rest)) = rest.split_first() else {
+            bail!("usage: sqemu node status [--nodes N] [--vms V] [--chain L]");
+        };
+        let args = Args::parse(rest)?;
+        return commands::node(verb, &args);
+    }
     let args = Args::parse(rest)?;
     match cmd.as_str() {
         "create" => commands::create(&args),
@@ -58,6 +69,8 @@ pub fn run(argv: Vec<String>) -> Result<()> {
         "check" => commands::check(&args),
         "characterize" => commands::characterize(&args),
         "serve" => commands::serve(&args),
+        "migrate" => commands::migrate(&args),
+        "rebalance" => commands::rebalance(&args),
         "bench" => commands::bench(&args),
         "selftest" => commands::selftest(&args),
         "help" | "--help" | "-h" => {
@@ -89,6 +102,9 @@ fn print_usage() {
          study & demo:\n\
          \x20 characterize [--chains N] [--days N]\n\
          \x20 serve [--vms N] [--chain L] [--requests R] [--vanilla]\n\
+         \x20 migrate --to node-1 [--vm vm-0] [--rate 64M] [--vms N] [--chain L]\n\
+         \x20 rebalance [--dry-run] [--threshold 1.5] [--rate 256M]\n\
+         \x20 node status [--nodes N] [--vms V] [--chain L]\n\
          \x20 bench [--json [path]]   # CI smoke run -> BENCH_hotpath.json\n\
          \x20 selftest\n\
          \n\

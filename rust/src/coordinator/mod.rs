@@ -29,6 +29,14 @@
 //!   live-job completion, decommission) re-declare each chain's file
 //!   set, and [`server::Coordinator::run_gc`] sweeps the deferred-delete
 //!   set under the same admission/rate machinery as the live jobs.
+//! * migration & rebalancing — [`server::Coordinator::migrate_vm`] moves
+//!   a VM's whole chain to another node under guest I/O (a
+//!   [`crate::migrate::MirrorJob`] with a capacity reservation on the
+//!   recipient), and [`server::Coordinator::rebalance`] plans and
+//!   executes donor→recipient moves whenever per-node pressure skews
+//!   past a threshold; `Coordinator::recover()` resolves interrupted
+//!   migrations from their durable journals and rebuilds the placement
+//!   index.
 //!
 //! [`FileStore`]: crate::storage::store::FileStore
 
@@ -41,6 +49,6 @@ pub mod streaming;
 pub use batcher::BulkTranslator;
 pub use placement::NodeSet;
 pub use server::{
-    BatchOp, BatchReply, Coordinator, CoordinatorConfig, JobSpec, RecoveryReport,
-    VmClient, VmConfig,
+    BatchOp, BatchReply, Coordinator, CoordinatorConfig, JobSpec, RebalanceReport,
+    RecoveryReport, VmClient, VmConfig,
 };

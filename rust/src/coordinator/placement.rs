@@ -5,7 +5,17 @@
 //! balancing reasons". `NodeSet` is a [`FileStore`] whose create places
 //! each new file on the least-used node with room, so a chain's files can
 //! span nodes transparently.
+//!
+//! Placement is no longer write-once: the [`crate::migrate`] subsystem
+//! moves whole chains between nodes under guest I/O and commits the move
+//! by flipping this index ([`NodeSet::commit_migration`]); crash
+//! recovery rebuilds the index from the nodes' durable file lists
+//! ([`NodeSet::rebuild_index`]). Chain-locality placement
+//! ([`NodeSet::create_file_near`] / [`NodeSet::hinted`]) keeps a chain's
+//! snapshots on the node already holding it instead of scattering them
+//! file-by-file.
 
+use crate::migrate::journal::JOURNAL_PREFIX;
 use crate::storage::backend::BackendRef;
 use crate::storage::node::StorageNode;
 use crate::storage::store::FileStore;
@@ -27,13 +37,21 @@ impl NodeSet {
         Ok(NodeSet { nodes, index: Mutex::new(HashMap::new()) })
     }
 
-    /// Least-used node that still has capacity headroom. Pressure, not
-    /// raw usage: condemned (pending GC delete) bytes do not block
-    /// placement — their reclamation is already scheduled.
+    /// Does node `i` still have thin-provisioning headroom? Committed
+    /// bytes (pressure + migration reservations), not raw usage:
+    /// condemned (pending GC delete) bytes do not block placement —
+    /// their reclamation is already scheduled — while reserved bytes
+    /// DO: an in-flight migration has committed them.
+    fn has_headroom(&self, i: usize) -> bool {
+        let n = &self.nodes[i];
+        n.committed_bytes() < n.capacity
+    }
+
+    /// Least-committed node that still has capacity headroom.
     fn pick_node(&self) -> Result<usize> {
         let mut best: Option<(usize, u64)> = None;
         for (i, n) in self.nodes.iter().enumerate() {
-            let used = n.pressure_bytes();
+            let used = n.committed_bytes();
             if used >= n.capacity {
                 continue;
             }
@@ -61,6 +79,108 @@ impl NodeSet {
         Some(Arc::clone(&self.nodes[idx]))
     }
 
+    /// Look a node up by its own name (`node-0`, ...).
+    pub fn node_named(&self, node: &str) -> Option<Arc<StorageNode>> {
+        self.nodes.iter().find(|n| n.name == node).cloned()
+    }
+
+    fn node_idx(&self, node: &str) -> Option<usize> {
+        self.nodes.iter().position(|n| n.name == node)
+    }
+
+    /// Create `name` on the node already holding `near` (chain-locality
+    /// placement: a snapshot's new head belongs next to its chain),
+    /// falling back to [`pick_node`] when that node is unknown or out of
+    /// headroom.
+    ///
+    /// [`pick_node`]: NodeSet::pick_node
+    pub fn create_file_near(&self, name: &str, near: &str) -> Result<BackendRef> {
+        let mut index = self.index.lock().unwrap();
+        if index.contains_key(name) {
+            bail!("file '{name}' already exists in the node set");
+        }
+        let node_idx = match index.get(near).copied() {
+            Some(i) if self.has_headroom(i) => i,
+            _ => self.pick_node()?,
+        };
+        let backend = self.nodes[node_idx].create_file(name)?;
+        index.insert(name.to_string(), node_idx);
+        Ok(backend)
+    }
+
+    /// Create `name` on the named node, no fallback (deterministic
+    /// placement for fixtures, demos and benches).
+    pub fn create_file_on(&self, name: &str, node: &str) -> Result<BackendRef> {
+        let node_idx = self
+            .node_idx(node)
+            .ok_or_else(|| anyhow!("no storage node '{node}'"))?;
+        let mut index = self.index.lock().unwrap();
+        if index.contains_key(name) {
+            bail!("file '{name}' already exists in the node set");
+        }
+        let backend = self.nodes[node_idx].create_file(name)?;
+        index.insert(name.to_string(), node_idx);
+        Ok(backend)
+    }
+
+    /// A [`FileStore`] view whose creates land near `near` (snapshot
+    /// locality: pass the chain's active volume).
+    pub fn hinted(self: &Arc<Self>, near: &str) -> HintedStore {
+        HintedStore { set: Arc::clone(self), near: near.to_string() }
+    }
+
+    /// A [`FileStore`] view whose creates all land on one named node.
+    pub fn pinned(self: &Arc<Self>, node: &str) -> Result<PinnedStore> {
+        if self.node_idx(node).is_none() {
+            bail!("no storage node '{node}'");
+        }
+        Ok(PinnedStore { set: Arc::clone(self), node: node.to_string() })
+    }
+
+    /// Atomic switchover of a migration: every `name` now resolves to
+    /// `target`. The caller has already made the target copies durable
+    /// and committed the migration journal; the superseded source copies
+    /// are its to condemn.
+    pub fn commit_migration(&self, names: &[String], target: &str) -> Result<()> {
+        let t = self
+            .node_idx(target)
+            .ok_or_else(|| anyhow!("no storage node '{target}'"))?;
+        let mut index = self.index.lock().unwrap();
+        for n in names {
+            index.insert(n.clone(), t);
+        }
+        Ok(())
+    }
+
+    /// Rebuild the name→node index from the nodes' durable file lists —
+    /// the index itself is volatile and a freshly booted coordinator
+    /// would otherwise be unable to locate any pre-existing chain file
+    /// (the pre-fix bug: `locate`/`node_of`/`delete_file` silently
+    /// worked on an empty map after recovery). Migration journals
+    /// (`.migrate.*`) are control-plane metadata, not placed files, and
+    /// are skipped. Returns the names found on more than one node —
+    /// after [`crate::migrate::recover_migrations`] resolved every
+    /// journal there should be none; survivors indicate corruption and
+    /// keep the LAST node scanned as a deterministic tiebreak.
+    pub fn rebuild_index(&self) -> Vec<String> {
+        let mut index = self.index.lock().unwrap();
+        index.clear();
+        let mut duplicates = Vec::new();
+        for (i, node) in self.nodes.iter().enumerate() {
+            let mut names = node.file_names();
+            names.sort();
+            for f in names {
+                if f.starts_with(JOURNAL_PREFIX) {
+                    continue;
+                }
+                if index.insert(f.clone(), i).is_some() {
+                    duplicates.push(f);
+                }
+            }
+        }
+        duplicates
+    }
+
     /// Per-node stored bytes (load-balance report).
     pub fn usage(&self) -> Vec<(String, u64)> {
         self.nodes
@@ -69,7 +189,7 @@ impl NodeSet {
             .collect()
     }
 
-    /// Per-node capacity report including the GC view.
+    /// Per-node capacity report including the GC and migration view.
     pub fn node_stats(&self) -> Vec<NodeStats> {
         self.nodes
             .iter()
@@ -78,6 +198,7 @@ impl NodeSet {
                 used_bytes: n.used_bytes(),
                 condemned_bytes: n.condemned_bytes(),
                 pressure_bytes: n.pressure_bytes(),
+                reserved_bytes: n.reserved_bytes(),
                 reclaimed_bytes: n.reclaimed_bytes(),
                 gc_deletes: n.gc_deletes(),
             })
@@ -105,6 +226,9 @@ pub struct NodeStats {
     pub condemned_bytes: u64,
     /// used - condemned: what thin provisioning counts.
     pub pressure_bytes: u64,
+    /// Bytes reserved for in-flight migration copies (also counted by
+    /// placement and `would_overflow`).
+    pub reserved_bytes: u64,
     /// Bytes returned by GC sweeps so far.
     pub reclaimed_bytes: u64,
     /// Files deleted by GC sweeps so far.
@@ -140,13 +264,55 @@ impl FileStore for NodeSet {
     }
 }
 
+/// Chain-locality view of a [`NodeSet`]: creates land on the node holding
+/// the `near` anchor (falling back to least-used placement on overflow).
+pub struct HintedStore {
+    set: Arc<NodeSet>,
+    near: String,
+}
+
+impl FileStore for HintedStore {
+    fn create_file(&self, name: &str) -> Result<BackendRef> {
+        self.set.create_file_near(name, &self.near)
+    }
+
+    fn open_file(&self, name: &str) -> Result<BackendRef> {
+        self.set.open_file(name)
+    }
+
+    fn delete_file(&self, name: &str) -> Result<()> {
+        self.set.delete_file(name)
+    }
+}
+
+/// Deterministic-placement view of a [`NodeSet`]: creates land on one
+/// named node, errors included (no fallback).
+pub struct PinnedStore {
+    set: Arc<NodeSet>,
+    node: String,
+}
+
+impl FileStore for PinnedStore {
+    fn create_file(&self, name: &str) -> Result<BackendRef> {
+        self.set.create_file_on(name, &self.node)
+    }
+
+    fn open_file(&self, name: &str) -> Result<BackendRef> {
+        self.set.open_file(name)
+    }
+
+    fn delete_file(&self, name: &str) -> Result<()> {
+        self.set.delete_file(name)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::metrics::clock::{CostModel, VirtClock};
     use crate::qcow::image::DataMode;
-    use crate::qcow::{snapshot, Chain, Image};
     use crate::qcow::layout::{Geometry, FEATURE_BFI};
+    use crate::qcow::{snapshot, Chain, Image};
 
     fn set(caps: &[u64]) -> NodeSet {
         let clock = VirtClock::new();
@@ -229,6 +395,78 @@ mod tests {
         assert_eq!(s0.condemned_bytes, 100 << 10);
         assert_eq!(s0.pressure_bytes, 8 << 10);
         assert_eq!(s0.used_bytes, (100 << 10) + (8 << 10));
+    }
+
+    #[test]
+    fn reservations_steer_placement_away() {
+        let ns = set(&[u64::MAX, u64::MAX]);
+        let f0 = ns.create_file("f0").unwrap(); // node-0 (first of equals)
+        f0.write_at(&[1u8; 8 << 10], 0).unwrap();
+        // node-1 is emptier, but a migration reserved space on it
+        ns.node_named("node-1").unwrap().reserve(1 << 20).unwrap();
+        ns.create_file("f1").unwrap();
+        assert_eq!(ns.locate("f1").unwrap(), "node-0");
+        let stats = ns.node_stats();
+        assert_eq!(stats[1].reserved_bytes, 1 << 20);
+    }
+
+    #[test]
+    fn hinted_creates_colocate_until_overflow() {
+        let ns = Arc::new(set(&[192 << 10, u64::MAX]));
+        let f0 = ns.create_file_on("anchor", "node-0").unwrap();
+        f0.write_at(&[1u8; 64 << 10], 0).unwrap();
+        let hinted = ns.hinted("anchor");
+        let f1 = hinted.create_file("h1").unwrap();
+        f1.write_at(&[1u8; 64 << 10], 0).unwrap();
+        assert_eq!(ns.locate("h1").unwrap(), "node-0", "hint honoured");
+        // node-0 is full now (192 KiB capacity, 128 KiB + new file would
+        // round past it): the hint falls back to pick_node
+        let f2 = hinted.create_file("h2").unwrap();
+        f2.write_at(&[1u8; 64 << 10], 0).unwrap();
+        let f3 = hinted.create_file("h3").unwrap();
+        f3.write_at(&[1u8; 64 << 10], 0).unwrap();
+        assert_eq!(
+            ns.locate("h3").unwrap(),
+            "node-1",
+            "overflow falls back to least-used placement"
+        );
+        // unknown anchors never fail creation
+        let h = ns.hinted("no-such-file");
+        h.create_file("h4").unwrap();
+    }
+
+    #[test]
+    fn commit_migration_flips_the_index() {
+        let ns = set(&[u64::MAX, u64::MAX]);
+        ns.create_file_on("a", "node-0").unwrap();
+        ns.create_file_on("b", "node-0").unwrap();
+        ns.commit_migration(&["a".into(), "b".into()], "node-1").unwrap();
+        assert_eq!(ns.locate("a").unwrap(), "node-1");
+        assert_eq!(ns.locate("b").unwrap(), "node-1");
+        assert!(ns.commit_migration(&["a".into()], "node-9").is_err());
+    }
+
+    #[test]
+    fn rebuild_index_restores_location_after_reboot() {
+        let clock = VirtClock::new();
+        let a = StorageNode::new("node-0", clock.clone(), CostModel::default());
+        let b = StorageNode::new("node-1", clock.clone(), CostModel::default());
+        let ns1 = NodeSet::new(vec![Arc::clone(&a), Arc::clone(&b)]).unwrap();
+        ns1.create_file_on("f0", "node-0").unwrap();
+        ns1.create_file_on("f1", "node-1").unwrap();
+        b.create_file(".migrate.vm").unwrap(); // journal: never indexed
+        // "reboot": a fresh set over the same durable nodes knows nothing
+        let ns2 = NodeSet::new(vec![Arc::clone(&a), Arc::clone(&b)]).unwrap();
+        assert!(ns2.locate("f0").is_none(), "pre-rebuild: index empty");
+        let dups = ns2.rebuild_index();
+        assert!(dups.is_empty());
+        assert_eq!(ns2.locate("f0").unwrap(), "node-0");
+        assert_eq!(ns2.locate("f1").unwrap(), "node-1");
+        assert!(ns2.locate(".migrate.vm").is_none(), "journals stay off-index");
+        // a lingering duplicate (unresolved migration) is reported
+        a.create_file("f1").unwrap();
+        let dups = ns2.rebuild_index();
+        assert_eq!(dups, vec!["f1".to_string()]);
     }
 
     #[test]

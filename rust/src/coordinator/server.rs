@@ -28,7 +28,8 @@ use super::stats::{VmStats, VmStatsSnapshot};
 use super::streaming::{StreamReport, StreamingOrchestrator};
 use crate::blockjob::scheduler::{JobScheduler, Reservation};
 use crate::blockjob::{
-    JobKind, JobRunner, JobShared, JobStatus, LiveStampJob, LiveStreamJob, Step,
+    BlockJob, JobFence, JobKind, JobRunner, JobShared, JobStatus, LiveStampJob,
+    LiveStreamJob, Step,
 };
 use crate::cache::CacheConfig;
 use crate::chaingen::ChainSpec;
@@ -38,7 +39,9 @@ use crate::metrics::counters::CounterSnapshot;
 use crate::metrics::memory::MemoryAccountant;
 use crate::qcow::image::DataMode;
 use crate::qcow::{qcheck, snapshot, Chain};
+use crate::migrate::rebalance::{NodePressure, RebalancePlan, VmFootprint};
 use crate::runtime::service::RuntimeService;
+use crate::storage::node::StorageNode;
 use crate::util::lock_unpoisoned;
 use crate::vdisk::scalable::ScalableDriver;
 use crate::vdisk::vanilla::VanillaDriver;
@@ -128,9 +131,30 @@ pub struct RecoveryReport {
     pub chains_checked: u64,
     /// Chains that needed a chain-level repair pass.
     pub chains_repaired: u64,
+    /// Interrupted migrations resolved target-authoritative (journal
+    /// committed: superseded source copies deleted).
+    pub migrations_committed: u64,
+    /// Interrupted migrations rolled back source-authoritative (no
+    /// commit record: partial target copies deleted).
+    pub migrations_rolled_back: u64,
+    /// File names still present on more than one node after migration
+    /// resolution — should be empty; survivors indicate corruption.
+    pub duplicate_files: Vec<String>,
     /// Files that would not open/repair (orphans of interrupted creates,
     /// foreign files) with the reason — GC's business, not a hard error.
     pub unopenable: Vec<String>,
+}
+
+/// Outcome of [`Coordinator::rebalance`].
+#[derive(Clone, Debug)]
+pub struct RebalanceReport {
+    /// The planner's verdict (moves + before/projected ratios).
+    pub plan: RebalancePlan,
+    /// Moves actually executed (0 on a dry run).
+    pub executed: usize,
+    /// Fleet max/min committed-pressure ratio after execution (equals
+    /// the pre-plan ratio on a dry run).
+    pub final_ratio: f64,
 }
 
 /// One operation of a batched guest submission ([`VmClient::submit`]).
@@ -163,13 +187,21 @@ enum Request {
     },
     /// Begin a live block job on this VM's worker.
     JobStart {
-        spec: JobSpec,
+        builder: JobBuilder,
         shared: Arc<JobShared>,
         increment_clusters: u64,
         reply: SyncSender<Result<()>>,
     },
     Stop,
 }
+
+/// Constructs a job on the worker thread, where the driver's chain and
+/// fence live. Stream/stamp builders are trivial closures; the migration
+/// builder captures the node set, GC registry and target so the
+/// [`crate::migrate::MirrorJob`] can journal and create its target
+/// copies at start.
+type JobBuilder =
+    Box<dyn FnOnce(&Chain, &Arc<JobFence>) -> Result<Box<dyn BlockJob>> + Send>;
 
 struct VmHandle {
     tx: SyncSender<Request>,
@@ -180,12 +212,15 @@ struct VmHandle {
     data_mode: DataMode,
 }
 
-/// Registry entry for a job: its cross-thread handle plus the bandwidth
-/// reservation to give back once the job is terminal.
+/// Registry entry for a job: its cross-thread handle plus whatever must
+/// be given back once the job is terminal — bandwidth reservations
+/// (migrations hold one per involved node) and, for migrations, the
+/// capacity reservation on the recipient.
 struct JobEntry {
     vm: String,
     shared: Arc<JobShared>,
-    reservation: Option<Reservation>,
+    reservations: Vec<Reservation>,
+    capacity: Option<(Arc<StorageNode>, u64)>,
 }
 
 /// The coordinator: owns nodes, VMs, the AOT runtime, the job ledger and
@@ -438,12 +473,17 @@ impl Coordinator {
         let new_file = new_file.to_string();
         let t0 = self.clock.now();
         client.with_chain(Box::new(move |chain| {
+            // chain-locality placement: the new head belongs on the node
+            // already holding the chain's active volume, not wherever
+            // least-used placement would scatter it (falls back to
+            // pick_node when that node is out of headroom)
+            let store = nodes.hinted(&chain.active().name);
             match kind {
                 DriverKind::Scalable => {
-                    snapshot::snapshot_sqemu(chain, nodes.as_ref(), &new_file)?
+                    snapshot::snapshot_sqemu(chain, &store, &new_file)?
                 }
                 DriverKind::Vanilla => {
-                    snapshot::snapshot_vanilla(chain, nodes.as_ref(), &new_file)?
+                    snapshot::snapshot_vanilla(chain, &store, &new_file)?
                 }
             }
             Ok(new_file.clone())
@@ -503,9 +543,20 @@ impl Coordinator {
     /// APIs). Returns the job's cross-thread handle.
     pub fn start_job(self: &Arc<Self>, vm: &str, spec: JobSpec) -> Result<Arc<JobShared>> {
         self.reap_jobs();
-        if spec.kind == JobKind::Gc {
-            bail!("gc jobs own no chain; use Coordinator::run_gc");
-        }
+        let builder: JobBuilder = match spec.kind {
+            JobKind::Gc => bail!("gc jobs own no chain; use Coordinator::run_gc"),
+            JobKind::Mirror => {
+                bail!("migrations carry a target node; use Coordinator::migrate_vm")
+            }
+            JobKind::Stream => Box::new(|chain, fence| {
+                Ok(Box::new(LiveStreamJob::new(chain, Arc::clone(fence)))
+                    as Box<dyn BlockJob>)
+            }),
+            JobKind::Stamp => Box::new(|chain, fence| {
+                Ok(Box::new(LiveStampJob::new(chain, Arc::clone(fence)))
+                    as Box<dyn BlockJob>)
+            }),
+        };
         let client = self.client(vm)?;
         // locate the active volume's node for admission
         let active_name =
@@ -514,45 +565,231 @@ impl Coordinator {
             anyhow!("cannot locate the node holding '{active_name}' for job admission")
         })?;
         let reservation = self.scheduler.admit(&node, spec.rate_bps)?;
-        let id = {
-            let mut n = lock_unpoisoned(&self.next_job_id);
-            *n += 1;
-            format!("job-{}", *n)
-        };
-        let shared = Arc::new(JobShared::new(&id, spec.kind, spec.rate_bps));
+        let shared = Arc::new(JobShared::new(&self.next_job_id(), spec.kind, spec.rate_bps));
         if spec.start_paused {
             shared.pause();
         }
-        let (reply, rx) = sync_channel(1);
-        let started: Result<()> = (|| {
-            client
-                .tx
-                .send(Request::JobStart {
-                    spec,
-                    shared: Arc::clone(&shared),
-                    increment_clusters: self.cfg.job_increment_clusters,
-                    reply,
-                })
-                .map_err(|_| anyhow!("vm worker gone"))?;
-            rx.recv().map_err(|_| anyhow!("vm worker gone"))?
-        })();
-        if let Err(e) = started {
+        if let Err(e) = self.send_job_start(&client, builder, &shared) {
             self.scheduler.release(&reservation);
             return Err(e);
         }
-        let stats = {
-            let vms = lock_unpoisoned(&self.vms);
-            vms.get(vm).map(|h| Arc::clone(&h.stats))
-        };
-        if let Some(stats) = stats {
-            stats.jobs_started.fetch_add(1, Relaxed);
-        }
+        self.note_job_started(vm);
         lock_unpoisoned(&self.jobs).push(JobEntry {
             vm: vm.to_string(),
             shared: Arc::clone(&shared),
-            reservation: Some(reservation),
+            reservations: vec![reservation],
+            capacity: None,
         });
         Ok(shared)
+    }
+
+    fn next_job_id(&self) -> String {
+        let mut n = lock_unpoisoned(&self.next_job_id);
+        *n += 1;
+        format!("job-{}", *n)
+    }
+
+    fn send_job_start(
+        &self,
+        client: &VmClient,
+        builder: JobBuilder,
+        shared: &Arc<JobShared>,
+    ) -> Result<()> {
+        let (reply, rx) = sync_channel(1);
+        client
+            .tx
+            .send(Request::JobStart {
+                builder,
+                shared: Arc::clone(shared),
+                increment_clusters: self.cfg.job_increment_clusters,
+                reply,
+            })
+            .map_err(|_| anyhow!("vm worker gone"))?;
+        rx.recv().map_err(|_| anyhow!("vm worker gone"))?
+    }
+
+    fn note_job_started(&self, vm: &str) {
+        let vms = lock_unpoisoned(&self.vms);
+        if let Some(h) = vms.get(vm) {
+            h.stats.jobs_started.fetch_add(1, Relaxed);
+        }
+    }
+
+    // ------------------------------------------------------- migration
+
+    /// Live-migrate a VM's whole chain to storage node `target` while
+    /// the guest keeps serving: a [`crate::migrate::MirrorJob`] admitted
+    /// like any other live job (bandwidth reserved on the recipient and
+    /// every donor node) plus a *capacity* reservation on the recipient
+    /// for the chain's bytes, held until the job is terminal so
+    /// placement cannot overcommit the node mid-copy. The reservation is
+    /// released by the lazy reap (any job API or [`Coordinator::wait_job`]);
+    /// between switchover and reap the recipient is conservatively
+    /// over-committed by the landed bytes. Returns the job handle; poll
+    /// it or [`Coordinator::wait_job`] it.
+    pub fn migrate_vm(
+        self: &Arc<Self>,
+        vm: &str,
+        target: &str,
+        rate_bps: u64,
+    ) -> Result<Arc<JobShared>> {
+        self.reap_jobs();
+        let client = self.client(vm)?;
+        let target_node = self
+            .nodes
+            .node_named(target)
+            .ok_or_else(|| anyhow!("no storage node '{target}'"))?;
+        let files = self.chain_files(vm)?;
+        let mut moved_bytes = 0u64;
+        let mut admit_nodes: Vec<String> = vec![target_node.name.clone()];
+        let mut any = false;
+        for f in &files {
+            let node = self
+                .nodes
+                .node_of(f)
+                .ok_or_else(|| anyhow!("cannot locate '{f}' in the node set"))?;
+            if node.name == target_node.name {
+                continue;
+            }
+            any = true;
+            moved_bytes += node.open_file(f).map(|b| b.stored_bytes()).unwrap_or(0);
+            if !admit_nodes.contains(&node.name) {
+                admit_nodes.push(node.name.clone());
+            }
+        }
+        if !any {
+            bail!("vm '{vm}' chain already lives on node '{target}'");
+        }
+        target_node.reserve(moved_bytes)?;
+        let mut reservations: Vec<Reservation> = Vec::new();
+        for n in &admit_nodes {
+            match self.scheduler.admit(n, rate_bps) {
+                Ok(r) => reservations.push(r),
+                Err(e) => {
+                    for r in &reservations {
+                        self.scheduler.release(r);
+                    }
+                    target_node.release(moved_bytes);
+                    return Err(e);
+                }
+            }
+        }
+        let shared =
+            Arc::new(JobShared::new(&self.next_job_id(), JobKind::Mirror, rate_bps));
+        let nodes = Arc::clone(&self.nodes);
+        let gc = Arc::clone(&self.gc);
+        let (vm_id, target_name) = (vm.to_string(), target_node.name.clone());
+        let builder: JobBuilder = Box::new(move |chain, _fence| {
+            Ok(Box::new(crate::migrate::MirrorJob::new(
+                chain,
+                nodes,
+                gc,
+                &target_name,
+                &vm_id,
+            )?) as Box<dyn BlockJob>)
+        });
+        if let Err(e) = self.send_job_start(&client, builder, &shared) {
+            for r in &reservations {
+                self.scheduler.release(r);
+            }
+            target_node.release(moved_bytes);
+            return Err(e);
+        }
+        self.note_job_started(vm);
+        lock_unpoisoned(&self.jobs).push(JobEntry {
+            vm: vm.to_string(),
+            shared: Arc::clone(&shared),
+            reservations,
+            capacity: Some((target_node, moved_bytes)),
+        });
+        Ok(shared)
+    }
+
+    /// Block until `shared` is terminal (the worker drains the job while
+    /// its queue is idle), release its reservations, and return the
+    /// final status.
+    pub fn wait_job(&self, shared: &Arc<JobShared>) -> JobStatus {
+        while !shared.state().is_terminal() {
+            std::thread::sleep(std::time::Duration::from_millis(1));
+        }
+        self.reap_jobs();
+        shared.status()
+    }
+
+    /// Plan (and unless `dry_run`, execute) a fleet rebalance: read
+    /// per-node pressure, pick donor→recipient chain moves under
+    /// `threshold` (max/min committed-pressure ratio), and drive each
+    /// move through [`Coordinator::migrate_vm`] sequentially. Returns
+    /// the plan and the ratio it left the fleet at.
+    pub fn rebalance(
+        self: &Arc<Self>,
+        threshold: f64,
+        rate_bps: u64,
+        dry_run: bool,
+    ) -> Result<RebalanceReport> {
+        let pressures: Vec<NodePressure> = self
+            .nodes
+            .nodes()
+            .iter()
+            .map(|n| NodePressure {
+                name: n.name.clone(),
+                pressure: n.committed_bytes(),
+                capacity: n.capacity,
+            })
+            .collect();
+        let mut footprints: Vec<VmFootprint> = Vec::new();
+        for vm in self.vm_names() {
+            let files = self.chain_files(&vm)?;
+            // BTreeMap: the dominant-node pick must break ties
+            // deterministically (dry-run and execution see one plan)
+            let mut per_node: std::collections::BTreeMap<String, u64> =
+                std::collections::BTreeMap::new();
+            let mut total = 0u64;
+            for f in &files {
+                if let Some(node) = self.nodes.node_of(f) {
+                    let bytes =
+                        node.open_file(f).map(|b| b.stored_bytes()).unwrap_or(0);
+                    *per_node.entry(node.name.clone()).or_default() += bytes;
+                    total += bytes;
+                }
+            }
+            // the planner needs both sides of a scattered chain: what a
+            // move takes off the dominant node vs what it lands on the
+            // recipient
+            let Some((home, resident)) =
+                per_node.into_iter().max_by_key(|(_, bytes)| *bytes)
+            else {
+                continue;
+            };
+            footprints.push(VmFootprint { vm, node: home, bytes: resident, total });
+        }
+        let plan = crate::migrate::plan(&pressures, &footprints, threshold, 16);
+        let mut executed = 0usize;
+        if !dry_run {
+            for m in &plan.moves {
+                let shared = self.migrate_vm(&m.vm, &m.to, rate_bps)?;
+                let st = self.wait_job(&shared);
+                if st.state != crate::blockjob::JobState::Completed {
+                    bail!(
+                        "rebalance: migration of '{}' to '{}' ended {}: {:?}",
+                        m.vm,
+                        m.to,
+                        st.state.name(),
+                        st.error
+                    );
+                }
+                executed += 1;
+            }
+        }
+        let final_ratio = crate::migrate::rebalance::pressure_ratio(
+            &self
+                .nodes
+                .nodes()
+                .iter()
+                .map(|n| n.committed_bytes())
+                .collect::<Vec<_>>(),
+        );
+        Ok(RebalanceReport { plan, executed, final_ratio })
     }
 
     /// All jobs ever started (newest last), with live status.
@@ -631,14 +868,9 @@ impl Coordinator {
     pub fn run_gc(&self, rate_bps: u64) -> Result<GcReport> {
         self.reap_jobs();
         // admission: one reservation per node with condemned files
-        let mut node_names: Vec<String> = Vec::new();
-        for (file, _) in self.gc.condemned() {
-            if let Some(n) = self.nodes.locate(&file) {
-                if !node_names.contains(&n) {
-                    node_names.push(n);
-                }
-            }
-        }
+        // (named condemnations via the index, migration replicas via
+        // their pinned node)
+        let node_names = self.gc.condemned_nodes();
         let mut reservations = Vec::new();
         for n in &node_names {
             match self.scheduler.admit(n, rate_bps) {
@@ -660,7 +892,8 @@ impl Coordinator {
         lock_unpoisoned(&self.jobs).push(JobEntry {
             vm: "(gc)".to_string(),
             shared: Arc::clone(&shared),
-            reservation: None,
+            reservations: Vec::new(),
+            capacity: None,
         });
         let run = (|| -> Result<()> {
             let mut driver =
@@ -720,11 +953,16 @@ impl Coordinator {
         if let Some(err) = t.error {
             bail!("gc sweep failed: {err}");
         }
+        // committed migration journals whose replicas the sweep just
+        // deleted have served their purpose (a journal must outlive the
+        // source copies it covers, never the other way round)
+        let journals_cleaned = crate::migrate::cleanup_journals(self.nodes.as_ref());
         Ok(GcReport {
             files_deleted: t.copied,
             reclaimed_bytes: t.bytes_copied,
             gc_ns: t.finished_ns.saturating_sub(t.started_ns),
             remaining_condemned: self.gc.condemned_count() as u64,
+            journals_cleaned,
         })
     }
 
@@ -747,11 +985,34 @@ impl Coordinator {
     /// gates each `Existing` chain on a clean check at launch).
     pub fn recover(&self) -> RecoveryReport {
         let mut report = RecoveryReport::default();
+        // Reboot semantics: only file bytes survived. Per-node volatile
+        // bookkeeping (condemned marks, migration reservations, write
+        // watches) is cleared and re-derived from durable state.
+        for node in self.nodes.nodes() {
+            node.clear_volatile();
+        }
+        // Interrupted migrations first: every name must resolve to
+        // exactly one authoritative copy (journal committed → target
+        // wins, superseded sources deleted; else → source wins, partial
+        // targets deleted) BEFORE the index is rebuilt or images opened.
+        let mig = crate::migrate::recover_migrations(self.nodes.as_ref());
+        report.migrations_committed = mig.committed;
+        report.migrations_rolled_back = mig.rolled_back;
+        for e in mig.errors {
+            report.unopenable.push(e);
+        }
+        // The name→node index is volatile too: rebuild it from the
+        // nodes' durable file lists (pre-fix, a freshly booted
+        // coordinator could not locate any chain file).
+        report.duplicate_files = self.nodes.rebuild_index();
         let mut backed: std::collections::HashSet<String> =
             std::collections::HashSet::new();
         let mut images: Vec<String> = Vec::new();
         for node in self.nodes.nodes() {
             for name in node.file_names() {
+                if name.starts_with(crate::migrate::JOURNAL_PREFIX) {
+                    continue; // control-plane metadata, not an image
+                }
                 let opened = node
                     .open_file(&name)
                     .and_then(|b| crate::qcow::Image::open(&name, b, DataMode::Real));
@@ -801,13 +1062,19 @@ impl Coordinator {
         report
     }
 
-    /// Release bandwidth reservations of terminal jobs (lazy reaping).
+    /// Release bandwidth and capacity reservations of terminal jobs
+    /// (lazy reaping). A completed migration's copied bytes are real
+    /// usage on the recipient by now, so its capacity reservation is
+    /// released either way — the files themselves keep the space.
     fn reap_jobs(&self) {
         let mut jobs = lock_unpoisoned(&self.jobs);
         for e in jobs.iter_mut() {
             if e.shared.state().is_terminal() {
-                if let Some(r) = e.reservation.take() {
+                for r in e.reservations.drain(..) {
                     self.scheduler.release(&r);
+                }
+                if let Some((node, bytes)) = e.capacity.take() {
+                    node.release(bytes);
                 }
             }
         }
@@ -1096,33 +1363,29 @@ fn handle_control(
             let _ = reply.send(r);
             false
         }
-        Request::JobStart { spec, shared, increment_clusters, reply } => {
+        Request::JobStart { builder, shared, increment_clusters, reply } => {
             let r = if runner.is_some() {
                 Err(anyhow!("a block job is already running on this vm"))
-            } else if spec.kind == JobKind::Gc {
-                Err(anyhow!("gc jobs own no chain; use Coordinator::run_gc"))
             } else {
-                let fence = Arc::clone(driver.fence());
-                let job: Box<dyn crate::blockjob::BlockJob> = match spec.kind {
-                    JobKind::Stream => {
-                        Box::new(LiveStreamJob::new(driver.chain(), Arc::clone(&fence)))
-                    }
-                    JobKind::Stamp => {
-                        Box::new(LiveStampJob::new(driver.chain(), Arc::clone(&fence)))
-                    }
-                    JobKind::Gc => unreachable!("rejected above"),
-                };
-                let burst = increment_clusters
-                    .saturating_mul(driver.chain().active().geom().cluster_size());
-                *runner = Some(JobRunner::new(
-                    job,
-                    shared,
-                    fence,
-                    increment_clusters,
-                    burst,
-                    clock.now(),
-                ));
-                Ok(())
+                (|| {
+                    let fence = Arc::clone(driver.fence());
+                    // flush first: a migration mirror reads the files
+                    // underneath the driver, so cached dirty state must
+                    // be on "disk" before the bulk copy starts
+                    driver.flush()?;
+                    let job = builder(driver.chain(), &fence)?;
+                    let burst = increment_clusters
+                        .saturating_mul(driver.chain().active().geom().cluster_size());
+                    *runner = Some(JobRunner::new(
+                        job,
+                        shared,
+                        fence,
+                        increment_clusters,
+                        burst,
+                        clock.now(),
+                    ));
+                    Ok(())
+                })()
             };
             let _ = reply.send(r);
             false

@@ -22,6 +22,9 @@ pub struct AuditReport {
     pub reachable: u64,
     /// Files in the deferred-delete set (awaiting a GC sweep).
     pub condemned: Vec<String>,
+    /// Target copies a running (uncommitted) migration is still
+    /// building — off-index by design, not leaks.
+    pub in_flight: Vec<String>,
     /// Files on nodes that are neither reachable nor condemned, with
     /// their stored bytes: stranded capacity.
     pub leaked: Vec<(String, u64)>,
@@ -68,6 +71,12 @@ pub fn walk_backing(
 }
 
 /// Audit `nodes` against the chains registered in `registry`.
+///
+/// Node-aware since migrations exist: a file name can briefly live on
+/// two nodes, and only the copy the placement index points at counts as
+/// reachable — the off-index copy must be a condemned migration replica
+/// or it is a leak. Migration journals (`.migrate.*`) are control-plane
+/// metadata cleaned up by GC/recovery, not capacity.
 pub fn audit(nodes: &NodeSet, registry: &GcRegistry) -> AuditReport {
     let mut report = AuditReport::default();
     let mut reachable: HashSet<String> = HashSet::new();
@@ -84,12 +93,38 @@ pub fn audit(nodes: &NodeSet, registry: &GcRegistry) -> AuditReport {
         .map(|(name, _)| name)
         .collect();
     for node in nodes.nodes() {
+        // target copies of a migration still in flight on this node:
+        // listed in an uncommitted journal — off-index by design
+        let mut in_flight: HashSet<String> = HashSet::new();
+        for jname in node
+            .file_names()
+            .into_iter()
+            .filter(|n| n.starts_with(crate::migrate::JOURNAL_PREFIX))
+        {
+            if let Some(state) = crate::migrate::journal::read_journal(node, &jname) {
+                if !state.committed {
+                    in_flight.extend(state.moves.into_iter().map(|(f, _)| f));
+                }
+            }
+        }
         for f in node.file_names() {
-            if reachable.contains(&f) {
+            if f.starts_with(crate::migrate::JOURNAL_PREFIX) {
                 continue;
             }
-            if condemned.contains(&f) {
+            let on_index = nodes.locate(&f).as_deref() == Some(node.name.as_str());
+            if on_index && reachable.contains(&f) {
+                continue;
+            }
+            if on_index && condemned.contains(&f) {
                 report.condemned.push(f);
+                continue;
+            }
+            if registry.is_replica_condemned(&node.name, &f) {
+                report.condemned.push(format!("{f}@{}", node.name));
+                continue;
+            }
+            if !on_index && in_flight.contains(&f) {
+                report.in_flight.push(format!("{f}@{}", node.name));
                 continue;
             }
             let bytes = node.open_file(&f).map(|b| b.stored_bytes()).unwrap_or(0);
@@ -97,6 +132,7 @@ pub fn audit(nodes: &NodeSet, registry: &GcRegistry) -> AuditReport {
         }
     }
     report.condemned.sort();
+    report.in_flight.sort();
     report.leaked.sort();
     report
 }
@@ -168,6 +204,76 @@ mod tests {
         assert_eq!(r.leaked.len(), 1);
         assert_eq!(r.leaked[0].0, "orphan");
         assert_eq!(r.leaked_bytes(), 8 << 10);
+    }
+
+    #[test]
+    fn off_index_copy_is_a_leak_unless_replica_condemned() {
+        let clock = crate::metrics::clock::VirtClock::new();
+        let nodes = Arc::new(
+            NodeSet::new(vec![
+                StorageNode::new("n0", clock.clone(), CostModel::default()),
+                StorageNode::new("n1", clock.clone(), CostModel::default()),
+            ])
+            .unwrap(),
+        );
+        let reg = Arc::new(GcRegistry::new(Arc::clone(&nodes)));
+        make_chain(&nodes, &reg, "a", 1);
+        // simulate a committed migration: a second physical copy of the
+        // chain file on n1, index flipped to it — the n0 copy is now
+        // off-index
+        let file = "a-0";
+        let src = nodes.node_of(file).unwrap();
+        let (dst_node_name, dst) = if src.name == "n0" { ("n1", nodes.node_named("n1").unwrap()) } else { ("n0", nodes.node_named("n0").unwrap()) };
+        let src_backend = nodes.open_file(file).unwrap();
+        let mut buf = vec![0u8; src_backend.len() as usize];
+        src_backend.read_at(&mut buf, 0).unwrap();
+        let copy = dst.create_file(file).unwrap();
+        copy.write_at(&buf, 0).unwrap();
+        nodes.commit_migration(&[file.to_string()], dst_node_name).unwrap();
+        // journals are ignored by the audit
+        dst.create_file(".migrate.a").unwrap();
+
+        let r = audit(&nodes, &reg);
+        assert_eq!(r.leaked.len(), 1, "off-index copy not condemned: {r:?}");
+        assert_eq!(r.leaked[0].0, file);
+
+        reg.condemn_replica(&src.name, file, "a");
+        let r = audit(&nodes, &reg);
+        assert!(r.is_clean(), "{:?}", r.leaked);
+        assert_eq!(r.condemned, vec![format!("{file}@{}", src.name)]);
+    }
+
+    #[test]
+    fn in_flight_migration_copies_are_not_leaks() {
+        let clock = crate::metrics::clock::VirtClock::new();
+        let nodes = Arc::new(
+            NodeSet::new(vec![
+                StorageNode::new("n0", clock.clone(), CostModel::default()),
+                StorageNode::new("n1", clock.clone(), CostModel::default()),
+            ])
+            .unwrap(),
+        );
+        let reg = Arc::new(GcRegistry::new(Arc::clone(&nodes)));
+        make_chain(&nodes, &reg, "a", 1);
+        let file = "a-0";
+        let src_name = nodes.locate(file).unwrap();
+        let dst = if src_name == "n0" {
+            nodes.node_named("n1").unwrap()
+        } else {
+            nodes.node_named("n0").unwrap()
+        };
+        // an uncommitted journal + a partial target copy = a migration
+        // mid-copy, not a leak
+        let _j = crate::migrate::MigrationJournal::create(
+            &dst,
+            "a",
+            &[(file.to_string(), src_name)],
+        )
+        .unwrap();
+        dst.create_file(file).unwrap().write_at(b"part", 0).unwrap();
+        let r = audit(&nodes, &reg);
+        assert!(r.is_clean(), "{:?}", r.leaked);
+        assert_eq!(r.in_flight, vec![format!("{file}@{}", dst.name)]);
     }
 
     #[test]

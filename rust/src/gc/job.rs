@@ -55,7 +55,14 @@ impl BlockJob for GcJob {
                     inc.copied += 1;
                     inc.bytes += bytes;
                 }
-                None => break,
+                None => {
+                    // nothing more is deletable THIS run — entries a
+                    // transient failure kept condemned (e.g. a replica
+                    // on a down node) wait for the next sweep; spinning
+                    // on them here would never terminate
+                    inc.complete = true;
+                    return Ok(inc);
+                }
             }
         }
         inc.complete = self.registry.condemned_count() == 0;

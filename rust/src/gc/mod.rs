@@ -52,4 +52,7 @@ pub struct GcReport {
     pub gc_ns: u64,
     /// Condemned files left behind (cancelled / resurrected races).
     pub remaining_condemned: u64,
+    /// Committed migration journals removed because the sweep deleted
+    /// the last source replica they covered.
+    pub journals_cleaned: u64,
 }

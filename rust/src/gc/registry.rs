@@ -31,6 +31,11 @@ struct Inner {
     chains: HashMap<String, Vec<String>>,
     /// deferred-delete set (BTreeMap: deterministic sweep order)
     condemned: BTreeMap<String, Condemned>,
+    /// Superseded migration replicas, keyed `(node name, file name)`:
+    /// the committed switchover moved the *name* to another node, so
+    /// these copies are off-index and gated by no refcount — the name's
+    /// references follow the index. Deleted directly on their node.
+    replicas: BTreeMap<(String, String), Condemned>,
     /// bytes reclaimed per origin chain since the last drain
     reclaimed_by: HashMap<String, u64>,
 }
@@ -111,8 +116,68 @@ impl GcRegistry {
         self.inner.lock().unwrap().condemned.contains_key(file)
     }
 
+    /// Condemn the superseded copy of `file` on `node_name` after a
+    /// committed migration moved the name elsewhere. The copy leaves
+    /// thin-provisioning pressure immediately and is physically deleted
+    /// by the next sweep — directly on its node, bypassing the name
+    /// index (which now points at the migration target).
+    pub fn condemn_replica(&self, node_name: &str, file: &str, origin: &str) {
+        let Some(node) = self.nodes.node_named(node_name) else {
+            return;
+        };
+        let bytes = node.open_file(file).map(|b| b.stored_bytes()).unwrap_or(0);
+        node.mark_condemned(file);
+        self.inner.lock().unwrap().replicas.insert(
+            (node_name.to_string(), file.to_string()),
+            Condemned { bytes, origin: origin.to_string() },
+        );
+    }
+
+    /// Is the copy of `file` on `node_name` a condemned migration
+    /// replica?
+    pub fn is_replica_condemned(&self, node_name: &str, file: &str) -> bool {
+        self.inner
+            .lock()
+            .unwrap()
+            .replicas
+            .contains_key(&(node_name.to_string(), file.to_string()))
+    }
+
+    /// Snapshot of the condemned migration replicas.
+    pub fn condemned_replicas(&self) -> Vec<((String, String), Condemned)> {
+        self.inner
+            .lock()
+            .unwrap()
+            .replicas
+            .iter()
+            .map(|(k, v)| (k.clone(), v.clone()))
+            .collect()
+    }
+
     pub fn condemned_count(&self) -> usize {
-        self.inner.lock().unwrap().condemned.len()
+        let inner = self.inner.lock().unwrap();
+        inner.condemned.len() + inner.replicas.len()
+    }
+
+    /// Names of every node holding something deletable (sweep
+    /// admission): the index nodes of name-condemned files plus the
+    /// pinned nodes of condemned replicas.
+    pub fn condemned_nodes(&self) -> Vec<String> {
+        let inner = self.inner.lock().unwrap();
+        let mut names: Vec<String> = Vec::new();
+        for file in inner.condemned.keys() {
+            if let Some(n) = self.nodes.locate(file) {
+                if !names.contains(&n) {
+                    names.push(n);
+                }
+            }
+        }
+        for (node, _) in inner.replicas.keys() {
+            if !names.contains(node) {
+                names.push(node.clone());
+            }
+        }
+        names
     }
 
     /// Snapshot of the deferred-delete set (name, info), sweep order.
@@ -126,15 +191,11 @@ impl GcRegistry {
             .collect()
     }
 
-    /// Bytes awaiting reclamation.
+    /// Bytes awaiting reclamation (named condemnations plus replicas).
     pub fn condemned_bytes(&self) -> u64 {
-        self.inner
-            .lock()
-            .unwrap()
-            .condemned
-            .values()
-            .map(|c| c.bytes)
-            .sum()
+        let inner = self.inner.lock().unwrap();
+        inner.condemned.values().map(|c| c.bytes).sum::<u64>()
+            + inner.replicas.values().map(|c| c.bytes).sum::<u64>()
     }
 
     /// Registered chains and their file lists (leak-audit input).
@@ -156,6 +217,33 @@ impl GcRegistry {
     /// the deferred-delete set is empty.
     pub fn sweep_one(&self) -> Option<(String, u64)> {
         let mut inner = self.inner.lock().unwrap();
+        // superseded migration replicas first: off-index copies, no
+        // refcount gate (the name's references follow the flipped index)
+        let replica_keys: Vec<(String, String)> =
+            inner.replicas.keys().cloned().collect();
+        for key in replica_keys {
+            let Some(c) = inner.replicas.remove(&key) else { continue };
+            let (node_name, file) = key.clone();
+            let Some(node) = self.nodes.node_named(&node_name) else {
+                continue; // node left the set: nothing left to reclaim
+            };
+            let bytes = node
+                .open_file(&file)
+                .map(|b| b.stored_bytes())
+                .unwrap_or(c.bytes);
+            if node.delete_file(&file).is_err() {
+                // transient failure (e.g. the node is down): keep the
+                // replica condemned so a later sweep retries instead of
+                // stranding the copy forever
+                inner.replicas.insert(key, c);
+                continue;
+            }
+            node.note_reclaimed(bytes);
+            self.reclaimed_bytes.fetch_add(bytes, Relaxed);
+            self.files_deleted.fetch_add(1, Relaxed);
+            *inner.reclaimed_by.entry(c.origin).or_default() += bytes;
+            return Some((file, bytes));
+        }
         loop {
             let name = inner.condemned.keys().next()?.clone();
             let c = inner.condemned.remove(&name).expect("key just seen");
@@ -285,6 +373,31 @@ mod tests {
         assert!(!reg.is_condemned("base"));
         assert_eq!(reg.sweep_one(), None, "nothing deletable");
         assert!(nodes.open_file("base").is_ok());
+    }
+
+    #[test]
+    fn replica_condemnation_bypasses_the_refcount_gate() {
+        let (nodes, reg) = setup(&["img"]);
+        // a second physical copy of the same name on another node is not
+        // representable through setup(); simulate the post-switchover
+        // state: the name is live (referenced) but the n0 copy is a
+        // superseded replica
+        reg.sync_chain("vm", vec!["img".into()]);
+        assert_eq!(reg.refcount("img"), 1);
+        reg.condemn_replica("n0", "img", "vm");
+        assert!(reg.is_replica_condemned("n0", "img"));
+        assert_eq!(reg.condemned_count(), 1);
+        assert!(reg.condemned_bytes() >= 1 << 10);
+        assert_eq!(reg.condemned_nodes(), vec!["n0".to_string()]);
+        // the sweep deletes the replica even though the NAME is referenced
+        let (name, bytes) = reg.sweep_one().unwrap();
+        assert_eq!(name, "img");
+        assert_eq!(bytes, 1 << 10);
+        assert!(nodes.node_named("n0").unwrap().open_file("img").is_err());
+        assert_eq!(reg.condemned_count(), 0);
+        // unknown node: condemnation is a no-op
+        reg.condemn_replica("n9", "img", "vm");
+        assert_eq!(reg.condemned_count(), 0);
     }
 
     #[test]

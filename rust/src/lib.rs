@@ -21,6 +21,8 @@
 //!   stream/stamp jobs interleaved with guest I/O.
 //! * [`gc`] — chain garbage collection: cross-chain reference registry,
 //!   deferred-delete set, rate-limited sweep job and leak audit.
+//! * [`migrate`] — live chain migration between storage nodes (mirror
+//!   job, crash-safe switchover journal) and the fleet rebalancer.
 //! * [`guest`] — simulated guest workloads (dd, fio, YCSB over an LSM
 //!   key-value store, VM boot).
 //! * [`chaingen`], [`characterize`] — chain generation + the §3 study.
@@ -39,6 +41,7 @@ pub mod coordinator;
 pub mod gc;
 pub mod guest;
 pub mod metrics;
+pub mod migrate;
 pub mod qcow;
 pub mod runtime;
 pub mod storage;

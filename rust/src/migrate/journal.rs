@@ -1,0 +1,225 @@
+//! The migration journal: the durable record that makes a live chain
+//! migration crash-safe.
+//!
+//! During a migration the same file name exists on two nodes (the source
+//! copy serving the guest and the target copy being built). The NodeSet
+//! index knows which is authoritative, but the index is volatile — after
+//! a power cut only file bytes survive. The journal, a `.migrate.<vm>`
+//! file on the TARGET node, is the durable arbiter, with two ordering
+//! rules (DESIGN.md §12):
+//!
+//! 1. the journal's `begin` record (with the full move list) is durable
+//!    BEFORE any target copy is created — every duplicate file a crash
+//!    can leave behind is covered by a journal;
+//! 2. the `committed` record is durable only AFTER every target byte is
+//!    flushed — it is THE switchover point: recovery finding it makes
+//!    the target authoritative (source copies are superseded); recovery
+//!    not finding it rolls the partial target copies back.
+//!
+//! The line format reuses the PR-4 job-journal conventions: one
+//! whitespace-separated record per `\n`-terminated line, a torn
+//! (unterminated or unparsable) tail is skipped, `checkpoint` lines
+//! carry the durable copy cursor. Recovery today resolves uncommitted
+//! migrations by rolling the partial copies back wholesale; the cursor
+//! is recorded (target flushed before the line that claims it) so the
+//! planned resume path (ROADMAP: "Migration resume") can continue an
+//! interrupted bulk copy instead.
+
+use crate::storage::backend::BackendRef;
+use crate::storage::node::StorageNode;
+use anyhow::{bail, Result};
+use std::sync::Arc;
+
+/// Name prefix of journal files on their target node. These are
+/// control-plane metadata: placement (`NodeSet::rebuild_index`) and the
+/// GC leak audit skip them.
+pub const JOURNAL_PREFIX: &str = ".migrate.";
+
+/// Writer handle for one migration's journal (lives on the target node).
+pub struct MigrationJournal {
+    backend: BackendRef,
+    len: u64,
+}
+
+impl MigrationJournal {
+    pub fn journal_name(vm: &str) -> String {
+        format!("{JOURNAL_PREFIX}{vm}")
+    }
+
+    /// Create the journal on `target` and durably record the migration
+    /// intent — vm id plus every `(file, source node)` pair — BEFORE the
+    /// caller creates any target copy (ordering rule 1).
+    pub fn create(
+        target: &Arc<StorageNode>,
+        vm: &str,
+        moves: &[(String, String)],
+    ) -> Result<MigrationJournal> {
+        let name = Self::journal_name(vm);
+        if target.open_file(&name).is_ok() {
+            bail!(
+                "migration journal '{name}' already exists on node '{}': an \
+                 earlier migration of this vm is unresolved (run gc or recover \
+                 first)",
+                target.name
+            );
+        }
+        let backend = target.create_file(&name)?;
+        let mut j = MigrationJournal { backend, len: 0 };
+        j.append(&format!("begin {vm}"))?;
+        for (file, src) in moves {
+            j.append(&format!("file {file} {src}"))?;
+        }
+        j.backend.flush()?;
+        Ok(j)
+    }
+
+    fn append(&mut self, line: &str) -> Result<()> {
+        let data = format!("{line}\n");
+        self.backend.write_at(data.as_bytes(), self.len)?;
+        self.len += data.len() as u64;
+        Ok(())
+    }
+
+    /// Durably record the copy cursor: `file_idx` files are fully
+    /// mirrored and the current file is mirrored up to byte `cursor`.
+    /// The caller flushed the target copies first (image state before
+    /// the journal line that claims it — the PR-4 ordering).
+    pub fn checkpoint(&mut self, file_idx: usize, cursor: u64) -> Result<()> {
+        self.append(&format!("checkpoint {file_idx} {cursor}"))?;
+        self.backend.flush()
+    }
+
+    /// Durably record the switchover (ordering rule 2). After this
+    /// returns, recovery resolves the migration target-authoritative.
+    pub fn commit(&mut self) -> Result<()> {
+        self.append("committed")?;
+        self.backend.flush()
+    }
+}
+
+/// Parsed state of one journal.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct JournalState {
+    pub vm: String,
+    /// `(file, source node)` pairs being moved.
+    pub moves: Vec<(String, String)>,
+    pub committed: bool,
+    /// Last durable copy cursor, if any: (files fully mirrored, byte
+    /// offset within the next).
+    pub cursor: Option<(usize, u64)>,
+}
+
+/// Parse journal content. Only `\n`-terminated lines count — the final
+/// unterminated line is the torn tail of a crashed append — and unknown
+/// or malformed records are skipped, never fatal. Returns `None` when no
+/// durable `begin` record exists (such a journal covers nothing: the
+/// ordering rules say no target copy can predate the begin flush).
+pub fn parse(content: &str) -> Option<JournalState> {
+    let mut state: Option<JournalState> = None;
+    let lines: Vec<&str> = content.lines().collect();
+    let n = if content.ends_with('\n') {
+        lines.len()
+    } else {
+        lines.len().saturating_sub(1)
+    };
+    for line in &lines[..n] {
+        let f: Vec<&str> = line.split_whitespace().collect();
+        match f.as_slice() {
+            ["begin", vm] => {
+                state = Some(JournalState {
+                    vm: vm.to_string(),
+                    moves: Vec::new(),
+                    committed: false,
+                    cursor: None,
+                })
+            }
+            ["file", name, src] => {
+                if let Some(s) = state.as_mut() {
+                    s.moves.push((name.to_string(), src.to_string()));
+                }
+            }
+            ["checkpoint", idx, cur] => {
+                if let Some(s) = state.as_mut() {
+                    if let (Ok(i), Ok(c)) = (idx.parse(), cur.parse()) {
+                        s.cursor = Some((i, c));
+                    }
+                }
+            }
+            ["committed"] => {
+                if let Some(s) = state.as_mut() {
+                    s.committed = true;
+                }
+            }
+            _ => {}
+        }
+    }
+    state
+}
+
+/// Read and parse the journal file `name` on `node` (`None` when absent
+/// or useless — see [`parse`]).
+pub fn read_journal(node: &Arc<StorageNode>, name: &str) -> Option<JournalState> {
+    let backend = node.open_file(name).ok()?;
+    let len = backend.len() as usize;
+    let mut buf = vec![0u8; len];
+    backend.read_at(&mut buf, 0).ok()?;
+    parse(&String::from_utf8_lossy(&buf))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::clock::{CostModel, VirtClock};
+
+    fn node() -> Arc<StorageNode> {
+        StorageNode::new("t", VirtClock::new(), CostModel::default())
+    }
+
+    #[test]
+    fn roundtrip_with_checkpoints_and_commit() {
+        let t = node();
+        let moves = vec![
+            ("img-0".to_string(), "node-0".to_string()),
+            ("img-1".to_string(), "node-0".to_string()),
+        ];
+        let mut j = MigrationJournal::create(&t, "vm-a", &moves).unwrap();
+        let name = MigrationJournal::journal_name("vm-a");
+        let st = read_journal(&t, &name).unwrap();
+        assert_eq!(st.vm, "vm-a");
+        assert_eq!(st.moves, moves);
+        assert!(!st.committed);
+        assert_eq!(st.cursor, None);
+
+        j.checkpoint(1, 4096).unwrap();
+        j.commit().unwrap();
+        let st = read_journal(&t, &name).unwrap();
+        assert!(st.committed);
+        assert_eq!(st.cursor, Some((1, 4096)));
+
+        // a second migration of the same vm must not start over the
+        // unresolved journal
+        assert!(MigrationJournal::create(&t, "vm-a", &moves).is_err());
+    }
+
+    #[test]
+    fn torn_tail_is_skipped() {
+        let full = "begin vm\nfile img-0 node-0\ncommitted\n";
+        let st = parse(full).unwrap();
+        assert!(st.committed);
+        // losing the trailing newline of `committed` un-commits it
+        let torn = &full[..full.len() - 1];
+        let st = parse(torn).unwrap();
+        assert!(!st.committed, "torn commit record does not count");
+        assert_eq!(st.moves.len(), 1);
+        // a journal cut before the begin flush covers nothing
+        assert_eq!(parse("begi"), None);
+        assert_eq!(parse(""), None);
+    }
+
+    #[test]
+    fn unknown_records_are_ignored() {
+        let st = parse("begin vm\nwat 1 2 3\nfile a node-0\ncheckpoint x y\n").unwrap();
+        assert_eq!(st.moves, vec![("a".to_string(), "node-0".to_string())]);
+        assert_eq!(st.cursor, None, "malformed checkpoint skipped");
+    }
+}

@@ -1,0 +1,605 @@
+//! `MirrorJob`: copy a VM's whole chain to another storage node while
+//! the guest keeps writing, then switch over atomically.
+//!
+//! The job runs through the standard [`crate::blockjob::JobRunner`]
+//! machinery on the VM's worker thread, so increments interleave with
+//! guest I/O and the rate limiter meters copy bandwidth. Three phases:
+//!
+//! 1. **Bulk** — every chain file is copied byte-range by byte-range
+//!    through the storage backends (chunks of one cluster; all-zero
+//!    chunks are skipped, preserving sparseness). Before any target copy
+//!    exists, a [`MigrationJournal`] on the recipient durably records
+//!    the move list; the copy cursor is checkpointed into it (flush
+//!    target, then journal line — the PR-4 ordering).
+//! 2. **Converge** — every source file is watched
+//!    ([`crate::storage::node::StorageNode::watch`], the byte-interval
+//!    analogue of the [`JobFence`] write intercept), so guest writes that
+//!    landed behind the bulk cursor are drained as dirty intervals and
+//!    re-mirrored. Rounds repeat until a round drains nothing (or the
+//!    round cap trips — a guest outrunning the rate limit is caught by
+//!    the finalize drain, which is atomic).
+//! 3. **Switchover** (`finalize`, atomic with respect to guest I/O) —
+//!    final drain, flush every target copy, durably commit the journal,
+//!    flip the [`NodeSet`] index, condemn the superseded source copies
+//!    as GC *replicas* (never double-referenced: the name's refcounts
+//!    follow the index), and reopen the chain through the flipped
+//!    namespace so the driver rebinds to the target node.
+//!
+//! Cancel/failure before the commit record tears the partial target
+//! copies and the journal down (`Drop`); a crash instead is resolved by
+//! [`super::recover_migrations`] from the journal.
+//!
+//! [`JobFence`]: crate::blockjob::JobFence
+//! [`NodeSet`]: crate::coordinator::placement::NodeSet
+
+use super::journal::MigrationJournal;
+use crate::blockjob::{BlockJob, Increment, JobKind};
+use crate::coordinator::placement::NodeSet;
+use crate::gc::GcRegistry;
+use crate::qcow::image::DataMode;
+use crate::qcow::Chain;
+use crate::storage::backend::BackendRef;
+use crate::storage::node::StorageNode;
+use crate::storage::watch::{WriteLog, DIRTY_ALL};
+use anyhow::{anyhow, bail, Result};
+use std::collections::VecDeque;
+use std::sync::Arc;
+
+/// Converge rounds before the job stops chasing the guest and lets the
+/// atomic finalize drain close the gap.
+const MAX_CONVERGE_ROUNDS: u32 = 16;
+/// Bulk chunks between durable cursor checkpoints.
+const CHECKPOINT_EVERY_CHUNKS: u64 = 32;
+
+/// One chain file being mirrored.
+struct FileMirror {
+    name: String,
+    src_node: Arc<StorageNode>,
+    src: BackendRef,
+    dst: BackendRef,
+    log: Arc<WriteLog>,
+    /// Source length when the bulk pass started.
+    bulk_len: u64,
+    /// Bulk-copy cursor (bytes).
+    cursor: u64,
+    /// Source length the mirror has accounted for (tail growth beyond it
+    /// is queued as a dirty extent on the next drain).
+    mirrored_len: u64,
+}
+
+pub struct MirrorJob {
+    nodes: Arc<NodeSet>,
+    gc: Arc<GcRegistry>,
+    target: Arc<StorageNode>,
+    vm: String,
+    data_mode: DataMode,
+    active_name: String,
+    files: Vec<FileMirror>,
+    journal: MigrationJournal,
+    chunk: u64,
+    buf: Vec<u8>,
+    /// Bulk progress: index of the file currently being copied.
+    file_idx: usize,
+    bulk_done: bool,
+    /// Dirty extents awaiting re-mirror: (file index, offset, length).
+    pending: VecDeque<(usize, u64, u64)>,
+    converge_rounds: u32,
+    /// A converge round drained nothing (or the cap tripped): ready for
+    /// the atomic switchover.
+    quiesced: bool,
+    committed: bool,
+    chunks_since_ckpt: u64,
+    total: u64,
+}
+
+impl MirrorJob {
+    /// Set up a mirror of `chain` onto `target`. Durably journals the
+    /// intent on the recipient BEFORE creating any target copy, then
+    /// creates the copies and begins watching the sources. Files already
+    /// on the target node are skipped; errors tear everything down.
+    pub fn new(
+        chain: &Chain,
+        nodes: Arc<NodeSet>,
+        gc: Arc<GcRegistry>,
+        target: &str,
+        vm: &str,
+    ) -> Result<MirrorJob> {
+        let target_node = nodes
+            .node_named(target)
+            .ok_or_else(|| anyhow!("no storage node '{target}'"))?;
+        let chunk = chain.active().geom().cluster_size();
+        let mut metas: Vec<(String, Arc<StorageNode>)> = Vec::new();
+        for img in chain.images() {
+            let name = img.name.clone();
+            let src_node = nodes
+                .node_of(&name)
+                .ok_or_else(|| anyhow!("cannot locate '{name}' in the node set"))?;
+            if src_node.name == target_node.name {
+                continue; // already home
+            }
+            metas.push((name, src_node));
+        }
+        if metas.is_empty() {
+            bail!("chain of '{vm}' already lives on node '{target}'");
+        }
+        let moves: Vec<(String, String)> = metas
+            .iter()
+            .map(|(n, s)| (n.clone(), s.name.clone()))
+            .collect();
+        // ordering rule 1: the journal covers every duplicate before the
+        // first duplicate can exist
+        let journal = MigrationJournal::create(&target_node, vm, &moves)?;
+        let mut files: Vec<FileMirror> = Vec::new();
+        let mut err: Option<anyhow::Error> = None;
+        for (name, src_node) in &metas {
+            let built = (|| -> Result<FileMirror> {
+                let src = src_node.open_file(name)?;
+                let dst = target_node.create_file(name)?;
+                // the in-flight copy's bytes are covered by the caller's
+                // capacity reservation: keep them out of pressure until
+                // the switchover makes them the authoritative copy, or
+                // the recipient double-counts up to 2x the chain
+                target_node.mark_condemned(name);
+                let log = src_node.watch(name)?;
+                let bulk_len = src.len();
+                Ok(FileMirror {
+                    name: name.clone(),
+                    src_node: Arc::clone(src_node),
+                    src,
+                    dst,
+                    log,
+                    bulk_len,
+                    cursor: 0,
+                    mirrored_len: bulk_len,
+                })
+            })();
+            match built {
+                Ok(f) => files.push(f),
+                Err(e) => {
+                    err = Some(e);
+                    break;
+                }
+            }
+        }
+        if let Some(e) = err {
+            // tear down ONLY what this constructor created (the built
+            // FileMirrors' target copies and the journal) — the target
+            // node may legitimately hold same-name files it must keep,
+            // e.g. the not-yet-swept replicas of an earlier migration
+            // away from it
+            for f in &files {
+                f.src_node.unwatch(&f.name);
+                let _ = target_node.delete_file(&f.name);
+            }
+            for (name, src_node) in &metas {
+                src_node.unwatch(name);
+            }
+            let _ = target_node.delete_file(&MigrationJournal::journal_name(vm));
+            return Err(e);
+        }
+        let total = files
+            .iter()
+            .map(|f| crate::util::div_ceil(f.bulk_len, chunk))
+            .sum::<u64>()
+            .max(1);
+        Ok(MirrorJob {
+            nodes,
+            gc,
+            target: target_node,
+            vm: vm.to_string(),
+            data_mode: chain.active().data_mode(),
+            active_name: chain.active().name.clone(),
+            files,
+            journal,
+            buf: vec![0u8; chunk as usize],
+            chunk,
+            file_idx: 0,
+            bulk_done: false,
+            pending: VecDeque::new(),
+            converge_rounds: 0,
+            quiesced: false,
+            committed: false,
+            chunks_since_ckpt: 0,
+            total,
+        })
+    }
+
+    /// File names being moved (diagnostics / tests).
+    pub fn moved_files(&self) -> Vec<String> {
+        self.files.iter().map(|f| f.name.clone()).collect()
+    }
+
+    fn done(&self) -> bool {
+        self.bulk_done && self.quiesced && self.pending.is_empty()
+    }
+
+    /// Copy one bulk chunk (or close out the current file). All-zero
+    /// chunks are skipped: the fresh target reads them as holes anyway,
+    /// and materializing them would triple the copy's memory footprint.
+    fn step_bulk(&mut self, inc: &mut Increment) -> Result<()> {
+        let Some(f) = self.files.get_mut(self.file_idx) else {
+            self.bulk_done = true;
+            return Ok(());
+        };
+        if f.cursor >= f.bulk_len {
+            // file boundary: propagate the length (sparse tails carry no
+            // bytes) and checkpoint the durable cursor
+            f.dst.truncate_to(f.bulk_len)?;
+            f.dst.flush()?;
+            self.journal.checkpoint(self.file_idx + 1, 0)?;
+            self.chunks_since_ckpt = 0;
+            self.file_idx += 1;
+            if self.file_idx >= self.files.len() {
+                self.bulk_done = true;
+            }
+            return Ok(());
+        }
+        let n = self.chunk.min(f.bulk_len - f.cursor) as usize;
+        f.src.read_at(&mut self.buf[..n], f.cursor)?;
+        if self.buf[..n].iter().any(|&b| b != 0) {
+            f.dst.write_at(&self.buf[..n], f.cursor)?;
+            inc.copied += 1;
+        }
+        f.cursor += n as u64;
+        inc.processed += 1;
+        inc.bytes += n as u64;
+        self.chunks_since_ckpt += 1;
+        if self.chunks_since_ckpt >= CHECKPOINT_EVERY_CHUNKS {
+            // target state first, then the journal line that claims it:
+            // a crash between the two resumes a little early, never late
+            f.dst.flush()?;
+            self.journal.checkpoint(self.file_idx, f.cursor)?;
+            self.chunks_since_ckpt = 0;
+        }
+        Ok(())
+    }
+
+    /// Drain every file's write log (plus tail growth) into the pending
+    /// queue. Returns the number of extents queued.
+    fn refill_pending(&mut self) -> usize {
+        let mut queued = 0usize;
+        for (i, f) in self.files.iter_mut().enumerate() {
+            for (off, len) in f.log.drain() {
+                let (off, len) = if len == DIRTY_ALL {
+                    (0, f.src.len())
+                } else {
+                    (off, len)
+                };
+                if len > 0 {
+                    self.pending.push_back((i, off, len));
+                    queued += 1;
+                }
+            }
+            let src_len = f.src.len();
+            if src_len > f.mirrored_len {
+                self.pending.push_back((i, f.mirrored_len, src_len - f.mirrored_len));
+                f.mirrored_len = src_len;
+                queued += 1;
+            }
+        }
+        queued
+    }
+
+    /// Re-mirror (up to) one chunk of a dirty extent; the remainder goes
+    /// back to the front of the queue. Dirty chunks are always written —
+    /// the guest may have overwritten non-zero bytes WITH zeros.
+    fn step_extent(&mut self, ext: (usize, u64, u64), inc: &mut Increment) -> Result<()> {
+        let (i, off, len) = ext;
+        let n = self.chunk.min(len);
+        let f = &mut self.files[i];
+        let cap = f.src.len().saturating_sub(off).min(n) as usize;
+        if cap > 0 {
+            f.src.read_at(&mut self.buf[..cap], off)?;
+            f.dst.write_at(&self.buf[..cap], off)?;
+            inc.copied += 1;
+        }
+        inc.processed += 1;
+        inc.bytes += cap as u64;
+        if len > n {
+            self.pending.push_front((i, off + n, len - n));
+        }
+        Ok(())
+    }
+}
+
+impl BlockJob for MirrorJob {
+    fn kind(&self) -> JobKind {
+        JobKind::Mirror
+    }
+
+    fn total_clusters(&self) -> u64 {
+        self.total
+    }
+
+    fn run_increment(&mut self, _chain: &mut Chain, budget: u64) -> Result<Increment> {
+        let mut inc = Increment::default();
+        while inc.processed < budget && !self.done() {
+            if !self.bulk_done {
+                self.step_bulk(&mut inc)?;
+                continue;
+            }
+            if self.pending.is_empty() && !self.quiesced {
+                self.converge_rounds += 1;
+                let queued = self.refill_pending();
+                if queued == 0 || self.converge_rounds >= MAX_CONVERGE_ROUNDS {
+                    // quiet (or the guest outruns us): whatever is left —
+                    // pending below, plus anything written from here on —
+                    // is closed out by the atomic finalize drain
+                    self.quiesced = true;
+                }
+            }
+            match self.pending.pop_front() {
+                Some(ext) => self.step_extent(ext, &mut inc)?,
+                None => break,
+            }
+        }
+        inc.complete = self.done();
+        Ok(inc)
+    }
+
+    /// The switchover. Atomic with respect to guest I/O (runs on the VM
+    /// worker); the runner flushed the driver first, so the write logs
+    /// hold every last byte.
+    fn finalize(&mut self, chain: &mut Chain) -> Result<()> {
+        // final drain: one refill suffices (copying reads the sources,
+        // never writes them), but loop defensively until dry
+        loop {
+            if self.pending.is_empty() && self.refill_pending() == 0 {
+                break;
+            }
+            while let Some(ext) = self.pending.pop_front() {
+                let mut scratch = Increment::default();
+                self.step_extent(ext, &mut scratch)?;
+            }
+        }
+        // every target byte durable BEFORE the commit record (rule 2);
+        // length must match in both directions — a source that shrank
+        // (repair-style discard, surfaced as DIRTY_ALL by the watch)
+        // must not leave a stale tail on the target
+        for f in &self.files {
+            let src_len = f.src.len();
+            if f.dst.len() > src_len {
+                f.dst.shrink_to(src_len)?;
+            }
+            f.dst.truncate_to(src_len)?;
+            f.dst.flush()?;
+        }
+        // Prevalidate the switched-over chain BEFORE the commit record:
+        // opening the target copies is the only fallible part of the
+        // switchover, and it must fail while rollback is still legal —
+        // after the commit the target is authoritative and nothing may
+        // tear it down. Moved files open from the target, unmoved ones
+        // through the (still source-pointing) namespace.
+        let mut switched: Vec<Arc<crate::qcow::Image>> =
+            Vec::with_capacity(chain.len());
+        for img in chain.images() {
+            let name = img.name.as_str();
+            let backend = if self.files.iter().any(|f| f.name == name) {
+                self.target.open_file(name)?
+            } else {
+                self.nodes.open_file(name)?
+            };
+            switched.push(Arc::new(crate::qcow::Image::open(
+                name,
+                backend,
+                self.data_mode,
+            )?));
+        }
+        self.journal.commit()?;
+        // THE switchover point: from here the target is authoritative —
+        // exactly like crash recovery would rule — so nothing below may
+        // roll it back (`Drop` must not tear the target down), and
+        // nothing below can fail (the namespace flip and the in-memory
+        // bookkeeping are infallible; the chain images were prevalidated
+        // above)
+        self.committed = true;
+        // the in-memory switchover the journal just made durable; the
+        // landed bytes count as pressure again now that they are the
+        // authoritative copy (the capacity reservation covered them
+        // during the copy and is released when the job is reaped)
+        let names: Vec<String> = self.files.iter().map(|f| f.name.clone()).collect();
+        self.nodes.commit_migration(&names, &self.target.name)?;
+        for f in &self.files {
+            self.target.uncondemn(&f.name);
+        }
+        // superseded source copies: condemned replicas for the next GC
+        // sweep — never double-referenced, the name's refcounts follow
+        // the flipped index
+        for f in &self.files {
+            self.gc
+                .condemn_replica(&f.src_node.name, &f.name, &self.vm);
+            f.src_node.unwatch(&f.name);
+        }
+        // rebind the chain to the prevalidated target-bound images so
+        // the caller's post-finalize reopen builds caches over them
+        chain.replace_images(switched);
+        Ok(())
+    }
+}
+
+impl Drop for MirrorJob {
+    fn drop(&mut self) {
+        if self.committed {
+            return;
+        }
+        // cancelled or failed before the commit record: the source stays
+        // authoritative — tear down the partial target copies and the
+        // journal (recovery's rollback, minus the crash). Best-effort: on
+        // a dead (power-cut) node the deletes fail and recovery resolves
+        // the leftovers from the journal instead.
+        for f in &self.files {
+            f.src_node.unwatch(&f.name);
+            let _ = self.target.delete_file(&f.name);
+        }
+        let _ = self
+            .target
+            .delete_file(&MigrationJournal::journal_name(&self.vm));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::clock::{CostModel, VirtClock};
+    use crate::qcow::entry::L2Entry;
+    use crate::qcow::layout::{Geometry, FEATURE_BFI};
+    use crate::qcow::{qcheck, snapshot, Image};
+    use crate::storage::store::FileStore;
+
+    fn two_nodes() -> (Arc<VirtClock>, Arc<NodeSet>, Arc<GcRegistry>) {
+        let clock = VirtClock::new();
+        let nodes = Arc::new(
+            NodeSet::new(vec![
+                StorageNode::new("node-0", clock.clone(), CostModel::default()),
+                StorageNode::new("node-1", clock.clone(), CostModel::default()),
+            ])
+            .unwrap(),
+        );
+        let gc = Arc::new(GcRegistry::new(Arc::clone(&nodes)));
+        (clock, nodes, gc)
+    }
+
+    fn build_chain(nodes: &Arc<NodeSet>, depth: usize) -> Chain {
+        let store = nodes.pinned("node-0").unwrap();
+        let b = store.create_file("img-0").unwrap();
+        let img = Image::create(
+            "img-0",
+            b,
+            Geometry::new(12, 256 << 10).unwrap(),
+            FEATURE_BFI,
+            0,
+            None,
+            DataMode::Real,
+        )
+        .unwrap();
+        let mut chain = Chain::new(Arc::new(img)).unwrap();
+        for i in 0..depth {
+            let img = chain.active();
+            let off = img.alloc_data_cluster().unwrap();
+            img.write_data(off, 0, &[i as u8 + 1; 64]).unwrap();
+            img.set_l2_entry(i as u64, L2Entry::local(off, Some(img.chain_index())))
+                .unwrap();
+            snapshot::snapshot_sqemu(&mut chain, &store, &format!("img-{}", i + 1))
+                .unwrap();
+        }
+        chain
+    }
+
+    fn run_to_done(job: &mut MirrorJob, chain: &mut Chain) {
+        let mut inc = Increment::default();
+        while !inc.complete {
+            inc = job.run_increment(chain, 7).unwrap();
+            assert!(inc.processed <= 7, "budget respected");
+        }
+    }
+
+    #[test]
+    fn mirrors_quiet_chain_and_switches_over() {
+        let (_c, nodes, gc) = two_nodes();
+        let mut chain = build_chain(&nodes, 3);
+        gc.sync_chain("vm", chain.file_names());
+        let mut job = MirrorJob::new(
+            &chain,
+            Arc::clone(&nodes),
+            Arc::clone(&gc),
+            "node-1",
+            "vm",
+        )
+        .unwrap();
+        assert_eq!(job.moved_files().len(), 4);
+        run_to_done(&mut job, &mut chain);
+        job.finalize(&mut chain).unwrap();
+        for i in 0..4 {
+            assert_eq!(
+                nodes.locate(&format!("img-{i}")).unwrap(),
+                "node-1",
+                "index flipped"
+            );
+            assert!(
+                gc.is_replica_condemned("node-0", &format!("img-{i}")),
+                "source copy condemned"
+            );
+        }
+        // the chain now reads through node-1, bit-identically
+        assert!(qcheck::check_chain(&chain).unwrap().is_clean());
+        for i in 0..3u64 {
+            let (bfi, off) = chain.resolve_walk(i).unwrap().unwrap();
+            let mut buf = [0u8; 8];
+            chain.get(bfi).unwrap().read_data(off, 0, &mut buf).unwrap();
+            assert_eq!(buf, [i as u8 + 1; 8]);
+        }
+        // sweeping the replicas empties the source node
+        while gc.sweep_one().is_some() {}
+        let n0 = nodes.node_named("node-0").unwrap();
+        assert!(n0.file_names().is_empty(), "{:?}", n0.file_names());
+        // journal cleanup now finds nothing lingering
+        assert_eq!(super::super::cleanup_journals(nodes.as_ref()), 1);
+        let n1 = nodes.node_named("node-1").unwrap();
+        assert_eq!(n1.file_names().len(), 4, "{:?}", n1.file_names());
+    }
+
+    #[test]
+    fn writes_during_mirror_are_remirrored() {
+        let (_c, nodes, gc) = two_nodes();
+        let mut chain = build_chain(&nodes, 2);
+        gc.sync_chain("vm", chain.file_names());
+        let mut job =
+            MirrorJob::new(&chain, Arc::clone(&nodes), Arc::clone(&gc), "node-1", "vm")
+                .unwrap();
+        // a couple of increments into the bulk copy, the guest dirties a
+        // cluster it already copied
+        job.run_increment(&mut chain, 2).unwrap();
+        let active = Arc::clone(chain.active());
+        let off = active.alloc_data_cluster().unwrap();
+        active.write_data(off, 0, &[0xEE; 128]).unwrap();
+        active
+            .set_l2_entry(0, L2Entry::local(off, Some(active.chain_index())))
+            .unwrap();
+        run_to_done(&mut job, &mut chain);
+        job.finalize(&mut chain).unwrap();
+        let (bfi, o) = chain.resolve_walk(0).unwrap().unwrap();
+        let mut buf = [0u8; 16];
+        chain.get(bfi).unwrap().read_data(o, 0, &mut buf).unwrap();
+        assert_eq!(buf, [0xEE; 16], "late write survived the move");
+        assert!(qcheck::check_chain(&chain).unwrap().is_clean());
+    }
+
+    #[test]
+    fn cancel_tears_down_target_copies_and_journal() {
+        let (_c, nodes, gc) = two_nodes();
+        let mut chain = build_chain(&nodes, 2);
+        {
+            let mut job = MirrorJob::new(
+                &chain,
+                Arc::clone(&nodes),
+                Arc::clone(&gc),
+                "node-1",
+                "vm",
+            )
+            .unwrap();
+            job.run_increment(&mut chain, 3).unwrap();
+            // dropped without finalize: the cancel path
+        }
+        let n1 = nodes.node_named("node-1").unwrap();
+        assert!(n1.file_names().is_empty(), "{:?}", n1.file_names());
+        for i in 0..3 {
+            assert_eq!(nodes.locate(&format!("img-{i}")).unwrap(), "node-0");
+        }
+        // and the sources are no longer watched
+        let n0 = nodes.node_named("node-0").unwrap();
+        let log = n0.watch("img-0").unwrap();
+        n0.unwatch("img-0");
+        assert!(!log.is_active());
+    }
+
+    #[test]
+    fn refuses_a_noop_migration() {
+        let (_c, nodes, gc) = two_nodes();
+        let chain = build_chain(&nodes, 1);
+        assert!(MirrorJob::new(&chain, Arc::clone(&nodes), gc, "node-0", "vm").is_err());
+        assert!(
+            MirrorJob::new(&chain, nodes, Arc::new(GcRegistry::new(two_nodes().1)), "node-9", "vm")
+                .is_err()
+        );
+    }
+}

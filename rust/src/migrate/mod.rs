@@ -1,0 +1,282 @@
+//! Live chain migration & fleet rebalancing: data placement as a
+//! continuously corrected decision.
+//!
+//! Until this subsystem, a chain was pinned forever to whatever node
+//! [`NodeSet`]'s create-time placement chose — the only relief valve was
+//! GC. The paper's fleet characterization (§3) shows why that rots:
+//! chains grow to ~1000 files, thin provisioning makes node usage
+//! diverge, and shared bases pin capacity wherever history put it.
+//! Production block stores treat placement as a managed quantity
+//! (cf. FlexBSO's mobility argument); this module is that manager:
+//!
+//! * [`MirrorJob`] — a [`crate::blockjob::BlockJob`] that copies every
+//!   file of a VM's chain to a target node while the guest keeps
+//!   writing: bulk copy, dirty-interval convergence via the
+//!   [`crate::storage::watch`] write intercept, then an atomic
+//!   switchover (journal commit → index flip → source copies condemned
+//!   as GC replicas → chain rebound to the target).
+//! * [`journal`] — the `.migrate.<vm>` durable record on the recipient
+//!   that makes the whole dance crash-safe: recovery resolves every
+//!   interrupted migration to exactly one authoritative copy
+//!   ([`recover_migrations`]), source- or target-authoritative depending
+//!   on whether the commit record became durable.
+//! * [`rebalance`] — the planner that reads per-node pressure and plans
+//!   donor→recipient chain moves under an imbalance threshold;
+//!   [`crate::coordinator::Coordinator::rebalance`] executes the plan.
+//!
+//! Capacity integration: the recipient `reserve`s the chain's bytes for
+//! the whole copy (placement and `would_overflow` count reservations),
+//! and the superseded source copies drop out of pressure the moment they
+//! are condemned — `benches/fig23_migration.rs` plots both the guest's
+//! p99 during a migration and the fleet's max/min pressure ratio with
+//! and without the rebalancer.
+//!
+//! [`NodeSet`]: crate::coordinator::placement::NodeSet
+
+pub mod journal;
+pub mod mirror;
+pub mod rebalance;
+
+pub use journal::{MigrationJournal, JOURNAL_PREFIX};
+pub use mirror::MirrorJob;
+pub use rebalance::{plan, NodePressure, PlannedMove, RebalancePlan, VmFootprint};
+
+use crate::coordinator::placement::NodeSet;
+
+/// Outcome of the recovery pass over interrupted migrations.
+#[derive(Clone, Debug, Default)]
+pub struct MigrationRecovery {
+    /// Journals found committed: the target copies were made
+    /// authoritative and the superseded source copies deleted.
+    pub committed: u64,
+    /// Journals found uncommitted: the partial target copies were rolled
+    /// back, leaving the source authoritative.
+    pub rolled_back: u64,
+    /// Non-fatal oddities (unreadable journals, missing nodes).
+    pub errors: Vec<String>,
+}
+
+/// Resolve every migration journal on `nodes` so each file name has
+/// exactly one authoritative copy. Run at recovery time, BEFORE the
+/// name→node index is rebuilt and before any image is opened:
+///
+/// * `committed` journal → the switchover happened: delete the listed
+///   files from their *source* nodes (superseded copies), then the
+///   journal;
+/// * uncommitted journal → the switchover never happened: delete the
+///   listed files from the *target* node (partial copies), then the
+///   journal.
+///
+/// A journal that does not parse to a durable `begin` record covers
+/// nothing (the ordering rules put the begin flush before the first
+/// target create) and is simply deleted.
+pub fn recover_migrations(nodes: &NodeSet) -> MigrationRecovery {
+    let mut report = MigrationRecovery::default();
+    for target in nodes.nodes() {
+        let mut journals: Vec<String> = target
+            .file_names()
+            .into_iter()
+            .filter(|n| n.starts_with(JOURNAL_PREFIX))
+            .collect();
+        journals.sort();
+        for jname in journals {
+            // rule 4: the journal may only be deleted once every
+            // superseded/partial copy it covers is gone — if any
+            // survives, the journal stays behind as the arbiter for the
+            // next recovery pass
+            let mut cleared = true;
+            match journal::read_journal(target, &jname) {
+                // torn before the begin flush: covers nothing (no target
+                // copy can predate it) — expected under a crash at the
+                // journal create, just drop it
+                None => {}
+                Some(state) if state.committed => {
+                    for (file, src_name) in &state.moves {
+                        let Some(src) = nodes.node_named(src_name) else {
+                            report.errors.push(format!(
+                                "{jname}: source node '{src_name}' unknown"
+                            ));
+                            cleared = false;
+                            continue;
+                        };
+                        if src.name == target.name || src.open_file(file).is_err() {
+                            continue; // nothing superseded left behind
+                        }
+                        if target.open_file(file).is_err() {
+                            // committed yet the target copy is missing:
+                            // corrupted state — keep both the source copy
+                            // and the journal, surface it
+                            report.errors.push(format!(
+                                "{jname}: committed but '{file}' absent on \
+                                 target '{}'",
+                                target.name
+                            ));
+                            cleared = false;
+                            continue;
+                        }
+                        if src.delete_file(file).is_err() {
+                            cleared = false;
+                        }
+                    }
+                    report.committed += 1;
+                }
+                Some(state) => {
+                    for (file, _) in &state.moves {
+                        if target.open_file(file).is_ok()
+                            && target.delete_file(file).is_err()
+                        {
+                            cleared = false;
+                        }
+                    }
+                    report.rolled_back += 1;
+                }
+            }
+            if cleared {
+                let _ = target.delete_file(&jname);
+            }
+        }
+    }
+    report
+}
+
+/// Delete committed journals whose superseded source copies are all
+/// gone (the live-path cleanup: a journal must outlive the replicas it
+/// covers, so [`crate::coordinator::Coordinator::run_gc`] calls this
+/// after the sweep). Returns the number of journals removed.
+pub fn cleanup_journals(nodes: &NodeSet) -> u64 {
+    let mut cleaned = 0u64;
+    for target in nodes.nodes() {
+        for jname in target
+            .file_names()
+            .into_iter()
+            .filter(|n| n.starts_with(JOURNAL_PREFIX))
+        {
+            let Some(state) = journal::read_journal(target, &jname) else {
+                continue;
+            };
+            if !state.committed {
+                continue; // an in-flight migration still owns it
+            }
+            let lingering = state.moves.iter().any(|(file, src_name)| {
+                nodes
+                    .node_named(src_name)
+                    .map_or(false, |src| {
+                        src.name != target.name && src.open_file(file).is_ok()
+                    })
+            });
+            if !lingering && target.delete_file(&jname).is_ok() {
+                cleaned += 1;
+            }
+        }
+    }
+    cleaned
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::clock::{CostModel, VirtClock};
+    use crate::storage::node::StorageNode;
+    use std::sync::Arc;
+
+    fn fleet() -> Arc<NodeSet> {
+        let clock = VirtClock::new();
+        Arc::new(
+            NodeSet::new(vec![
+                StorageNode::new("node-0", clock.clone(), CostModel::default()),
+                StorageNode::new("node-1", clock.clone(), CostModel::default()),
+            ])
+            .unwrap(),
+        )
+    }
+
+    #[test]
+    fn committed_journal_resolves_target_authoritative() {
+        let nodes = fleet();
+        let (n0, n1) = (nodes.node_named("node-0").unwrap(), nodes.node_named("node-1").unwrap());
+        n0.create_file("img").unwrap().write_at(b"old", 0).unwrap();
+        let mut j = MigrationJournal::create(
+            &n1,
+            "vm",
+            &[("img".to_string(), "node-0".to_string())],
+        )
+        .unwrap();
+        n1.create_file("img").unwrap().write_at(b"new", 0).unwrap();
+        j.commit().unwrap();
+        let r = recover_migrations(nodes.as_ref());
+        assert_eq!((r.committed, r.rolled_back), (1, 0));
+        assert!(n0.open_file("img").is_err(), "superseded source copy gone");
+        let mut buf = [0u8; 3];
+        n1.open_file("img").unwrap().read_at(&mut buf, 0).unwrap();
+        assert_eq!(&buf, b"new");
+        assert!(n1.file_names().iter().all(|f| !f.starts_with(JOURNAL_PREFIX)));
+    }
+
+    #[test]
+    fn uncommitted_journal_rolls_back_partial_copies() {
+        let nodes = fleet();
+        let (n0, n1) = (nodes.node_named("node-0").unwrap(), nodes.node_named("node-1").unwrap());
+        n0.create_file("img").unwrap().write_at(b"old", 0).unwrap();
+        let _j = MigrationJournal::create(
+            &n1,
+            "vm",
+            &[("img".to_string(), "node-0".to_string())],
+        )
+        .unwrap();
+        n1.create_file("img").unwrap().write_at(b"par", 0).unwrap();
+        let r = recover_migrations(nodes.as_ref());
+        assert_eq!((r.committed, r.rolled_back), (0, 1));
+        assert!(n1.open_file("img").is_err(), "partial target copy gone");
+        let mut buf = [0u8; 3];
+        n0.open_file("img").unwrap().read_at(&mut buf, 0).unwrap();
+        assert_eq!(&buf, b"old", "source stays authoritative");
+        assert!(n1.file_names().is_empty());
+    }
+
+    #[test]
+    fn recovery_keeps_the_journal_when_a_source_copy_cannot_be_cleared() {
+        let nodes = fleet();
+        let (n0, n1) = (nodes.node_named("node-0").unwrap(), nodes.node_named("node-1").unwrap());
+        n0.create_file("img").unwrap().write_at(b"old", 0).unwrap();
+        // journal names a source node this NodeSet does not know: the
+        // superseded copy cannot be cleared, so the journal must stay
+        // behind as the arbiter (rule 4)
+        let mut j = MigrationJournal::create(
+            &n1,
+            "vm",
+            &[("img".to_string(), "node-gone".to_string())],
+        )
+        .unwrap();
+        n1.create_file("img").unwrap().write_at(b"new", 0).unwrap();
+        j.commit().unwrap();
+        let r = recover_migrations(nodes.as_ref());
+        assert_eq!(r.committed, 1);
+        assert!(!r.errors.is_empty());
+        assert!(
+            n1.open_file(&MigrationJournal::journal_name("vm")).is_ok(),
+            "journal deleted despite an uncleared source copy"
+        );
+    }
+
+    #[test]
+    fn cleanup_keeps_journals_with_lingering_sources() {
+        let nodes = fleet();
+        let (n0, n1) = (nodes.node_named("node-0").unwrap(), nodes.node_named("node-1").unwrap());
+        n0.create_file("img").unwrap().write_at(b"old", 0).unwrap();
+        let mut j = MigrationJournal::create(
+            &n1,
+            "vm",
+            &[("img".to_string(), "node-0".to_string())],
+        )
+        .unwrap();
+        n1.create_file("img").unwrap().write_at(b"new", 0).unwrap();
+        j.commit().unwrap();
+        assert_eq!(cleanup_journals(nodes.as_ref()), 0, "source replica lingers");
+        n0.delete_file("img").unwrap();
+        assert_eq!(cleanup_journals(nodes.as_ref()), 1);
+        assert!(n1
+            .file_names()
+            .iter()
+            .all(|f| !f.starts_with(JOURNAL_PREFIX)));
+    }
+}

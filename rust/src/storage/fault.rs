@@ -98,6 +98,18 @@ impl FaultInjector {
         self.dead.load(Ordering::SeqCst)
     }
 
+    /// Account one non-write durable event (a file create or delete): it
+    /// either fully happens or the power cut loses it entirely. Lets
+    /// stores other than [`FaultStore`] (e.g. a fault-injected
+    /// [`crate::storage::node::StorageNode`]) share the same event
+    /// counter for their namespace mutations.
+    pub fn durable_event(&self) -> Result<()> {
+        match self.begin_event() {
+            Outcome::Proceed => Ok(()),
+            _ => Err(self.power_err()),
+        }
+    }
+
     fn power_err(&self) -> anyhow::Error {
         anyhow!("simulated power failure: storage node is down")
     }

@@ -14,6 +14,7 @@ pub mod mem;
 pub mod node;
 pub mod store;
 pub mod timed;
+pub mod watch;
 
 pub use backend::{Backend, BackendRef};
 pub use dir::DirStore;
@@ -23,3 +24,4 @@ pub use mem::MemBackend;
 pub use node::StorageNode;
 pub use store::FileStore;
 pub use timed::Timed;
+pub use watch::{Watched, WriteLog};

@@ -5,15 +5,30 @@
 //! §3/§4.1 thin provisioning). A `StorageNode` is a named collection of
 //! files sharing one cost model and virtual clock; the coordinator's
 //! placement module assigns backing files to nodes.
+//!
+//! Every file is served through a [`Watched`] wrapper so a live
+//! migration can record the byte extents concurrent writers dirty
+//! ([`StorageNode::watch`]), and the node tracks *capacity reservations*
+//! ([`StorageNode::reserve`]) so thin-provisioning placement accounts
+//! for in-flight migration copies before their bytes land.
 
 use super::backend::BackendRef;
+use super::fault::FaultInjector;
 use super::mem::MemBackend;
 use super::timed::Timed;
+use super::watch::{Watched, WriteLog};
 use crate::metrics::clock::{CostModel, VirtClock};
 use anyhow::{bail, Result};
 use std::collections::{HashMap, HashSet};
 use std::sync::atomic::{AtomicU64, Ordering::Relaxed};
 use std::sync::{Arc, Mutex};
+
+/// One file on the node: its backend plus the write log the migration
+/// mirror drains while copying the file off-node.
+struct FileEntry {
+    backend: BackendRef,
+    log: Arc<WriteLog>,
+}
 
 /// A named storage server: files are created on it and served through its
 /// latency model.
@@ -21,14 +36,22 @@ pub struct StorageNode {
     pub name: String,
     clock: Arc<VirtClock>,
     cost: CostModel,
-    files: Mutex<HashMap<String, BackendRef>>,
+    files: Mutex<HashMap<String, FileEntry>>,
     /// Files condemned by the GC registry (deferred delete): still
     /// physically present, but excluded from thin-provisioning pressure.
     condemned: Mutex<HashSet<String>>,
+    /// Bytes reserved for in-flight migration copies: counted as
+    /// pressure so placement and `would_overflow` see the recipient's
+    /// true commitment before the bytes arrive.
+    reserved: AtomicU64,
     /// Bytes returned by GC sweeps over this node's lifetime.
     reclaimed: AtomicU64,
     /// Files deleted by GC sweeps.
     gc_deletes: AtomicU64,
+    /// Optional crash harness: when set, file creates/deletes count as
+    /// durable events and every backend is fault-wrapped (the
+    /// crash-injection suite's whole-node power-cut model).
+    injector: Option<Arc<FaultInjector>>,
     /// physical capacity in bytes (thin-provisioning trigger); u64::MAX =
     /// unlimited
     pub capacity: u64,
@@ -45,43 +68,92 @@ impl StorageNode {
         cost: CostModel,
         capacity: u64,
     ) -> Arc<Self> {
+        Self::build(name, clock, cost, capacity, None)
+    }
+
+    /// A node whose durable state is routed through `injector`: every
+    /// backend write, file create and file delete is one durable event
+    /// the crash harness may cut (see [`crate::storage::fault`]).
+    pub fn with_fault_injection(
+        name: &str,
+        clock: Arc<VirtClock>,
+        cost: CostModel,
+        capacity: u64,
+        injector: Arc<FaultInjector>,
+    ) -> Arc<Self> {
+        Self::build(name, clock, cost, capacity, Some(injector))
+    }
+
+    fn build(
+        name: &str,
+        clock: Arc<VirtClock>,
+        cost: CostModel,
+        capacity: u64,
+        injector: Option<Arc<FaultInjector>>,
+    ) -> Arc<Self> {
         Arc::new(StorageNode {
             name: name.to_string(),
             clock,
             cost,
             files: Mutex::new(HashMap::new()),
             condemned: Mutex::new(HashSet::new()),
+            reserved: AtomicU64::new(0),
             reclaimed: AtomicU64::new(0),
             gc_deletes: AtomicU64::new(0),
+            injector,
             capacity,
         })
     }
 
-    /// Create a new (timed, in-memory) file on this node.
+    /// Create a new (timed, in-memory, watchable) file on this node.
     pub fn create_file(&self, name: &str) -> Result<BackendRef> {
         let mut files = self.files.lock().unwrap();
         if files.contains_key(name) {
             bail!("file '{name}' already exists on node '{}'", self.name);
         }
-        let backend: BackendRef = Arc::new(Timed::new(
-            MemBackend::new(),
-            Arc::clone(&self.clock),
-            self.cost,
-        ));
-        files.insert(name.to_string(), Arc::clone(&backend));
+        // creating the directory entry is itself a durable event
+        if let Some(inj) = &self.injector {
+            inj.durable_event()?;
+        }
+        let timed: BackendRef = match &self.injector {
+            Some(inj) => Arc::new(Timed::new(
+                super::fault::FaultInjectingBackend::new(
+                    Arc::new(MemBackend::new()),
+                    Arc::clone(inj),
+                ),
+                Arc::clone(&self.clock),
+                self.cost,
+            )),
+            None => Arc::new(Timed::new(
+                MemBackend::new(),
+                Arc::clone(&self.clock),
+                self.cost,
+            )),
+        };
+        let log = Arc::new(WriteLog::default());
+        let backend: BackendRef = Arc::new(Watched::new(timed, Arc::clone(&log)));
+        files.insert(name.to_string(), FileEntry { backend: Arc::clone(&backend), log });
         Ok(backend)
     }
 
     pub fn open_file(&self, name: &str) -> Result<BackendRef> {
+        if let Some(inj) = &self.injector {
+            if inj.is_dead() {
+                bail!("simulated power failure: node '{}' is down", self.name);
+            }
+        }
         self.files
             .lock()
             .unwrap()
             .get(name)
-            .cloned()
+            .map(|e| Arc::clone(&e.backend))
             .ok_or_else(|| anyhow::anyhow!("no file '{name}' on node '{}'", self.name))
     }
 
     pub fn delete_file(&self, name: &str) -> Result<()> {
+        if let Some(inj) = &self.injector {
+            inj.durable_event()?;
+        }
         match self.files.lock().unwrap().remove(name) {
             Some(_) => {
                 self.condemned.lock().unwrap().remove(name);
@@ -95,13 +167,33 @@ impl StorageNode {
         self.files.lock().unwrap().keys().cloned().collect()
     }
 
+    /// Begin recording the byte extents writers dirty in `name` (the
+    /// migration mirror's dirty-interval intercept). Returns the live
+    /// log; drain it with [`WriteLog::drain`], stop with
+    /// [`StorageNode::unwatch`].
+    pub fn watch(&self, name: &str) -> Result<Arc<WriteLog>> {
+        let files = self.files.lock().unwrap();
+        let e = files
+            .get(name)
+            .ok_or_else(|| anyhow::anyhow!("no file '{name}' on node '{}'", self.name))?;
+        e.log.begin();
+        Ok(Arc::clone(&e.log))
+    }
+
+    /// Stop recording writes to `name` (no-op for unknown files).
+    pub fn unwatch(&self, name: &str) {
+        if let Some(e) = self.files.lock().unwrap().get(name) {
+            e.log.end();
+        }
+    }
+
     /// Bytes physically stored across all files (capacity pressure).
     pub fn used_bytes(&self) -> u64 {
         self.files
             .lock()
             .unwrap()
             .values()
-            .map(|f| f.stored_bytes())
+            .map(|e| e.backend.stored_bytes())
             .sum()
     }
 
@@ -129,7 +221,7 @@ impl StorageNode {
             .unwrap()
             .iter()
             .filter_map(|n| files.get(n))
-            .map(|f| f.stored_bytes())
+            .map(|e| e.backend.stored_bytes())
             .sum()
     }
 
@@ -142,8 +234,64 @@ impl StorageNode {
         files
             .iter()
             .filter(|(n, _)| !condemned.contains(n.as_str()))
-            .map(|(_, f)| f.stored_bytes())
+            .map(|(_, e)| e.backend.stored_bytes())
             .sum()
+    }
+
+    /// Reserve `bytes` of capacity for an in-flight migration copy.
+    /// Fails when the reservation would not fit beside the current
+    /// pressure — the recipient-side admission gate.
+    pub fn reserve(&self, bytes: u64) -> Result<()> {
+        let mut cur = self.reserved.load(Relaxed);
+        loop {
+            let committed = self
+                .pressure_bytes()
+                .saturating_add(cur)
+                .saturating_add(bytes);
+            if committed > self.capacity {
+                bail!(
+                    "node '{}' cannot reserve {bytes} bytes: {committed} committed \
+                     of {} capacity",
+                    self.name,
+                    self.capacity
+                );
+            }
+            match self
+                .reserved
+                .compare_exchange(cur, cur + bytes, Relaxed, Relaxed)
+            {
+                Ok(_) => return Ok(()),
+                Err(now) => cur = now,
+            }
+        }
+    }
+
+    /// Give back a migration reservation (completion, cancel or failure).
+    pub fn release(&self, bytes: u64) {
+        let mut cur = self.reserved.load(Relaxed);
+        loop {
+            match self.reserved.compare_exchange(
+                cur,
+                cur.saturating_sub(bytes),
+                Relaxed,
+                Relaxed,
+            ) {
+                Ok(_) => return,
+                Err(now) => cur = now,
+            }
+        }
+    }
+
+    /// Bytes currently reserved for in-flight migrations.
+    pub fn reserved_bytes(&self) -> u64 {
+        self.reserved.load(Relaxed)
+    }
+
+    /// Committed capacity: thin-provisioning pressure plus migration
+    /// reservations — the ONE definition placement, admission, the
+    /// rebalancer and reporting all share.
+    pub fn committed_bytes(&self) -> u64 {
+        self.pressure_bytes().saturating_add(self.reserved_bytes())
     }
 
     /// Account a GC deletion of `bytes` (called by the sweep).
@@ -163,9 +311,23 @@ impl StorageNode {
     }
 
     /// Would adding `bytes` exceed this node's capacity? Condemned files
-    /// do not count: their deletion is already scheduled.
+    /// do not count (their deletion is already scheduled); migration
+    /// reservations DO (their bytes are already committed).
     pub fn would_overflow(&self, bytes: u64) -> bool {
-        self.pressure_bytes().saturating_add(bytes) > self.capacity
+        self.committed_bytes().saturating_add(bytes) > self.capacity
+    }
+
+    /// Drop every piece of volatile bookkeeping (condemned marks,
+    /// migration reservations, live write watches). Crash recovery calls
+    /// this first: none of it survives a reboot — only file bytes do —
+    /// and [`crate::coordinator::Coordinator::recover`] re-derives what
+    /// still applies from the durable state.
+    pub fn clear_volatile(&self) {
+        self.condemned.lock().unwrap().clear();
+        self.reserved.store(0, Relaxed);
+        for e in self.files.lock().unwrap().values() {
+            e.log.end();
+        }
     }
 
     pub fn clock(&self) -> &Arc<VirtClock> {
@@ -246,5 +408,79 @@ mod tests {
         f.write_at(&[1u8; 64 << 10], 0).unwrap();
         assert!(!n.would_overflow(0));
         assert!(n.would_overflow(128 << 10));
+    }
+
+    #[test]
+    fn reservations_count_as_pressure_until_released() {
+        let clock = VirtClock::new();
+        let n = StorageNode::with_capacity("r", clock, CostModel::default(), 128 << 10);
+        n.reserve(100 << 10).unwrap();
+        assert_eq!(n.reserved_bytes(), 100 << 10);
+        assert!(n.would_overflow(64 << 10), "reservation committed the space");
+        assert!(
+            n.reserve(64 << 10).is_err(),
+            "a second reservation cannot overcommit"
+        );
+        n.release(100 << 10);
+        assert_eq!(n.reserved_bytes(), 0);
+        assert!(!n.would_overflow(64 << 10));
+        // release is saturating: an over-release cannot underflow
+        n.release(1 << 20);
+        assert_eq!(n.reserved_bytes(), 0);
+    }
+
+    #[test]
+    fn watch_records_file_writes_until_unwatch() {
+        let n = node();
+        let f = n.create_file("d").unwrap();
+        f.write_at(&[1u8; 16], 0).unwrap(); // before the watch: invisible
+        let log = n.watch("d").unwrap();
+        f.write_at(&[2u8; 16], 64).unwrap();
+        assert_eq!(log.drain(), vec![(64, 16)]);
+        n.unwatch("d");
+        f.write_at(&[3u8; 16], 128).unwrap();
+        assert!(log.drain().is_empty());
+        assert!(n.watch("nope").is_err());
+    }
+
+    #[test]
+    fn clear_volatile_resets_bookkeeping_not_bytes() {
+        let clock = VirtClock::new();
+        let n = StorageNode::with_capacity("v", clock, CostModel::default(), 1 << 20);
+        let f = n.create_file("d").unwrap();
+        f.write_at(&[1u8; 4 << 10], 0).unwrap();
+        n.mark_condemned("d");
+        n.reserve(64 << 10).unwrap();
+        let log = n.watch("d").unwrap();
+        n.clear_volatile();
+        assert_eq!(n.condemned_bytes(), 0);
+        assert_eq!(n.reserved_bytes(), 0);
+        assert!(!log.is_active());
+        assert_eq!(n.used_bytes(), 64 << 10, "file bytes survive (one page)");
+    }
+
+    #[test]
+    fn fault_injected_node_counts_namespace_events() {
+        use crate::storage::fault::FaultInjector;
+        let inj = FaultInjector::new();
+        let clock = VirtClock::new();
+        let n = StorageNode::with_fault_injection(
+            "f",
+            clock,
+            CostModel::default(),
+            u64::MAX,
+            Arc::clone(&inj),
+        );
+        let f = n.create_file("d").unwrap(); // event 0
+        f.write_at(&[1u8; 8], 0).unwrap(); // event 1
+        assert_eq!(inj.events(), 2);
+        inj.arm(0, None);
+        assert!(n.create_file("e").is_err(), "create is cut");
+        assert!(n.open_file("d").is_err(), "node is down");
+        inj.revive();
+        assert!(n.open_file("d").is_ok());
+        let mut buf = [0u8; 8];
+        n.open_file("d").unwrap().read_at(&mut buf, 0).unwrap();
+        assert_eq!(buf, [1u8; 8], "durable bytes survive the cut");
     }
 }

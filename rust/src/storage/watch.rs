@@ -1,0 +1,226 @@
+//! Byte-interval write watching: the storage-layer analogue of the
+//! [`crate::blockjob::JobFence`] write intercept.
+//!
+//! A live migration ([`crate::migrate::MirrorJob`]) copies a file while
+//! the guest keeps writing to it. The [`JobFence`] tracks guest writes at
+//! *virtual-cluster* granularity, which is enough for jobs that rewrite
+//! L2 entries — but a mirror must replicate the file byte-for-byte,
+//! including metadata the drivers mutate outside the fence's view (L2
+//! tables, refcount blocks, header slots, allocator growth). So every
+//! file a [`crate::storage::node::StorageNode`] serves is wrapped in a
+//! [`Watched`] backend holding a [`WriteLog`]: while a watch is active,
+//! every mutation records its byte extent; the mirror drains the log
+//! between copy passes and re-copies exactly the intervals that changed.
+//! When no watch is active the wrapper costs one relaxed atomic load per
+//! write.
+//!
+//! [`JobFence`]: crate::blockjob::JobFence
+
+use super::backend::{Backend, BackendRef};
+use crate::util::lock_unpoisoned;
+use anyhow::Result;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// Extent marker meaning "the whole file may have changed" (recorded for
+/// operations, like `shrink_to`, whose effect is not a simple overwrite).
+pub const DIRTY_ALL: u64 = u64::MAX;
+
+/// Dirty byte extents of one file, recorded while a watch is active.
+#[derive(Debug, Default)]
+pub struct WriteLog {
+    active: AtomicBool,
+    dirty: Mutex<Vec<(u64, u64)>>,
+}
+
+impl WriteLog {
+    /// Begin recording (clears anything a previous watch left behind).
+    pub fn begin(&self) {
+        lock_unpoisoned(&self.dirty).clear();
+        self.active.store(true, Ordering::Release);
+    }
+
+    /// Stop recording and drop the pending extents.
+    pub fn end(&self) {
+        self.active.store(false, Ordering::Release);
+        lock_unpoisoned(&self.dirty).clear();
+    }
+
+    pub fn is_active(&self) -> bool {
+        self.active.load(Ordering::Acquire)
+    }
+
+    /// Record a mutated `[off, off+len)` extent. `len == DIRTY_ALL`
+    /// invalidates the whole file.
+    pub fn note(&self, off: u64, len: u64) {
+        if len == 0 || !self.is_active() {
+            return;
+        }
+        lock_unpoisoned(&self.dirty).push((off, len));
+    }
+
+    /// Take the recorded extents, coalesced (sorted, overlapping and
+    /// adjacent ranges merged). Recording continues — extents noted
+    /// after the drain land in the next one.
+    pub fn drain(&self) -> Vec<(u64, u64)> {
+        let mut v = std::mem::take(&mut *lock_unpoisoned(&self.dirty));
+        if v.is_empty() {
+            return v;
+        }
+        // a whole-file marker swallows everything else
+        if v.iter().any(|&(_, len)| len == DIRTY_ALL) {
+            return vec![(0, DIRTY_ALL)];
+        }
+        v.sort_unstable();
+        let mut out: Vec<(u64, u64)> = Vec::with_capacity(v.len());
+        for (off, len) in v {
+            match out.last_mut() {
+                Some((o, l)) if off <= *o + *l => {
+                    let end = (off + len).max(*o + *l);
+                    *l = end - *o;
+                }
+                _ => out.push((off, len)),
+            }
+        }
+        out
+    }
+
+    /// Extents currently pending (diagnostics).
+    pub fn pending(&self) -> usize {
+        lock_unpoisoned(&self.dirty).len()
+    }
+}
+
+/// Backend decorator feeding a [`WriteLog`]; reads and accounting pass
+/// straight through. Extents are noted BEFORE the inner write, so a
+/// failed or torn write is conservatively marked dirty.
+pub struct Watched {
+    inner: BackendRef,
+    log: Arc<WriteLog>,
+}
+
+impl Watched {
+    pub fn new(inner: BackendRef, log: Arc<WriteLog>) -> Watched {
+        Watched { inner, log }
+    }
+
+    pub fn log(&self) -> &Arc<WriteLog> {
+        &self.log
+    }
+}
+
+impl Backend for Watched {
+    fn read_at(&self, buf: &mut [u8], off: u64) -> Result<()> {
+        self.inner.read_at(buf, off)
+    }
+
+    fn write_at(&self, data: &[u8], off: u64) -> Result<()> {
+        self.log.note(off, data.len() as u64);
+        self.inner.write_at(data, off)
+    }
+
+    fn len(&self) -> u64 {
+        self.inner.len()
+    }
+
+    fn truncate_to(&self, len: u64) -> Result<()> {
+        // growth writes no bytes; the mirror tracks length separately
+        self.inner.truncate_to(len)
+    }
+
+    fn flush(&self) -> Result<()> {
+        self.inner.flush()
+    }
+
+    fn shrink_to(&self, len: u64) -> Result<u64> {
+        // discarding a tail is not an overwrite: invalidate everything
+        self.log.note(0, DIRTY_ALL);
+        self.inner.shrink_to(len)
+    }
+
+    fn read_vectored(&self, iovs: &mut [(u64, &mut [u8])]) -> Result<()> {
+        self.inner.read_vectored(iovs)
+    }
+
+    fn write_vectored(&self, iovs: &[(u64, &[u8])]) -> Result<()> {
+        for (off, data) in iovs {
+            self.log.note(*off, data.len() as u64);
+        }
+        self.inner.write_vectored(iovs)
+    }
+
+    fn charge(&self, off: u64, len: u64) {
+        self.inner.charge(off, len)
+    }
+
+    fn stored_bytes(&self) -> u64 {
+        self.inner.stored_bytes()
+    }
+
+    fn device_ios(&self) -> u64 {
+        self.inner.device_ios()
+    }
+
+    fn now_ns(&self) -> u64 {
+        self.inner.now_ns()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::storage::mem::MemBackend;
+
+    fn watched() -> (Arc<WriteLog>, Watched) {
+        let log = Arc::new(WriteLog::default());
+        let w = Watched::new(Arc::new(MemBackend::new()), Arc::clone(&log));
+        (log, w)
+    }
+
+    #[test]
+    fn records_only_while_active() {
+        let (log, w) = watched();
+        w.write_at(&[1u8; 8], 0).unwrap();
+        assert!(log.drain().is_empty(), "inactive log records nothing");
+        log.begin();
+        w.write_at(&[2u8; 8], 100).unwrap();
+        assert_eq!(log.drain(), vec![(100, 8)]);
+        log.end();
+        w.write_at(&[3u8; 8], 200).unwrap();
+        assert!(log.drain().is_empty());
+    }
+
+    #[test]
+    fn drain_coalesces_overlapping_and_adjacent() {
+        let (log, w) = watched();
+        log.begin();
+        w.write_at(&[1u8; 10], 50).unwrap(); // 50..60
+        w.write_at(&[1u8; 10], 0).unwrap(); // 0..10
+        w.write_at(&[1u8; 10], 10).unwrap(); // adjacent: 0..20
+        w.write_at(&[1u8; 20], 55).unwrap(); // overlap: 50..75
+        assert_eq!(log.drain(), vec![(0, 20), (50, 25)]);
+        assert!(log.drain().is_empty(), "drain empties the log");
+    }
+
+    #[test]
+    fn shrink_marks_whole_file() {
+        let (log, w) = watched();
+        log.begin();
+        w.write_at(&[1u8; 100], 0).unwrap();
+        w.shrink_to(10).unwrap();
+        assert_eq!(log.drain(), vec![(0, DIRTY_ALL)]);
+    }
+
+    #[test]
+    fn vectored_writes_and_passthrough() {
+        let (log, w) = watched();
+        log.begin();
+        w.write_vectored(&[(0, &[1u8; 4][..]), (100, &[2u8; 4][..])])
+            .unwrap();
+        let mut buf = [0u8; 4];
+        w.read_at(&mut buf, 100).unwrap();
+        assert_eq!(buf, [2u8; 4]);
+        assert_eq!(log.drain(), vec![(0, 4), (100, 4)]);
+        assert_eq!(w.len(), 104);
+    }
+}

@@ -1,0 +1,673 @@
+//! Migration under fire: the live chain-migration subsystem's
+//! acceptance suite.
+//!
+//! * Property: mirror + random concurrent guest writes ≡ a non-migrated
+//!   control chain bit-for-bit after switchover (100-deep chain).
+//! * Crash-cut sweep: power-cut a migration at EVERY durable event
+//!   (whole-node fault injection), then `Coordinator::recover()` must
+//!   land on exactly ONE authoritative copy of every file with zero
+//!   leaks (`gc::audit` clean).
+//! * Coordinator e2e: capacity reservation visible during the copy,
+//!   released after; sources GC-reclaimed; reads served throughout.
+//! * Satellites: post-crash placement-index rebuild (pre-fix failing),
+//!   snapshot chain locality, rebalancer convergence under 1.5x.
+
+use sqemu::blockjob::{JobKind, JobRunner, JobShared, JobState, Step};
+use sqemu::cache::CacheConfig;
+use sqemu::chaingen::{generate, ChainSpec};
+use sqemu::coordinator::placement::NodeSet;
+use sqemu::coordinator::server::VmChain;
+use sqemu::coordinator::{Coordinator, CoordinatorConfig, VmConfig};
+use sqemu::gc::GcRegistry;
+use sqemu::metrics::clock::{CostModel, VirtClock};
+use sqemu::metrics::memory::MemoryAccountant;
+use sqemu::migrate::{MirrorJob, JOURNAL_PREFIX};
+use sqemu::qcow::entry::L2Entry;
+use sqemu::qcow::image::{DataMode, Image};
+use sqemu::qcow::layout::{Geometry, FEATURE_BFI};
+use sqemu::qcow::{qcheck, snapshot, Chain};
+use sqemu::storage::fault::FaultInjector;
+use sqemu::storage::node::StorageNode;
+use sqemu::storage::store::FileStore;
+use sqemu::util::rng::Rng;
+use sqemu::vdisk::scalable::ScalableDriver;
+use sqemu::vdisk::{Driver, DriverKind};
+use std::sync::Arc;
+
+const CLUSTER_BITS: u32 = 12; // 4 KiB clusters
+const CS: u64 = 1 << CLUSTER_BITS;
+const VCLUSTERS: u64 = 64;
+const DISK: u64 = VCLUSTERS * CS;
+
+fn two_nodes(clock: &Arc<VirtClock>) -> Arc<NodeSet> {
+    Arc::new(
+        NodeSet::new(vec![
+            StorageNode::new("node-0", clock.clone(), CostModel::default()),
+            StorageNode::new("node-1", clock.clone(), CostModel::default()),
+        ])
+        .unwrap(),
+    )
+}
+
+/// Build a `depth`-deep stamped chain named `{prefix}-0..` through
+/// `store`, one distinct populated cluster per layer (cluster `i %
+/// VCLUSTERS` carries byte `i+1`).
+fn build_chain(store: &dyn FileStore, prefix: &str, depth: usize) -> Chain {
+    let b = store.create_file(&format!("{prefix}-0")).unwrap();
+    let img = Image::create(
+        &format!("{prefix}-0"),
+        b,
+        Geometry::new(CLUSTER_BITS, DISK).unwrap(),
+        FEATURE_BFI,
+        0,
+        None,
+        DataMode::Real,
+    )
+    .unwrap();
+    let mut chain = Chain::new(Arc::new(img)).unwrap();
+    for i in 0..depth {
+        let img = chain.active();
+        let off = img.alloc_data_cluster().unwrap();
+        img.write_data(off, 0, &[(i % 250) as u8 + 1; 256]).unwrap();
+        img.set_l2_entry(
+            (i as u64) % VCLUSTERS,
+            L2Entry::local(off, Some(img.chain_index())),
+        )
+        .unwrap();
+        snapshot::snapshot_sqemu(&mut chain, store, &format!("{prefix}-{}", i + 1))
+            .unwrap();
+    }
+    chain
+}
+
+fn driver_over(chain: Chain, clock: &Arc<VirtClock>) -> ScalableDriver {
+    ScalableDriver::new(
+        chain,
+        CacheConfig::new(16, 32 << 10),
+        Arc::clone(clock),
+        CostModel::default(),
+        MemoryAccountant::new(),
+    )
+}
+
+/// One random guest write, applied identically to both drivers.
+fn twin_write(
+    a: &mut ScalableDriver,
+    b: &mut ScalableDriver,
+    rng: &mut Rng,
+    op: u64,
+) {
+    let vc = rng.below(VCLUSTERS);
+    let off = rng.below(CS - 600);
+    let len = (rng.below(512) + 1) as usize;
+    let val = (op as u8 ^ vc as u8).wrapping_mul(41).wrapping_add(3);
+    let data = vec![val; len];
+    a.write(vc * CS + off, &data).unwrap();
+    b.write(vc * CS + off, &data).unwrap();
+}
+
+/// Tentpole property: a 100-deep chain migrates node-to-node while the
+/// guest writes; post-switchover reads are bit-identical to a
+/// non-migrated control that saw the same writes, the sources become
+/// condemned replicas, a sweep empties the donor, and the audit is
+/// clean throughout.
+#[test]
+fn mirror_under_guest_writes_is_bit_identical() {
+    const DEPTH: usize = 100;
+    let clock = VirtClock::new();
+    let nodes = two_nodes(&clock);
+    let store = nodes.pinned("node-0").unwrap();
+    let chain = build_chain(&store, "m", DEPTH);
+    let files = chain.file_names();
+    let gc = Arc::new(GcRegistry::new(Arc::clone(&nodes)));
+    gc.sync_chain("vm", files.clone());
+    let mut mig = driver_over(chain, &clock);
+
+    // independent control fleet, identical content
+    let ctl_clock = VirtClock::new();
+    let ctl_node = StorageNode::new("ctl", ctl_clock.clone(), CostModel::default());
+    let mut ctl = driver_over(build_chain(&*ctl_node, "m", DEPTH), &ctl_clock);
+
+    mig.flush().unwrap();
+    let fence = Arc::clone(mig.fence());
+    let shared = Arc::new(JobShared::new("mig-1", JobKind::Mirror, 0));
+    let job = Box::new(
+        MirrorJob::new(mig.chain(), Arc::clone(&nodes), Arc::clone(&gc), "node-1", "vm")
+            .unwrap(),
+    );
+    let mut runner = JobRunner::new(job, Arc::clone(&shared), fence, 8, 8 * CS, clock.now());
+
+    let mut rng = Rng::new(0xF16_23);
+    let mut op = 0u64;
+    loop {
+        match runner.step(&mut mig, clock.now()) {
+            Step::Finished => break,
+            Step::Starved { ready_at } => {
+                let now = clock.now();
+                clock.advance(ready_at - now);
+            }
+            _ => {}
+        }
+        // the guest keeps writing (both twins) every few increments
+        if rng.chance(0.4) {
+            twin_write(&mut mig, &mut ctl, &mut rng, op);
+            op += 1;
+        }
+    }
+    let st = shared.status();
+    assert_eq!(st.state, JobState::Completed, "error: {:?}", st.error);
+    assert!(op > 10, "the workload actually interleaved writes: {op}");
+
+    // every chain file now resolves to the target node
+    for f in &files {
+        assert_eq!(nodes.locate(f).unwrap(), "node-1", "{f} not flipped");
+    }
+    // bit-identical to the control, cluster by cluster
+    let mut a = vec![0u8; CS as usize];
+    let mut b = vec![0u8; CS as usize];
+    for vc in 0..VCLUSTERS {
+        mig.read(vc * CS, &mut a).unwrap();
+        ctl.read(vc * CS, &mut b).unwrap();
+        assert_eq!(a, b, "cluster {vc} differs after migration");
+    }
+    assert!(qcheck::check_chain(mig.chain()).unwrap().is_clean());
+
+    // sources are condemned replicas (never double-referenced), the
+    // audit is clean before AND after the sweep, and the sweep empties
+    // the donor node
+    for f in &files {
+        assert!(gc.is_replica_condemned("node-0", f), "{f} not condemned");
+    }
+    let report = sqemu::gc::audit(nodes.as_ref(), &gc);
+    assert!(report.is_clean(), "pre-sweep audit: {:?}", report.leaked);
+    let mut swept = 0;
+    while gc.sweep_one().is_some() {
+        swept += 1;
+    }
+    assert_eq!(swept, files.len());
+    let n0 = nodes.node_named("node-0").unwrap();
+    assert!(n0.file_names().is_empty(), "donor not empty: {:?}", n0.file_names());
+    assert_eq!(sqemu::migrate::cleanup_journals(nodes.as_ref()), 1);
+    let report = sqemu::gc::audit(nodes.as_ref(), &gc);
+    assert!(report.is_clean(), "post-sweep audit: {:?}", report.leaked);
+}
+
+/// A fault-injected two-node fleet sharing one power supply.
+fn faulty_nodes(
+    clock: &Arc<VirtClock>,
+    injector: &Arc<FaultInjector>,
+) -> (Arc<StorageNode>, Arc<StorageNode>, Arc<NodeSet>) {
+    let a = StorageNode::with_fault_injection(
+        "node-0",
+        clock.clone(),
+        CostModel::default(),
+        u64::MAX,
+        Arc::clone(injector),
+    );
+    let b = StorageNode::with_fault_injection(
+        "node-1",
+        clock.clone(),
+        CostModel::default(),
+        u64::MAX,
+        Arc::clone(injector),
+    );
+    let ns =
+        Arc::new(NodeSet::new(vec![Arc::clone(&a), Arc::clone(&b)]).unwrap());
+    (a, b, ns)
+}
+
+const CRASH_DEPTH: usize = 6;
+
+/// Deterministic fixture: a CRASH_DEPTH chain on node-0, layer `i`
+/// populating vcluster `8 + i` (guest writes during the migration stay
+/// in vclusters 0..8, so clusters 8.. are a stable oracle).
+fn crash_fixture(nodes: &Arc<NodeSet>) -> Chain {
+    let store = nodes.pinned("node-0").unwrap();
+    let b = store.create_file("c-0").unwrap();
+    let img = Image::create(
+        "c-0",
+        b,
+        Geometry::new(CLUSTER_BITS, DISK).unwrap(),
+        FEATURE_BFI,
+        0,
+        None,
+        DataMode::Real,
+    )
+    .unwrap();
+    let mut chain = Chain::new(Arc::new(img)).unwrap();
+    for i in 0..CRASH_DEPTH {
+        let img = chain.active();
+        let off = img.alloc_data_cluster().unwrap();
+        img.write_data(off, 0, &[i as u8 + 1; 128]).unwrap();
+        img.set_l2_entry(8 + i as u64, L2Entry::local(off, Some(img.chain_index())))
+            .unwrap();
+        snapshot::snapshot_sqemu(&mut chain, &store, &format!("c-{}", i + 1)).unwrap();
+    }
+    for img in chain.images() {
+        img.flush().unwrap();
+    }
+    chain
+}
+
+/// Run the migration workload (mirror + interleaved guest writes in
+/// vclusters 0..8) until it completes or the power cut kills it.
+fn run_crash_migration(clock: &Arc<VirtClock>, nodes: &Arc<NodeSet>, chain: Chain) {
+    let gc = Arc::new(GcRegistry::new(Arc::clone(nodes)));
+    gc.sync_chain("vm", chain.file_names());
+    let mut d = driver_over(chain, clock);
+    let result = (|| -> anyhow::Result<()> {
+        d.flush()?;
+        let fence = Arc::clone(d.fence());
+        let shared = Arc::new(JobShared::new("mig-c", JobKind::Mirror, 0));
+        let job = Box::new(MirrorJob::new(
+            d.chain(),
+            Arc::clone(nodes),
+            Arc::clone(&gc),
+            "node-1",
+            "vm",
+        )?);
+        let mut runner =
+            JobRunner::new(job, Arc::clone(&shared), fence, 4, 4 * CS, clock.now());
+        let mut rng = Rng::new(0xC0_FFEE);
+        let mut op = 0u64;
+        loop {
+            match runner.step(&mut d, clock.now()) {
+                Step::Finished => break,
+                Step::Starved { ready_at } => {
+                    let now = clock.now();
+                    clock.advance(ready_at - now);
+                }
+                _ => {}
+            }
+            if rng.chance(0.5) {
+                let vc = rng.below(8);
+                let val = 0xA0u8 ^ op as u8;
+                d.write(vc * CS, &[val; 64])?;
+                op += 1;
+            }
+        }
+        let st = shared.status();
+        if let Some(e) = st.error {
+            anyhow::bail!("job failed: {e}");
+        }
+        Ok(())
+    })();
+    // a power cut surfaces as an error somewhere in the loop — fine,
+    // recovery is the subject under test
+    let _ = result;
+}
+
+fn fail_crash_repro(cut: u64, msg: &str) -> ! {
+    let path = std::env::var("CRASH_REPRO_PATH")
+        .unwrap_or_else(|_| "crash_repro.txt".to_string());
+    let note = format!(
+        "migration crash-recovery failure\ncut_at_event={cut}\n{msg}\n(test: \
+         tests/migration.rs::migration_crash_cut_sweep)\n"
+    );
+    let _ = std::fs::write(&path, &note);
+    panic!("{note}");
+}
+
+/// Crash-cut sweep: power-cut the migration at EVERY durable event.
+/// Recovery must land on exactly one authoritative copy of every chain
+/// file, reopen a clean chain with the stable oracle intact, and audit
+/// with zero leaks.
+#[test]
+fn migration_crash_cut_sweep() {
+    // fault-free pass bounds the cut range
+    let injector = FaultInjector::new();
+    let clock = VirtClock::new();
+    let (_a, _b, nodes) = faulty_nodes(&clock, &injector);
+    let chain = crash_fixture(&nodes);
+    let e0 = injector.events();
+    run_crash_migration(&clock, &nodes, chain);
+    let n = injector.events() - e0;
+    assert!(n > 40, "migration too small to be interesting: {n} events");
+
+    // cover every phase of the migration without an unbounded runtime
+    let step = (n / 80).max(1);
+    let mut k = 0u64;
+    while k < n {
+        let injector = FaultInjector::new();
+        let clock = VirtClock::new();
+        let (_a, _b, nodes) = faulty_nodes(&clock, &injector);
+        let chain = crash_fixture(&nodes);
+        injector.arm(k, None);
+        run_crash_migration(&clock, &nodes, chain);
+        injector.revive();
+        verify_crash_recovery(&clock, &nodes, k);
+        k += step;
+    }
+}
+
+fn verify_crash_recovery(clock: &Arc<VirtClock>, nodes: &Arc<NodeSet>, cut: u64) {
+    // "reboot": a fresh coordinator over the same durable nodes
+    let ns2 = Arc::new(
+        NodeSet::new(nodes.nodes().to_vec()).unwrap(),
+    );
+    let coord = Coordinator::new(
+        Arc::clone(&ns2),
+        Arc::clone(clock),
+        CoordinatorConfig::default(),
+        None,
+    );
+    let report = coord.recover();
+    if !report.duplicate_files.is_empty() {
+        fail_crash_repro(
+            cut,
+            &format!("duplicate files after recovery: {:?}", report.duplicate_files),
+        );
+    }
+    // exactly one authoritative copy of every file, no journals left
+    let mut seen = std::collections::HashMap::new();
+    for node in ns2.nodes() {
+        for f in node.file_names() {
+            if f.starts_with(JOURNAL_PREFIX) {
+                fail_crash_repro(cut, &format!("journal '{f}' survived recovery"));
+            }
+            *seen.entry(f).or_insert(0u32) += 1;
+        }
+    }
+    for (f, count) in &seen {
+        if *count != 1 {
+            fail_crash_repro(cut, &format!("file '{f}' on {count} nodes"));
+        }
+    }
+    // the head must reopen clean (recover repaired it) with the stable
+    // oracle intact
+    let head = format!("c-{CRASH_DEPTH}");
+    let chain = match Chain::open(ns2.as_ref(), &head, DataMode::Real) {
+        Ok(c) => c,
+        Err(e) => fail_crash_repro(cut, &format!("reopen failed: {e:#}")),
+    };
+    match qcheck::check_chain(&chain) {
+        Ok(r) if r.is_clean() => {}
+        Ok(r) => fail_crash_repro(cut, &format!("chain dirty: {:?}", r.errors)),
+        Err(e) => fail_crash_repro(cut, &format!("qcheck failed: {e:#}")),
+    }
+    for i in 0..CRASH_DEPTH as u64 {
+        let resolved = chain.resolve_walk(8 + i).unwrap_or(None);
+        let Some((bfi, off)) = resolved else {
+            fail_crash_repro(cut, &format!("oracle cluster {} unresolved", 8 + i));
+        };
+        let mut buf = [0u8; 16];
+        if let Err(e) = chain.get(bfi).unwrap().read_data(off, 0, &mut buf) {
+            fail_crash_repro(cut, &format!("oracle read failed: {e:#}"));
+        }
+        if buf != [i as u8 + 1; 16] {
+            fail_crash_repro(
+                cut,
+                &format!("oracle cluster {} lost: {:?}", 8 + i, &buf[..4]),
+            );
+        }
+    }
+    // zero leaks: everything on the nodes is reachable from the chain
+    let gc = Arc::new(GcRegistry::new(Arc::clone(&ns2)));
+    gc.sync_chain("vm", chain.file_names());
+    let audit = sqemu::gc::audit(ns2.as_ref(), &gc);
+    if !audit.is_clean() {
+        fail_crash_repro(
+            cut,
+            &format!("audit: leaked {:?} errors {:?}", audit.leaked, audit.errors),
+        );
+    }
+    drop(coord);
+}
+
+/// Coordinator e2e: the recipient's pressure includes the capacity
+/// reservation during the copy and releases it after; cancel rolls the
+/// target back; a completed migration moves every file, keeps serving
+/// reads, and GC reclaims the sources.
+#[test]
+fn coordinator_migrate_reserves_serves_and_reclaims() {
+    let clock = VirtClock::new();
+    let nodes = two_nodes(&clock);
+    let cfg = CoordinatorConfig {
+        job_increment_clusters: 4,
+        ..Default::default()
+    };
+    let coord = Coordinator::new(Arc::clone(&nodes), clock, cfg, None);
+    coord
+        .launch_vm(
+            "vm",
+            VmConfig {
+                driver: DriverKind::Scalable,
+                cache: CacheConfig::new(64, 1 << 20),
+                chain: VmChain::Generate(ChainSpec {
+                    disk_size: 1 << 20,
+                    chain_len: 8,
+                    populated: 0.5,
+                    stamped: true,
+                    data_mode: DataMode::Real,
+                    prefix: "mv".into(),
+                    seed: 0x5EED,
+                    ..Default::default()
+                }),
+            },
+        )
+        .unwrap();
+    let client = coord.client("vm").unwrap();
+    let before = client.read(0, 4096).unwrap();
+    let files = coord.chain_files("vm").unwrap();
+    let target = nodes.node_named("node-1").unwrap();
+
+    // chain generation scatters across both nodes: migrating to node-1
+    // moves only the node-0 residents
+    let moved: Vec<String> = files
+        .iter()
+        .filter(|f| nodes.locate(f).as_deref() == Some("node-0"))
+        .cloned()
+        .collect();
+    assert!(!moved.is_empty(), "nothing on node-0 to move: {files:?}");
+
+    // 1. a crawling migration exposes the reservation, then cancel
+    //    rolls the partial copies back
+    let shared = coord.migrate_vm("vm", "node-1", 512).unwrap();
+    assert!(
+        target.reserved_bytes() > 0 || shared.state().is_terminal(),
+        "reservation not visible during the copy"
+    );
+    let stats = nodes.node_stats();
+    assert_eq!(stats[1].reserved_bytes, target.reserved_bytes());
+    coord.cancel_job(&shared.id).unwrap();
+    let st = coord.wait_job(&shared);
+    assert_eq!(st.state, JobState::Cancelled, "error: {:?}", st.error);
+    // barrier: the worker tears the cancelled mirror down (deleting the
+    // partial target copies) before serving the next request
+    client.flush().unwrap();
+    assert_eq!(target.reserved_bytes(), 0, "reservation released on cancel");
+    for f in &moved {
+        assert_eq!(
+            nodes.locate(f).as_deref(),
+            Some("node-0"),
+            "{f} flipped by a cancelled migration"
+        );
+        assert!(
+            target.open_file(f).is_err(),
+            "partial copy of {f} survived the cancel"
+        );
+    }
+    assert!(
+        target.open_file(&format!("{JOURNAL_PREFIX}vm")).is_err(),
+        "journal survived the cancel"
+    );
+
+    // 2. the real move, full speed, guest reads served meanwhile
+    let shared = coord.migrate_vm("vm", "node-1", 0).unwrap();
+    while !shared.state().is_terminal() {
+        assert_eq!(client.read(0, 4096).unwrap(), before, "read during copy");
+    }
+    let st = coord.wait_job(&shared);
+    assert_eq!(st.state, JobState::Completed, "error: {:?}", st.error);
+    assert_eq!(target.reserved_bytes(), 0, "reservation released on completion");
+    for f in &files {
+        assert_eq!(nodes.locate(f).as_deref(), Some("node-1"), "{f} not moved");
+    }
+    assert_eq!(client.read(0, 4096).unwrap(), before, "read after switchover");
+
+    // 3. GC reclaims the superseded sources and the audit is clean
+    let gc_report = coord.run_gc(0).unwrap();
+    assert_eq!(gc_report.files_deleted, moved.len() as u64);
+    assert!(gc_report.journals_cleaned >= 1);
+    let n0 = nodes.node_named("node-0").unwrap();
+    assert!(n0.file_names().is_empty(), "{:?}", n0.file_names());
+    let audit = coord.gc_audit();
+    assert!(audit.is_clean(), "{:?}", audit.leaked);
+    let snap = coord.vm_stats("vm").unwrap();
+    assert_eq!(snap.jobs_started, 2);
+    assert_eq!(snap.jobs_completed, 1);
+    assert_eq!(snap.jobs_cancelled, 1);
+    coord.shutdown();
+}
+
+/// Satellite bugfix (pre-fix failing): the name→node index is rebuilt
+/// from the nodes' durable file lists on recover(), so a freshly booted
+/// coordinator can locate and reopen pre-existing chains.
+#[test]
+fn post_crash_index_rebuild_locates_chains() {
+    let clock = VirtClock::new();
+    let a = StorageNode::new("node-0", clock.clone(), CostModel::default());
+    let b = StorageNode::new("node-1", clock.clone(), CostModel::default());
+    {
+        let ns1 =
+            Arc::new(NodeSet::new(vec![Arc::clone(&a), Arc::clone(&b)]).unwrap());
+        let store = ns1.pinned("node-0").unwrap();
+        build_chain(&store, "x", 3);
+    }
+    // "crash": only the nodes (durable bytes) survive
+    let ns2 = Arc::new(NodeSet::new(vec![a, b]).unwrap());
+    let coord = Coordinator::new(
+        Arc::clone(&ns2),
+        clock,
+        CoordinatorConfig::default(),
+        None,
+    );
+    // the pre-fix behavior: an empty index that cannot locate anything
+    assert!(ns2.locate("x-0").is_none(), "index unexpectedly populated");
+    assert!(Chain::open(ns2.as_ref(), "x-3", DataMode::Real).is_err());
+
+    let report = coord.recover();
+    assert!(report.duplicate_files.is_empty(), "{report:?}");
+    assert_eq!(ns2.locate("x-0").as_deref(), Some("node-0"));
+    let chain = Chain::open(ns2.as_ref(), "x-3", DataMode::Real).unwrap();
+    assert_eq!(chain.len(), 4);
+    // and a VM can launch over the recovered namespace
+    let client = coord
+        .launch_vm(
+            "vm",
+            VmConfig {
+                driver: DriverKind::Scalable,
+                cache: CacheConfig::new(16, 32 << 10),
+                chain: VmChain::Existing {
+                    active_name: "x-3".to_string(),
+                    data_mode: DataMode::Real,
+                },
+            },
+        )
+        .unwrap();
+    let got = client.read(0, 256).unwrap();
+    assert_eq!(got, vec![1u8; 256], "layer-0 data served after recovery");
+    coord.shutdown();
+}
+
+/// Satellite: chain-locality placement — a 10-snapshot chain stays on
+/// one node instead of scattering file-by-file.
+#[test]
+fn snapshot_chain_stays_colocated() {
+    let coord = Coordinator::with_fresh_nodes(3).unwrap();
+    coord
+        .launch_vm(
+            "vm",
+            VmConfig {
+                driver: DriverKind::Scalable,
+                cache: CacheConfig::new(16, 32 << 10),
+                chain: VmChain::Generate(ChainSpec {
+                    disk_size: 1 << 20,
+                    chain_len: 1,
+                    populated: 0.25,
+                    stamped: true,
+                    data_mode: DataMode::Real,
+                    prefix: "loc".into(),
+                    seed: 7,
+                    ..Default::default()
+                }),
+            },
+        )
+        .unwrap();
+    for i in 1..=10 {
+        coord.snapshot_vm("vm", &format!("loc-{i}")).unwrap();
+    }
+    let files = coord.chain_files("vm").unwrap();
+    assert_eq!(files.len(), 11);
+    let homes: std::collections::HashSet<String> = files
+        .iter()
+        .map(|f| coord.nodes.locate(f).unwrap())
+        .collect();
+    assert_eq!(homes.len(), 1, "chain scattered across {homes:?}");
+    coord.shutdown();
+}
+
+/// Satellite: the rebalancer brings an 8-chain skewed fleet's max/min
+/// pressure ratio under 1.5x, sources are reclaimed, audit clean.
+#[test]
+fn rebalance_converges_skewed_fleet() {
+    let coord = Coordinator::with_fresh_nodes(2).unwrap();
+    for v in 0..8usize {
+        let pin = if v == 7 { "node-1" } else { "node-0" };
+        let store = coord.nodes.pinned(pin).unwrap();
+        let name = format!("vm-{v}");
+        generate(
+            &store,
+            &ChainSpec {
+                disk_size: 8 << 20,
+                chain_len: 6,
+                populated: 0.3,
+                stamped: true,
+                data_mode: DataMode::Synthetic,
+                prefix: name.clone(),
+                seed: 0xBA1 ^ v as u64,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        coord
+            .launch_vm(
+                &name,
+                VmConfig {
+                    driver: DriverKind::Scalable,
+                    cache: CacheConfig::new(64, 1 << 20),
+                    chain: VmChain::Existing {
+                        active_name: format!("{name}-5"),
+                        data_mode: DataMode::Synthetic,
+                    },
+                },
+            )
+            .unwrap();
+    }
+    let pressures: Vec<u64> = coord
+        .nodes
+        .nodes()
+        .iter()
+        .map(|n| n.pressure_bytes())
+        .collect();
+    let before = sqemu::migrate::rebalance::pressure_ratio(&pressures);
+    assert!(before > 3.0, "fleet not skewed enough: {before}");
+
+    // dry run plans but moves nothing
+    let dry = coord.rebalance(1.5, 0, true).unwrap();
+    assert!(!dry.plan.moves.is_empty());
+    assert_eq!(dry.executed, 0);
+    assert!(dry.final_ratio > 3.0);
+
+    let report = coord.rebalance(1.5, 0, false).unwrap();
+    assert!(report.executed >= 2, "{report:?}");
+    assert!(
+        report.final_ratio <= 1.5,
+        "fleet still skewed: {:.2} ({report:?})",
+        report.final_ratio
+    );
+    coord.run_gc(0).unwrap();
+    let audit = coord.gc_audit();
+    assert!(audit.is_clean(), "{:?}", audit.leaked);
+    coord.shutdown();
+}

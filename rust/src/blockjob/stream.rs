@@ -16,7 +16,7 @@
 //! holds mid-job still reads bit-identical data.
 
 use super::{BlockJob, Increment, JobFence, JobKind};
-use crate::qcow::entry::L2Entry;
+use crate::qcow::entry::{decode_offset, ClusterLoc, L2Entry};
 use crate::qcow::{Chain, Image};
 use anyhow::{bail, Result};
 use std::sync::Arc;
@@ -70,20 +70,40 @@ impl LiveStreamJob {
             active.set_l2_entry(vc, L2Entry::local(off, stamp))?;
             return Ok(0);
         }
-        let Some((bfi, off)) = chain.resolve_walk(vc)? else {
+        let Some((bfi, word)) = chain.resolve_walk(vc)? else {
             return Ok(0); // hole
         };
         if bfi == active_idx {
             return Ok(0);
         }
         let src = chain.get(bfi).expect("walk returned in-range index");
-        let new_off = active.alloc_data_cluster()?;
-        src.read_data(off, 0, &mut self.buf)?;
-        active.write_data(new_off, 0, &self.buf)?;
         let stamp = if active.has_bfi() { Some(active_idx) } else { None };
-        active.set_l2_entry(vc, L2Entry::local(new_off, stamp))?;
-        self.fence.note_job_move(vc, new_off);
-        Ok(self.buf.len() as u64)
+        match decode_offset(word) {
+            ClusterLoc::Zero => {
+                // a backing zero cluster needs no data copy: record an
+                // equally deviceless zero entry in the active volume
+                active.set_l2_entry(vc, L2Entry::zero_cluster(stamp))?;
+                Ok(0)
+            }
+            ClusterLoc::Data(off) => {
+                let new_off = active.alloc_data_cluster()?;
+                src.read_data(off, 0, &mut self.buf)?;
+                active.write_data(new_off, 0, &self.buf)?;
+                active.set_l2_entry(vc, L2Entry::local(new_off, stamp))?;
+                self.fence.note_job_move(vc, new_off);
+                Ok(self.buf.len() as u64)
+            }
+            ClusterLoc::Compressed { off, units } => {
+                // decompress out of the backing file; the copy lands
+                // plain (payload packing is per-file, not streamable)
+                let new_off = active.alloc_data_cluster()?;
+                src.read_compressed(off, units, &mut self.buf)?;
+                active.write_data(new_off, 0, &self.buf)?;
+                active.set_l2_entry(vc, L2Entry::local(new_off, stamp))?;
+                self.fence.note_job_move(vc, new_off);
+                Ok(self.buf.len() as u64)
+            }
+        }
     }
 }
 

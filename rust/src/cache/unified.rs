@@ -93,11 +93,20 @@ impl UnifiedCache {
     /// Record a write: the active volume now owns `vcluster` at `off`.
     /// The slice must be resident.
     pub fn record_write(&mut self, vcluster: u64, off: u64) {
+        let active = self.active_index;
+        self.record_entry(vcluster, active, off);
+    }
+
+    /// Record an arbitrary post-write mapping in chain frame: `vcluster`
+    /// now resolves to offset word `off` in file `bfi` (a capacity-policy
+    /// write may map to a backing file via a dedup share, or to a
+    /// flagged zero/compressed word — the offset word passes through
+    /// opaquely, like everywhere else in the cache).
+    pub fn record_entry(&mut self, vcluster: u64, bfi: u16, off: u64) {
         let key = self.cache.cfg().slice_key(vcluster);
         let idx = self.cache.cfg().slice_index(vcluster) as usize;
-        let active = self.active_index;
         if let Some(slice) = self.cache.get(key) {
-            slice.entries[idx] = L2Entry::remote(off, active).raw();
+            slice.entries[idx] = L2Entry::remote(off, bfi).raw();
             slice.dirty = true;
         }
     }

@@ -682,13 +682,14 @@ fn demo_fleet(args: &Args) -> Result<std::sync::Arc<Coordinator>> {
 
 fn print_node_status(coord: &Coordinator) {
     println!(
-        "{:<10} {:>10} {:>12} {:>10} {:>10} {:>12} {:>6}",
-        "NODE", "used", "pressure", "condemned", "reserved", "reclaimed", "gc"
+        "{:<10} {:>10} {:>10} {:>12} {:>10} {:>10} {:>12} {:>6}",
+        "NODE", "logical", "physical", "pressure", "condemned", "reserved", "reclaimed", "gc"
     );
     for s in coord.nodes.node_stats() {
         println!(
-            "{:<10} {:>10} {:>12} {:>10} {:>10} {:>12} {:>6}",
+            "{:<10} {:>10} {:>10} {:>12} {:>10} {:>10} {:>12} {:>6}",
             s.name,
+            human_bytes(s.logical_bytes),
             human_bytes(s.used_bytes),
             human_bytes(s.pressure_bytes),
             human_bytes(s.condemned_bytes),
@@ -715,12 +716,165 @@ pub fn node(verb: &str, args: &Args) -> Result<()> {
     match verb {
         "status" => {
             let coord = demo_fleet(args)?;
+            coord.refresh_capacity();
             print_node_status(&coord);
             coord.shutdown();
             Ok(())
         }
         other => bail!("unknown node verb '{other}' (try status)"),
     }
+}
+
+/// `sqemu dedup status [--nodes N] [--vms V] [--writes W]`: run a
+/// capacity-enabled demo fleet — a cloned population whose guests write
+/// identical content (the golden-image pattern §3 describes) plus
+/// all-zero and compressible clusters — and report per-node dedup
+/// extents and the fleet's logical/physical capacity multiplication.
+pub fn dedup(verb: &str, args: &Args) -> Result<()> {
+    match verb {
+        "status" => dedup_status(args),
+        other => bail!("unknown dedup verb '{other}' (try status)"),
+    }
+}
+
+fn dedup_status(args: &Args) -> Result<()> {
+    use crate::coordinator::server::CoordinatorConfig;
+    use crate::coordinator::NodeSet;
+    use crate::metrics::clock::{CostModel, VirtClock};
+    use crate::storage::node::StorageNode;
+    let n_nodes = (args.u64_or("nodes", 1)? as usize).max(1);
+    let vms = (args.u64_or("vms", 4)? as usize).max(1);
+    let writes = args.u64_or("writes", 48)?;
+    let clock = VirtClock::new();
+    let nodes = (0..n_nodes)
+        .map(|i| {
+            StorageNode::new(&format!("node-{i}"), clock.clone(), CostModel::default())
+        })
+        .collect();
+    let coord = Coordinator::new(
+        std::sync::Arc::new(NodeSet::new(nodes)?),
+        clock,
+        CoordinatorConfig { capacity: true, ..Default::default() },
+        None,
+    );
+    const CS: u64 = 64 << 10;
+    let clusters = (32u64 << 20) / CS;
+    // one golden chain; every clone gets a private active volume
+    // snapshotted over the SAME immutable backing files — the
+    // `copy_virtual_disk` population shape. Launch then seeds the dedup
+    // index from the shared base, so guest rewrites of golden content
+    // resolve to remote references instead of fresh clusters.
+    let store = coord.nodes.pinned("node-0")?;
+    let mut gold = crate::chaingen::generate(
+        &store,
+        &ChainSpec {
+            disk_size: 32 << 20,
+            chain_len: 2,
+            populated: 0.25,
+            stamped: true,
+            data_mode: DataMode::Real,
+            prefix: "gold".into(),
+            seed: 0x601D,
+            ..Default::default()
+        },
+    )?;
+    crate::qcow::snapshot::snapshot_sqemu(&mut gold, &store, "vm-0-active")?;
+    let shared: Vec<_> = gold.images()[..gold.len() - 1].to_vec();
+    for v in 1..vms {
+        let mut sib = crate::qcow::Chain::new(std::sync::Arc::clone(&shared[0]))?;
+        sib.replace_images(shared.clone());
+        crate::qcow::snapshot::snapshot_sqemu(
+            &mut sib,
+            &store,
+            &format!("vm-{v}-active"),
+        )?;
+    }
+    for v in 0..vms {
+        let name = format!("vm-{v}");
+        coord.launch_vm(
+            &name,
+            VmConfig {
+                driver: DriverKind::Scalable,
+                cache: CacheConfig::new(128, 2 << 20),
+                chain: VmChain::Existing {
+                    active_name: format!("vm-{v}-active"),
+                    data_mode: DataMode::Real,
+                },
+            },
+        )?;
+    }
+    println!(
+        "capacity fleet: {n_nodes} node(s), {vms} clone VM(s) over one \
+         golden base, {writes} full-cluster writes each (same workload \
+         per clone)"
+    );
+    for name in coord.vm_names() {
+        let client = coord.client(&name)?;
+        // every clone runs the SAME deterministic workload — identical
+        // bytes at identical offsets, the dedup index's best case
+        let mut rng = crate::util::rng::Rng::new(0xC10_E);
+        for i in 0..writes {
+            let vc = rng.below(clusters);
+            let data = match i % 4 {
+                // all-zero cluster: allocates nothing (OFLAG_ZERO)
+                0 => vec![0u8; CS as usize],
+                // compressible cluster: RLE shrinks it (OFLAG_COMPRESSED)
+                1 => vec![(i % 251) as u8; CS as usize],
+                // the guest copies a cluster it can already read (the
+                // in-guest file-copy pattern): identical bytes dedup
+                // against the seeded golden base or an earlier write
+                _ => {
+                    let src = rng.below(clusters);
+                    client.read(src * CS, CS as usize)?
+                }
+            };
+            client.write(vc * CS, data)?;
+        }
+        client.flush()?;
+    }
+    let capacity = coord.refresh_capacity();
+    let ix = coord.dedup_index();
+    println!(
+        "\n{:<10} {:>8} {:>8} {:>10} {:>10} {:>10} {:>7}",
+        "NODE", "extents", "refs", "saved", "logical", "physical", "ratio"
+    );
+    let (mut tot_l, mut tot_p) = (0u64, 0u64);
+    for (name, logical, physical) in &capacity {
+        let s = ix.node_stats(name);
+        tot_l += logical;
+        tot_p += physical;
+        println!(
+            "{:<10} {:>8} {:>8} {:>10} {:>10} {:>10} {:>6.2}x",
+            name,
+            s.extents,
+            s.refs,
+            human_bytes(s.saved_bytes),
+            human_bytes(*logical),
+            human_bytes(*physical),
+            *logical as f64 / (*physical).max(1) as f64,
+        );
+    }
+    let fleet = ix.fleet_stats();
+    println!(
+        "\nfleet: {} extents, {} references, {} of writes served by sharing",
+        fleet.extents,
+        fleet.refs,
+        human_bytes(fleet.saved_bytes)
+    );
+    println!(
+        "fleet capacity multiplication: {} logical / {} physical = {:.2}x",
+        human_bytes(tot_l),
+        human_bytes(tot_p),
+        tot_l as f64 / tot_p.max(1) as f64
+    );
+    let audit = coord.gc_audit();
+    println!(
+        "audit: {} stale extent(s){}",
+        audit.stale_extents.len(),
+        if audit.stale_extents.is_empty() { " (clean)" } else { "" }
+    );
+    coord.shutdown();
+    Ok(())
 }
 
 /// `sqemu migrate --vm V --to NODE [--rate 64M]`: live-migrate one VM's

@@ -20,6 +20,7 @@
 //! sqemu migrate --to node-1 [--vm vm-0] [--rate 64M]  # live-migrate a chain
 //! sqemu rebalance [--dry-run] [--threshold 1.5]       # fleet rebalancer
 //! sqemu node status [--nodes N] [--vms V]     # per-node capacity report
+//! sqemu dedup status [--nodes N] [--vms V]    # capacity-multiplication demo
 //! sqemu bench   [--json [path]]               # CI perf smoke artifact
 //! sqemu selftest                              # artifacts + runtime
 //! ```
@@ -58,6 +59,14 @@ pub fn run(argv: Vec<String>) -> Result<()> {
         };
         let args = Args::parse(rest)?;
         return commands::node(verb, &args);
+    }
+    if cmd == "dedup" {
+        // `sqemu dedup <verb> --flags ...` — the verb is positional
+        let Some((verb, rest)) = rest.split_first() else {
+            bail!("usage: sqemu dedup status [--nodes N] [--vms V] [--writes W]");
+        };
+        let args = Args::parse(rest)?;
+        return commands::dedup(verb, &args);
     }
     let args = Args::parse(rest)?;
     match cmd.as_str() {
@@ -105,6 +114,7 @@ fn print_usage() {
          \x20 migrate --to node-1 [--vm vm-0] [--rate 64M] [--vms N] [--chain L]\n\
          \x20 rebalance [--dry-run] [--threshold 1.5] [--rate 256M]\n\
          \x20 node status [--nodes N] [--vms V] [--chain L]\n\
+         \x20 dedup status [--nodes N] [--vms V] [--writes W]\n\
          \x20 bench [--json [path]]   # CI smoke run -> BENCH_hotpath.json\n\
          \x20 selftest\n\
          \n\

@@ -196,6 +196,7 @@ impl NodeSet {
             .map(|n| NodeStats {
                 name: n.name.clone(),
                 used_bytes: n.used_bytes(),
+                logical_bytes: n.logical_bytes(),
                 condemned_bytes: n.condemned_bytes(),
                 pressure_bytes: n.pressure_bytes(),
                 reserved_bytes: n.reserved_bytes(),
@@ -220,8 +221,16 @@ impl NodeSet {
 #[derive(Clone, Debug, Default, PartialEq, Eq)]
 pub struct NodeStats {
     pub name: String,
-    /// Physically stored bytes (everything, condemned included).
+    /// Physically stored bytes (everything, condemned included). This —
+    /// not logical bytes — is what placement, `would_overflow` and
+    /// reservations run on: real pressure after zero-cluster
+    /// suppression, compression and dedup.
     pub used_bytes: u64,
+    /// Guest-addressable bytes mapped by the chains stored here, per the
+    /// coordinator's last capacity scan (0 before any scan).
+    /// `logical_bytes / used_bytes` is the node's capacity
+    /// multiplication factor.
+    pub logical_bytes: u64,
     /// Bytes awaiting a GC sweep.
     pub condemned_bytes: u64,
     /// used - condemned: what thin provisioning counts.

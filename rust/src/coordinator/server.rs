@@ -37,6 +37,7 @@ use crate::gc::{GcJob, GcRegistry, GcReport};
 use crate::metrics::clock::{CostModel, VirtClock};
 use crate::metrics::counters::CounterSnapshot;
 use crate::metrics::memory::MemoryAccountant;
+use crate::dedup::{chain_logical_bytes, CapacityPolicy, DedupIndex};
 use crate::qcow::image::DataMode;
 use crate::qcow::{qcheck, snapshot, Chain};
 use crate::migrate::rebalance::{NodePressure, RebalancePlan, VmFootprint};
@@ -64,6 +65,12 @@ pub struct CoordinatorConfig {
     /// Clusters a job may process per increment (the guest's worst-case
     /// wait behind one job step).
     pub job_increment_clusters: u64,
+    /// Enable the capacity subsystem fleet-wide: every launched driver
+    /// gets zero detection, compression and content-addressed dedup
+    /// through the coordinator's shared [`DedupIndex`]
+    /// ([`crate::dedup::CapacityPolicy::full`]). Off by default — the
+    /// write path is then bit-for-bit the pre-subsystem one.
+    pub capacity: bool,
 }
 
 impl Default for CoordinatorConfig {
@@ -73,6 +80,7 @@ impl Default for CoordinatorConfig {
             queue_depth: 64,
             job_budget_bps: 512 << 20,
             job_increment_clusters: 32,
+            capacity: false,
         }
     }
 }
@@ -236,6 +244,10 @@ pub struct Coordinator {
     jobs: Mutex<Vec<JobEntry>>,
     next_job_id: Mutex<u64>,
     gc: Arc<GcRegistry>,
+    /// Fleet-wide content-addressed extent index (volatile accelerator;
+    /// see [`crate::dedup::DedupIndex`]). Always present — drivers only
+    /// consult it when [`CoordinatorConfig::capacity`] is on.
+    dedup: Arc<DedupIndex>,
 }
 
 impl Coordinator {
@@ -258,7 +270,13 @@ impl Coordinator {
             jobs: Mutex::new(Vec::new()),
             next_job_id: Mutex::new(0),
             gc,
+            dedup: Arc::new(DedupIndex::new()),
         })
+    }
+
+    /// The fleet dedup index (`sqemu dedup status` reads it).
+    pub fn dedup_index(&self) -> &Arc<DedupIndex> {
+        &self.dedup
     }
 
     /// Convenience: a coordinator over `n` fresh unlimited nodes.
@@ -295,7 +313,25 @@ impl Coordinator {
         chain: Chain,
         cfg: &VmConfig,
     ) -> Box<dyn Driver + Send> {
-        match cfg.driver {
+        // the dedup context is pinned to the node holding the active
+        // volume at launch; a later migration leaves old extents keyed
+        // under the old node (a missed-sharing cost, never a corruption
+        // — sharing re-verifies the extent file against the chain)
+        let policy = if self.cfg.capacity {
+            let node = self
+                .nodes
+                .locate(&chain.active().name)
+                .unwrap_or_default();
+            // warm the index with the chain's immutable backing extents
+            // so clones over a shared golden base dedup against it from
+            // their first write; best-effort — an unreadable backing
+            // file only costs sharing, and qcheck already gated on it
+            let _ = crate::dedup::seed_chain(&self.dedup, &node, &chain);
+            Some(CapacityPolicy::full(Arc::clone(&self.dedup), &node))
+        } else {
+            None
+        };
+        let mut driver: Box<dyn Driver + Send> = match cfg.driver {
             DriverKind::Vanilla => Box::new(VanillaDriver::new(
                 chain,
                 cfg.cache,
@@ -310,7 +346,11 @@ impl Coordinator {
                 self.cfg.cost,
                 self.acct.clone(),
             )),
+        };
+        if let Some(p) = policy {
+            driver.set_capacity_policy(p);
         }
+        driver
     }
 
     /// Launch a VM: open/generate its chain and start its worker thread.
@@ -853,9 +893,68 @@ impl Coordinator {
         &self.gc
     }
 
-    /// Audit node files against chain reachability (`gc --dry-run`).
+    /// Rescan every chain's tables and refresh each node's cached
+    /// logical-bytes counter ([`StorageNode::set_logical_bytes`]).
+    /// Logical bytes are guest-addressable mapped bytes — what the fleet
+    /// would store with no zero suppression, compression or dedup — and
+    /// a chain's total is attributed to the node holding its active
+    /// volume. Returns `(node, logical, physical)` per node. Physical
+    /// pressure is live either way; this scan only feeds reporting
+    /// (`sqemu node status`, fig24), so staleness between calls is fine.
+    pub fn refresh_capacity(&self) -> Vec<(String, u64, u64)> {
+        let mut backed: std::collections::HashSet<String> =
+            std::collections::HashSet::new();
+        let mut names: Vec<String> = Vec::new();
+        for node in self.nodes.nodes() {
+            for f in node.file_names() {
+                if f.starts_with(crate::migrate::JOURNAL_PREFIX) {
+                    continue;
+                }
+                let opened = node
+                    .open_file(&f)
+                    .and_then(|b| crate::qcow::Image::open(&f, b, DataMode::Real));
+                if let Ok(img) = opened {
+                    if let Some(b) = img.backing_name() {
+                        backed.insert(b);
+                    }
+                    if !names.contains(&f) {
+                        names.push(f);
+                    }
+                }
+            }
+        }
+        let mut logical: HashMap<String, u64> = HashMap::new();
+        for head in names.iter().filter(|n| !backed.contains(*n)) {
+            let Some(node) = self.nodes.locate(head) else { continue };
+            let Ok(chain) = Chain::open(self.nodes.as_ref(), head, DataMode::Real)
+            else {
+                continue;
+            };
+            if let Ok(bytes) = chain_logical_bytes(&chain) {
+                *logical.entry(node).or_default() += bytes;
+            }
+        }
+        self.nodes
+            .nodes()
+            .iter()
+            .map(|n| {
+                let l = logical.get(&n.name).copied().unwrap_or(0);
+                n.set_logical_bytes(l);
+                (n.name.clone(), l, n.used_bytes())
+            })
+            .collect()
+    }
+
+    /// Audit node files against chain reachability (`gc --dry-run`),
+    /// plus the dedup index against file existence: an extent whose
+    /// backing file is gone means the sweep's `prune_missing` wiring
+    /// broke, and the audit flags it like any other leak.
     pub fn gc_audit(&self) -> crate::gc::AuditReport {
-        crate::gc::audit(self.nodes.as_ref(), &self.gc)
+        let mut report = crate::gc::audit(self.nodes.as_ref(), &self.gc);
+        report.stale_extents = self
+            .dedup
+            .stale_extents(|f| self.nodes.locate(f).is_some());
+        report
     }
 
     /// Run a GC sweep: physically delete the deferred-delete set at
@@ -953,6 +1052,11 @@ impl Coordinator {
         if let Some(err) = t.error {
             bail!("gc sweep failed: {err}");
         }
+        // extents stored in files the sweep just deleted leave the
+        // dedup index with them (sharers' on-disk references were
+        // release-gated before the files could be condemned)
+        self.dedup
+            .prune_missing(|f| self.nodes.locate(f).is_some());
         // committed migration journals whose replicas the sweep just
         // deleted have served their purpose (a journal must outlive the
         // source copies it covers, never the other way round)
@@ -991,6 +1095,11 @@ impl Coordinator {
         for node in self.nodes.nodes() {
             node.clear_volatile();
         }
+        // the dedup index is volatile too: only file bytes survive, and
+        // every physical sharing is protected by on-disk cluster
+        // refcounts or file-level GC references — the index is rebuilt
+        // opportunistically as guests write
+        self.dedup.clear();
         // Interrupted migrations first: every name must resolve to
         // exactly one authoritative copy (journal committed → target
         // wins, superseded sources deleted; else → source wins, partial
@@ -1059,6 +1168,9 @@ impl Coordinator {
                 report.unopenable.push(format!("chain {head}: {e:#}"));
             }
         }
+        // the logical-bytes cache was cleared with the rest of the
+        // volatile bookkeeping: rebuild it from the recovered chains
+        self.refresh_capacity();
         report
     }
 

@@ -88,9 +88,13 @@ impl StreamingOrchestrator {
                     let mut off = vec![UNALLOCATED; width];
                     let mut bfi = vec![UNALLOCATED; width];
                     for (i, vc) in (start as u64..(start + width) as u64).enumerate() {
-                        if let Some(o) = img.l2_entry(vc)?.vanilla_view() {
+                        // stamps are authoritative (matching stream_merge's
+                        // owner scan): a stamped entry — including a dedup
+                        // share into another file — names the real owner,
+                        // so the fold's newest row carries the true bfi
+                        if let Some((b, o)) = img.l2_entry(vc)?.sqemu_view(idx + d as u16) {
                             off[i] = (o >> geom.cluster_bits) as i32;
-                            bfi[i] = (idx + d as u16) as i32;
+                            bfi[i] = b as i32;
                         }
                     }
                     offs.push((off, bfi));
@@ -110,7 +114,7 @@ impl StreamingOrchestrator {
             }
             planned += acc_bfi
                 .iter()
-                .filter(|&&b| b != UNALLOCATED && (b as u16) < to)
+                .filter(|&&b| b != UNALLOCATED && (b as u16) >= from && (b as u16) < to)
                 .count() as u64;
             start += width;
         }

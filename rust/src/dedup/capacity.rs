@@ -1,0 +1,198 @@
+//! Logical-vs-physical capacity scanner.
+//!
+//! *Physical* bytes are what a node's files actually store — already
+//! post-zero, post-compression, post-dedup, because special clusters
+//! allocate less (or nothing). *Logical* bytes are what the guests can
+//! address: every virtual cluster a chain maps, whatever trick stores
+//! it. The ratio of the two is the fleet's capacity multiplication
+//! (Fig 24). Logical bytes are computed by scanning L1/L2 tables rather
+//! than by incremental counters: chains migrate between nodes and
+//! crash-recover, and a scan is always right where a counter drifts.
+
+use super::{content_hash, DedupIndex};
+use crate::qcow::image::DataMode;
+use crate::qcow::{Chain, Image, L2Entry};
+use anyhow::Result;
+
+/// Per-image census of mapped L2 entries by storage class.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct MappedBreakdown {
+    /// Plain locally-allocated data clusters.
+    pub plain: u64,
+    /// `OFLAG_ZERO` clusters (present, zero stored bytes).
+    pub zero: u64,
+    /// `OFLAG_COMPRESSED` clusters (sub-cluster stored bytes).
+    pub compressed: u64,
+    /// Remote references (snapshot-copy stamps and dedup shares into a
+    /// backing file of the same chain).
+    pub remote: u64,
+}
+
+impl MappedBreakdown {
+    /// Entries that are present in this image (shadow the backing file).
+    pub fn mapped(&self) -> u64 {
+        self.plain + self.zero + self.compressed + self.remote
+    }
+}
+
+/// Scan one image's tables and classify every mapped entry.
+pub fn image_breakdown(img: &Image) -> Result<MappedBreakdown> {
+    let geom = *img.geom();
+    let mut b = MappedBreakdown::default();
+    for l1_idx in 0..geom.l1_entries() {
+        let l2_off = img.l1_entry(l1_idx);
+        if l2_off == 0 {
+            continue;
+        }
+        let entries = img.read_l2_slice(l2_off, 0, geom.entries_per_l2())?;
+        for &raw in &entries {
+            let e = L2Entry(raw);
+            if e.is_zero() {
+                continue;
+            }
+            if e.is_zero_cluster() {
+                b.zero += 1;
+            } else if e.is_compressed() {
+                b.compressed += 1;
+            } else if e.is_allocated_here() {
+                b.plain += 1;
+            } else {
+                b.remote += 1;
+            }
+        }
+    }
+    Ok(b)
+}
+
+/// Guest-addressable mapped bytes of a chain: the number of distinct
+/// virtual clusters mapped by *any* image in the chain, times the
+/// cluster size. This is what the fleet would store with no sharing at
+/// all — each chain bills the full content its guest can read,
+/// including the clusters it inherits from a shared golden base.
+pub fn chain_logical_bytes(chain: &Chain) -> Result<u64> {
+    let geom = *chain.active().geom();
+    let n = geom.num_vclusters() as usize;
+    let mut mapped = vec![false; n];
+    for img in chain.images() {
+        let geom = *img.geom();
+        for l1_idx in 0..geom.l1_entries() {
+            let l2_off = img.l1_entry(l1_idx);
+            if l2_off == 0 {
+                continue;
+            }
+            let entries = img.read_l2_slice(l2_off, 0, geom.entries_per_l2())?;
+            for (l2_idx, &raw) in entries.iter().enumerate() {
+                if raw != 0 {
+                    let vc = l1_idx * geom.entries_per_l2() + l2_idx as u64;
+                    if let Some(m) = mapped.get_mut(vc as usize) {
+                        *m = true;
+                    }
+                }
+            }
+        }
+    }
+    Ok(mapped.iter().filter(|&&m| m).count() as u64 * geom.cluster_size())
+}
+
+/// Physical bytes of a chain: what its files actually occupy.
+pub fn chain_physical_bytes(chain: &Chain) -> u64 {
+    chain.total_file_bytes()
+}
+
+/// Declare every plain data cluster of a chain's *immutable* backing
+/// files as shareable extents in `index`.
+///
+/// Clones launched over a shared golden base can then resolve guest
+/// rewrites of base content — the in-guest file-copy / reinstall
+/// pattern — to remote references instead of fresh allocations. The
+/// active volume is deliberately excluded: its clusters can be
+/// rewritten in place, which would leave stale extents behind;
+/// active-file extents enter the index through the write path, which
+/// retires them on overwrite. Synthetic images are skipped (content is
+/// generated, not stored, so a hash of it is meaningless). Returns the
+/// number of clusters hashed.
+pub fn seed_chain(index: &DedupIndex, node: &str, chain: &Chain) -> Result<u64> {
+    let imgs = chain.images();
+    let Some((_active, backing)) = imgs.split_last() else {
+        return Ok(0);
+    };
+    let mut hashed = 0u64;
+    for img in backing {
+        if img.data_mode() != DataMode::Real {
+            continue;
+        }
+        let geom = *img.geom();
+        let mut buf = vec![0u8; geom.cluster_size() as usize];
+        for l1_idx in 0..geom.l1_entries() {
+            let l2_off = img.l1_entry(l1_idx);
+            if l2_off == 0 {
+                continue;
+            }
+            let entries = img.read_l2_slice(l2_off, 0, geom.entries_per_l2())?;
+            for &raw in &entries {
+                let e = L2Entry(raw);
+                if e.is_zero()
+                    || e.is_zero_cluster()
+                    || e.is_compressed()
+                    || !e.is_allocated_here()
+                {
+                    continue;
+                }
+                img.read_data(e.host_offset(), 0, &mut buf)?;
+                index.declare(node, content_hash(&buf), &img.name, e.host_offset());
+                hashed += 1;
+            }
+        }
+    }
+    Ok(hashed)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::qcow::image::DataMode;
+    use crate::qcow::layout::{Geometry, FEATURE_BFI};
+    use crate::storage::mem::MemBackend;
+    use std::sync::Arc;
+
+    fn img() -> Image {
+        Image::create(
+            "cap-0",
+            Arc::new(MemBackend::new()),
+            Geometry::new(16, 16 << 20).unwrap(),
+            FEATURE_BFI,
+            0,
+            None,
+            DataMode::Real,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn breakdown_classifies_all_entry_kinds() {
+        let i = img();
+        let off = i.alloc_data_cluster().unwrap();
+        i.set_l2_entry(0, L2Entry::local(off, Some(0))).unwrap();
+        i.set_l2_entry(1, L2Entry::zero_cluster(Some(0))).unwrap();
+        i.set_l2_entry(2, L2Entry::compressed(off, 8, Some(0))).unwrap();
+        i.set_l2_entry(3, L2Entry::remote(off, 0)).unwrap();
+        let b = image_breakdown(&i).unwrap();
+        assert_eq!(
+            b,
+            MappedBreakdown { plain: 1, zero: 1, compressed: 1, remote: 1 }
+        );
+        assert_eq!(b.mapped(), 4);
+    }
+
+    #[test]
+    fn chain_logical_counts_distinct_vclusters() {
+        let i = img();
+        let off = i.alloc_data_cluster().unwrap();
+        i.set_l2_entry(0, L2Entry::local(off, Some(0))).unwrap();
+        i.set_l2_entry(5, L2Entry::zero_cluster(Some(0))).unwrap();
+        let chain = Chain::new(Arc::new(i)).unwrap();
+        let cs = chain.active().geom().cluster_size();
+        assert_eq!(chain_logical_bytes(&chain).unwrap(), 2 * cs);
+        assert!(chain_physical_bytes(&chain) > 0);
+    }
+}

@@ -1,0 +1,187 @@
+//! Per-cluster compression codec for `OFLAG_COMPRESSED` payloads.
+//!
+//! A dependency-free byte-level RLE: guest images are full of long
+//! repeated runs (zero padding, freshly formatted filesystems, fill
+//! patterns), which is exactly what per-cluster compression is expected
+//! to catch in this reproduction. The on-disk payload embeds its own
+//! compressed length so a read costs exactly one device I/O of the
+//! stored (unit-rounded) size — the `Timed` backend then bills the
+//! compressed bytes, not the logical cluster.
+//!
+//! Token stream:
+//! * control byte `c < 0x80`  — literal run: the next `c + 1` bytes are
+//!   copied verbatim (1..=128 literals).
+//! * control byte `c >= 0x80` — repeat run: the next byte repeats
+//!   `(c - 0x80) + RUN_MIN` times (4..=131).
+//!
+//! Worst case (incompressible data) expands by 1/128 + O(1), so
+//! [`try_compress`] only reports success when the framed payload is
+//! strictly smaller than the input cluster.
+
+use anyhow::{bail, Result};
+
+/// Shortest run worth a repeat token (a repeat token costs 2 bytes).
+const RUN_MIN: usize = 4;
+const RUN_MAX: usize = 131;
+const LIT_MAX: usize = 128;
+
+/// Bytes of framing prepended to the compressed stream on disk.
+pub const FRAME_BYTES: u64 = 4;
+
+/// Compress `src`. Returns the raw token stream (unframed).
+pub fn compress(src: &[u8]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(src.len() / 4 + 8);
+    let mut lit_start = 0usize;
+    let mut i = 0usize;
+    while i < src.len() {
+        // measure the run starting at i
+        let b = src[i];
+        let mut run = 1usize;
+        while run < RUN_MAX && i + run < src.len() && src[i + run] == b {
+            run += 1;
+        }
+        if run >= RUN_MIN {
+            flush_literals(&mut out, &src[lit_start..i]);
+            out.push(0x80 + (run - RUN_MIN) as u8);
+            out.push(b);
+            i += run;
+            lit_start = i;
+        } else {
+            i += run;
+        }
+    }
+    flush_literals(&mut out, &src[lit_start..]);
+    out
+}
+
+fn flush_literals(out: &mut Vec<u8>, mut lits: &[u8]) {
+    while !lits.is_empty() {
+        let n = lits.len().min(LIT_MAX);
+        out.push((n - 1) as u8);
+        out.extend_from_slice(&lits[..n]);
+        lits = &lits[n..];
+    }
+}
+
+/// Decompress a token stream into `out`, which must be filled exactly.
+pub fn decompress(src: &[u8], out: &mut [u8]) -> Result<()> {
+    let mut i = 0usize;
+    let mut o = 0usize;
+    while i < src.len() {
+        let c = src[i] as usize;
+        i += 1;
+        if c < 0x80 {
+            let n = c + 1;
+            if i + n > src.len() || o + n > out.len() {
+                bail!("corrupt compressed payload (literal run overflow)");
+            }
+            out[o..o + n].copy_from_slice(&src[i..i + n]);
+            i += n;
+            o += n;
+        } else {
+            let n = (c - 0x80) + RUN_MIN;
+            if i >= src.len() || o + n > out.len() {
+                bail!("corrupt compressed payload (repeat run overflow)");
+            }
+            out[o..o + n].fill(src[i]);
+            i += 1;
+            o += n;
+        }
+    }
+    if o != out.len() {
+        bail!("corrupt compressed payload (short output: {o} of {})", out.len());
+    }
+    Ok(())
+}
+
+/// Compress a full cluster for on-disk storage: `[comp_len u32 LE]` +
+/// token stream. Returns `None` when the framed payload is not strictly
+/// smaller than the cluster (store it uncompressed instead).
+pub fn try_compress(cluster: &[u8]) -> Option<Vec<u8>> {
+    let tokens = compress(cluster);
+    let framed = FRAME_BYTES as usize + tokens.len();
+    if framed >= cluster.len() {
+        return None;
+    }
+    let mut out = Vec::with_capacity(framed);
+    out.extend_from_slice(&(tokens.len() as u32).to_le_bytes());
+    out.extend_from_slice(&tokens);
+    Some(out)
+}
+
+/// Decode a framed payload (as stored on disk, possibly with unit-round
+/// padding after the stream) into a full cluster buffer.
+pub fn decode_framed(stored: &[u8], out: &mut [u8]) -> Result<()> {
+    if stored.len() < FRAME_BYTES as usize {
+        bail!("compressed payload shorter than its frame");
+    }
+    let comp_len = u32::from_le_bytes(stored[..4].try_into().unwrap()) as usize;
+    let Some(tokens) = stored[4..].get(..comp_len) else {
+        bail!("compressed payload length {comp_len} exceeds stored bytes");
+    };
+    decompress(tokens, out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn roundtrip(src: &[u8]) {
+        let tokens = compress(src);
+        let mut out = vec![0xAAu8; src.len()];
+        decompress(&tokens, &mut out).unwrap();
+        assert_eq!(out, src);
+    }
+
+    #[test]
+    fn roundtrip_patterns() {
+        roundtrip(&[]);
+        roundtrip(&[7]);
+        roundtrip(&[0u8; 4096]);
+        roundtrip(&[0xFF; 131 * 3 + 5]);
+        let mixed: Vec<u8> = (0..4096u32).map(|i| (i % 251) as u8).collect();
+        roundtrip(&mixed);
+        let mut runs = vec![0u8; 1000];
+        runs.extend((0..500u32).map(|i| (i * 7 % 256) as u8));
+        runs.extend(vec![9u8; 300]);
+        roundtrip(&runs);
+    }
+
+    #[test]
+    fn repetitive_data_shrinks() {
+        let zeros = vec![0u8; 65536];
+        let framed = try_compress(&zeros).expect("zeros compress");
+        assert!(framed.len() < 2048, "64 KiB of zeros -> {} B", framed.len());
+        let mut out = vec![1u8; 65536];
+        decode_framed(&framed, &mut out).unwrap();
+        assert_eq!(out, zeros);
+    }
+
+    #[test]
+    fn incompressible_data_is_rejected() {
+        // counter-mode pseudo-noise has no runs >= RUN_MIN
+        let noise: Vec<u8> = (0..4096u64)
+            .map(|i| (i.wrapping_mul(0x9E3779B97F4A7C15) >> 56) as u8)
+            .collect();
+        assert!(try_compress(&noise).is_none());
+    }
+
+    #[test]
+    fn framed_payload_tolerates_padding() {
+        let data = vec![5u8; 512];
+        let mut framed = try_compress(&data).unwrap();
+        framed.resize(framed.len() + 37, 0); // unit-round padding
+        let mut out = vec![0u8; 512];
+        decode_framed(&framed, &mut out).unwrap();
+        assert_eq!(out, data);
+    }
+
+    #[test]
+    fn corrupt_payloads_error_not_panic() {
+        let mut out = vec![0u8; 64];
+        assert!(decompress(&[0x7F, 1, 2], &mut out).is_err()); // short literals
+        assert!(decompress(&[0xFF], &mut out).is_err()); // missing repeat byte
+        assert!(decode_framed(&[1, 0], &mut out).is_err()); // short frame
+        assert!(decode_framed(&[200, 0, 0, 0, 1], &mut out).is_err()); // bad len
+    }
+}

@@ -1,0 +1,323 @@
+//! Fleet-wide content-addressed extent index.
+//!
+//! Generalizes the GC registry's `(node, file)` refcounting to
+//! `(node, content-hash)` *extents*: when a driver writes a full cluster
+//! whose bytes already exist on the same storage node — in the shared
+//! golden base of a cloned population, or earlier in its own head — the
+//! new L2 entry references the existing extent instead of allocating a
+//! fresh cluster, and the index counts one more sharer.
+//!
+//! The index is a **volatile accelerator + accounting structure**, not a
+//! correctness anchor: physical sharing is always protected by on-disk
+//! cluster refcounts (`Allocator::incref`, sharers within one file) or
+//! file-level GC refcounts (remote references into a backing file of the
+//! same chain, which `GcRegistry::sync_chain` already pins). Crash
+//! recovery clears it ([`DedupIndex::clear`]); the only cost of a lost
+//! entry is a missed sharing opportunity. The invariants it must keep
+//! while alive:
+//!
+//! * an extent is only handed out for sharing while its `(file, word)`
+//!   still holds the declared bytes — any overwrite or free of a
+//!   declared cluster retires the extent first ([`DedupIndex::retire`]);
+//! * an extent's refcount counts every L2 entry referencing it (the
+//!   declaring write included), so reclaim of the backing cluster is
+//!   gated on the count reaching zero ([`DedupIndex::release`]);
+//! * extents of a GC-deleted file are dropped with the file
+//!   ([`DedupIndex::drop_file`], wired into the coordinator's sweep).
+
+use std::collections::{BTreeMap, HashMap};
+use std::sync::Mutex;
+
+/// One stored copy of some cluster content on a node.
+#[derive(Clone, Debug)]
+pub struct Extent {
+    /// Image file holding the bytes.
+    pub file: String,
+    /// Offset *word* inside the file — includes descriptor bits, so a
+    /// compressed extent is shared as a compressed reference.
+    pub word: u64,
+    /// L2 entries referencing this extent (declarer included).
+    pub refs: u64,
+}
+
+#[derive(Default)]
+struct Inner {
+    /// (node, content hash) -> extent. BTreeMap: deterministic iteration
+    /// for status output and the audit hook.
+    extents: BTreeMap<(String, u64), Extent>,
+    /// (node, file, word) -> hash: reverse map so overwrites and frees —
+    /// which know *where*, not *what* — can retire the extent.
+    by_loc: BTreeMap<(String, String, u64), u64>,
+    /// node -> logical bytes served by sharing instead of allocation.
+    saved_bytes: HashMap<String, u64>,
+}
+
+/// Per-node / fleet dedup counters for status output.
+#[derive(Clone, Debug, Default)]
+pub struct DedupStats {
+    pub extents: u64,
+    /// Total sharers across all extents (>= extents).
+    pub refs: u64,
+    /// Bytes of guest writes served by sharing an existing extent.
+    pub saved_bytes: u64,
+}
+
+/// The fleet-wide index. One per coordinator, shared by every driver.
+#[derive(Default)]
+pub struct DedupIndex {
+    inner: Mutex<Inner>,
+}
+
+impl DedupIndex {
+    pub fn new() -> DedupIndex {
+        DedupIndex::default()
+    }
+
+    /// Register freshly written cluster content as shareable. First
+    /// writer wins: if the hash is already declared on this node the
+    /// existing extent stays (the caller missed the lookup race and
+    /// simply stored a private copy).
+    pub fn declare(&self, node: &str, hash: u64, file: &str, word: u64) {
+        let mut inner = self.inner.lock().unwrap();
+        let key = (node.to_string(), hash);
+        if inner.extents.contains_key(&key) {
+            return;
+        }
+        inner.extents.insert(
+            key,
+            Extent { file: file.to_string(), word, refs: 1 },
+        );
+        inner
+            .by_loc
+            .insert((node.to_string(), file.to_string(), word), hash);
+    }
+
+    /// Find an extent for `hash` on `node` without taking a reference.
+    pub fn lookup(&self, node: &str, hash: u64) -> Option<Extent> {
+        self.inner
+            .lock()
+            .unwrap()
+            .extents
+            .get(&(node.to_string(), hash))
+            .cloned()
+    }
+
+    /// Take one more reference on an extent (a write was served by
+    /// sharing it); `bytes` is the logical cluster size saved.
+    pub fn share(&self, node: &str, hash: u64, bytes: u64) -> Option<Extent> {
+        let mut inner = self.inner.lock().unwrap();
+        let e = inner.extents.get_mut(&(node.to_string(), hash))?;
+        e.refs += 1;
+        let out = e.clone();
+        *inner.saved_bytes.entry(node.to_string()).or_default() += bytes;
+        Some(out)
+    }
+
+    /// Drop one reference from the extent at `(node, file, word)` — a
+    /// sharer (or the declarer) was overwritten or freed. Returns the
+    /// remaining refcount; the extent disappears at zero. No-op (None)
+    /// if the location is not a declared extent.
+    pub fn release(&self, node: &str, file: &str, word: u64) -> Option<u64> {
+        let mut inner = self.inner.lock().unwrap();
+        let loc = (node.to_string(), file.to_string(), word);
+        let hash = *inner.by_loc.get(&loc)?;
+        let key = (node.to_string(), hash);
+        let e = inner.extents.get_mut(&key)?;
+        e.refs -= 1;
+        let left = e.refs;
+        if left == 0 {
+            inner.extents.remove(&key);
+            inner.by_loc.remove(&loc);
+        }
+        Some(left)
+    }
+
+    /// The content at `(node, file, word)` is about to change (in-place
+    /// overwrite of a declared cluster): the extent no longer describes
+    /// stored bytes, so withdraw it from sharing entirely, whatever its
+    /// refcount. Existing sharers keep their on-disk references (the
+    /// cluster itself is refcount-protected); only future sharing stops.
+    pub fn retire(&self, node: &str, file: &str, word: u64) {
+        let mut inner = self.inner.lock().unwrap();
+        let loc = (node.to_string(), file.to_string(), word);
+        if let Some(hash) = inner.by_loc.remove(&loc) {
+            inner.extents.remove(&(node.to_string(), hash));
+        }
+    }
+
+    /// A file was physically deleted (GC sweep) or left its node
+    /// (migration switchover): drop every extent stored in it, on any
+    /// node. Sharers' on-disk references were release-gated before the
+    /// file could be condemned, so this only prunes the index.
+    pub fn drop_file(&self, file: &str) {
+        let mut inner = self.inner.lock().unwrap();
+        inner.extents.retain(|_, e| e.file != file);
+        inner
+            .by_loc
+            .retain(|(_, f, _), _| f != file);
+    }
+
+    /// Drop every extent whose backing file fails `exists` — the
+    /// post-sweep reconciliation (GC deletes whole condemned files, so
+    /// pruning by surviving file set needs no per-deletion callback).
+    /// Returns the number of extents pruned.
+    pub fn prune_missing(&self, exists: impl Fn(&str) -> bool) -> u64 {
+        let mut inner = self.inner.lock().unwrap();
+        let before = inner.extents.len();
+        inner.extents.retain(|_, e| exists(&e.file));
+        inner.by_loc.retain(|(_, f, _), _| exists(f));
+        (before - inner.extents.len()) as u64
+    }
+
+    /// Forget everything (crash recovery: the index is volatile state).
+    pub fn clear(&self) {
+        let mut inner = self.inner.lock().unwrap();
+        inner.extents.clear();
+        inner.by_loc.clear();
+        // saved_bytes survives: it is a cumulative savings ledger, not a
+        // claim about current index contents
+    }
+
+    /// Counters for one node.
+    pub fn node_stats(&self, node: &str) -> DedupStats {
+        let inner = self.inner.lock().unwrap();
+        let mut s = DedupStats::default();
+        for ((n, _), e) in inner.extents.iter() {
+            if n == node {
+                s.extents += 1;
+                s.refs += e.refs;
+            }
+        }
+        s.saved_bytes = inner.saved_bytes.get(node).copied().unwrap_or(0);
+        s
+    }
+
+    /// Fleet-wide counters.
+    pub fn fleet_stats(&self) -> DedupStats {
+        let inner = self.inner.lock().unwrap();
+        DedupStats {
+            extents: inner.extents.len() as u64,
+            refs: inner.extents.values().map(|e| e.refs).sum(),
+            saved_bytes: inner.saved_bytes.values().sum(),
+        }
+    }
+
+    /// Audit hook: extents whose backing file fails `exists` — should
+    /// always be empty when the sweep wiring is correct.
+    pub fn stale_extents(&self, exists: impl Fn(&str) -> bool) -> Vec<(String, u64)> {
+        let inner = self.inner.lock().unwrap();
+        inner
+            .extents
+            .iter()
+            .filter(|(_, e)| !exists(&e.file))
+            .map(|((n, h), _)| (n.clone(), *h))
+            .collect()
+    }
+}
+
+/// FNV-1a over cluster bytes — the content hash. Stable, dependency-free
+/// and fast enough for the simulated fleet; collisions are guarded by
+/// the honest path (a collision would share wrong bytes, so production
+/// systems use a cryptographic hash — the structure is what the
+/// reproduction studies, not the hash width).
+pub fn content_hash(bytes: &[u8]) -> u64 {
+    let mut h = 0xcbf29ce484222325u64;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn declare_lookup_share_release() {
+        let ix = DedupIndex::new();
+        let h = content_hash(b"cluster-bytes");
+        ix.declare("n0", h, "base-0", 7 << 16);
+        let e = ix.lookup("n0", h).unwrap();
+        assert_eq!(e.file, "base-0");
+        assert_eq!(e.word, 7 << 16);
+        assert_eq!(e.refs, 1);
+        // other node: miss (dedup cannot span nodes physically)
+        assert!(ix.lookup("n1", h).is_none());
+        let e = ix.share("n0", h, 65536).unwrap();
+        assert_eq!(e.refs, 2);
+        assert_eq!(ix.node_stats("n0").saved_bytes, 65536);
+        // a sharer goes away: extent survives
+        assert_eq!(ix.release("n0", "base-0", 7 << 16), Some(1));
+        assert!(ix.lookup("n0", h).is_some(), "still one reference");
+        // last reference: extent reclaimed
+        assert_eq!(ix.release("n0", "base-0", 7 << 16), Some(0));
+        assert!(ix.lookup("n0", h).is_none());
+        assert_eq!(ix.release("n0", "base-0", 7 << 16), None, "idempotent");
+    }
+
+    #[test]
+    fn shared_extent_never_reclaimed_early() {
+        let ix = DedupIndex::new();
+        let h = content_hash(b"shared");
+        ix.declare("n0", h, "head-1", 3 << 16);
+        ix.share("n0", h, 1 << 16);
+        ix.share("n0", h, 1 << 16);
+        // two releases: two sharers still outstanding after the first
+        assert_eq!(ix.release("n0", "head-1", 3 << 16), Some(2));
+        assert_eq!(ix.release("n0", "head-1", 3 << 16), Some(1));
+        assert!(ix.lookup("n0", h).is_some());
+        assert_eq!(ix.release("n0", "head-1", 3 << 16), Some(0));
+        assert!(ix.lookup("n0", h).is_none());
+    }
+
+    #[test]
+    fn retire_withdraws_changed_content() {
+        let ix = DedupIndex::new();
+        let h = content_hash(b"v1");
+        ix.declare("n0", h, "head-1", 5 << 16);
+        ix.share("n0", h, 1 << 16);
+        // the declared cluster is overwritten in place: no new sharing
+        ix.retire("n0", "head-1", 5 << 16);
+        assert!(ix.lookup("n0", h).is_none());
+        // redeclare with the new content at the same location
+        let h2 = content_hash(b"v2");
+        ix.declare("n0", h2, "head-1", 5 << 16);
+        assert!(ix.lookup("n0", h2).is_some());
+    }
+
+    #[test]
+    fn drop_file_prunes_and_audit_sees_stale() {
+        let ix = DedupIndex::new();
+        ix.declare("n0", 11, "base-0", 1 << 16);
+        ix.declare("n0", 22, "head-1", 2 << 16);
+        ix.declare("n1", 33, "base-0", 1 << 16);
+        let stale = ix.stale_extents(|f| f != "base-0");
+        assert_eq!(stale.len(), 2, "both nodes' base extents flagged");
+        ix.drop_file("base-0");
+        assert!(ix.lookup("n0", 11).is_none());
+        assert!(ix.lookup("n1", 33).is_none());
+        assert!(ix.lookup("n0", 22).is_some());
+        assert!(ix.stale_extents(|f| f != "base-0").is_empty());
+        // prune_missing is the sweep-facing spelling of the same cleanup
+        ix.declare("n0", 44, "gone", 4 << 16);
+        assert_eq!(ix.prune_missing(|f| f == "head-1"), 1);
+        assert!(ix.lookup("n0", 44).is_none());
+        assert!(ix.lookup("n0", 22).is_some());
+        ix.clear();
+        assert_eq!(ix.fleet_stats().extents, 0);
+    }
+
+    #[test]
+    fn stats_aggregate_per_node_and_fleet() {
+        let ix = DedupIndex::new();
+        ix.declare("n0", 1, "f", 1 << 16);
+        ix.declare("n1", 2, "g", 2 << 16);
+        ix.share("n0", 1, 100);
+        ix.share("n0", 1, 100);
+        let n0 = ix.node_stats("n0");
+        assert_eq!((n0.extents, n0.refs, n0.saved_bytes), (1, 3, 200));
+        let fleet = ix.fleet_stats();
+        assert_eq!((fleet.extents, fleet.refs, fleet.saved_bytes), (2, 4, 200));
+    }
+}

@@ -1,0 +1,78 @@
+//! Capacity multiplication: zero clusters, compressed clusters, and
+//! fleet-wide content-addressed dedup.
+//!
+//! Long snapshot chains inflate storage as well as I/O: every written
+//! cluster costs a full cluster of capacity, even all-zero ones, and
+//! cloned populations store the same bytes once per clone. This
+//! subsystem multiplies effective fleet capacity three ways:
+//!
+//! * **Zero detection** — an all-zero guest write allocates nothing; it
+//!   leaves an `OFLAG_ZERO` L2 entry and reads are served from a shared
+//!   zero page with zero device time.
+//! * **Compression** ([`codec`]) — a cluster that shrinks is stored as a
+//!   sector-aligned sub-cluster payload (`OFLAG_COMPRESSED`), billed at
+//!   its compressed size on the wire and disk, with the decompress cost
+//!   modeled on read.
+//! * **Dedup** ([`index`]) — a cluster whose bytes already exist on the
+//!   node (shared golden base, earlier write in the same head) becomes a
+//!   reference to the existing extent: a remote L2 reference into a
+//!   backing file of the chain, or a refcount-shared cluster within the
+//!   active file.
+//!
+//! [`capacity`] splits accounting into logical vs physical bytes so
+//! placement and rebalancing operate on real, post-dedup pressure.
+//!
+//! All three features default **off** ([`CapacityPolicy`]); drivers
+//! enable them per VM via `Driver::set_capacity_policy`. Compression and
+//! dedup require `DataMode::Real` (synthetic data is generated, not
+//! stored, so content cannot round-trip); drivers ignore those bits on
+//! synthetic images.
+
+pub mod capacity;
+pub mod codec;
+pub mod index;
+
+pub use capacity::{
+    chain_logical_bytes, chain_physical_bytes, image_breakdown, seed_chain, MappedBreakdown,
+};
+pub use index::{content_hash, DedupIndex, DedupStats, Extent};
+
+use std::sync::Arc;
+
+/// Per-VM switches for the capacity subsystem. Default: everything off
+/// (bit-for-bit the pre-subsystem write path).
+#[derive(Clone, Default)]
+pub struct CapacityPolicy {
+    /// Detect all-zero full-cluster writes and store `OFLAG_ZERO`
+    /// entries instead of data clusters.
+    pub zero_detect: bool,
+    /// Compress full-cluster writes that shrink (`OFLAG_COMPRESSED`).
+    pub compress: bool,
+    /// Content-addressed sharing through the fleet [`DedupIndex`];
+    /// carries the node name the VM's files live on (the index cannot
+    /// share across nodes physically).
+    pub dedup: Option<DedupContext>,
+}
+
+/// Where a VM's writes may dedup to.
+#[derive(Clone)]
+pub struct DedupContext {
+    pub index: Arc<DedupIndex>,
+    /// Storage node holding this VM's chain.
+    pub node: String,
+}
+
+impl CapacityPolicy {
+    /// Everything on — the fig24 configuration.
+    pub fn full(index: Arc<DedupIndex>, node: &str) -> CapacityPolicy {
+        CapacityPolicy {
+            zero_detect: true,
+            compress: true,
+            dedup: Some(DedupContext { index, node: node.to_string() }),
+        }
+    }
+
+    pub fn any_enabled(&self) -> bool {
+        self.zero_detect || self.compress || self.dedup.is_some()
+    }
+}

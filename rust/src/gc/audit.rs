@@ -30,11 +30,17 @@ pub struct AuditReport {
     pub leaked: Vec<(String, u64)>,
     /// Walk failures (broken backing links, unopenable images).
     pub errors: Vec<String>,
+    /// Dedup extents whose backing file no longer exists, as
+    /// `(node, content_hash)` — filled by the coordinator's
+    /// [`crate::coordinator::Coordinator::gc_audit`] from the fleet
+    /// [`crate::dedup::DedupIndex`]; always empty when the sweep's
+    /// `prune_missing` wiring is correct.
+    pub stale_extents: Vec<(String, u64)>,
 }
 
 impl AuditReport {
     pub fn is_clean(&self) -> bool {
-        self.leaked.is_empty() && self.errors.is_empty()
+        self.leaked.is_empty() && self.errors.is_empty() && self.stale_extents.is_empty()
     }
 
     /// Bytes stranded by leaks.

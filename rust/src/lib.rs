@@ -21,6 +21,9 @@
 //!   stream/stamp jobs interleaved with guest I/O.
 //! * [`gc`] — chain garbage collection: cross-chain reference registry,
 //!   deferred-delete set, rate-limited sweep job and leak audit.
+//! * [`dedup`] — capacity multiplication: the compressed-cluster codec,
+//!   the fleet-wide content-addressed extent index, and the
+//!   logical-vs-physical capacity scanner.
 //! * [`migrate`] — live chain migration between storage nodes (mirror
 //!   job, crash-safe switchover journal) and the fleet rebalancer.
 //! * [`guest`] — simulated guest workloads (dd, fio, YCSB over an LSM
@@ -38,6 +41,7 @@ pub mod chaingen;
 pub mod characterize;
 pub mod cli;
 pub mod coordinator;
+pub mod dedup;
 pub mod gc;
 pub mod guest;
 pub mod metrics;

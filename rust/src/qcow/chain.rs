@@ -96,11 +96,15 @@ impl Chain {
 
     /// Resolve a virtual cluster by walking the chain (uncached reference
     /// path — the semantic ground truth both drivers must agree with).
+    /// Stamps are authoritative: a stamped remote entry resolves directly
+    /// to its owner. This matters for dedup shares, which reference a
+    /// *different* virtual cluster's storage in the owner file — walking
+    /// past them to the owner's own table would resolve the wrong data.
     pub fn resolve_walk(&self, vcluster: u64) -> Result<Option<(u16, u64)>> {
         for idx in (0..self.images.len()).rev() {
             let e = self.images[idx].l2_entry(vcluster)?;
-            if let Some(off) = e.vanilla_view() {
-                return Ok(Some((idx as u16, off)));
+            if let Some((bfi, off)) = e.sqemu_view(idx as u16) {
+                return Ok(Some((bfi, off)));
             }
         }
         Ok(None)

@@ -12,6 +12,28 @@
 //! bits 46..0    host byte offset of the data cluster inside the owning
 //!               file (cluster aligned)
 //! ```
+//!
+//! Because host offsets are cluster aligned and the minimum cluster size
+//! is 512 B, the low 9 bits of the offset field are always zero for a
+//! plain data cluster. They carry a *cluster descriptor* (the qcow2 v3
+//! `OFLAG_ZERO` / `OFLAG_COMPRESSED` analogue):
+//!
+//! ```text
+//! bit  0        OFLAG_ZERO — the cluster reads as zeros; no host
+//!               cluster is allocated (the rest of the offset field is 0)
+//! bit  1        OFLAG_COMPRESSED — the offset (minus descriptor bits)
+//!               points at a sector-aligned compressed payload packed
+//!               into a shared host cluster
+//! bits 8..2     compressed payload size, in units of cluster_size/128,
+//!               stored as units-1 (1..=128 units)
+//! ```
+//!
+//! The descriptor travels *inside* the offset word: [`L2Entry::host_offset`]
+//! and the `(bfi, offset)` resolution tuples threaded through caches,
+//! coalescers and snapshot copies pass it through opaquely (a plain
+//! cluster has descriptor 0, so nothing changes for existing entries).
+//! Only I/O endpoints decode it, via [`decode_offset`] /
+//! [`L2Entry::data_offset`].
 
 /// The paper's unallocated sentinel on the kernel side is -1; on disk an
 /// all-zero entry means "no information in this file".
@@ -20,6 +42,47 @@ const BFI_SHIFT: u32 = 47;
 const BFI_MASK: u64 = ((1 << BFI_BITS) - 1) << BFI_SHIFT;
 const ALLOCATED: u64 = 1 << 63;
 const OFFSET_MASK: u64 = (1 << BFI_SHIFT) - 1;
+
+/// Width of the per-cluster descriptor in the low bits of the offset
+/// field (equals the minimum cluster_bits, so the bits are always free).
+pub const DESC_BITS: u32 = 9;
+/// Mask of the descriptor bits inside the offset word.
+pub const DESC_MASK: u64 = (1 << DESC_BITS) - 1;
+/// Cluster reads as zeros; no host cluster backs it.
+pub const OFLAG_ZERO: u64 = 1 << 0;
+/// Cluster is stored as a compressed sub-cluster payload.
+pub const OFLAG_COMPRESSED: u64 = 1 << 1;
+const COMP_SIZE_SHIFT: u32 = 2;
+const COMP_SIZE_MASK: u64 = 0x7f << COMP_SIZE_SHIFT;
+
+/// Decoded interpretation of an offset word carried in `(bfi, offset)`
+/// resolution tuples. Everything between the L2 tables and the device
+/// treats the word as opaque; I/O endpoints call [`decode_offset`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ClusterLoc {
+    /// Plain data cluster at this (cluster-aligned) device offset.
+    Data(u64),
+    /// Reads as zeros; never touches the device.
+    Zero,
+    /// Compressed payload at this sector-aligned device offset,
+    /// `units * cluster_size / 128` stored bytes.
+    Compressed { off: u64, units: u64 },
+}
+
+/// Decode the descriptor bits of an offset word (see [`ClusterLoc`]).
+pub fn decode_offset(word: u64) -> ClusterLoc {
+    let desc = word & DESC_MASK;
+    if desc & OFLAG_ZERO != 0 {
+        ClusterLoc::Zero
+    } else if desc & OFLAG_COMPRESSED != 0 {
+        ClusterLoc::Compressed {
+            off: word & !DESC_MASK,
+            units: ((desc & COMP_SIZE_MASK) >> COMP_SIZE_SHIFT) + 1,
+        }
+    } else {
+        ClusterLoc::Data(word)
+    }
+}
 
 /// Decoded view of one L2 entry.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -47,6 +110,22 @@ impl L2Entry {
         L2Entry(((bfi as u64 + 1) << BFI_SHIFT) | (host_off & OFFSET_MASK))
     }
 
+    /// Entry for an all-zero cluster (`OFLAG_ZERO`): present, reads as
+    /// zeros, allocates no host cluster. ALLOCATED so it shadows backing
+    /// data for both drivers' chain walks.
+    pub fn zero_cluster(own_index: Option<u16>) -> L2Entry {
+        L2Entry::local(OFLAG_ZERO, own_index)
+    }
+
+    /// Entry for a compressed cluster: `payload_units * cluster_size/128`
+    /// stored bytes at sector-aligned `data_off` inside this file.
+    pub fn compressed(data_off: u64, payload_units: u64, own_index: Option<u16>) -> L2Entry {
+        debug_assert_eq!(data_off & DESC_MASK, 0, "payload not sector aligned");
+        debug_assert!((1..=128).contains(&payload_units), "bad payload size");
+        let desc = OFLAG_COMPRESSED | ((payload_units - 1) << COMP_SIZE_SHIFT);
+        L2Entry::local(data_off | desc, own_index)
+    }
+
     /// Cluster data present in this very file?
     pub fn is_allocated_here(&self) -> bool {
         self.0 & ALLOCATED != 0
@@ -67,9 +146,53 @@ impl L2Entry {
         }
     }
 
-    /// Host byte offset of the data cluster in the owning file.
+    /// The raw offset word: host byte offset of the data cluster in the
+    /// owning file, *including* descriptor bits (opaque pass-through —
+    /// plain clusters have descriptor 0). Decode at I/O endpoints with
+    /// [`decode_offset`] or use [`Self::data_offset`].
     pub fn host_offset(&self) -> u64 {
         self.0 & OFFSET_MASK
+    }
+
+    /// Device byte offset with the descriptor bits stripped.
+    pub fn data_offset(&self) -> u64 {
+        self.0 & OFFSET_MASK & !DESC_MASK
+    }
+
+    /// Raw descriptor bits (0 for a plain data cluster).
+    pub fn descriptor(&self) -> u64 {
+        self.0 & DESC_MASK
+    }
+
+    /// Is this a present, `OFLAG_ZERO`-flagged cluster?
+    pub fn is_zero_cluster(&self) -> bool {
+        self.0 & OFLAG_ZERO != 0
+    }
+
+    /// Is this a compressed cluster?
+    pub fn is_compressed(&self) -> bool {
+        self.0 & OFLAG_COMPRESSED != 0
+    }
+
+    /// Decoded location of this entry's data (see [`ClusterLoc`]).
+    pub fn loc(&self) -> ClusterLoc {
+        decode_offset(self.0 & OFFSET_MASK)
+    }
+
+    /// Structurally valid descriptor? Exactly one of: plain (descriptor
+    /// 0), a pure zero cluster (`OFLAG_ZERO` alone, offset bits 0), or
+    /// compressed (`OFLAG_COMPRESSED` + size). Anything else — e.g. a
+    /// garbage misaligned offset whose low bits happen to be set — is
+    /// corruption for `qcheck` to flag.
+    pub fn descriptor_valid(&self) -> bool {
+        let d = self.descriptor();
+        if d == 0 {
+            true
+        } else if d & OFLAG_ZERO != 0 {
+            d == OFLAG_ZERO && self.data_offset() == 0
+        } else {
+            d & OFLAG_COMPRESSED != 0
+        }
     }
 
     /// What a *vanilla* driver sees: allocated-here offset or hole.
@@ -143,6 +266,72 @@ mod tests {
         let e = L2Entry::remote(1 << 16, u16::MAX - 1);
         assert_eq!(e.bfi(), Some(u16::MAX - 1));
         assert_eq!(e.host_offset(), 1 << 16);
+    }
+
+    #[test]
+    fn zero_cluster_is_present_but_deviceless() {
+        let e = L2Entry::zero_cluster(Some(2));
+        assert!(e.is_allocated_here(), "zero entries shadow backing data");
+        assert!(e.is_zero_cluster());
+        assert!(!e.is_zero(), "present, not a hole");
+        assert_eq!(e.bfi(), Some(2));
+        assert_eq!(e.data_offset(), 0);
+        assert_eq!(e.loc(), ClusterLoc::Zero);
+        // the flag survives a snapshot copy (remote re-encoding)
+        let copied = L2Entry::remote(e.host_offset(), 2);
+        assert_eq!(copied.loc(), ClusterLoc::Zero);
+        assert!(copied.is_zero_cluster());
+    }
+
+    #[test]
+    fn compressed_roundtrip() {
+        let e = L2Entry::compressed(5 << 16, 17, Some(3));
+        assert!(e.is_allocated_here());
+        assert!(e.is_compressed());
+        assert!(!e.is_zero_cluster());
+        assert_eq!(e.data_offset(), 5 << 16);
+        assert_eq!(e.bfi(), Some(3));
+        assert_eq!(
+            e.loc(),
+            ClusterLoc::Compressed { off: 5 << 16, units: 17 }
+        );
+        // full unit range encodes
+        for units in [1u64, 64, 128] {
+            let e = L2Entry::compressed(1 << 20, units, None);
+            assert_eq!(e.loc(), ClusterLoc::Compressed { off: 1 << 20, units });
+        }
+    }
+
+    #[test]
+    fn descriptor_validity() {
+        assert!(L2Entry::local(7 << 16, Some(0)).descriptor_valid());
+        assert!(L2Entry::zero_cluster(None).descriptor_valid());
+        assert!(L2Entry::compressed(1 << 16, 128, None).descriptor_valid());
+        // garbage low bits are corruption, not a descriptor
+        assert!(!L2Entry::local((1 << 16) + 5, Some(0)).descriptor_valid());
+        assert!(!L2Entry::local((1 << 16) + 4, None).descriptor_valid());
+        // zero flag with a nonzero offset is torn garbage
+        assert!(!L2Entry::local((1 << 16) | OFLAG_ZERO, None).descriptor_valid());
+    }
+
+    #[test]
+    fn plain_entries_have_empty_descriptor() {
+        let e = L2Entry::local(7 << 16, Some(1));
+        assert_eq!(e.descriptor(), 0);
+        assert_eq!(e.data_offset(), e.host_offset());
+        assert_eq!(e.loc(), ClusterLoc::Data(7 << 16));
+        assert_eq!(decode_offset(7 << 16), ClusterLoc::Data(7 << 16));
+    }
+
+    #[test]
+    fn descriptor_survives_offset_word_passthrough() {
+        // caches / coalescers carry host_offset() words opaquely and
+        // re-encode them through remote()/local()
+        let e = L2Entry::compressed(9 << 16, 100, Some(4));
+        let word = e.host_offset();
+        let restamped = L2Entry::local(word, Some(4));
+        assert_eq!(restamped.loc(), e.loc());
+        assert_eq!(decode_offset(word), e.loc());
     }
 
     #[test]

@@ -6,13 +6,19 @@
 //! drivers in [`crate::vdisk`] implement the vanilla and SQEMU request
 //! paths on top. Snapshot creation lives in [`crate::qcow::snapshot`].
 
-use super::entry::L2Entry;
+use super::entry::{L2Entry, DESC_BITS};
 use super::layout::{Geometry, Header, ENTRY_SIZE, FEATURE_BFI, HEADER_SLOT_SIZE};
 use super::refcount::Allocator;
+use crate::dedup::codec;
 use crate::storage::backend::{read_u64, write_u64, BackendRef};
+use crate::util::div_ceil;
 use anyhow::{bail, Context, Result};
 use std::sync::atomic::{AtomicU32, Ordering};
 use std::sync::{Mutex, RwLock};
+
+/// Compressed payloads start on this alignment so their offsets leave
+/// the descriptor bits of the L2 offset word free.
+const PAYLOAD_ALIGN: u64 = 1 << DESC_BITS;
 
 /// How data clusters are materialized.
 ///
@@ -49,6 +55,11 @@ pub struct Image {
     /// each rewrite bumps it and lands in the other slot, making header
     /// updates old-valid-or-new-valid under any crash.
     hdr_gen: AtomicU32,
+    /// Packing cursor for compressed payloads: (host cluster offset,
+    /// bytes used). `(0, 0)` = no open packing cluster (offset 0 is the
+    /// header, never a payload cluster). Session-local: a reopen starts
+    /// a fresh packing cluster, the old one keeps its payload refcounts.
+    comp_cursor: Mutex<(u64, u64)>,
 }
 
 impl Image {
@@ -96,6 +107,7 @@ impl Image {
             data_mode,
             seed: fxhash(name.as_bytes()),
             hdr_gen: AtomicU32::new(0),
+            comp_cursor: Mutex::new((0, 0)),
         })
     }
 
@@ -124,6 +136,7 @@ impl Image {
             data_mode,
             seed: fxhash(name.as_bytes()),
             hdr_gen: AtomicU32::new(header.generation),
+            comp_cursor: Mutex::new((0, 0)),
         })
     }
 
@@ -291,6 +304,120 @@ impl Image {
             .lock()
             .unwrap()
             .free(&self.geom, self.backend.as_ref(), off)
+    }
+
+    /// On-disk refcount of the cluster containing `off` (the dedup
+    /// shared-cluster copy-on-write guard: refcount > 1 means another L2
+    /// entry references the same bytes, so in-place writes must CoW).
+    pub fn cluster_refcount(&self, off: u64) -> Result<u16> {
+        let geom = self.geom;
+        self.alloc.lock().unwrap().refcount(
+            &geom,
+            self.backend.as_ref(),
+            off / geom.cluster_size(),
+        )
+    }
+
+    /// Share the cluster containing `off` with one more L2 entry
+    /// (intra-file dedup): +1 refcount, refcount-before-reference order.
+    pub fn incref_cluster(&self, off: u64) -> Result<()> {
+        let geom = self.geom;
+        self.alloc
+            .lock()
+            .unwrap()
+            .incref(&geom, self.backend.as_ref(), off)
+    }
+
+    // ------------------------------------------------ compressed clusters
+
+    /// Bytes per compressed-size unit (`cluster_size / 128`, matching
+    /// the 7-bit size field of the L2 descriptor).
+    pub fn comp_unit(&self) -> u64 {
+        self.geom.cluster_size() >> 7
+    }
+
+    /// Compress and store one full cluster. Returns the L2 offset word
+    /// (`payload_off | OFLAG_COMPRESSED | size`) or `None` when the data
+    /// does not shrink. `Real` mode only — synthetic data is generated,
+    /// not stored, so it cannot round-trip through a codec.
+    ///
+    /// Payloads are packed into shared "compressed host clusters" at
+    /// sector alignment; the containing cluster's refcount equals the
+    /// number of payloads (plus dedup sharers) inside, so reclaim is
+    /// gated exactly like any shared cluster.
+    pub fn write_compressed(&self, data: &[u8]) -> Result<Option<u64>> {
+        debug_assert_eq!(data.len() as u64, self.geom.cluster_size());
+        if self.data_mode != DataMode::Real {
+            return Ok(None);
+        }
+        let Some(framed) = codec::try_compress(data) else {
+            return Ok(None);
+        };
+        let unit = self.comp_unit();
+        let units = div_ceil(framed.len() as u64, unit);
+        debug_assert!(units >= 1 && units <= 128);
+        let stored = units * unit;
+        let off = self.alloc_compressed(stored)?;
+        let mut padded = framed;
+        padded.resize(stored as usize, 0);
+        // one device write of the *compressed* bytes (Timed bills these)
+        self.backend.write_at(&padded, off)?;
+        Ok(Some(L2Entry::compressed(off, units, None).host_offset()))
+    }
+
+    /// Read a compressed cluster: ONE device I/O of the stored
+    /// (unit-rounded) payload, then decode into the full-cluster `out`.
+    /// The caller models the decompress CPU cost on its clock.
+    pub fn read_compressed(&self, data_off: u64, units: u64, out: &mut [u8]) -> Result<()> {
+        debug_assert_eq!(out.len() as u64, self.geom.cluster_size());
+        if self.data_mode != DataMode::Real {
+            bail!("compressed clusters require Real data mode");
+        }
+        let stored = units * self.comp_unit();
+        let mut payload = vec![0u8; stored as usize];
+        self.backend.read_at(&mut payload, data_off)?;
+        codec::decode_framed(&payload, out)
+    }
+
+    /// Drop one payload reference on the compressed host cluster
+    /// containing `data_off`; the cluster returns to the free list when
+    /// its last payload (or dedup sharer) is released.
+    pub fn free_compressed(&self, data_off: u64) -> Result<()> {
+        let geom = self.geom;
+        let cs = geom.cluster_size();
+        let coff = data_off / cs * cs;
+        let mut alloc = self.alloc.lock().unwrap();
+        let mut cursor = self.comp_cursor.lock().unwrap();
+        alloc.free(&geom, self.backend.as_ref(), coff)?;
+        if cursor.0 == coff
+            && alloc.refcount(&geom, self.backend.as_ref(), coff / cs)? == 0
+        {
+            // the open packing cluster was fully reclaimed: stop packing
+            // into it before the allocator hands it out again
+            *cursor = (0, 0);
+        }
+        Ok(())
+    }
+
+    /// Reserve `stored` sector-aligned bytes for one compressed payload,
+    /// packing into the current compressed host cluster when it fits.
+    fn alloc_compressed(&self, stored: u64) -> Result<u64> {
+        let geom = self.geom;
+        let cs = geom.cluster_size();
+        let slot = div_ceil(stored, PAYLOAD_ALIGN) * PAYLOAD_ALIGN;
+        debug_assert!(slot <= cs);
+        let mut alloc = self.alloc.lock().unwrap();
+        let mut cursor = self.comp_cursor.lock().unwrap();
+        if cursor.0 != 0 && cursor.1 + slot <= cs {
+            let off = cursor.0 + cursor.1;
+            cursor.1 += slot;
+            // refcount-before-reference: one count per payload
+            alloc.incref(&geom, self.backend.as_ref(), cursor.0)?;
+            return Ok(off);
+        }
+        let (coff, _reused) = alloc.alloc_tracked(&geom, self.backend.as_ref())?;
+        *cursor = (coff, slot);
+        Ok(coff)
     }
 
     /// Read guest data from `host_off` (+`within` bytes into the cluster).
@@ -613,6 +740,44 @@ mod tests {
         let img = Image::open("child", b, DataMode::Real).unwrap();
         assert_eq!(img.backing_name().as_deref(), Some("parent-file"));
         assert_eq!(img.chain_index(), 3);
+    }
+
+    #[test]
+    fn compressed_payloads_pack_and_roundtrip() {
+        use crate::qcow::entry::ClusterLoc;
+        let b = mem();
+        let img =
+            Image::create("c", b, small_geom(), 0, 0, None, DataMode::Real).unwrap();
+        let cs = img.geom().cluster_size() as usize;
+        let mut d1 = vec![0u8; cs];
+        d1[..1000].fill(7);
+        let mut d2 = vec![9u8; cs];
+        d2[100] = 1;
+        let w1 = img.write_compressed(&d1).unwrap().expect("compressible");
+        let w2 = img.write_compressed(&d2).unwrap().expect("compressible");
+        let (e1, e2) = (L2Entry::local(w1, None), L2Entry::local(w2, None));
+        assert!(e1.is_compressed() && e2.is_compressed());
+        // both payloads packed into ONE host cluster, refcount = payloads
+        assert_eq!(e1.data_offset() / cs as u64, e2.data_offset() / cs as u64);
+        assert_eq!(img.cluster_refcount(e1.data_offset()).unwrap(), 2);
+        for (e, d) in [(e1, &d1), (e2, &d2)] {
+            let ClusterLoc::Compressed { off, units } = e.loc() else {
+                panic!("not compressed: {e:?}")
+            };
+            let mut out = vec![0xAAu8; cs];
+            img.read_compressed(off, units, &mut out).unwrap();
+            assert_eq!(&out, d, "bit-identical after decode");
+        }
+        // freeing payload references returns the cluster at zero
+        img.free_compressed(e1.data_offset()).unwrap();
+        assert_eq!(img.cluster_refcount(e2.data_offset()).unwrap(), 1);
+        img.free_compressed(e2.data_offset()).unwrap();
+        assert_eq!(img.cluster_refcount(e2.data_offset()).unwrap(), 0);
+        // incompressible data is stored uncompressed (None)
+        let noise: Vec<u8> = (0..cs as u64)
+            .map(|i| (i.wrapping_mul(0x9E3779B97F4A7C15) >> 56) as u8)
+            .collect();
+        assert!(img.write_compressed(&noise).unwrap().is_none());
     }
 
     #[test]

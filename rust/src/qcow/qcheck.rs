@@ -13,7 +13,7 @@
 //! flushed.
 
 use super::chain::Chain;
-use super::entry::L2Entry;
+use super::entry::{ClusterLoc, L2Entry};
 use super::image::Image;
 use super::layout::ENTRY_SIZE;
 use crate::storage::backend::write_u64;
@@ -77,8 +77,18 @@ pub fn check_image(img: &Image) -> Result<CheckReport> {
             if e.is_zero() {
                 continue;
             }
-            let off = e.host_offset();
-            if off % cs != 0 {
+            if !e.descriptor_valid() {
+                report.errors.push(format!(
+                    "L2[{l1_idx}/{l2_idx}] invalid cluster descriptor in {:#x}",
+                    e.host_offset()
+                ));
+                continue;
+            }
+            let off = e.data_offset();
+            // plain data clusters live on cluster boundaries; compressed
+            // payloads are sector-aligned by the descriptor encoding and
+            // zero clusters have no offset at all
+            if e.descriptor() == 0 && off % cs != 0 {
                 report.errors.push(format!(
                     "L2[{l1_idx}/{l2_idx}] misaligned data offset {off:#x}"
                 ));
@@ -97,13 +107,23 @@ pub fn check_image(img: &Image) -> Result<CheckReport> {
                 }
                 _ => {}
             }
-            if e.is_allocated_here() {
-                if off >= file_len {
+            if e.is_allocated_here() && !e.is_zero_cluster() {
+                // compressed payloads must end inside the file; plain
+                // clusters must start inside it
+                let end = if e.is_compressed() {
+                    off + compressed_stored_len(&e, cs)
+                } else {
+                    off + 1
+                };
+                if end > file_len {
                     report.errors.push(format!(
                         "L2[{l1_idx}/{l2_idx}] data offset {off:#x} beyond EOF"
                     ));
                     continue;
                 }
+                // a compressed entry references the shared host cluster
+                // containing its payload (several payloads may sum on
+                // one cluster); a zero entry references nothing
                 *expected.entry(off / cs).or_default() += 1;
             }
         }
@@ -184,7 +204,16 @@ pub fn check_chain(chain: &Chain) -> Result<CheckReport> {
                             img.name
                         )),
                         Some(owner) => {
-                            if e.host_offset() >= owner.file_len() {
+                            // zero-flagged stamps carry no offset; data
+                            // and payload ranges must exist in the owner
+                            let cs = owner.geom().cluster_size();
+                            let end = e.data_offset()
+                                + if e.is_compressed() {
+                                    compressed_stored_len(&e, cs)
+                                } else {
+                                    1
+                                };
+                            if !e.is_zero_cluster() && end > owner.file_len() {
                                 total.errors.push(format!(
                                     "[{}] L2[{l1_idx}/{l2_idx}] stamp offset beyond \
                                      '{}' EOF",
@@ -294,19 +323,33 @@ pub fn repair_image(img: &Image) -> Result<RepairReport> {
             if e.is_zero() {
                 continue;
             }
-            let off = e.host_offset();
-            let out = if off % cs != 0 {
+            // data range this entry claims in this file (nothing for
+            // zero-flagged entries, the unit-rounded payload for
+            // compressed ones, a whole cluster for plain data)
+            let off = e.data_offset();
+            let end = if e.is_zero_cluster() {
+                0
+            } else if e.is_compressed() {
+                off + compressed_stored_len(&e, cs)
+            } else {
+                off + 1
+            };
+            let out = if !e.descriptor_valid()
+                || (e.descriptor() == 0 && off % cs != 0)
+            {
                 rep.entries_cleared += 1;
                 L2Entry::ZERO
             } else if e.is_allocated_here() {
-                if off >= file_len || off < meta_end {
+                if end != 0 && (end > file_len || off < meta_end) {
                     rep.entries_cleared += 1;
                     L2Entry::ZERO
                 } else {
                     match e.bfi() {
                         Some(b) if b != own => {
                             rep.stamps_fixed += 1;
-                            L2Entry::local(off, Some(own))
+                            // restamp, keeping the offset word (and thus
+                            // the zero/compressed descriptor) intact
+                            L2Entry::local(e.host_offset(), Some(own))
                         }
                         _ => continue,
                     }
@@ -329,8 +372,8 @@ pub fn repair_image(img: &Image) -> Result<RepairReport> {
         *expected.entry(l2_off / cs).or_default() += 1;
         for raw in &entries {
             let e = L2Entry(*raw);
-            if e.is_allocated_here() {
-                *expected.entry(e.host_offset() / cs).or_default() += 1;
+            if e.is_allocated_here() && !e.is_zero_cluster() {
+                *expected.entry(e.data_offset() / cs).or_default() += 1;
             }
         }
     }
@@ -465,9 +508,18 @@ pub fn repair_chain(chain: &Chain) -> Result<RepairReport> {
                 if e.is_allocated_here() {
                     continue;
                 }
-                let valid = chain
-                    .get(bfi)
-                    .is_some_and(|owner| e.host_offset() < owner.file_len());
+                let valid = chain.get(bfi).is_some_and(|owner| {
+                    e.is_zero_cluster() || {
+                        let cs = owner.geom().cluster_size();
+                        let end = e.data_offset()
+                            + if e.is_compressed() {
+                                compressed_stored_len(&e, cs)
+                            } else {
+                                1
+                            };
+                        end <= owner.file_len()
+                    }
+                });
                 if !valid {
                     *raw = L2Entry::ZERO.raw();
                     dirty = true;
@@ -480,6 +532,15 @@ pub fn repair_chain(chain: &Chain) -> Result<RepairReport> {
         }
     }
     Ok(total)
+}
+
+/// On-disk bytes of a compressed entry's payload (unit-rounded), 0 for
+/// anything else.
+fn compressed_stored_len(e: &L2Entry, cluster_size: u64) -> u64 {
+    match e.loc() {
+        ClusterLoc::Compressed { units, .. } => units * (cluster_size >> 7),
+        _ => 0,
+    }
 }
 
 fn stored_refcount(img: &Image, cluster: u64) -> Result<u16> {
@@ -665,6 +726,83 @@ mod tests {
         let rep = repair_image(chain.active()).unwrap();
         assert!(!rep.changed(), "{rep:?}");
         assert!(check_image(chain.active()).unwrap().is_clean());
+    }
+
+    #[test]
+    fn flagged_entries_survive_check_and_repair() {
+        // regression: zero-flagged and compressed entries used to look
+        // like dangling/misaligned mappings and repair cleared them
+        let (node, mut chain) = setup();
+        write_cluster(&chain, 0);
+        let img = chain.active();
+        img.set_l2_entry(1, L2Entry::zero_cluster(Some(0))).unwrap();
+        let cs = img.geom().cluster_size() as usize;
+        let mut data = vec![0u8; cs];
+        data[..100].fill(3);
+        let word = img.write_compressed(&data).unwrap().expect("compressible");
+        img.set_l2_entry(2, L2Entry::local(word, Some(0))).unwrap();
+        let r = check_image(img).unwrap();
+        assert!(r.is_clean(), "{:?}", r.errors);
+        let rep = repair_image(img).unwrap();
+        assert!(!rep.changed(), "flagged entries treated as dangling: {rep:?}");
+        let ez = img.l2_entry(1).unwrap();
+        assert!(ez.is_zero_cluster() && ez.is_allocated_here());
+        let ec = img.l2_entry(2).unwrap();
+        assert!(ec.is_compressed());
+        // payload still decodes after repair rebuilt the refcounts
+        let ClusterLoc::Compressed { off, units } = ec.loc() else {
+            panic!("{ec:?}")
+        };
+        let mut out = vec![0u8; cs];
+        img.read_compressed(off, units, &mut out).unwrap();
+        assert_eq!(out, data);
+        // flags survive the snapshot copy + whole-chain check too
+        snapshot::snapshot_sqemu(&mut chain, &node, "img-1").unwrap();
+        let r = check_chain(&chain).unwrap();
+        assert!(r.is_clean(), "{:?}", r.errors);
+        assert!(chain.active().l2_entry(1).unwrap().is_zero_cluster());
+        assert!(chain.active().l2_entry(2).unwrap().is_compressed());
+    }
+
+    #[test]
+    fn allocator_reopen_keeps_compressed_payload_cluster() {
+        // regression companion: Allocator::from_file must see the
+        // payload's host cluster as referenced (refcount >= 1), not
+        // hand it out again after a reopen
+        let (_n, chain) = setup();
+        let img = chain.active();
+        let cs = img.geom().cluster_size() as usize;
+        let data = vec![9u8; cs];
+        let word = img.write_compressed(&data).unwrap().unwrap();
+        let e = L2Entry::local(word, Some(0));
+        img.set_l2_entry(0, e).unwrap();
+        img.reset_allocator().unwrap();
+        let payload_cluster = e.data_offset() / cs as u64;
+        for _ in 0..8 {
+            let off = img.alloc_data_cluster().unwrap();
+            assert_ne!(
+                off / cs as u64,
+                payload_cluster,
+                "payload cluster handed out as free after reopen"
+            );
+        }
+        let mut out = vec![0u8; cs];
+        let ClusterLoc::Compressed { off, units } = e.loc() else { panic!() };
+        img.read_compressed(off, units, &mut out).unwrap();
+        assert_eq!(out, data);
+    }
+
+    #[test]
+    fn repair_clears_garbage_descriptor_bits() {
+        let (_n, chain) = setup();
+        let img = chain.active();
+        // low bits set but not a valid descriptor: corruption
+        img.set_l2_entry(0, L2Entry::local((1 << 16) + 4, Some(0))).unwrap();
+        assert!(!check_image(img).unwrap().is_clean());
+        let rep = repair_image(img).unwrap();
+        assert!(rep.entries_cleared >= 1, "{rep:?}");
+        assert_eq!(img.l2_entry(0).unwrap(), L2Entry::ZERO);
+        assert!(check_image(img).unwrap().is_clean());
     }
 
     #[test]

@@ -2,7 +2,7 @@
 //! conversion and streaming (backing-file merge, §3/§4.1).
 
 use super::chain::Chain;
-use super::entry::L2Entry;
+use super::entry::{decode_offset, ClusterLoc, L2Entry};
 use super::image::Image;
 use super::layout::FEATURE_BFI;
 use crate::storage::store::FileStore;
@@ -128,7 +128,9 @@ pub fn convert_to_sqemu(chain: &Chain) -> Result<u64> {
 /// the drop set to GC (the coordinator does this automatically;
 /// `sqemu gc run` is the offline-tool path).
 ///
-/// Returns the number of data clusters copied.
+/// Returns the number of cluster entries materialized in the target
+/// (zero-flagged entries migrate without moving bytes but still count,
+/// matching the streaming planner's per-entry estimate).
 pub fn stream_merge(chain: &mut Chain, from: u16, to: u16) -> Result<u64> {
     if from > to || (to as usize) >= chain.len() {
         bail!("invalid stream range {from}..={to} for chain len {}", chain.len());
@@ -140,29 +142,57 @@ pub fn stream_merge(chain: &mut Chain, from: u16, to: u16) -> Result<u64> {
     let target = Arc::clone(chain.get(to).expect("in range"));
     let mut copied = 0u64;
     for vc in 0..geom.num_vclusters() {
-        // find the owner within the merged window, unless a newer file
-        // (index > to) already shadows this cluster
-        let mut owner: Option<(u16, u64)> = None;
+        // find the newest version within the merged window (stamps are
+        // authoritative: a stamped entry says where the data lives, which
+        // may be a different file — or, for a dedup share, a different
+        // virtual cluster's storage)
+        let mut owner: Option<(u16, u16, u64)> = None;
         for idx in (from..=to).rev() {
             let e = chain.get(idx).unwrap().l2_entry(vc)?;
-            if let Some(off) = e.vanilla_view() {
-                owner = Some((idx, off));
+            if let Some((bfi, word)) = e.sqemu_view(idx) {
+                owner = Some((idx, bfi, word));
                 break;
             }
         }
-        let Some((idx, off)) = owner else { continue };
-        if idx == to {
-            continue; // already in the target
+        let Some((_idx, bfi, word)) = owner else { continue };
+        if bfi == to {
+            continue; // the bytes are already stored in the target file
         }
-        // copy the data cluster into the target file
-        let src = chain.get(idx).unwrap();
-        let new_off = target.alloc_data_cluster()?;
-        let mut buf = vec![0u8; geom.cluster_size() as usize];
-        src.read_data(off, 0, &mut buf)?;
-        target.write_data(new_off, 0, &buf)?;
+        if bfi < from {
+            // owned by a file below the window: that file survives the
+            // merge, so a stamp to it stays valid and an unstamped walk
+            // still reaches it — nothing to materialize
+            continue;
+        }
+        // materialize the newest version in the target: zero clusters
+        // stay deviceless, compressed data lands plain (payload packing
+        // is per-file), plain data is copied
         let stamp = if target.has_bfi() { Some(target.chain_index()) } else { None };
-        target.set_l2_entry(vc, L2Entry::local(new_off, stamp))?;
-        copied += 1;
+        let src = chain.get(bfi).expect("stamp within chain");
+        match decode_offset(word) {
+            ClusterLoc::Zero => {
+                // no bytes move, but the entry migrates — count it so the
+                // streaming planner's per-entry estimate stays exact
+                target.set_l2_entry(vc, L2Entry::zero_cluster(stamp))?;
+                copied += 1;
+            }
+            ClusterLoc::Data(off) => {
+                let new_off = target.alloc_data_cluster()?;
+                let mut buf = vec![0u8; geom.cluster_size() as usize];
+                src.read_data(off, 0, &mut buf)?;
+                target.write_data(new_off, 0, &buf)?;
+                target.set_l2_entry(vc, L2Entry::local(new_off, stamp))?;
+                copied += 1;
+            }
+            ClusterLoc::Compressed { off, units } => {
+                let new_off = target.alloc_data_cluster()?;
+                let mut buf = vec![0u8; geom.cluster_size() as usize];
+                src.read_compressed(off, units, &mut buf)?;
+                target.write_data(new_off, 0, &buf)?;
+                target.set_l2_entry(vc, L2Entry::local(new_off, stamp))?;
+                copied += 1;
+            }
+        }
     }
     // Rebuild the chain as [0, from) + [to, len): merged predecessors are
     // dropped. Surviving files need their chain_index, backing link and

@@ -44,6 +44,13 @@ pub struct StorageNode {
     /// pressure so placement and `would_overflow` see the recipient's
     /// true commitment before the bytes arrive.
     reserved: AtomicU64,
+    /// Guest-addressable bytes mapped by the chains stored here, as of
+    /// the coordinator's last capacity scan
+    /// ([`crate::dedup::capacity::chain_logical_bytes`]). Physical usage
+    /// ([`StorageNode::used_bytes`]) is what capacity decisions run on;
+    /// this cache exists so reporting can show the multiplication factor
+    /// (logical / physical) without rescanning every table.
+    logical: AtomicU64,
     /// Bytes returned by GC sweeps over this node's lifetime.
     reclaimed: AtomicU64,
     /// Files deleted by GC sweeps.
@@ -98,6 +105,7 @@ impl StorageNode {
             files: Mutex::new(HashMap::new()),
             condemned: Mutex::new(HashSet::new()),
             reserved: AtomicU64::new(0),
+            logical: AtomicU64::new(0),
             reclaimed: AtomicU64::new(0),
             gc_deletes: AtomicU64::new(0),
             injector,
@@ -294,6 +302,20 @@ impl StorageNode {
         self.pressure_bytes().saturating_add(self.reserved_bytes())
     }
 
+    /// Record the result of a capacity scan: guest-addressable bytes
+    /// mapped by the chains on this node. A cache for reporting, not an
+    /// input to placement — physical pressure stays authoritative.
+    pub fn set_logical_bytes(&self, bytes: u64) {
+        self.logical.store(bytes, Relaxed);
+    }
+
+    /// Guest-addressable bytes as of the last capacity scan (0 before
+    /// any scan). `logical / used` is the node's capacity multiplication
+    /// from zero clusters, compression and dedup.
+    pub fn logical_bytes(&self) -> u64 {
+        self.logical.load(Relaxed)
+    }
+
     /// Account a GC deletion of `bytes` (called by the sweep).
     pub fn note_reclaimed(&self, bytes: u64) {
         self.reclaimed.fetch_add(bytes, Relaxed);
@@ -325,6 +347,7 @@ impl StorageNode {
     pub fn clear_volatile(&self) {
         self.condemned.lock().unwrap().clear();
         self.reserved.store(0, Relaxed);
+        self.logical.store(0, Relaxed);
         for e in self.files.lock().unwrap().values() {
             e.log.end();
         }
@@ -389,6 +412,16 @@ mod tests {
         n.delete_file("d").unwrap();
         assert_eq!(n.used_bytes(), 0);
         assert_eq!(n.condemned_bytes(), 0);
+    }
+
+    #[test]
+    fn logical_bytes_cache_is_volatile() {
+        let n = node();
+        assert_eq!(n.logical_bytes(), 0, "no scan yet");
+        n.set_logical_bytes(3 << 20);
+        assert_eq!(n.logical_bytes(), 3 << 20);
+        n.clear_volatile();
+        assert_eq!(n.logical_bytes(), 0, "recovery rescans");
     }
 
     #[test]

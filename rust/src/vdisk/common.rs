@@ -1,14 +1,40 @@
 //! State and helpers shared by both drivers.
 
 use crate::blockjob::JobFence;
+use crate::dedup::{content_hash, CapacityPolicy};
 use crate::metrics::clock::{CostModel, VirtClock};
 use crate::metrics::counters::CacheCounters;
 use crate::metrics::histogram::Histogram;
 use crate::metrics::memory::{MemCategory, MemoryAccountant, Registration};
-use crate::qcow::entry::L2Entry;
+use crate::qcow::entry::{decode_offset, ClusterLoc, L2Entry, DESC_MASK};
+use crate::qcow::image::DataMode;
 use crate::qcow::Chain;
 use anyhow::Result;
 use std::sync::Arc;
+
+/// The shared zero page: every hole and every `OFLAG_ZERO` cluster read
+/// is served by copying from this one read-only buffer — no per-cluster
+/// zero materialization and no device I/O (zero clusters bill zero
+/// device time). Sized for the largest legal cluster (cluster_bits 21).
+pub static ZERO_PAGE: [u8; 1 << 21] = [0u8; 1 << 21];
+
+/// Serve `buf` from the shared zero page.
+pub fn zero_fill(buf: &mut [u8]) {
+    for chunk in buf.chunks_mut(ZERO_PAGE.len()) {
+        chunk.copy_from_slice(&ZERO_PAGE[..chunk.len()]);
+    }
+}
+
+/// What a policy-routed full-cluster write left behind: the mapping in
+/// chain frame (`bfi`, offset word with descriptor bits) plus the raw L2
+/// entry as persisted in the active table, so each driver can mirror it
+/// into its own cache representation.
+#[derive(Clone, Copy, Debug)]
+pub struct WriteOutcome {
+    pub bfi: u16,
+    pub word: u64,
+    pub entry: L2Entry,
+}
 
 /// Per-snapshot driver state a hypervisor keeps besides the caches (BDS,
 /// AIO rings, refcount caches, throttling state, ...) — §4.3 found these
@@ -52,6 +78,10 @@ pub struct DriverBase {
     pub merged_ios: u64,
     /// Bytes carried by those merged reads.
     pub coalesced_bytes: u64,
+    /// Capacity subsystem switches (zero detection / compression /
+    /// dedup). Default: everything off — the write path is bit-for-bit
+    /// the pre-subsystem one.
+    pub policy: CapacityPolicy,
     /// One registration per image: driver struct + in-RAM L1 mirror.
     mem: Vec<Registration>,
 }
@@ -74,6 +104,7 @@ impl DriverBase {
             scratch: SliceScratch::default(),
             merged_ios: 0,
             coalesced_bytes: 0,
+            policy: CapacityPolicy::default(),
             mem,
         }
     }
@@ -101,6 +132,15 @@ impl DriverBase {
         self.clock.advance(self.cost.t_layers);
     }
 
+    /// Charge the CPU cost of decompressing `bytes` of cluster data: the
+    /// codec is a single linear pass, modeled as one RAM touch (T_M) per
+    /// 4 KiB of decompressed output. The device read itself was billed at
+    /// the *compressed* length by the timed backend — compression saves
+    /// wire and disk time but is not free on the CPU.
+    pub fn charge_decompress(&self, bytes: u64) {
+        self.clock.advance(self.cost.ram_ns() * (bytes >> 12).max(1));
+    }
+
     /// Record a resolve latency sample (plain field: the worker thread is
     /// the single owner, no lock on the hot path).
     pub fn record_lookup(&mut self, ns: u64) {
@@ -112,24 +152,38 @@ impl DriverBase {
         self.lookup_hist.clone()
     }
 
-    /// Read guest data for one resolved cluster segment; zero-fills holes.
+    /// Read guest data for one resolved cluster segment. Holes and
+    /// `OFLAG_ZERO` clusters are served from the shared zero page with
+    /// zero device time; compressed clusters cost one device read of the
+    /// compressed payload plus the modeled decompress pass.
     pub fn read_segment(
         &self,
         resolved: Option<(u16, u64)>,
         within: u64,
         buf: &mut [u8],
     ) -> Result<()> {
-        match resolved {
-            None => {
-                buf.fill(0);
+        let Some((bfi, word)) = resolved else {
+            zero_fill(buf);
+            return Ok(());
+        };
+        let img = self
+            .chain
+            .get(bfi)
+            .ok_or_else(|| anyhow::anyhow!("stamp to missing file {bfi}"))?;
+        match decode_offset(word) {
+            ClusterLoc::Data(off) => img.read_data(off, within, buf),
+            ClusterLoc::Zero => {
+                zero_fill(buf);
                 Ok(())
             }
-            Some((bfi, off)) => {
-                let img = self
-                    .chain
-                    .get(bfi)
-                    .ok_or_else(|| anyhow::anyhow!("stamp to missing file {bfi}"))?;
-                img.read_data(off, within, buf)
+            ClusterLoc::Compressed { off, units } => {
+                let cs = img.geom().cluster_size() as usize;
+                let mut tmp = vec![0u8; cs];
+                img.read_compressed(off, units, &mut tmp)?;
+                self.charge_decompress(cs as u64);
+                let w = within as usize;
+                buf.copy_from_slice(&tmp[w..w + buf.len()]);
+                Ok(())
             }
         }
     }
@@ -138,6 +192,15 @@ impl DriverBase {
     /// old content (if any), apply the sub-write, and persist the L2
     /// entry (write-through, "both on disk and in the cache", §2).
     /// Returns the new host offset in the active volume.
+    ///
+    /// The old mapping may be any storage class: a plain cluster is
+    /// copied from its owner (a backing file, or the active volume itself
+    /// when the cluster is dedup-shared and thus not in-place writable),
+    /// a compressed cluster is decompressed into the copy, and an
+    /// `OFLAG_ZERO` cluster contributes zeros without touching the
+    /// device. Active-owned old storage is freed afterwards — after the
+    /// new entry is persisted, so a crash in between never leaves the
+    /// entry pointing at freed storage.
     pub fn cow_write(
         &self,
         vcluster: u64,
@@ -148,9 +211,9 @@ impl DriverBase {
         let active = self.chain.active();
         let cs = active.geom().cluster_size() as usize;
         let new_off = active.alloc_data_cluster()?;
-        match old {
-            Some((bfi, off)) if bfi != active.chain_index() => {
-                // full-cluster copy from the owning backing file
+        match old.map(|(bfi, w)| (bfi, decode_offset(w))) {
+            Some((bfi, ClusterLoc::Data(off))) => {
+                // full-cluster copy from the owning file
                 let src = self
                     .chain
                     .get(bfi)
@@ -161,7 +224,21 @@ impl DriverBase {
                     .copy_from_slice(data);
                 active.write_data(new_off, 0, &tmp)?;
             }
-            _ => {
+            Some((bfi, ClusterLoc::Compressed { off, units })) => {
+                let src = self
+                    .chain
+                    .get(bfi)
+                    .ok_or_else(|| anyhow::anyhow!("stamp to missing file {bfi}"))?;
+                let mut tmp = vec![0u8; cs];
+                src.read_compressed(off, units, &mut tmp)?;
+                self.charge_decompress(cs as u64);
+                tmp[within as usize..within as usize + data.len()]
+                    .copy_from_slice(data);
+                active.write_data(new_off, 0, &tmp)?;
+            }
+            // holes and zero clusters: fresh cluster, sub-write only —
+            // the rest of the cluster reads back zero
+            None | Some((_, ClusterLoc::Zero)) => {
                 active.write_data(new_off, within, data)?;
             }
         }
@@ -171,7 +248,183 @@ impl DriverBase {
             None
         };
         active.set_l2_entry(vcluster, L2Entry::local(new_off, stamp))?;
+        self.release_overwritten(old)?;
         Ok(new_off)
+    }
+
+    /// The mapping `old` was just replaced by a new one: drop its dedup
+    /// ledger reference and, when the active volume owned the storage,
+    /// free it. Plain and compressed clusters are refcounted, so a
+    /// dedup-shared cluster survives until its last sharer is gone.
+    /// Remote storage (a backing file's cluster) is never freed here —
+    /// backing files are immutable and GC-owned.
+    fn release_overwritten(&self, old: Option<(u16, u64)>) -> Result<()> {
+        let Some((bfi, word)) = old else {
+            return Ok(());
+        };
+        let active = self.chain.active();
+        if let Some(ctx) = &self.policy.dedup {
+            if let Some(owner) = self.chain.get(bfi) {
+                ctx.index.release(&ctx.node, &owner.name, word);
+            }
+        }
+        if bfi != active.chain_index() {
+            return Ok(());
+        }
+        match decode_offset(word) {
+            ClusterLoc::Zero => Ok(()),
+            ClusterLoc::Compressed { off, .. } => active.free_compressed(off),
+            ClusterLoc::Data(off) => active.free_cluster(off),
+        }
+    }
+
+    /// May a resolved active-owned mapping be overwritten in place? Only
+    /// a plain (descriptor-free) cluster that is not dedup-shared: zero
+    /// and compressed entries have no in-place bytes, and writing into a
+    /// refcount-shared cluster would corrupt every other sharer.
+    pub fn can_write_in_place(&self, word: u64) -> Result<bool> {
+        if word & DESC_MASK != 0 {
+            return Ok(false);
+        }
+        if self.policy.dedup.is_none() {
+            return Ok(true);
+        }
+        Ok(self.chain.active().cluster_refcount(word)? == 1)
+    }
+
+    /// An in-place overwrite is about to change the bytes at `word` in
+    /// the active volume: the content no longer matches any extent
+    /// declared there, so withdraw it from future sharing.
+    pub fn note_inplace_write(&self, word: u64) {
+        if let Some(ctx) = &self.policy.dedup {
+            ctx.index.retire(&ctx.node, &self.chain.active().name, word);
+        }
+    }
+
+    /// Position of `file` in this chain, if present (dedup may only
+    /// share extents stored in files the chain can address).
+    fn chain_position(&self, file: &str) -> Option<u16> {
+        self.chain
+            .images()
+            .iter()
+            .position(|i| i.name == file)
+            .map(|p| p as u16)
+    }
+
+    /// A full-cluster write routed through the capacity policy: zero
+    /// detection, then dedup, then compression — falling back to the
+    /// plain in-place / CoW path. Only called when `policy.any_enabled()`
+    /// and the segment covers a whole cluster. Returns the mapping
+    /// written so the driver can mirror it into its cache.
+    ///
+    /// `remote_shares` says whether this driver resolves stamped remote
+    /// references (SQEMU). A remote dedup share points at a *different*
+    /// virtual cluster's storage in a backing file, so only a
+    /// stamp-honoring driver may create one; the vanilla driver passes
+    /// `false` and dedups within the active volume only.
+    pub fn full_cluster_write(
+        &self,
+        vcluster: u64,
+        old: Option<(u16, u64)>,
+        data: &[u8],
+        remote_shares: bool,
+    ) -> Result<WriteOutcome> {
+        let active = self.chain.active();
+        let own = active.chain_index();
+        let cs = active.geom().cluster_size();
+        debug_assert_eq!(data.len() as u64, cs);
+        let stamp = if active.has_bfi() { Some(own) } else { None };
+        let real = active.data_mode() == DataMode::Real;
+
+        // 1) zero detection: an all-zero write allocates nothing — just
+        // a deviceless OFLAG_ZERO entry (works in both data modes)
+        if self.policy.zero_detect && data.iter().all(|&b| b == 0) {
+            let e = L2Entry::zero_cluster(stamp);
+            active.set_l2_entry(vcluster, e)?;
+            self.release_overwritten(old)?;
+            return Ok(WriteOutcome { bfi: own, word: e.host_offset(), entry: e });
+        }
+
+        // content hash, computed once on the raw bytes (so compressed
+        // extents are shared by their uncompressed content)
+        let hash = match (&self.policy.dedup, real) {
+            (Some(_), true) => Some(content_hash(data)),
+            _ => None,
+        };
+
+        // 2) dedup: the same bytes already stored on this node, in a
+        // file this chain can address
+        if let (Some(ctx), Some(h)) = (&self.policy.dedup, hash) {
+            if let Some(ext) = ctx.index.lookup(&ctx.node, h) {
+                let pos = self
+                    .chain_position(&ext.file)
+                    // a remote share needs both a stamp-honoring driver
+                    // and a stamped active volume to record it in
+                    .filter(|&p| p == own || (remote_shares && active.has_bfi()));
+                if let Some(pos) = pos {
+                    if matches!(old, Some((b, w)) if b == pos && w == ext.word) {
+                        // rewriting identical bytes over the extent the
+                        // entry already references: nothing to do
+                        let entry = active.l2_entry(vcluster)?;
+                        return Ok(WriteOutcome { bfi: pos, word: ext.word, entry });
+                    }
+                    let entry = if pos == own {
+                        // local share: the cluster gains an on-disk
+                        // refcount BEFORE the entry references it
+                        // (refcount before reference, §10)
+                        active.incref_cluster(ext.word & !DESC_MASK)?;
+                        L2Entry::local(ext.word, stamp)
+                    } else {
+                        // share into an immutable backing file of this
+                        // chain: file-level GC refcounts keep the file
+                        // alive, no per-cluster incref needed
+                        L2Entry::remote(ext.word, pos)
+                    };
+                    ctx.index.share(&ctx.node, h, cs);
+                    active.set_l2_entry(vcluster, entry)?;
+                    self.release_overwritten(old)?;
+                    return Ok(WriteOutcome { bfi: pos, word: ext.word, entry });
+                }
+            }
+        }
+
+        // 3) compression: store the cluster as a sub-cluster payload if
+        // it actually shrinks
+        if self.policy.compress && real {
+            if let Some(word) = active.write_compressed(data)? {
+                let e = L2Entry::local(word, stamp);
+                active.set_l2_entry(vcluster, e)?;
+                self.release_overwritten(old)?;
+                if let (Some(ctx), Some(h)) = (&self.policy.dedup, hash) {
+                    ctx.index.declare(&ctx.node, h, &active.name, word);
+                }
+                return Ok(WriteOutcome { bfi: own, word, entry: e });
+            }
+        }
+
+        // 4) plain path: in-place when the active volume owns a private
+        // plain cluster, CoW otherwise — then declare the new content
+        match old {
+            Some((bfi, word)) if bfi == own && self.can_write_in_place(word)? => {
+                self.note_inplace_write(word);
+                active.write_data(word, 0, data)?;
+                if let (Some(ctx), Some(h)) = (&self.policy.dedup, hash) {
+                    ctx.index.declare(&ctx.node, h, &active.name, word);
+                }
+                Ok(WriteOutcome { bfi: own, word, entry: L2Entry::local(word, stamp) })
+            }
+            other => {
+                let new_off = self.cow_write(vcluster, other, 0, data)?;
+                if let (Some(ctx), Some(h)) = (&self.policy.dedup, hash) {
+                    ctx.index.declare(&ctx.node, h, &active.name, new_off);
+                }
+                Ok(WriteOutcome {
+                    bfi: own,
+                    word: new_off,
+                    entry: L2Entry::local(new_off, stamp),
+                })
+            }
+        }
     }
 
     /// Split a byte range into (vcluster, offset-within, length) segments.
@@ -222,19 +475,48 @@ impl DriverBase {
         }
         let mut i = 0usize;
         while i < segs.len() {
-            let Some((bfi, off)) = resolved[i] else {
-                dests[i].fill(0);
+            let Some((bfi, word)) = resolved[i] else {
+                // hole: the shared zero page, no device I/O
+                zero_fill(dests[i]);
                 i += 1;
                 continue;
             };
+            let off = match decode_offset(word) {
+                ClusterLoc::Data(off) => off,
+                ClusterLoc::Zero => {
+                    // OFLAG_ZERO: shared zero page, zero device time
+                    zero_fill(dests[i]);
+                    i += 1;
+                    continue;
+                }
+                ClusterLoc::Compressed { off, units } => {
+                    let img = self
+                        .chain
+                        .get(bfi)
+                        .ok_or_else(|| anyhow::anyhow!("stamp to missing file {bfi}"))?;
+                    let cs = img.geom().cluster_size() as usize;
+                    let mut tmp = vec![0u8; cs];
+                    img.read_compressed(off, units, &mut tmp)?;
+                    self.charge_decompress(cs as u64);
+                    let w = segs[i].within as usize;
+                    dests[i].copy_from_slice(&tmp[w..w + segs[i].len]);
+                    i += 1;
+                    continue;
+                }
+            };
             // grow the run while the next segment continues the same
-            // file's physical byte range
+            // file's physical byte range with plain (descriptor-free)
+            // clusters — special entries never join a device run
             let run_start = off + segs[i].within;
             let mut run_end = run_start + segs[i].len as u64;
             let mut j = i + 1;
             while j < segs.len() {
                 match resolved[j] {
-                    Some((b2, o2)) if b2 == bfi && o2 + segs[j].within == run_end => {
+                    Some((b2, o2))
+                        if b2 == bfi
+                            && o2 & DESC_MASK == 0
+                            && o2 + segs[j].within == run_end =>
+                    {
                         run_end += segs[j].len as u64;
                         j += 1;
                     }
@@ -384,5 +666,89 @@ mod tests {
             DRIVER_STATE_BYTES
         );
         assert!(b.acct.live(MemCategory::L1Table) > 0);
+    }
+
+    #[test]
+    fn cow_over_zero_cluster_preserves_zeros() {
+        let b = base();
+        let img = b.chain.active();
+        img.set_l2_entry(0, L2Entry::zero_cluster(None)).unwrap();
+        let old = b.chain.resolve_walk(0).unwrap();
+        assert!(L2Entry(old.unwrap().1).is_zero_cluster());
+        let new_off = b.cow_write(0, old, 100, &[5, 5]).unwrap();
+        let mut back = vec![0u8; 4];
+        img.read_data(new_off, 99, &mut back).unwrap();
+        assert_eq!(back, [0, 5, 5, 0]);
+        assert!(!img.l2_entry(0).unwrap().is_zero_cluster());
+    }
+
+    #[test]
+    fn zero_detect_allocates_nothing_and_reads_zero() {
+        let mut b = base();
+        b.policy = CapacityPolicy { zero_detect: true, ..Default::default() };
+        let img = b.chain.active();
+        let cs = img.geom().cluster_size() as usize;
+        let len_before = img.file_len();
+        let out = b
+            .full_cluster_write(3, None, &vec![0u8; cs], false)
+            .unwrap();
+        assert!(out.entry.is_zero_cluster());
+        assert_eq!(b.chain.active().file_len(), len_before, "no allocation");
+        let mut buf = vec![0xAAu8; 16];
+        let resolved = b.chain.resolve_walk(3).unwrap();
+        assert!(resolved.is_some(), "zero cluster is present");
+        b.read_segment(resolved, 0, &mut buf).unwrap();
+        assert_eq!(buf, vec![0u8; 16]);
+    }
+
+    #[test]
+    fn dedup_local_share_refcounts_and_cow_on_overwrite() {
+        use crate::dedup::DedupIndex;
+        let mut b = base();
+        let index = Arc::new(DedupIndex::new());
+        b.policy = CapacityPolicy::full(Arc::clone(&index), "s");
+        b.policy.compress = false; // isolate dedup
+        let img = Arc::clone(b.chain.active());
+        let cs = img.geom().cluster_size() as usize;
+        // incompressible-ish distinct content, written twice
+        let mut content = vec![0u8; cs];
+        for (i, x) in content.iter_mut().enumerate() {
+            *x = (i % 251) as u8;
+        }
+        let a = b.full_cluster_write(0, None, &content, false).unwrap();
+        let c = b.full_cluster_write(1, None, &content, false).unwrap();
+        assert_eq!(a.word, c.word, "second write shared the extent");
+        assert_eq!(img.cluster_refcount(a.word).unwrap(), 2);
+        assert_eq!(index.node_stats("s").saved_bytes, cs as u64);
+        // a partial in-place overwrite of the shared cluster must CoW
+        assert!(!b.can_write_in_place(a.word).unwrap());
+        let old = b.chain.resolve_walk(0).unwrap();
+        b.cow_write(0, old, 0, &[9u8; 4]).unwrap();
+        assert_eq!(img.cluster_refcount(a.word).unwrap(), 1, "sharer left");
+        // the surviving sharer still reads the original bytes
+        let mut back = vec![0u8; cs];
+        b.read_segment(b.chain.resolve_walk(1).unwrap(), 0, &mut back)
+            .unwrap();
+        assert_eq!(back, content);
+    }
+
+    #[test]
+    fn compressed_write_round_trips_through_read_segment() {
+        let mut b = base();
+        b.policy = CapacityPolicy {
+            compress: true,
+            ..Default::default()
+        };
+        let img = b.chain.active();
+        let cs = img.geom().cluster_size() as usize;
+        let mut content = vec![0u8; cs];
+        for (i, x) in content.iter_mut().enumerate() {
+            *x = if i % 97 == 0 { 1 } else { 0x40 };
+        }
+        let out = b.full_cluster_write(2, None, &content, false).unwrap();
+        assert!(out.entry.is_compressed());
+        let mut back = vec![0u8; cs];
+        b.read_segment(Some((out.bfi, out.word)), 0, &mut back).unwrap();
+        assert_eq!(back, content);
     }
 }

@@ -18,6 +18,7 @@ pub mod scalable;
 pub mod vanilla;
 
 use crate::blockjob::JobFence;
+use crate::dedup::CapacityPolicy;
 use crate::metrics::counters::CounterSnapshot;
 use crate::metrics::histogram::Histogram;
 use crate::qcow::Chain;
@@ -121,4 +122,10 @@ pub trait Driver: Send {
 
     /// Live cache bytes (for reports; the accountant tracks the total).
     fn cache_bytes(&self) -> u64;
+
+    /// Enable/disable the capacity subsystem (zero detection,
+    /// compression, dedup) for this VM's write path. Default: ignored —
+    /// a driver that doesn't support the subsystem keeps the plain
+    /// write path, which is always correct.
+    fn set_capacity_policy(&mut self, _policy: CapacityPolicy) {}
 }

@@ -296,6 +296,7 @@ impl Driver for ScalableDriver {
 
     fn write(&mut self, voff: u64, data: &[u8]) -> Result<()> {
         let active_index = self.cache.active_index();
+        let cs = self.base.chain.active().geom().cluster_size();
         let mut cursor = 0usize;
         for (vc, within, len) in self.base.segments(voff, data.len()) {
             let (mut resolved, dt) = {
@@ -328,8 +329,19 @@ impl Driver for ScalableDriver {
                 };
             }
             let chunk = &data[cursor..cursor + len];
+            if within == 0 && len as u64 == cs && self.base.policy.any_enabled() {
+                // full-cluster write through the capacity policy (zero
+                // detection / dedup / compression, plain fallback)
+                let out = self.base.full_cluster_write(vc, resolved, chunk, true)?;
+                self.cache.record_entry(vc, out.bfi, out.word);
+                cursor += len;
+                continue;
+            }
             match resolved {
-                Some((bfi, off)) if bfi == active_index => {
+                Some((bfi, off))
+                    if bfi == active_index && self.base.can_write_in_place(off)? =>
+                {
+                    self.base.note_inplace_write(off);
                     self.base.chain.active().write_data(off, within, chunk)?;
                     if job_moved.is_some() {
                         // resync the cached entry with the bypassed
@@ -403,6 +415,10 @@ impl Driver for ScalableDriver {
 
     fn cache_bytes(&self) -> u64 {
         self.cache.resident_bytes()
+    }
+
+    fn set_capacity_policy(&mut self, policy: crate::dedup::CapacityPolicy) {
+        self.base.policy = policy;
     }
 }
 

@@ -196,18 +196,25 @@ impl VanillaDriver {
     /// Update the active volume's cached slice after a write (the on-disk
     /// entry is updated write-through by `cow_write`).
     fn update_cache_after_write(&mut self, vcluster: u64, new_off: u64) {
-        let n = self.base.chain.len();
-        let cfg = *self.caches[n - 1].cfg();
-        let key = cfg.slice_key(vcluster);
-        let idx_in_slice = cfg.slice_index(vcluster) as usize;
         let active = self.base.chain.active();
         let stamp = if active.has_bfi() {
             Some(active.chain_index())
         } else {
             None
         };
+        self.update_cache_entry(vcluster, L2Entry::local(new_off, stamp).raw());
+    }
+
+    /// Mirror an already-persisted raw L2 entry into the active volume's
+    /// cached slice (capacity-policy writes may leave zero / compressed /
+    /// remote-share entries, not just plain local ones).
+    fn update_cache_entry(&mut self, vcluster: u64, raw: u64) {
+        let n = self.base.chain.len();
+        let cfg = *self.caches[n - 1].cfg();
+        let key = cfg.slice_key(vcluster);
+        let idx_in_slice = cfg.slice_index(vcluster) as usize;
         if let Some(slice) = self.caches[n - 1].get(key) {
-            slice.entries[idx_in_slice] = L2Entry::local(new_off, stamp).raw();
+            slice.entries[idx_in_slice] = raw;
             // entry already persisted write-through; keep slice clean
         }
     }
@@ -245,6 +252,7 @@ impl Driver for VanillaDriver {
     fn write(&mut self, voff: u64, data: &[u8]) -> Result<()> {
         let mut cursor = 0usize;
         let active_idx = (self.base.chain.len() - 1) as u16;
+        let cs = self.base.chain.active().geom().cluster_size();
         for (vc, within, len) in self.base.segments(voff, data.len()) {
             let (mut resolved, dt) = {
                 let t0 = self.base.clock.now();
@@ -276,9 +284,20 @@ impl Driver for VanillaDriver {
                 };
             }
             let chunk = &data[cursor..cursor + len];
+            if within == 0 && len as u64 == cs && self.base.policy.any_enabled() {
+                // full-cluster write through the capacity policy (zero
+                // detection / dedup / compression, plain fallback)
+                let out = self.base.full_cluster_write(vc, resolved, chunk, false)?;
+                self.update_cache_entry(vc, out.entry.raw());
+                cursor += len;
+                continue;
+            }
             match resolved {
-                Some((bfi, off)) if bfi == active_idx => {
+                Some((bfi, off))
+                    if bfi == active_idx && self.base.can_write_in_place(off)? =>
+                {
                     // in-place write to the active volume
+                    self.base.note_inplace_write(off);
                     self.base.chain.active().write_data(off, within, chunk)?;
                     if job_moved.is_some() {
                         // resync the cached entry with the on-disk one
@@ -358,6 +377,10 @@ impl Driver for VanillaDriver {
 
     fn cache_bytes(&self) -> u64 {
         self.caches.iter().map(|c| c.resident_bytes()).sum()
+    }
+
+    fn set_capacity_policy(&mut self, policy: crate::dedup::CapacityPolicy) {
+        self.base.policy = policy;
     }
 }
 

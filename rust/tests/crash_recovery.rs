@@ -13,6 +13,7 @@ use sqemu::cache::CacheConfig;
 use sqemu::chaingen::ChainSpec;
 use sqemu::coordinator::server::VmChain;
 use sqemu::coordinator::{Coordinator, VmConfig};
+use sqemu::dedup::{CapacityPolicy, DedupContext, DedupIndex};
 use sqemu::metrics::clock::{CostModel, VirtClock};
 use sqemu::metrics::memory::MemoryAccountant;
 use sqemu::qcow::entry::L2Entry;
@@ -39,7 +40,7 @@ fn geom() -> Geometry {
 
 fn build_driver(kind: DriverKind, chain: Chain, clock: &Arc<VirtClock>) -> Box<dyn Driver> {
     let cache = CacheConfig::new(16, 32 << 10);
-    match kind {
+    let mut driver: Box<dyn Driver> = match kind {
         DriverKind::Scalable => Box::new(ScalableDriver::new(
             chain,
             cache,
@@ -54,7 +55,17 @@ fn build_driver(kind: DriverKind, chain: Chain, clock: &Arc<VirtClock>) -> Box<d
             CostModel::default(),
             MemoryAccountant::new(),
         )),
-    }
+    };
+    // capacity subsystem on: the crash surface must include zero,
+    // compressed and dedup-shared entries. The index is volatile by
+    // design (a recovered coordinator starts with an empty one), so
+    // every replay gets its own.
+    driver.set_capacity_policy(CapacityPolicy {
+        zero_detect: true,
+        compress: true,
+        dedup: Some(DedupContext { index: Arc::new(DedupIndex::new()), node: "crash".into() }),
+    });
+    driver
 }
 
 /// End state of one (possibly crashed) workload replay: the byte-level
@@ -107,17 +118,32 @@ fn run_workload(kind: DriverKind, seed: u64, store: &Arc<FaultStore>) -> Outcome
                 _ => rng.below(70),
             };
             if pick < 55 {
-                // guest write within one cluster
-                let vc = rng.below(geom.num_vclusters());
-                let off = rng.below(cs - 600);
-                let len = (rng.below(512) + 1) as usize;
-                let val = (opi as u8 ^ vc as u8).wrapping_mul(37).wrapping_add(1);
-                let voff = (vc * cs + off) as usize;
-                let data = vec![val; len];
-                driver.write(voff as u64, &data)?;
-                model[voff..voff + len].copy_from_slice(&data);
-                mask[voff..voff + len].fill(true);
-                overwritten[voff..voff + len].fill(true);
+                if rng.chance(0.25) {
+                    // full-cluster capacity write: all-zero clusters
+                    // exercise OFLAG_ZERO, constant fills the compress
+                    // and dedup-share paths (repeats of 0x11/0x22 hit
+                    // the content index)
+                    let vc = rng.below(geom.num_vclusters());
+                    let val = [0u8, 0x11, 0x22][rng.below(3) as usize];
+                    let voff = (vc * cs) as usize;
+                    let data = vec![val; CS];
+                    driver.write(voff as u64, &data)?;
+                    model[voff..voff + CS].copy_from_slice(&data);
+                    mask[voff..voff + CS].fill(true);
+                    overwritten[voff..voff + CS].fill(true);
+                } else {
+                    // guest write within one cluster
+                    let vc = rng.below(geom.num_vclusters());
+                    let off = rng.below(cs - 600);
+                    let len = (rng.below(512) + 1) as usize;
+                    let val = (opi as u8 ^ vc as u8).wrapping_mul(37).wrapping_add(1);
+                    let voff = (vc * cs + off) as usize;
+                    let data = vec![val; len];
+                    driver.write(voff as u64, &data)?;
+                    model[voff..voff + len].copy_from_slice(&data);
+                    mask[voff..voff + len].fill(true);
+                    overwritten[voff..voff + len].fill(true);
+                }
             } else if pick < 70 {
                 // guest FLUSH: once acknowledged, everything written so
                 // far is promised to survive any crash

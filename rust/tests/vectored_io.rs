@@ -14,6 +14,7 @@
 use sqemu::bench::smoke::{device_ios, seq4k_compare};
 use sqemu::cache::CacheConfig;
 use sqemu::chaingen::{generate, ChainSpec};
+use sqemu::dedup::CapacityPolicy;
 use sqemu::coordinator::server::{BatchOp, BatchReply, VmChain};
 use sqemu::coordinator::{Coordinator, VmConfig};
 use sqemu::metrics::clock::{CostModel, VirtClock};
@@ -236,6 +237,65 @@ fn vectored_sequential_throughput_at_least_2x_scalar() {
         cmp.vectored_device_ios,
         cmp.scalar_device_ios
     );
+}
+
+/// Capacity satellite (DESIGN.md §13): `OFLAG_ZERO` clusters and
+/// unallocated holes are served from the shared zero page. Once table
+/// metadata is warm, reading them — scalar or vectored — performs ZERO
+/// device I/O. Before the capacity subsystem, the all-zero write stored
+/// a real data cluster and the device_ios assertion failed.
+#[test]
+fn zero_clusters_and_holes_cost_no_device_io() {
+    let mk = |name: &str| {
+        let clock = VirtClock::new();
+        let node = StorageNode::new(name, clock.clone(), CostModel::default());
+        let chain = generate(
+            &*node,
+            &ChainSpec {
+                disk_size: 64 * CS,
+                chain_len: 1,
+                populated: 0.0,
+                stamped: true,
+                data_mode: DataMode::Real,
+                prefix: "z".into(),
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        (chain, clock)
+    };
+    let (ca, clka) = mk("za");
+    let (cb, clkb) = mk("zb");
+    let cfg = CacheConfig::new(16, 128 << 10);
+    let mut ds =
+        ScalableDriver::new(ca, cfg, clka, CostModel::default(), MemoryAccountant::new());
+    let mut dv =
+        VanillaDriver::new(cb, cfg, clkb, CostModel::default(), MemoryAccountant::new());
+    for d in [&mut ds as &mut dyn Driver, &mut dv as &mut dyn Driver] {
+        d.set_capacity_policy(CapacityPolicy {
+            zero_detect: true,
+            ..Default::default()
+        });
+        d.write(3 * CS, &vec![0u8; CS as usize]).unwrap();
+        d.flush().unwrap();
+        // the write must have become a zero entry, not a data cluster
+        assert!(d.chain().active().l2_entry(3).unwrap().is_zero_cluster());
+        // warm the table metadata, then count device I/O
+        let mut buf = vec![0u8; CS as usize];
+        d.read(3 * CS, &mut buf).unwrap();
+        d.read(5 * CS, &mut buf).unwrap(); // never written: a hole
+        let ios0 = device_ios(&*d);
+        let got = readv_into(&mut *d, &[(3 * CS, CS as usize), (5 * CS + 7, 300)]);
+        assert!(got.iter().all(|b| b.iter().all(|&x| x == 0)));
+        let mut s = vec![0u8; CS as usize];
+        d.read(3 * CS, &mut s).unwrap();
+        assert!(s.iter().all(|&x| x == 0));
+        assert_eq!(
+            device_ios(&*d),
+            ios0,
+            "zero/hole reads must not touch the device"
+        );
+    }
 }
 
 /// Coordinator batches: in-order execution (read-your-batched-write),

@@ -1,0 +1,254 @@
+//! Fig 25 (beyond the paper — §3's fleet, scaled): the sharded data
+//! plane serving a large modeled fleet.
+//!
+//! 10k VMs (full mode) are modeled in waves of concurrently running
+//! clones: each wave snapshots a golden base into per-VM active volumes
+//! (the clone-population shape), boot-storms the shared base, runs a
+//! private COW write mix, flushes, and is decommissioned; a GC sweep
+//! reclaims the wave before the next one launches, so the resident set
+//! stays bounded while the run still pushes 10k launches through the
+//! shard pool and the per-node I/O schedulers.
+//!
+//! Measured:
+//! * device-time utilization — fraction of device-busy virtual time
+//!   spent moving bytes at the cost model's theoretical bandwidth
+//!   (the rest is seeks); cross-VM merge windows are what keep it high
+//!   during the boot-storm and the contiguous write bursts.
+//! * guest request latency p50/p99 (enqueue -> completion, virtual ns)
+//!   aggregated over every VM's service histogram.
+//!
+//! Acceptance: utilization >= 0.90, and the schedulers must have merged
+//! seeks across VMs (merged_seeks > 0). Emits `BENCH_fig25.json` (CI
+//! uploads it as an artifact).
+
+use sqemu::bench::table::{f1, f2, Table};
+use sqemu::bench::BenchArgs;
+use sqemu::cache::CacheConfig;
+use sqemu::chaingen::{generate, ChainSpec};
+use sqemu::coordinator::placement::NodeSet;
+use sqemu::coordinator::server::{CoordinatorConfig, VmChain};
+use sqemu::coordinator::{Coordinator, VmConfig};
+use sqemu::metrics::clock::{CostModel, VirtClock};
+use sqemu::metrics::histogram::Histogram;
+use sqemu::qcow::image::DataMode;
+use sqemu::qcow::{snapshot, Chain};
+use sqemu::storage::node::StorageNode;
+use sqemu::vdisk::DriverKind;
+use std::fmt::Write as _;
+use std::sync::Arc;
+
+const CS: u64 = 64 << 10;
+/// Golden base per wave: what every clone boot-storms.
+const BASE: u64 = 8 << 20;
+/// Private COW writes per VM (contiguous burst).
+const WRITE_CLUSTERS: u64 = 16;
+
+struct Outcome {
+    vms: usize,
+    utilization: f64,
+    busy_ms: f64,
+    moved_mib: f64,
+    seeks: u64,
+    merged_seeks: u64,
+    p50_ns: u64,
+    p99_ns: u64,
+    shard_wakeups: u64,
+    shard_passes: u64,
+}
+
+fn run(total_vms: usize, wave: usize, threads: usize) -> Outcome {
+    let clock = VirtClock::new();
+    let nodes: Vec<_> = (0..2)
+        .map(|i| {
+            StorageNode::new(&format!("node-{i}"), clock.clone(), CostModel::default())
+        })
+        .collect();
+    let coord = Coordinator::new(
+        Arc::new(NodeSet::new(nodes).unwrap()),
+        clock,
+        CoordinatorConfig::default(),
+        None,
+    );
+    let mut lat_p50 = Histogram::new();
+    let mut lat_p99 = Histogram::new();
+    let waves = (total_vms + wave - 1) / wave;
+    for w in 0..waves {
+        let in_wave = wave.min(total_vms - w * wave);
+        let store = coord.nodes.pinned(&format!("node-{}", w % 2)).unwrap();
+        // golden base + per-clone actives over the shared immutable base
+        let mut gold = generate(
+            &store,
+            &ChainSpec {
+                disk_size: BASE,
+                chain_len: 1,
+                populated: 1.0,
+                stamped: true,
+                data_mode: DataMode::Real,
+                prefix: format!("g{w}"),
+                seed: 0xF25 + w as u64,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        snapshot::snapshot_sqemu(&mut gold, &store, &format!("w{w}-v0-active")).unwrap();
+        let shared: Vec<_> = gold.images()[..gold.len() - 1].to_vec();
+        for v in 1..in_wave {
+            let mut sib = Chain::new(Arc::clone(&shared[0])).unwrap();
+            sib.replace_images(shared.clone());
+            snapshot::snapshot_sqemu(&mut sib, &store, &format!("w{w}-v{v}-active"))
+                .unwrap();
+        }
+        drop(gold);
+        drop(shared);
+        // the wave boots and runs concurrently across the shard pool
+        let mut handles = Vec::new();
+        for t in 0..threads {
+            let coord = Arc::clone(&coord);
+            handles.push(std::thread::spawn(move || {
+                for v in (t..in_wave).step_by(threads) {
+                    let name = format!("w{w}-v{v}");
+                    let client = coord
+                        .launch_vm(
+                            &name,
+                            VmConfig {
+                                driver: DriverKind::Scalable,
+                                cache: CacheConfig::new(32, 64 << 10),
+                                chain: VmChain::Existing {
+                                    active_name: format!("w{w}-v{v}-active"),
+                                    data_mode: DataMode::Real,
+                                },
+                            },
+                        )
+                        .unwrap();
+                    // boot storm: read the whole shared base as one
+                    // vectored submission (cross-VM merge fodder)
+                    let reqs: Vec<(u64, usize)> = (0..BASE / CS)
+                        .map(|c| (c * CS, CS as usize))
+                        .collect();
+                    client.readv(&reqs).unwrap();
+                    // private COW burst: contiguous clusters, one entry
+                    let base = (v as u64 % 4) * WRITE_CLUSTERS * CS;
+                    let burst: Vec<(u64, Vec<u8>)> = (0..WRITE_CLUSTERS)
+                        .map(|k| {
+                            (base + k * CS, vec![(v as u8) ^ (k as u8); CS as usize])
+                        })
+                        .collect();
+                    client.writev(burst).unwrap();
+                    client.flush().unwrap();
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        // drain the wave: latency histograms, then decommission + GC so
+        // the resident set stays bounded across 10k modeled VMs
+        let mut snaps = Vec::new();
+        for v in 0..in_wave {
+            snaps.push(coord.vm_stats(&format!("w{w}-v{v}")).unwrap());
+        }
+        for s in snaps {
+            lat_p50.record(s.req_p50_ns);
+            lat_p99.record(s.req_p99_ns);
+        }
+        for v in 0..in_wave {
+            coord.decommission_vm(&format!("w{w}-v{v}")).unwrap();
+        }
+        coord.run_gc(0).unwrap();
+    }
+    let cost = CostModel::default();
+    let (mut busy, mut fresh, mut seeks, mut merged) = (0u64, 0u64, 0u64, 0u64);
+    for node in coord.nodes.nodes() {
+        let s = node.scheduler().snapshot();
+        busy += s.busy_ns;
+        fresh += s.fresh_bytes;
+        seeks += s.seeks;
+        merged += s.merged_seeks;
+    }
+    let xfer = cost.io_ns(fresh) - cost.io_ns(0);
+    let shards = coord.shard_stats();
+    let outcome = Outcome {
+        vms: total_vms,
+        utilization: xfer as f64 / busy.max(1) as f64,
+        busy_ms: busy as f64 / 1e6,
+        moved_mib: fresh as f64 / (1 << 20) as f64,
+        seeks,
+        merged_seeks: merged,
+        p50_ns: lat_p50.quantile(0.50),
+        p99_ns: lat_p99.quantile(0.99),
+        shard_wakeups: shards.iter().map(|s| s.wakeups).sum(),
+        shard_passes: shards.iter().map(|s| s.passes).sum(),
+    };
+    coord.shutdown();
+    outcome
+}
+
+fn main() {
+    let args = BenchArgs::parse();
+    let (total_vms, wave, threads) = if args.full {
+        (10_000, 250, 8)
+    } else if args.quick {
+        (1_000, 250, 8)
+    } else {
+        (2_500, 250, 8)
+    };
+    let mut t = Table::new(
+        "fig25_fleet_scale",
+        "sharded data plane at fleet scale: device utilization and latency",
+        &[
+            "vms", "util", "busy_ms", "moved_MiB", "seeks", "merged_seeks",
+            "p50_us", "p99_us", "passes", "wakeups",
+        ],
+    );
+    let o = run(total_vms, wave, threads);
+    t.row(&[
+        format!("{}", o.vms),
+        f2(o.utilization),
+        f1(o.busy_ms),
+        f1(o.moved_mib),
+        format!("{}", o.seeks),
+        format!("{}", o.merged_seeks),
+        f1(o.p50_ns as f64 / 1e3),
+        f1(o.p99_ns as f64 / 1e3),
+        format!("{}", o.shard_passes),
+        format!("{}", o.shard_wakeups),
+    ]);
+    let mut json = String::new();
+    json.push_str("{\n  \"schema\": \"sqemu-bench-fig25/1\",\n  \"runs\": [\n");
+    let _ = writeln!(
+        json,
+        "    {{\"vms\": {}, \"wave\": {wave}, \"utilization\": {:.4}, \
+         \"busy_ns\": {}, \"fresh_bytes\": {}, \"seeks\": {}, \
+         \"merged_seeks\": {}, \"p50_ns\": {}, \"p99_ns\": {}, \
+         \"shard_passes\": {}, \"shard_wakeups\": {}}}",
+        o.vms,
+        o.utilization,
+        (o.busy_ms * 1e6) as u64,
+        (o.moved_mib * (1 << 20) as f64) as u64,
+        o.seeks,
+        o.merged_seeks,
+        o.p50_ns,
+        o.p99_ns,
+        o.shard_passes,
+        o.shard_wakeups,
+    );
+    json.push_str("  ]\n}\n");
+    std::fs::write("BENCH_fig25.json", &json).expect("write BENCH_fig25.json");
+    t.finish();
+    println!(
+        "\npaper shape: one executor per core serves the whole fleet; per-VM \
+         rings keep submissions lock-free and the per-node merge windows \
+         keep the device streaming instead of seeking — {:.1}% of device \
+         time moved bytes at theoretical bandwidth across {} modeled VMs \
+         ({} seeks avoided by cross-VM merging)\n(wrote BENCH_fig25.json)",
+        o.utilization * 100.0,
+        o.vms,
+        o.merged_seeks,
+    );
+    assert!(
+        o.utilization >= 0.90,
+        "device-time utilization below the 0.90 acceptance bar: {:.4}",
+        o.utilization
+    );
+    assert!(o.merged_seeks > 0, "no cross-VM merges happened");
+}

@@ -52,11 +52,11 @@ pub use stamp::LiveStampJob;
 pub use stream::LiveStreamJob;
 
 use crate::qcow::Chain;
-use crate::util::lock_unpoisoned;
+use crate::util::{lock_unpoisoned, Notify};
 use anyhow::Result;
 use std::collections::{HashMap, HashSet};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 
 /// Which maintenance operation a job performs.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -249,6 +249,10 @@ pub struct JobShared {
     pub finished_ns: AtomicU64,
     cancel: AtomicBool,
     pause: AtomicBool,
+    /// Doorbell of the executor driving this job. A paused job's
+    /// executor parks instead of polling; `resume`/`cancel` ring it so
+    /// the job restarts promptly with zero idle wakeups.
+    waker: Mutex<Option<Arc<Notify>>>,
 }
 
 impl JobShared {
@@ -268,6 +272,23 @@ impl JobShared {
             finished_ns: AtomicU64::new(0),
             cancel: AtomicBool::new(false),
             pause: AtomicBool::new(false),
+            waker: Mutex::new(None),
+        }
+    }
+
+    /// Register the executor doorbell to ring on `resume`/`cancel`.
+    pub fn set_waker(&self, w: Arc<Notify>) {
+        *lock_unpoisoned(&self.waker) = Some(w);
+    }
+
+    /// Drop the registered doorbell (job finished or VM moved).
+    pub fn clear_waker(&self) {
+        *lock_unpoisoned(&self.waker) = None;
+    }
+
+    fn wake(&self) {
+        if let Some(w) = lock_unpoisoned(&self.waker).as_ref() {
+            w.notify();
         }
     }
 
@@ -290,6 +311,7 @@ impl JobShared {
 
     pub fn cancel(&self) {
         self.cancel.store(true, Ordering::Relaxed);
+        self.wake();
     }
 
     pub fn cancelled(&self) -> bool {
@@ -302,6 +324,7 @@ impl JobShared {
 
     pub fn resume(&self) {
         self.pause.store(false, Ordering::Relaxed);
+        self.wake();
     }
 
     pub fn paused(&self) -> bool {
@@ -390,6 +413,28 @@ mod tests {
         assert!((st.progress() - 0.25).abs() < 1e-9);
         s.set_state(JobState::Completed);
         assert!(s.state().is_terminal());
+    }
+
+    #[test]
+    fn resume_and_cancel_ring_the_registered_waker() {
+        let s = JobShared::new("job-2", JobKind::Stream, 64 << 20);
+        let w = Arc::new(Notify::new());
+        s.set_waker(Arc::clone(&w));
+        s.pause();
+        assert!(
+            !w.wait_timeout(std::time::Duration::from_millis(5)),
+            "pause alone does not wake the executor"
+        );
+        s.resume();
+        assert!(w.wait_timeout(std::time::Duration::from_millis(100)));
+        s.cancel();
+        assert!(w.wait_timeout(std::time::Duration::from_millis(100)));
+        s.clear_waker();
+        s.resume();
+        assert!(
+            !w.wait_timeout(std::time::Duration::from_millis(5)),
+            "cleared waker stays silent"
+        );
     }
 
     #[test]

@@ -626,6 +626,20 @@ pub fn serve(args: &Args) -> Result<()> {
         human_ns(coord.clock.now())
     );
     println!("memory accounted: {}", human_bytes(coord.acct.total()));
+    println!("\nring occupancy per shard executor:");
+    for s in coord.shard_stats() {
+        println!(
+            "  shard-{}: {} vms, {} queued now, {} served over {} passes \
+             ({:.1} ops/pass), {} park wakeups",
+            s.shard,
+            s.vms,
+            s.queued,
+            s.served,
+            s.passes,
+            s.served as f64 / s.passes.max(1) as f64,
+            s.wakeups,
+        );
+    }
     coord.shutdown();
     Ok(())
 }
@@ -708,6 +722,35 @@ fn print_node_status(coord: &Coordinator) {
         "fleet max/min pressure ratio: {:.2}",
         crate::migrate::rebalance::pressure_ratio(&pressures)
     );
+    println!(
+        "\n{:<10} {:>6} {:>8} {:>10} {:>10} {:>10} {:>10}",
+        "SHARD", "vms", "queued", "served", "passes", "ops/pass", "wakeups"
+    );
+    for s in coord.shard_stats() {
+        println!(
+            "{:<10} {:>6} {:>8} {:>10} {:>10} {:>10.1} {:>10}",
+            format!("shard-{}", s.shard),
+            s.vms,
+            s.queued,
+            s.served,
+            s.passes,
+            s.served as f64 / s.passes.max(1) as f64,
+            s.wakeups,
+        );
+    }
+    for node in coord.nodes.nodes() {
+        let io = node.scheduler().snapshot();
+        if io.busy_ns > 0 {
+            println!(
+                "{}: device util {:.1}% ({} merged seeks, {} transferred \
+                 under merge windows)",
+                node.name,
+                node.scheduler().utilization() * 100.0,
+                io.merged_seeks,
+                human_bytes(io.fresh_bytes),
+            );
+        }
+    }
 }
 
 /// `sqemu node status`: per-node used/pressure/condemned/reclaimed bytes

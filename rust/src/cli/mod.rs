@@ -16,10 +16,10 @@
 //! sqemu info    --dir D --name N
 //! sqemu check   --dir D --active N [--repair] # verify; --repair recovers
 //! sqemu characterize [--chains N]             # §3 figures
-//! sqemu serve   [--vms N] [--chain L]         # coordinator demo
+//! sqemu serve   [--vms N] [--chain L]         # coordinator demo + ring stats
 //! sqemu migrate --to node-1 [--vm vm-0] [--rate 64M]  # live-migrate a chain
 //! sqemu rebalance [--dry-run] [--threshold 1.5]       # fleet rebalancer
-//! sqemu node status [--nodes N] [--vms V]     # per-node capacity report
+//! sqemu node status [--nodes N] [--vms V]     # per-node capacity + per-shard queues
 //! sqemu dedup status [--nodes N] [--vms V]    # capacity-multiplication demo
 //! sqemu bench   [--json [path]]               # CI perf smoke artifact
 //! sqemu selftest                              # artifacts + runtime

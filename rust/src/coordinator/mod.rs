@@ -5,10 +5,17 @@
 //! disks, streams chains and balances placement (§3). This module is that
 //! control plane, scaled to the simulation:
 //!
-//! * [`server::Coordinator`] — owns the storage nodes and the VM fleet;
-//!   one worker thread per VM owns its driver (drivers are single-owner,
-//!   like a Qemu process), requests flow through bounded queues
-//!   (backpressure = queue full).
+//! * [`server::Coordinator`] — owns the storage nodes and the VM fleet.
+//!   The data plane is sharded: a fixed pool of [`shard`] executors (one
+//!   per core, not one per VM) owns disjoint VM sets, and each VM's
+//!   driver lives on exactly one shard (drivers stay single-owner, like
+//!   a Qemu process). Guest requests flow through per-VM lock-free
+//!   submission/completion [`ring`]s (backpressure = SQ full); clients
+//!   can keep many operations in flight and reap completions
+//!   asynchronously, with per-VM program order preserved.
+//! * [`crate::storage::iosched`] — per-node I/O schedulers let a shard merge
+//!   vectored runs ACROSS VMs targeting the same node inside a serving
+//!   pass (cross-VM extent batching under the Timed cost model).
 //! * [`placement::NodeSet`] — multi-node [`FileStore`]: new files go to
 //!   the least-loaded node with capacity (thin provisioning: a chain can
 //!   continue on another node, §4.1).
@@ -42,13 +49,17 @@
 
 pub mod batcher;
 pub mod placement;
+pub mod ring;
 pub mod server;
+pub mod shard;
 pub mod stats;
 pub mod streaming;
 
 pub use batcher::BulkTranslator;
 pub use placement::NodeSet;
+pub use ring::RingReply;
 pub use server::{
     BatchOp, BatchReply, Coordinator, CoordinatorConfig, JobSpec, RebalanceReport,
     RecoveryReport, VmClient, VmConfig,
 };
+pub use shard::ShardStatsSnapshot;

@@ -1,0 +1,536 @@
+//! Submission/completion rings: the lock-free guest-I/O fast path.
+//!
+//! Each VM owns a fixed-capacity SQ/CQ ring pair (io_uring style). Guest
+//! clients push [`SqEntry`]s into the submission ring tagged with a
+//! monotonically increasing tag — no channel allocation, no blocking
+//! round-trip — and reap [`CqEntry`]s from the completion ring whenever
+//! they choose. The shard executor that owns the VM drains the SQ in
+//! program order, executes against the driver, and pushes one completion
+//! per submission; per-VM ordering is therefore exactly submission
+//! order, and a `Flush` entry is a barrier by construction (everything
+//! before it in the ring has completed when it runs).
+//!
+//! The rings are Vyukov bounded MPMC queues: per-slot sequence numbers
+//! arbitrate producers and consumers without locks. The only lock on the
+//! path is the completion *stash* — a rendezvous map clients move CQ
+//! entries into so that many client threads can each wait for their own
+//! tag (and where the executor parks completions if the CQ itself is
+//! full, so the data plane never blocks on a slow reaper).
+
+use crate::util::Notify;
+use anyhow::{anyhow, bail, Result};
+use std::cell::UnsafeCell;
+use std::collections::HashMap;
+use std::mem::MaybeUninit;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, PoisonError};
+
+/// One operation of a batched guest submission ([`super::VmClient::submit`]).
+#[derive(Debug)]
+pub enum BatchOp {
+    Read { voff: u64, len: usize },
+    Write { voff: u64, data: Vec<u8> },
+}
+
+/// Per-operation result of a batch, in submission order.
+#[derive(Debug)]
+pub enum BatchReply {
+    Read(Vec<u8>),
+    Write,
+}
+
+/// One submission-ring entry: a guest request plus its completion tag
+/// and enqueue timestamp (virtual ns, for guest-visible latency).
+#[derive(Debug)]
+pub enum SqEntry {
+    Read { tag: u64, voff: u64, len: usize, t_enq: u64 },
+    Write { tag: u64, voff: u64, data: Vec<u8>, t_enq: u64 },
+    Batch { tag: u64, ops: Vec<BatchOp>, t_enq: u64 },
+    /// Durability barrier: completes only after every earlier entry in
+    /// this ring has completed (guaranteed by in-order execution).
+    Flush { tag: u64, t_enq: u64 },
+}
+
+impl SqEntry {
+    pub fn tag(&self) -> u64 {
+        match self {
+            SqEntry::Read { tag, .. }
+            | SqEntry::Write { tag, .. }
+            | SqEntry::Batch { tag, .. }
+            | SqEntry::Flush { tag, .. } => *tag,
+        }
+    }
+}
+
+/// The payload of a completion.
+#[derive(Debug)]
+pub enum RingReply {
+    Read(Result<Vec<u8>>),
+    Write(Result<()>),
+    Batch(Result<Vec<BatchReply>>),
+    Flush(Result<()>),
+}
+
+/// One completion-ring entry.
+#[derive(Debug)]
+pub struct CqEntry {
+    pub tag: u64,
+    pub reply: RingReply,
+}
+
+// ------------------------------------------------------------------
+// The bounded lock-free MPMC ring (Dmitry Vyukov's algorithm): each
+// slot carries a sequence number; a producer claims slot `pos` when
+// `seq == pos`, a consumer when `seq == pos + 1`. CAS on head/tail
+// arbitrates concurrent producers/consumers; the sequence store
+// publishes the payload.
+// ------------------------------------------------------------------
+
+struct Slot<T> {
+    seq: AtomicUsize,
+    val: UnsafeCell<MaybeUninit<T>>,
+}
+
+/// Fixed-capacity lock-free MPMC queue.
+pub struct Ring<T> {
+    buf: Box<[Slot<T>]>,
+    mask: usize,
+    /// enqueue position
+    tail: AtomicUsize,
+    /// dequeue position
+    head: AtomicUsize,
+}
+
+// Safety: values are moved in by exactly one producer (the slot's
+// sequence number admits one claimant) and moved out by exactly one
+// consumer; T crosses threads, hence T: Send. No &T is ever shared.
+unsafe impl<T: Send> Send for Ring<T> {}
+unsafe impl<T: Send> Sync for Ring<T> {}
+
+impl<T> Ring<T> {
+    /// A ring holding at least `cap` entries (rounded up to a power of
+    /// two, minimum 2).
+    pub fn with_capacity(cap: usize) -> Ring<T> {
+        let cap = cap.max(2).next_power_of_two();
+        let buf: Vec<Slot<T>> = (0..cap)
+            .map(|i| Slot {
+                seq: AtomicUsize::new(i),
+                val: UnsafeCell::new(MaybeUninit::uninit()),
+            })
+            .collect();
+        Ring {
+            buf: buf.into_boxed_slice(),
+            mask: cap - 1,
+            tail: AtomicUsize::new(0),
+            head: AtomicUsize::new(0),
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.buf.len()
+    }
+
+    /// Approximate occupancy (exact when producers/consumers are quiet).
+    pub fn len(&self) -> usize {
+        let tail = self.tail.load(Ordering::Relaxed);
+        let head = self.head.load(Ordering::Relaxed);
+        tail.wrapping_sub(head).min(self.capacity())
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Enqueue; returns the value back when the ring is full.
+    pub fn push(&self, v: T) -> std::result::Result<(), T> {
+        let mut pos = self.tail.load(Ordering::Relaxed);
+        loop {
+            let slot = &self.buf[pos & self.mask];
+            let seq = slot.seq.load(Ordering::Acquire);
+            let dif = seq as isize - pos as isize;
+            if dif == 0 {
+                match self.tail.compare_exchange_weak(
+                    pos,
+                    pos.wrapping_add(1),
+                    Ordering::Relaxed,
+                    Ordering::Relaxed,
+                ) {
+                    Ok(_) => {
+                        unsafe { (*slot.val.get()).write(v) };
+                        slot.seq.store(pos.wrapping_add(1), Ordering::Release);
+                        return Ok(());
+                    }
+                    Err(now) => pos = now,
+                }
+            } else if dif < 0 {
+                return Err(v); // full
+            } else {
+                pos = self.tail.load(Ordering::Relaxed);
+            }
+        }
+    }
+
+    /// Dequeue; `None` when empty.
+    pub fn pop(&self) -> Option<T> {
+        let mut pos = self.head.load(Ordering::Relaxed);
+        loop {
+            let slot = &self.buf[pos & self.mask];
+            let seq = slot.seq.load(Ordering::Acquire);
+            let dif = seq as isize - pos.wrapping_add(1) as isize;
+            if dif == 0 {
+                match self.head.compare_exchange_weak(
+                    pos,
+                    pos.wrapping_add(1),
+                    Ordering::Relaxed,
+                    Ordering::Relaxed,
+                ) {
+                    Ok(_) => {
+                        let v = unsafe { (*slot.val.get()).assume_init_read() };
+                        slot.seq.store(
+                            pos.wrapping_add(self.mask + 1),
+                            Ordering::Release,
+                        );
+                        return Some(v);
+                    }
+                    Err(now) => pos = now,
+                }
+            } else if dif < 0 {
+                return None; // empty
+            } else {
+                pos = self.head.load(Ordering::Relaxed);
+            }
+        }
+    }
+}
+
+impl<T> Drop for Ring<T> {
+    fn drop(&mut self) {
+        // drain undelivered payloads so they are not leaked
+        while self.pop().is_some() {}
+    }
+}
+
+/// How long a completion waiter sleeps between rechecks if a wakeup is
+/// ever missed (defense in depth — the executor wakes the stash
+/// condvar after every burst, so this backstop should never be the
+/// mechanism that makes progress).
+const WAIT_BACKSTOP: std::time::Duration = std::time::Duration::from_millis(50);
+
+/// The SQ/CQ ring pair of one VM, plus the completion rendezvous.
+pub struct VmRings {
+    sq: Ring<SqEntry>,
+    cq: Ring<CqEntry>,
+    next_tag: AtomicU64,
+    /// Completions moved out of the CQ (by reapers looking for another
+    /// tag, or by the executor when the CQ is full), keyed by tag.
+    stash: Mutex<HashMap<u64, RingReply>>,
+    reap_cv: Condvar,
+    /// Set when the owning executor drops this VM (stop or panic):
+    /// submitters and waiters error with "vm worker gone".
+    dead: AtomicBool,
+    /// Doorbell of the shard executor owning this VM.
+    doorbell: Arc<Notify>,
+    /// Submission stalls on a full SQ (backpressure episodes).
+    pub backpressure: AtomicU64,
+}
+
+impl VmRings {
+    pub fn new(depth: usize, doorbell: Arc<Notify>) -> Arc<VmRings> {
+        Arc::new(VmRings {
+            sq: Ring::with_capacity(depth),
+            cq: Ring::with_capacity(depth),
+            next_tag: AtomicU64::new(1),
+            stash: Mutex::new(HashMap::new()),
+            reap_cv: Condvar::new(),
+            dead: AtomicBool::new(false),
+            doorbell,
+            backpressure: AtomicU64::new(0),
+        })
+    }
+
+    pub fn next_tag(&self) -> u64 {
+        self.next_tag.fetch_add(1, Ordering::Relaxed)
+    }
+
+    pub fn is_dead(&self) -> bool {
+        self.dead.load(Ordering::Acquire)
+    }
+
+    /// The owning executor is gone: fail pending and future waiters.
+    pub fn mark_dead(&self) {
+        self.dead.store(true, Ordering::Release);
+        // serialize with waiters so none parks after missing the flag
+        let _g = self.stash.lock().unwrap_or_else(PoisonError::into_inner);
+        self.reap_cv.notify_all();
+        self.doorbell.notify();
+    }
+
+    /// Current submission-queue occupancy (ring observability).
+    pub fn sq_len(&self) -> usize {
+        self.sq.len()
+    }
+
+    pub fn sq_capacity(&self) -> usize {
+        self.sq.capacity()
+    }
+
+    /// Enqueue a submission, blocking while the SQ is full (the bounded
+    /// queue IS the backpressure mechanism, exactly like the old
+    /// `sync_channel`). Errors if the VM's executor is gone.
+    pub fn submit(&self, entry: SqEntry) -> Result<()> {
+        let mut entry = entry;
+        let mut stalled = false;
+        loop {
+            if self.is_dead() {
+                bail!("vm worker gone");
+            }
+            match self.sq.push(entry) {
+                Ok(()) => {
+                    self.doorbell.notify();
+                    return Ok(());
+                }
+                Err(back) => {
+                    if !stalled {
+                        stalled = true;
+                        self.backpressure.fetch_add(1, Ordering::Relaxed);
+                        // the consumer may be parked on a stale "empty"
+                        // observation — ring once per stall episode
+                        self.doorbell.notify();
+                    }
+                    entry = back;
+                    std::thread::yield_now();
+                }
+            }
+        }
+    }
+
+    /// Executor side: next submission in program order.
+    pub fn pop_sq(&self) -> Option<SqEntry> {
+        self.sq.pop()
+    }
+
+    /// Executor side: deliver a completion. Never blocks — a full CQ
+    /// overflows into the stash (the reaper finds it either way).
+    pub fn complete(&self, tag: u64, reply: RingReply) {
+        if let Err(e) = self.cq.push(CqEntry { tag, reply }) {
+            let mut stash =
+                self.stash.lock().unwrap_or_else(PoisonError::into_inner);
+            stash.insert(tag, e.reply);
+        }
+    }
+
+    /// Executor side: wake reapers after a burst of completions. Locks
+    /// the stash mutex so a reaper that just found nothing is either
+    /// still holding the lock (and will see the CQ entries on its next
+    /// drain) or already parked (and is woken here).
+    pub fn wake_reapers(&self) {
+        let _g = self.stash.lock().unwrap_or_else(PoisonError::into_inner);
+        self.reap_cv.notify_all();
+    }
+
+    /// Reap the completion for `tag` without blocking. `Ok(None)` means
+    /// still in flight.
+    pub fn try_wait(&self, tag: u64) -> Result<Option<RingReply>> {
+        let mut stash =
+            self.stash.lock().unwrap_or_else(PoisonError::into_inner);
+        Self::drain_cq(&self.cq, &mut stash);
+        if let Some(r) = stash.remove(&tag) {
+            return Ok(Some(r));
+        }
+        if self.is_dead() {
+            return Err(anyhow!("vm worker gone"));
+        }
+        Ok(None)
+    }
+
+    /// Block until the completion for `tag` arrives.
+    pub fn wait(&self, tag: u64) -> Result<RingReply> {
+        let mut stash =
+            self.stash.lock().unwrap_or_else(PoisonError::into_inner);
+        loop {
+            Self::drain_cq(&self.cq, &mut stash);
+            if let Some(r) = stash.remove(&tag) {
+                return Ok(r);
+            }
+            if self.is_dead() {
+                // one final drain happened above; the completion will
+                // never arrive now
+                bail!("vm worker gone");
+            }
+            let (g, _t) = self
+                .reap_cv
+                .wait_timeout(stash, WAIT_BACKSTOP)
+                .unwrap_or_else(PoisonError::into_inner);
+            stash = g;
+        }
+    }
+
+    fn drain_cq(cq: &Ring<CqEntry>, stash: &mut HashMap<u64, RingReply>) {
+        while let Some(e) = cq.pop() {
+            stash.insert(e.tag, e.reply);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ring_fifo_and_capacity() {
+        let r: Ring<u32> = Ring::with_capacity(4);
+        assert_eq!(r.capacity(), 4);
+        assert!(r.is_empty());
+        for i in 0..4 {
+            r.push(i).unwrap();
+        }
+        assert_eq!(r.push(99), Err(99), "full ring rejects");
+        assert_eq!(r.len(), 4);
+        for i in 0..4 {
+            assert_eq!(r.pop(), Some(i));
+        }
+        assert_eq!(r.pop(), None);
+        // reusable after wraparound
+        for round in 0..10u32 {
+            r.push(round).unwrap();
+            assert_eq!(r.pop(), Some(round));
+        }
+    }
+
+    #[test]
+    fn ring_capacity_rounds_up() {
+        let r: Ring<u8> = Ring::with_capacity(5);
+        assert_eq!(r.capacity(), 8);
+        let r: Ring<u8> = Ring::with_capacity(0);
+        assert_eq!(r.capacity(), 2);
+    }
+
+    #[test]
+    fn ring_drop_releases_undelivered() {
+        // would leak (or double-free on a bug) under miri/asan; here we
+        // just exercise the path
+        let r: Ring<Vec<u8>> = Ring::with_capacity(4);
+        r.push(vec![1, 2, 3]).unwrap();
+        r.push(vec![4]).unwrap();
+        drop(r);
+    }
+
+    #[test]
+    fn ring_mpmc_under_contention() {
+        let r: Arc<Ring<u64>> = Arc::new(Ring::with_capacity(64));
+        const PER: u64 = 10_000;
+        let producers: Vec<_> = (0..4u64)
+            .map(|p| {
+                let r = Arc::clone(&r);
+                std::thread::spawn(move || {
+                    for i in 0..PER {
+                        let mut v = p * PER + i;
+                        loop {
+                            match r.push(v) {
+                                Ok(()) => break,
+                                Err(b) => {
+                                    v = b;
+                                    std::thread::yield_now();
+                                }
+                            }
+                        }
+                    }
+                })
+            })
+            .collect();
+        let consumers: Vec<_> = (0..4)
+            .map(|_| {
+                let r = Arc::clone(&r);
+                std::thread::spawn(move || {
+                    let mut got = Vec::new();
+                    let mut idle = 0u32;
+                    while idle < 20_000 {
+                        match r.pop() {
+                            Some(v) => {
+                                got.push(v);
+                                idle = 0;
+                            }
+                            None => {
+                                idle += 1;
+                                std::thread::yield_now();
+                            }
+                        }
+                    }
+                    got
+                })
+            })
+            .collect();
+        for p in producers {
+            p.join().unwrap();
+        }
+        let mut all: Vec<u64> = Vec::new();
+        for c in consumers {
+            all.extend(c.join().unwrap());
+        }
+        all.sort_unstable();
+        let expect: Vec<u64> = (0..4 * PER).collect();
+        assert_eq!(all, expect, "every value delivered exactly once");
+    }
+
+    #[test]
+    fn vmrings_roundtrip_and_stash_rendezvous() {
+        let doorbell = Arc::new(Notify::new());
+        let r = VmRings::new(8, doorbell);
+        let t1 = r.next_tag();
+        let t2 = r.next_tag();
+        assert_ne!(t1, t2);
+        // complete out of order; each waiter still gets its own tag
+        r.complete(t2, RingReply::Write(Ok(())));
+        r.complete(t1, RingReply::Read(Ok(vec![7u8])));
+        r.wake_reapers();
+        match r.wait(t1).unwrap() {
+            RingReply::Read(Ok(b)) => assert_eq!(b, vec![7u8]),
+            other => panic!("wrong reply: {other:?}"),
+        }
+        match r.wait(t2).unwrap() {
+            RingReply::Write(Ok(())) => {}
+            other => panic!("wrong reply: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn vmrings_cq_overflow_lands_in_stash() {
+        let doorbell = Arc::new(Notify::new());
+        let r = VmRings::new(2, doorbell);
+        let tags: Vec<u64> = (0..10).map(|_| r.next_tag()).collect();
+        for &t in &tags {
+            r.complete(t, RingReply::Flush(Ok(())));
+        }
+        r.wake_reapers();
+        for &t in &tags {
+            assert!(r.try_wait(t).unwrap().is_some(), "tag {t} delivered");
+        }
+    }
+
+    #[test]
+    fn vmrings_dead_fails_waiters_and_submitters() {
+        let doorbell = Arc::new(Notify::new());
+        let r = VmRings::new(4, Arc::clone(&doorbell));
+        let tag = r.next_tag();
+        let r2 = Arc::clone(&r);
+        let h = std::thread::spawn(move || r2.wait(tag));
+        std::thread::sleep(std::time::Duration::from_millis(10));
+        r.mark_dead();
+        assert!(h.join().unwrap().is_err(), "waiter unblocked with error");
+        let e = SqEntry::Flush { tag: r.next_tag(), t_enq: 0 };
+        assert!(r.submit(e).is_err(), "dead rings refuse submissions");
+    }
+
+    #[test]
+    fn vmrings_submit_rings_the_doorbell() {
+        let doorbell = Arc::new(Notify::new());
+        let r = VmRings::new(4, Arc::clone(&doorbell));
+        r.submit(SqEntry::Flush { tag: r.next_tag(), t_enq: 0 }).unwrap();
+        assert!(
+            doorbell.wait_timeout(std::time::Duration::from_millis(100)),
+            "submission woke the shard"
+        );
+        assert_eq!(r.sq_len(), 1);
+        assert!(r.pop_sq().is_some());
+    }
+}

@@ -1,34 +1,52 @@
 //! The coordinator server: VM fleet management over a storage-node set.
 //!
-//! Architecture (thread-per-VM, like one Qemu process per VM):
+//! Architecture (sharded data plane — PR 7; previously one thread per
+//! VM):
 //!
 //! ```text
-//!  clients ──► VmClient ──► bounded queue ──► VM worker thread
-//!                               │                 │ owns the Driver
-//!                       (backpressure =           │ (vanilla | sqemu)
-//!                        full queue blocks)       │ + at most one live
-//!                                                 ▼   block-job runner
-//!                                          Chain on NodeSet
+//!  clients ──► VmClient ──► SQ ring ─┐            shard executor 0
+//!              (lock-free,           ├─► owns VMs {a, d, ...}:
+//!               tag-based            │   drains SQs in bursts,
+//!               completions          │   drives block jobs, advances
+//!               via CQ ring)         │   the virtual clock when idle
+//!                                    │       │
+//!  clients ──► VmClient ──► SQ ring ─┘       ▼ per-node I/O scheduler
+//!                                        merge window batches extents
+//!  shard executor 1 owns {b, c, ...}     ACROSS VMs before the Timed
+//!     (VM → shard by name hash)          cost model bills seeks
+//!
 //!  control plane: launch / snapshot / stream / stop, bulk translation,
-//!  live block jobs (admission via the per-node JobScheduler)
+//!  live block jobs (admission via the per-node JobScheduler) — all over
+//!  per-shard control channels, never through the rings
 //! ```
 //!
-//! Live jobs and guest requests interleave on the worker thread: after
-//! every guest request the worker gives the job runner one bounded step,
-//! and while the queue is idle it drains the job continuously (advancing
-//! the virtual clock across rate-limiter stalls). Guest requests always
-//! preempt the next increment, so the guest-visible latency tail is
-//! bounded by one increment — the contrast with the offline
-//! [`Coordinator::stream_vm`] pause is the subject of
-//! `benches/fig20_live_blockjobs.rs`.
+//! Each VM still has exactly one owner (its shard executor), so drivers
+//! stay single-owner like a Qemu process; what changed is that N shards
+//! serve the whole fleet instead of one thread per VM. Guest submissions
+//! flow through per-VM SQ/CQ ring pairs ([`super::ring`]); per-VM
+//! program order is preserved (the executor drains each SQ in order),
+//! and results are bit-identical to the sequential path. Fleet state is
+//! sharded too: per-shard VM tables and job ledgers, an atomic job-id
+//! counter, and per-shard stats accumulators drained once per serving
+//! pass instead of per-request atomics.
+//!
+//! Live jobs and guest requests interleave on the shard: every serving
+//! pass gives each runnable job one bounded increment, and while a shard
+//! is otherwise idle it drains jobs continuously (advancing the virtual
+//! clock across rate-limiter stalls). Guest requests always preempt the
+//! next increment, so the guest-visible latency tail is bounded by one
+//! increment — the contrast with the offline [`Coordinator::stream_vm`]
+//! pause is the subject of `benches/fig20_live_blockjobs.rs`.
 
 use super::batcher::BulkTranslator;
 use super::placement::NodeSet;
+use super::ring::{RingReply, SqEntry, VmRings};
+use super::shard::{Shard, ShardControl, ShardHandle, ShardStatsSnapshot};
 use super::stats::{VmStats, VmStatsSnapshot};
 use super::streaming::{StreamReport, StreamingOrchestrator};
 use crate::blockjob::scheduler::{JobScheduler, Reservation};
 use crate::blockjob::{
-    BlockJob, JobFence, JobKind, JobRunner, JobShared, JobStatus, LiveStampJob,
+    BlockJob, JobKind, JobRunner, JobShared, JobStatus, LiveStampJob,
     LiveStreamJob, Step,
 };
 use crate::cache::CacheConfig;
@@ -49,16 +67,23 @@ use crate::vdisk::vanilla::VanillaDriver;
 use crate::vdisk::{Driver, DriverKind};
 use anyhow::{anyhow, bail, Result};
 use std::collections::HashMap;
+use std::sync::atomic::AtomicU64;
 use std::sync::atomic::Ordering::Relaxed;
-use std::sync::mpsc::{sync_channel, Receiver, RecvTimeoutError, SyncSender, TryRecvError};
+use std::sync::mpsc::sync_channel;
 use std::sync::{Arc, Mutex};
-use std::thread::JoinHandle;
+
+pub use super::ring::{BatchOp, BatchReply};
+pub(crate) use super::shard::JobBuilder;
 
 /// Fleet-level configuration.
 pub struct CoordinatorConfig {
     pub cost: CostModel,
-    /// Per-VM request queue depth (backpressure bound).
+    /// Per-VM submission/completion ring depth (backpressure bound: a
+    /// full SQ blocks the submitter).
     pub queue_depth: usize,
+    /// Shard executors serving the fleet (VM → shard by name hash).
+    /// 0 = auto: one per available core, capped at 8.
+    pub shards: usize,
     /// Aggregate background-job bandwidth budget per storage node
     /// (bytes/second) — the admission ceiling of the [`JobScheduler`].
     pub job_budget_bps: u64,
@@ -78,6 +103,7 @@ impl Default for CoordinatorConfig {
         CoordinatorConfig {
             cost: CostModel::default(),
             queue_depth: 64,
+            shards: 0,
             job_budget_bps: 512 << 20,
             job_increment_clusters: 32,
             capacity: false,
@@ -165,55 +191,11 @@ pub struct RebalanceReport {
     pub final_ratio: f64,
 }
 
-/// One operation of a batched guest submission ([`VmClient::submit`]).
-#[derive(Debug)]
-pub enum BatchOp {
-    Read { voff: u64, len: usize },
-    Write { voff: u64, data: Vec<u8> },
-}
-
-/// Per-operation result of a batch, in submission order.
-#[derive(Debug)]
-pub enum BatchReply {
-    Read(Vec<u8>),
-    Write,
-}
-
-enum Request {
-    Read { voff: u64, len: usize, t_enq: u64, reply: SyncSender<Result<Vec<u8>>> },
-    Write { voff: u64, data: Vec<u8>, t_enq: u64, reply: SyncSender<Result<()>> },
-    /// A guest-built batch: executed in order, reads/writes grouped
-    /// through the driver's vectored entry points — one channel
-    /// round-trip for the whole set.
-    Batch { ops: Vec<BatchOp>, t_enq: u64, reply: SyncSender<Result<Vec<BatchReply>>> },
-    Flush { reply: SyncSender<Result<()>> },
-    Counters { reply: SyncSender<CounterSnapshot> },
-    /// Pause the worker and hand the chain to `f` (snapshot/stream).
-    WithChain {
-        f: Box<dyn FnOnce(&mut Chain) -> Result<String> + Send>,
-        reply: SyncSender<Result<String>>,
-    },
-    /// Begin a live block job on this VM's worker.
-    JobStart {
-        builder: JobBuilder,
-        shared: Arc<JobShared>,
-        increment_clusters: u64,
-        reply: SyncSender<Result<()>>,
-    },
-    Stop,
-}
-
-/// Constructs a job on the worker thread, where the driver's chain and
-/// fence live. Stream/stamp builders are trivial closures; the migration
-/// builder captures the node set, GC registry and target so the
-/// [`crate::migrate::MirrorJob`] can journal and create its target
-/// copies at start.
-type JobBuilder =
-    Box<dyn FnOnce(&Chain, &Arc<JobFence>) -> Result<Box<dyn BlockJob>> + Send>;
-
-struct VmHandle {
-    tx: SyncSender<Request>,
-    join: Option<JoinHandle<()>>,
+/// Registry entry for one VM: which shard owns it, plus everything the
+/// control plane may need without a round-trip to that shard.
+struct VmMeta {
+    shard: usize,
+    rings: Arc<VmRings>,
     stats: Arc<VmStats>,
     driver_kind: DriverKind,
     cache: CacheConfig,
@@ -231,18 +213,38 @@ struct JobEntry {
     capacity: Option<(Arc<StorageNode>, u64)>,
 }
 
-/// The coordinator: owns nodes, VMs, the AOT runtime, the job ledger and
-/// the GC reference registry.
+/// FNV-1a: the VM → shard map. Stateless, so any component can compute
+/// an owner from a name alone; uniform enough that fleet-scale runs
+/// spread evenly (the fig25 bench asserts shard balance indirectly via
+/// utilization).
+fn fnv1a(s: &str) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in s.as_bytes() {
+        h ^= u64::from(*b);
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// The coordinator: owns nodes, shard executors, the sharded VM/job
+/// registries, the AOT runtime and the GC reference registry.
 pub struct Coordinator {
     pub nodes: Arc<NodeSet>,
     pub clock: Arc<VirtClock>,
     pub acct: Arc<MemoryAccountant>,
     cfg: CoordinatorConfig,
     runtime: Option<RuntimeService>,
-    vms: Mutex<HashMap<String, VmHandle>>,
+    /// The executor pool. Index = shard id; a VM's owner is
+    /// `fnv1a(name) % shards.len()`.
+    shards: Vec<Shard>,
+    /// Per-shard VM tables: the only map a launch/lookup touches is the
+    /// owner shard's, so fleet-wide launches don't serialize on one lock.
+    vms: Vec<Mutex<HashMap<String, VmMeta>>>,
     scheduler: JobScheduler,
-    jobs: Mutex<Vec<JobEntry>>,
-    next_job_id: Mutex<u64>,
+    /// Per-shard job ledgers (a job lives in its VM's shard; GC sweeps
+    /// land wherever "(gc)" hashes).
+    jobs: Vec<Mutex<Vec<JobEntry>>>,
+    next_job_id: AtomicU64,
     gc: Arc<GcRegistry>,
     /// Fleet-wide content-addressed extent index (volatile accelerator;
     /// see [`crate::dedup::DedupIndex`]). Always present — drivers only
@@ -259,16 +261,40 @@ impl Coordinator {
     ) -> Arc<Coordinator> {
         let scheduler = JobScheduler::new(cfg.job_budget_bps);
         let gc = Arc::new(GcRegistry::new(Arc::clone(&nodes)));
+        let n_shards = if cfg.shards > 0 {
+            cfg.shards
+        } else {
+            std::thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(4)
+                .clamp(1, 8)
+        };
+        let scheds: Vec<_> = nodes
+            .nodes()
+            .iter()
+            .map(|n| Arc::clone(n.scheduler()))
+            .collect();
+        let shards = (0..n_shards)
+            .map(|i| {
+                Shard::spawn(
+                    i,
+                    Arc::clone(&clock),
+                    Arc::clone(&gc),
+                    scheds.clone(),
+                )
+            })
+            .collect();
         Arc::new(Coordinator {
             nodes,
             clock,
             acct: MemoryAccountant::new(),
             cfg,
             runtime,
-            vms: Mutex::new(HashMap::new()),
+            shards,
+            vms: (0..n_shards).map(|_| Mutex::new(HashMap::new())).collect(),
             scheduler,
-            jobs: Mutex::new(Vec::new()),
-            next_job_id: Mutex::new(0),
+            jobs: (0..n_shards).map(|_| Mutex::new(Vec::new())).collect(),
+            next_job_id: AtomicU64::new(0),
             gc,
             dedup: Arc::new(DedupIndex::new()),
         })
@@ -306,6 +332,40 @@ impl Coordinator {
 
     pub fn streaming(&self) -> StreamingOrchestrator {
         StreamingOrchestrator::new(self.runtime.clone())
+    }
+
+    /// Which shard owns (or would own) the named VM.
+    fn shard_of(&self, name: &str) -> usize {
+        (fnv1a(name) % self.shards.len() as u64) as usize
+    }
+
+    /// Read a field of one VM's registry entry under its shard's lock.
+    fn meta<T>(
+        &self,
+        name: &str,
+        f: impl FnOnce(&VmMeta) -> T,
+    ) -> Result<T> {
+        let map = lock_unpoisoned(&self.vms[self.shard_of(name)]);
+        map.get(name).map(f).ok_or_else(|| anyhow!("no vm '{name}'"))
+    }
+
+    /// Executor-pool observability: per-shard VM count, live SQ
+    /// occupancy, served submissions, passes and park wakeups (the
+    /// `sqemu node status` shard table, `sqemu serve` ring stats).
+    pub fn shard_stats(&self) -> Vec<ShardStatsSnapshot> {
+        self.shards
+            .iter()
+            .map(|s| {
+                let mut snap = s.stats.snapshot(s.index);
+                // occupancy from the registry rings is live; the
+                // executor's own copy refreshes only at pass end
+                let map = lock_unpoisoned(&self.vms[s.index]);
+                snap.vms = map.len() as u64;
+                snap.queued =
+                    map.values().map(|m| m.rings.sq_len() as u64).sum();
+                snap
+            })
+            .collect()
     }
 
     fn build_driver(
@@ -353,15 +413,17 @@ impl Coordinator {
         driver
     }
 
-    /// Launch a VM: open/generate its chain and start its worker thread.
+    /// Launch a VM: open/generate its chain, hand the driver to the
+    /// owning shard executor, and register the rings.
     ///
-    /// The fleet map is NOT held while the chain is opened or generated:
+    /// The registry is NOT held while the chain is opened or generated:
     /// chain construction is heavy and fallible, and holding the map
-    /// across it both serialized launches and (worse) poisoned the whole
-    /// fleet if construction panicked — one bad launch killed
-    /// stats/list/launch for every other VM.
+    /// across it both serialized launches and (worse) poisoned a whole
+    /// shard's table if construction panicked — one bad launch killed
+    /// stats/list/launch for every sibling VM.
     pub fn launch_vm(self: &Arc<Self>, name: &str, cfg: VmConfig) -> Result<VmClient> {
-        if lock_unpoisoned(&self.vms).contains_key(name) {
+        let shard = self.shard_of(name);
+        if lock_unpoisoned(&self.vms[shard]).contains_key(name) {
             bail!("vm '{name}' already running");
         }
         let (chain, data_mode) = match &cfg.chain {
@@ -411,79 +473,96 @@ impl Coordinator {
                 spec.data_mode,
             ),
         };
-        let mut vms = lock_unpoisoned(&self.vms);
-        if vms.contains_key(name) {
-            bail!("vm '{name}' already running");
-        }
-        // the chain's files are now referenced by this VM's chain (GC
-        // refcounts; shared bases gain one reference per chain)
-        self.gc.sync_chain(name, chain.file_names());
-        let driver = self.build_driver(chain, &cfg);
         let stats = Arc::new(VmStats::default());
-        let (tx, rx) = sync_channel::<Request>(self.cfg.queue_depth);
-        let worker_stats = Arc::clone(&stats);
-        let worker_clock = Arc::clone(&self.clock);
-        let worker_gc = Arc::clone(&self.gc);
-        let vm_name = name.to_string();
-        let join = std::thread::Builder::new()
-            .name(format!("vm-{name}"))
-            .spawn(move || {
-                // contain panics to this VM: the worker dies (its clients
-                // see "vm worker gone"), the fleet does not. The shared
-                // locks it might have held recover via lock_unpoisoned.
-                let panic_stats = Arc::clone(&worker_stats);
-                let caught = std::panic::catch_unwind(std::panic::AssertUnwindSafe(
-                    move || {
-                        worker_loop(
-                            vm_name,
-                            driver,
-                            rx,
-                            worker_stats,
-                            worker_clock,
-                            worker_gc,
-                        )
-                    },
-                ));
-                if caught.is_err() {
-                    panic_stats.worker_panics.fetch_add(1, Relaxed);
-                }
-            })
-            .expect("spawn vm worker");
-        vms.insert(
-            name.to_string(),
-            VmHandle {
-                tx: tx.clone(),
-                join: Some(join),
-                stats,
-                driver_kind: cfg.driver,
-                cache: cfg.cache,
-                data_mode,
-            },
+        let rings = VmRings::new(
+            self.cfg.queue_depth,
+            Arc::clone(&self.shards[shard].notify),
         );
-        Ok(VmClient { tx, clock: Arc::clone(&self.clock) })
+        {
+            let mut vms = lock_unpoisoned(&self.vms[shard]);
+            if vms.contains_key(name) {
+                bail!("vm '{name}' already running");
+            }
+            // the chain's files are now referenced by this VM's chain (GC
+            // refcounts; shared bases gain one reference per chain)
+            self.gc.sync_chain(name, chain.file_names());
+            vms.insert(
+                name.to_string(),
+                VmMeta {
+                    shard,
+                    rings: Arc::clone(&rings),
+                    stats: Arc::clone(&stats),
+                    driver_kind: cfg.driver,
+                    cache: cfg.cache,
+                    data_mode,
+                },
+            );
+        }
+        let driver = self.build_driver(chain, &cfg);
+        let (reply, rx) = sync_channel(1);
+        let adopted = self
+            .shards[shard]
+            .send(ShardControl::AddVm {
+                name: name.to_string(),
+                driver,
+                rings: Arc::clone(&rings),
+                stats,
+                reply,
+            })
+            .and_then(|()| {
+                rx.recv().map_err(|_| anyhow!("shard executor gone"))?
+            });
+        if let Err(e) = adopted {
+            lock_unpoisoned(&self.vms[shard]).remove(name);
+            self.gc.drop_chain(name);
+            return Err(e);
+        }
+        Ok(VmClient {
+            vm: name.to_string(),
+            rings,
+            clock: Arc::clone(&self.clock),
+            ctl: self.shards[shard].handle(),
+        })
     }
 
     /// Get a fresh client handle for a running VM.
     pub fn client(&self, name: &str) -> Result<VmClient> {
-        let vms = lock_unpoisoned(&self.vms);
-        let h = vms.get(name).ok_or_else(|| anyhow!("no vm '{name}'"))?;
-        Ok(VmClient { tx: h.tx.clone(), clock: Arc::clone(&self.clock) })
+        let (shard, rings) =
+            self.meta(name, |m| (m.shard, Arc::clone(&m.rings)))?;
+        Ok(VmClient {
+            vm: name.to_string(),
+            rings,
+            clock: Arc::clone(&self.clock),
+            ctl: self.shards[shard].handle(),
+        })
     }
 
+    /// A snapshot of one VM's service stats. Round-trips a stats barrier
+    /// through the owning shard first, so every completion the caller
+    /// has already observed is counted (per-pass delta flushing would
+    /// otherwise make the freshest requests invisible for one pass).
     pub fn vm_stats(&self, name: &str) -> Result<VmStatsSnapshot> {
-        let vms = lock_unpoisoned(&self.vms);
-        let h = vms.get(name).ok_or_else(|| anyhow!("no vm '{name}'"))?;
-        Ok(h.stats.snapshot())
+        let (shard, stats) =
+            self.meta(name, |m| (m.shard, Arc::clone(&m.stats)))?;
+        let (reply, rx) = sync_channel(1);
+        if self.shards[shard].send(ShardControl::SyncStats { reply }).is_ok() {
+            let _ = rx.recv();
+        }
+        Ok(stats.snapshot())
     }
 
     pub fn vm_names(&self) -> Vec<String> {
-        let mut v: Vec<String> = lock_unpoisoned(&self.vms).keys().cloned().collect();
+        let mut v: Vec<String> = self
+            .vms
+            .iter()
+            .flat_map(|t| lock_unpoisoned(t).keys().cloned().collect::<Vec<_>>())
+            .collect();
         v.sort();
         v
     }
 
     /// The file names of a running VM's chain, base first (pauses the
-    /// worker for the read).
+    /// VM on its shard for the read).
     pub fn chain_files(&self, name: &str) -> Result<Vec<String>> {
         let client = self.client(name)?;
         let joined =
@@ -501,13 +580,10 @@ impl Coordinator {
     }
 
     /// Snapshot a running VM's disk: pause (drain), snapshot, swap the
-    /// worker onto the lengthened chain.
+    /// driver onto the lengthened chain.
     pub fn snapshot_vm(self: &Arc<Self>, name: &str, new_file: &str) -> Result<u64> {
-        let (kind, stats) = {
-            let vms = lock_unpoisoned(&self.vms);
-            let h = vms.get(name).ok_or_else(|| anyhow!("no vm '{name}'"))?;
-            (h.driver_kind, Arc::clone(&h.stats))
-        };
+        let (kind, stats) =
+            self.meta(name, |m| (m.driver_kind, Arc::clone(&m.stats)))?;
         let client = self.client(name)?;
         let nodes = Arc::clone(&self.nodes);
         let new_file = new_file.to_string();
@@ -536,11 +612,7 @@ impl Coordinator {
     /// Stream-merge a window of a running VM's chain (paused — the
     /// offline baseline; [`Coordinator::start_job`] is the live path).
     pub fn stream_vm(self: &Arc<Self>, name: &str, from: u16, to: u16) -> Result<StreamReport> {
-        let stats = {
-            let vms = lock_unpoisoned(&self.vms);
-            let h = vms.get(name).ok_or_else(|| anyhow!("no vm '{name}'"))?;
-            Arc::clone(&h.stats)
-        };
+        let stats = self.meta(name, |m| Arc::clone(&m.stats))?;
         let orch = self.streaming();
         let client = self.client(name)?;
         let t0 = self.clock.now();
@@ -554,7 +626,7 @@ impl Coordinator {
         }))??;
         stats.streams.fetch_add(1, Relaxed);
         // measure the disruption window before the GC bookkeeping below —
-        // the registry sync pauses the worker again and must not inflate
+        // the registry sync pauses the VM again and must not inflate
         // the merge cost the benches compare live jobs against
         let merge_ns = self.clock.now() - t0;
         // the merged window's files just left the chain: hand them to GC
@@ -609,12 +681,12 @@ impl Coordinator {
         if spec.start_paused {
             shared.pause();
         }
-        if let Err(e) = self.send_job_start(&client, builder, &shared) {
+        if let Err(e) = self.send_job_start(vm, builder, &shared) {
             self.scheduler.release(&reservation);
             return Err(e);
         }
         self.note_job_started(vm);
-        lock_unpoisoned(&self.jobs).push(JobEntry {
+        self.push_job(JobEntry {
             vm: vm.to_string(),
             shared: Arc::clone(&shared),
             reservations: vec![reservation],
@@ -624,21 +696,25 @@ impl Coordinator {
     }
 
     fn next_job_id(&self) -> String {
-        let mut n = lock_unpoisoned(&self.next_job_id);
-        *n += 1;
-        format!("job-{}", *n)
+        format!("job-{}", self.next_job_id.fetch_add(1, Relaxed) + 1)
+    }
+
+    fn push_job(&self, entry: JobEntry) {
+        let shard = self.shard_of(&entry.vm);
+        lock_unpoisoned(&self.jobs[shard]).push(entry);
     }
 
     fn send_job_start(
         &self,
-        client: &VmClient,
+        vm: &str,
         builder: JobBuilder,
         shared: &Arc<JobShared>,
     ) -> Result<()> {
+        let shard = self.meta(vm, |m| m.shard)?;
         let (reply, rx) = sync_channel(1);
-        client
-            .tx
-            .send(Request::JobStart {
+        self.shards[shard]
+            .send(ShardControl::JobStart {
+                vm: vm.to_string(),
                 builder,
                 shared: Arc::clone(shared),
                 increment_clusters: self.cfg.job_increment_clusters,
@@ -649,9 +725,8 @@ impl Coordinator {
     }
 
     fn note_job_started(&self, vm: &str) {
-        let vms = lock_unpoisoned(&self.vms);
-        if let Some(h) = vms.get(vm) {
-            h.stats.jobs_started.fetch_add(1, Relaxed);
+        if let Ok(stats) = self.meta(vm, |m| Arc::clone(&m.stats)) {
+            stats.jobs_started.fetch_add(1, Relaxed);
         }
     }
 
@@ -674,7 +749,6 @@ impl Coordinator {
         rate_bps: u64,
     ) -> Result<Arc<JobShared>> {
         self.reap_jobs();
-        let client = self.client(vm)?;
         let target_node = self
             .nodes
             .node_named(target)
@@ -728,7 +802,7 @@ impl Coordinator {
                 &vm_id,
             )?) as Box<dyn BlockJob>)
         });
-        if let Err(e) = self.send_job_start(&client, builder, &shared) {
+        if let Err(e) = self.send_job_start(vm, builder, &shared) {
             for r in &reservations {
                 self.scheduler.release(r);
             }
@@ -736,7 +810,7 @@ impl Coordinator {
             return Err(e);
         }
         self.note_job_started(vm);
-        lock_unpoisoned(&self.jobs).push(JobEntry {
+        self.push_job(JobEntry {
             vm: vm.to_string(),
             shared: Arc::clone(&shared),
             reservations,
@@ -745,8 +819,8 @@ impl Coordinator {
         Ok(shared)
     }
 
-    /// Block until `shared` is terminal (the worker drains the job while
-    /// its queue is idle), release its reservations, and return the
+    /// Block until `shared` is terminal (the owning shard drains the job
+    /// while its VMs are idle), release its reservations, and return the
     /// final status.
     pub fn wait_job(&self, shared: &Arc<JobShared>) -> JobStatus {
         while !shared.state().is_terminal() {
@@ -832,57 +906,56 @@ impl Coordinator {
         Ok(RebalanceReport { plan, executed, final_ratio })
     }
 
-    /// All jobs ever started (newest last), with live status.
+    /// All jobs ever started (oldest first, by job id), with live status.
     pub fn list_jobs(&self) -> Vec<(String, JobStatus)> {
         self.reap_jobs();
-        self.jobs
-            .lock()
-            .unwrap()
-            .iter()
-            .map(|e| (e.vm.clone(), e.shared.status()))
-            .collect()
+        let mut all: Vec<(u64, String, JobStatus)> = Vec::new();
+        for table in &self.jobs {
+            for e in lock_unpoisoned(table).iter() {
+                let seq = e
+                    .shared
+                    .id
+                    .strip_prefix("job-")
+                    .and_then(|s| s.parse().ok())
+                    .unwrap_or(u64::MAX);
+                all.push((seq, e.vm.clone(), e.shared.status()));
+            }
+        }
+        // ledgers are sharded: restore fleet-wide start order by id
+        all.sort_by_key(|(seq, ..)| *seq);
+        all.into_iter().map(|(_, vm, st)| (vm, st)).collect()
+    }
+
+    fn find_job(&self, id: &str) -> Result<Arc<JobShared>> {
+        for table in &self.jobs {
+            if let Some(e) =
+                lock_unpoisoned(table).iter().find(|e| e.shared.id == id)
+            {
+                return Ok(Arc::clone(&e.shared));
+            }
+        }
+        Err(anyhow!("no job '{id}'"))
     }
 
     /// Status of one job by id.
     pub fn job_status(&self, id: &str) -> Result<JobStatus> {
         self.reap_jobs();
-        self.jobs
-            .lock()
-            .unwrap()
-            .iter()
-            .find(|e| e.shared.id == id)
-            .map(|e| e.shared.status())
-            .ok_or_else(|| anyhow!("no job '{id}'"))
+        Ok(self.find_job(id)?.status())
     }
 
     /// Request cooperative cancellation of a job.
     pub fn cancel_job(&self, id: &str) -> Result<()> {
-        let jobs = lock_unpoisoned(&self.jobs);
-        let e = jobs
-            .iter()
-            .find(|e| e.shared.id == id)
-            .ok_or_else(|| anyhow!("no job '{id}'"))?;
-        e.shared.cancel();
+        self.find_job(id)?.cancel();
         Ok(())
     }
 
     pub fn pause_job(&self, id: &str) -> Result<()> {
-        let jobs = lock_unpoisoned(&self.jobs);
-        let e = jobs
-            .iter()
-            .find(|e| e.shared.id == id)
-            .ok_or_else(|| anyhow!("no job '{id}'"))?;
-        e.shared.pause();
+        self.find_job(id)?.pause();
         Ok(())
     }
 
     pub fn resume_job(&self, id: &str) -> Result<()> {
-        let jobs = lock_unpoisoned(&self.jobs);
-        let e = jobs
-            .iter()
-            .find(|e| e.shared.id == id)
-            .ok_or_else(|| anyhow!("no job '{id}'"))?;
-        e.shared.resume();
+        self.find_job(id)?.resume();
         Ok(())
     }
 
@@ -982,13 +1055,8 @@ impl Coordinator {
                 }
             }
         }
-        let id = {
-            let mut n = lock_unpoisoned(&self.next_job_id);
-            *n += 1;
-            format!("job-{}", *n)
-        };
-        let shared = Arc::new(JobShared::new(&id, JobKind::Gc, rate_bps));
-        lock_unpoisoned(&self.jobs).push(JobEntry {
+        let shared = Arc::new(JobShared::new(&self.next_job_id(), JobKind::Gc, rate_bps));
+        self.push_job(JobEntry {
             vm: "(gc)".to_string(),
             shared: Arc::clone(&shared),
             reservations: Vec::new(),
@@ -1012,7 +1080,7 @@ impl Coordinator {
                     Step::Finished => break,
                     Step::Starved { ready_at } => {
                         // advance the shared clock in bounded quanta, like
-                        // the worker idle loop: VMs serving guests
+                        // the shard idle loop: VMs serving guests
                         // concurrently must not see one giant time jump
                         // attributed to their in-flight requests
                         const GC_IDLE_QUANTUM_NS: u64 = 100_000_000;
@@ -1040,14 +1108,11 @@ impl Coordinator {
         // dropped (decommissioned chains have no VM entry left — their
         // share stays fleet-level in the registry totals)
         let by_origin = self.gc.drain_reclaimed_by();
-        {
-            let vms = lock_unpoisoned(&self.vms);
-            for (origin, bytes) in by_origin {
-                if let Some(h) = vms.get(&origin) {
-                    h.stats.reclaimed_bytes.fetch_add(bytes, Relaxed);
-                    h.stats.gc_runs.fetch_add(1, Relaxed);
-                }
-            }
+        for (origin, bytes) in by_origin {
+            let _ = self.meta(&origin, |m| {
+                m.stats.reclaimed_bytes.fetch_add(bytes, Relaxed);
+                m.stats.gc_runs.fetch_add(1, Relaxed);
+            });
         }
         if let Some(err) = t.error {
             bail!("gc sweep failed: {err}");
@@ -1070,10 +1135,10 @@ impl Coordinator {
         })
     }
 
-    /// Decommission a VM *and its chain*: stop the worker and release
-    /// every file reference the chain held. Files referenced by no other
-    /// chain are condemned for the next GC sweep — the snapshot-deletion
-    /// path; shared bases survive as long as any other chain uses them.
+    /// Decommission a VM *and its chain*: stop it and release every file
+    /// reference the chain held. Files referenced by no other chain are
+    /// condemned for the next GC sweep — the snapshot-deletion path;
+    /// shared bases survive as long as any other chain uses them.
     pub fn decommission_vm(&self, name: &str) -> Result<()> {
         self.stop_vm(name)?;
         self.gc.drop_chain(name);
@@ -1179,33 +1244,43 @@ impl Coordinator {
     /// usage on the recipient by now, so its capacity reservation is
     /// released either way — the files themselves keep the space.
     fn reap_jobs(&self) {
-        let mut jobs = lock_unpoisoned(&self.jobs);
-        for e in jobs.iter_mut() {
-            if e.shared.state().is_terminal() {
-                for r in e.reservations.drain(..) {
-                    self.scheduler.release(&r);
-                }
-                if let Some((node, bytes)) = e.capacity.take() {
-                    node.release(bytes);
+        for table in &self.jobs {
+            let mut jobs = lock_unpoisoned(table);
+            for e in jobs.iter_mut() {
+                if e.shared.state().is_terminal() {
+                    for r in e.reservations.drain(..) {
+                        self.scheduler.release(&r);
+                    }
+                    if let Some((node, bytes)) = e.capacity.take() {
+                        node.release(bytes);
+                    }
                 }
             }
         }
     }
 
-    /// Stop one VM (flushes its caches; cancels any running job).
+    /// Stop one VM (serves what its clients already queued, flushes its
+    /// caches, cancels any running job).
     pub fn stop_vm(&self, name: &str) -> Result<()> {
-        let mut vms = lock_unpoisoned(&self.vms);
-        let mut h = vms.remove(name).ok_or_else(|| anyhow!("no vm '{name}'"))?;
-        let _ = h.tx.send(Request::Stop);
-        if let Some(j) = h.join.take() {
-            let _ = j.join();
+        let shard = self.shard_of(name);
+        let meta = lock_unpoisoned(&self.vms[shard])
+            .remove(name)
+            .ok_or_else(|| anyhow!("no vm '{name}'"))?;
+        let (reply, rx) = sync_channel(1);
+        if self
+            .shards[meta.shard]
+            .send(ShardControl::RemoveVm { name: name.to_string(), reply })
+            .is_ok()
+        {
+            // wait for the drain + flush; the shard replies even for a
+            // VM it already lost to a panic
+            let _ = rx.recv();
         }
-        drop(vms);
         self.reap_jobs();
         Ok(())
     }
 
-    /// Stop the whole fleet.
+    /// Stop the whole fleet (the shard executors stay up for relaunch).
     pub fn shutdown(&self) {
         let names = self.vm_names();
         for n in names {
@@ -1214,66 +1289,120 @@ impl Coordinator {
     }
 
     pub fn data_mode_of(&self, name: &str) -> Result<DataMode> {
-        let vms = lock_unpoisoned(&self.vms);
-        Ok(vms
-            .get(name)
-            .ok_or_else(|| anyhow!("no vm '{name}'"))?
-            .data_mode)
+        self.meta(name, |m| m.data_mode)
     }
 
     pub fn cache_of(&self, name: &str) -> Result<CacheConfig> {
-        let vms = lock_unpoisoned(&self.vms);
-        Ok(vms.get(name).ok_or_else(|| anyhow!("no vm '{name}'"))?.cache)
+        self.meta(name, |m| m.cache)
     }
 }
 
 impl Drop for Coordinator {
     fn drop(&mut self) {
-        let names: Vec<String> = lock_unpoisoned(&self.vms).keys().cloned().collect();
-        for n in names {
-            let _ = self.stop_vm(&n);
-        }
+        self.shutdown();
+        // the shards Vec drops next: each executor gets a Shutdown and
+        // is joined (Shard::drop)
     }
 }
 
-/// Client handle to a running VM's request queue.
+/// Client handle to a running VM's submission/completion rings.
+///
+/// The sync API (`read`/`write`/`flush`/...) submits one entry and waits
+/// for its completion — same contract as the old channel round-trip. The
+/// async API (`submit_read`/`submit_write`/`submit_flush`/
+/// `submit_batch` + `complete`/`try_complete`) decouples the two halves:
+/// a client can keep many operations in flight on one VM and reap
+/// completions in any order, while the VM executes them in submission
+/// order (per-VM program order is the ring's contract).
 #[derive(Clone)]
 pub struct VmClient {
-    tx: SyncSender<Request>,
+    vm: String,
+    rings: Arc<VmRings>,
     clock: Arc<VirtClock>,
+    ctl: ShardHandle,
 }
 
 impl VmClient {
+    // ----------------------------------------------------- async half
+
+    /// Queue a read; returns its completion tag. Blocks only while the
+    /// SQ is full (backpressure). The buffer is allocated by the
+    /// executor and arrives with the completion.
+    pub fn submit_read(&self, voff: u64, len: usize) -> Result<u64> {
+        let tag = self.rings.next_tag();
+        self.rings
+            .submit(SqEntry::Read { tag, voff, len, t_enq: self.clock.now() })?;
+        Ok(tag)
+    }
+
+    /// Queue a write; returns its completion tag.
+    pub fn submit_write(&self, voff: u64, data: Vec<u8>) -> Result<u64> {
+        let tag = self.rings.next_tag();
+        self.rings
+            .submit(SqEntry::Write { tag, voff, data, t_enq: self.clock.now() })?;
+        Ok(tag)
+    }
+
+    /// Queue a batch; returns its completion tag.
+    pub fn submit_batch(&self, ops: Vec<BatchOp>) -> Result<u64> {
+        let tag = self.rings.next_tag();
+        self.rings
+            .submit(SqEntry::Batch { tag, ops, t_enq: self.clock.now() })?;
+        Ok(tag)
+    }
+
+    /// Queue a flush barrier; completes only after everything submitted
+    /// before it on this VM has completed.
+    pub fn submit_flush(&self) -> Result<u64> {
+        let tag = self.rings.next_tag();
+        self.rings
+            .submit(SqEntry::Flush { tag, t_enq: self.clock.now() })?;
+        Ok(tag)
+    }
+
+    /// Block until the completion for `tag` arrives.
+    pub fn complete(&self, tag: u64) -> Result<RingReply> {
+        self.rings.wait(tag)
+    }
+
+    /// Reap the completion for `tag` if it has arrived (`Ok(None)` =
+    /// still in flight).
+    pub fn try_complete(&self, tag: u64) -> Result<Option<RingReply>> {
+        self.rings.try_wait(tag)
+    }
+
+    // ------------------------------------------------------ sync half
+
     pub fn read(&self, voff: u64, len: usize) -> Result<Vec<u8>> {
-        let (reply, rx) = sync_channel(1);
-        self.tx
-            .send(Request::Read { voff, len, t_enq: self.clock.now(), reply })
-            .map_err(|_| anyhow!("vm worker gone"))?;
-        rx.recv().map_err(|_| anyhow!("vm worker gone"))?
+        let tag = self.submit_read(voff, len)?;
+        match self.complete(tag)? {
+            RingReply::Read(r) => r,
+            other => bail!("mismatched completion for read: {other:?}"),
+        }
     }
 
     pub fn write(&self, voff: u64, data: Vec<u8>) -> Result<()> {
-        let (reply, rx) = sync_channel(1);
-        self.tx
-            .send(Request::Write { voff, data, t_enq: self.clock.now(), reply })
-            .map_err(|_| anyhow!("vm worker gone"))?;
-        rx.recv().map_err(|_| anyhow!("vm worker gone"))?
+        let tag = self.submit_write(voff, data)?;
+        match self.complete(tag)? {
+            RingReply::Write(r) => r,
+            other => bail!("mismatched completion for write: {other:?}"),
+        }
     }
 
-    /// Submit a batch of operations in ONE channel round-trip. Ops
-    /// execute in submission order on the worker; runs of consecutive
+    /// Submit a batch of operations as ONE ring entry. Ops execute in
+    /// submission order on the owning shard; runs of consecutive
     /// reads/writes go through the driver's vectored path, so adjacent
     /// requests amortize slice resolution and merge device reads.
     pub fn submit(&self, ops: Vec<BatchOp>) -> Result<Vec<BatchReply>> {
-        let (reply, rx) = sync_channel(1);
-        self.tx
-            .send(Request::Batch { ops, t_enq: self.clock.now(), reply })
-            .map_err(|_| anyhow!("vm worker gone"))?;
-        rx.recv().map_err(|_| anyhow!("vm worker gone"))?
+        let tag = self.submit_batch(ops)?;
+        match self.complete(tag)? {
+            RingReply::Batch(r) => r,
+            other => bail!("mismatched completion for batch: {other:?}"),
+        }
     }
 
     /// Vectored read: every `(voff, len)` request answered with its own
-    /// buffer, one round-trip for the lot.
+    /// buffer, one ring entry for the lot.
     pub fn readv(&self, reqs: &[(u64, usize)]) -> Result<Vec<Vec<u8>>> {
         let ops = reqs
             .iter()
@@ -1289,7 +1418,7 @@ impl VmClient {
             .collect())
     }
 
-    /// Vectored write: all `(voff, data)` pairs in one round-trip.
+    /// Vectored write: all `(voff, data)` pairs in one ring entry.
     pub fn writev(&self, reqs: Vec<(u64, Vec<u8>)>) -> Result<()> {
         let ops = reqs
             .into_iter()
@@ -1300,17 +1429,22 @@ impl VmClient {
     }
 
     pub fn flush(&self) -> Result<()> {
-        let (reply, rx) = sync_channel(1);
-        self.tx
-            .send(Request::Flush { reply })
-            .map_err(|_| anyhow!("vm worker gone"))?;
-        rx.recv().map_err(|_| anyhow!("vm worker gone"))?
+        let tag = self.submit_flush()?;
+        match self.complete(tag)? {
+            RingReply::Flush(r) => r,
+            other => bail!("mismatched completion for flush: {other:?}"),
+        }
+    }
+
+    /// Live SQ occupancy and capacity of this VM's submission ring.
+    pub fn ring_occupancy(&self) -> (usize, usize) {
+        (self.rings.sq_len(), self.rings.sq_capacity())
     }
 
     pub fn counters(&self) -> Result<CounterSnapshot> {
         let (reply, rx) = sync_channel(1);
-        self.tx
-            .send(Request::Counters { reply })
+        self.ctl
+            .send(ShardControl::Counters { vm: self.vm.clone(), reply })
             .map_err(|_| anyhow!("vm worker gone"))?;
         rx.recv().map_err(|_| anyhow!("vm worker gone"))
     }
@@ -1320,461 +1454,9 @@ impl VmClient {
         f: Box<dyn FnOnce(&mut Chain) -> Result<String> + Send>,
     ) -> Result<Result<String>> {
         let (reply, rx) = sync_channel(1);
-        self.tx
-            .send(Request::WithChain { f, reply })
+        self.ctl
+            .send(ShardControl::WithChain { vm: self.vm.clone(), f, reply })
             .map_err(|_| anyhow!("vm worker gone"))?;
         Ok(rx.recv().map_err(|_| anyhow!("vm worker gone"))?)
     }
-}
-
-/// The worker: single owner of the VM's driver and (at most one) live
-/// job runner. Chain-level operations (snapshot/stream) tear the driver
-/// down, run on the bare chain, and rebuild it; they are refused while a
-/// job is running (conflicting chain rewrites). Job increments run after
-/// each guest request and continuously while the queue is idle.
-fn worker_loop(
-    name: String,
-    mut driver: Box<dyn Driver + Send>,
-    rx: Receiver<Request>,
-    stats: Arc<VmStats>,
-    clock: Arc<VirtClock>,
-    gc: Arc<GcRegistry>,
-) {
-    let mut runner: Option<JobRunner> = None;
-    loop {
-        // poll (don't block) while a runnable job wants the CPU
-        let req = if runner.as_ref().map_or(false, |r| r.wants_cpu()) {
-            match rx.try_recv() {
-                Ok(r) => Some(r),
-                Err(TryRecvError::Empty) => None,
-                Err(TryRecvError::Disconnected) => break,
-            }
-        } else if runner.is_some() {
-            // paused job: wake periodically to notice resume/cancel
-            match rx.recv_timeout(std::time::Duration::from_millis(2)) {
-                Ok(r) => Some(r),
-                Err(RecvTimeoutError::Timeout) => None,
-                Err(RecvTimeoutError::Disconnected) => break,
-            }
-        } else {
-            match rx.recv() {
-                Ok(r) => Some(r),
-                Err(_) => break,
-            }
-        };
-        let Some(req) = req else {
-            // idle: drain the job, advancing virtual time over stalls
-            let step = runner
-                .as_mut()
-                .map(|r| r.step(driver.as_mut(), clock.now()));
-            match step {
-                Some(Step::Starved { ready_at }) => {
-                    // advance idle virtual time in bounded quanta: a
-                    // request enqueued concurrently is charged at most
-                    // one quantum of the stall, not all of it
-                    const IDLE_QUANTUM_NS: u64 = 100_000;
-                    let now = clock.now();
-                    if ready_at > now {
-                        clock.advance((ready_at - now).min(IDLE_QUANTUM_NS));
-                    }
-                }
-                Some(Step::Finished) => {
-                    finish_job(&name, driver.as_ref(), &mut runner, &stats, &gc)
-                }
-                _ => {}
-            }
-            continue;
-        };
-        let stop = match req {
-            req @ (Request::Read { .. } | Request::Write { .. } | Request::Batch { .. }) => {
-                // opportunistically drain queued guest I/O behind this
-                // request into one burst: their channel round-trips are
-                // already paid, and the driver's vectored path amortizes
-                // slice resolution and merges contiguous device reads
-                let mut burst = vec![req];
-                let mut tail: Option<Request> = None;
-                while burst.len() < BURST_DRAIN_MAX {
-                    match rx.try_recv() {
-                        Ok(
-                            q @ (Request::Read { .. }
-                            | Request::Write { .. }
-                            | Request::Batch { .. }),
-                        ) => burst.push(q),
-                        Ok(other) => {
-                            tail = Some(other);
-                            break;
-                        }
-                        Err(_) => break,
-                    }
-                }
-                serve_guest_burst(driver.as_mut(), burst, &stats, &clock);
-                match tail {
-                    Some(t) => handle_control(t, &mut driver, &mut runner, &stats, &clock),
-                    None => false,
-                }
-            }
-            other => handle_control(other, &mut driver, &mut runner, &stats, &clock),
-        };
-        if stop {
-            let _ = driver.flush();
-            break;
-        }
-        // one bounded job step rides behind every request (no clock
-        // advance here: a starved job waits for idle time)
-        let step = match runner.as_mut() {
-            Some(r) if r.wants_cpu() => Some(r.step(driver.as_mut(), clock.now())),
-            _ => None,
-        };
-        if let Some(Step::Finished) = step {
-            finish_job(&name, driver.as_ref(), &mut runner, &stats, &gc);
-        }
-    }
-}
-
-/// How many queued guest requests the worker drains into one vectored
-/// burst behind the first (their channel latency is already paid; the
-/// cap bounds how long a control request can wait behind guest I/O).
-const BURST_DRAIN_MAX: usize = 32;
-
-/// Handle one non-guest-I/O request on the worker. Returns true when the
-/// worker must stop.
-fn handle_control(
-    req: Request,
-    driver: &mut Box<dyn Driver + Send>,
-    runner: &mut Option<JobRunner>,
-    stats: &Arc<VmStats>,
-    clock: &Arc<VirtClock>,
-) -> bool {
-    match req {
-        req @ (Request::Read { .. } | Request::Write { .. } | Request::Batch { .. }) => {
-            // defensive: guest I/O normally arrives through the burst path
-            serve_guest_burst(driver.as_mut(), vec![req], stats, clock);
-            false
-        }
-        Request::Flush { reply } => {
-            let _ = reply.send(driver.flush());
-            false
-        }
-        Request::Counters { reply } => {
-            let _ = reply.send(driver.counters());
-            false
-        }
-        Request::WithChain { f, reply } => {
-            let r = if runner.is_some() {
-                Err(anyhow!(
-                    "chain operation refused: a live block job is running"
-                ))
-            } else {
-                (|| -> Result<String> {
-                    driver.flush()?;
-                    let out = f(driver.chain_mut())?;
-                    driver.reopen()?;
-                    Ok(out)
-                })()
-            };
-            let _ = reply.send(r);
-            false
-        }
-        Request::JobStart { builder, shared, increment_clusters, reply } => {
-            let r = if runner.is_some() {
-                Err(anyhow!("a block job is already running on this vm"))
-            } else {
-                (|| {
-                    let fence = Arc::clone(driver.fence());
-                    // flush first: a migration mirror reads the files
-                    // underneath the driver, so cached dirty state must
-                    // be on "disk" before the bulk copy starts
-                    driver.flush()?;
-                    let job = builder(driver.chain(), &fence)?;
-                    let burst = increment_clusters
-                        .saturating_mul(driver.chain().active().geom().cluster_size());
-                    *runner = Some(JobRunner::new(
-                        job,
-                        shared,
-                        fence,
-                        increment_clusters,
-                        burst,
-                        clock.now(),
-                    ));
-                    Ok(())
-                })()
-            };
-            let _ = reply.send(r);
-            false
-        }
-        Request::Stop => {
-            if let Some(r) = runner.take() {
-                // the worker is going away: a running job cannot
-                // make further progress — record it as cancelled
-                r.shared().cancel();
-                stats.jobs_cancelled.fetch_add(1, Relaxed);
-                r.shared().set_state(crate::blockjob::JobState::Cancelled);
-                driver.fence().end();
-            }
-            true
-        }
-    }
-}
-
-type ReadReq = (u64, usize, u64, SyncSender<Result<Vec<u8>>>);
-type WriteReq = (u64, Vec<u8>, u64, SyncSender<Result<()>>);
-
-/// Serve a burst of guest I/O: runs of consecutive reads become one
-/// `readv`, consecutive writes one `writev`, explicit batches execute in
-/// place — each original request is replied to individually. Afterwards
-/// the driver's coalescer counters are mirrored into the VM stats.
-fn serve_guest_burst(
-    driver: &mut dyn Driver,
-    burst: Vec<Request>,
-    stats: &Arc<VmStats>,
-    clock: &Arc<VirtClock>,
-) {
-    let mut it = burst.into_iter().peekable();
-    while let Some(req) = it.next() {
-        match req {
-            Request::Read { voff, len, t_enq, reply } => {
-                let mut reads: Vec<ReadReq> = vec![(voff, len, t_enq, reply)];
-                while matches!(it.peek(), Some(Request::Read { .. })) {
-                    let Some(Request::Read { voff, len, t_enq, reply }) = it.next()
-                    else {
-                        unreachable!()
-                    };
-                    reads.push((voff, len, t_enq, reply));
-                }
-                serve_reads(driver, reads, stats, clock);
-            }
-            Request::Write { voff, data, t_enq, reply } => {
-                let mut writes: Vec<WriteReq> = vec![(voff, data, t_enq, reply)];
-                while matches!(it.peek(), Some(Request::Write { .. })) {
-                    let Some(Request::Write { voff, data, t_enq, reply }) = it.next()
-                    else {
-                        unreachable!()
-                    };
-                    writes.push((voff, data, t_enq, reply));
-                }
-                serve_writes(driver, writes, stats, clock);
-            }
-            Request::Batch { ops, t_enq, reply } => {
-                serve_batch(driver, ops, t_enq, reply, stats, clock);
-            }
-            _ => unreachable!("serve_guest_burst only receives guest I/O"),
-        }
-    }
-    let v = driver.vec_io();
-    stats.merged_ios.store(v.merged_ios, Relaxed);
-    stats.coalesced_bytes.store(v.coalesced_bytes, Relaxed);
-}
-
-fn serve_reads(
-    driver: &mut dyn Driver,
-    reads: Vec<ReadReq>,
-    stats: &Arc<VmStats>,
-    clock: &Arc<VirtClock>,
-) {
-    if reads.len() == 1 {
-        // lone request: the classic scalar path
-        let (voff, len, t_enq, reply) = reads.into_iter().next().expect("one read");
-        let mut buf = vec![0u8; len];
-        let r = driver.read(voff, &mut buf).map(|()| buf);
-        stats.reads.fetch_add(1, Relaxed);
-        stats.bytes_read.fetch_add(len as u64, Relaxed);
-        stats.record_latency(clock.now().saturating_sub(t_enq));
-        let _ = reply.send(r);
-        return;
-    }
-    let mut bufs: Vec<Vec<u8>> = reads.iter().map(|r| vec![0u8; r.1]).collect();
-    let res = {
-        let mut iovs: Vec<(u64, &mut [u8])> = reads
-            .iter()
-            .zip(bufs.iter_mut())
-            .map(|(r, b)| (r.0, b.as_mut_slice()))
-            .collect();
-        driver.readv(&mut iovs)
-    };
-    match res {
-        Ok(()) => {
-            let n = reads.len() as u64;
-            stats.reads.fetch_add(n, Relaxed);
-            stats.batched_ops.fetch_add(n, Relaxed);
-            for ((_voff, len, t_enq, reply), buf) in reads.into_iter().zip(bufs) {
-                stats.bytes_read.fetch_add(len as u64, Relaxed);
-                stats.record_latency(clock.now().saturating_sub(t_enq));
-                let _ = reply.send(Ok(buf));
-            }
-        }
-        Err(_) => {
-            // fall back to per-request scalar reads: error isolation and
-            // stats accounting stay identical to the pre-vectored path
-            // (reads have no side effects, so the retry is safe)
-            for (voff, len, t_enq, reply) in reads {
-                let mut buf = vec![0u8; len];
-                let r = driver.read(voff, &mut buf).map(|()| buf);
-                stats.reads.fetch_add(1, Relaxed);
-                stats.bytes_read.fetch_add(len as u64, Relaxed);
-                stats.record_latency(clock.now().saturating_sub(t_enq));
-                let _ = reply.send(r);
-            }
-        }
-    }
-}
-
-fn serve_writes(
-    driver: &mut dyn Driver,
-    writes: Vec<WriteReq>,
-    stats: &Arc<VmStats>,
-    clock: &Arc<VirtClock>,
-) {
-    if writes.len() == 1 {
-        let (voff, data, t_enq, reply) = writes.into_iter().next().expect("one write");
-        let n = data.len() as u64;
-        let r = driver.write(voff, &data);
-        stats.writes.fetch_add(1, Relaxed);
-        stats.bytes_written.fetch_add(n, Relaxed);
-        stats.record_latency(clock.now().saturating_sub(t_enq));
-        let _ = reply.send(r);
-        return;
-    }
-    let res = {
-        let iovs: Vec<(u64, &[u8])> =
-            writes.iter().map(|w| (w.0, w.1.as_slice())).collect();
-        driver.writev(&iovs)
-    };
-    match res {
-        Ok(()) => {
-            let n = writes.len() as u64;
-            stats.writes.fetch_add(n, Relaxed);
-            stats.batched_ops.fetch_add(n, Relaxed);
-            for (_voff, data, t_enq, reply) in writes {
-                stats.bytes_written.fetch_add(data.len() as u64, Relaxed);
-                stats.record_latency(clock.now().saturating_sub(t_enq));
-                let _ = reply.send(Ok(()));
-            }
-        }
-        Err(_) => {
-            // fall back to per-request scalar writes (idempotent: the
-            // vectored attempt is itself a scalar loop, so re-applying
-            // the prefix writes the same bytes to the same clusters) —
-            // each request gets its own verdict, like the old loop
-            for (voff, data, t_enq, reply) in writes {
-                let n = data.len() as u64;
-                let r = driver.write(voff, &data);
-                stats.writes.fetch_add(1, Relaxed);
-                stats.bytes_written.fetch_add(n, Relaxed);
-                stats.record_latency(clock.now().saturating_sub(t_enq));
-                let _ = reply.send(r);
-            }
-        }
-    }
-}
-
-fn serve_batch(
-    driver: &mut dyn Driver,
-    ops: Vec<BatchOp>,
-    t_enq: u64,
-    reply: SyncSender<Result<Vec<BatchReply>>>,
-    stats: &Arc<VmStats>,
-    clock: &Arc<VirtClock>,
-) {
-    let r = run_batch(driver, ops, stats);
-    stats.record_latency(clock.now().saturating_sub(t_enq));
-    let _ = reply.send(r);
-}
-
-/// Execute a batch in submission order: consecutive reads become one
-/// `readv`, consecutive writes one `writev` — so a write is visible to
-/// every later read of the same batch. Stats are accounted per executed
-/// group, so ops that changed on-disk state before a later group failed
-/// still show up in the counters.
-fn run_batch(
-    driver: &mut dyn Driver,
-    ops: Vec<BatchOp>,
-    stats: &Arc<VmStats>,
-) -> Result<Vec<BatchReply>> {
-    let mut replies = Vec::with_capacity(ops.len());
-    let mut i = 0usize;
-    while i < ops.len() {
-        match ops[i] {
-            BatchOp::Read { .. } => {
-                let mut j = i;
-                while j < ops.len() && matches!(ops[j], BatchOp::Read { .. }) {
-                    j += 1;
-                }
-                let mut bufs: Vec<Vec<u8>> = ops[i..j]
-                    .iter()
-                    .map(|o| match o {
-                        BatchOp::Read { len, .. } => vec![0u8; *len],
-                        BatchOp::Write { .. } => unreachable!(),
-                    })
-                    .collect();
-                {
-                    let mut iovs: Vec<(u64, &mut [u8])> = ops[i..j]
-                        .iter()
-                        .zip(bufs.iter_mut())
-                        .map(|(o, b)| match o {
-                            BatchOp::Read { voff, .. } => (*voff, b.as_mut_slice()),
-                            BatchOp::Write { .. } => unreachable!(),
-                        })
-                        .collect();
-                    driver.readv(&mut iovs)?;
-                }
-                stats.reads.fetch_add((j - i) as u64, Relaxed);
-                stats.batched_ops.fetch_add((j - i) as u64, Relaxed);
-                stats
-                    .bytes_read
-                    .fetch_add(bufs.iter().map(|b| b.len() as u64).sum(), Relaxed);
-                replies.extend(bufs.into_iter().map(BatchReply::Read));
-                i = j;
-            }
-            BatchOp::Write { .. } => {
-                let mut j = i;
-                while j < ops.len() && matches!(ops[j], BatchOp::Write { .. }) {
-                    j += 1;
-                }
-                let iovs: Vec<(u64, &[u8])> = ops[i..j]
-                    .iter()
-                    .map(|o| match o {
-                        BatchOp::Write { voff, data } => (*voff, data.as_slice()),
-                        BatchOp::Read { .. } => unreachable!(),
-                    })
-                    .collect();
-                let bytes: u64 = iovs.iter().map(|(_, d)| d.len() as u64).sum();
-                driver.writev(&iovs)?;
-                stats.writes.fetch_add((j - i) as u64, Relaxed);
-                stats.batched_ops.fetch_add((j - i) as u64, Relaxed);
-                stats.bytes_written.fetch_add(bytes, Relaxed);
-                replies.extend((i..j).map(|_| BatchReply::Write));
-                i = j;
-            }
-        }
-    }
-    Ok(replies)
-}
-
-/// Account a finished job and drop its runner. A *completed* job changed
-/// the chain's shape (stream collapses it), so the new file set is
-/// re-declared to the GC registry: dropped backing files lose this
-/// chain's reference and are condemned once nothing else holds one.
-fn finish_job(
-    name: &str,
-    driver: &dyn Driver,
-    runner: &mut Option<JobRunner>,
-    stats: &Arc<VmStats>,
-    gc: &Arc<GcRegistry>,
-) {
-    let Some(r) = runner.take() else { return };
-    let st = r.shared().status();
-    match st.state {
-        crate::blockjob::JobState::Completed => {
-            stats.jobs_completed.fetch_add(1, Relaxed);
-            gc.sync_chain(name, driver.chain().file_names());
-        }
-        crate::blockjob::JobState::Cancelled => {
-            stats.jobs_cancelled.fetch_add(1, Relaxed);
-        }
-        _ => {
-            stats.jobs_failed.fetch_add(1, Relaxed);
-        }
-    }
-    stats.job_increments.fetch_add(st.increments, Relaxed);
-    stats.job_copied_clusters.fetch_add(st.copied, Relaxed);
 }

@@ -1,0 +1,745 @@
+//! Shard executors: the worker pool of the sharded data plane.
+//!
+//! A shard owns a disjoint set of VMs (assignment by name hash — see
+//! [`super::server`]) and drives everything that used to run on one
+//! thread per VM: guest I/O from each VM's submission ring, at most one
+//! live block-job runner per VM, and idle virtual-clock advancement.
+//! One serving pass round-robins the shard's VMs, draining up to
+//! [`BURST_DRAIN_MAX`] submissions per VM under one cross-VM merge
+//! window ([`crate::storage::iosched::MergeWindow`]), then gives every
+//! runnable job one bounded step, then flushes the per-VM
+//! [`StatsDelta`] accumulators into the shared stats — the stats
+//! reaper that keeps atomics off the per-request path.
+//!
+//! When no VM has queued submissions and no job is runnable, the
+//! executor PARKS on its doorbell ([`crate::util::Notify`]) instead of
+//! polling: submitters, control messages and job `resume`/`cancel` ring
+//! it. An idle fleet burns no CPU (the old worker spun on a 2 ms
+//! `recv_timeout` whenever a paused job existed).
+//!
+//! Panic containment is per VM, as before: a panic while serving a VM
+//! (or stepping its job) kills that VM — its rings are marked dead, so
+//! its clients see "vm worker gone" — and the shard keeps serving its
+//! other VMs.
+
+use super::ring::{BatchOp, BatchReply, RingReply, SqEntry, VmRings};
+use super::stats::{StatsDelta, VmStats};
+use crate::blockjob::{BlockJob, JobFence, JobRunner, JobShared, JobState, Step};
+use crate::gc::GcRegistry;
+use crate::metrics::clock::VirtClock;
+use crate::metrics::counters::CounterSnapshot;
+use crate::qcow::Chain;
+use crate::storage::iosched::{IoScheduler, MergeWindow};
+use crate::util::Notify;
+use crate::vdisk::{DiskOp, Driver};
+use anyhow::{anyhow, Result};
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicU64, Ordering::Relaxed};
+use std::sync::mpsc::{channel, Receiver, Sender, SyncSender, TryRecvError};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+/// How many queued submissions one VM may contribute to one serving
+/// pass (fairness bound: no VM's burst starves its shard neighbours).
+pub const BURST_DRAIN_MAX: usize = 32;
+
+/// Bounded idle virtual-time advance per pass while a job is
+/// rate-limit starved: a request enqueued concurrently is charged at
+/// most one quantum of the stall, not all of it.
+const IDLE_QUANTUM_NS: u64 = 100_000;
+
+/// Backstop for the parked executor: even a lost doorbell (which the
+/// latching [`Notify`] should make impossible) only delays work by
+/// this much.
+const PARK_BACKSTOP: std::time::Duration = std::time::Duration::from_millis(100);
+
+/// Constructs a job on the shard executor, where the driver's chain and
+/// fence live. Stream/stamp builders are trivial closures; the
+/// migration builder captures the node set, GC registry and target so
+/// the [`crate::migrate::MirrorJob`] can journal and create its target
+/// copies at start.
+pub(crate) type JobBuilder =
+    Box<dyn FnOnce(&Chain, &Arc<JobFence>) -> Result<Box<dyn BlockJob>> + Send>;
+
+/// Control-plane messages to a shard executor (rare path; guest I/O
+/// never travels here — it goes through the rings).
+pub(crate) enum ShardControl {
+    /// Adopt a VM: the executor becomes the single owner of its driver.
+    AddVm {
+        name: String,
+        driver: Box<dyn Driver + Send>,
+        rings: Arc<VmRings>,
+        stats: Arc<VmStats>,
+        reply: SyncSender<Result<()>>,
+    },
+    /// Stop a VM: serve what its clients already queued, flush, cancel
+    /// any running job, mark its rings dead. Idempotent.
+    RemoveVm { name: String, reply: SyncSender<Result<()>> },
+    /// Pause the VM and hand its bare chain to `f` (snapshot/stream).
+    WithChain {
+        vm: String,
+        f: Box<dyn FnOnce(&mut Chain) -> Result<String> + Send>,
+        reply: SyncSender<Result<String>>,
+    },
+    /// Begin a live block job on this VM.
+    JobStart {
+        vm: String,
+        builder: JobBuilder,
+        shared: Arc<JobShared>,
+        increment_clusters: u64,
+        reply: SyncSender<Result<()>>,
+    },
+    /// Low-level driver counters of one VM.
+    Counters { vm: String, reply: SyncSender<CounterSnapshot> },
+    /// Flush every VM's stats delta, then reply — the barrier
+    /// `Coordinator::vm_stats` uses so completed requests are always
+    /// visible in the snapshot that follows them.
+    SyncStats { reply: SyncSender<()> },
+    /// Terminate the executor (coordinator drop).
+    Shutdown,
+}
+
+/// Executor-level counters (`sqemu node status` shard table, the
+/// spurious-wakeup regression test).
+#[derive(Debug, Default)]
+pub struct ShardStats {
+    /// Times the executor resumed from a park (doorbell or backstop).
+    pub wakeups: AtomicU64,
+    /// Serving passes executed.
+    pub passes: AtomicU64,
+    /// Ring submissions served.
+    pub served: AtomicU64,
+    /// VMs currently owned.
+    pub vm_count: AtomicU64,
+    /// Total SQ occupancy across owned VMs at the last pass end.
+    pub sq_depth: AtomicU64,
+}
+
+/// Point-in-time view of one shard (public reporting surface).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ShardStatsSnapshot {
+    pub shard: usize,
+    pub vms: u64,
+    pub queued: u64,
+    pub served: u64,
+    pub passes: u64,
+    pub wakeups: u64,
+}
+
+impl ShardStats {
+    pub fn snapshot(&self, shard: usize) -> ShardStatsSnapshot {
+        ShardStatsSnapshot {
+            shard,
+            vms: self.vm_count.load(Relaxed),
+            queued: self.sq_depth.load(Relaxed),
+            served: self.served.load(Relaxed),
+            passes: self.passes.load(Relaxed),
+            wakeups: self.wakeups.load(Relaxed),
+        }
+    }
+}
+
+/// Handle to one spawned shard executor.
+pub(crate) struct Shard {
+    pub(crate) index: usize,
+    tx: Sender<ShardControl>,
+    pub(crate) notify: Arc<Notify>,
+    pub(crate) stats: Arc<ShardStats>,
+    join: Option<JoinHandle<()>>,
+}
+
+impl Shard {
+    pub(crate) fn spawn(
+        index: usize,
+        clock: Arc<VirtClock>,
+        gc: Arc<GcRegistry>,
+        scheds: Vec<Arc<IoScheduler>>,
+    ) -> Shard {
+        let (tx, rx) = channel::<ShardControl>();
+        let notify = Arc::new(Notify::new());
+        let stats = Arc::new(ShardStats::default());
+        let (n2, s2) = (Arc::clone(&notify), Arc::clone(&stats));
+        let join = std::thread::Builder::new()
+            .name(format!("shard-{index}"))
+            .spawn(move || shard_loop(rx, n2, s2, clock, gc, scheds))
+            .expect("spawn shard executor");
+        Shard { index, tx, notify, stats, join: Some(join) }
+    }
+
+    /// Enqueue a control message and ring the doorbell.
+    pub(crate) fn send(&self, c: ShardControl) -> Result<()> {
+        self.tx.send(c).map_err(|_| anyhow!("shard executor gone"))?;
+        self.notify.notify();
+        Ok(())
+    }
+
+    /// A cloneable control-plane address of this shard (what a
+    /// [`super::server::VmClient`] holds).
+    pub(crate) fn handle(&self) -> ShardHandle {
+        ShardHandle { tx: self.tx.clone(), notify: Arc::clone(&self.notify) }
+    }
+}
+
+/// Cloneable sender half of a shard's control channel.
+#[derive(Clone)]
+pub(crate) struct ShardHandle {
+    tx: Sender<ShardControl>,
+    notify: Arc<Notify>,
+}
+
+impl ShardHandle {
+    pub(crate) fn send(&self, c: ShardControl) -> Result<()> {
+        self.tx.send(c).map_err(|_| anyhow!("shard executor gone"))?;
+        self.notify.notify();
+        Ok(())
+    }
+}
+
+impl Drop for Shard {
+    fn drop(&mut self) {
+        let _ = self.tx.send(ShardControl::Shutdown);
+        self.notify.notify();
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+/// One VM owned by a shard.
+struct VmSlot {
+    name: String,
+    driver: Box<dyn Driver + Send>,
+    rings: Arc<VmRings>,
+    stats: Arc<VmStats>,
+    delta: StatsDelta,
+    runner: Option<JobRunner>,
+    dead: bool,
+}
+
+/// A panic reached this VM: record it, fail its clients, cancel its
+/// job. The slot is removed by the caller; the shard lives on.
+fn kill_slot(slot: &mut VmSlot) {
+    slot.dead = true;
+    slot.stats.worker_panics.fetch_add(1, Relaxed);
+    slot.rings.mark_dead();
+    if let Some(r) = slot.runner.take() {
+        r.shared().cancel();
+        r.shared().set_state(JobState::Cancelled);
+        r.shared().clear_waker();
+        slot.stats.jobs_cancelled.fetch_add(1, Relaxed);
+    }
+}
+
+/// Flush a slot's accumulated delta and mirrored ring counters into the
+/// shared stats (the reaper step).
+fn reap_slot_stats(slot: &mut VmSlot) {
+    slot.delta.flush_into(&slot.stats);
+    slot.stats
+        .backpressure
+        .store(slot.rings.backpressure.load(Relaxed), Relaxed);
+}
+
+fn shard_loop(
+    ctl: Receiver<ShardControl>,
+    notify: Arc<Notify>,
+    stats: Arc<ShardStats>,
+    clock: Arc<VirtClock>,
+    gc: Arc<GcRegistry>,
+    scheds: Vec<Arc<IoScheduler>>,
+) {
+    let mut vms: Vec<VmSlot> = Vec::new();
+    loop {
+        // ---- control (rare path) -----------------------------------
+        loop {
+            match ctl.try_recv() {
+                Ok(ShardControl::Shutdown) | Err(TryRecvError::Disconnected) => {
+                    shutdown_slots(&mut vms, &clock, &gc);
+                    return;
+                }
+                Ok(c) => handle_control(c, &mut vms, &notify, &gc, &clock),
+                Err(TryRecvError::Empty) => break,
+            }
+        }
+        stats.vm_count.store(vms.len() as u64, Relaxed);
+        stats.passes.fetch_add(1, Relaxed);
+
+        // ---- serving pass: guest I/O under one merge window --------
+        let mut served = 0u64;
+        {
+            let _window = MergeWindow::open(scheds.clone());
+            for slot in vms.iter_mut() {
+                match catch_unwind(AssertUnwindSafe(|| serve_slot(slot, &clock))) {
+                    Ok(n) => served += n,
+                    Err(_) => kill_slot(slot),
+                }
+            }
+        }
+        vms.retain(|s| !s.dead);
+
+        // ---- one bounded job step per runnable job -----------------
+        let mut any_ran = false;
+        let mut min_ready: Option<u64> = None;
+        for slot in vms.iter_mut() {
+            if !slot.runner.as_ref().map_or(false, |r| r.wants_cpu()) {
+                continue;
+            }
+            let now = clock.now();
+            let stepped = catch_unwind(AssertUnwindSafe(|| {
+                slot.runner
+                    .as_mut()
+                    .expect("checked runnable")
+                    .step(slot.driver.as_mut(), now)
+            }));
+            match stepped {
+                Ok(Step::Ran) => any_ran = true,
+                Ok(Step::Finished) => {
+                    finish_job(slot, &gc);
+                    any_ran = true;
+                }
+                Ok(Step::Starved { ready_at }) => {
+                    min_ready =
+                        Some(min_ready.map_or(ready_at, |m| m.min(ready_at)));
+                }
+                Ok(Step::Paused) => {}
+                Err(_) => kill_slot(slot),
+            }
+        }
+        vms.retain(|s| !s.dead);
+
+        // ---- stats reaper ------------------------------------------
+        stats.served.fetch_add(served, Relaxed);
+        for slot in vms.iter_mut() {
+            reap_slot_stats(slot);
+        }
+        stats.sq_depth.store(
+            vms.iter().map(|s| s.rings.sq_len() as u64).sum(),
+            Relaxed,
+        );
+
+        // ---- idle policy -------------------------------------------
+        if served == 0 && !any_ran {
+            if let Some(ready_at) = min_ready {
+                // a job is rate-limit starved: only virtual time can
+                // unblock it — advance in bounded quanta, don't park
+                let now = clock.now();
+                if ready_at > now {
+                    clock.advance((ready_at - now).min(IDLE_QUANTUM_NS));
+                }
+            } else {
+                // nothing runnable anywhere: park until a submitter,
+                // control message or job resume/cancel rings the bell
+                notify.wait_timeout(PARK_BACKSTOP);
+                stats.wakeups.fetch_add(1, Relaxed);
+            }
+        }
+    }
+}
+
+fn shutdown_slots(
+    vms: &mut Vec<VmSlot>,
+    clock: &Arc<VirtClock>,
+    gc: &Arc<GcRegistry>,
+) {
+    let _ = gc;
+    for slot in vms.iter_mut() {
+        let _ = catch_unwind(AssertUnwindSafe(|| {
+            while serve_slot(slot, clock) > 0 {}
+            let _ = slot.driver.flush();
+        }));
+        if let Some(r) = slot.runner.take() {
+            r.shared().cancel();
+            r.shared().set_state(JobState::Cancelled);
+            r.shared().clear_waker();
+            slot.stats.jobs_cancelled.fetch_add(1, Relaxed);
+            slot.driver.fence().end();
+        }
+        reap_slot_stats(slot);
+        slot.rings.mark_dead();
+    }
+    vms.clear();
+}
+
+/// Run `f` against the named slot with per-VM panic containment. A
+/// panic kills the VM and returns `None` — callers then drop the reply
+/// channel, which clients observe as "vm worker gone" (exactly the old
+/// worker-death surface).
+fn with_slot<T>(
+    vms: &mut Vec<VmSlot>,
+    name: &str,
+    f: impl FnOnce(&mut VmSlot) -> T,
+) -> Option<T> {
+    let idx = vms.iter().position(|s| s.name == name)?;
+    match catch_unwind(AssertUnwindSafe(|| f(&mut vms[idx]))) {
+        Ok(t) => Some(t),
+        Err(_) => {
+            kill_slot(&mut vms[idx]);
+            vms.remove(idx);
+            None
+        }
+    }
+}
+
+fn handle_control(
+    c: ShardControl,
+    vms: &mut Vec<VmSlot>,
+    notify: &Arc<Notify>,
+    gc: &Arc<GcRegistry>,
+    clock: &Arc<VirtClock>,
+) {
+    match c {
+        ShardControl::AddVm { name, driver, rings, stats, reply } => {
+            vms.push(VmSlot {
+                name,
+                driver,
+                rings,
+                stats,
+                delta: StatsDelta::default(),
+                runner: None,
+                dead: false,
+            });
+            let _ = reply.send(Ok(()));
+        }
+        ShardControl::RemoveVm { name, reply } => {
+            let Some(idx) = vms.iter().position(|s| s.name == name) else {
+                // already gone (panicked earlier) — stop is idempotent
+                let _ = reply.send(Ok(()));
+                return;
+            };
+            let mut slot = vms.remove(idx);
+            // old Stop semantics: requests the clients queued before the
+            // stop are served, then caches are flushed
+            let _ = catch_unwind(AssertUnwindSafe(|| {
+                while serve_slot(&mut slot, clock) > 0 {}
+                let _ = slot.driver.flush();
+            }));
+            if let Some(r) = slot.runner.take() {
+                // the VM is going away: a running job cannot make
+                // further progress — record it as cancelled
+                r.shared().cancel();
+                r.shared().set_state(JobState::Cancelled);
+                r.shared().clear_waker();
+                slot.stats.jobs_cancelled.fetch_add(1, Relaxed);
+                slot.driver.fence().end();
+            }
+            reap_slot_stats(&mut slot);
+            slot.rings.mark_dead();
+            let _ = reply.send(Ok(()));
+        }
+        ShardControl::WithChain { vm, f, reply } => {
+            let r = with_slot(vms, &vm, |slot| {
+                if slot.runner.is_some() {
+                    return Err(anyhow!(
+                        "chain operation refused: a live block job is running"
+                    ));
+                }
+                slot.driver.flush()?;
+                let out = f(slot.driver.chain_mut())?;
+                slot.driver.reopen()?;
+                Ok(out)
+            });
+            match r {
+                Some(r) => {
+                    let _ = reply.send(r);
+                }
+                None => {
+                    let _ = reply.send(Err(anyhow!("vm worker gone")));
+                }
+            }
+        }
+        ShardControl::JobStart { vm, builder, shared, increment_clusters, reply } => {
+            let waker = Arc::clone(notify);
+            let clock = Arc::clone(clock);
+            let r = with_slot(vms, &vm, move |slot| {
+                if slot.runner.is_some() {
+                    return Err(anyhow!(
+                        "a block job is already running on this vm"
+                    ));
+                }
+                let fence = Arc::clone(slot.driver.fence());
+                // flush first: a migration mirror reads the files
+                // underneath the driver, so cached dirty state must be
+                // on "disk" before the bulk copy starts
+                slot.driver.flush()?;
+                let job = builder(slot.driver.chain(), &fence)?;
+                let burst = increment_clusters.saturating_mul(
+                    slot.driver.chain().active().geom().cluster_size(),
+                );
+                // resume/cancel must unpark this executor
+                shared.set_waker(waker);
+                slot.runner = Some(JobRunner::new(
+                    job,
+                    shared,
+                    fence,
+                    increment_clusters,
+                    burst,
+                    clock.now(),
+                ));
+                Ok(())
+            });
+            if let Some(r) = r {
+                let _ = reply.send(r);
+            } // on panic: reply dropped → client sees "vm worker gone"
+        }
+        ShardControl::Counters { vm, reply } => {
+            if let Some(c) = with_slot(vms, &vm, |slot| slot.driver.counters()) {
+                let _ = reply.send(c);
+            }
+        }
+        ShardControl::SyncStats { reply } => {
+            for slot in vms.iter_mut() {
+                reap_slot_stats(slot);
+            }
+            let _ = reply.send(());
+        }
+        ShardControl::Shutdown => unreachable!("handled by the shard loop"),
+    }
+}
+
+// ----------------------------------------------------------------- I/O
+
+type ReadReq = (u64, u64, usize, u64); // tag, voff, len, t_enq
+type WriteReq = (u64, u64, Vec<u8>, u64); // tag, voff, data, t_enq
+
+/// Drain and serve up to one burst of this VM's submission ring, in
+/// program order: runs of consecutive reads become one `readv`,
+/// consecutive writes one `writev`, batches execute through the
+/// driver's [`DiskOp`] submit surface — one completion per submission.
+/// Returns the number of submissions served.
+fn serve_slot(slot: &mut VmSlot, clock: &VirtClock) -> u64 {
+    let mut entries: Vec<SqEntry> = Vec::new();
+    while entries.len() < BURST_DRAIN_MAX {
+        match slot.rings.pop_sq() {
+            Some(e) => entries.push(e),
+            None => break,
+        }
+    }
+    if entries.is_empty() {
+        return 0;
+    }
+    let served = entries.len() as u64;
+    let mut it = entries.into_iter().peekable();
+    while let Some(e) = it.next() {
+        match e {
+            SqEntry::Read { tag, voff, len, t_enq } => {
+                let mut reads: Vec<ReadReq> = vec![(tag, voff, len, t_enq)];
+                while matches!(it.peek(), Some(SqEntry::Read { .. })) {
+                    let Some(SqEntry::Read { tag, voff, len, t_enq }) = it.next()
+                    else {
+                        unreachable!()
+                    };
+                    reads.push((tag, voff, len, t_enq));
+                }
+                serve_reads(slot, reads, clock);
+            }
+            SqEntry::Write { tag, voff, data, t_enq } => {
+                let mut writes: Vec<WriteReq> = vec![(tag, voff, data, t_enq)];
+                while matches!(it.peek(), Some(SqEntry::Write { .. })) {
+                    let Some(SqEntry::Write { tag, voff, data, t_enq }) =
+                        it.next()
+                    else {
+                        unreachable!()
+                    };
+                    writes.push((tag, voff, data, t_enq));
+                }
+                serve_writes(slot, writes, clock);
+            }
+            SqEntry::Batch { tag, ops, t_enq } => {
+                let r = run_batch(&mut *slot.driver, &mut slot.delta, ops);
+                slot.delta.record_latency(clock.now().saturating_sub(t_enq));
+                slot.rings.complete(tag, RingReply::Batch(r));
+            }
+            SqEntry::Flush { tag, .. } => {
+                // a flush completes only after everything before it in
+                // the ring — guaranteed by in-order execution here
+                let r = slot.driver.flush();
+                slot.rings.complete(tag, RingReply::Flush(r));
+            }
+        }
+    }
+    // mirror the driver's coalescer counters (a driver-lifetime total,
+    // hence store not add)
+    let v = slot.driver.vec_io();
+    slot.stats.merged_ios.store(v.merged_ios, Relaxed);
+    slot.stats.coalesced_bytes.store(v.coalesced_bytes, Relaxed);
+    slot.rings.wake_reapers();
+    served
+}
+
+fn serve_reads(slot: &mut VmSlot, reads: Vec<ReadReq>, clock: &VirtClock) {
+    if reads.len() == 1 {
+        // lone request: the classic scalar path
+        let (tag, voff, len, t_enq) = reads.into_iter().next().expect("one read");
+        let mut buf = vec![0u8; len];
+        let r = slot.driver.read(voff, &mut buf).map(|()| buf);
+        slot.delta.reads += 1;
+        slot.delta.bytes_read += len as u64;
+        slot.delta.record_latency(clock.now().saturating_sub(t_enq));
+        slot.rings.complete(tag, RingReply::Read(r));
+        return;
+    }
+    let mut bufs: Vec<Vec<u8>> = reads.iter().map(|r| vec![0u8; r.2]).collect();
+    let res = {
+        let mut iovs: Vec<(u64, &mut [u8])> = reads
+            .iter()
+            .zip(bufs.iter_mut())
+            .map(|(r, b)| (r.1, b.as_mut_slice()))
+            .collect();
+        slot.driver.readv(&mut iovs)
+    };
+    match res {
+        Ok(()) => {
+            let n = reads.len() as u64;
+            slot.delta.reads += n;
+            slot.delta.batched_ops += n;
+            for ((tag, _voff, len, t_enq), buf) in reads.into_iter().zip(bufs) {
+                slot.delta.bytes_read += len as u64;
+                slot.delta.record_latency(clock.now().saturating_sub(t_enq));
+                slot.rings.complete(tag, RingReply::Read(Ok(buf)));
+            }
+        }
+        Err(_) => {
+            // fall back to per-request scalar reads: error isolation and
+            // accounting stay identical to the pre-vectored path (reads
+            // have no side effects, so the retry is safe)
+            for (tag, voff, len, t_enq) in reads {
+                let mut buf = vec![0u8; len];
+                let r = slot.driver.read(voff, &mut buf).map(|()| buf);
+                slot.delta.reads += 1;
+                slot.delta.bytes_read += len as u64;
+                slot.delta.record_latency(clock.now().saturating_sub(t_enq));
+                slot.rings.complete(tag, RingReply::Read(r));
+            }
+        }
+    }
+}
+
+fn serve_writes(slot: &mut VmSlot, writes: Vec<WriteReq>, clock: &VirtClock) {
+    if writes.len() == 1 {
+        let (tag, voff, data, t_enq) =
+            writes.into_iter().next().expect("one write");
+        let n = data.len() as u64;
+        let r = slot.driver.write(voff, &data);
+        slot.delta.writes += 1;
+        slot.delta.bytes_written += n;
+        slot.delta.record_latency(clock.now().saturating_sub(t_enq));
+        slot.rings.complete(tag, RingReply::Write(r));
+        return;
+    }
+    let res = {
+        let iovs: Vec<(u64, &[u8])> =
+            writes.iter().map(|w| (w.1, w.2.as_slice())).collect();
+        slot.driver.writev(&iovs)
+    };
+    match res {
+        Ok(()) => {
+            let n = writes.len() as u64;
+            slot.delta.writes += n;
+            slot.delta.batched_ops += n;
+            for (tag, _voff, data, t_enq) in writes {
+                slot.delta.bytes_written += data.len() as u64;
+                slot.delta.record_latency(clock.now().saturating_sub(t_enq));
+                slot.rings.complete(tag, RingReply::Write(Ok(())));
+            }
+        }
+        Err(_) => {
+            // fall back to per-request scalar writes (idempotent: the
+            // vectored attempt is itself a scalar loop, so re-applying
+            // the prefix writes the same bytes to the same clusters) —
+            // each request gets its own verdict
+            for (tag, voff, data, t_enq) in writes {
+                let n = data.len() as u64;
+                let r = slot.driver.write(voff, &data);
+                slot.delta.writes += 1;
+                slot.delta.bytes_written += n;
+                slot.delta.record_latency(clock.now().saturating_sub(t_enq));
+                slot.rings.complete(tag, RingReply::Write(r));
+            }
+        }
+    }
+}
+
+/// Execute a batch in submission order through [`Driver::submit`]:
+/// consecutive same-kind ops group into one vectored call, so a write
+/// is visible to every later read of the same batch. Ops executed
+/// before a failure still count in the stats (their on-disk effects are
+/// real), like the old per-group accounting.
+fn run_batch(
+    driver: &mut dyn Driver,
+    delta: &mut StatsDelta,
+    ops: Vec<BatchOp>,
+) -> Result<Vec<BatchReply>> {
+    let mut bufs: Vec<Vec<u8>> = ops
+        .iter()
+        .filter_map(|o| match o {
+            BatchOp::Read { len, .. } => Some(vec![0u8; *len]),
+            BatchOp::Write { .. } => None,
+        })
+        .collect();
+    let res = {
+        let mut bi = bufs.iter_mut();
+        let mut dops: Vec<DiskOp<'_>> = ops
+            .iter()
+            .map(|o| match o {
+                BatchOp::Read { voff, .. } => DiskOp::Read {
+                    voff: *voff,
+                    buf: bi.next().expect("one buf per read").as_mut_slice(),
+                },
+                BatchOp::Write { voff, data } => {
+                    DiskOp::Write { voff: *voff, data: data.as_slice() }
+                }
+            })
+            .collect();
+        driver.submit(&mut dops)
+    };
+    for o in ops.iter().take(res.completed) {
+        match o {
+            BatchOp::Read { len, .. } => {
+                delta.reads += 1;
+                delta.batched_ops += 1;
+                delta.bytes_read += *len as u64;
+            }
+            BatchOp::Write { data, .. } => {
+                delta.writes += 1;
+                delta.batched_ops += 1;
+                delta.bytes_written += data.len() as u64;
+            }
+        }
+    }
+    if let Some(e) = res.error {
+        return Err(e);
+    }
+    let mut bi = bufs.into_iter();
+    Ok(ops
+        .into_iter()
+        .map(|o| match o {
+            BatchOp::Read { .. } => {
+                BatchReply::Read(bi.next().expect("one buf per read"))
+            }
+            BatchOp::Write { .. } => BatchReply::Write,
+        })
+        .collect())
+}
+
+/// Account a finished job and drop its runner. A *completed* job
+/// changed the chain's shape (stream collapses it), so the new file set
+/// is re-declared to the GC registry: dropped backing files lose this
+/// chain's reference and are condemned once nothing else holds one.
+fn finish_job(slot: &mut VmSlot, gc: &Arc<GcRegistry>) {
+    let Some(r) = slot.runner.take() else { return };
+    r.shared().clear_waker();
+    let st = r.shared().status();
+    match st.state {
+        JobState::Completed => {
+            slot.stats.jobs_completed.fetch_add(1, Relaxed);
+            gc.sync_chain(&slot.name, slot.driver.chain().file_names());
+        }
+        JobState::Cancelled => {
+            slot.stats.jobs_cancelled.fetch_add(1, Relaxed);
+        }
+        _ => {
+            slot.stats.jobs_failed.fetch_add(1, Relaxed);
+        }
+    }
+    slot.stats.job_increments.fetch_add(st.increments, Relaxed);
+    slot.stats.job_copied_clusters.fetch_add(st.copied, Relaxed);
+}

@@ -79,6 +79,51 @@ impl VmStats {
     }
 }
 
+/// Hot-path stats accumulator: a shard executor counts served guest
+/// requests here (plain fields, no atomics, no locks) and flushes into
+/// the shared [`VmStats`] once per serving pass — the "stats reaper"
+/// that keeps per-request accounting out of the data plane.
+#[derive(Debug, Default)]
+pub struct StatsDelta {
+    pub reads: u64,
+    pub writes: u64,
+    pub bytes_read: u64,
+    pub bytes_written: u64,
+    pub batched_ops: u64,
+    pub latency: Histogram,
+}
+
+impl StatsDelta {
+    pub fn is_empty(&self) -> bool {
+        self.reads == 0
+            && self.writes == 0
+            && self.batched_ops == 0
+            && self.latency.count() == 0
+    }
+
+    pub fn record_latency(&mut self, ns: u64) {
+        self.latency.record(ns);
+    }
+
+    /// Drain this delta into the shared stats (leaves `self` zeroed).
+    pub fn flush_into(&mut self, stats: &VmStats) {
+        if self.is_empty() {
+            return;
+        }
+        stats.reads.fetch_add(self.reads, Ordering::Relaxed);
+        stats.writes.fetch_add(self.writes, Ordering::Relaxed);
+        stats.bytes_read.fetch_add(self.bytes_read, Ordering::Relaxed);
+        stats
+            .bytes_written
+            .fetch_add(self.bytes_written, Ordering::Relaxed);
+        stats.batched_ops.fetch_add(self.batched_ops, Ordering::Relaxed);
+        if self.latency.count() > 0 {
+            lock_unpoisoned(&stats.req_latency).merge(&self.latency);
+        }
+        *self = StatsDelta::default();
+    }
+}
+
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub struct VmStatsSnapshot {
     pub reads: u64,
@@ -136,6 +181,28 @@ mod tests {
         s.record_latency(700);
         let snap = s.snapshot();
         assert_eq!(snap.req_count, 2, "stats keep working after the panic");
+    }
+
+    #[test]
+    fn delta_flush_accumulates_and_resets() {
+        let s = VmStats::default();
+        let mut d = StatsDelta::default();
+        assert!(d.is_empty());
+        d.reads += 2;
+        d.bytes_read += 8192;
+        d.record_latency(1_000);
+        d.record_latency(3_000);
+        d.flush_into(&s);
+        assert!(d.is_empty(), "flush zeroes the delta");
+        d.writes += 1;
+        d.bytes_written += 512;
+        d.flush_into(&s);
+        let snap = s.snapshot();
+        assert_eq!(snap.reads, 2);
+        assert_eq!(snap.writes, 1);
+        assert_eq!(snap.bytes_read, 8192);
+        assert_eq!(snap.bytes_written, 512);
+        assert_eq!(snap.req_count, 2, "histogram merged");
     }
 
     #[test]

@@ -1,0 +1,346 @@
+//! Per-node I/O scheduler: cross-VM merge windows over one device.
+//!
+//! The `Timed` wrapper already bills a sorted iov list from ONE request
+//! as one seek per physically contiguous run. What it cannot see is two
+//! *different* VMs streaming adjacent extents of the same file — the
+//! boot-storm shape, where a clone population reads a shared golden base
+//! and the device could service the lot as one sequential pass.
+//!
+//! A shard executor opens a *merge window* on the nodes it serves for
+//! the duration of one serving pass ([`MergeWindow`]). While at least
+//! one window is open, every timed operation on the node's files is
+//! billed through [`IoScheduler::try_bill`]: an extent that touches
+//! (overlaps or abuts) an extent already serviced in the window pays
+//! **no seek** — only bandwidth for its fresh bytes — because the
+//! device is already positioned there; bytes another VM already
+//! transferred in the window are not paid twice. With no window open,
+//! `try_bill` declines and `Timed` falls back to its classic
+//! per-request accounting, bit-identical to the pre-shard data plane.
+//!
+//! The scheduler also aggregates device-busy time and fresh transfer
+//! bytes, which is how `fig25_fleet_scale` computes device-time
+//! utilization against the cost model's theoretical bandwidth.
+
+use crate::metrics::clock::CostModel;
+use crate::util::lock_unpoisoned;
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering::Relaxed};
+use std::sync::{Arc, Mutex};
+
+/// What one billed operation cost under an open merge window.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Bill {
+    /// 0 (merged into a serviced extent) or 1 (fresh device position).
+    pub seeks: u64,
+    /// Bytes actually transferred (extent minus already-serviced bytes).
+    pub fresh: u64,
+    /// Virtual ns the device was busy: `seeks * io_ns(0)` plus
+    /// bandwidth time for the fresh bytes.
+    pub ns: u64,
+}
+
+/// Extents serviced during the current merge window, per file.
+#[derive(Default)]
+struct WindowState {
+    /// file id → sorted, disjoint `(start, end)` half-open intervals
+    spans: HashMap<u64, Vec<(u64, u64)>>,
+}
+
+/// One storage node's device scheduler (owned by [`super::StorageNode`],
+/// shared with every `Timed` file on the node).
+pub struct IoScheduler {
+    cost: CostModel,
+    /// Open merge windows (shards currently in a serving pass). The
+    /// window span state is shared: concurrent shards merge against
+    /// each other's extents, which is the whole point.
+    openers: AtomicUsize,
+    state: Mutex<WindowState>,
+    next_file_id: AtomicU64,
+    /// Virtual ns the device spent busy under merge windows.
+    busy_ns: AtomicU64,
+    /// Bytes transferred under merge windows (deduplicated).
+    fresh_bytes: AtomicU64,
+    /// Seeks billed under merge windows.
+    seeks: AtomicU64,
+    /// Seeks avoided because the extent touched a serviced one.
+    merged_seeks: AtomicU64,
+    /// Merge windows opened over the node's lifetime.
+    window_opens: AtomicU64,
+}
+
+/// Point-in-time counters for reporting (CLI, fig25).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct IoSchedSnapshot {
+    pub busy_ns: u64,
+    pub fresh_bytes: u64,
+    pub seeks: u64,
+    pub merged_seeks: u64,
+    pub window_opens: u64,
+}
+
+impl IoScheduler {
+    pub fn new(cost: CostModel) -> Arc<IoScheduler> {
+        Arc::new(IoScheduler {
+            cost,
+            openers: AtomicUsize::new(0),
+            state: Mutex::new(WindowState::default()),
+            next_file_id: AtomicU64::new(1),
+            busy_ns: AtomicU64::new(0),
+            fresh_bytes: AtomicU64::new(0),
+            seeks: AtomicU64::new(0),
+            merged_seeks: AtomicU64::new(0),
+            window_opens: AtomicU64::new(0),
+        })
+    }
+
+    /// Assign an id to a file opened on this node's device (each `Timed`
+    /// registers once at creation).
+    pub fn register_file(&self) -> u64 {
+        self.next_file_id.fetch_add(1, Relaxed)
+    }
+
+    /// True while at least one shard holds a merge window open.
+    pub fn window_open(&self) -> bool {
+        self.openers.load(Relaxed) > 0
+    }
+
+    fn open_window(&self) {
+        if self.openers.fetch_add(1, Relaxed) == 0 {
+            self.window_opens.fetch_add(1, Relaxed);
+        }
+    }
+
+    fn close_window(&self) {
+        if self.openers.fetch_sub(1, Relaxed) == 1 {
+            // last opener: the device moves on, forget serviced extents
+            lock_unpoisoned(&self.state).spans.clear();
+        }
+    }
+
+    /// Bill `[off, off+len)` on `file` against the open merge window.
+    /// Returns `None` when no window is open — the caller must then use
+    /// its classic (bit-identical to pre-shard) accounting.
+    pub fn try_bill(&self, file: u64, off: u64, len: u64) -> Option<Bill> {
+        if !self.window_open() {
+            return None;
+        }
+        let (start, end) = (off, off.saturating_add(len));
+        let mut st = lock_unpoisoned(&self.state);
+        let ivs = st.spans.entry(file).or_default();
+
+        // find every serviced interval touching (overlapping or
+        // abutting) the new extent; they merge into one
+        let mut covered = 0u64;
+        let mut touched = false;
+        let (mut lo, mut hi) = (start, end);
+        let mut keep = Vec::with_capacity(ivs.len() + 1);
+        for &(a, b) in ivs.iter() {
+            if b < start || a > end {
+                keep.push((a, b));
+            } else {
+                touched = true;
+                covered += b.min(end).saturating_sub(a.max(start));
+                lo = lo.min(a);
+                hi = hi.max(b);
+            }
+        }
+        keep.push((lo, hi));
+        keep.sort_unstable();
+        *ivs = keep;
+        drop(st);
+
+        let fresh = len.saturating_sub(covered);
+        let seeks = if touched { 0 } else { 1 };
+        // io_ns(n) = T_L + T_D + n/bandwidth; the seek part is io_ns(0)
+        let ns = seeks * self.cost.io_ns(0)
+            + (self.cost.io_ns(fresh) - self.cost.io_ns(0));
+        self.busy_ns.fetch_add(ns, Relaxed);
+        self.fresh_bytes.fetch_add(fresh, Relaxed);
+        self.seeks.fetch_add(seeks, Relaxed);
+        self.merged_seeks.fetch_add(1 - seeks, Relaxed);
+        Some(Bill { seeks, fresh, ns })
+    }
+
+    /// Account a durability barrier (flush) executed under an open
+    /// window: one device round trip of busy time, no transfer. Returns
+    /// false when no window is open.
+    pub fn note_flush(&self) -> bool {
+        if !self.window_open() {
+            return false;
+        }
+        self.busy_ns.fetch_add(self.cost.io_ns(0), Relaxed);
+        true
+    }
+
+    pub fn snapshot(&self) -> IoSchedSnapshot {
+        IoSchedSnapshot {
+            busy_ns: self.busy_ns.load(Relaxed),
+            fresh_bytes: self.fresh_bytes.load(Relaxed),
+            seeks: self.seeks.load(Relaxed),
+            merged_seeks: self.merged_seeks.load(Relaxed),
+            window_opens: self.window_opens.load(Relaxed),
+        }
+    }
+
+    /// Fraction of device-busy time spent transferring bytes at the
+    /// cost model's theoretical bandwidth (the fig25 gate). 1.0 when the
+    /// device never ran under a window.
+    pub fn utilization(&self) -> f64 {
+        let busy = self.busy_ns.load(Relaxed);
+        if busy == 0 {
+            return 1.0;
+        }
+        let xfer = self.cost.io_ns(self.fresh_bytes.load(Relaxed))
+            - self.cost.io_ns(0);
+        xfer as f64 / busy as f64
+    }
+}
+
+/// RAII guard: a shard's merge window over the node schedulers it is
+/// about to serve. Open for one serving pass, dropped before job steps.
+pub struct MergeWindow {
+    scheds: Vec<Arc<IoScheduler>>,
+}
+
+impl MergeWindow {
+    pub fn open(scheds: Vec<Arc<IoScheduler>>) -> MergeWindow {
+        for s in &scheds {
+            s.open_window();
+        }
+        MergeWindow { scheds }
+    }
+}
+
+impl Drop for MergeWindow {
+    fn drop(&mut self) {
+        for s in &self.scheds {
+            s.close_window();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sched() -> Arc<IoScheduler> {
+        IoScheduler::new(CostModel::default())
+    }
+
+    #[test]
+    fn closed_window_declines() {
+        let s = sched();
+        let f = s.register_file();
+        assert!(s.try_bill(f, 0, 4096).is_none());
+        assert!(!s.note_flush());
+        assert_eq!(s.snapshot().busy_ns, 0);
+    }
+
+    #[test]
+    fn first_extent_pays_full_seek() {
+        let s = sched();
+        let f = s.register_file();
+        let cost = CostModel::default();
+        let _w = MergeWindow::open(vec![Arc::clone(&s)]);
+        let b = s.try_bill(f, 0, 64 << 10).unwrap();
+        assert_eq!(b.seeks, 1);
+        assert_eq!(b.fresh, 64 << 10);
+        assert_eq!(b.ns, cost.io_ns(64 << 10), "identical to classic billing");
+    }
+
+    #[test]
+    fn adjacent_extent_from_another_vm_merges() {
+        let s = sched();
+        let f = s.register_file();
+        let cost = CostModel::default();
+        let _w = MergeWindow::open(vec![Arc::clone(&s)]);
+        s.try_bill(f, 0, 64 << 10).unwrap();
+        // second "VM" continues right where the first stopped
+        let b = s.try_bill(f, 64 << 10, 64 << 10).unwrap();
+        assert_eq!(b.seeks, 0, "no repositioning");
+        assert_eq!(b.fresh, 64 << 10);
+        assert_eq!(b.ns, cost.io_ns(64 << 10) - cost.io_ns(0));
+        assert_eq!(s.snapshot().merged_seeks, 1);
+    }
+
+    #[test]
+    fn overlap_bytes_are_not_paid_twice() {
+        let s = sched();
+        let f = s.register_file();
+        let _w = MergeWindow::open(vec![Arc::clone(&s)]);
+        s.try_bill(f, 0, 8192).unwrap();
+        let b = s.try_bill(f, 4096, 8192).unwrap();
+        assert_eq!(b.seeks, 0);
+        assert_eq!(b.fresh, 4096, "only the tail is a fresh transfer");
+        // fully covered extent costs nothing but queueing
+        let b = s.try_bill(f, 0, 4096).unwrap();
+        assert_eq!((b.seeks, b.fresh), (0, 0));
+    }
+
+    #[test]
+    fn distant_extent_still_seeks() {
+        let s = sched();
+        let f = s.register_file();
+        let _w = MergeWindow::open(vec![Arc::clone(&s)]);
+        s.try_bill(f, 0, 4096).unwrap();
+        let b = s.try_bill(f, 1 << 20, 4096).unwrap();
+        assert_eq!(b.seeks, 1);
+        assert_eq!(s.snapshot().seeks, 2);
+    }
+
+    #[test]
+    fn files_do_not_merge_with_each_other() {
+        let s = sched();
+        let f1 = s.register_file();
+        let f2 = s.register_file();
+        let _w = MergeWindow::open(vec![Arc::clone(&s)]);
+        s.try_bill(f1, 0, 4096).unwrap();
+        let b = s.try_bill(f2, 4096, 4096).unwrap();
+        assert_eq!(b.seeks, 1, "different file, different extent map");
+    }
+
+    #[test]
+    fn window_close_forgets_extents() {
+        let s = sched();
+        let f = s.register_file();
+        {
+            let _w = MergeWindow::open(vec![Arc::clone(&s)]);
+            s.try_bill(f, 0, 4096).unwrap();
+        }
+        assert!(s.try_bill(f, 4096, 4096).is_none(), "window closed");
+        let _w = MergeWindow::open(vec![Arc::clone(&s)]);
+        let b = s.try_bill(f, 4096, 4096).unwrap();
+        assert_eq!(b.seeks, 1, "new window starts cold");
+        assert_eq!(s.snapshot().window_opens, 2);
+    }
+
+    #[test]
+    fn nested_windows_share_extent_state() {
+        let s = sched();
+        let f = s.register_file();
+        let w1 = MergeWindow::open(vec![Arc::clone(&s)]);
+        let w2 = MergeWindow::open(vec![Arc::clone(&s)]);
+        s.try_bill(f, 0, 4096).unwrap();
+        drop(w1);
+        // w2 still open: extents survive
+        let b = s.try_bill(f, 4096, 4096).unwrap();
+        assert_eq!(b.seeks, 0, "concurrent shards merge against each other");
+        drop(w2);
+        assert!(!s.window_open());
+    }
+
+    #[test]
+    fn utilization_reflects_seek_overhead() {
+        let s = sched();
+        let f = s.register_file();
+        let _w = MergeWindow::open(vec![Arc::clone(&s)]);
+        // one seek + 1 MiB sequential: utilization near 1
+        s.try_bill(f, 0, 1 << 20).unwrap();
+        assert!(s.utilization() > 0.9, "got {}", s.utilization());
+        // many scattered 4 KiB extents drag it down
+        for i in 0..64u64 {
+            s.try_bill(f, (8 << 20) + i * (1 << 20), 4096).unwrap();
+        }
+        assert!(s.utilization() < 0.9, "got {}", s.utilization());
+    }
+}

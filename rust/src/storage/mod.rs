@@ -10,6 +10,7 @@ pub mod backend;
 pub mod dir;
 pub mod fault;
 pub mod file;
+pub mod iosched;
 pub mod mem;
 pub mod node;
 pub mod store;
@@ -20,6 +21,7 @@ pub use backend::{Backend, BackendRef};
 pub use dir::DirStore;
 pub use fault::{FaultInjectingBackend, FaultInjector, FaultStore};
 pub use file::FileBackend;
+pub use iosched::{IoSchedSnapshot, IoScheduler, MergeWindow};
 pub use mem::MemBackend;
 pub use node::StorageNode;
 pub use store::FileStore;

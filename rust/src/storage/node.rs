@@ -14,6 +14,7 @@
 
 use super::backend::BackendRef;
 use super::fault::FaultInjector;
+use super::iosched::IoScheduler;
 use super::mem::MemBackend;
 use super::timed::Timed;
 use super::watch::{Watched, WriteLog};
@@ -59,6 +60,10 @@ pub struct StorageNode {
     /// durable events and every backend is fault-wrapped (the
     /// crash-injection suite's whole-node power-cut model).
     injector: Option<Arc<FaultInjector>>,
+    /// The node device's I/O scheduler: shard executors open merge
+    /// windows on it so contiguous extents from different VMs bill as
+    /// one device pass (see [`super::iosched`]).
+    sched: Arc<IoScheduler>,
     /// physical capacity in bytes (thin-provisioning trigger); u64::MAX =
     /// unlimited
     pub capacity: u64,
@@ -109,6 +114,7 @@ impl StorageNode {
             reclaimed: AtomicU64::new(0),
             gc_deletes: AtomicU64::new(0),
             injector,
+            sched: IoScheduler::new(cost),
             capacity,
         })
     }
@@ -124,18 +130,20 @@ impl StorageNode {
             inj.durable_event()?;
         }
         let timed: BackendRef = match &self.injector {
-            Some(inj) => Arc::new(Timed::new(
+            Some(inj) => Arc::new(Timed::with_scheduler(
                 super::fault::FaultInjectingBackend::new(
                     Arc::new(MemBackend::new()),
                     Arc::clone(inj),
                 ),
                 Arc::clone(&self.clock),
                 self.cost,
+                Arc::clone(&self.sched),
             )),
-            None => Arc::new(Timed::new(
+            None => Arc::new(Timed::with_scheduler(
                 MemBackend::new(),
                 Arc::clone(&self.clock),
                 self.cost,
+                Arc::clone(&self.sched),
             )),
         };
         let log = Arc::new(WriteLog::default());
@@ -355,6 +363,11 @@ impl StorageNode {
 
     pub fn clock(&self) -> &Arc<VirtClock> {
         &self.clock
+    }
+
+    /// The node device's I/O scheduler (merge windows, utilization).
+    pub fn scheduler(&self) -> &Arc<IoScheduler> {
+        &self.sched
     }
 
     pub fn cost(&self) -> CostModel {

@@ -6,6 +6,7 @@
 //! testbed, reduced to its cost structure.
 
 use super::backend::Backend;
+use super::iosched::IoScheduler;
 use crate::metrics::clock::{CostModel, VirtClock};
 use anyhow::Result;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -18,11 +19,37 @@ pub struct Timed<B: Backend> {
     cost: CostModel,
     ios: AtomicU64,
     bytes: AtomicU64,
+    /// Node I/O scheduler plus this file's id on it. While a shard holds
+    /// a merge window open on the scheduler, extents are billed through
+    /// it (cross-VM merging); otherwise billing is the classic
+    /// per-request path below, bit for bit.
+    sched: Option<(Arc<IoScheduler>, u64)>,
 }
 
 impl<B: Backend> Timed<B> {
     pub fn new(inner: B, clock: Arc<VirtClock>, cost: CostModel) -> Self {
-        Timed { inner, clock, cost, ios: AtomicU64::new(0), bytes: AtomicU64::new(0) }
+        Timed {
+            inner,
+            clock,
+            cost,
+            ios: AtomicU64::new(0),
+            bytes: AtomicU64::new(0),
+            sched: None,
+        }
+    }
+
+    /// A timed file whose billing can be merged across VMs by the
+    /// node's I/O scheduler (see [`super::iosched`]).
+    pub fn with_scheduler(
+        inner: B,
+        clock: Arc<VirtClock>,
+        cost: CostModel,
+        sched: Arc<IoScheduler>,
+    ) -> Self {
+        let file_id = sched.register_file();
+        let mut t = Timed::new(inner, clock, cost);
+        t.sched = Some((sched, file_id));
+        t
     }
 
     /// Total device I/O operations issued through this file.
@@ -40,6 +67,22 @@ impl<B: Backend> Timed<B> {
         self.ios.fetch_add(1, Ordering::Relaxed);
         self.bytes.fetch_add(len, Ordering::Relaxed);
     }
+
+    /// Bill one extent: through the node scheduler when a merge window
+    /// is open (an extent touching one already serviced in the window
+    /// pays no seek and no re-transferred bytes), classic Eq. 1
+    /// accounting otherwise.
+    fn pay_at(&self, off: u64, len: u64) {
+        if let Some((sched, file)) = &self.sched {
+            if let Some(bill) = sched.try_bill(*file, off, len) {
+                self.clock.advance(bill.ns);
+                self.ios.fetch_add(bill.seeks, Ordering::Relaxed);
+                self.bytes.fetch_add(bill.fresh, Ordering::Relaxed);
+                return;
+            }
+        }
+        self.pay(len);
+    }
 }
 
 impl<B: Backend> Timed<B> {
@@ -56,7 +99,7 @@ impl<B: Backend> Timed<B> {
                 end += spans[j].1;
                 j += 1;
             }
-            self.pay(end - start);
+            self.pay_at(start, end - start);
             i = j;
         }
     }
@@ -64,12 +107,12 @@ impl<B: Backend> Timed<B> {
 
 impl<B: Backend> Backend for Timed<B> {
     fn read_at(&self, buf: &mut [u8], off: u64) -> Result<()> {
-        self.pay(buf.len() as u64);
+        self.pay_at(off, buf.len() as u64);
         self.inner.read_at(buf, off)
     }
 
     fn write_at(&self, data: &[u8], off: u64) -> Result<()> {
-        self.pay(data.len() as u64);
+        self.pay_at(off, data.len() as u64);
         self.inner.write_at(data, off)
     }
 
@@ -107,6 +150,10 @@ impl<B: Backend> Backend for Timed<B> {
         // a durability barrier is one round trip to the device (NFS
         // COMMIT): layer traversal + device access, no data transfer
         self.clock.advance(self.cost.io_ns(0));
+        if let Some((sched, _)) = &self.sched {
+            // count the barrier's busy time toward utilization
+            sched.note_flush();
+        }
         self.inner.flush()
     }
 
@@ -115,8 +162,8 @@ impl<B: Backend> Backend for Timed<B> {
         self.inner.shrink_to(len)
     }
 
-    fn charge(&self, _off: u64, len: u64) {
-        self.pay(len);
+    fn charge(&self, off: u64, len: u64) {
+        self.pay_at(off, len);
     }
 
     fn stored_bytes(&self) -> u64 {
@@ -203,6 +250,39 @@ mod tests {
         b.read_vectored(&mut iovs).unwrap();
         assert_eq!(clock.now() - t0, 2 * cost.io_ns(4096));
         assert_eq!(b.device_ios(), 2);
+    }
+
+    #[test]
+    fn merge_window_bills_adjacent_requests_as_one_seek() {
+        use crate::storage::iosched::{IoScheduler, MergeWindow};
+        let clock = VirtClock::new();
+        let cost = CostModel::default();
+        let sched = IoScheduler::new(cost);
+        let b = Timed::with_scheduler(
+            MemBackend::new(),
+            clock.clone(),
+            cost,
+            Arc::clone(&sched),
+        );
+        b.write_at(&[7u8; 128 << 10], 0).unwrap();
+        // no window open: two separate requests bill two seeks (classic)
+        let t0 = clock.now();
+        let mut buf = [0u8; 64 << 10];
+        b.read_at(&mut buf, 0).unwrap();
+        b.read_at(&mut buf, 64 << 10).unwrap();
+        assert_eq!(clock.now() - t0, 2 * cost.io_ns(64 << 10));
+        // window open: the adjacent second request merges
+        let w = MergeWindow::open(vec![Arc::clone(&sched)]);
+        let t1 = clock.now();
+        b.read_at(&mut buf, 0).unwrap();
+        b.read_at(&mut buf, 64 << 10).unwrap();
+        assert_eq!(
+            clock.now() - t1,
+            cost.io_ns(128 << 10),
+            "one seek + bandwidth for both extents"
+        );
+        drop(w);
+        assert_eq!(sched.snapshot().merged_seeks, 1);
     }
 
     #[test]

@@ -3,9 +3,12 @@
 //! property-testing driver, size/format helpers and summary statistics.
 
 pub mod json;
+pub mod notify;
 pub mod prop;
 pub mod rng;
 pub mod stats;
+
+pub use notify::Notify;
 
 /// Format a byte count using binary units (the units the paper plots in).
 pub fn human_bytes(n: u64) -> String {

@@ -1,0 +1,112 @@
+//! Parked wakeup: a latching condition-variable doorbell.
+//!
+//! The sharded data plane parks an executor when none of its VMs have
+//! submission-queue entries or runnable jobs; submitters, control
+//! messages and job resume/cancel ring the doorbell. The flag latches,
+//! so a notification delivered between the executor's "nothing to do"
+//! check and its park is never lost — `wait` returns immediately.
+
+use std::sync::{Condvar, Mutex, PoisonError};
+use std::time::Duration;
+
+/// A latching wakeup signal (Mutex<bool> + Condvar).
+///
+/// `notify` sets the flag and wakes all waiters; `wait`/`wait_timeout`
+/// block until the flag is set, then consume it. Poisoning is recovered
+/// like every other coordinator lock: the flag's invariant holds between
+/// individual writes.
+#[derive(Debug, Default)]
+pub struct Notify {
+    flag: Mutex<bool>,
+    cv: Condvar,
+}
+
+impl Notify {
+    pub fn new() -> Self {
+        Notify::default()
+    }
+
+    /// Ring the doorbell: latch the flag and wake every parked waiter.
+    pub fn notify(&self) {
+        let mut g = self
+            .flag
+            .lock()
+            .unwrap_or_else(PoisonError::into_inner);
+        *g = true;
+        drop(g);
+        self.cv.notify_all();
+    }
+
+    /// Park until notified (consumes the latched flag).
+    pub fn wait(&self) {
+        let mut g = self
+            .flag
+            .lock()
+            .unwrap_or_else(PoisonError::into_inner);
+        while !*g {
+            g = self
+                .cv
+                .wait(g)
+                .unwrap_or_else(PoisonError::into_inner);
+        }
+        *g = false;
+    }
+
+    /// Park until notified or `timeout` elapses. Returns true if a
+    /// notification was consumed, false on timeout.
+    pub fn wait_timeout(&self, timeout: Duration) -> bool {
+        let deadline = std::time::Instant::now() + timeout;
+        let mut g = self
+            .flag
+            .lock()
+            .unwrap_or_else(PoisonError::into_inner);
+        while !*g {
+            let now = std::time::Instant::now();
+            if now >= deadline {
+                return false;
+            }
+            let (guard, _res) = self
+                .cv
+                .wait_timeout(g, deadline - now)
+                .unwrap_or_else(PoisonError::into_inner);
+            g = guard;
+        }
+        *g = false;
+        true
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn notify_before_wait_is_not_lost() {
+        let n = Notify::new();
+        n.notify();
+        // the latched flag makes this return immediately
+        n.wait();
+    }
+
+    #[test]
+    fn wait_timeout_reports_outcome() {
+        let n = Notify::new();
+        assert!(!n.wait_timeout(Duration::from_millis(5)), "no signal");
+        n.notify();
+        assert!(n.wait_timeout(Duration::from_millis(5)), "latched signal");
+    }
+
+    #[test]
+    fn cross_thread_wakeup() {
+        let n = Arc::new(Notify::new());
+        let n2 = Arc::clone(&n);
+        let h = std::thread::spawn(move || {
+            n2.wait();
+            7u32
+        });
+        std::thread::sleep(Duration::from_millis(10));
+        n.notify();
+        assert_eq!(h.join().unwrap(), 7);
+    }
+}

@@ -52,6 +52,24 @@ pub struct VecIoSnapshot {
     pub coalesced_bytes: u64,
 }
 
+/// One operation of a ring submission, borrowing the caller's buffers
+/// (the shard executor's completion-friendly submit surface).
+#[derive(Debug)]
+pub enum DiskOp<'a> {
+    Read { voff: u64, buf: &'a mut [u8] },
+    Write { voff: u64, data: &'a [u8] },
+}
+
+/// Outcome of [`Driver::submit`]: how many leading ops completed, and
+/// the error that stopped the batch, if any.
+#[derive(Debug)]
+pub struct SubmitResult {
+    /// Ops fully executed, in submission order (== `ops.len()` iff
+    /// `error` is `None`).
+    pub completed: usize,
+    pub error: Option<anyhow::Error>,
+}
+
 /// A guest-facing block driver over a snapshot chain.
 pub trait Driver: Send {
     /// Read `buf.len()` bytes at virtual offset `voff`. Unallocated
@@ -84,6 +102,51 @@ pub trait Driver: Send {
             self.write(*voff, data)?;
         }
         Ok(())
+    }
+
+    /// Execute a mixed submission in order, grouping maximal runs of
+    /// consecutive same-kind ops into one `readv`/`writev` so the
+    /// vectored path's slice-batching and run-coalescing apply across a
+    /// ring burst. Stops at the first failing group; `completed` counts
+    /// the ops before it. Semantically identical to issuing the ops one
+    /// by one (per-VM program order is the ring's contract).
+    fn submit(&mut self, ops: &mut [DiskOp<'_>]) -> SubmitResult {
+        let mut done = 0;
+        while done < ops.len() {
+            let read_group = matches!(ops[done], DiskOp::Read { .. });
+            let mut end = done + 1;
+            while end < ops.len()
+                && matches!(ops[end], DiskOp::Read { .. }) == read_group
+            {
+                end += 1;
+            }
+            let res = if read_group {
+                let mut iovs: Vec<(u64, &mut [u8])> = ops[done..end]
+                    .iter_mut()
+                    .map(|op| match op {
+                        DiskOp::Read { voff, buf } => (*voff, &mut **buf),
+                        DiskOp::Write { .. } => unreachable!("read group"),
+                    })
+                    .collect();
+                self.readv(&mut iovs)
+            } else {
+                let iovs: Vec<(u64, &[u8])> = ops[done..end]
+                    .iter()
+                    .map(|op| match op {
+                        DiskOp::Write { voff, data } => (*voff, &**data),
+                        DiskOp::Read { .. } => unreachable!("write group"),
+                    })
+                    .collect();
+                self.writev(&iovs)
+            };
+            match res {
+                Ok(()) => done = end,
+                Err(e) => {
+                    return SubmitResult { completed: done, error: Some(e) }
+                }
+            }
+        }
+        SubmitResult { completed: done, error: None }
     }
 
     /// Write back all dirty cache slices.

@@ -75,6 +75,10 @@ pub enum JobKind {
     /// over atomically ([`crate::migrate::MirrorJob`]) — the live
     /// migration that turns static placement into a managed fleet.
     Mirror,
+    /// Walk chain heads and refresh per-node logical-byte accounting
+    /// ([`crate::dedup::CapacityScanJob`]) — the background form of
+    /// `refresh_capacity`, so recovery never serializes behind it.
+    Scan,
 }
 
 impl JobKind {
@@ -84,6 +88,7 @@ impl JobKind {
             JobKind::Stamp => "stamp",
             JobKind::Gc => "gc",
             JobKind::Mirror => "mirror",
+            JobKind::Scan => "scan",
         }
     }
 
@@ -93,6 +98,7 @@ impl JobKind {
             "stamp" => Some(JobKind::Stamp),
             "gc" => Some(JobKind::Gc),
             "mirror" => Some(JobKind::Mirror),
+            "scan" => Some(JobKind::Scan),
             _ => None,
         }
     }

@@ -224,6 +224,10 @@ fn job_start(args: &Args) -> Result<()> {
             "chain migration needs a multi-node fleet; try `sqemu migrate` \
              (coordinator demo)"
         ),
+        JobKind::Scan => bail!(
+            "capacity scans run on a coordinator fleet; try `sqemu control \
+             status` (HA demo)"
+        ),
     };
     let total = job.total_clusters();
     let len_before = chain.len();
@@ -303,7 +307,9 @@ fn job_start(args: &Args) -> Result<()> {
              sqemu format flag",
             chain.active().name
         ),
-        JobKind::Gc | JobKind::Mirror => unreachable!("rejected above"),
+        JobKind::Gc | JobKind::Mirror | JobKind::Scan => {
+            unreachable!("rejected above")
+        }
     }
     println!("qcheck: clean ({} consistent clusters)", report.ok_clusters);
     Ok(())
@@ -918,6 +924,126 @@ fn dedup_status(args: &Args) -> Result<()> {
     );
     coord.shutdown();
     Ok(())
+}
+
+/// `sqemu control status [--nodes N] [--vms V]`: run the demo fleet
+/// under the HA control plane — a write-ahead [`StateStore`] on a
+/// dedicated metadata node, lease-based VM ownership, a leader kill and
+/// a standby failover — and print the store status at each step.
+///
+/// [`StateStore`]: crate::control::StateStore
+pub fn control(verb: &str, args: &Args) -> Result<()> {
+    match verb {
+        "status" => control_status(args),
+        other => bail!("unknown control verb '{other}' (try status)"),
+    }
+}
+
+fn control_status(args: &Args) -> Result<()> {
+    use crate::control::StateStore;
+    use crate::coordinator::server::CoordinatorConfig;
+    use crate::coordinator::NodeSet;
+    use crate::metrics::clock::{CostModel, VirtClock};
+    use crate::storage::node::StorageNode;
+    let n_nodes = (args.u64_or("nodes", 2)? as usize).max(1);
+    let vms = (args.u64_or("vms", 4)? as usize).max(1);
+    let clock = VirtClock::new();
+    let data_nodes = (0..n_nodes)
+        .map(|i| {
+            StorageNode::new(&format!("node-{i}"), clock.clone(), CostModel::default())
+        })
+        .collect();
+    let nodes = std::sync::Arc::new(NodeSet::new(data_nodes)?);
+    // the control log lives OFF the data plane, on its own metadata node
+    let meta = StorageNode::new("meta-0", clock.clone(), CostModel::default());
+    let store = StateStore::open(std::sync::Arc::clone(&meta))?;
+    let cfg = CoordinatorConfig {
+        lease_ttl_ns: 2_000_000_000,
+        ..Default::default()
+    };
+    let a = Coordinator::new(
+        std::sync::Arc::clone(&nodes),
+        clock.clone(),
+        cfg.clone(),
+        None,
+    );
+    a.attach_control(std::sync::Arc::clone(&store), "coord-a")?;
+    a.campaign()?;
+    for v in 0..vms {
+        let name = format!("vm-{v}");
+        let pin = nodes.pinned(&format!("node-{}", v % n_nodes))?;
+        crate::chaingen::generate(
+            &pin,
+            &ChainSpec {
+                disk_size: 16 << 20,
+                chain_len: 3,
+                populated: 0.3,
+                stamped: true,
+                data_mode: DataMode::Synthetic,
+                prefix: name.clone(),
+                seed: 0xC0DE ^ v as u64,
+                ..Default::default()
+            },
+        )?;
+        a.launch_vm(
+            &name,
+            VmConfig {
+                driver: DriverKind::Scalable,
+                cache: CacheConfig::new(128, 2 << 20),
+                chain: VmChain::Existing {
+                    active_name: format!("{name}-2"),
+                    data_mode: DataMode::Synthetic,
+                },
+            },
+        )?;
+    }
+    for name in a.vm_names() {
+        let client = a.client(&name)?;
+        for i in 0..16u64 {
+            client.write(i * 4096, vec![0x5A; 4096])?;
+        }
+        client.flush()?;
+    }
+    println!("leader 'coord-a' holds the fleet:");
+    print_control_status(&a.control_status()?);
+    println!("\nkilling 'coord-a' (no drain, leases left in the log) ...");
+    a.halt();
+    let b = Coordinator::new(std::sync::Arc::clone(&nodes), clock, cfg, None);
+    b.attach_control(store, "coord-b")?;
+    let report = b.takeover()?;
+    println!(
+        "standby 'coord-b' took over: {} chain(s) re-adopted from {} \
+         logged lease(s) — no fleet scan ({} migration(s) resolved)",
+        report.chains_checked,
+        b.vm_names().len(),
+        report.migrations_committed + report.migrations_rolled_back,
+    );
+    println!("\nnew leader 'coord-b':");
+    print_control_status(&b.control_status()?);
+    b.shutdown_clean()?;
+    println!("\nafter clean shutdown (next recovery skips the repair scan):");
+    print_control_status(&b.control_status()?);
+    Ok(())
+}
+
+fn print_control_status(st: &crate::control::StoreStatus) {
+    println!(
+        "  log:   generation {}, {} records ({}), {}",
+        st.generation,
+        st.records,
+        human_bytes(st.log_bytes),
+        if st.wedged { "WEDGED" } else { "healthy" },
+    );
+    println!(
+        "  epoch: {} (leader {})",
+        st.epoch,
+        if st.leader.is_empty() { "(none)" } else { &st.leader },
+    );
+    println!(
+        "  fleet: {} vm(s), {} lease(s), {} job(s), {} migration(s) in \
+         flight, clean shutdown: {}",
+        st.vms, st.leases, st.jobs, st.migrations, st.clean_shutdown,
+    );
 }
 
 /// `sqemu migrate --vm V --to NODE [--rate 64M]`: live-migrate one VM's

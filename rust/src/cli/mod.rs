@@ -21,6 +21,7 @@
 //! sqemu rebalance [--dry-run] [--threshold 1.5]       # fleet rebalancer
 //! sqemu node status [--nodes N] [--vms V]     # per-node capacity + per-shard queues
 //! sqemu dedup status [--nodes N] [--vms V]    # capacity-multiplication demo
+//! sqemu control status [--nodes N] [--vms V]  # HA control-plane demo (log, leases, failover)
 //! sqemu bench   [--json [path]]               # CI perf smoke artifact
 //! sqemu selftest                              # artifacts + runtime
 //! ```
@@ -67,6 +68,14 @@ pub fn run(argv: Vec<String>) -> Result<()> {
         };
         let args = Args::parse(rest)?;
         return commands::dedup(verb, &args);
+    }
+    if cmd == "control" {
+        // `sqemu control <verb> --flags ...` — the verb is positional
+        let Some((verb, rest)) = rest.split_first() else {
+            bail!("usage: sqemu control status [--nodes N] [--vms V]");
+        };
+        let args = Args::parse(rest)?;
+        return commands::control(verb, &args);
     }
     let args = Args::parse(rest)?;
     match cmd.as_str() {
@@ -115,6 +124,7 @@ fn print_usage() {
          \x20 rebalance [--dry-run] [--threshold 1.5] [--rate 256M]\n\
          \x20 node status [--nodes N] [--vms V] [--chain L]\n\
          \x20 dedup status [--nodes N] [--vms V] [--writes W]\n\
+         \x20 control status [--nodes N] [--vms V]   # HA log + leases + failover\n\
          \x20 bench [--json [path]]   # CI smoke run -> BENCH_hotpath.json\n\
          \x20 selftest\n\
          \n\

@@ -1,0 +1,76 @@
+//! Lease-based VM ownership.
+//!
+//! A coordinator may only serve a VM while it holds that VM's lease in
+//! the [`super::StateStore`]. Leases are granted against the *virtual*
+//! clock shared by the whole fleet (tests drive expiry by advancing
+//! it), renewed by the leader's heartbeat, and adjudicated entirely
+//! store-side: acquisition fails while a different holder's lease is
+//! unexpired, so at most one coordinator owns a VM at any instant. An
+//! expired lease is the failover signal — the new leader's
+//! `Coordinator::takeover()` tears down whatever the dead owner left
+//! behind (rings, capacity reservations, half-finished jobs) and
+//! re-adopts the chain.
+
+use std::collections::HashMap;
+
+/// One VM's ownership claim.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Lease {
+    /// The coordinator instance holding the claim.
+    pub holder: String,
+    /// Virtual-clock ns past which the claim is void.
+    pub expires_ns: u64,
+}
+
+impl Lease {
+    pub fn expired(&self, now_ns: u64) -> bool {
+        self.expires_ns <= now_ns
+    }
+}
+
+/// Partition a lease table into (live, expired) at `now_ns`, each
+/// sorted by VM name so callers iterate deterministically.
+pub fn partition_leases(
+    leases: &HashMap<String, Lease>,
+    now_ns: u64,
+) -> (Vec<(String, Lease)>, Vec<(String, Lease)>) {
+    let mut live = Vec::new();
+    let mut expired = Vec::new();
+    for (vm, lease) in leases {
+        if lease.expired(now_ns) {
+            expired.push((vm.clone(), lease.clone()));
+        } else {
+            live.push((vm.clone(), lease.clone()));
+        }
+    }
+    live.sort();
+    expired.sort();
+    (live, expired)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn expiry_is_inclusive_at_the_boundary() {
+        let l = Lease { holder: "a".into(), expires_ns: 100 };
+        assert!(!l.expired(99));
+        assert!(l.expired(100), "a lease is void AT its expiry instant");
+        assert!(l.expired(101));
+    }
+
+    #[test]
+    fn partition_sorts_deterministically() {
+        let mut t = HashMap::new();
+        t.insert("vm-b".to_string(), Lease { holder: "x".into(), expires_ns: 50 });
+        t.insert("vm-a".to_string(), Lease { holder: "x".into(), expires_ns: 500 });
+        t.insert("vm-c".to_string(), Lease { holder: "y".into(), expires_ns: 10 });
+        let (live, expired) = partition_leases(&t, 100);
+        assert_eq!(live.len(), 1);
+        assert_eq!(live[0].0, "vm-a");
+        assert_eq!(expired.len(), 2);
+        assert_eq!(expired[0].0, "vm-b");
+        assert_eq!(expired[1].0, "vm-c");
+    }
+}

@@ -1,0 +1,28 @@
+//! The durable, highly-available control plane (DESIGN.md §15).
+//!
+//! Everything the coordinator used to keep only in process memory —
+//! the placement name→node index, the GC registry's refcounts and
+//! condemned sets, the migration journal index, block-job descriptors,
+//! VM definitions — is persisted as it mutates into a write-ahead
+//! [`StateStore`] on a dedicated metadata node. Recovery becomes log
+//! replay plus per-lease validation, O(active leases) instead of the
+//! O(fleet) node scans of the PR-4 path (which survives as the
+//! fallback for a log torn beyond its last valid snapshot).
+//!
+//! The same store arbitrates multi-coordinator operation: epoch-fenced
+//! leader election ([`StateStore::campaign`]) plus per-VM ownership
+//! [`Lease`]s. A standby tails the log with [`StateStore::reopen`],
+//! campaigns when the leader dies, and `Coordinator::takeover()`
+//! re-adopts exactly the VMs whose leases expired — the failover cost
+//! is proportional to active work, never to fleet size (the paper's
+//! scale argument, applied to the control plane itself).
+
+pub mod lease;
+pub mod record;
+pub mod statestore;
+
+pub use lease::{partition_leases, Lease};
+pub use record::ControlRecord;
+pub use statestore::{
+    FleetView, JobRecord, StateStore, StoreStatus, VmSpec,
+};

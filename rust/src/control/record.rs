@@ -1,0 +1,392 @@
+//! The StateStore's durable record vocabulary and on-disk framing.
+//!
+//! Every control-plane mutation is one text record — a whitespace-
+//! separated line, human-readable with `sqemu control status` or a hex
+//! dump — wrapped in a checksummed, length-prefixed frame:
+//!
+//! ```text
+//! [u32 payload len (LE)] [u32 FNV-1a-32 of payload (LE)] [payload]
+//! ```
+//!
+//! Replay walks frames until the first invalid one (short, zero/insane
+//! length, checksum mismatch, non-UTF-8): everything before it is the
+//! durable prefix, everything after is a torn tail from a crashed
+//! append and is overwritten by the next write. *Unknown* record tags
+//! inside a valid frame are skipped, not fatal, so an older replica can
+//! tail a log written by a newer one (forward compatibility).
+//!
+//! Names (files, nodes, VMs, holders) are single tokens: the fleet's
+//! naming scheme (`vm-3`, `node-0`, `disk-7`) never contains
+//! whitespace, and the codec encodes the empty string as `-`.
+
+use crate::blockjob::JobKind;
+use crate::qcow::image::DataMode;
+use crate::vdisk::DriverKind;
+
+/// Largest payload a frame may carry; anything bigger at replay time is
+/// treated as a torn length word, not an allocation request.
+pub const MAX_PAYLOAD: usize = 1 << 20;
+
+/// One durable control-plane mutation. See the module docs for the
+/// wire format; `encode`/`parse` are exact inverses for every variant.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum ControlRecord {
+    /// Leader election: `leader` now owns write access under `epoch`.
+    Epoch { epoch: u64, leader: String },
+    /// The name→node placement index gained an entry.
+    Place { file: String, node: String },
+    /// The placement index dropped an entry.
+    Unplace { file: String },
+    /// A chain's full file list (base first, active last).
+    Chain { id: String, files: Vec<String> },
+    /// A chain left the registry (decommission).
+    ChainDrop { id: String },
+    /// A file entered the deferred-delete set.
+    Condemn { file: String, bytes: u64, origin: String },
+    /// A condemned file was resurrected by a new reference.
+    Uncondemn { file: String },
+    /// A condemned file was physically deleted by a sweep.
+    Swept { file: String },
+    /// A superseded migration replica was condemned on `node`.
+    CondemnReplica { node: String, file: String, bytes: u64, origin: String },
+    /// A condemned replica was physically deleted.
+    SweptReplica { node: String, file: String },
+    /// A VM definition: everything needed to re-adopt its chain.
+    Vm {
+        name: String,
+        driver: DriverKind,
+        slice_entries: u64,
+        max_bytes: u64,
+        data_mode: DataMode,
+        active: String,
+    },
+    /// A VM was stopped cleanly and needs no re-adoption.
+    VmStop { name: String },
+    /// `holder` owns `vm` until the virtual clock passes `expires_ns`.
+    Lease { vm: String, holder: String, expires_ns: u64 },
+    /// The lease on `vm` was released.
+    Unlease { vm: String },
+    /// Job-id fence: ids up to and including `job-<last>` were issued.
+    JobSeq { last: u64 },
+    /// A block job started; `capacity` records a target-node byte
+    /// reservation the job holds (released by orphan cleanup).
+    Job { id: String, vm: String, kind: JobKind, capacity: Option<(String, u64)> },
+    /// A block job reached a terminal state.
+    JobEnd { id: String },
+    /// A chain migration of `vm` toward `target` is in flight.
+    Migration { vm: String, target: String },
+    /// The migration of `vm` resolved (either way).
+    MigrationEnd { vm: String },
+    /// Clean-shutdown marker: when this is the log's last record, the
+    /// whole fleet state is exactly what the log says (skip all scans).
+    Shutdown,
+    /// First record of a compacted generation.
+    Snapshot,
+}
+
+fn tok(s: &str) -> &str {
+    if s.is_empty() { "-" } else { s }
+}
+
+fn untok(s: &str) -> String {
+    if s == "-" { String::new() } else { s.to_string() }
+}
+
+fn driver_parse(s: &str) -> Option<DriverKind> {
+    match s {
+        "vqemu" => Some(DriverKind::Vanilla),
+        "sqemu" => Some(DriverKind::Scalable),
+        _ => None,
+    }
+}
+
+fn mode_name(m: DataMode) -> &'static str {
+    match m {
+        DataMode::Real => "real",
+        DataMode::Synthetic => "synthetic",
+    }
+}
+
+fn mode_parse(s: &str) -> Option<DataMode> {
+    match s {
+        "real" => Some(DataMode::Real),
+        "synthetic" => Some(DataMode::Synthetic),
+        _ => None,
+    }
+}
+
+impl ControlRecord {
+    /// Serialize to one whitespace-separated text line.
+    pub fn encode(&self) -> String {
+        use ControlRecord::*;
+        match self {
+            Epoch { epoch, leader } => {
+                format!("epoch {epoch} {}", tok(leader))
+            }
+            Place { file, node } => format!("place {file} {node}"),
+            Unplace { file } => format!("unplace {file}"),
+            Chain { id, files } => {
+                let mut s = format!("chain {id}");
+                for f in files {
+                    s.push(' ');
+                    s.push_str(f);
+                }
+                s
+            }
+            ChainDrop { id } => format!("chaindrop {id}"),
+            Condemn { file, bytes, origin } => {
+                format!("condemn {file} {bytes} {}", tok(origin))
+            }
+            Uncondemn { file } => format!("uncondemn {file}"),
+            Swept { file } => format!("swept {file}"),
+            CondemnReplica { node, file, bytes, origin } => {
+                format!("rcondemn {node} {file} {bytes} {}", tok(origin))
+            }
+            SweptReplica { node, file } => format!("rswept {node} {file}"),
+            Vm { name, driver, slice_entries, max_bytes, data_mode, active } => {
+                format!(
+                    "vm {name} {} {slice_entries} {max_bytes} {} {active}",
+                    driver.name(),
+                    mode_name(*data_mode)
+                )
+            }
+            VmStop { name } => format!("vmstop {name}"),
+            Lease { vm, holder, expires_ns } => {
+                format!("lease {vm} {} {expires_ns}", tok(holder))
+            }
+            Unlease { vm } => format!("unlease {vm}"),
+            JobSeq { last } => format!("jobseq {last}"),
+            Job { id, vm, kind, capacity } => match capacity {
+                Some((node, bytes)) => {
+                    format!("job {id} {vm} {} {node} {bytes}", kind.name())
+                }
+                None => format!("job {id} {vm} {}", kind.name()),
+            },
+            JobEnd { id } => format!("jobend {id}"),
+            Migration { vm, target } => format!("mig {vm} {target}"),
+            MigrationEnd { vm } => format!("migend {vm}"),
+            Shutdown => "shutdown".to_string(),
+            Snapshot => "snapshot".to_string(),
+        }
+    }
+
+    /// Parse one line; `None` for unknown tags or malformed arity (the
+    /// caller skips the record — see the module docs).
+    pub fn parse(line: &str) -> Option<ControlRecord> {
+        use ControlRecord::*;
+        let mut it = line.split_ascii_whitespace();
+        let rec = match it.next()? {
+            "epoch" => Epoch {
+                epoch: it.next()?.parse().ok()?,
+                leader: untok(it.next()?),
+            },
+            "place" => Place {
+                file: it.next()?.to_string(),
+                node: it.next()?.to_string(),
+            },
+            "unplace" => Unplace { file: it.next()?.to_string() },
+            "chain" => Chain {
+                id: it.next()?.to_string(),
+                files: it.map(str::to_string).collect(),
+            },
+            "chaindrop" => ChainDrop { id: it.next()?.to_string() },
+            "condemn" => Condemn {
+                file: it.next()?.to_string(),
+                bytes: it.next()?.parse().ok()?,
+                origin: untok(it.next()?),
+            },
+            "uncondemn" => Uncondemn { file: it.next()?.to_string() },
+            "swept" => Swept { file: it.next()?.to_string() },
+            "rcondemn" => CondemnReplica {
+                node: it.next()?.to_string(),
+                file: it.next()?.to_string(),
+                bytes: it.next()?.parse().ok()?,
+                origin: untok(it.next()?),
+            },
+            "rswept" => SweptReplica {
+                node: it.next()?.to_string(),
+                file: it.next()?.to_string(),
+            },
+            "vm" => Vm {
+                name: it.next()?.to_string(),
+                driver: driver_parse(it.next()?)?,
+                slice_entries: it.next()?.parse().ok()?,
+                max_bytes: it.next()?.parse().ok()?,
+                data_mode: mode_parse(it.next()?)?,
+                active: it.next()?.to_string(),
+            },
+            "vmstop" => VmStop { name: it.next()?.to_string() },
+            "lease" => Lease {
+                vm: it.next()?.to_string(),
+                holder: untok(it.next()?),
+                expires_ns: it.next()?.parse().ok()?,
+            },
+            "unlease" => Unlease { vm: it.next()?.to_string() },
+            "jobseq" => JobSeq { last: it.next()?.parse().ok()? },
+            "job" => {
+                let id = it.next()?.to_string();
+                let vm = it.next()?.to_string();
+                let kind = JobKind::parse(it.next()?)?;
+                let capacity = match it.next() {
+                    Some(node) => {
+                        Some((node.to_string(), it.next()?.parse().ok()?))
+                    }
+                    None => None,
+                };
+                Job { id, vm, kind, capacity }
+            }
+            "jobend" => JobEnd { id: it.next()?.to_string() },
+            "mig" => Migration {
+                vm: it.next()?.to_string(),
+                target: it.next()?.to_string(),
+            },
+            "migend" => MigrationEnd { vm: it.next()?.to_string() },
+            "shutdown" => Shutdown,
+            "snapshot" => Snapshot,
+            _ => return None,
+        };
+        Some(rec)
+    }
+}
+
+/// FNV-1a over `data`, 32-bit — the same family the coordinator's shard
+/// router uses; cheap and good enough to reject torn frames (the threat
+/// model is a truncated write, not an adversary).
+pub fn fnv1a32(data: &[u8]) -> u32 {
+    let mut h: u32 = 0x811c_9dc5;
+    for &b in data {
+        h ^= u32::from(b);
+        h = h.wrapping_mul(0x0100_0193);
+    }
+    h
+}
+
+/// Wrap a payload line in its length + checksum frame.
+pub fn frame(payload: &str) -> Vec<u8> {
+    let bytes = payload.as_bytes();
+    let mut out = Vec::with_capacity(8 + bytes.len());
+    out.extend_from_slice(&(bytes.len() as u32).to_le_bytes());
+    out.extend_from_slice(&fnv1a32(bytes).to_le_bytes());
+    out.extend_from_slice(bytes);
+    out
+}
+
+/// Decode the frame starting at `buf[off..]`. `None` means "the valid
+/// prefix ends here": too short, zero or oversized length, checksum
+/// mismatch, or a non-UTF-8 payload.
+pub fn decode_frame(buf: &[u8], off: usize) -> Option<(&str, usize)> {
+    let rest = buf.get(off..)?;
+    if rest.len() < 8 {
+        return None;
+    }
+    let len = u32::from_le_bytes(rest[0..4].try_into().ok()?) as usize;
+    if len == 0 || len > MAX_PAYLOAD || rest.len() < 8 + len {
+        return None;
+    }
+    let want = u32::from_le_bytes(rest[4..8].try_into().ok()?);
+    let payload = &rest[8..8 + len];
+    if fnv1a32(payload) != want {
+        return None;
+    }
+    let text = std::str::from_utf8(payload).ok()?;
+    Some((text, off + 8 + len))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn all_variants() -> Vec<ControlRecord> {
+        use ControlRecord::*;
+        vec![
+            Epoch { epoch: 7, leader: "coord-a".into() },
+            Epoch { epoch: 0, leader: String::new() },
+            Place { file: "disk-0".into(), node: "node-1".into() },
+            Unplace { file: "disk-0".into() },
+            Chain {
+                id: "vm-0".into(),
+                files: vec!["base".into(), "top".into()],
+            },
+            Chain { id: "vm-1".into(), files: vec![] },
+            ChainDrop { id: "vm-0".into() },
+            Condemn { file: "old".into(), bytes: 4096, origin: "vm-0".into() },
+            Uncondemn { file: "old".into() },
+            Swept { file: "old".into() },
+            CondemnReplica {
+                node: "node-0".into(),
+                file: "img".into(),
+                bytes: 123,
+                origin: "vm-2".into(),
+            },
+            SweptReplica { node: "node-0".into(), file: "img".into() },
+            Vm {
+                name: "vm-0".into(),
+                driver: crate::vdisk::DriverKind::Scalable,
+                slice_entries: 512,
+                max_bytes: 1 << 20,
+                data_mode: crate::qcow::image::DataMode::Real,
+                active: "vm-0-s2".into(),
+            },
+            VmStop { name: "vm-0".into() },
+            Lease { vm: "vm-0".into(), holder: "coord-a".into(), expires_ns: 99 },
+            Unlease { vm: "vm-0".into() },
+            JobSeq { last: 41 },
+            Job {
+                id: "job-3".into(),
+                vm: "vm-0".into(),
+                kind: crate::blockjob::JobKind::Mirror,
+                capacity: Some(("node-1".into(), 1 << 30)),
+            },
+            Job {
+                id: "job-4".into(),
+                vm: "vm-1".into(),
+                kind: crate::blockjob::JobKind::Stream,
+                capacity: None,
+            },
+            JobEnd { id: "job-3".into() },
+            Migration { vm: "vm-0".into(), target: "node-1".into() },
+            MigrationEnd { vm: "vm-0".into() },
+            Shutdown,
+            Snapshot,
+        ]
+    }
+
+    #[test]
+    fn every_variant_round_trips() {
+        for rec in all_variants() {
+            let line = rec.encode();
+            let back = ControlRecord::parse(&line)
+                .unwrap_or_else(|| panic!("unparsable: {line}"));
+            assert_eq!(back, rec, "{line}");
+        }
+    }
+
+    #[test]
+    fn unknown_and_malformed_lines_are_skipped_not_fatal() {
+        assert_eq!(ControlRecord::parse("futurerec a b c"), None);
+        assert_eq!(ControlRecord::parse(""), None);
+        assert_eq!(ControlRecord::parse("epoch notanumber x"), None);
+        assert_eq!(ControlRecord::parse("place onlyonetoken"), None);
+        assert_eq!(ControlRecord::parse("vm v badkind 1 2 real a"), None);
+    }
+
+    #[test]
+    fn frames_survive_and_reject() {
+        let a = frame("epoch 1 me");
+        let b = frame("place f n0");
+        let mut buf = [a.clone(), b.clone()].concat();
+        let (t1, off1) = decode_frame(&buf, 0).unwrap();
+        assert_eq!(t1, "epoch 1 me");
+        let (t2, off2) = decode_frame(&buf, off1).unwrap();
+        assert_eq!(t2, "place f n0");
+        assert_eq!(off2, buf.len());
+        assert!(decode_frame(&buf, off2).is_none(), "clean end of log");
+        // flip one payload byte: checksum rejects the frame
+        buf[a.len() + 9] ^= 0xff;
+        assert!(decode_frame(&buf, a.len()).is_none());
+        // torn tail: drop the last byte of an otherwise valid frame
+        assert!(decode_frame(&a[..a.len() - 1], 0).is_none());
+        // zero-length frames terminate replay (zeroed preallocation)
+        assert!(decode_frame(&[0u8; 16], 0).is_none());
+    }
+}

@@ -1,0 +1,937 @@
+//! The write-ahead StateStore: the control plane's durable memory and
+//! its multi-coordinator arbiter.
+//!
+//! One [`StateStore`] lives on a dedicated metadata
+//! [`StorageNode`] (the etcd of this fleet — *not* a data node, so
+//! data-path scans and capacity math never see control files). It keeps
+//! two files:
+//!
+//! * `.ctl.log.<gen>` — the append log of [`ControlRecord`] frames for
+//!   generation `gen`. Generation 0 starts empty; every later
+//!   generation starts with a `snapshot` marker followed by a full
+//!   re-emission of the fleet state (compaction).
+//! * `.ctl.gen` — a single-frame pointer naming the current
+//!   generation, overwritten in place only after the next generation
+//!   is durable (the atomic compaction flip).
+//!
+//! Crash safety is the WAL classic: every append is `write_at` +
+//! `flush` of one checksummed frame; replay stops at the first invalid
+//! frame and later appends overwrite the torn tail. A failed append
+//! *wedges* the store — the in-memory view no longer trusts the disk
+//! suffix — until [`StateStore::reopen`] re-replays the durable
+//! prefix.
+//!
+//! Epoch fencing: `campaign()` bumps the epoch and records the new
+//! leader; every fenced mutation carries the epoch its caller holds
+//! and is rejected when a later campaign has run. A deposed leader's
+//! control operations therefore fail at the persist gate, before they
+//! touch the fleet ([`FleetView`] is only advanced by records that
+//! landed). Data-plane bookkeeping (placement/GC observers) appends
+//! unfenced: those records describe mutations that already happened
+//! on shared storage, and compaction heals any drift.
+
+use super::lease::Lease;
+use super::record::{self, ControlRecord};
+use crate::blockjob::JobKind;
+use crate::cache::CacheConfig;
+use crate::qcow::image::DataMode;
+use crate::storage::backend::BackendRef;
+use crate::storage::node::StorageNode;
+use crate::util::lock_unpoisoned;
+use crate::vdisk::DriverKind;
+use anyhow::{bail, Result};
+use std::collections::{BTreeMap, HashMap};
+use std::sync::atomic::{AtomicU64, Ordering::Relaxed};
+use std::sync::{Arc, Mutex};
+
+/// Pointer file naming the current log generation.
+pub const GEN_FILE: &str = ".ctl.gen";
+/// Prefix of generation log files.
+pub const LOG_PREFIX: &str = ".ctl.log.";
+/// Appends between automatic compactions (tunable per store).
+pub const DEFAULT_COMPACT_EVERY: u64 = 512;
+
+fn log_name(gen: u64) -> String {
+    format!("{LOG_PREFIX}{gen}")
+}
+
+/// Everything the coordinator needs to re-adopt a VM's chain.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct VmSpec {
+    pub driver: DriverKind,
+    pub cache: CacheConfig,
+    pub data_mode: DataMode,
+    /// Active-volume name (the chain head to reopen).
+    pub active: String,
+}
+
+/// A block job the log believes is (or was) running.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct JobRecord {
+    pub vm: String,
+    pub kind: JobKind,
+    /// A `(node, bytes)` capacity reservation the job holds; orphan
+    /// cleanup releases it when the owner dies.
+    pub capacity: Option<(String, u64)>,
+}
+
+/// The control-plane state a log replay reconstructs: what recovery
+/// installs instead of scanning every node.
+#[derive(Clone, Debug, Default)]
+pub struct FleetView {
+    pub epoch: u64,
+    pub leader: String,
+    /// file name → node name (the placement index).
+    pub placement: HashMap<String, String>,
+    /// chain id → file list, base first, active last.
+    pub chains: HashMap<String, Vec<String>>,
+    /// deferred-delete set: file → (bytes, origin).
+    pub condemned: BTreeMap<String, (u64, String)>,
+    /// condemned migration replicas: (node, file) → (bytes, origin).
+    pub replicas: BTreeMap<(String, String), (u64, String)>,
+    pub vms: HashMap<String, VmSpec>,
+    pub leases: HashMap<String, Lease>,
+    pub jobs: BTreeMap<String, JobRecord>,
+    /// vm → target node of an in-flight migration.
+    pub migrations: HashMap<String, String>,
+    /// Highest job number issued (`job-<n>`); seeds the id counter so a
+    /// new leader never reuses a dead leader's job ids.
+    pub max_job_seq: u64,
+    /// The log's last record is the clean-shutdown marker.
+    pub clean_shutdown: bool,
+    /// Valid records applied; 0 means a virgin store (recovery must
+    /// not trust an empty view over a populated fleet).
+    pub records: u64,
+    /// A generation > 0 log did not begin with its snapshot: the state
+    /// is torn beyond the last valid snapshot and only a full scan can
+    /// rebuild it.
+    pub torn: bool,
+}
+
+impl FleetView {
+    /// Fold one record into the view.
+    pub fn apply(&mut self, rec: &ControlRecord) {
+        use ControlRecord::*;
+        self.records += 1;
+        self.clean_shutdown = matches!(rec, Shutdown);
+        match rec {
+            Epoch { epoch, leader } => {
+                self.epoch = *epoch;
+                self.leader = leader.clone();
+            }
+            Place { file, node } => {
+                self.placement.insert(file.clone(), node.clone());
+            }
+            Unplace { file } => {
+                self.placement.remove(file);
+            }
+            Chain { id, files } => {
+                self.chains.insert(id.clone(), files.clone());
+            }
+            ChainDrop { id } => {
+                self.chains.remove(id);
+            }
+            Condemn { file, bytes, origin } => {
+                self.condemned
+                    .insert(file.clone(), (*bytes, origin.clone()));
+            }
+            Uncondemn { file } | Swept { file } => {
+                self.condemned.remove(file);
+            }
+            CondemnReplica { node, file, bytes, origin } => {
+                self.replicas.insert(
+                    (node.clone(), file.clone()),
+                    (*bytes, origin.clone()),
+                );
+            }
+            SweptReplica { node, file } => {
+                self.replicas.remove(&(node.clone(), file.clone()));
+            }
+            Vm { name, driver, slice_entries, max_bytes, data_mode, active } => {
+                self.vms.insert(
+                    name.clone(),
+                    VmSpec {
+                        driver: *driver,
+                        cache: CacheConfig {
+                            slice_entries: *slice_entries,
+                            max_bytes: *max_bytes,
+                        },
+                        data_mode: *data_mode,
+                        active: active.clone(),
+                    },
+                );
+            }
+            VmStop { name } => {
+                self.vms.remove(name);
+            }
+            Lease { vm, holder, expires_ns } => {
+                self.leases.insert(
+                    vm.clone(),
+                    super::lease::Lease {
+                        holder: holder.clone(),
+                        expires_ns: *expires_ns,
+                    },
+                );
+            }
+            Unlease { vm } => {
+                self.leases.remove(vm);
+            }
+            JobSeq { last } => {
+                self.max_job_seq = self.max_job_seq.max(*last);
+            }
+            Job { id, vm, kind, capacity } => {
+                if let Some(n) = id
+                    .strip_prefix("job-")
+                    .and_then(|s| s.parse::<u64>().ok())
+                {
+                    self.max_job_seq = self.max_job_seq.max(n);
+                }
+                self.jobs.insert(
+                    id.clone(),
+                    JobRecord {
+                        vm: vm.clone(),
+                        kind: *kind,
+                        capacity: capacity.clone(),
+                    },
+                );
+            }
+            JobEnd { id } => {
+                self.jobs.remove(id);
+            }
+            Migration { vm, target } => {
+                self.migrations.insert(vm.clone(), target.clone());
+            }
+            MigrationEnd { vm } => {
+                self.migrations.remove(vm);
+            }
+            Shutdown | Snapshot => {}
+        }
+    }
+
+    /// Re-emit the whole view as the record sequence of a compacted
+    /// generation, deterministic order (snapshot marker first).
+    pub fn snapshot_records(&self) -> Vec<ControlRecord> {
+        use ControlRecord::*;
+        let mut out = vec![
+            Snapshot,
+            Epoch { epoch: self.epoch, leader: self.leader.clone() },
+        ];
+        let mut placed: Vec<_> = self.placement.iter().collect();
+        placed.sort();
+        for (file, node) in placed {
+            out.push(Place { file: file.clone(), node: node.clone() });
+        }
+        let mut chains: Vec<_> = self.chains.iter().collect();
+        chains.sort();
+        for (id, files) in chains {
+            out.push(Chain { id: id.clone(), files: files.clone() });
+        }
+        for (file, (bytes, origin)) in &self.condemned {
+            out.push(Condemn {
+                file: file.clone(),
+                bytes: *bytes,
+                origin: origin.clone(),
+            });
+        }
+        for ((node, file), (bytes, origin)) in &self.replicas {
+            out.push(CondemnReplica {
+                node: node.clone(),
+                file: file.clone(),
+                bytes: *bytes,
+                origin: origin.clone(),
+            });
+        }
+        let mut vms: Vec<_> = self.vms.iter().collect();
+        vms.sort_by(|a, b| a.0.cmp(b.0));
+        for (name, spec) in vms {
+            out.push(Vm {
+                name: name.clone(),
+                driver: spec.driver,
+                slice_entries: spec.cache.slice_entries,
+                max_bytes: spec.cache.max_bytes,
+                data_mode: spec.data_mode,
+                active: spec.active.clone(),
+            });
+        }
+        let mut leases: Vec<_> = self.leases.iter().collect();
+        leases.sort_by(|a, b| a.0.cmp(b.0));
+        for (vm, lease) in leases {
+            out.push(Lease {
+                vm: vm.clone(),
+                holder: lease.holder.clone(),
+                expires_ns: lease.expires_ns,
+            });
+        }
+        for (id, job) in &self.jobs {
+            out.push(Job {
+                id: id.clone(),
+                vm: job.vm.clone(),
+                kind: job.kind,
+                capacity: job.capacity.clone(),
+            });
+        }
+        let mut migs: Vec<_> = self.migrations.iter().collect();
+        migs.sort();
+        for (vm, target) in migs {
+            out.push(Migration { vm: vm.clone(), target: target.clone() });
+        }
+        out.push(JobSeq { last: self.max_job_seq });
+        if self.clean_shutdown {
+            out.push(Shutdown);
+        }
+        out
+    }
+}
+
+/// Health/identity summary for `sqemu control status`.
+#[derive(Clone, Debug)]
+pub struct StoreStatus {
+    pub generation: u64,
+    pub log_bytes: u64,
+    pub records: u64,
+    pub epoch: u64,
+    pub leader: String,
+    pub vms: usize,
+    pub leases: usize,
+    pub jobs: usize,
+    pub migrations: usize,
+    pub wedged: bool,
+    pub clean_shutdown: bool,
+}
+
+struct Inner {
+    gen: u64,
+    log: BackendRef,
+    ptr: BackendRef,
+    /// End of the valid frame prefix; appends land here, overwriting
+    /// any torn tail a crashed append left behind.
+    len: u64,
+    since_snapshot: u64,
+    appends: u64,
+    /// A durable write failed: the disk suffix is untrusted until
+    /// `reopen()` re-replays it.
+    wedged: bool,
+    view: FleetView,
+}
+
+/// See the module docs. Shared by every coordinator instance of a
+/// fleet: `Arc<StateStore>` is the one arbiter of epochs and leases.
+pub struct StateStore {
+    node: Arc<StorageNode>,
+    compact_every: AtomicU64,
+    inner: Mutex<Inner>,
+}
+
+impl StateStore {
+    /// Open (or initialize) the store on its dedicated metadata node.
+    pub fn open(node: Arc<StorageNode>) -> Result<Arc<StateStore>> {
+        let inner = Self::load(&node)?;
+        Ok(Arc::new(StateStore {
+            node,
+            compact_every: AtomicU64::new(DEFAULT_COMPACT_EVERY),
+            inner: Mutex::new(inner),
+        }))
+    }
+
+    /// Re-replay the durable prefix from disk, clearing a wedge. The
+    /// standby's log-tailing primitive and the first step of takeover.
+    pub fn reopen(&self) -> Result<()> {
+        let fresh = Self::load(&self.node)?;
+        *lock_unpoisoned(&self.inner) = fresh;
+        Ok(())
+    }
+
+    fn load(node: &Arc<StorageNode>) -> Result<Inner> {
+        let ptr = match node.open_file(GEN_FILE) {
+            Ok(b) => b,
+            Err(_) => {
+                // virgin store (or the metadata node is down, which the
+                // create below surfaces)
+                let ptr = node.create_file(GEN_FILE)?;
+                ptr.write_at(&record::frame("gen 0"), 0)?;
+                ptr.flush()?;
+                ptr
+            }
+        };
+        let gen = match Self::read_pointer(&ptr) {
+            Some(g) => g,
+            // torn pointer: fall back to the newest log on disk (the
+            // flip is written only after that log is durable)
+            None => Self::highest_gen(node).unwrap_or(0),
+        };
+        let log = match node.open_file(&log_name(gen)) {
+            Ok(b) => b,
+            Err(_) => node.create_file(&log_name(gen))?,
+        };
+        let mut buf = vec![0u8; log.len() as usize];
+        log.read_at(&mut buf, 0)?;
+        let (view, len) = Self::replay(&buf, gen);
+        // sweep generations a crash mid-compaction left behind
+        for name in node.file_names() {
+            if let Some(g) = name
+                .strip_prefix(LOG_PREFIX)
+                .and_then(|s| s.parse::<u64>().ok())
+            {
+                if g != gen {
+                    let _ = node.delete_file(&name);
+                }
+            }
+        }
+        Ok(Inner {
+            gen,
+            log,
+            ptr,
+            len,
+            since_snapshot: 0,
+            appends: 0,
+            wedged: false,
+            view,
+        })
+    }
+
+    fn read_pointer(ptr: &BackendRef) -> Option<u64> {
+        let mut buf = vec![0u8; (ptr.len() as usize).min(64)];
+        ptr.read_at(&mut buf, 0).ok()?;
+        let (line, _) = record::decode_frame(&buf, 0)?;
+        line.strip_prefix("gen ")?.parse().ok()
+    }
+
+    fn highest_gen(node: &Arc<StorageNode>) -> Option<u64> {
+        node.file_names()
+            .iter()
+            .filter_map(|n| n.strip_prefix(LOG_PREFIX))
+            .filter_map(|s| s.parse::<u64>().ok())
+            .max()
+    }
+
+    fn replay(buf: &[u8], gen: u64) -> (FleetView, u64) {
+        let mut view = FleetView::default();
+        let mut off = 0usize;
+        let mut first = true;
+        while let Some((line, next)) = record::decode_frame(buf, off) {
+            if let Some(rec) = ControlRecord::parse(line) {
+                if first && gen > 0 && rec != ControlRecord::Snapshot {
+                    view.torn = true;
+                }
+                view.apply(&rec);
+            }
+            first = false;
+            off = next;
+        }
+        if gen > 0 && first {
+            view.torn = true; // the compacted snapshot itself is gone
+        }
+        (view, off as u64)
+    }
+
+    fn append_locked(inner: &mut Inner, rec: &ControlRecord) -> Result<()> {
+        if inner.wedged {
+            bail!("state store wedged by a failed append; reopen() first");
+        }
+        let frame = record::frame(&rec.encode());
+        let wrote = inner
+            .log
+            .write_at(&frame, inner.len)
+            .and_then(|()| inner.log.flush());
+        if let Err(e) = wrote {
+            inner.wedged = true;
+            return Err(e);
+        }
+        inner.len += frame.len() as u64;
+        inner.appends += 1;
+        inner.since_snapshot += 1;
+        inner.view.apply(rec);
+        Ok(())
+    }
+
+    fn maybe_compact_locked(&self, inner: &mut Inner) {
+        if inner.since_snapshot >= self.compact_every.load(Relaxed) {
+            // failure wedges the store; appends keep failing until a
+            // reopen, which lands back on whichever generation's flip
+            // became durable
+            let _ = self.compact_locked(inner);
+        }
+    }
+
+    fn compact_locked(&self, inner: &mut Inner) -> Result<()> {
+        if inner.wedged {
+            bail!("state store wedged; reopen() before compacting");
+        }
+        let old_gen = inner.gen;
+        let new_gen = old_gen + 1;
+        let result = (|| -> Result<(BackendRef, u64)> {
+            let name = log_name(new_gen);
+            let _ = self.node.delete_file(&name); // stale leftover
+            let log = self.node.create_file(&name)?;
+            let mut buf = Vec::new();
+            for rec in inner.view.snapshot_records() {
+                buf.extend_from_slice(&record::frame(&rec.encode()));
+            }
+            log.write_at(&buf, 0)?;
+            log.flush()?;
+            // the atomic flip: a crash before this flush replays the
+            // old generation, after it the new one
+            inner.ptr.write_at(&record::frame(&format!("gen {new_gen}")), 0)?;
+            inner.ptr.flush()?;
+            let _ = self.node.delete_file(&log_name(old_gen));
+            Ok((log, buf.len() as u64))
+        })();
+        match result {
+            Ok((log, len)) => {
+                inner.gen = new_gen;
+                inner.log = log;
+                inner.len = len;
+                inner.since_snapshot = 0;
+                // the fresh generation replays these records
+                inner.view.records = inner.view.snapshot_records().len() as u64;
+                Ok(())
+            }
+            Err(e) => {
+                inner.wedged = true;
+                Err(e)
+            }
+        }
+    }
+
+    /// Compact now (normally automatic every [`DEFAULT_COMPACT_EVERY`]
+    /// appends; see [`StateStore::set_compact_every`]).
+    pub fn compact(&self) -> Result<()> {
+        self.compact_locked(&mut lock_unpoisoned(&self.inner))
+    }
+
+    pub fn set_compact_every(&self, every: u64) {
+        self.compact_every.store(every.max(1), Relaxed);
+    }
+
+    /// Bump the epoch and take leadership. Always permitted (elections
+    /// are how the fence moves); returns the new epoch, which fences
+    /// every previous leader's fenced appends.
+    pub fn campaign(&self, who: &str) -> Result<u64> {
+        let mut inner = lock_unpoisoned(&self.inner);
+        let epoch = inner.view.epoch + 1;
+        Self::append_locked(
+            &mut inner,
+            &ControlRecord::Epoch { epoch, leader: who.to_string() },
+        )?;
+        Ok(epoch)
+    }
+
+    /// Fenced append: rejected unless `epoch` is the current one.
+    pub fn append(&self, epoch: u64, rec: &ControlRecord) -> Result<()> {
+        let mut inner = lock_unpoisoned(&self.inner);
+        Self::check_fence(&inner, epoch)?;
+        Self::append_locked(&mut inner, rec)?;
+        self.maybe_compact_locked(&mut inner);
+        Ok(())
+    }
+
+    /// Unfenced append, for data-plane bookkeeping observers (the
+    /// record describes a mutation that already happened on shared
+    /// storage; see the module docs).
+    pub fn append_unfenced(&self, rec: &ControlRecord) -> Result<()> {
+        let mut inner = lock_unpoisoned(&self.inner);
+        Self::append_locked(&mut inner, rec)?;
+        self.maybe_compact_locked(&mut inner);
+        Ok(())
+    }
+
+    fn check_fence(inner: &Inner, epoch: u64) -> Result<()> {
+        if epoch != inner.view.epoch {
+            bail!(
+                "epoch fence: write under epoch {epoch} rejected, current \
+                 epoch is {} (leader '{}')",
+                inner.view.epoch,
+                inner.view.leader
+            );
+        }
+        Ok(())
+    }
+
+    /// Acquire `vm`'s lease for `holder`: succeeds when the VM is
+    /// unleased, already `holder`'s, or the previous lease expired.
+    /// Returns the expiry instant.
+    pub fn acquire_lease(
+        &self,
+        epoch: u64,
+        vm: &str,
+        holder: &str,
+        ttl_ns: u64,
+    ) -> Result<u64> {
+        let mut inner = lock_unpoisoned(&self.inner);
+        Self::check_fence(&inner, epoch)?;
+        let now = self.node.clock().now();
+        if let Some(l) = inner.view.leases.get(vm) {
+            if l.holder != holder && !l.expired(now) {
+                bail!(
+                    "vm '{vm}' is leased to '{}' for another {} ns",
+                    l.holder,
+                    l.expires_ns - now
+                );
+            }
+        }
+        let expires_ns = now.saturating_add(ttl_ns);
+        Self::append_locked(
+            &mut inner,
+            &ControlRecord::Lease {
+                vm: vm.to_string(),
+                holder: holder.to_string(),
+                expires_ns,
+            },
+        )?;
+        self.maybe_compact_locked(&mut inner);
+        Ok(expires_ns)
+    }
+
+    /// Renew a lease `holder` still owns (permitted even past expiry,
+    /// as long as nobody else claimed it in between).
+    pub fn renew_lease(
+        &self,
+        epoch: u64,
+        vm: &str,
+        holder: &str,
+        ttl_ns: u64,
+    ) -> Result<u64> {
+        let mut inner = lock_unpoisoned(&self.inner);
+        Self::check_fence(&inner, epoch)?;
+        match inner.view.leases.get(vm) {
+            Some(l) if l.holder == holder => {}
+            Some(l) => bail!(
+                "vm '{vm}' lease now belongs to '{}', not '{holder}'",
+                l.holder
+            ),
+            None => bail!("vm '{vm}' holds no lease to renew"),
+        }
+        let expires_ns = self.node.clock().now().saturating_add(ttl_ns);
+        Self::append_locked(
+            &mut inner,
+            &ControlRecord::Lease {
+                vm: vm.to_string(),
+                holder: holder.to_string(),
+                expires_ns,
+            },
+        )?;
+        self.maybe_compact_locked(&mut inner);
+        Ok(expires_ns)
+    }
+
+    /// Release `vm`'s lease. A no-op when no lease exists; rejected
+    /// when a *different* holder owns an unexpired lease.
+    pub fn release_lease(
+        &self,
+        epoch: u64,
+        vm: &str,
+        holder: &str,
+    ) -> Result<()> {
+        let mut inner = lock_unpoisoned(&self.inner);
+        Self::check_fence(&inner, epoch)?;
+        let now = self.node.clock().now();
+        match inner.view.leases.get(vm) {
+            None => return Ok(()),
+            Some(l) if l.holder != holder && !l.expired(now) => bail!(
+                "vm '{vm}' lease belongs to '{}', not '{holder}'",
+                l.holder
+            ),
+            Some(_) => {}
+        }
+        Self::append_locked(
+            &mut inner,
+            &ControlRecord::Unlease { vm: vm.to_string() },
+        )?;
+        self.maybe_compact_locked(&mut inner);
+        Ok(())
+    }
+
+    pub fn lease_of(&self, vm: &str) -> Option<Lease> {
+        lock_unpoisoned(&self.inner).view.leases.get(vm).cloned()
+    }
+
+    pub fn current_epoch(&self) -> u64 {
+        lock_unpoisoned(&self.inner).view.epoch
+    }
+
+    pub fn leader(&self) -> String {
+        lock_unpoisoned(&self.inner).view.leader.clone()
+    }
+
+    pub fn is_wedged(&self) -> bool {
+        lock_unpoisoned(&self.inner).wedged
+    }
+
+    /// Clone the replayed fleet state (recovery's input).
+    pub fn view(&self) -> FleetView {
+        lock_unpoisoned(&self.inner).view.clone()
+    }
+
+    pub fn node(&self) -> &Arc<StorageNode> {
+        &self.node
+    }
+
+    /// Replace the derived state (placement, chains, jobs, migrations,
+    /// condemnations) with what a full fleet scan found, then compact —
+    /// the self-heal after a torn-beyond-snapshot log. Leases, VM specs
+    /// and the epoch from the valid prefix are preserved.
+    pub fn reseed(
+        &self,
+        placement: Vec<(String, String)>,
+        chains: Vec<(String, Vec<String>)>,
+        last_job_id: u64,
+    ) -> Result<()> {
+        let mut inner = lock_unpoisoned(&self.inner);
+        let v = &mut inner.view;
+        v.placement = placement.into_iter().collect();
+        v.chains = chains.into_iter().collect();
+        v.condemned.clear();
+        v.replicas.clear();
+        v.jobs.clear();
+        v.migrations.clear();
+        v.max_job_seq = v.max_job_seq.max(last_job_id);
+        v.torn = false;
+        self.compact_locked(&mut inner)
+    }
+
+    pub fn status(&self) -> StoreStatus {
+        let inner = lock_unpoisoned(&self.inner);
+        StoreStatus {
+            generation: inner.gen,
+            log_bytes: inner.len,
+            records: inner.view.records,
+            epoch: inner.view.epoch,
+            leader: inner.view.leader.clone(),
+            vms: inner.view.vms.len(),
+            leases: inner.view.leases.len(),
+            jobs: inner.view.jobs.len(),
+            migrations: inner.view.migrations.len(),
+            wedged: inner.wedged,
+            clean_shutdown: inner.view.clean_shutdown,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::clock::{CostModel, VirtClock};
+    use crate::storage::fault::FaultInjector;
+
+    fn meta_node() -> Arc<StorageNode> {
+        StorageNode::new("meta", VirtClock::new(), CostModel::default())
+    }
+
+    fn place(file: &str, node: &str) -> ControlRecord {
+        ControlRecord::Place { file: file.into(), node: node.into() }
+    }
+
+    #[test]
+    fn fresh_store_persists_and_replays() {
+        let node = meta_node();
+        let store = StateStore::open(Arc::clone(&node)).unwrap();
+        let epoch = store.campaign("coord-a").unwrap();
+        assert_eq!(epoch, 1);
+        store.append(epoch, &place("disk-0", "node-0")).unwrap();
+        store.append(epoch, &place("disk-1", "node-1")).unwrap();
+        store
+            .acquire_lease(epoch, "vm-0", "coord-a", 1_000_000)
+            .unwrap();
+        drop(store);
+        let store = StateStore::open(node).unwrap();
+        let v = store.view();
+        assert_eq!(v.epoch, 1);
+        assert_eq!(v.leader, "coord-a");
+        assert_eq!(v.placement.get("disk-0").unwrap(), "node-0");
+        assert_eq!(v.placement.get("disk-1").unwrap(), "node-1");
+        assert_eq!(v.leases.get("vm-0").unwrap().holder, "coord-a");
+        assert!(!v.torn);
+        assert!(!v.clean_shutdown);
+    }
+
+    #[test]
+    fn torn_tail_is_dropped_and_overwritten() {
+        let node = meta_node();
+        let store = StateStore::open(Arc::clone(&node)).unwrap();
+        let e = store.campaign("a").unwrap();
+        store.append(e, &place("f0", "n0")).unwrap();
+        store.append(e, &place("f1", "n0")).unwrap();
+        let valid = store.status().log_bytes;
+        // simulate a crashed append: half a frame straight to the log
+        let log = node.open_file(&log_name(0)).unwrap();
+        let torn = record::frame("place f2 n0");
+        log.write_at(&torn[..torn.len() - 3], valid).unwrap();
+        store.reopen().unwrap();
+        let v = store.view();
+        assert_eq!(v.placement.len(), 2, "torn record not replayed");
+        assert!(v.placement.contains_key("f1"));
+        // the next append overwrites the torn tail and replays cleanly
+        store.append(e, &place("f3", "n1")).unwrap();
+        store.reopen().unwrap();
+        assert_eq!(store.view().placement.len(), 3);
+        assert_eq!(store.view().placement.get("f3").unwrap(), "n1");
+    }
+
+    #[test]
+    fn epoch_fencing_rejects_the_deposed_leader() {
+        let store = StateStore::open(meta_node()).unwrap();
+        let e1 = store.campaign("a").unwrap();
+        store.append(e1, &place("f", "n0")).unwrap();
+        let e2 = store.campaign("b").unwrap();
+        assert!(e2 > e1);
+        assert_eq!(store.leader(), "b");
+        let err = store.append(e1, &place("g", "n0")).unwrap_err();
+        assert!(format!("{err:#}").contains("epoch fence"), "{err:#}");
+        assert!(store.acquire_lease(e1, "vm", "a", 10).is_err());
+        store.append(e2, &place("g", "n0")).unwrap();
+    }
+
+    #[test]
+    fn lease_single_holder_until_expiry() {
+        let node = meta_node();
+        let clock = Arc::clone(node.clock());
+        let store = StateStore::open(node).unwrap();
+        let e = store.campaign("arb").unwrap();
+        store.acquire_lease(e, "vm-0", "a", 1_000).unwrap();
+        assert!(
+            store.acquire_lease(e, "vm-0", "b", 1_000).is_err(),
+            "unexpired lease is exclusive"
+        );
+        store.acquire_lease(e, "vm-0", "a", 1_000).unwrap();
+        store.renew_lease(e, "vm-0", "a", 2_000).unwrap();
+        clock.advance(10_000);
+        store.acquire_lease(e, "vm-0", "b", 1_000).unwrap();
+        let err = store.renew_lease(e, "vm-0", "a", 1_000).unwrap_err();
+        assert!(format!("{err:#}").contains("belongs to"), "{err:#}");
+        assert_eq!(store.lease_of("vm-0").unwrap().holder, "b");
+        // release: wrong holder rejected while unexpired, owner allowed
+        assert!(store.release_lease(e, "vm-0", "a").is_err());
+        store.release_lease(e, "vm-0", "b").unwrap();
+        assert!(store.lease_of("vm-0").is_none());
+        store.release_lease(e, "vm-0", "a").unwrap();
+    }
+
+    #[test]
+    fn compaction_flips_generations_and_preserves_state() {
+        let node = meta_node();
+        let store = StateStore::open(Arc::clone(&node)).unwrap();
+        store.set_compact_every(8);
+        let e = store.campaign("a").unwrap();
+        for i in 0..20 {
+            store.append(e, &place(&format!("f{i}"), "n0")).unwrap();
+        }
+        let st = store.status();
+        assert!(st.generation >= 1, "auto-compaction ran: {st:?}");
+        // exactly one log generation (+ pointer) remains on disk
+        let names = node.file_names();
+        let logs: Vec<_> = names
+            .iter()
+            .filter(|n| n.starts_with(LOG_PREFIX))
+            .collect();
+        assert_eq!(logs.len(), 1, "{names:?}");
+        store.reopen().unwrap();
+        let v = store.view();
+        assert_eq!(v.placement.len(), 20);
+        assert_eq!(v.epoch, e);
+        assert!(!v.torn);
+    }
+
+    #[test]
+    fn clean_shutdown_marker_is_last_record_only() {
+        let store = StateStore::open(meta_node()).unwrap();
+        let e = store.campaign("a").unwrap();
+        store.append(e, &ControlRecord::Shutdown).unwrap();
+        store.reopen().unwrap();
+        assert!(store.view().clean_shutdown);
+        store.append(e, &place("f", "n0")).unwrap();
+        store.reopen().unwrap();
+        assert!(!store.view().clean_shutdown, "any later record dirties");
+    }
+
+    #[test]
+    fn wedged_store_refuses_writes_until_reopen() {
+        let clock = VirtClock::new();
+        let injector = FaultInjector::new();
+        let node = StorageNode::with_fault_injection(
+            "meta",
+            clock,
+            CostModel::default(),
+            u64::MAX,
+            Arc::clone(&injector),
+        );
+        let store = StateStore::open(Arc::clone(&node)).unwrap();
+        let e = store.campaign("a").unwrap();
+        store.append(e, &place("f0", "n0")).unwrap();
+        injector.arm(0, None);
+        assert!(store.append(e, &place("f1", "n0")).is_err());
+        injector.revive();
+        let err = store.append(e, &place("f2", "n0")).unwrap_err();
+        assert!(format!("{err:#}").contains("wedged"), "{err:#}");
+        store.reopen().unwrap();
+        store.append(e, &place("f2", "n0")).unwrap();
+        let v = store.view();
+        assert!(v.placement.contains_key("f0"));
+        assert!(v.placement.contains_key("f2"));
+    }
+
+    #[test]
+    fn power_cut_at_every_append_leaves_a_replayable_prefix() {
+        // probe run: count the durable events of the scripted history
+        let script = |store: &StateStore| {
+            let e = match store.campaign("a") {
+                Ok(e) => e,
+                Err(_) => return,
+            };
+            for i in 0..6 {
+                let _ = store.append(e, &place(&format!("f{i}"), "n0"));
+            }
+            let _ = store.acquire_lease(e, "vm-0", "a", 1_000_000);
+            let _ = store.append(e, &ControlRecord::Shutdown);
+        };
+        let run = |cut: Option<u64>| -> (u64, FleetView) {
+            let injector = FaultInjector::new();
+            let node = StorageNode::with_fault_injection(
+                "meta",
+                VirtClock::new(),
+                CostModel::default(),
+                u64::MAX,
+                Arc::clone(&injector),
+            );
+            let store = StateStore::open(Arc::clone(&node)).unwrap();
+            store.set_compact_every(4); // exercise compaction flips too
+            if let Some(k) = cut {
+                injector.arm(k, Some(crate::storage::fault::SECTOR));
+            }
+            script(&store);
+            injector.revive();
+            store.reopen().unwrap();
+            (injector.events(), store.view())
+        };
+        let (events, full) = run(None);
+        assert!(full.clean_shutdown && full.placement.len() == 6);
+        for k in 0..events {
+            let (_, v) = run(Some(k));
+            assert!(!v.torn, "cut at {k}: prefix must replay, not tear");
+            assert!(v.records <= full.records, "cut at {k}");
+            assert!(v.epoch <= 1, "cut at {k}");
+            assert!(v.placement.len() <= 6, "cut at {k}");
+            // a replayed placement entry is always one the script wrote
+            for (f, n) in &v.placement {
+                assert!(f.starts_with('f') && n == "n0", "cut at {k}");
+            }
+        }
+    }
+
+    #[test]
+    fn torn_beyond_snapshot_flags_full_scan_fallback() {
+        let node = meta_node();
+        let store = StateStore::open(Arc::clone(&node)).unwrap();
+        let e = store.campaign("a").unwrap();
+        for i in 0..4 {
+            store.append(e, &place(&format!("f{i}"), "n0")).unwrap();
+        }
+        store.compact().unwrap();
+        let gen = store.status().generation;
+        assert!(gen >= 1);
+        // corrupt the snapshot at the head of the compacted generation
+        let log = node.open_file(&log_name(gen)).unwrap();
+        log.write_at(&[0xFF; 16], 0).unwrap();
+        store.reopen().unwrap();
+        assert!(store.view().torn, "snapshot gone ⇒ only a scan helps");
+    }
+}

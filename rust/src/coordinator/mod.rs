@@ -44,6 +44,14 @@
 //!   past a threshold; `Coordinator::recover()` resolves interrupted
 //!   migrations from their durable journals and rebuilds the placement
 //!   index.
+//! * HA control plane — [`server::Coordinator::attach_control`] wires a
+//!   write-ahead [`crate::control::StateStore`] under the placement and
+//!   GC registries, turns VM ownership lease-based, fences every
+//!   control mutation by election epoch, and lets
+//!   `Coordinator::recover()` *replay* fleet state in O(log) + O(active
+//!   leases) instead of scanning every node;
+//!   [`server::Coordinator::takeover`] is the live-failover analogue
+//!   for a standby coordinator.
 //!
 //! [`FileStore`]: crate::storage::store::FileStore
 
@@ -56,7 +64,7 @@ pub mod stats;
 pub mod streaming;
 
 pub use batcher::BulkTranslator;
-pub use placement::NodeSet;
+pub use placement::{NodeSet, PlacementEvent, PlacementObserver};
 pub use ring::RingReply;
 pub use server::{
     BatchOp, BatchReply, Coordinator, CoordinatorConfig, JobSpec, RebalanceReport,

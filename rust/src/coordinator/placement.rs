@@ -23,10 +23,35 @@ use anyhow::{anyhow, bail, Result};
 use std::collections::HashMap;
 use std::sync::{Arc, Mutex};
 
+/// A placement mutation, reported to the [`NodeSet`] observer *before*
+/// the index changes (write-ahead: the durable record must exist before
+/// the volatile state it describes).
+#[derive(Debug)]
+pub enum PlacementEvent<'a> {
+    /// `file` is being created on `node`.
+    Placed { file: &'a str, node: &'a str },
+    /// `file` is being deleted.
+    Removed { file: &'a str },
+    /// Every file in `files` is being re-pointed at `node` (migration
+    /// switchover).
+    Migrated { files: &'a [String], node: &'a str },
+}
+
+/// Write-ahead hook with veto: an `Err` aborts the mutation before it
+/// happens. The control plane installs one that appends the event to
+/// the [`crate::control::StateStore`]; a wedged store then refuses new
+/// placements instead of silently diverging from its log.
+pub type PlacementObserver =
+    Box<dyn Fn(&PlacementEvent<'_>) -> Result<()> + Send + Sync>;
+
 pub struct NodeSet {
     nodes: Vec<Arc<StorageNode>>,
     /// file name -> node index
     index: Mutex<HashMap<String, usize>>,
+    /// Write-ahead observer (see [`PlacementObserver`]). Lock order:
+    /// `index` may be held while the observer runs; the observer takes
+    /// only its own store lock, never back into this set.
+    observer: Mutex<Option<PlacementObserver>>,
 }
 
 impl NodeSet {
@@ -34,7 +59,23 @@ impl NodeSet {
         if nodes.is_empty() {
             bail!("need at least one storage node");
         }
-        Ok(NodeSet { nodes, index: Mutex::new(HashMap::new()) })
+        Ok(NodeSet {
+            nodes,
+            index: Mutex::new(HashMap::new()),
+            observer: Mutex::new(None),
+        })
+    }
+
+    /// Install (or replace) the write-ahead placement observer.
+    pub fn set_observer(&self, obs: Option<PlacementObserver>) {
+        *self.observer.lock().unwrap() = obs;
+    }
+
+    fn notify(&self, ev: &PlacementEvent<'_>) -> Result<()> {
+        match self.observer.lock().unwrap().as_ref() {
+            Some(obs) => obs(ev),
+            None => Ok(()),
+        }
     }
 
     /// Does node `i` still have thin-provisioning headroom? Committed
@@ -103,6 +144,10 @@ impl NodeSet {
             Some(i) if self.has_headroom(i) => i,
             _ => self.pick_node()?,
         };
+        self.notify(&PlacementEvent::Placed {
+            file: name,
+            node: &self.nodes[node_idx].name,
+        })?;
         let backend = self.nodes[node_idx].create_file(name)?;
         index.insert(name.to_string(), node_idx);
         Ok(backend)
@@ -118,6 +163,10 @@ impl NodeSet {
         if index.contains_key(name) {
             bail!("file '{name}' already exists in the node set");
         }
+        self.notify(&PlacementEvent::Placed {
+            file: name,
+            node: &self.nodes[node_idx].name,
+        })?;
         let backend = self.nodes[node_idx].create_file(name)?;
         index.insert(name.to_string(), node_idx);
         Ok(backend)
@@ -145,11 +194,47 @@ impl NodeSet {
         let t = self
             .node_idx(target)
             .ok_or_else(|| anyhow!("no storage node '{target}'"))?;
+        self.notify(&PlacementEvent::Migrated { files: names, node: target })?;
         let mut index = self.index.lock().unwrap();
         for n in names {
             index.insert(n.clone(), t);
         }
         Ok(())
+    }
+
+    /// Replace the index wholesale from a replayed durable log,
+    /// validating each entry against the named node's actual files —
+    /// trust but verify, per entry, with NO full listing pass. Entries
+    /// naming an unknown node or a file the node no longer holds are
+    /// dropped and returned (the log may be slightly ahead of a crash).
+    /// The observer is NOT consulted: this installs what the log already
+    /// records.
+    pub fn install_index(&self, entries: &[(String, String)]) -> Vec<String> {
+        let mut index = self.index.lock().unwrap();
+        index.clear();
+        let mut dropped = Vec::new();
+        for (file, node) in entries {
+            match self.node_idx(node) {
+                Some(i) if self.nodes[i].open_file(file).is_ok() => {
+                    index.insert(file.clone(), i);
+                }
+                _ => dropped.push(file.clone()),
+            }
+        }
+        dropped
+    }
+
+    /// The current name→node mapping, sorted by file name (what
+    /// [`crate::control::StateStore::reseed`] persists after a full-scan
+    /// recovery).
+    pub fn index_snapshot(&self) -> Vec<(String, String)> {
+        let index = self.index.lock().unwrap();
+        let mut v: Vec<(String, String)> = index
+            .iter()
+            .map(|(f, &i)| (f.clone(), self.nodes[i].name.clone()))
+            .collect();
+        v.sort();
+        v
     }
 
     /// Rebuild the name→node index from the nodes' durable file lists —
@@ -251,6 +336,10 @@ impl FileStore for NodeSet {
             bail!("file '{name}' already exists in the node set");
         }
         let node_idx = self.pick_node()?;
+        self.notify(&PlacementEvent::Placed {
+            file: name,
+            node: &self.nodes[node_idx].name,
+        })?;
         let backend = self.nodes[node_idx].create_file(name)?;
         index.insert(name.to_string(), node_idx);
         Ok(backend)
@@ -266,9 +355,11 @@ impl FileStore for NodeSet {
 
     fn delete_file(&self, name: &str) -> Result<()> {
         let mut index = self.index.lock().unwrap();
-        let node_idx = index
-            .remove(name)
+        let &node_idx = index
+            .get(name)
             .ok_or_else(|| anyhow!("no file '{name}' in the node set"))?;
+        self.notify(&PlacementEvent::Removed { file: name })?;
+        index.remove(name);
         self.nodes[node_idx].delete_file(name)
     }
 }
@@ -483,5 +574,59 @@ mod tests {
         let ns = set(&[u64::MAX]);
         assert!(ns.open_file("nope").is_err());
         assert!(ns.delete_file("nope").is_err());
+    }
+
+    #[test]
+    fn observer_is_write_ahead_and_can_veto() {
+        use std::sync::atomic::{AtomicBool, Ordering};
+        let ns = set(&[u64::MAX]);
+        let veto = Arc::new(AtomicBool::new(false));
+        let log = Arc::new(Mutex::new(Vec::<String>::new()));
+        let (v2, l2) = (Arc::clone(&veto), Arc::clone(&log));
+        ns.set_observer(Some(Box::new(move |ev| {
+            if v2.load(Ordering::Relaxed) {
+                bail!("store wedged");
+            }
+            l2.lock().unwrap().push(format!("{ev:?}"));
+            Ok(())
+        })));
+        ns.create_file("f0").unwrap();
+        ns.commit_migration(&["f0".into()], "node-0").unwrap();
+        ns.delete_file("f0").unwrap();
+        assert_eq!(log.lock().unwrap().len(), 3);
+        // vetoed mutations must not happen at all
+        veto.store(true, Ordering::Relaxed);
+        assert!(ns.create_file("f1").is_err());
+        ns.set_observer(None);
+        assert!(ns.open_file("f1").is_err(), "vetoed create left no file");
+        ns.create_file("f1").unwrap();
+    }
+
+    #[test]
+    fn install_index_validates_entries_without_listing() {
+        let ns = set(&[u64::MAX, u64::MAX]);
+        ns.create_file_on("a", "node-0").unwrap();
+        ns.create_file_on("b", "node-1").unwrap();
+        let snap = ns.index_snapshot();
+        assert_eq!(
+            snap,
+            vec![
+                ("a".to_string(), "node-0".to_string()),
+                ("b".to_string(), "node-1".to_string())
+            ]
+        );
+        let lists: u64 = ns.nodes().iter().map(|n| n.list_ops()).sum();
+        // a log slightly ahead of the crash: 'ghost' was logged but its
+        // create never hit the node; 'c' names an unknown node
+        let mut entries = snap.clone();
+        entries.push(("ghost".to_string(), "node-0".to_string()));
+        entries.push(("c".to_string(), "node-9".to_string()));
+        let dropped = ns.install_index(&entries);
+        assert_eq!(dropped, vec!["ghost".to_string(), "c".to_string()]);
+        assert_eq!(ns.locate("a").unwrap(), "node-0");
+        assert_eq!(ns.locate("b").unwrap(), "node-1");
+        assert!(ns.locate("ghost").is_none());
+        let after: u64 = ns.nodes().iter().map(|n| n.list_ops()).sum();
+        assert_eq!(after, lists, "per-entry validation, no listing pass");
     }
 }

@@ -39,7 +39,7 @@
 //! pause is the subject of `benches/fig20_live_blockjobs.rs`.
 
 use super::batcher::BulkTranslator;
-use super::placement::NodeSet;
+use super::placement::{NodeSet, PlacementEvent};
 use super::ring::{RingReply, SqEntry, VmRings};
 use super::shard::{Shard, ShardControl, ShardHandle, ShardStatsSnapshot};
 use super::stats::{VmStats, VmStatsSnapshot};
@@ -51,11 +51,17 @@ use crate::blockjob::{
 };
 use crate::cache::CacheConfig;
 use crate::chaingen::ChainSpec;
-use crate::gc::{GcJob, GcRegistry, GcReport};
+use crate::control::{
+    partition_leases, ControlRecord, FleetView, StateStore, StoreStatus,
+};
+use crate::gc::{GcEvent, GcJob, GcRegistry, GcReport};
 use crate::metrics::clock::{CostModel, VirtClock};
 use crate::metrics::counters::CounterSnapshot;
 use crate::metrics::memory::MemoryAccountant;
-use crate::dedup::{chain_logical_bytes, CapacityPolicy, DedupIndex};
+use crate::dedup::{
+    chain_logical_bytes, CapacityPolicy, CapacityScanJob, DedupIndex,
+};
+use crate::util::retry::RetryPolicy;
 use crate::qcow::image::DataMode;
 use crate::qcow::{qcheck, snapshot, Chain};
 use crate::migrate::rebalance::{NodePressure, RebalancePlan, VmFootprint};
@@ -76,6 +82,7 @@ pub use super::ring::{BatchOp, BatchReply};
 pub(crate) use super::shard::JobBuilder;
 
 /// Fleet-level configuration.
+#[derive(Clone)]
 pub struct CoordinatorConfig {
     pub cost: CostModel,
     /// Per-VM submission/completion ring depth (backpressure bound: a
@@ -96,6 +103,12 @@ pub struct CoordinatorConfig {
     /// ([`crate::dedup::CapacityPolicy::full`]). Off by default — the
     /// write path is then bit-for-bit the pre-subsystem one.
     pub capacity: bool,
+    /// Lease TTL for VM ownership when a control plane is attached
+    /// ([`Coordinator::attach_control`]): a coordinator owns each of
+    /// its VMs for this long past the last acquire/renew, and a standby
+    /// must wait out the remainder before re-adopting
+    /// ([`Coordinator::takeover`]).
+    pub lease_ttl_ns: u64,
 }
 
 impl Default for CoordinatorConfig {
@@ -107,6 +120,7 @@ impl Default for CoordinatorConfig {
             job_budget_bps: 512 << 20,
             job_increment_clusters: 32,
             capacity: false,
+            lease_ttl_ns: 30_000_000_000,
         }
     }
 }
@@ -200,6 +214,9 @@ struct VmMeta {
     driver_kind: DriverKind,
     cache: CacheConfig,
     data_mode: DataMode,
+    /// Chain head at launch / last chain-shape change — what the durable
+    /// VM record tells a failed-over coordinator to reopen.
+    active: String,
 }
 
 /// Registry entry for a job: its cross-thread handle plus whatever must
@@ -211,6 +228,22 @@ struct JobEntry {
     shared: Arc<JobShared>,
     reservations: Vec<Reservation>,
     capacity: Option<(Arc<StorageNode>, u64)>,
+    /// Terminal state already written to the control log (the reap runs
+    /// on every job API call; `JobEnd` must go out exactly once).
+    ended: bool,
+}
+
+/// This coordinator's attachment to the shared [`StateStore`]: the
+/// store handle, the epoch its fenced appends run under, and the
+/// identity its leases are held as. `epoch` starts at 0 — which passes
+/// the store's fence only while no election has ever happened (the
+/// single-coordinator case) — and moves only through
+/// [`Coordinator::campaign`], so a deposed leader keeps its stale epoch
+/// and every fenced write it attempts is rejected.
+struct ControlHandle {
+    store: Arc<StateStore>,
+    epoch: u64,
+    who: String,
 }
 
 /// FNV-1a: the VM → shard map. Stateless, so any component can compute
@@ -250,6 +283,9 @@ pub struct Coordinator {
     /// see [`crate::dedup::DedupIndex`]). Always present — drivers only
     /// consult it when [`CoordinatorConfig::capacity`] is on.
     dedup: Arc<DedupIndex>,
+    /// HA control plane, when attached: write-ahead state log, lease
+    /// table and epoch fence ([`Coordinator::attach_control`]).
+    control: Mutex<Option<ControlHandle>>,
 }
 
 impl Coordinator {
@@ -297,6 +333,7 @@ impl Coordinator {
             next_job_id: AtomicU64::new(0),
             gc,
             dedup: Arc::new(DedupIndex::new()),
+            control: Mutex::new(None),
         })
     }
 
@@ -421,7 +458,38 @@ impl Coordinator {
     /// across it both serialized launches and (worse) poisoned a whole
     /// shard's table if construction panicked — one bad launch killed
     /// stats/list/launch for every sibling VM.
+    ///
+    /// With a control plane attached, ownership is lease-based: the
+    /// lease on `name` is acquired (fenced) *before* any chain work, so
+    /// two coordinators over the same nodes can never both adopt a VM —
+    /// the loser fails here, not after corrupting the chain. The launch
+    /// error path gives the lease back.
     pub fn launch_vm(self: &Arc<Self>, name: &str, cfg: VmConfig) -> Result<VmClient> {
+        let leased = match self.control_parts() {
+            Some((store, epoch, who)) => {
+                store.acquire_lease(epoch, name, &who, self.cfg.lease_ttl_ns)?;
+                true
+            }
+            None => false,
+        };
+        match self.launch_vm_inner(name, cfg) {
+            Ok(client) => Ok(client),
+            Err(e) => {
+                if leased {
+                    if let Some((store, epoch, who)) = self.control_parts() {
+                        let _ = store.release_lease(epoch, name, &who);
+                    }
+                }
+                Err(e)
+            }
+        }
+    }
+
+    fn launch_vm_inner(
+        self: &Arc<Self>,
+        name: &str,
+        cfg: VmConfig,
+    ) -> Result<VmClient> {
         let shard = self.shard_of(name);
         if lock_unpoisoned(&self.vms[shard]).contains_key(name) {
             bail!("vm '{name}' already running");
@@ -473,6 +541,7 @@ impl Coordinator {
                 spec.data_mode,
             ),
         };
+        let active = chain.active().name.clone();
         let stats = Arc::new(VmStats::default());
         let rings = VmRings::new(
             self.cfg.queue_depth,
@@ -495,8 +564,23 @@ impl Coordinator {
                     driver_kind: cfg.driver,
                     cache: cfg.cache,
                     data_mode,
+                    active: active.clone(),
                 },
             );
+        }
+        // durable VM record, write-ahead of adoption (fenced: a deposed
+        // leader's launch dies here, before the shard takes the driver)
+        if let Err(e) = self.persist(&ControlRecord::Vm {
+            name: name.to_string(),
+            driver: cfg.driver,
+            slice_entries: cfg.cache.slice_entries,
+            max_bytes: cfg.cache.max_bytes,
+            data_mode,
+            active,
+        }) {
+            lock_unpoisoned(&self.vms[shard]).remove(name);
+            self.gc.drop_chain(name);
+            return Err(e);
         }
         let driver = self.build_driver(chain, &cfg);
         let (reply, rx) = sync_channel(1);
@@ -575,7 +659,28 @@ impl Coordinator {
     /// are condemned once nothing else references them.
     fn sync_vm_chain(&self, name: &str) -> Result<()> {
         let files = self.chain_files(name)?;
+        let active = files.last().cloned().unwrap_or_default();
         self.gc.sync_chain(name, files);
+        // keep the registry entry and the durable VM record pointed at
+        // the (possibly new) chain head; best-effort — the GC observer
+        // already logged the authoritative file set above
+        let rec = {
+            let mut map = lock_unpoisoned(&self.vms[self.shard_of(name)]);
+            map.get_mut(name).map(|m| {
+                m.active = active.clone();
+                ControlRecord::Vm {
+                    name: name.to_string(),
+                    driver: m.driver_kind,
+                    slice_entries: m.cache.slice_entries,
+                    max_bytes: m.cache.max_bytes,
+                    data_mode: m.data_mode,
+                    active,
+                }
+            })
+        };
+        if let Some(rec) = rec {
+            self.persist_best_effort(&rec);
+        }
         Ok(())
     }
 
@@ -660,6 +765,9 @@ impl Coordinator {
             JobKind::Mirror => {
                 bail!("migrations carry a target node; use Coordinator::migrate_vm")
             }
+            JobKind::Scan => bail!(
+                "capacity scans own no chain; use Coordinator::start_capacity_scan"
+            ),
             JobKind::Stream => Box::new(|chain, fence| {
                 Ok(Box::new(LiveStreamJob::new(chain, Arc::clone(fence)))
                     as Box<dyn BlockJob>)
@@ -681,8 +789,22 @@ impl Coordinator {
         if spec.start_paused {
             shared.pause();
         }
+        // write-ahead job descriptor (fenced): a failed-over coordinator
+        // learns this job existed and releases whatever it still held
+        if let Err(e) = self.persist(&ControlRecord::Job {
+            id: shared.id.clone(),
+            vm: vm.to_string(),
+            kind: spec.kind,
+            capacity: None,
+        }) {
+            self.scheduler.release(&reservation);
+            return Err(e);
+        }
         if let Err(e) = self.send_job_start(vm, builder, &shared) {
             self.scheduler.release(&reservation);
+            self.persist_best_effort(&ControlRecord::JobEnd {
+                id: shared.id.clone(),
+            });
             return Err(e);
         }
         self.note_job_started(vm);
@@ -691,6 +813,7 @@ impl Coordinator {
             shared: Arc::clone(&shared),
             reservations: vec![reservation],
             capacity: None,
+            ended: false,
         });
         Ok(shared)
     }
@@ -790,6 +913,29 @@ impl Coordinator {
         }
         let shared =
             Arc::new(JobShared::new(&self.next_job_id(), JobKind::Mirror, rate_bps));
+        // write-ahead (fenced): the migration intent and the job's
+        // capacity reservation on the recipient — exactly what a
+        // failed-over coordinator must resolve and release
+        let persisted = self
+            .persist(&ControlRecord::Migration {
+                vm: vm.to_string(),
+                target: target_node.name.clone(),
+            })
+            .and_then(|()| {
+                self.persist(&ControlRecord::Job {
+                    id: shared.id.clone(),
+                    vm: vm.to_string(),
+                    kind: JobKind::Mirror,
+                    capacity: Some((target_node.name.clone(), moved_bytes)),
+                })
+            });
+        if let Err(e) = persisted {
+            for r in &reservations {
+                self.scheduler.release(r);
+            }
+            target_node.release(moved_bytes);
+            return Err(e);
+        }
         let nodes = Arc::clone(&self.nodes);
         let gc = Arc::clone(&self.gc);
         let (vm_id, target_name) = (vm.to_string(), target_node.name.clone());
@@ -807,6 +953,12 @@ impl Coordinator {
                 self.scheduler.release(r);
             }
             target_node.release(moved_bytes);
+            self.persist_best_effort(&ControlRecord::JobEnd {
+                id: shared.id.clone(),
+            });
+            self.persist_best_effort(&ControlRecord::MigrationEnd {
+                vm: vm.to_string(),
+            });
             return Err(e);
         }
         self.note_job_started(vm);
@@ -815,6 +967,7 @@ impl Coordinator {
             shared: Arc::clone(&shared),
             reservations,
             capacity: Some((target_node, moved_bytes)),
+            ended: false,
         });
         Ok(shared)
     }
@@ -1056,11 +1209,23 @@ impl Coordinator {
             }
         }
         let shared = Arc::new(JobShared::new(&self.next_job_id(), JobKind::Gc, rate_bps));
+        if let Err(e) = self.persist(&ControlRecord::Job {
+            id: shared.id.clone(),
+            vm: "(gc)".to_string(),
+            kind: JobKind::Gc,
+            capacity: None,
+        }) {
+            for r in &reservations {
+                self.scheduler.release(r);
+            }
+            return Err(e);
+        }
         self.push_job(JobEntry {
             vm: "(gc)".to_string(),
             shared: Arc::clone(&shared),
             reservations: Vec::new(),
             capacity: None,
+            ended: false,
         });
         let run = (|| -> Result<()> {
             let mut driver =
@@ -1145,14 +1310,169 @@ impl Coordinator {
         Ok(())
     }
 
+    /// Crash recovery, run at startup BEFORE launching VMs.
+    ///
+    /// With a control plane attached and a usable log, state is
+    /// *replayed* — O(log records) bookkeeping plus O(active leases)
+    /// integrity checks, instead of walking every file on every node;
+    /// after a clean shutdown even the per-lease qcheck walk is skipped
+    /// (the marker certifies every chain was flushed and closed). A log
+    /// torn beyond its last compacted snapshot (or never written) falls
+    /// back to the full fleet scan, whose findings then *reseed* the
+    /// store so the next boot replays again.
+    pub fn recover(&self) -> RecoveryReport {
+        let Some((store, ..)) = self.control_parts() else {
+            return self.recover_full_scan();
+        };
+        let v = store.view();
+        if !v.torn && v.records > 0 {
+            return self.recover_from_view(&v);
+        }
+        let report = self.recover_full_scan();
+        self.next_job_id.fetch_max(v.max_job_seq, Relaxed);
+        let _ = store.reseed(
+            self.nodes.index_snapshot(),
+            self.gc.chains(),
+            self.next_job_id.load(Relaxed),
+        );
+        report
+    }
+
+    /// Replay recovery: rebuild volatile coordinator state from the
+    /// [`StateStore`]'s replayed view. Per logged migration exactly one
+    /// journal is probed on its known target node; the placement index
+    /// is installed entry-by-entry (each validated with one `open_file`
+    /// on the named node — no listing); GC refcounts/condemnations are
+    /// installed, not rescanned; and only chains the lease table says
+    /// were open get a qcheck walk.
+    fn recover_from_view(&self, v: &FleetView) -> RecoveryReport {
+        let mut report = RecoveryReport::default();
+        // Reboot semantics: only file bytes survived; per-node volatile
+        // bookkeeping is re-derived from the log below.
+        for node in self.nodes.nodes() {
+            node.clear_volatile();
+        }
+        self.dedup.clear();
+        // In-flight migrations first — targeted: the log names the vm
+        // and target, so the journal is probed where it must live.
+        let mut migs: Vec<(String, String)> = v
+            .migrations
+            .iter()
+            .map(|(vm, t)| (vm.clone(), t.clone()))
+            .collect();
+        migs.sort();
+        for (vm, target) in &migs {
+            let r = crate::migrate::recover_migrations_for(
+                self.nodes.as_ref(),
+                vm,
+                target,
+            );
+            report.migrations_committed += r.committed;
+            report.migrations_rolled_back += r.rolled_back;
+            report.unopenable.extend(r.errors);
+        }
+        // The name→node index comes from the log; entries the journal
+        // resolution just deleted (superseded source copies) drop out
+        // in per-entry validation.
+        let mut entries: Vec<(String, String)> = v
+            .placement
+            .iter()
+            .map(|(f, n)| (f.clone(), n.clone()))
+            .collect();
+        entries.sort();
+        for f in self.nodes.install_index(&entries) {
+            report
+                .unopenable
+                .push(format!("{f}: logged placement has no file"));
+        }
+        // Files a committed journal landed on the target before the
+        // crash could persist their Place records: re-point them (the
+        // placement observer heals the log as commit_migration runs),
+        // then close the migration in the log.
+        for (vm, target) in &migs {
+            if let (Some(files), Some(tnode)) =
+                (v.chains.get(vm), self.nodes.node_named(target))
+            {
+                for f in files {
+                    if self.nodes.locate(f).is_none()
+                        && tnode.open_file(f).is_ok()
+                    {
+                        let _ = self
+                            .nodes
+                            .commit_migration(std::slice::from_ref(f), target);
+                    }
+                }
+            }
+            self.persist_best_effort(&ControlRecord::MigrationEnd {
+                vm: vm.clone(),
+            });
+        }
+        // GC registry: installed from the log (condemned marks land
+        // back on the owning nodes), no listing, no re-logged events.
+        self.gc.install(
+            v.chains.iter().map(|(k, f)| (k.clone(), f.clone())).collect(),
+            v.condemned.iter().map(|(k, c)| (k.clone(), c.clone())).collect(),
+            v.replicas.iter().map(|(k, c)| (k.clone(), c.clone())).collect(),
+        );
+        // Integrity gate: qcheck only what the lease table says was
+        // open at the crash — the O(active leases) bound. After a clean
+        // shutdown even this is skipped.
+        if !v.clean_shutdown {
+            let (live, expired) = partition_leases(&v.leases, self.clock.now());
+            for (vm, _) in live.iter().chain(expired.iter()) {
+                let Some(spec) = v.vms.get(vm) else { continue };
+                if spec.data_mode != DataMode::Real {
+                    continue;
+                }
+                report.chains_checked += 1;
+                let checked = Chain::open(
+                    self.nodes.as_ref(),
+                    &spec.active,
+                    DataMode::Real,
+                )
+                .and_then(|chain| {
+                    let before = qcheck::check_chain(&chain)?;
+                    if !before.is_clean() || before.leaked_clusters != 0 {
+                        qcheck::repair_chain(&chain)?;
+                        report.chains_repaired += 1;
+                        let after = qcheck::check_chain(&chain)?;
+                        if !after.is_clean() {
+                            bail!("still dirty: {}", after.errors.join("; "));
+                        }
+                    }
+                    Ok(())
+                });
+                if let Err(e) = checked {
+                    report
+                        .unopenable
+                        .push(format!("chain {}: {e:#}", spec.active));
+                }
+            }
+        }
+        // Jobs in the log were running at the crash; nothing is running
+        // now. Close them out (their node reservations were volatile
+        // and died with the old process).
+        for id in v.jobs.keys() {
+            self.persist_best_effort(&ControlRecord::JobEnd { id: id.clone() });
+        }
+        // job ids must never repeat across the crash
+        self.next_job_id.fetch_max(v.max_job_seq, Relaxed);
+        // NOTE: no synchronous refresh_capacity() here — logical-bytes
+        // reporting converges via the rate-limited background
+        // [`Coordinator::start_capacity_scan`] instead of delaying
+        // guest-I/O admission behind a full chain walk.
+        report
+    }
+
     /// Crash-recovery pass over every image on this coordinator's
     /// nodes: each file that parses as an image gets `qcheck --repair`
     /// if dirty, then every chain head (an image no other image backs
     /// onto) is re-checked as a chain so cross-file stamps are validated
-    /// too. Run at node startup, BEFORE launching VMs — the images must
-    /// not be concurrently open ([`Coordinator::launch_vm`] additionally
-    /// gates each `Existing` chain on a clean check at launch).
-    pub fn recover(&self) -> RecoveryReport {
+    /// too. The [`Coordinator::recover`] fallback when no usable control
+    /// log exists — the images must not be concurrently open
+    /// ([`Coordinator::launch_vm`] additionally gates each `Existing`
+    /// chain on a clean check at launch).
+    pub fn recover_full_scan(&self) -> RecoveryReport {
         let mut report = RecoveryReport::default();
         // Reboot semantics: only file bytes survived. Per-node volatile
         // bookkeeping (condemned marks, migration reservations, write
@@ -1244,6 +1564,7 @@ impl Coordinator {
     /// usage on the recipient by now, so its capacity reservation is
     /// released either way — the files themselves keep the space.
     fn reap_jobs(&self) {
+        let mut closed: Vec<ControlRecord> = Vec::new();
         for table in &self.jobs {
             let mut jobs = lock_unpoisoned(table);
             for e in jobs.iter_mut() {
@@ -1254,15 +1575,37 @@ impl Coordinator {
                     if let Some((node, bytes)) = e.capacity.take() {
                         node.release(bytes);
                     }
+                    if !e.ended {
+                        e.ended = true;
+                        closed.push(ControlRecord::JobEnd {
+                            id: e.shared.id.clone(),
+                        });
+                        if e.shared.kind == JobKind::Mirror {
+                            closed.push(ControlRecord::MigrationEnd {
+                                vm: e.vm.clone(),
+                            });
+                        }
+                    }
                 }
             }
+        }
+        // write-behind and best-effort, outside the ledger locks:
+        // terminal-state records must never block reaping
+        for rec in &closed {
+            self.persist_best_effort(rec);
         }
     }
 
     /// Stop one VM (serves what its clients already queued, flushes its
-    /// caches, cancels any running job).
+    /// caches, cancels any running job). With a control plane attached
+    /// the stop is persisted write-ahead (fenced — a deposed leader may
+    /// not stop VMs the new leader adopted) and the VM's lease released.
     pub fn stop_vm(&self, name: &str) -> Result<()> {
         let shard = self.shard_of(name);
+        if !lock_unpoisoned(&self.vms[shard]).contains_key(name) {
+            bail!("no vm '{name}'");
+        }
+        self.persist(&ControlRecord::VmStop { name: name.to_string() })?;
         let meta = lock_unpoisoned(&self.vms[shard])
             .remove(name)
             .ok_or_else(|| anyhow!("no vm '{name}'"))?;
@@ -1277,6 +1620,9 @@ impl Coordinator {
             let _ = rx.recv();
         }
         self.reap_jobs();
+        if let Some((store, epoch, who)) = self.control_parts() {
+            let _ = store.release_lease(epoch, name, &who);
+        }
         Ok(())
     }
 
@@ -1286,6 +1632,433 @@ impl Coordinator {
         for n in names {
             let _ = self.stop_vm(&n);
         }
+    }
+
+    // ----------------------------------------------- HA control plane
+
+    /// Attach a write-ahead [`StateStore`] (the durable HA control
+    /// plane). From here on:
+    ///
+    /// * every placement mutation is persisted *before* it happens, and
+    ///   vetoed if the append fails (a wedged log refuses new placements
+    ///   instead of silently diverging from what it recorded);
+    /// * GC registry mutations are persisted write-behind (GC state is
+    ///   reconstructible — a lost event costs a re-condemnation, never
+    ///   correctness);
+    /// * VM ownership is lease-based and launches/stops/jobs are fenced
+    ///   by epoch ([`Coordinator::campaign`]).
+    ///
+    /// The store must live on a dedicated metadata node *outside* this
+    /// coordinator's [`NodeSet`] — data-plane scans, placement and GC
+    /// must never see control-plane files.
+    pub fn attach_control(&self, store: Arc<StateStore>, who: &str) -> Result<()> {
+        if self.nodes.node_named(&store.node().name).is_some() {
+            bail!(
+                "control store node '{}' is in the data NodeSet; give the \
+                 log a dedicated metadata node",
+                store.node().name
+            );
+        }
+        let s = Arc::clone(&store);
+        self.nodes.set_observer(Some(Box::new(move |ev| match ev {
+            PlacementEvent::Placed { file, node } => {
+                s.append_unfenced(&ControlRecord::Place {
+                    file: (*file).to_string(),
+                    node: (*node).to_string(),
+                })
+            }
+            PlacementEvent::Removed { file } => s.append_unfenced(
+                &ControlRecord::Unplace { file: (*file).to_string() },
+            ),
+            PlacementEvent::Migrated { files, node } => {
+                for f in files.iter() {
+                    s.append_unfenced(&ControlRecord::Place {
+                        file: f.clone(),
+                        node: (*node).to_string(),
+                    })?;
+                }
+                Ok(())
+            }
+        })));
+        let s = Arc::clone(&store);
+        self.gc.set_observer(Some(Box::new(move |ev| {
+            let rec = match ev {
+                GcEvent::Chain { id, files } => ControlRecord::Chain {
+                    id: id.clone(),
+                    files: files.clone(),
+                },
+                GcEvent::ChainDrop { id } => {
+                    ControlRecord::ChainDrop { id: id.clone() }
+                }
+                GcEvent::Condemned { file, bytes, origin } => {
+                    ControlRecord::Condemn {
+                        file: file.clone(),
+                        bytes: *bytes,
+                        origin: origin.clone(),
+                    }
+                }
+                GcEvent::Uncondemned { file } => {
+                    ControlRecord::Uncondemn { file: file.clone() }
+                }
+                GcEvent::Swept { file } => {
+                    ControlRecord::Swept { file: file.clone() }
+                }
+                GcEvent::CondemnedReplica { node, file, bytes, origin } => {
+                    ControlRecord::CondemnReplica {
+                        node: node.clone(),
+                        file: file.clone(),
+                        bytes: *bytes,
+                        origin: origin.clone(),
+                    }
+                }
+                GcEvent::SweptReplica { node, file } => {
+                    ControlRecord::SweptReplica {
+                        node: node.clone(),
+                        file: file.clone(),
+                    }
+                }
+            };
+            // write-behind and best-effort by design
+            let _ = s.append_unfenced(&rec);
+        })));
+        // a rebooting leader re-adopts its recorded epoch; anyone else
+        // starts at 0 and must campaign before fenced writes pass
+        let epoch =
+            if store.leader() == who { store.current_epoch() } else { 0 };
+        *lock_unpoisoned(&self.control) =
+            Some(ControlHandle { store, epoch, who: who.to_string() });
+        Ok(())
+    }
+
+    /// Win an election: bump the store epoch, fencing every append a
+    /// previous leader (including a deposed *this* instance) attempts
+    /// under its older epoch. Returns the new epoch.
+    pub fn campaign(&self) -> Result<u64> {
+        let mut ctl = lock_unpoisoned(&self.control);
+        let Some(h) = ctl.as_mut() else {
+            bail!("no control plane attached");
+        };
+        let epoch = h.store.campaign(&h.who)?;
+        h.epoch = epoch;
+        Ok(epoch)
+    }
+
+    fn control_parts(&self) -> Option<(Arc<StateStore>, u64, String)> {
+        lock_unpoisoned(&self.control)
+            .as_ref()
+            .map(|h| (Arc::clone(&h.store), h.epoch, h.who.clone()))
+    }
+
+    /// Fenced write-ahead append; a no-op without a control plane.
+    fn persist(&self, rec: &ControlRecord) -> Result<()> {
+        if let Some((store, epoch, _)) = self.control_parts() {
+            store.append(epoch, rec)?;
+        }
+        Ok(())
+    }
+
+    /// Fenced append where failure must not abort the caller (terminal
+    /// job states, bookkeeping that replay re-derives anyway).
+    fn persist_best_effort(&self, rec: &ControlRecord) {
+        if let Some((store, epoch, _)) = self.control_parts() {
+            let _ = store.append(epoch, rec);
+        }
+    }
+
+    /// Leader failover: take over a fleet whose previous leader died.
+    ///
+    /// Unlike [`Coordinator::recover`] this runs against *live* nodes —
+    /// volatile node state survived in their processes, so nothing is
+    /// cleared. The standby tails the log (retrying with jittered
+    /// backoff while the metadata node may still be coming back), wins
+    /// an election (fencing every straggler write the dead leader might
+    /// still attempt), resolves in-flight migrations from their
+    /// journals, releases the dead leader's logged capacity
+    /// reservations, and re-adopts each VM as its lease expires —
+    /// O(active leases) work, no fleet scan, no guest byte whose flush
+    /// was acknowledged is lost.
+    pub fn takeover(self: &Arc<Self>) -> Result<RecoveryReport> {
+        let (store, _, who) = self
+            .control_parts()
+            .ok_or_else(|| anyhow!("no control plane attached"))?;
+        // standby log-tailing: replay the log from disk; the retry rides
+        // out a metadata node that is itself still rebooting
+        let policy = RetryPolicy::new(1_000_000, 1_000_000_000, 30_000_000_000);
+        let clock = Arc::clone(&self.clock);
+        policy.run(
+            fnv1a(&who),
+            || clock.now(),
+            |ns| clock.advance(ns),
+            || store.reopen(),
+        )?;
+        self.campaign()?;
+        let v = store.view();
+        let mut report = RecoveryReport::default();
+        // targeted journal resolution, exactly as in replay recovery
+        let mut migs: Vec<(String, String)> = v
+            .migrations
+            .iter()
+            .map(|(vm, t)| (vm.clone(), t.clone()))
+            .collect();
+        migs.sort();
+        for (vm, target) in &migs {
+            let r = crate::migrate::recover_migrations_for(
+                self.nodes.as_ref(),
+                vm,
+                target,
+            );
+            report.migrations_committed += r.committed;
+            report.migrations_rolled_back += r.rolled_back;
+            report.unopenable.extend(r.errors);
+            if let (Some(files), Some(tnode)) =
+                (v.chains.get(vm), self.nodes.node_named(target))
+            {
+                for f in files {
+                    if self.nodes.locate(f).as_deref() != Some(target.as_str())
+                        && tnode.open_file(f).is_ok()
+                    {
+                        let _ = self
+                            .nodes
+                            .commit_migration(std::slice::from_ref(f), target);
+                    }
+                }
+            }
+            self.persist_best_effort(&ControlRecord::MigrationEnd {
+                vm: vm.clone(),
+            });
+        }
+        // the dead leader's jobs are not running here; give back the
+        // capacity the log says they held and close them out
+        let mut job_ids: Vec<&String> = v.jobs.keys().collect();
+        job_ids.sort();
+        for id in job_ids {
+            let job = &v.jobs[id];
+            if let Some((node_name, bytes)) = &job.capacity {
+                if let Some(node) = self.nodes.node_named(node_name) {
+                    node.release(*bytes);
+                }
+            }
+            self.persist_best_effort(&ControlRecord::JobEnd { id: id.clone() });
+        }
+        self.next_job_id.fetch_max(v.max_job_seq, Relaxed);
+        // re-adopt each leased VM; never steal a live lease — the old
+        // holder may still be flushing, so wait out the TTL on the
+        // virtual clock (lease expiry is the only safe handover)
+        let mut leased: Vec<String> = v.leases.keys().cloned().collect();
+        leased.sort();
+        for vm in leased {
+            if self.meta(&vm, |_| ()).is_ok() {
+                continue; // already running here
+            }
+            if let Some(l) = store.lease_of(&vm) {
+                let now = self.clock.now();
+                if l.holder != who && !l.expired(now) {
+                    self.clock.advance(l.expires_ns - now);
+                }
+            }
+            let Some(spec) = v.vms.get(&vm) else {
+                // a lease with no VM record: half-finished launch; the
+                // expired lease is the only orphan to clean
+                if let Some((store, epoch, who)) = self.control_parts() {
+                    let _ = store.release_lease(epoch, &vm, &who);
+                }
+                continue;
+            };
+            report.chains_checked += 1;
+            let cfg = VmConfig {
+                driver: spec.driver,
+                cache: spec.cache,
+                chain: VmChain::Existing {
+                    active_name: spec.active.clone(),
+                    data_mode: spec.data_mode,
+                },
+            };
+            if let Err(e) = self.launch_vm(&vm, cfg) {
+                report.unopenable.push(format!("vm {vm}: {e:#}"));
+            }
+        }
+        Ok(report)
+    }
+
+    /// Hard-kill this coordinator instance: crash semantics for
+    /// failover. Every owned VM is abandoned on its shard — no drain,
+    /// no flush; unflushed cache contents are lost exactly as a power
+    /// cut would lose them (flush-acknowledged bytes are already on the
+    /// nodes). Leases, bandwidth and capacity reservations are
+    /// deliberately NOT released: cleaning up the dead owner's mess is
+    /// [`Coordinator::takeover`]'s job, in O(leases).
+    pub fn halt(&self) {
+        for (shard, table) in self.vms.iter().enumerate() {
+            let names: Vec<String> =
+                lock_unpoisoned(table).keys().cloned().collect();
+            for name in names {
+                let (reply, rx) = sync_channel(1);
+                if self
+                    .shards[shard]
+                    .send(ShardControl::AbandonVm { name, reply })
+                    .is_ok()
+                {
+                    let _ = rx.recv();
+                }
+            }
+            lock_unpoisoned(table).clear();
+        }
+        for table in &self.jobs {
+            lock_unpoisoned(table).clear();
+        }
+        *lock_unpoisoned(&self.control) = None;
+    }
+
+    /// Renew every lease this instance holds (the leader's heartbeat).
+    /// Each renewal retries with jittered exponential backoff until
+    /// that lease's own expiry — a transiently failing store must not
+    /// cost ownership while the TTL still has runway. Returns how many
+    /// leases were renewed.
+    pub fn renew_leases(&self) -> Result<usize> {
+        let Some((store, epoch, who)) = self.control_parts() else {
+            return Ok(0);
+        };
+        let mut renewed = 0;
+        for vm in self.vm_names() {
+            let Some(l) = store.lease_of(&vm) else { continue };
+            if l.holder != who {
+                continue;
+            }
+            let clock = Arc::clone(&self.clock);
+            let deadline = l.expires_ns.saturating_sub(clock.now());
+            let policy = RetryPolicy::new(1_000_000, 100_000_000, deadline);
+            policy.run(
+                fnv1a(&vm),
+                || clock.now(),
+                |ns| clock.advance(ns),
+                || store.renew_lease(epoch, &vm, &who, self.cfg.lease_ttl_ns),
+            )?;
+            renewed += 1;
+        }
+        Ok(renewed)
+    }
+
+    /// Refresh per-node logical-bytes counters as a rate-limited
+    /// *background* [`CapacityScanJob`] instead of the synchronous
+    /// [`Coordinator::refresh_capacity`] walk: recovery returns as soon
+    /// as guest I/O is safe and the reporting counters converge behind
+    /// it at `rate_bps`. Runs on its own thread against a scratch
+    /// driver (it owns no VM chain) and appears in
+    /// [`Coordinator::list_jobs`] like any other job.
+    pub fn start_capacity_scan(&self, rate_bps: u64) -> Result<Arc<JobShared>> {
+        self.reap_jobs();
+        // the scan reads chains on every node: admit against each
+        // node's maintenance budget
+        let mut reservations = Vec::new();
+        for n in self.nodes.nodes() {
+            match self.scheduler.admit(&n.name, rate_bps) {
+                Ok(r) => reservations.push(r),
+                Err(e) => {
+                    for r in &reservations {
+                        self.scheduler.release(r);
+                    }
+                    return Err(e);
+                }
+            }
+        }
+        let shared = Arc::new(JobShared::new(
+            &self.next_job_id(),
+            JobKind::Scan,
+            rate_bps,
+        ));
+        if let Err(e) = self.persist(&ControlRecord::Job {
+            id: shared.id.clone(),
+            vm: "(scan)".to_string(),
+            kind: JobKind::Scan,
+            capacity: None,
+        }) {
+            for r in &reservations {
+                self.scheduler.release(r);
+            }
+            return Err(e);
+        }
+        // discovery (the one listing pass) happens at construction;
+        // increments only walk chains
+        let job = CapacityScanJob::new(Arc::clone(&self.nodes));
+        let clock = Arc::clone(&self.clock);
+        let cost = self.cfg.cost;
+        let increment = self.cfg.job_increment_clusters.max(1);
+        let worker = Arc::clone(&shared);
+        let spawned = std::thread::Builder::new()
+            .name("capacity-scan".into())
+            .spawn(move || {
+                let mut driver =
+                    match crate::gc::scratch_driver(Arc::clone(&clock), cost) {
+                        Ok(d) => d,
+                        Err(e) => {
+                            worker.set_error(format!("{e:#}"));
+                            worker.set_state(crate::blockjob::JobState::Failed);
+                            return;
+                        }
+                    };
+                let fence = Arc::clone(driver.fence());
+                let mut runner = JobRunner::new(
+                    Box::new(job),
+                    Arc::clone(&worker),
+                    fence,
+                    increment,
+                    4 << 20,
+                    clock.now(),
+                );
+                loop {
+                    match runner.step(&mut driver, clock.now()) {
+                        Step::Finished => break,
+                        Step::Starved { ready_at } => {
+                            // bounded clock quanta, like the shard idle
+                            // loop (guests must not see one giant jump)
+                            const SCAN_IDLE_QUANTUM_NS: u64 = 100_000_000;
+                            let now = clock.now();
+                            if ready_at > now {
+                                clock.advance(
+                                    (ready_at - now).min(SCAN_IDLE_QUANTUM_NS),
+                                );
+                            }
+                        }
+                        Step::Paused => std::thread::sleep(
+                            std::time::Duration::from_millis(1),
+                        ),
+                        Step::Ran => {}
+                    }
+                }
+            });
+        if let Err(e) = spawned {
+            for r in &reservations {
+                self.scheduler.release(r);
+            }
+            self.persist_best_effort(&ControlRecord::JobEnd {
+                id: shared.id.clone(),
+            });
+            return Err(anyhow!("capacity-scan thread: {e}"));
+        }
+        self.push_job(JobEntry {
+            vm: "(scan)".to_string(),
+            shared: Arc::clone(&shared),
+            reservations,
+            capacity: None,
+            ended: false,
+        });
+        Ok(shared)
+    }
+
+    /// Control-plane status (`sqemu control status`).
+    pub fn control_status(&self) -> Result<StoreStatus> {
+        let (store, ..) = self
+            .control_parts()
+            .ok_or_else(|| anyhow!("no control plane attached"))?;
+        Ok(store.status())
+    }
+
+    /// Stop the fleet and write the clean-shutdown marker: the next
+    /// [`Coordinator::recover`] over this store trusts the log outright
+    /// and skips even the per-lease qcheck walk.
+    pub fn shutdown_clean(&self) -> Result<()> {
+        self.shutdown();
+        self.persist(&ControlRecord::Shutdown)
     }
 
     pub fn data_mode_of(&self, name: &str) -> Result<DataMode> {

@@ -75,6 +75,12 @@ pub(crate) enum ShardControl {
     /// Stop a VM: serve what its clients already queued, flush, cancel
     /// any running job, mark its rings dead. Idempotent.
     RemoveVm { name: String, reply: SyncSender<Result<()>> },
+    /// Drop a VM with crash semantics: NO serving of queued requests and
+    /// NO cache flush — whatever was not yet flush-acknowledged is lost,
+    /// exactly as a power cut would lose it. The HA failover tests use
+    /// this (`Coordinator::halt`) to kill a leader mid-workload; a real
+    /// stop goes through `RemoveVm`. Idempotent.
+    AbandonVm { name: String, reply: SyncSender<()> },
     /// Pause the VM and hand its bare chain to `f` (snapshot/stream).
     WithChain {
         vm: String,
@@ -424,6 +430,24 @@ fn handle_control(
             reap_slot_stats(&mut slot);
             slot.rings.mark_dead();
             let _ = reply.send(Ok(()));
+        }
+        ShardControl::AbandonVm { name, reply } => {
+            let Some(idx) = vms.iter().position(|s| s.name == name) else {
+                let _ = reply.send(());
+                return;
+            };
+            let mut slot = vms.remove(idx);
+            // crash semantics: the unflushed cache dies with the slot —
+            // only flush-acknowledged bytes survive on the nodes
+            if let Some(r) = slot.runner.take() {
+                r.shared().cancel();
+                r.shared().set_state(JobState::Cancelled);
+                r.shared().clear_waker();
+                slot.stats.jobs_cancelled.fetch_add(1, Relaxed);
+                slot.driver.fence().end();
+            }
+            slot.rings.mark_dead();
+            let _ = reply.send(());
         }
         ShardControl::WithChain { vm, f, reply } => {
             let r = with_slot(vms, &vm, |slot| {

@@ -31,11 +31,13 @@
 pub mod capacity;
 pub mod codec;
 pub mod index;
+pub mod scan;
 
 pub use capacity::{
     chain_logical_bytes, chain_physical_bytes, image_breakdown, seed_chain, MappedBreakdown,
 };
 pub use index::{content_hash, DedupIndex, DedupStats, Extent};
+pub use scan::CapacityScanJob;
 
 use std::sync::Arc;
 

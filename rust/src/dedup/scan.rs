@@ -1,0 +1,195 @@
+//! The capacity scan as a [`BlockJob`]: the background, rate-limited
+//! form of `Coordinator::refresh_capacity`.
+//!
+//! Recovery used to refresh every node's logical-bytes counter
+//! synchronously — a full walk of every chain's tables before the
+//! coordinator would answer anything. The counter only feeds reporting
+//! (`sqemu node status`, fig24), so that walk now runs as a standard
+//! block job instead: admitted against the maintenance budget, paced by
+//! the [`crate::blockjob::RateLimiter`], pausable and cancellable, and
+//! interleaving with guest I/O like any stream or GC sweep.
+//!
+//! Work units are *chain heads* (one "cluster" of budget = one head);
+//! the bytes reported per increment are the logical bytes the walk
+//! covered, so the limiter meters scan I/O in proportion to how much
+//! table-walking each chain costs. Construction does the one discovery
+//! listing pass; increments never list nodes again.
+
+use super::capacity::chain_logical_bytes;
+use crate::blockjob::{BlockJob, Increment, JobKind};
+use crate::coordinator::placement::NodeSet;
+use crate::qcow::image::DataMode;
+use crate::qcow::Chain;
+use anyhow::Result;
+use std::collections::HashMap;
+use std::sync::Arc;
+
+pub struct CapacityScanJob {
+    nodes: Arc<NodeSet>,
+    /// Chain heads still to walk (discovered at construction).
+    heads: Vec<String>,
+    /// Progress denominator.
+    total: u64,
+    /// Logical bytes accumulated per node name so far.
+    logical: HashMap<String, u64>,
+}
+
+impl CapacityScanJob {
+    /// Discover the fleet's chain heads (images no other image backs
+    /// onto) in one listing pass over the nodes.
+    pub fn new(nodes: Arc<NodeSet>) -> CapacityScanJob {
+        let mut backed: std::collections::HashSet<String> =
+            std::collections::HashSet::new();
+        let mut names: Vec<String> = Vec::new();
+        for node in nodes.nodes() {
+            for f in node.file_names() {
+                if f.starts_with(crate::migrate::JOURNAL_PREFIX) {
+                    continue;
+                }
+                let opened = node.open_file(&f).and_then(|b| {
+                    crate::qcow::Image::open(&f, b, DataMode::Real)
+                });
+                if let Ok(img) = opened {
+                    if let Some(b) = img.backing_name() {
+                        backed.insert(b);
+                    }
+                    if !names.contains(&f) {
+                        names.push(f);
+                    }
+                }
+            }
+        }
+        let heads: Vec<String> = names
+            .into_iter()
+            .filter(|n| !backed.contains(n))
+            .collect();
+        let total = heads.len() as u64;
+        CapacityScanJob { nodes, heads, total, logical: HashMap::new() }
+    }
+}
+
+impl BlockJob for CapacityScanJob {
+    fn kind(&self) -> JobKind {
+        JobKind::Scan
+    }
+
+    fn total_clusters(&self) -> u64 {
+        self.total
+    }
+
+    fn run_increment(&mut self, _chain: &mut Chain, budget: u64) -> Result<Increment> {
+        let mut inc = Increment::default();
+        while inc.processed < budget.max(1) {
+            let Some(head) = self.heads.pop() else {
+                inc.complete = true;
+                return Ok(inc);
+            };
+            inc.processed += 1;
+            // a head that vanished or will not open since discovery is
+            // skipped, exactly as the synchronous scan skips it — the
+            // counter is reporting, never correctness
+            let Some(node) = self.nodes.locate(&head) else { continue };
+            let Ok(chain) =
+                Chain::open(self.nodes.as_ref(), &head, DataMode::Real)
+            else {
+                continue;
+            };
+            if let Ok(bytes) = chain_logical_bytes(&chain) {
+                *self.logical.entry(node).or_default() += bytes;
+                inc.copied += 1;
+                inc.bytes += bytes;
+            }
+        }
+        inc.complete = self.heads.is_empty();
+        Ok(inc)
+    }
+
+    fn finalize(&mut self, _chain: &mut Chain) -> Result<()> {
+        for node in self.nodes.nodes() {
+            let l = self.logical.get(&node.name).copied().unwrap_or(0);
+            node.set_logical_bytes(l);
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::blockjob::{JobRunner, JobShared, JobState, Step};
+    use crate::chaingen::ChainSpec;
+    use crate::gc::scratch_driver;
+    use crate::metrics::clock::{CostModel, VirtClock};
+    use crate::storage::node::StorageNode;
+    use crate::vdisk::Driver as _;
+
+    fn fleet_with_chain() -> (Arc<VirtClock>, Arc<NodeSet>) {
+        let clock = VirtClock::new();
+        let nodes = Arc::new(
+            NodeSet::new(vec![
+                StorageNode::new("n0", clock.clone(), CostModel::default()),
+                StorageNode::new("n1", clock.clone(), CostModel::default()),
+            ])
+            .unwrap(),
+        );
+        let spec = ChainSpec {
+            chain_len: 3,
+            data_mode: DataMode::Real,
+            prefix: "scan".into(),
+            ..Default::default()
+        };
+        crate::chaingen::generate(nodes.as_ref(), &spec).unwrap();
+        (clock, nodes)
+    }
+
+    #[test]
+    fn background_scan_matches_the_synchronous_walk() {
+        let (clock, nodes) = fleet_with_chain();
+        // the synchronous reference: walk the chain directly
+        let chain =
+            Chain::open(nodes.as_ref(), "scan-2", DataMode::Real).unwrap();
+        let expect = chain_logical_bytes(&chain).unwrap();
+        let home = nodes.locate("scan-2").unwrap();
+        drop(chain);
+
+        let mut d = scratch_driver(clock.clone(), CostModel::default()).unwrap();
+        let shared = Arc::new(JobShared::new("scan-1", JobKind::Scan, 0));
+        let fence = Arc::clone(d.fence());
+        let job = Box::new(CapacityScanJob::new(Arc::clone(&nodes)));
+        let mut r =
+            JobRunner::new(job, Arc::clone(&shared), fence, 1, 1 << 20, clock.now());
+        loop {
+            match r.step(&mut d, clock.now()) {
+                Step::Finished => break,
+                Step::Starved { ready_at } => {
+                    let now = clock.now();
+                    clock.advance(ready_at - now);
+                }
+                _ => {}
+            }
+        }
+        let st = shared.status();
+        assert_eq!(st.state, JobState::Completed, "error: {:?}", st.error);
+        assert_eq!(st.bytes_copied, expect, "scan bills the logical bytes");
+        for node in nodes.nodes() {
+            let want = if node.name == home { expect } else { 0 };
+            assert_eq!(node.logical_bytes(), want, "node {}", node.name);
+        }
+    }
+
+    #[test]
+    fn discovery_happens_once_at_construction() {
+        let (_clock, nodes) = fleet_with_chain();
+        let before: u64 = nodes.nodes().iter().map(|n| n.list_ops()).sum();
+        let mut job = CapacityScanJob::new(Arc::clone(&nodes));
+        let listed: u64 = nodes.nodes().iter().map(|n| n.list_ops()).sum();
+        assert!(listed > before, "construction lists the nodes");
+        // increments take a &mut Chain per the trait; the scan never
+        // touches it, so any open chain stands in
+        let mut scratch =
+            Chain::open(nodes.as_ref(), "scan-2", DataMode::Real).unwrap();
+        while !job.run_increment(&mut scratch, 1).unwrap().complete {}
+        let end: u64 = nodes.nodes().iter().map(|n| n.list_ops()).sum();
+        assert_eq!(end, listed, "increments never re-list the nodes");
+    }
+}

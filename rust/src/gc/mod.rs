@@ -38,7 +38,7 @@ pub mod registry;
 
 pub use audit::{audit, walk_backing, AuditReport};
 pub use job::{scratch_driver, GcJob};
-pub use registry::{Condemned, GcRegistry};
+pub use registry::{Condemned, GcEvent, GcObserver, GcRegistry};
 
 /// Outcome of one coordinator GC run
 /// ([`crate::coordinator::Coordinator::run_gc`]).

@@ -23,6 +23,32 @@ pub struct Condemned {
     pub origin: String,
 }
 
+/// A registry mutation, reported to the observer *after* it happened
+/// (write-behind). GC state is reconstructible — a missed event costs at
+/// worst a re-condemnation check at the next recovery, and the control
+/// plane's log compaction re-emits the full registry periodically — so
+/// unlike placement there is no veto: the observer is pure bookkeeping.
+#[derive(Clone, Debug)]
+pub enum GcEvent {
+    /// A chain declared (or re-declared) its file set.
+    Chain { id: String, files: Vec<String> },
+    /// A chain was dropped entirely.
+    ChainDrop { id: String },
+    /// A file entered the deferred-delete set.
+    Condemned { file: String, bytes: u64, origin: String },
+    /// A condemned file was resurrected by a new reference.
+    Uncondemned { file: String },
+    /// A condemned file was physically deleted.
+    Swept { file: String },
+    /// A superseded migration replica entered the delete set.
+    CondemnedReplica { node: String, file: String, bytes: u64, origin: String },
+    /// A condemned replica was physically deleted.
+    SweptReplica { node: String, file: String },
+}
+
+/// Write-behind hook; infallible by design (see [`GcEvent`]).
+pub type GcObserver = Box<dyn Fn(&GcEvent) + Send + Sync>;
+
 #[derive(Default)]
 struct Inner {
     /// file name -> chain ids referencing it
@@ -47,6 +73,10 @@ pub struct GcRegistry {
     gc_runs: AtomicU64,
     reclaimed_bytes: AtomicU64,
     files_deleted: AtomicU64,
+    /// Write-behind observer. Lock order: events are collected under
+    /// `inner` and emitted strictly after it unlocks, so the observer
+    /// may take any lock of its own.
+    observer: Mutex<Option<GcObserver>>,
 }
 
 impl GcRegistry {
@@ -57,6 +87,23 @@ impl GcRegistry {
             gc_runs: AtomicU64::new(0),
             reclaimed_bytes: AtomicU64::new(0),
             files_deleted: AtomicU64::new(0),
+            observer: Mutex::new(None),
+        }
+    }
+
+    /// Install (or replace) the write-behind observer.
+    pub fn set_observer(&self, obs: Option<GcObserver>) {
+        *self.observer.lock().unwrap() = obs;
+    }
+
+    fn emit(&self, evs: &[GcEvent]) {
+        if evs.is_empty() {
+            return;
+        }
+        if let Some(obs) = self.observer.lock().unwrap().as_ref() {
+            for ev in evs {
+                obs(ev);
+            }
         }
     }
 
@@ -66,6 +113,10 @@ impl GcRegistry {
     /// was are condemned. Newly referenced files are resurrected from the
     /// deferred-delete set if a sweep had not reached them yet.
     pub fn sync_chain(&self, chain_id: &str, files: Vec<String>) {
+        let mut evs = vec![GcEvent::Chain {
+            id: chain_id.to_string(),
+            files: files.clone(),
+        }];
         let mut inner = self.inner.lock().unwrap();
         let new_set: HashSet<String> = files.iter().cloned().collect();
         let old = inner
@@ -82,24 +133,30 @@ impl GcRegistry {
                 if let Some(node) = self.nodes.node_of(f) {
                     node.uncondemn(f);
                 }
+                evs.push(GcEvent::Uncondemned { file: f.clone() });
             }
         }
         for f in old {
             if !new_set.contains(&f) {
-                unref(&self.nodes, &mut inner, &f, chain_id);
+                unref(&self.nodes, &mut inner, &f, chain_id, &mut evs);
             }
         }
+        drop(inner);
+        self.emit(&evs);
     }
 
     /// Drop a chain entirely (decommission / snapshot-chain deletion):
     /// release all its references; files it referenced alone are
     /// condemned.
     pub fn drop_chain(&self, chain_id: &str) {
+        let mut evs = vec![GcEvent::ChainDrop { id: chain_id.to_string() }];
         let mut inner = self.inner.lock().unwrap();
         let files = inner.chains.remove(chain_id).unwrap_or_default();
         for f in files {
-            unref(&self.nodes, &mut inner, &f, chain_id);
+            unref(&self.nodes, &mut inner, &f, chain_id, &mut evs);
         }
+        drop(inner);
+        self.emit(&evs);
     }
 
     /// How many chains reference `file`?
@@ -131,6 +188,12 @@ impl GcRegistry {
             (node_name.to_string(), file.to_string()),
             Condemned { bytes, origin: origin.to_string() },
         );
+        self.emit(&[GcEvent::CondemnedReplica {
+            node: node_name.to_string(),
+            file: file.to_string(),
+            bytes,
+            origin: origin.to_string(),
+        }]);
     }
 
     /// Is the copy of `file` on `node_name` a condemned migration
@@ -216,6 +279,7 @@ impl GcRegistry {
     /// half states). Returns `(name, reclaimed_bytes)`, or `None` when
     /// the deferred-delete set is empty.
     pub fn sweep_one(&self) -> Option<(String, u64)> {
+        let mut evs: Vec<GcEvent> = Vec::new();
         let mut inner = self.inner.lock().unwrap();
         // superseded migration replicas first: off-index copies, no
         // refcount gate (the name's references follow the flipped index)
@@ -242,10 +306,17 @@ impl GcRegistry {
             self.reclaimed_bytes.fetch_add(bytes, Relaxed);
             self.files_deleted.fetch_add(1, Relaxed);
             *inner.reclaimed_by.entry(c.origin).or_default() += bytes;
+            evs.push(GcEvent::SweptReplica { node: node_name, file: file.clone() });
+            drop(inner);
+            self.emit(&evs);
             return Some((file, bytes));
         }
         loop {
-            let name = inner.condemned.keys().next()?.clone();
+            let Some(name) = inner.condemned.keys().next().cloned() else {
+                drop(inner);
+                self.emit(&evs);
+                return None;
+            };
             let c = inner.condemned.remove(&name).expect("key just seen");
             // safety gate: never delete a file a chain re-referenced
             // after condemnation
@@ -253,9 +324,11 @@ impl GcRegistry {
                 if let Some(node) = self.nodes.node_of(&name) {
                     node.uncondemn(&name);
                 }
+                evs.push(GcEvent::Uncondemned { file: name });
                 continue;
             }
             let Some(node) = self.nodes.node_of(&name) else {
+                evs.push(GcEvent::Swept { file: name });
                 continue; // already gone from every node
             };
             let bytes = node
@@ -269,6 +342,9 @@ impl GcRegistry {
             self.reclaimed_bytes.fetch_add(bytes, Relaxed);
             self.files_deleted.fetch_add(1, Relaxed);
             *inner.reclaimed_by.entry(c.origin).or_default() += bytes;
+            evs.push(GcEvent::Swept { file: name.clone() });
+            drop(inner);
+            self.emit(&evs);
             return Some((name, bytes));
         }
     }
@@ -298,11 +374,56 @@ impl GcRegistry {
     pub fn nodes(&self) -> &Arc<NodeSet> {
         &self.nodes
     }
+
+    /// Replace the registry wholesale from a replayed durable log:
+    /// refcounts are re-derived from the chain file lists, condemned
+    /// entries re-mark their nodes (the per-node condemned set is
+    /// volatile). NO events are emitted — this installs what the log
+    /// already records.
+    pub fn install(
+        &self,
+        chains: Vec<(String, Vec<String>)>,
+        condemned: Vec<(String, (u64, String))>,
+        replicas: Vec<((String, String), (u64, String))>,
+    ) {
+        let mut inner = self.inner.lock().unwrap();
+        inner.refs.clear();
+        inner.chains.clear();
+        inner.condemned.clear();
+        inner.replicas.clear();
+        for (id, files) in chains {
+            for f in &files {
+                inner.refs.entry(f.clone()).or_default().insert(id.clone());
+            }
+            inner.chains.insert(id, files);
+        }
+        for (file, (bytes, origin)) in condemned {
+            if let Some(node) = self.nodes.node_of(&file) {
+                node.mark_condemned(&file);
+            }
+            inner.condemned.insert(file, Condemned { bytes, origin });
+        }
+        for ((node_name, file), (bytes, origin)) in replicas {
+            if let Some(node) = self.nodes.node_named(&node_name) {
+                node.mark_condemned(&file);
+            }
+            inner
+                .replicas
+                .insert((node_name, file), Condemned { bytes, origin });
+        }
+    }
 }
 
 /// Drop `origin`'s reference to `file`; condemn the file when that was
-/// the last reference and it still exists on a node.
-fn unref(nodes: &NodeSet, inner: &mut Inner, file: &str, origin: &str) {
+/// the last reference and it still exists on a node. Condemnations are
+/// appended to `evs` for the caller's write-behind emit.
+fn unref(
+    nodes: &NodeSet,
+    inner: &mut Inner,
+    file: &str,
+    origin: &str,
+    evs: &mut Vec<GcEvent>,
+) {
     if let Some(set) = inner.refs.get_mut(file) {
         set.remove(origin);
         if !set.is_empty() {
@@ -319,6 +440,11 @@ fn unref(nodes: &NodeSet, inner: &mut Inner, file: &str, origin: &str) {
         file.to_string(),
         Condemned { bytes, origin: origin.to_string() },
     );
+    evs.push(GcEvent::Condemned {
+        file: file.to_string(),
+        bytes,
+        origin: origin.to_string(),
+    });
 }
 
 #[cfg(test)]

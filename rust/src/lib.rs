@@ -26,6 +26,9 @@
 //!   logical-vs-physical capacity scanner.
 //! * [`migrate`] — live chain migration between storage nodes (mirror
 //!   job, crash-safe switchover journal) and the fleet rebalancer.
+//! * [`control`] — the durable HA control plane: write-ahead StateStore
+//!   on a dedicated metadata node, lease-based VM ownership, and
+//!   epoch-fenced leader election for multi-coordinator fleets.
 //! * [`guest`] — simulated guest workloads (dd, fio, YCSB over an LSM
 //!   key-value store, VM boot).
 //! * [`chaingen`], [`characterize`] — chain generation + the §3 study.
@@ -40,6 +43,7 @@ pub mod cache;
 pub mod chaingen;
 pub mod characterize;
 pub mod cli;
+pub mod control;
 pub mod coordinator;
 pub mod dedup;
 pub mod gc;

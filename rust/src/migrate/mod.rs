@@ -80,62 +80,98 @@ pub fn recover_migrations(nodes: &NodeSet) -> MigrationRecovery {
             .collect();
         journals.sort();
         for jname in journals {
-            // rule 4: the journal may only be deleted once every
-            // superseded/partial copy it covers is gone — if any
-            // survives, the journal stays behind as the arbiter for the
-            // next recovery pass
-            let mut cleared = true;
-            match journal::read_journal(target, &jname) {
-                // torn before the begin flush: covers nothing (no target
-                // copy can predate it) — expected under a crash at the
-                // journal create, just drop it
-                None => {}
-                Some(state) if state.committed => {
-                    for (file, src_name) in &state.moves {
-                        let Some(src) = nodes.node_named(src_name) else {
-                            report.errors.push(format!(
-                                "{jname}: source node '{src_name}' unknown"
-                            ));
-                            cleared = false;
-                            continue;
-                        };
-                        if src.name == target.name || src.open_file(file).is_err() {
-                            continue; // nothing superseded left behind
-                        }
-                        if target.open_file(file).is_err() {
-                            // committed yet the target copy is missing:
-                            // corrupted state — keep both the source copy
-                            // and the journal, surface it
-                            report.errors.push(format!(
-                                "{jname}: committed but '{file}' absent on \
-                                 target '{}'",
-                                target.name
-                            ));
-                            cleared = false;
-                            continue;
-                        }
-                        if src.delete_file(file).is_err() {
-                            cleared = false;
-                        }
-                    }
-                    report.committed += 1;
-                }
-                Some(state) => {
-                    for (file, _) in &state.moves {
-                        if target.open_file(file).is_ok()
-                            && target.delete_file(file).is_err()
-                        {
-                            cleared = false;
-                        }
-                    }
-                    report.rolled_back += 1;
-                }
-            }
-            if cleared {
-                let _ = target.delete_file(&jname);
-            }
+            resolve_journal(nodes, target, &jname, &mut report);
         }
     }
+    report
+}
+
+/// Resolve one journal on `target` (see [`recover_migrations`] for the
+/// rules). No-op if the journal does not exist.
+fn resolve_journal(
+    nodes: &NodeSet,
+    target: &std::sync::Arc<crate::storage::node::StorageNode>,
+    jname: &str,
+    report: &mut MigrationRecovery,
+) {
+    // rule 4: the journal may only be deleted once every
+    // superseded/partial copy it covers is gone — if any survives, the
+    // journal stays behind as the arbiter for the next recovery pass
+    let mut cleared = true;
+    match journal::read_journal(target, jname) {
+        // torn before the begin flush: covers nothing (no target copy
+        // can predate it) — expected under a crash at the journal
+        // create, just drop it
+        None => {
+            if target.open_file(jname).is_err() {
+                return; // never existed at all
+            }
+        }
+        Some(state) if state.committed => {
+            for (file, src_name) in &state.moves {
+                let Some(src) = nodes.node_named(src_name) else {
+                    report.errors.push(format!(
+                        "{jname}: source node '{src_name}' unknown"
+                    ));
+                    cleared = false;
+                    continue;
+                };
+                if src.name == target.name || src.open_file(file).is_err() {
+                    continue; // nothing superseded left behind
+                }
+                if target.open_file(file).is_err() {
+                    // committed yet the target copy is missing:
+                    // corrupted state — keep both the source copy
+                    // and the journal, surface it
+                    report.errors.push(format!(
+                        "{jname}: committed but '{file}' absent on \
+                         target '{}'",
+                        target.name
+                    ));
+                    cleared = false;
+                    continue;
+                }
+                if src.delete_file(file).is_err() {
+                    cleared = false;
+                }
+            }
+            report.committed += 1;
+        }
+        Some(state) => {
+            for (file, _) in &state.moves {
+                if target.open_file(file).is_ok()
+                    && target.delete_file(file).is_err()
+                {
+                    cleared = false;
+                }
+            }
+            report.rolled_back += 1;
+        }
+    }
+    if cleared {
+        let _ = target.delete_file(jname);
+    }
+}
+
+/// Targeted migration recovery for ONE vm against a KNOWN target node —
+/// the O(active leases) replay path. The durable control log records
+/// which VM was migrating where, so recovery probes exactly one journal
+/// name on exactly one node instead of listing every file of every node
+/// the way [`recover_migrations`] must.
+pub fn recover_migrations_for(
+    nodes: &NodeSet,
+    vm: &str,
+    target_name: &str,
+) -> MigrationRecovery {
+    let mut report = MigrationRecovery::default();
+    let Some(target) = nodes.node_named(target_name) else {
+        report
+            .errors
+            .push(format!("migration target node '{target_name}' unknown"));
+        return report;
+    };
+    let jname = MigrationJournal::journal_name(vm);
+    resolve_journal(nodes, &target, &jname, &mut report);
     report
 }
 
@@ -256,6 +292,38 @@ mod tests {
             n1.open_file(&MigrationJournal::journal_name("vm")).is_ok(),
             "journal deleted despite an uncleared source copy"
         );
+    }
+
+    #[test]
+    fn targeted_recovery_probes_one_journal_without_listing() {
+        let nodes = fleet();
+        let (n0, n1) = (nodes.node_named("node-0").unwrap(), nodes.node_named("node-1").unwrap());
+        n0.create_file("img").unwrap().write_at(b"old", 0).unwrap();
+        let mut j = MigrationJournal::create(
+            &n1,
+            "vm",
+            &[("img".to_string(), "node-0".to_string())],
+        )
+        .unwrap();
+        n1.create_file("img").unwrap().write_at(b"new", 0).unwrap();
+        j.commit().unwrap();
+        let lists: u64 = nodes.nodes().iter().map(|n| n.list_ops()).sum();
+        let r = recover_migrations_for(nodes.as_ref(), "vm", "node-1");
+        assert_eq!((r.committed, r.rolled_back), (1, 0));
+        assert!(n0.open_file("img").is_err(), "superseded source copy gone");
+        assert!(
+            n1.open_file(&MigrationJournal::journal_name("vm")).is_err(),
+            "resolved journal removed"
+        );
+        let after: u64 = nodes.nodes().iter().map(|n| n.list_ops()).sum();
+        assert_eq!(after, lists, "targeted recovery never lists a node");
+        // a vm that never migrated: clean no-op either way
+        let r2 = recover_migrations_for(nodes.as_ref(), "ghost", "node-1");
+        assert_eq!((r2.committed, r2.rolled_back), (0, 0));
+        assert!(r2.errors.is_empty());
+        // an unknown target is reported, not panicked on
+        let r3 = recover_migrations_for(nodes.as_ref(), "vm", "node-9");
+        assert!(!r3.errors.is_empty());
     }
 
     #[test]

@@ -52,6 +52,11 @@ pub struct StorageNode {
     /// this cache exists so reporting can show the multiplication factor
     /// (logical / physical) without rescanning every table.
     logical: AtomicU64,
+    /// Directory listings served ([`StorageNode::file_names`]). The HA
+    /// recovery tests assert log-replay recovery is O(leases) by pinning
+    /// this counter: a replayed restart opens known files by name and
+    /// never lists a node's namespace.
+    list_ops: AtomicU64,
     /// Bytes returned by GC sweeps over this node's lifetime.
     reclaimed: AtomicU64,
     /// Files deleted by GC sweeps.
@@ -110,6 +115,7 @@ impl StorageNode {
             files: Mutex::new(HashMap::new()),
             condemned: Mutex::new(HashSet::new()),
             reserved: AtomicU64::new(0),
+            list_ops: AtomicU64::new(0),
             logical: AtomicU64::new(0),
             reclaimed: AtomicU64::new(0),
             gc_deletes: AtomicU64::new(0),
@@ -180,7 +186,14 @@ impl StorageNode {
     }
 
     pub fn file_names(&self) -> Vec<String> {
+        self.list_ops.fetch_add(1, Relaxed);
         self.files.lock().unwrap().keys().cloned().collect()
+    }
+
+    /// Directory listings served over this node's lifetime (an O(fleet)
+    /// scan fingerprint — see the HA recovery tests).
+    pub fn list_ops(&self) -> u64 {
+        self.list_ops.load(Relaxed)
     }
 
     /// Begin recording the byte extents writers dirty in `name` (the

@@ -5,6 +5,7 @@
 pub mod json;
 pub mod notify;
 pub mod prop;
+pub mod retry;
 pub mod rng;
 pub mod stats;
 

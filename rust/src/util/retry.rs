@@ -1,0 +1,155 @@
+//! Jittered exponential backoff with a hard deadline.
+//!
+//! The HA control plane retries in two places: a standby coordinator
+//! tailing the StateStore log while the leader may be mid-compaction,
+//! and lease renewal/acquisition racing a not-yet-expired holder. Both
+//! want the same shape — retry with exponentially growing, jittered
+//! sleeps until a deadline — and both run against the *virtual* clock
+//! in tests, so the policy takes `now` and `sleep` as closures instead
+//! of touching wall time directly.
+
+use crate::util::rng::Rng;
+use anyhow::{anyhow, Result};
+
+/// Backoff schedule: `base * 2^attempt`, capped at `max_delay`, with
+/// each sleep jittered uniformly in `[delay/2, delay]` (decorrelated
+/// enough to break thundering herds, bounded enough to test).
+#[derive(Clone, Copy, Debug)]
+pub struct RetryPolicy {
+    /// First sleep, in ns (before jitter).
+    pub base_ns: u64,
+    /// Upper bound on any single sleep, in ns (before jitter).
+    pub max_delay_ns: u64,
+    /// Give up once `now` passes `start + deadline_ns`.
+    pub deadline_ns: u64,
+}
+
+impl RetryPolicy {
+    pub fn new(base_ns: u64, max_delay_ns: u64, deadline_ns: u64) -> Self {
+        RetryPolicy { base_ns, max_delay_ns, deadline_ns }
+    }
+
+    /// The un-jittered delay for `attempt` (0-based): `base << attempt`,
+    /// saturating (a schedule past 2^63 ns is "forever" here), capped.
+    fn raw_delay(&self, attempt: u32) -> u64 {
+        let shift = attempt.min(63);
+        let exp = if self.base_ns != 0 && shift >= self.base_ns.leading_zeros() {
+            u64::MAX
+        } else {
+            self.base_ns << shift
+        };
+        exp.min(self.max_delay_ns)
+    }
+
+    /// The jittered sleep for `attempt`: uniform in `[raw/2, raw]`.
+    pub fn jittered_delay(&self, attempt: u32, rng: &mut Rng) -> u64 {
+        let raw = self.raw_delay(attempt);
+        if raw <= 1 {
+            return raw;
+        }
+        let half = raw / 2;
+        half + rng.below(raw - half + 1)
+    }
+
+    /// Run `op` until it succeeds or the deadline passes. `now` supplies
+    /// the current time in ns; `sleep` advances it (virtual clock in
+    /// tests, `thread::sleep` in a live process). The last error is
+    /// wrapped with the attempt count when the deadline expires.
+    pub fn run<T>(
+        &self,
+        seed: u64,
+        now: impl Fn() -> u64,
+        mut sleep: impl FnMut(u64),
+        mut op: impl FnMut() -> Result<T>,
+    ) -> Result<T> {
+        let start = now();
+        let mut rng = Rng::new(seed ^ 0x9e37_79b9_7f4a_7c15);
+        let mut attempt: u32 = 0;
+        loop {
+            let err = match op() {
+                Ok(v) => return Ok(v),
+                Err(e) => e,
+            };
+            let elapsed = now().saturating_sub(start);
+            if elapsed >= self.deadline_ns {
+                return Err(anyhow!(
+                    "retry deadline expired after {} attempts: {err}",
+                    attempt + 1
+                ));
+            }
+            let delay = self
+                .jittered_delay(attempt, &mut rng)
+                .min(self.deadline_ns - elapsed);
+            sleep(delay.max(1));
+            attempt = attempt.saturating_add(1);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::cell::Cell;
+
+    fn virt_clock() -> (std::rc::Rc<Cell<u64>>, impl Fn() -> u64, impl FnMut(u64)) {
+        let t = std::rc::Rc::new(Cell::new(0u64));
+        let t1 = std::rc::Rc::clone(&t);
+        let t2 = std::rc::Rc::clone(&t);
+        (t, move || t1.get(), move |ns| t2.set(t2.get() + ns))
+    }
+
+    #[test]
+    fn succeeds_after_transient_failures() {
+        let p = RetryPolicy::new(1_000, 1_000_000, 10_000_000);
+        let (_, now, sleep) = virt_clock();
+        let mut fails = 3;
+        let r = p.run(7, now, sleep, || {
+            if fails > 0 {
+                fails -= 1;
+                Err(anyhow!("transient"))
+            } else {
+                Ok(42)
+            }
+        });
+        assert_eq!(r.unwrap(), 42);
+    }
+
+    #[test]
+    fn deadline_expiry_reports_attempts_and_last_error() {
+        let p = RetryPolicy::new(1_000, 1_000_000, 50_000);
+        let (t, now, sleep) = virt_clock();
+        let r: Result<()> = p.run(7, now, sleep, || Err(anyhow!("always down")));
+        let msg = format!("{:#}", r.unwrap_err());
+        assert!(msg.contains("deadline expired"), "{msg}");
+        assert!(msg.contains("always down"), "{msg}");
+        assert!(
+            t.get() <= 50_000 + 1_000_000,
+            "sleeps are clamped near the deadline, got {}",
+            t.get()
+        );
+    }
+
+    #[test]
+    fn jitter_stays_within_half_to_full_delay() {
+        let p = RetryPolicy::new(1 << 20, 1 << 30, u64::MAX);
+        let mut rng = Rng::new(99);
+        for attempt in 0..12 {
+            let raw = (1u64 << 20) << attempt;
+            let raw = raw.min(1 << 30);
+            for _ in 0..64 {
+                let d = p.jittered_delay(attempt, &mut rng);
+                assert!(d >= raw / 2 && d <= raw, "attempt {attempt}: {d} vs raw {raw}");
+            }
+        }
+    }
+
+    #[test]
+    fn exponential_growth_caps_at_max_delay() {
+        let p = RetryPolicy::new(1_000, 8_000, u64::MAX);
+        assert_eq!(p.raw_delay(0), 1_000);
+        assert_eq!(p.raw_delay(1), 2_000);
+        assert_eq!(p.raw_delay(3), 8_000);
+        assert_eq!(p.raw_delay(10), 8_000, "capped");
+        assert_eq!(p.raw_delay(u32::MAX), 8_000, "huge attempt index saturates");
+    }
+}

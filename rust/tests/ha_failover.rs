@@ -1,0 +1,484 @@
+//! HA control-plane suite: write-ahead StateStore recovery, lease-based
+//! VM ownership and leader failover.
+//!
+//! The tentpole property test kills the leader at EVERY metadata-node
+//! durable-event index (clean cuts and sector-torn cuts) while a
+//! migration is in flight under guest I/O, then fails over to a standby
+//! and asserts the contract: exactly one coordinator holds each lease,
+//! recovery work is bounded by the active-lease count (never a fleet
+//! scan), and no guest byte whose flush was acknowledged is lost.
+//!
+//! On failure, the failing (cut index, tear) tuple is written to
+//! `$HA_REPRO_PATH` (default `ha_repro.txt`) so CI can attach the repro.
+
+use sqemu::cache::CacheConfig;
+use sqemu::chaingen::{generate, ChainSpec};
+use sqemu::control::StateStore;
+use sqemu::coordinator::server::{CoordinatorConfig, VmChain};
+use sqemu::coordinator::{Coordinator, NodeSet, VmConfig};
+use sqemu::metrics::clock::{CostModel, VirtClock};
+use sqemu::qcow::image::DataMode;
+use sqemu::storage::fault::{FaultInjector, SECTOR};
+use sqemu::storage::node::StorageNode;
+use sqemu::vdisk::DriverKind;
+use std::sync::Arc;
+
+/// Short virtual-clock lease TTL so takeover's wait-out is cheap.
+const TTL: u64 = 5_000_000_000;
+
+/// One fleet: data nodes in the coordinator's NodeSet plus a dedicated
+/// metadata node (fault-injectable) carrying the control log.
+struct Fleet {
+    clock: Arc<VirtClock>,
+    nodes: Arc<NodeSet>,
+    store: Arc<StateStore>,
+    meta_faults: Arc<FaultInjector>,
+}
+
+fn fleet(n_nodes: usize) -> Fleet {
+    let clock = VirtClock::new();
+    let data = (0..n_nodes)
+        .map(|i| {
+            StorageNode::new(&format!("node-{i}"), clock.clone(), CostModel::default())
+        })
+        .collect();
+    let nodes = Arc::new(NodeSet::new(data).unwrap());
+    let meta_faults = FaultInjector::new();
+    let meta = StorageNode::with_fault_injection(
+        "meta-0",
+        clock.clone(),
+        CostModel::default(),
+        u64::MAX,
+        Arc::clone(&meta_faults),
+    );
+    let store = StateStore::open(meta).unwrap();
+    Fleet { clock, nodes, store, meta_faults }
+}
+
+fn coordinator(f: &Fleet, who: &str) -> Arc<Coordinator> {
+    let c = Coordinator::new(
+        Arc::clone(&f.nodes),
+        Arc::clone(&f.clock),
+        CoordinatorConfig { lease_ttl_ns: TTL, ..Default::default() },
+        None,
+    );
+    c.attach_control(Arc::clone(&f.store), who).unwrap();
+    c
+}
+
+fn vm_config(name: &str) -> VmConfig {
+    VmConfig {
+        driver: DriverKind::Scalable,
+        cache: CacheConfig::new(16, 32 << 10),
+        chain: VmChain::Existing {
+            active_name: format!("{name}-1"),
+            data_mode: DataMode::Real,
+        },
+    }
+}
+
+/// Generate a 2-deep Real chain for `name` pinned to `node`, then launch
+/// it on `c`.
+fn gen_and_launch(
+    f: &Fleet,
+    c: &Arc<Coordinator>,
+    name: &str,
+    node: &str,
+    seed: u64,
+) -> anyhow::Result<()> {
+    let pin = f.nodes.pinned(node)?;
+    generate(
+        &pin,
+        &ChainSpec {
+            disk_size: 1 << 20,
+            chain_len: 2,
+            populated: 0.3,
+            stamped: true,
+            data_mode: DataMode::Real,
+            prefix: name.to_string(),
+            seed,
+            ..Default::default()
+        },
+    )?;
+    c.launch_vm(name, vm_config(name))?;
+    Ok(())
+}
+
+fn data_list_ops(f: &Fleet) -> Vec<u64> {
+    f.nodes.nodes().iter().map(|n| n.list_ops()).collect()
+}
+
+// ------------------------------------------------------ clean shutdown
+
+/// Satellite: after `shutdown_clean` the next recovery trusts the log
+/// outright — zero images checked, zero chains walked, zero data-node
+/// listings — and the fleet relaunches and serves its data.
+#[test]
+fn clean_shutdown_recovery_skips_all_scans() {
+    let f = fleet(2);
+    let c1 = coordinator(&f, "c1");
+    for v in 0..3u64 {
+        gen_and_launch(&f, &c1, &format!("vm-{v}"), &format!("node-{}", v % 2), v)
+            .unwrap();
+        let client = c1.client(&format!("vm-{v}")).unwrap();
+        client.write(4096, vec![0x42 + v as u8; 512]).unwrap();
+        client.flush().unwrap();
+    }
+    c1.shutdown_clean().unwrap();
+    assert!(f.store.status().clean_shutdown);
+    assert_eq!(f.store.status().leases, 0, "clean stop released every lease");
+
+    let lists = data_list_ops(&f);
+    let c2 = coordinator(&f, "c2");
+    let report = c2.recover();
+    assert_eq!(report.images_checked, 0, "{report:?}");
+    assert_eq!(report.chains_checked, 0, "{report:?}");
+    assert_eq!(report.chains_repaired, 0, "{report:?}");
+    assert!(report.unopenable.is_empty(), "{report:?}");
+    assert_eq!(data_list_ops(&f), lists, "clean recovery listed a data node");
+
+    let client = c2.launch_vm("vm-1", vm_config("vm-1")).unwrap();
+    assert_eq!(client.read(4096, 512).unwrap(), vec![0x43; 512]);
+    c2.shutdown();
+}
+
+// ------------------------------------------------- replay after crash
+
+/// Replay recovery after a hard crash is bounded by the lease table:
+/// only leased Real chains get an integrity walk, the placement index
+/// is installed from the log, and no data node is ever listed.
+#[test]
+fn crash_replay_recovery_is_lease_bounded() {
+    let f = fleet(2);
+    let c1 = coordinator(&f, "c1");
+    for v in 0..3u64 {
+        gen_and_launch(&f, &c1, &format!("vm-{v}"), &format!("node-{}", v % 2), v)
+            .unwrap();
+        let client = c1.client(&format!("vm-{v}")).unwrap();
+        client.write(8192, vec![0x70 + v as u8; 256]).unwrap();
+        client.flush().unwrap();
+    }
+    c1.halt(); // crash: leases stay in the log, nothing is drained
+
+    let lists = data_list_ops(&f);
+    let c2 = coordinator(&f, "c2");
+    let report = c2.recover();
+    // the O(leases) bound: 3 leased VMs -> 3 chain walks, no image scan
+    assert_eq!(report.images_checked, 0, "{report:?}");
+    assert_eq!(report.chains_checked, 3, "{report:?}");
+    assert!(report.unopenable.is_empty(), "{report:?}");
+    assert_eq!(data_list_ops(&f), lists, "replay recovery listed a data node");
+
+    // the dead leader's unexpired leases gate relaunch until they lapse
+    let err = c2.launch_vm("vm-0", vm_config("vm-0")).unwrap_err();
+    assert!(err.to_string().contains("leased"), "{err:#}");
+    f.clock.advance(TTL);
+    let client = c2.launch_vm("vm-0", vm_config("vm-0")).unwrap();
+    assert_eq!(client.read(8192, 256).unwrap(), vec![0x70; 256]);
+    c2.shutdown();
+}
+
+// ------------------------------------------------ lease orphan cleanup
+
+/// Satellite: a lease without a VM record (the footprint of a launch
+/// that died between lease acquire and the durable VM record) is
+/// released during takeover once expired — orphan cleanup in O(leases).
+#[test]
+fn takeover_cleans_expired_orphan_leases() {
+    let f = fleet(1);
+    let c1 = coordinator(&f, "c1");
+    // half-finished launch: the lease landed, the VM record never did
+    f.store.acquire_lease(0, "ghost", "c1", TTL).unwrap();
+    gen_and_launch(&f, &c1, "vm-0", "node-0", 7).unwrap();
+    let client = c1.client("vm-0").unwrap();
+    client.write(0, vec![0x99; 128]).unwrap();
+    client.flush().unwrap();
+    c1.halt();
+
+    let c2 = coordinator(&f, "c2");
+    let report = c2.takeover().unwrap();
+    // only the real VM cost a chain walk; the orphan cost one release
+    assert_eq!(report.chains_checked, 1, "{report:?}");
+    assert!(report.unopenable.is_empty(), "{report:?}");
+    assert!(f.store.lease_of("ghost").is_none(), "orphan lease survived");
+    let l = f.store.lease_of("vm-0").unwrap();
+    assert_eq!(l.holder, "c2");
+    assert_eq!(c2.vm_names(), vec!["vm-0".to_string()]);
+    assert_eq!(c2.client("vm-0").unwrap().read(0, 128).unwrap(), vec![0x99; 128]);
+    c2.shutdown();
+}
+
+// ------------------------------------------------------- epoch fencing
+
+/// A deposed leader's fenced writes bounce with an epoch-fence error:
+/// it can neither stop nor launch VMs nor renew its leases once a new
+/// coordinator has campaigned, and after failover exactly one
+/// coordinator holds the lease.
+#[test]
+fn epoch_fencing_rejects_deposed_leader() {
+    let f = fleet(1);
+    let c1 = coordinator(&f, "c1");
+    c1.campaign().unwrap();
+    gen_and_launch(&f, &c1, "vm-0", "node-0", 11).unwrap();
+    let client = c1.client("vm-0").unwrap();
+    client.write(4096, vec![0xAB; 64]).unwrap();
+    client.flush().unwrap();
+
+    let c2 = coordinator(&f, "c2");
+    c2.campaign().unwrap(); // c1 is now deposed
+
+    let err = c1.stop_vm("vm-0").unwrap_err().to_string();
+    assert!(err.contains("epoch fence"), "{err}");
+    let err = c1.launch_vm("vm-x", vm_config("vm-0")).unwrap_err().to_string();
+    assert!(err.contains("epoch fence"), "{err}");
+    let err = c1.renew_leases().unwrap_err().to_string();
+    assert!(err.contains("epoch fence"), "{err}");
+    // the fence blocked the stop: vm-0 still runs and serves on c1
+    assert_eq!(client.read(4096, 64).unwrap(), vec![0xAB; 64]);
+
+    c1.halt();
+    let report = c2.takeover().unwrap();
+    assert_eq!(report.chains_checked, 1, "{report:?}");
+    assert_eq!(f.store.leader(), "c2");
+    assert_eq!(f.store.lease_of("vm-0").unwrap().holder, "c2");
+    assert_eq!(c2.client("vm-0").unwrap().read(4096, 64).unwrap(), vec![0xAB; 64]);
+    c2.shutdown();
+}
+
+// ------------------------------------------- renewal keeps ownership
+
+/// Satellite: the leader's heartbeat renews every held lease with the
+/// retrying backoff, pushing expiry forward on the virtual clock.
+#[test]
+fn lease_renewal_extends_ownership() {
+    let f = fleet(1);
+    let c1 = coordinator(&f, "c1");
+    gen_and_launch(&f, &c1, "vm-0", "node-0", 13).unwrap();
+    gen_and_launch(&f, &c1, "vm-1", "node-0", 14).unwrap();
+    let before = f.store.lease_of("vm-0").unwrap().expires_ns;
+    f.clock.advance(TTL / 2);
+    assert_eq!(c1.renew_leases().unwrap(), 2);
+    let after = f.store.lease_of("vm-0").unwrap().expires_ns;
+    assert!(after > before, "renewal must push expiry: {before} -> {after}");
+    c1.shutdown();
+}
+
+// -------------------------------------------- background capacity scan
+
+/// Satellite: the rate-limited background capacity scan converges to the
+/// same per-node logical-bytes counters as the synchronous
+/// `refresh_capacity` walk, and its job record is closed in the log.
+#[test]
+fn background_capacity_scan_matches_sync_walk() {
+    let f = fleet(2);
+    let c1 = coordinator(&f, "c1");
+    for v in 0..2u64 {
+        gen_and_launch(&f, &c1, &format!("vm-{v}"), &format!("node-{v}"), 20 + v)
+            .unwrap();
+        let client = c1.client(&format!("vm-{v}")).unwrap();
+        for i in 0..8u64 {
+            client.write(i * 4096, vec![0x11 + v as u8; 4096]).unwrap();
+        }
+        client.flush().unwrap();
+    }
+    let shared = c1.start_capacity_scan(8 << 20).unwrap();
+    let st = c1.wait_job(&shared);
+    assert!(st.error.is_none(), "{:?}", st.error);
+    let scanned: Vec<(String, u64)> = c1
+        .nodes
+        .node_stats()
+        .into_iter()
+        .map(|s| (s.name, s.logical_bytes))
+        .collect();
+    assert!(scanned.iter().any(|(_, l)| *l > 0), "scan found no bytes");
+    // the background job's counters match a synchronous full walk
+    for (name, logical, _) in c1.refresh_capacity() {
+        let got = scanned.iter().find(|(n, _)| *n == name).unwrap().1;
+        assert_eq!(got, logical, "node {name} diverged");
+    }
+    // reaped: the job closed out of the durable log too
+    assert!(f.store.view().jobs.is_empty(), "scan job never closed");
+    c1.shutdown();
+}
+
+// ------------------------------------------------- failover everywhere
+
+/// Write the failing tuple where CI can pick it up, then panic with it.
+fn fail_repro(cut: u64, tear: Option<u64>, msg: &str) -> ! {
+    let path = std::env::var("HA_REPRO_PATH")
+        .unwrap_or_else(|_| "ha_repro.txt".to_string());
+    let note = format!(
+        "ha-failover failure\ncut_at_event={cut} tear_keep_bytes={tear:?}\n{msg}\n"
+    );
+    let _ = std::fs::write(&path, &note);
+    panic!("{note}");
+}
+
+/// The leader's run: launch two Real VMs under leases, flush-ack guest
+/// writes (the durability oracle), start a live migration and keep
+/// writing under it, then crash. Steps after the armed metadata cut
+/// fail; everything acknowledged before stays in `durable`.
+fn leader_scenario(f: &Fleet) -> Vec<(String, u64, Vec<u8>)> {
+    let c1 = Coordinator::new(
+        Arc::clone(&f.nodes),
+        Arc::clone(&f.clock),
+        CoordinatorConfig { lease_ttl_ns: TTL, ..Default::default() },
+        None,
+    );
+    let mut durable = Vec::new();
+    let _ = (|| -> anyhow::Result<()> {
+        c1.attach_control(Arc::clone(&f.store), "c1")?;
+        c1.campaign()?;
+        for v in 0..2u64 {
+            gen_and_launch(&f, &c1, &format!("vm-{v}"), &format!("node-{v}"), v)?;
+        }
+        for v in 0..2u64 {
+            let name = format!("vm-{v}");
+            let client = c1.client(&name)?;
+            let mut pending = Vec::new();
+            for i in 0..6u64 {
+                let data = vec![(0x30 + v as u8) ^ i as u8; 512];
+                client.write(i * 4096, data.clone())?;
+                pending.push((name.clone(), i * 4096, data));
+            }
+            client.flush()?; // the ack commits these bytes forever
+            durable.extend(pending);
+        }
+        // in-flight migration under guest load; never waited on — the
+        // crash lands mid-copy and the journal must sort it out
+        let _mig = c1.migrate_vm("vm-0", "node-1", 1 << 20)?;
+        let client = c1.client("vm-0")?;
+        let mut pending = Vec::new();
+        for i in 0..4u64 {
+            let data = vec![0xA0 ^ i as u8; 512];
+            client.write((32 + i) * 4096, data.clone())?;
+            pending.push(("vm-0".to_string(), (32 + i) * 4096, data));
+        }
+        client.flush()?;
+        durable.extend(pending);
+        Ok(())
+    })();
+    c1.halt(); // crash semantics: abandon everything, release nothing
+    durable
+}
+
+/// Power the metadata node back on, fail over to a standby, and assert
+/// the failover contract against the durability oracle.
+fn verify_failover(f: &Fleet, durable: &[(String, u64, Vec<u8>)], cut: u64, tear: Option<u64>) {
+    f.meta_faults.revive();
+    let c2 = Coordinator::new(
+        Arc::clone(&f.nodes),
+        Arc::clone(&f.clock),
+        CoordinatorConfig { lease_ttl_ns: TTL, ..Default::default() },
+        None,
+    );
+    if let Err(e) = c2.attach_control(Arc::clone(&f.store), "c2") {
+        fail_repro(cut, tear, &format!("attach_control: {e:#}"));
+    }
+    let report = match c2.takeover() {
+        Ok(r) => r,
+        Err(e) => fail_repro(cut, tear, &format!("takeover: {e:#}")),
+    };
+    // O(leases): at most the two launched VMs, never a fleet scan
+    if report.images_checked != 0 || report.chains_checked > 2 {
+        fail_repro(cut, tear, &format!("unbounded recovery: {report:?}"));
+    }
+    if !report.unopenable.is_empty() {
+        fail_repro(cut, tear, &format!("adoption failures: {report:?}"));
+    }
+    // exactly one coordinator holds each surviving lease: the standby
+    let v = f.store.view();
+    for (vm, l) in &v.leases {
+        if l.holder != "c2" {
+            fail_repro(cut, tear, &format!("lease '{vm}' held by '{}'", l.holder));
+        }
+    }
+    if f.store.leader() != "c2" {
+        fail_repro(cut, tear, &format!("leader is '{}'", f.store.leader()));
+    }
+    // the in-flight migration is resolved, not left dangling
+    if !v.migrations.is_empty() {
+        fail_repro(cut, tear, &format!("dangling migrations: {:?}", v.migrations));
+    }
+    // no acknowledged-flushed guest byte is lost
+    let adopted = c2.vm_names();
+    for (vm, off, want) in durable {
+        if !adopted.contains(vm) {
+            fail_repro(cut, tear, &format!("acked vm '{vm}' not re-adopted"));
+        }
+        let client = match c2.client(vm) {
+            Ok(c) => c,
+            Err(e) => fail_repro(cut, tear, &format!("client '{vm}': {e:#}")),
+        };
+        match client.read(*off, want.len()) {
+            Ok(got) if got == *want => {}
+            Ok(got) => fail_repro(
+                cut,
+                tear,
+                &format!(
+                    "durable bytes lost: vm '{vm}' off {off}: got {:#x?}.., \
+                     want {:#x?}..",
+                    got[0], want[0]
+                ),
+            ),
+            Err(e) => {
+                fail_repro(cut, tear, &format!("read '{vm}' off {off}: {e:#}"))
+            }
+        }
+    }
+    // job ids never repeat across the failover: the next id must clear
+    // the durable sequence high-water mark
+    match c2.start_capacity_scan(64 << 20) {
+        Ok(shared) => {
+            let seq: u64 = shared
+                .id
+                .strip_prefix("job-")
+                .and_then(|s| s.parse().ok())
+                .unwrap_or(0);
+            if seq <= v.max_job_seq {
+                fail_repro(
+                    cut,
+                    tear,
+                    &format!("job id '{}' reuses seq <= {}", shared.id, v.max_job_seq),
+                );
+            }
+            let st = c2.wait_job(&shared);
+            if let Some(e) = st.error {
+                fail_repro(cut, tear, &format!("post-failover scan: {e}"));
+            }
+        }
+        Err(e) => fail_repro(cut, tear, &format!("post-failover job: {e:#}")),
+    }
+    c2.shutdown();
+}
+
+/// The tentpole property: kill the leader at EVERY metadata durable-event
+/// boundary (clean and sector-torn cuts) during an active migration
+/// under guest I/O; the standby takes over with lease-bounded work and
+/// the durability contract holds.
+#[test]
+fn failover_at_every_durable_event_boundary() {
+    // fault-free pass: bounds the cut range and checks the oracle.
+    // `arm(k, ..)` counts k from its call point, after `fleet()` has
+    // already opened the store — so the sweep range is measured from
+    // the same post-open baseline.
+    let f = fleet(2);
+    let base = f.meta_faults.events();
+    let durable = leader_scenario(&f);
+    let n = f.meta_faults.events() - base;
+    assert!(!durable.is_empty(), "scenario acknowledged nothing");
+    verify_failover(&f, &durable, u64::MAX, None);
+    assert!(n > 30, "scenario too small to be interesting: {n} events");
+
+    let step = if n > 150 { 3 } else { 1 };
+    let mut k = 0u64;
+    while k < n {
+        // alternate clean cuts and sector-torn cuts across the sweep
+        let tear = if k % 2 == 1 { Some(SECTOR * (k % 8)) } else { None };
+        let f = fleet(2);
+        f.meta_faults.arm(k, tear);
+        let durable = leader_scenario(&f);
+        verify_failover(&f, &durable, k, tear);
+        k += step;
+    }
+}

@@ -1,0 +1,59 @@
+use sqemu::cache::CacheConfig;
+use sqemu::chaingen::{generate, ChainSpec};
+use sqemu::control::StateStore;
+use sqemu::coordinator::server::{CoordinatorConfig, VmChain};
+use sqemu::coordinator::{Coordinator, NodeSet, VmConfig};
+use sqemu::metrics::clock::{CostModel, VirtClock};
+use sqemu::qcow::image::DataMode;
+use sqemu::storage::node::StorageNode;
+use sqemu::vdisk::DriverKind;
+use std::sync::Arc;
+
+#[test]
+fn duplicate_launch_drops_live_lease() {
+    let clock = VirtClock::new();
+    let data = vec![StorageNode::new("node-0", clock.clone(), CostModel::default())];
+    let nodes = Arc::new(NodeSet::new(data).unwrap());
+    let meta = StorageNode::new("meta-0", clock.clone(), CostModel::default());
+    let store = StateStore::open(meta).unwrap();
+    let c = Coordinator::new(
+        Arc::clone(&nodes),
+        clock.clone(),
+        CoordinatorConfig { lease_ttl_ns: 5_000_000_000, ..Default::default() },
+        None,
+    );
+    c.attach_control(Arc::clone(&store), "c1").unwrap();
+    let pin = nodes.pinned("node-0").unwrap();
+    generate(
+        &pin,
+        &ChainSpec {
+            disk_size: 1 << 20,
+            chain_len: 2,
+            populated: 0.3,
+            stamped: true,
+            data_mode: DataMode::Real,
+            prefix: "vm-0".to_string(),
+            seed: 1,
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    let cfg = || VmConfig {
+        driver: DriverKind::Scalable,
+        cache: CacheConfig::new(16, 32 << 10),
+        chain: VmChain::Existing {
+            active_name: "vm-0-1".to_string(),
+            data_mode: DataMode::Real,
+        },
+    };
+    c.launch_vm("vm-0", cfg()).unwrap();
+    assert!(store.lease_of("vm-0").is_some(), "launch took the lease");
+    // duplicate launch attempt (operator retry): must fail...
+    let err = c.launch_vm("vm-0", cfg()).unwrap_err();
+    assert!(err.to_string().contains("already running"), "{err:#}");
+    // ...but must NOT release the running VM's lease
+    assert!(
+        store.lease_of("vm-0").is_some(),
+        "duplicate launch released the live lease — VM now runs unleased"
+    );
+}

@@ -276,15 +276,14 @@ pub fn frame(payload: &str) -> Vec<u8> {
 /// mismatch, or a non-UTF-8 payload.
 pub fn decode_frame(buf: &[u8], off: usize) -> Option<(&str, usize)> {
     let rest = buf.get(off..)?;
-    if rest.len() < 8 {
+    let len_bytes: [u8; 4] = rest.get(0..4)?.try_into().ok()?;
+    let len = u32::from_le_bytes(len_bytes) as usize;
+    if len == 0 || len > MAX_PAYLOAD {
         return None;
     }
-    let len = u32::from_le_bytes(rest[0..4].try_into().ok()?) as usize;
-    if len == 0 || len > MAX_PAYLOAD || rest.len() < 8 + len {
-        return None;
-    }
-    let want = u32::from_le_bytes(rest[4..8].try_into().ok()?);
-    let payload = &rest[8..8 + len];
+    let want_bytes: [u8; 4] = rest.get(4..8)?.try_into().ok()?;
+    let want = u32::from_le_bytes(want_bytes);
+    let payload = rest.get(8..8 + len)?;
     if fnv1a32(payload) != want {
         return None;
     }

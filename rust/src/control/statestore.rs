@@ -429,6 +429,10 @@ impl StateStore {
             bail!("state store wedged by a failed append; reopen() first");
         }
         let frame = record::frame(&rec.encode());
+        // the record reaches the disk (write + flush) before any
+        // in-memory state changes: a crash between the two replays the
+        // record, never invents unlogged state
+        // lint: durable-before(view-apply)
         let wrote = inner
             .log
             .write_at(&frame, inner.len)
@@ -440,6 +444,7 @@ impl StateStore {
         inner.len += frame.len() as u64;
         inner.appends += 1;
         inner.since_snapshot += 1;
+        // lint: mutates(view-apply)
         inner.view.apply(rec);
         Ok(())
     }
@@ -471,6 +476,7 @@ impl StateStore {
             log.flush()?;
             // the atomic flip: a crash before this flush replays the
             // old generation, after it the new one
+            // lint: index-flip(generation)
             inner.ptr.write_at(&record::frame(&format!("gen {new_gen}")), 0)?;
             inner.ptr.flush()?;
             let _ = self.node.delete_file(&log_name(old_gen));

@@ -17,12 +17,17 @@
 //! tag (and where the executor parks completions if the CQ itself is
 //! full, so the data plane never blocks on a slow reaper).
 
+use crate::util::sync_shim::{
+    yield_now, AtomicBool, AtomicU64, AtomicUsize, Ordering, UnsafeCell,
+};
 use crate::util::Notify;
 use anyhow::{anyhow, bail, Result};
-use std::cell::UnsafeCell;
 use std::collections::HashMap;
 use std::mem::MaybeUninit;
-use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+// The stash rendezvous stays on std primitives even under `--cfg loom`:
+// loom models the lock-free Ring and the Notify doorbell; the stash is
+// an ordinary mutex-protected map outside the modeled state space (and
+// needs `Condvar::wait_timeout`, which loom does not provide).
 use std::sync::{Arc, Condvar, Mutex, PoisonError};
 
 /// One operation of a batched guest submission ([`super::VmClient::submit`]).
@@ -101,10 +106,16 @@ pub struct Ring<T> {
     head: AtomicUsize,
 }
 
-// Safety: values are moved in by exactly one producer (the slot's
-// sequence number admits one claimant) and moved out by exactly one
-// consumer; T crosses threads, hence T: Send. No &T is ever shared.
+// SAFETY: sending a Ring<T> between threads moves the T payloads with
+// it; T: Send makes that sound, and no field holds thread-affine state
+// (atomics and raw cells only).
 unsafe impl<T: Send> Send for Ring<T> {}
+// SAFETY: concurrent &Ring access is arbitrated by the per-slot
+// sequence protocol — a value is written by exactly one producer (the
+// tail CAS admits one claimant per position) and read by exactly one
+// consumer (the head CAS likewise), with the slot's Release store /
+// Acquire load pairing ordering payload access. No &T is ever shared
+// across threads, so T: Send (not T: Sync) is the right bound.
 unsafe impl<T: Send> Sync for Ring<T> {}
 
 impl<T> Ring<T> {
@@ -112,6 +123,7 @@ impl<T> Ring<T> {
     /// two, minimum 2).
     pub fn with_capacity(cap: usize) -> Ring<T> {
         let cap = cap.max(2).next_power_of_two();
+        debug_assert!(cap.is_power_of_two(), "mask arithmetic needs 2^n");
         let buf: Vec<Slot<T>> = (0..cap)
             .map(|i| Slot {
                 seq: AtomicUsize::new(i),
@@ -156,7 +168,22 @@ impl<T> Ring<T> {
                     Ordering::Relaxed,
                 ) {
                     Ok(_) => {
-                        unsafe { (*slot.val.get()).write(v) };
+                        // the CAS admitted exactly this producer for
+                        // `pos`; no consumer touches the slot until the
+                        // Release store below bumps seq past `pos`
+                        debug_assert_eq!(
+                            slot.seq.load(Ordering::Relaxed),
+                            pos,
+                            "claimed slot mutated by another thread"
+                        );
+                        // SAFETY: the tail CAS above made this thread
+                        // the unique owner of slot `pos & mask` until
+                        // the seq store publishes it; the slot is
+                        // uninitialized (seq == pos means the previous
+                        // payload was moved out or never existed), so
+                        // writing MaybeUninit is sound and leaks
+                        // nothing.
+                        slot.val.with_mut(|p| unsafe { (*p).write(v) });
                         slot.seq.store(pos.wrapping_add(1), Ordering::Release);
                         return Ok(());
                     }
@@ -185,7 +212,23 @@ impl<T> Ring<T> {
                     Ordering::Relaxed,
                 ) {
                     Ok(_) => {
-                        let v = unsafe { (*slot.val.get()).assume_init_read() };
+                        debug_assert_eq!(
+                            slot.seq.load(Ordering::Relaxed),
+                            pos.wrapping_add(1),
+                            "popped slot not in published state"
+                        );
+                        // SAFETY: the head CAS made this thread the
+                        // unique consumer of slot `pos & mask`; seq ==
+                        // pos + 1 means the producer's Release store
+                        // published a fully initialized value, and the
+                        // Acquire load of seq above synchronizes with
+                        // it. assume_init_read moves the value out
+                        // exactly once — the seq store below re-marks
+                        // the slot writable, so no double-read can
+                        // follow.
+                        let v = slot
+                            .val
+                            .with_mut(|p| unsafe { (*p).assume_init_read() });
                         slot.seq.store(
                             pos.wrapping_add(self.mask + 1),
                             Ordering::Release,
@@ -298,7 +341,7 @@ impl VmRings {
                         self.doorbell.notify();
                     }
                     entry = back;
-                    std::thread::yield_now();
+                    yield_now();
                 }
             }
         }
@@ -418,7 +461,9 @@ mod tests {
     #[test]
     fn ring_mpmc_under_contention() {
         let r: Arc<Ring<u64>> = Arc::new(Ring::with_capacity(64));
-        const PER: u64 = 10_000;
+        // miri interprets every yield: keep the interleaving pressure,
+        // shrink the volume
+        const PER: u64 = if cfg!(miri) { 200 } else { 10_000 };
         let producers: Vec<_> = (0..4u64)
             .map(|p| {
                 let r = Arc::clone(&r);
@@ -444,7 +489,8 @@ mod tests {
                 std::thread::spawn(move || {
                     let mut got = Vec::new();
                     let mut idle = 0u32;
-                    while idle < 20_000 {
+                    let idle_max = if cfg!(miri) { 2_000 } else { 20_000 };
+                    while idle < idle_max {
                         match r.pop() {
                             Some(v) => {
                                 got.push(v);
@@ -532,5 +578,83 @@ mod tests {
         );
         assert_eq!(r.sq_len(), 1);
         assert!(r.pop_sq().is_some());
+    }
+}
+
+// Model checks: every interleaving of the ring's atomics, run by the CI
+// loom job (`RUSTFLAGS="--cfg loom" cargo test --lib --release loom_`).
+// Kept deliberately small — loom explores the full state space, so one
+// push per producer already covers the claim/publish races.
+#[cfg(all(test, loom))]
+mod loom_tests {
+    use super::*;
+    use loom::thread;
+
+    /// A flush entry pushed after a write must never be popped first:
+    /// in-ring order IS the flush barrier (module docs), so FIFO under
+    /// every interleaving is the property the data plane relies on.
+    #[test]
+    fn loom_ring_spsc_fifo_is_the_flush_barrier() {
+        loom::model(|| {
+            let r: Arc<Ring<u32>> = Arc::new(Ring::with_capacity(2));
+            let p = Arc::clone(&r);
+            let t = thread::spawn(move || {
+                p.push(1).unwrap(); // the guest write
+                p.push(2).unwrap(); // the flush barrier
+            });
+            let mut got = Vec::new();
+            while got.len() < 2 {
+                match r.pop() {
+                    Some(v) => got.push(v),
+                    None => thread::yield_now(),
+                }
+            }
+            assert_eq!(got, [1, 2], "flush reordered past its write");
+            assert_eq!(r.pop(), None, "ring drained");
+            t.join().unwrap();
+        });
+    }
+
+    /// Two producers race for slots; every value is delivered exactly
+    /// once (no lost or duplicated payloads under any interleaving of
+    /// the tail CAS and the seq publish stores).
+    #[test]
+    fn loom_ring_mpmc_exactly_once() {
+        loom::model(|| {
+            let r: Arc<Ring<usize>> = Arc::new(Ring::with_capacity(2));
+            let a = Arc::clone(&r);
+            let b = Arc::clone(&r);
+            let ta = thread::spawn(move || a.push(1).unwrap());
+            let tb = thread::spawn(move || b.push(2).unwrap());
+            let mut got = Vec::new();
+            while got.len() < 2 {
+                match r.pop() {
+                    Some(v) => got.push(v),
+                    None => thread::yield_now(),
+                }
+            }
+            ta.join().unwrap();
+            tb.join().unwrap();
+            got.sort_unstable();
+            assert_eq!(got, [1, 2], "each push delivered exactly once");
+        });
+    }
+
+    /// Full/empty edges stay exact under wraparound: a full ring
+    /// rejects (returning the value), an emptied ring yields None, and
+    /// the slot sequence arithmetic survives reuse.
+    #[test]
+    fn loom_ring_full_empty_edges() {
+        loom::model(|| {
+            let r: Ring<u8> = Ring::with_capacity(2);
+            r.push(1).unwrap();
+            r.push(2).unwrap();
+            assert_eq!(r.push(3), Err(3), "full ring returns the value");
+            assert_eq!(r.pop(), Some(1));
+            r.push(4).unwrap(); // reused slot after wraparound
+            assert_eq!(r.pop(), Some(2));
+            assert_eq!(r.pop(), Some(4));
+            assert_eq!(r.pop(), None, "empty ring yields None");
+        });
     }
 }

@@ -555,6 +555,7 @@ impl Coordinator {
             // the chain's files are now referenced by this VM's chain (GC
             // refcounts; shared bases gain one reference per chain)
             self.gc.sync_chain(name, chain.file_names());
+            // lint: mutates(vm-record)
             vms.insert(
                 name.to_string(),
                 VmMeta {
@@ -570,6 +571,7 @@ impl Coordinator {
         }
         // durable VM record, write-ahead of adoption (fenced: a deposed
         // leader's launch dies here, before the shard takes the driver)
+        // lint: durable-rollback(vm-record)
         if let Err(e) = self.persist(&ControlRecord::Vm {
             name: name.to_string(),
             driver: cfg.driver,
@@ -578,6 +580,7 @@ impl Coordinator {
             data_mode,
             active,
         }) {
+            // lint: rolls-back(vm-record)
             lock_unpoisoned(&self.vms[shard]).remove(name);
             self.gc.drop_chain(name);
             return Err(e);
@@ -679,6 +682,7 @@ impl Coordinator {
             })
         };
         if let Some(rec) = rec {
+            // lint: durable-after(vm-chain-head)
             self.persist_best_effort(&rec);
         }
         Ok(())
@@ -791,6 +795,7 @@ impl Coordinator {
         }
         // write-ahead job descriptor (fenced): a failed-over coordinator
         // learns this job existed and releases whatever it still held
+        // lint: durable-before(job-ledger)
         if let Err(e) = self.persist(&ControlRecord::Job {
             id: shared.id.clone(),
             vm: vm.to_string(),
@@ -802,12 +807,14 @@ impl Coordinator {
         }
         if let Err(e) = self.send_job_start(vm, builder, &shared) {
             self.scheduler.release(&reservation);
+            // lint: durable-after(job-end)
             self.persist_best_effort(&ControlRecord::JobEnd {
                 id: shared.id.clone(),
             });
             return Err(e);
         }
         self.note_job_started(vm);
+        // lint: mutates(job-ledger)
         self.push_job(JobEntry {
             vm: vm.to_string(),
             shared: Arc::clone(&shared),
@@ -917,11 +924,13 @@ impl Coordinator {
         // capacity reservation on the recipient — exactly what a
         // failed-over coordinator must resolve and release
         let persisted = self
+            // lint: durable-before(migration-intent)
             .persist(&ControlRecord::Migration {
                 vm: vm.to_string(),
                 target: target_node.name.clone(),
             })
             .and_then(|()| {
+                // lint: durable-before(migration-job)
                 self.persist(&ControlRecord::Job {
                     id: shared.id.clone(),
                     vm: vm.to_string(),
@@ -948,20 +957,24 @@ impl Coordinator {
                 &vm_id,
             )?) as Box<dyn BlockJob>)
         });
+        // lint: mutates(migration-intent)
         if let Err(e) = self.send_job_start(vm, builder, &shared) {
             for r in &reservations {
                 self.scheduler.release(r);
             }
             target_node.release(moved_bytes);
+            // lint: durable-after(job-end)
             self.persist_best_effort(&ControlRecord::JobEnd {
                 id: shared.id.clone(),
             });
+            // lint: durable-after(migration-end)
             self.persist_best_effort(&ControlRecord::MigrationEnd {
                 vm: vm.to_string(),
             });
             return Err(e);
         }
         self.note_job_started(vm);
+        // lint: mutates(migration-job)
         self.push_job(JobEntry {
             vm: vm.to_string(),
             shared: Arc::clone(&shared),
@@ -1209,6 +1222,7 @@ impl Coordinator {
             }
         }
         let shared = Arc::new(JobShared::new(&self.next_job_id(), JobKind::Gc, rate_bps));
+        // lint: durable-before(gc-job)
         if let Err(e) = self.persist(&ControlRecord::Job {
             id: shared.id.clone(),
             vm: "(gc)".to_string(),
@@ -1220,6 +1234,7 @@ impl Coordinator {
             }
             return Err(e);
         }
+        // lint: mutates(gc-job)
         self.push_job(JobEntry {
             vm: "(gc)".to_string(),
             shared: Arc::clone(&shared),
@@ -1403,6 +1418,7 @@ impl Coordinator {
                     }
                 }
             }
+            // lint: durable-after(migration-end)
             self.persist_best_effort(&ControlRecord::MigrationEnd {
                 vm: vm.clone(),
             });
@@ -1453,6 +1469,7 @@ impl Coordinator {
         // now. Close them out (their node reservations were volatile
         // and died with the old process).
         for id in v.jobs.keys() {
+            // lint: durable-after(job-end)
             self.persist_best_effort(&ControlRecord::JobEnd { id: id.clone() });
         }
         // job ids must never repeat across the crash
@@ -1592,6 +1609,7 @@ impl Coordinator {
         // write-behind and best-effort, outside the ledger locks:
         // terminal-state records must never block reaping
         for rec in &closed {
+            // lint: durable-after(job-end)
             self.persist_best_effort(rec);
         }
     }
@@ -1605,7 +1623,9 @@ impl Coordinator {
         if !lock_unpoisoned(&self.vms[shard]).contains_key(name) {
             bail!("no vm '{name}'");
         }
+        // lint: durable-before(vm-stop)
         self.persist(&ControlRecord::VmStop { name: name.to_string() })?;
+        // lint: mutates(vm-stop)
         let meta = lock_unpoisoned(&self.vms[shard])
             .remove(name)
             .ok_or_else(|| anyhow!("no vm '{name}'"))?;
@@ -1662,16 +1682,19 @@ impl Coordinator {
         let s = Arc::clone(&store);
         self.nodes.set_observer(Some(Box::new(move |ev| match ev {
             PlacementEvent::Placed { file, node } => {
+                // lint: durable-after(placement-event)
                 s.append_unfenced(&ControlRecord::Place {
                     file: (*file).to_string(),
                     node: (*node).to_string(),
                 })
             }
+            // lint: durable-after(placement-event)
             PlacementEvent::Removed { file } => s.append_unfenced(
                 &ControlRecord::Unplace { file: (*file).to_string() },
             ),
             PlacementEvent::Migrated { files, node } => {
                 for f in files.iter() {
+                    // lint: durable-after(placement-event)
                     s.append_unfenced(&ControlRecord::Place {
                         file: f.clone(),
                         node: (*node).to_string(),
@@ -1719,6 +1742,7 @@ impl Coordinator {
                 }
             };
             // write-behind and best-effort by design
+            // lint: durable-after(gc-event)
             let _ = s.append_unfenced(&rec);
         })));
         // a rebooting leader re-adopts its recorded epoch; anyone else
@@ -1823,6 +1847,7 @@ impl Coordinator {
                     }
                 }
             }
+            // lint: durable-after(migration-end)
             self.persist_best_effort(&ControlRecord::MigrationEnd {
                 vm: vm.clone(),
             });
@@ -1838,6 +1863,7 @@ impl Coordinator {
                     node.release(*bytes);
                 }
             }
+            // lint: durable-after(job-end)
             self.persist_best_effort(&ControlRecord::JobEnd { id: id.clone() });
         }
         self.next_job_id.fetch_max(v.max_job_seq, Relaxed);
@@ -1966,6 +1992,7 @@ impl Coordinator {
             JobKind::Scan,
             rate_bps,
         ));
+        // lint: durable-before(scan-job)
         if let Err(e) = self.persist(&ControlRecord::Job {
             id: shared.id.clone(),
             vm: "(scan)".to_string(),
@@ -2030,11 +2057,13 @@ impl Coordinator {
             for r in &reservations {
                 self.scheduler.release(r);
             }
+            // lint: durable-after(job-end)
             self.persist_best_effort(&ControlRecord::JobEnd {
                 id: shared.id.clone(),
             });
             return Err(anyhow!("capacity-scan thread: {e}"));
         }
+        // lint: mutates(scan-job)
         self.push_job(JobEntry {
             vm: "(scan)".to_string(),
             shared: Arc::clone(&shared),
@@ -2058,6 +2087,7 @@ impl Coordinator {
     /// and skips even the per-lease qcheck walk.
     pub fn shutdown_clean(&self) -> Result<()> {
         self.shutdown();
+        // lint: durable-after(shutdown-marker)
         self.persist(&ControlRecord::Shutdown)
     }
 

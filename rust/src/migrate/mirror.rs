@@ -385,6 +385,7 @@ impl BlockJob for MirrorJob {
                 self.data_mode,
             )?));
         }
+        // lint: durable-before(switchover)
         self.journal.commit()?;
         // THE switchover point: from here the target is authoritative —
         // exactly like crash recovery would rule — so nothing below may
@@ -398,6 +399,7 @@ impl BlockJob for MirrorJob {
         // authoritative copy (the capacity reservation covered them
         // during the copy and is released when the job is reaped)
         let names: Vec<String> = self.files.iter().map(|f| f.name.clone()).collect();
+        // lint: index-flip(switchover)
         self.nodes.commit_migration(&names, &self.target.name)?;
         for f in &self.files {
             self.target.uncondemn(&f.name);

@@ -447,11 +447,9 @@ pub fn repair_image(img: &Image) -> Result<RepairReport> {
         let base = block_idx as u64 * per_block;
         let mut dirty = false;
         for i in 0..per_block {
-            let stored = u16::from_le_bytes(
-                block_buf[(i * 2) as usize..(i * 2 + 2) as usize]
-                    .try_into()
-                    .unwrap(),
-            );
+            let a = (i * 2) as usize;
+            let stored =
+                u16::from_le_bytes([block_buf[a], block_buf[a + 1]]);
             let want = expected.get(&(base + i)).copied().unwrap_or(0);
             if stored != want {
                 rep.refcounts_rewritten += 1;

@@ -4,6 +4,7 @@
 
 pub mod json;
 pub mod notify;
+pub(crate) mod sync_shim;
 pub mod prop;
 pub mod retry;
 pub mod rng;

@@ -6,7 +6,8 @@
 //! so a notification delivered between the executor's "nothing to do"
 //! check and its park is never lost — `wait` returns immediately.
 
-use std::sync::{Condvar, Mutex, PoisonError};
+use crate::util::sync_shim::{Condvar, Mutex};
+use std::sync::PoisonError;
 use std::time::Duration;
 
 /// A latching wakeup signal (Mutex<bool> + Condvar).
@@ -14,16 +15,23 @@ use std::time::Duration;
 /// `notify` sets the flag and wakes all waiters; `wait`/`wait_timeout`
 /// block until the flag is set, then consume it. Poisoning is recovered
 /// like every other coordinator lock: the flag's invariant holds between
-/// individual writes.
-#[derive(Debug, Default)]
+/// individual writes. Built on [`crate::util::sync_shim`] so the loom
+/// CI job can model-check the latch for lost wakeups.
+#[derive(Debug)]
 pub struct Notify {
     flag: Mutex<bool>,
     cv: Condvar,
 }
 
+impl Default for Notify {
+    fn default() -> Self {
+        Notify::new()
+    }
+}
+
 impl Notify {
     pub fn new() -> Self {
-        Notify::default()
+        Notify { flag: Mutex::new(false), cv: Condvar::new() }
     }
 
     /// Ring the doorbell: latch the flag and wake every parked waiter.
@@ -54,6 +62,7 @@ impl Notify {
 
     /// Park until notified or `timeout` elapses. Returns true if a
     /// notification was consumed, false on timeout.
+    #[cfg(not(loom))]
     pub fn wait_timeout(&self, timeout: Duration) -> bool {
         let deadline = std::time::Instant::now() + timeout;
         let mut g = self
@@ -72,6 +81,16 @@ impl Notify {
             g = guard;
         }
         *g = false;
+        true
+    }
+
+    /// loom has no `Condvar::wait_timeout`; under the model checker a
+    /// timed park degrades to an untimed one (models never rely on
+    /// timeouts for progress — the backstops exist for lost-wakeup
+    /// defense in depth, and the loom suite proves wakeups aren't lost).
+    #[cfg(loom)]
+    pub fn wait_timeout(&self, _timeout: Duration) -> bool {
+        self.wait();
         true
     }
 }
@@ -108,5 +127,55 @@ mod tests {
         std::thread::sleep(Duration::from_millis(10));
         n.notify();
         assert_eq!(h.join().unwrap(), 7);
+    }
+}
+
+#[cfg(all(test, loom))]
+mod loom_tests {
+    use super::*;
+    use loom::thread;
+    use std::sync::Arc;
+
+    /// The doorbell's core guarantee: a notify racing an executor's
+    /// park is never lost. If the latch had a window (flag checked,
+    /// notify fires, then the wait parks), loom would report the
+    /// deadlocked interleaving here.
+    #[test]
+    fn loom_notify_wakeup_never_lost() {
+        loom::model(|| {
+            let n = Arc::new(Notify::new());
+            let n2 = Arc::clone(&n);
+            let t = thread::spawn(move || n2.wait());
+            n.notify();
+            t.join().unwrap();
+        });
+    }
+
+    /// Latching: a notification delivered before anyone waits is
+    /// consumed by the next waiter instead of evaporating.
+    #[test]
+    fn loom_notify_latches_before_wait() {
+        loom::model(|| {
+            let n = Notify::new();
+            n.notify();
+            n.wait(); // must return immediately off the latched flag
+        });
+    }
+
+    /// Concurrent redundant rings collapse into the latch without
+    /// losing the wakeup: the waiter returns no matter how the two
+    /// notifies interleave with its park.
+    #[test]
+    fn loom_notify_redundant_notifies_collapse() {
+        loom::model(|| {
+            let n = Arc::new(Notify::new());
+            let n1 = Arc::clone(&n);
+            let n2 = Arc::clone(&n);
+            let t1 = thread::spawn(move || n1.notify());
+            let t2 = thread::spawn(move || n2.notify());
+            n.wait();
+            t1.join().unwrap();
+            t2.join().unwrap();
+        });
     }
 }

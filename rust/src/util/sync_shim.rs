@@ -1,0 +1,55 @@
+//! Concurrency primitives, switchable to [loom](https://docs.rs/loom)
+//! instrumented versions with `RUSTFLAGS="--cfg loom"`.
+//!
+//! The lock-free ring ([`crate::coordinator::ring::Ring`]) and the
+//! doorbell ([`crate::util::Notify`]) build against these aliases so the
+//! loom CI job can model-check every interleaving of their atomics,
+//! while the default build compiles straight to the `std` types with
+//! zero overhead. The `loom` crate is injected by the CI job only
+//! (`[target.'cfg(loom)'.dev-dependencies]`); the checked-in manifest
+//! carries no extra dependency and a plain `cargo build` never sees it.
+
+#[cfg(loom)]
+pub(crate) use loom::sync::atomic::{
+    AtomicBool, AtomicU64, AtomicUsize, Ordering,
+};
+#[cfg(not(loom))]
+pub(crate) use std::sync::atomic::{
+    AtomicBool, AtomicU64, AtomicUsize, Ordering,
+};
+
+#[cfg(loom)]
+pub(crate) use loom::sync::{Condvar, Mutex};
+#[cfg(not(loom))]
+pub(crate) use std::sync::{Condvar, Mutex};
+
+#[cfg(loom)]
+pub(crate) use loom::thread::yield_now;
+#[cfg(not(loom))]
+pub(crate) use std::thread::yield_now;
+
+#[cfg(loom)]
+pub(crate) use loom::cell::UnsafeCell;
+
+/// `std` stand-in for `loom::cell::UnsafeCell`: same `with`/`with_mut`
+/// closure API (which loom uses to track reads and writes for race
+/// detection), compiled down to plain pointer access.
+#[cfg(not(loom))]
+#[derive(Debug)]
+pub(crate) struct UnsafeCell<T>(std::cell::UnsafeCell<T>);
+
+#[cfg(not(loom))]
+impl<T> UnsafeCell<T> {
+    pub(crate) fn new(v: T) -> UnsafeCell<T> {
+        UnsafeCell(std::cell::UnsafeCell::new(v))
+    }
+
+    #[allow(dead_code)]
+    pub(crate) fn with<R>(&self, f: impl FnOnce(*const T) -> R) -> R {
+        f(self.0.get())
+    }
+
+    pub(crate) fn with_mut<R>(&self, f: impl FnOnce(*mut T) -> R) -> R {
+        f(self.0.get())
+    }
+}

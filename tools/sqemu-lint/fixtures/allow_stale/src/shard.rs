@@ -1,0 +1,13 @@
+// Fixture: one real finding suppressed by the allowlist, plus one
+// allowlist entry that matches nothing and must be reported stale.
+
+pub struct Shard {
+    stash: Mutex<Vec<u64>>,
+}
+
+impl Shard {
+    pub fn serve(&self, v: u64) {
+        let mut g = self.stash.lock().unwrap();
+        g.push(v);
+    }
+}

@@ -1,0 +1,32 @@
+// Fixture: everything in order — ranked locks acquired outer-to-inner,
+// an annotated write-ahead persist, and a fenced flip.
+
+pub struct S {
+    outer: Mutex<u8>,
+    inner: Mutex<u8>,
+}
+
+impl S {
+    pub fn nested(&self) {
+        let g = self.outer.lock().unwrap();
+        let h = self.inner.lock().unwrap();
+        drop(h);
+        drop(g);
+    }
+}
+
+impl Store {
+    pub fn apply(&mut self, rec: &Rec) {
+        // lint: durable-before(rec)
+        self.log.persist(rec);
+        // lint: mutates(rec)
+        self.view.apply(rec);
+    }
+
+    pub fn compact(&mut self, buf: &[u8]) {
+        self.log.write_at(8, buf);
+        self.log.flush();
+        // lint: index-flip(generation)
+        self.ptr.write_at(0, &self.word);
+    }
+}

@@ -1,0 +1,13 @@
+// Fixture for the panic/index cones: recover_index panics and indexes;
+// decode shows the fallible style the cone demands.
+
+pub fn recover_index(buf: &[u8]) -> u16 {
+    let lo = buf[0];
+    let hi = buf.get(1).copied().unwrap();
+    u16::from_le_bytes([lo, hi])
+}
+
+pub fn decode(rest: &[u8]) -> Option<u32> {
+    let len_bytes: [u8; 4] = rest.get(0..4)?.try_into().ok()?;
+    Some(u32::from_le_bytes(len_bytes))
+}

@@ -1,0 +1,23 @@
+// Fixture: two functions acquire the same pair of locks in opposite
+// orders — the analyzer must report a lock-cycle.
+
+pub struct S {
+    a: Mutex<u8>,
+    b: Mutex<u8>,
+}
+
+impl S {
+    pub fn ab(&self) {
+        let g = self.a.lock().unwrap();
+        let h = self.b.lock().unwrap();
+        drop(h);
+        drop(g);
+    }
+
+    pub fn ba(&self) {
+        let g = self.b.lock().unwrap();
+        let h = self.a.lock().unwrap();
+        drop(h);
+        drop(g);
+    }
+}

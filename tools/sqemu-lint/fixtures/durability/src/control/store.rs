@@ -1,0 +1,42 @@
+// Fixture for the durability-ordering lints. Each fn isolates one case.
+
+impl Store {
+    // Missing annotation entirely -> durability-unannotated.
+    pub fn unannotated(&mut self, rec: &Rec) {
+        self.log.persist(rec);
+    }
+
+    // Write-ahead claim with no paired mutation -> durability-unpaired.
+    pub fn unpaired(&mut self, rec: &Rec) {
+        // lint: durable-before(rec)
+        self.log.persist(rec);
+    }
+
+    // Properly paired write-ahead: clean.
+    pub fn good(&mut self, rec: &Rec) {
+        // lint: durable-before(rec)
+        self.log.persist(rec);
+        // lint: mutates(rec)
+        self.view.apply(rec);
+    }
+
+    // Pointer flip without `lint: index-flip` -> durability-flip-unflagged.
+    pub fn flip_unflagged(&mut self) {
+        self.ptr.write_at(0, &self.word);
+    }
+
+    // Journal write not flushed before the flip -> durability-missing-flush.
+    pub fn flip_unflushed(&mut self, buf: &[u8]) {
+        self.log.write_at(8, buf);
+        // lint: index-flip(generation)
+        self.ptr.write_at(0, &self.word);
+    }
+
+    // Fenced flip: clean.
+    pub fn flip_fenced(&mut self, buf: &[u8]) {
+        self.log.write_at(8, buf);
+        self.log.flush();
+        // lint: index-flip(generation)
+        self.ptr.write_at(0, &self.word);
+    }
+}

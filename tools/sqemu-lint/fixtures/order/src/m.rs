@@ -1,0 +1,17 @@
+// Fixture: the nesting a -> b contradicts the checked-in ranks
+// (a=20, b=10); lock c has no rank; rank m.zz names a dead lock.
+
+pub struct S {
+    a: Mutex<u8>,
+    b: Mutex<u8>,
+    c: Mutex<u8>,
+}
+
+impl S {
+    pub fn nested(&self) {
+        let g = self.a.lock().unwrap();
+        let h = self.b.lock().unwrap();
+        drop(h);
+        drop(g);
+    }
+}

@@ -1,0 +1,17 @@
+// Fixture: the serving pass reaches a blocking lock through a callee;
+// the transitive summary must surface it.
+
+pub struct Shard {
+    stash: Mutex<Vec<u64>>,
+}
+
+impl Shard {
+    fn complete(&self, v: u64) {
+        let mut g = self.stash.lock().unwrap();
+        g.push(v);
+    }
+
+    pub fn serve(&self, v: u64) {
+        self.complete(v);
+    }
+}

@@ -1,0 +1,200 @@
+//! Enforcement cones: panic-free recovery code, index-free parsers, and
+//! lock-free shard-executor serving passes.
+
+use crate::config::Config;
+use crate::lockgraph::{FnKey, LockAnalysis};
+use crate::report::Finding;
+use crate::scan::{find_words, is_ident, skip_ws, skip_ws_back, SourceFile};
+
+/// `.name(` with whitespace tolerance around the dot and paren.
+pub fn dot_call(line: &[u8], name: &str) -> bool {
+    for p in find_words(line, name) {
+        let after = skip_ws(line, p + name.len());
+        if after >= line.len() || line[after] != b'(' {
+            continue;
+        }
+        let b = skip_ws_back(line, p);
+        if b > 0 && line[b - 1] == b'.' {
+            return true;
+        }
+    }
+    false
+}
+
+/// `name!(` — a panicking macro invocation.
+fn macro_call(line: &[u8], name: &str) -> bool {
+    for p in find_words(line, name) {
+        let bang = p + name.len();
+        if bang >= line.len() || line[bang] != b'!' {
+            continue;
+        }
+        let after = skip_ws(line, bang + 1);
+        if after < line.len() && line[after] == b'(' {
+            return true;
+        }
+    }
+    false
+}
+
+/// Any panic path: `.unwrap(` / `.expect(` / `panic!(` / `unreachable!(`
+/// / `todo!(` / `unimplemented!(`.
+pub fn panic_on_line(line: &str) -> bool {
+    let s = line.as_bytes();
+    dot_call(s, "unwrap")
+        || dot_call(s, "expect")
+        || macro_call(s, "panic")
+        || macro_call(s, "unreachable")
+        || macro_call(s, "todo")
+        || macro_call(s, "unimplemented")
+}
+
+/// Slice-index expression `chain[` (the last dotted segment must be a
+/// lowercase/underscore identifier, so `vec![`, `#[`, and `[u8; 4]`
+/// types don't count).
+pub fn index_on_line(line: &str) -> bool {
+    let s = line.as_bytes();
+    for (p, &b) in s.iter().enumerate() {
+        if b != b'[' {
+            continue;
+        }
+        let q = skip_ws_back(s, p);
+        if q == 0 || !is_ident(s[q - 1]) {
+            continue;
+        }
+        let mut d = q;
+        while d > 0 && is_ident(s[d - 1]) {
+            d -= 1;
+        }
+        let seg0 = s[d];
+        if seg0.is_ascii_lowercase() || seg0 == b'_' {
+            return true;
+        }
+    }
+    false
+}
+
+/// Panic-cone and index-cone findings for one file.
+pub fn cone_findings(sf: &SourceFile, cfg: &Config) -> Vec<Finding> {
+    let mut out = Vec::new();
+    let in_panic_file = cfg.panic_files.iter().any(|f| f == &sf.rel);
+    let prefix = cfg
+        .panic_fn_prefixes
+        .iter()
+        .find(|(f, _)| f == &sf.rel)
+        .map(|(_, p)| p.as_str());
+    if !in_panic_file && prefix.is_none() {
+        return out;
+    }
+    let in_index_file = cfg.index_files.iter().any(|f| f == &sf.rel);
+    for f in &sf.fns {
+        if sf.in_test(f.start_line) {
+            continue;
+        }
+        if !in_panic_file {
+            let Some(p) = prefix else { continue };
+            if !f.name.starts_with(p) {
+                continue;
+            }
+        }
+        let key = format!("{}:{}", sf.rel, f.name);
+        for idx in f.start_line - 1..f.end_line.min(sf.code_lines.len()) {
+            let line = &sf.code_lines[idx];
+            if panic_on_line(line) {
+                out.push(Finding::new(
+                    "panic-cone",
+                    key.clone(),
+                    &sf.rel,
+                    idx + 1,
+                    format!(
+                        "panic path in recovery cone fn {}: `{}`",
+                        f.name,
+                        line.trim().chars().take(80).collect::<String>()
+                    ),
+                ));
+            }
+            if in_index_file && index_on_line(line) {
+                out.push(Finding::new(
+                    "index-cone",
+                    key.clone(),
+                    &sf.rel,
+                    idx + 1,
+                    format!(
+                        "slice indexing in parse cone fn {}: `{}`",
+                        f.name,
+                        line.trim().chars().take(80).collect::<String>()
+                    ),
+                ));
+            }
+        }
+    }
+    out
+}
+
+/// Serving passes must have an empty lock summary (direct + transitive).
+pub fn serving_findings(
+    files: &[SourceFile],
+    analysis: &LockAnalysis,
+    cfg: &Config,
+) -> Vec<Finding> {
+    let mut out = Vec::new();
+    if cfg.serving_file.is_empty() {
+        return out;
+    }
+    for sf in files {
+        if sf.rel != cfg.serving_file {
+            continue;
+        }
+        for f in &sf.fns {
+            if !cfg.serving_fns.iter().any(|n| n == &f.name) {
+                continue;
+            }
+            let key = FnKey {
+                file: sf.rel.clone(),
+                name: f.name.clone(),
+                start_line: f.start_line,
+            };
+            if let Some(locks) = analysis.summaries.get(&key) {
+                for lock in locks {
+                    out.push(Finding::new(
+                        "serving-lock",
+                        format!("{}:{}", f.name, lock),
+                        &sf.rel,
+                        f.start_line,
+                        format!(
+                            "serving pass {} may block on lock {} \
+                             (directly or via a callee)",
+                            f.name, lock
+                        ),
+                    ));
+                }
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn panic_patterns() {
+        assert!(panic_on_line("let x = v.pop().unwrap();"));
+        assert!(panic_on_line("res.expect(\"always\");"));
+        assert!(panic_on_line("panic!(\"boom\");"));
+        assert!(panic_on_line("unreachable!()"));
+        assert!(!panic_on_line("let unwrap = 3;"));
+        assert!(!panic_on_line("self.unwrap_or_default();"));
+        assert!(!panic_on_line("fn expect_header() {}"));
+    }
+
+    #[test]
+    fn index_patterns() {
+        assert!(index_on_line("let x = buf[0];"));
+        assert!(index_on_line("let y = self.table[i + 1];"));
+        assert!(!index_on_line("let v = vec![1, 2];"));
+        assert!(!index_on_line("#[derive(Debug)]"));
+        assert!(!index_on_line("fn f(b: [u8; 4]) {}"));
+        assert!(!index_on_line("let z: &[u8] = &b;"));
+    }
+}

@@ -1,0 +1,83 @@
+//! Analyzer configuration: which tree to scan and which files/functions
+//! sit in each enforcement cone. `Config::for_tree` is the real sqemu
+//! layout; fixture tests build custom configs pointing at small trees.
+
+use std::path::{Path, PathBuf};
+
+#[derive(Debug, Clone)]
+pub struct Config {
+    /// Directory scanned for `.rs` files (normally `<repo>/rust/src`).
+    pub src_dir: PathBuf,
+    /// Checked-in lock hierarchy (`<rank> <lock>` lines). When set, every
+    /// lock must be ranked and every observed nesting must descend.
+    pub lock_order: Option<PathBuf>,
+    /// Checked-in exceptions (`<rule> <key> -- reason` lines). Unused
+    /// entries are themselves findings, so exceptions cannot go stale.
+    pub allowlist: Option<PathBuf>,
+    /// Files (relative to `src_dir`) whose entire non-test code must be
+    /// free of panic paths (`unwrap`/`expect`/`panic!`/...).
+    pub panic_files: Vec<String>,
+    /// Files whose non-test code must not use `[]` indexing.
+    pub index_files: Vec<String>,
+    /// (file, fn-name-prefix) pairs: named functions join the panic cone.
+    pub panic_fn_prefixes: Vec<(String, String)>,
+    /// File holding the shard-executor serving passes.
+    pub serving_file: String,
+    /// Serving-pass functions that must not acquire any lock, directly
+    /// or transitively.
+    pub serving_fns: Vec<String>,
+    /// Directory prefixes where durability annotations are enforced.
+    pub dur_dirs: Vec<String>,
+}
+
+impl Config {
+    /// Configuration for the real sqemu tree rooted at `root`.
+    pub fn for_tree(root: &Path) -> Config {
+        Config {
+            src_dir: root.join("rust/src"),
+            lock_order: Some(root.join("tools/sqemu-lint/lock-order.txt")),
+            allowlist: Some(root.join("tools/sqemu-lint/allowlist.txt")),
+            panic_files: vec![
+                "control/statestore.rs".to_string(),
+                "control/record.rs".to_string(),
+                "qcow/qcheck.rs".to_string(),
+            ],
+            index_files: vec![
+                "control/statestore.rs".to_string(),
+                "control/record.rs".to_string(),
+            ],
+            panic_fn_prefixes: vec![(
+                "coordinator/server.rs".to_string(),
+                "recover".to_string(),
+            )],
+            serving_file: "coordinator/shard.rs".to_string(),
+            serving_fns: vec![
+                "serve_slot".to_string(),
+                "serve_reads".to_string(),
+                "serve_writes".to_string(),
+                "run_batch".to_string(),
+            ],
+            dur_dirs: vec![
+                "coordinator/".to_string(),
+                "control/".to_string(),
+                "migrate/".to_string(),
+            ],
+        }
+    }
+
+    /// Bare configuration for a fixture tree: no hierarchy, no allowlist,
+    /// no cones. Tests opt into the pieces they exercise.
+    pub fn bare(src_dir: PathBuf) -> Config {
+        Config {
+            src_dir,
+            lock_order: None,
+            allowlist: None,
+            panic_files: Vec::new(),
+            index_files: Vec::new(),
+            panic_fn_prefixes: Vec::new(),
+            serving_file: String::new(),
+            serving_fns: Vec::new(),
+            dur_dirs: Vec::new(),
+        }
+    }
+}

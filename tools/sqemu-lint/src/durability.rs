@@ -1,0 +1,367 @@
+//! Durability-ordering lints.
+//!
+//! Control-plane and migration code must make its journal/mutation
+//! ordering explicit with `// lint:` annotations, verified structurally:
+//!
+//! * `durable-before(t)` — the journal write on this line precedes the
+//!   in-memory mutation tagged `mutates(t)` (or `index-flip(t)`) later
+//!   in the same function.
+//! * `durable-after(t)`  — deliberately journal-after (or best-effort);
+//!   standalone.
+//! * `durable-rollback(t)` — mutation-first with compensating rollback:
+//!   needs an earlier `mutates(t)` and a later `rolls-back(t)`.
+//! * `mutates(t)` / `rolls-back(t)` — the paired mutation sites.
+//! * `index-flip(t)` — an atomic pointer/index flip making state live;
+//!   every write since the previous flush must be fenced before it.
+//!
+//! Calls that persist state (`.persist(`, `.journal.commit(`, ...) in
+//! the durability directories are required to carry one of the matching
+//! annotations, so new journal writes cannot land unclassified.
+
+use crate::config::Config;
+use crate::report::Finding;
+use crate::scan::{find_words, skip_ws, skip_ws_back, word_at, SourceFile};
+use std::collections::HashMap;
+
+use crate::cones::dot_call;
+
+/// `.first.second(` with whitespace tolerance.
+fn chain_dot_call(line: &[u8], first: &str, second: &str) -> bool {
+    for p in find_words(line, second) {
+        let after = skip_ws(line, p + second.len());
+        if after >= line.len() || line[after] != b'(' {
+            continue;
+        }
+        let b = skip_ws_back(line, p);
+        if b == 0 || line[b - 1] != b'.' {
+            continue;
+        }
+        let c = skip_ws_back(line, b - 1);
+        if c < first.len() || !word_at(line, c - first.len(), first) {
+            continue;
+        }
+        let d = skip_ws_back(line, c - first.len());
+        if d > 0 && line[d - 1] == b'.' {
+            return true;
+        }
+    }
+    false
+}
+
+/// `name(` as a free/assoc call (no dot required before the name).
+fn bare_call(line: &[u8], name: &str) -> bool {
+    for p in find_words(line, name) {
+        let after = skip_ws(line, p + name.len());
+        if after < line.len() && line[after] == b'(' {
+            return true;
+        }
+    }
+    false
+}
+
+fn write_on_line(line: &[u8]) -> bool {
+    dot_call(line, "write_at") || dot_call(line, "append") || dot_call(line, "commit")
+}
+
+fn flush_on_line(line: &[u8]) -> bool {
+    dot_call(line, "flush") || dot_call(line, "commit")
+}
+
+/// Annotation sets that satisfy each persistence pattern.
+fn required_annotations(line: &[u8]) -> Vec<&'static [&'static str]> {
+    let mut out: Vec<&'static [&'static str]> = Vec::new();
+    if dot_call(line, "persist") {
+        out.push(&["durable-before", "durable-after", "durable-rollback"]);
+    }
+    if dot_call(line, "persist_best_effort") {
+        out.push(&["durable-after"]);
+    }
+    if dot_call(line, "append_unfenced") {
+        out.push(&["durable-after"]);
+    }
+    if chain_dot_call(line, "journal", "commit") {
+        out.push(&["durable-before", "durable-after"]);
+    }
+    out
+}
+
+/// Is this line an index flip that must be annotated, per directory?
+fn flip_on_line(rel: &str, line: &[u8]) -> bool {
+    (rel.starts_with("migrate/") && bare_call(line, "commit_migration"))
+        || (rel.starts_with("control/") && chain_dot_call(line, "ptr", "write_at"))
+}
+
+pub fn durability_findings(sf: &SourceFile, cfg: &Config) -> Vec<Finding> {
+    let mut out = Vec::new();
+    if !cfg.dur_dirs.iter().any(|d| sf.rel.starts_with(d.as_str())) {
+        return out;
+    }
+    for f in &sf.fns {
+        if sf.in_test(f.start_line) {
+            continue;
+        }
+        let key = format!("{}:{}", sf.rel, f.name);
+        // Annotations by tag within this fn: name -> [(line, arg)].
+        let mut tags: HashMap<&str, Vec<(usize, &str)>> = HashMap::new();
+        for ln in f.start_line..=f.end_line {
+            if let Some(anns) = sf.annotations.get(&ln) {
+                for (nm, arg) in anns {
+                    tags.entry(nm.as_str()).or_default().push((ln, arg.as_str()));
+                }
+            }
+        }
+        let lines_of = |nm: &str, arg: &str| -> Vec<usize> {
+            tags.get(nm)
+                .map(|v| {
+                    v.iter()
+                        .filter(|(_, a)| *a == arg)
+                        .map(|(l, _)| *l)
+                        .collect()
+                })
+                .unwrap_or_default()
+        };
+
+        for idx in f.start_line - 1..f.end_line.min(sf.code_lines.len()) {
+            let ln = idx + 1;
+            let line = sf.code_lines[idx].as_bytes();
+            let anns: Vec<&str> = sf
+                .annotations
+                .get(&ln)
+                .map(|v| v.iter().map(|(n, _)| n.as_str()).collect())
+                .unwrap_or_default();
+            for need in required_annotations(line) {
+                if !need.iter().any(|n| anns.contains(n)) {
+                    out.push(Finding::new(
+                        "durability-unannotated",
+                        key.clone(),
+                        &sf.rel,
+                        ln,
+                        format!(
+                            "persistence call in {} lacks a durability \
+                             annotation (one of: {})",
+                            f.name,
+                            need.join(", ")
+                        ),
+                    ));
+                }
+            }
+            if flip_on_line(&sf.rel, line) && !anns.contains(&"index-flip") {
+                out.push(Finding::new(
+                    "durability-flip-unflagged",
+                    key.clone(),
+                    &sf.rel,
+                    ln,
+                    format!(
+                        "index/pointer flip in {} lacks `lint: index-flip(..)`",
+                        f.name
+                    ),
+                ));
+            }
+        }
+
+        // Pairing checks.
+        for (ln, arg) in tags.get("durable-before").cloned().unwrap_or_default() {
+            let later = lines_of("mutates", arg)
+                .into_iter()
+                .chain(lines_of("index-flip", arg))
+                .any(|l| l > ln);
+            if !later {
+                out.push(Finding::new(
+                    "durability-unpaired",
+                    key.clone(),
+                    &sf.rel,
+                    ln,
+                    format!(
+                        "durable-before({arg}) has no later mutates({arg}) \
+                         or index-flip({arg}) in {}",
+                        f.name
+                    ),
+                ));
+            }
+        }
+        for (ln, arg) in tags.get("durable-rollback").cloned().unwrap_or_default() {
+            if !lines_of("mutates", arg).into_iter().any(|l| l < ln) {
+                out.push(Finding::new(
+                    "durability-unpaired",
+                    key.clone(),
+                    &sf.rel,
+                    ln,
+                    format!(
+                        "durable-rollback({arg}) needs an earlier \
+                         mutates({arg}) in {}",
+                        f.name
+                    ),
+                ));
+            }
+            if !lines_of("rolls-back", arg).into_iter().any(|l| l > ln) {
+                out.push(Finding::new(
+                    "durability-unpaired",
+                    key.clone(),
+                    &sf.rel,
+                    ln,
+                    format!(
+                        "durable-rollback({arg}) needs a later \
+                         rolls-back({arg}) in {}",
+                        f.name
+                    ),
+                ));
+            }
+        }
+        for (ln, arg) in tags.get("mutates").cloned().unwrap_or_default() {
+            let ok = lines_of("durable-before", arg).into_iter().any(|l| l < ln)
+                || lines_of("durable-rollback", arg).into_iter().any(|l| l > ln);
+            if !ok {
+                out.push(Finding::new(
+                    "durability-unpaired",
+                    key.clone(),
+                    &sf.rel,
+                    ln,
+                    format!(
+                        "mutates({arg}) has no earlier durable-before({arg}) \
+                         nor later durable-rollback({arg}) in {}",
+                        f.name
+                    ),
+                ));
+            }
+        }
+        for (ln, arg) in tags.get("rolls-back").cloned().unwrap_or_default() {
+            if !lines_of("durable-rollback", arg).into_iter().any(|l| l < ln) {
+                out.push(Finding::new(
+                    "durability-unpaired",
+                    key.clone(),
+                    &sf.rel,
+                    ln,
+                    format!(
+                        "rolls-back({arg}) has no earlier \
+                         durable-rollback({arg}) in {}",
+                        f.name
+                    ),
+                ));
+            }
+        }
+
+        // Flush-before-flip: every journal write since the last fence
+        // must be flushed before the flip makes state reachable.
+        for (ln, arg) in tags.get("index-flip").cloned().unwrap_or_default() {
+            let mut last_write = None;
+            for idx in f.start_line - 1..(ln - 1).min(sf.code_lines.len()) {
+                if write_on_line(sf.code_lines[idx].as_bytes()) {
+                    last_write = Some(idx + 1);
+                }
+            }
+            let Some(last_write) = last_write else { continue };
+            let fenced = (last_write..ln)
+                .any(|l| flush_on_line(sf.code_lines[l - 1].as_bytes()));
+            if !fenced {
+                out.push(Finding::new(
+                    "durability-missing-flush",
+                    key.clone(),
+                    &sf.rel,
+                    ln,
+                    format!(
+                        "index-flip({arg}) in {}: journal write at line \
+                         {last_write} is not flushed before the flip",
+                        f.name
+                    ),
+                ));
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Config;
+    use std::path::PathBuf;
+
+    fn cfg_all() -> Config {
+        let mut c = Config::bare(PathBuf::new());
+        c.dur_dirs = vec![String::new()]; // match every file
+        c
+    }
+
+    fn findings(rel: &str, src: &str) -> Vec<Finding> {
+        let sf = SourceFile::parse(rel, src.as_bytes());
+        durability_findings(&sf, &cfg_all())
+    }
+
+    #[test]
+    fn persist_requires_annotation() {
+        let f = findings(
+            "control/x.rs",
+            "fn f(s: &Store) {\n    s.persist(&rec);\n}\n",
+        );
+        assert_eq!(f.len(), 1);
+        assert_eq!(f[0].rule, "durability-unannotated");
+    }
+
+    #[test]
+    fn annotated_pair_passes() {
+        let f = findings(
+            "control/x.rs",
+            "fn f(s: &mut Store) {\n\
+             \x20   // lint: durable-before(rec)\n\
+             \x20   s.persist(&rec);\n\
+             \x20   // lint: mutates(rec)\n\
+             \x20   s.view.apply(&rec);\n\
+             }\n",
+        );
+        assert!(f.is_empty(), "{f:?}");
+    }
+
+    #[test]
+    fn unpaired_before_fires() {
+        let f = findings(
+            "control/x.rs",
+            "fn f(s: &mut Store) {\n\
+             \x20   // lint: durable-before(rec)\n\
+             \x20   s.persist(&rec);\n\
+             }\n",
+        );
+        assert!(f.iter().any(|x| x.rule == "durability-unpaired"), "{f:?}");
+    }
+
+    #[test]
+    fn missing_flush_before_flip_fires() {
+        let f = findings(
+            "control/x.rs",
+            "fn f(s: &mut Store) {\n\
+             \x20   s.log.write_at(0, &buf)?;\n\
+             \x20   // lint: index-flip(gen)\n\
+             \x20   s.ptr.write_at(8, &word)?;\n\
+             }\n",
+        );
+        assert!(
+            f.iter().any(|x| x.rule == "durability-missing-flush"),
+            "{f:?}"
+        );
+    }
+
+    #[test]
+    fn flush_fences_the_flip() {
+        let f = findings(
+            "control/x.rs",
+            "fn f(s: &mut Store) {\n\
+             \x20   s.log.write_at(0, &buf)?;\n\
+             \x20   s.log.flush()?;\n\
+             \x20   // lint: index-flip(gen)\n\
+             \x20   s.ptr.write_at(8, &word)?;\n\
+             }\n",
+        );
+        assert!(f.is_empty(), "{f:?}");
+    }
+
+    #[test]
+    fn unflagged_flip_fires() {
+        let f = findings(
+            "migrate/m.rs",
+            "fn f(n: &Nodes) {\n    n.commit_migration(&names, tgt)?;\n}\n",
+        );
+        assert!(
+            f.iter().any(|x| x.rule == "durability-flip-unflagged"),
+            "{f:?}"
+        );
+    }
+}

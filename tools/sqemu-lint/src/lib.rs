@@ -1,0 +1,230 @@
+//! sqemu-lint: fleet invariant analyzer for the sqemu tree.
+//!
+//! Source-level static analysis over `rust/src/**` enforcing three
+//! invariant families (DESIGN.md §16):
+//!
+//! 1. **Lock order** — extract every `Mutex`/`RwLock` field and every
+//!    nested acquisition (directly or through one level of call
+//!    summaries), then require the graph to be acyclic and consistent
+//!    with the checked-in hierarchy in `lock-order.txt`.
+//! 2. **Durability ordering** — journal writes in `coordinator/`,
+//!    `control/` and `migrate/` must carry `// lint: durable-*`
+//!    annotations whose pairing (write-ahead vs mutate, flush vs index
+//!    flip) is verified structurally.
+//! 3. **Cones** — no panic paths or slice indexing in the recovery/
+//!    replay cone, and no blocking locks in shard-executor serving
+//!    passes.
+//!
+//! Exceptions live in `allowlist.txt` and must each match a live
+//! finding; a stale entry is itself a finding.
+
+pub mod cones;
+pub mod config;
+pub mod durability;
+pub mod lockgraph;
+pub mod report;
+pub mod scan;
+
+pub use config::Config;
+pub use report::{Finding, Report};
+
+use anyhow::Context as _;
+use scan::SourceFile;
+use std::collections::BTreeSet;
+use std::fs;
+use std::path::{Path, PathBuf};
+
+/// Recursively collect `.rs` files under `dir`, sorted for determinism.
+fn collect_rs(dir: &Path, out: &mut Vec<PathBuf>) -> anyhow::Result<()> {
+    let mut entries: Vec<fs::DirEntry> = fs::read_dir(dir)
+        .with_context(|| format!("reading {}", dir.display()))?
+        .collect::<Result<_, _>>()?;
+    entries.sort_by_key(|e| e.file_name());
+    for e in entries {
+        let p = e.path();
+        if p.is_dir() {
+            collect_rs(&p, out)?;
+        } else if p.extension().is_some_and(|x| x == "rs") {
+            out.push(p);
+        }
+    }
+    Ok(())
+}
+
+#[derive(Debug)]
+struct AllowEntry {
+    rule: String,
+    key: String,
+    line: usize,
+    used: bool,
+}
+
+/// Parse `allowlist.txt`: `<rule> <key> -- <justification>` per line.
+fn parse_allowlist(text: &str) -> anyhow::Result<Vec<AllowEntry>> {
+    let mut out = Vec::new();
+    for (idx, raw) in text.lines().enumerate() {
+        let line = raw.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let Some((head, reason)) = line.split_once(" -- ") else {
+            anyhow::bail!(
+                "allowlist.txt:{}: entry needs a ` -- <justification>`",
+                idx + 1
+            );
+        };
+        if reason.trim().is_empty() {
+            anyhow::bail!("allowlist.txt:{}: empty justification", idx + 1);
+        }
+        let mut parts = head.split_whitespace();
+        let (Some(rule), Some(key), None) =
+            (parts.next(), parts.next(), parts.next())
+        else {
+            anyhow::bail!(
+                "allowlist.txt:{}: expected `<rule> <key> -- reason`",
+                idx + 1
+            );
+        };
+        out.push(AllowEntry {
+            rule: rule.to_string(),
+            key: key.to_string(),
+            line: idx + 1,
+            used: false,
+        });
+    }
+    Ok(out)
+}
+
+/// Run the full analysis for `cfg` and return the report.
+pub fn run_with(cfg: &Config) -> anyhow::Result<Report> {
+    let mut paths = Vec::new();
+    collect_rs(&cfg.src_dir, &mut paths)?;
+    let mut sources = Vec::new();
+    for p in &paths {
+        let rel = p
+            .strip_prefix(&cfg.src_dir)
+            .unwrap_or(p)
+            .to_string_lossy()
+            .replace('\\', "/");
+        let text =
+            fs::read(p).with_context(|| format!("reading {}", p.display()))?;
+        sources.push(SourceFile::parse(&rel, &text));
+    }
+
+    let analysis = lockgraph::analyze(&sources);
+    let mut findings: Vec<Finding> = Vec::new();
+
+    if let Some(cyc) = lockgraph::find_cycle(&analysis.edges) {
+        findings.push(Finding::new(
+            "lock-cycle",
+            cyc.join("->"),
+            "",
+            0,
+            format!("lock acquisition cycle: {}", cyc.join(" -> ")),
+        ));
+    }
+
+    let all_locks: BTreeSet<String> = sources
+        .iter()
+        .flat_map(|sf| {
+            sf.lock_fields
+                .keys()
+                .map(|f| format!("{}.{}", sf.module, f))
+                .collect::<Vec<_>>()
+        })
+        .collect();
+
+    if let Some(order_path) = &cfg.lock_order {
+        let text = fs::read_to_string(order_path)
+            .with_context(|| format!("reading {}", order_path.display()))?;
+        let order = lockgraph::parse_lock_order(&text)?;
+        let display = order_path.to_string_lossy().into_owned();
+        findings.extend(lockgraph::hierarchy_findings(
+            &order,
+            &display,
+            &all_locks,
+            &analysis.edges,
+        ));
+    }
+
+    for sf in &sources {
+        findings.extend(cones::cone_findings(sf, cfg));
+    }
+    findings.extend(cones::serving_findings(&sources, &analysis, cfg));
+    for sf in &sources {
+        findings.extend(durability::durability_findings(sf, cfg));
+    }
+
+    let mut allow: Vec<AllowEntry> = match &cfg.allowlist {
+        Some(p) if p.exists() => {
+            let text = fs::read_to_string(p)
+                .with_context(|| format!("reading {}", p.display()))?;
+            parse_allowlist(&text)?
+        }
+        _ => Vec::new(),
+    };
+
+    let mut kept = Vec::new();
+    let mut suppressed = Vec::new();
+    for f in findings {
+        let hit = allow
+            .iter_mut()
+            .find(|e| e.rule == f.rule && e.key == f.key);
+        match hit {
+            Some(e) => {
+                e.used = true;
+                suppressed.push(f);
+            }
+            None => kept.push(f),
+        }
+    }
+    let allow_display = cfg
+        .allowlist
+        .as_ref()
+        .map(|p| p.to_string_lossy().into_owned())
+        .unwrap_or_default();
+    for e in &allow {
+        if !e.used {
+            kept.push(Finding::new(
+                "allowlist-stale",
+                format!("{} {}", e.rule, e.key),
+                &allow_display,
+                e.line,
+                format!(
+                    "allowlist entry `{} {}` matches no live finding; \
+                     remove it",
+                    e.rule, e.key
+                ),
+            ));
+        }
+    }
+
+    Ok(Report {
+        findings: kept,
+        suppressed,
+        stats: report::Stats {
+            files: sources.len(),
+            fns: analysis.total_fns,
+            locks: all_locks.len(),
+            edges: analysis.edges.len(),
+            unresolved_acquisitions: analysis.unresolved,
+        },
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn allowlist_parsing() {
+        let text = "# comment\n\nserving-lock serve_slot:x.y -- reason here\n";
+        let entries = parse_allowlist(text).unwrap();
+        assert_eq!(entries.len(), 1);
+        assert_eq!(entries[0].rule, "serving-lock");
+        assert_eq!(entries[0].key, "serve_slot:x.y");
+        assert_eq!(entries[0].line, 3);
+        assert!(parse_allowlist("bad entry no reason\n").is_err());
+        assert!(parse_allowlist("rule key extra -- r\n").is_err());
+    }
+}

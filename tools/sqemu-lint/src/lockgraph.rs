@@ -1,0 +1,1138 @@
+//! Lock-acquisition graph extraction and checking.
+//!
+//! The analysis is intra-procedural with one level of summarization:
+//! each function gets the set of canonical locks (`module.field`) it may
+//! acquire, propagated to callers through a fixpoint over a
+//! conservatively-resolved call graph. Nested acquisitions become edges
+//! `held -> acquired`; the checked-in hierarchy (`lock-order.txt`) must
+//! then be a topological order of the observed graph.
+//!
+//! Guard lifetimes follow rustc's rules closely enough for lint
+//! purposes: a `let`-bound guard lives to the end of its enclosing
+//! block, a scrutinee/condition guard lives through the block it opens,
+//! and any other temporary dies at its statement's semicolon. `drop(g)`
+//! releases early.
+
+use crate::report::Finding;
+use crate::scan::{
+    count_newlines, find_words, ident_at, is_ident, skip_ws, skip_ws_back,
+    word_at, SourceFile,
+};
+use std::collections::{BTreeMap, BTreeSet, HashMap, HashSet};
+
+/// Stable identity of a top-level function: file, name, starting line.
+#[derive(Debug, Clone, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct FnKey {
+    pub file: String,
+    pub name: String,
+    pub start_line: usize,
+}
+
+#[derive(Debug, Clone)]
+pub struct Edge {
+    pub frm: String,
+    pub to: String,
+    pub file: String,
+    pub line: usize,
+    /// Callee name when the inner acquisition happens transitively.
+    pub via: Option<String>,
+}
+
+#[derive(Debug, Default)]
+pub struct FnEvents {
+    /// (canonical lock, line) for each acquisition in this body.
+    pub acquisitions: Vec<(String, usize)>,
+    /// Direct nesting edges observed inside this body.
+    pub edges: Vec<Edge>,
+    /// (callee, locks held at the call, line).
+    pub calls: Vec<(FnKey, Vec<String>, usize)>,
+    pub unresolved: usize,
+}
+
+pub struct LockAnalysis {
+    /// Deduped by (from, to); first observation wins.
+    pub edges: Vec<Edge>,
+    /// Fixpoint lock summaries (direct + transitive) per function.
+    pub summaries: HashMap<FnKey, BTreeSet<String>>,
+    pub unresolved: usize,
+    pub total_fns: usize,
+}
+
+/// Control-flow / std names that look like calls but never resolve.
+const KEYWORDS: &[&str] = &[
+    "if", "while", "match", "for", "loop", "return", "fn", "let", "move",
+    "in", "as", "else", "Some", "Ok", "Err", "None", "Box", "Arc", "Vec",
+    "String", "assert", "debug_assert",
+];
+
+/// Method names std/collections also provide: a receiver-qualified call
+/// or a global-unique fallback must never resolve these to a tree
+/// function of the same name (same-file `self.x()` still resolves).
+const STOPLIST: &[&str] = &[
+    "clear", "insert", "remove", "get", "get_mut", "len", "is_empty",
+    "push", "pop", "iter", "iter_mut", "drain", "entry", "contains",
+    "contains_key", "extend", "take", "replace", "send", "recv", "clone",
+    "lock", "read", "write", "flush", "wait", "wait_timeout", "notify",
+    "notify_all", "notify_one", "join", "spawn", "store", "load", "swap",
+    "fetch_add", "fetch_max", "compare_exchange", "next", "last", "first",
+    "count", "find", "position", "retain", "abs", "min", "max", "new",
+    "default", "with_capacity",
+];
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+enum AcqKind {
+    Unpoisoned,
+    Lock,
+    Read,
+    Write,
+}
+
+#[derive(Debug)]
+struct Acq {
+    start: usize,
+    end: usize,
+    recv: String,
+    kind: AcqKind,
+}
+
+#[derive(Debug, PartialEq)]
+enum Recv {
+    Bare,
+    SelfOnly,
+    Qualified,
+}
+
+#[derive(Debug)]
+struct Call {
+    start: usize,
+    name: String,
+    recv: Recv,
+}
+
+/// Receiver-chain byte: `[A-Za-z0-9_.\[\]]`.
+fn is_chain(b: u8) -> bool {
+    is_ident(b) || b == b'.' || b == b'[' || b == b']'
+}
+
+/// `mut` keyword followed by whitespace; returns the post-ws offset.
+fn eat_mut(s: &[u8], i: usize) -> usize {
+    if word_at(s, i, "mut") {
+        let j = skip_ws(s, i + 3);
+        if j > i + 3 {
+            return j;
+        }
+    }
+    i
+}
+
+/// All lock acquisitions in a flattened segment, in source order.
+/// Matches `lock_unpoisoned(&self.field)` and `chain.lock()` /
+/// `chain.read()` / `chain.write()` (empty argument lists only).
+fn acq_matches(flat: &[u8]) -> Vec<Acq> {
+    let mut out: Vec<Acq> = Vec::new();
+    for p in find_words(flat, "lock_unpoisoned") {
+        let open = p + "lock_unpoisoned".len();
+        if open >= flat.len() || flat[open] != b'(' {
+            continue;
+        }
+        let mut i = skip_ws(flat, open + 1);
+        if i < flat.len() && flat[i] == b'&' {
+            i = skip_ws(flat, i + 1);
+        }
+        i = eat_mut(flat, i);
+        let start_cap = i;
+        let mut k = i;
+        while k < flat.len() && (is_chain(flat[k]) || flat[k].is_ascii_whitespace())
+        {
+            k += 1;
+        }
+        if k >= flat.len() || flat[k] != b')' {
+            continue;
+        }
+        let recv = String::from_utf8_lossy(&flat[start_cap..k])
+            .trim()
+            .to_string();
+        if recv.is_empty() {
+            continue;
+        }
+        out.push(Acq {
+            start: p,
+            end: k + 1,
+            recv,
+            kind: AcqKind::Unpoisoned,
+        });
+    }
+    for (method, kind) in [
+        ("lock", AcqKind::Lock),
+        ("read", AcqKind::Read),
+        ("write", AcqKind::Write),
+    ] {
+        for p in find_words(flat, method) {
+            let after = skip_ws(flat, p + method.len());
+            if after >= flat.len() || flat[after] != b'(' {
+                continue;
+            }
+            let close = skip_ws(flat, after + 1);
+            if close >= flat.len() || flat[close] != b')' {
+                continue;
+            }
+            let b = skip_ws_back(flat, p);
+            if b == 0 || flat[b - 1] != b'.' {
+                continue;
+            }
+            let c = skip_ws_back(flat, b - 1);
+            let mut d = c;
+            while d > 0 && is_chain(flat[d - 1]) {
+                d -= 1;
+            }
+            if d == c {
+                continue;
+            }
+            out.push(Acq {
+                start: d,
+                end: close + 1,
+                recv: String::from_utf8_lossy(&flat[d..c]).into_owned(),
+                kind,
+            });
+        }
+    }
+    out.sort_by_key(|a| a.start);
+    let mut merged: Vec<Acq> = Vec::new();
+    for a in out {
+        let overlaps = match merged.last() {
+            Some(prev) => a.start < prev.end,
+            None => false,
+        };
+        if !overlaps {
+            merged.push(a);
+        }
+    }
+    merged
+}
+
+/// All call sites `name(`, `self.name(`, `recv.name(` in a segment.
+fn call_matches(flat: &[u8]) -> Vec<Call> {
+    let mut out = Vec::new();
+    let mut i = 0usize;
+    while i < flat.len() {
+        if !is_ident(flat[i]) || (i > 0 && is_ident(flat[i - 1])) {
+            i += 1;
+            continue;
+        }
+        let Some((j, name)) = ident_at(flat, i) else {
+            i += 1;
+            continue;
+        };
+        let k = skip_ws(flat, j);
+        if k >= flat.len() || flat[k] != b'(' {
+            i = j;
+            continue;
+        }
+        let b = skip_ws_back(flat, i);
+        let (recv, start) = if b > 0 && flat[b - 1] == b'.' {
+            let c = skip_ws_back(flat, b - 1);
+            let mut d = c;
+            while d > 0 && is_chain(flat[d - 1]) {
+                d -= 1;
+            }
+            if d == c {
+                (Recv::Bare, i)
+            } else if &flat[d..c] == b"self" {
+                (Recv::SelfOnly, d)
+            } else {
+                (Recv::Qualified, d)
+            }
+        } else {
+            (Recv::Bare, i)
+        };
+        out.push(Call { start, name, recv });
+        i = j;
+    }
+    out
+}
+
+/// `^\s*let\s+(mut\s+)?NAME\s*(:[^=]+)?=` — the variable a statement
+/// binds, used to decide whether an acquisition outlives its statement.
+fn let_binding(flat: &[u8]) -> Option<String> {
+    let i = skip_ws(flat, 0);
+    if !word_at(flat, i, "let") {
+        return None;
+    }
+    let mut j = skip_ws(flat, i + 3);
+    if j == i + 3 {
+        return None;
+    }
+    j = eat_mut(flat, j);
+    let (end, name) = ident_at(flat, j)?;
+    let mut m = skip_ws(flat, end);
+    if m < flat.len() && flat[m] == b':' {
+        m += 1;
+        let start = m;
+        while m < flat.len() && flat[m] != b'=' {
+            m += 1;
+        }
+        if m == start {
+            return None;
+        }
+    }
+    if m < flat.len() && flat[m] == b'=' {
+        Some(name)
+    } else {
+        None
+    }
+}
+
+/// `let g = &self.field` at offset `p` of the `let`; returns (var, field).
+fn parse_alias_let(flat: &[u8], p: usize) -> Option<(String, String)> {
+    let mut i = skip_ws(flat, p + 3);
+    if i == p + 3 {
+        return None;
+    }
+    i = eat_mut(flat, i);
+    let (end, var) = ident_at(flat, i)?;
+    let mut j = skip_ws(flat, end);
+    if j >= flat.len() || flat[j] != b'=' {
+        return None;
+    }
+    j = skip_ws(flat, j + 1);
+    if j < flat.len() && flat[j] == b'&' {
+        j = skip_ws(flat, j + 1);
+    }
+    j = eat_mut(flat, j);
+    if !word_at(flat, j, "self") {
+        return None;
+    }
+    j = skip_ws(flat, j + 4);
+    if j >= flat.len() || flat[j] != b'.' {
+        return None;
+    }
+    j = skip_ws(flat, j + 1);
+    let (_, field) = ident_at(flat, j)?;
+    Some((var, field))
+}
+
+/// `for v in &self.field` at offset `p` of the `for`.
+fn parse_alias_for(flat: &[u8], p: usize) -> Option<(String, String)> {
+    let i = skip_ws(flat, p + 3);
+    if i == p + 3 {
+        return None;
+    }
+    let (end, var) = ident_at(flat, i)?;
+    let j = skip_ws(flat, end);
+    if j == end || !word_at(flat, j, "in") {
+        return None;
+    }
+    let mut k = skip_ws(flat, j + 2);
+    if k == j + 2 {
+        return None;
+    }
+    if k < flat.len() && flat[k] == b'&' {
+        k = skip_ws(flat, k + 1);
+    }
+    if !word_at(flat, k, "self") {
+        return None;
+    }
+    k = skip_ws(flat, k + 4);
+    if k >= flat.len() || flat[k] != b'.' {
+        return None;
+    }
+    k = skip_ws(flat, k + 1);
+    let (_, field) = ident_at(flat, k)?;
+    Some((var, field))
+}
+
+/// `self.field.iter()...|v|` at offset `p` of the `self`.
+fn parse_alias_iter(flat: &[u8], p: usize) -> Option<(String, String)> {
+    let mut i = skip_ws(flat, p + 4);
+    if i >= flat.len() || flat[i] != b'.' {
+        return None;
+    }
+    i = skip_ws(flat, i + 1);
+    let (e1, field) = ident_at(flat, i)?;
+    let mut j = skip_ws(flat, e1);
+    if j >= flat.len() || flat[j] != b'.' {
+        return None;
+    }
+    j = skip_ws(flat, j + 1);
+    if !word_at(flat, j, "iter") || j + 6 > flat.len() || &flat[j + 4..j + 6] != b"()"
+    {
+        return None;
+    }
+    let mut k = j + 6;
+    while k < flat.len() && flat[k] != b'|' {
+        k += 1;
+    }
+    if k >= flat.len() {
+        return None;
+    }
+    k = skip_ws(flat, k + 1);
+    k = eat_mut(flat, k);
+    let (e2, var) = ident_at(flat, k)?;
+    let m = skip_ws(flat, e2);
+    if m >= flat.len() || flat[m] != b'|' {
+        return None;
+    }
+    Some((var, field))
+}
+
+/// Aliases that make a later `guard.lock()` resolvable to a field:
+/// `let g = &self.field;`, `for f in &self.files`, and
+/// `self.files.iter()...|f| ...`.
+fn collect_aliases(
+    flat: &[u8],
+    sf: &SourceFile,
+    aliases: &mut HashMap<String, String>,
+) {
+    let kinds: [(&str, fn(&[u8], usize) -> Option<(String, String)>); 3] = [
+        ("let", parse_alias_let),
+        ("for", parse_alias_for),
+        ("self", parse_alias_iter),
+    ];
+    for (word, parse) in kinds {
+        for p in find_words(flat, word) {
+            if let Some((var, field)) = parse(flat, p) {
+                if sf.lock_fields.contains_key(&field) {
+                    aliases.insert(var, field);
+                }
+            }
+        }
+    }
+}
+
+/// Variables released early via `drop(var)`.
+fn drop_vars(flat: &[u8]) -> Vec<String> {
+    let mut out = Vec::new();
+    for p in find_words(flat, "drop") {
+        let i = skip_ws(flat, p + 4);
+        if i >= flat.len() || flat[i] != b'(' {
+            continue;
+        }
+        let j = skip_ws(flat, i + 1);
+        let Some((end, var)) = ident_at(flat, j) else { continue };
+        let k = skip_ws(flat, end);
+        if k < flat.len() && flat[k] == b')' {
+            out.push(var);
+        }
+    }
+    out
+}
+
+/// True when the rest of the statement after an acquisition is only
+/// `.unwrap()` / `.expect(..)` / `.unwrap_or_else(..)` chains — i.e.
+/// the `let` really binds the guard, not something derived from it.
+fn allowed_suffix(s: &[u8]) -> bool {
+    let scan_no_parens = |s: &[u8], mut b: usize| -> usize {
+        while b < s.len() && s[b] != b'(' && s[b] != b')' {
+            b += 1;
+        }
+        b
+    };
+    let mut i = 0usize;
+    loop {
+        let save = i;
+        let j = skip_ws(s, i);
+        let mut matched = false;
+        if j < s.len() && s[j] == b'.' {
+            let k = skip_ws(s, j + 1);
+            if word_at(s, k, "unwrap") {
+                let a = skip_ws(s, k + 6);
+                if a < s.len() && s[a] == b'(' {
+                    let b = skip_ws(s, a + 1);
+                    if b < s.len() && s[b] == b')' {
+                        i = b + 1;
+                        matched = true;
+                    }
+                }
+            } else if word_at(s, k, "expect") {
+                let a = skip_ws(s, k + 6);
+                if a < s.len() && s[a] == b'(' {
+                    let b = scan_no_parens(s, a + 1);
+                    if b < s.len() && s[b] == b')' {
+                        i = b + 1;
+                        matched = true;
+                    }
+                }
+            } else if word_at(s, k, "unwrap_or_else") {
+                let a = skip_ws(s, k + 14);
+                if a < s.len() && s[a] == b'(' {
+                    let mut b = scan_no_parens(s, a + 1);
+                    if b < s.len() && s[b] == b'(' {
+                        b = scan_no_parens(s, b + 1);
+                        if b < s.len() && s[b] == b')' {
+                            b = scan_no_parens(s, b + 1);
+                        }
+                    }
+                    if b < s.len() && s[b] == b')' {
+                        i = b + 1;
+                        matched = true;
+                    }
+                }
+            }
+        }
+        if !matched {
+            i = save;
+            break;
+        }
+    }
+    let j = skip_ws(s, i);
+    let j = if j < s.len() && s[j] == b';' {
+        skip_ws(s, j + 1)
+    } else {
+        j
+    };
+    j == s.len()
+}
+
+/// Remove innermost `[...]` groups (applied twice for one nesting level).
+fn strip_bracket_groups_once(s: &str) -> String {
+    let b = s.as_bytes();
+    let mut out = Vec::with_capacity(b.len());
+    let mut i = 0usize;
+    while i < b.len() {
+        if b[i] == b'[' {
+            let mut j = i + 1;
+            let mut close = None;
+            while j < b.len() {
+                if b[j] == b'[' {
+                    break;
+                }
+                if b[j] == b']' {
+                    close = Some(j);
+                    break;
+                }
+                j += 1;
+            }
+            if let Some(j) = close {
+                i = j + 1;
+                continue;
+            }
+        }
+        out.push(b[i]);
+        i += 1;
+    }
+    String::from_utf8_lossy(&out).into_owned()
+}
+
+/// Map an acquisition receiver to a lock field of this file's struct:
+/// `self.field`, a `let`/`for`/closure alias of one, or a bare field
+/// name. Index expressions (`self.shards[i]`) are stripped first.
+fn resolve_receiver(
+    recv: &str,
+    aliases: &HashMap<String, String>,
+    sf: &SourceFile,
+) -> Option<String> {
+    let r = recv.trim().trim_start_matches(['&', '*']).trim().to_string();
+    let r = strip_bracket_groups_once(&r);
+    let r = strip_bracket_groups_once(&r);
+    let parts: Vec<&str> = r
+        .split('.')
+        .map(|p| p.trim())
+        .filter(|p| !p.is_empty())
+        .collect();
+    if parts.is_empty() {
+        return None;
+    }
+    if parts[0] == "self" && parts.len() >= 2 {
+        let f = parts[1];
+        return sf.lock_fields.contains_key(f).then(|| f.to_string());
+    }
+    if parts.len() == 1 {
+        let v = parts[0];
+        if let Some(f) = aliases.get(v) {
+            return Some(f.clone());
+        }
+        if sf.lock_fields.contains_key(v) {
+            return Some(v.to_string());
+        }
+    }
+    None
+}
+
+/// Conservative call resolution. Same-file definitions win for bare and
+/// `self.` calls; otherwise only a globally unique name resolves, and a
+/// name std types also provide (STOPLIST) never resolves through a
+/// receiver or the global-unique fallback.
+fn resolve_call(
+    name: &str,
+    recv: &Recv,
+    sf_rel: &str,
+    fn_index: &HashMap<String, Vec<FnKey>>,
+) -> Option<FnKey> {
+    let cands = fn_index.get(name)?;
+    if cands.is_empty() {
+        return None;
+    }
+    match recv {
+        Recv::Bare | Recv::SelfOnly => {
+            if let Some(same) = cands.iter().find(|k| k.file == sf_rel) {
+                return Some(same.clone());
+            }
+            if STOPLIST.contains(&name) {
+                return None;
+            }
+            if cands.len() == 1 {
+                return Some(cands[0].clone());
+            }
+            None
+        }
+        Recv::Qualified => {
+            if STOPLIST.contains(&name) {
+                return None;
+            }
+            if cands.len() == 1 {
+                return Some(cands[0].clone());
+            }
+            None
+        }
+    }
+}
+
+struct Guard {
+    canon: String,
+    var: Option<String>,
+    bind_depth: i64,
+}
+
+/// One pass over a function body: segment-at-a-time (segments split at
+/// `;` / `{` / `}` at any depth), tracking held guards across segments.
+fn walk_fn(
+    sf: &SourceFile,
+    f: &crate::scan::FnInfo,
+    fn_index: &HashMap<String, Vec<FnKey>>,
+) -> FnEvents {
+    let mut events = FnEvents::default();
+    if sf.in_test(f.start_line) {
+        return events;
+    }
+    let body = &sf.code[f.body..=f.end.min(sf.code.len() - 1)];
+    let body_line0 = sf.line_of(f.body);
+    let canon = |field: &str| format!("{}.{}", sf.module, field);
+
+    let mut aliases: HashMap<String, String> = HashMap::new();
+    let mut held: Vec<Guard> = Vec::new();
+    let mut depth: i64 = 0;
+    let mut seg_start = 0usize;
+    let mut seg_nl = 0usize;
+    let mut nl = 0usize;
+    let n = body.len();
+    let mut i = 0usize;
+    while i <= n {
+        let ch = if i < n { body[i] } else { b';' };
+        if ch == b'\n' {
+            nl += 1;
+            i += 1;
+            continue;
+        }
+        if ch != b';' && ch != b'{' && ch != b'}' {
+            i += 1;
+            continue;
+        }
+        let seg = &body[seg_start..i];
+        let flat: Vec<u8> = seg
+            .iter()
+            .map(|&b| if b == b'\n' { b' ' } else { b })
+            .collect();
+        let seg_line0 = body_line0 + seg_nl;
+
+        collect_aliases(&flat, sf, &mut aliases);
+        for var in drop_vars(&flat) {
+            held.retain(|h| h.var.as_deref() != Some(var.as_str()));
+        }
+
+        let letm = let_binding(&flat);
+        let mut seg_temps: Vec<Guard> = Vec::new();
+        for acq in acq_matches(&flat) {
+            let field = resolve_receiver(&acq.recv, &aliases, sf);
+            let Some(field) = field else {
+                if matches!(acq.kind, AcqKind::Unpoisoned | AcqKind::Lock) {
+                    events.unresolved += 1;
+                }
+                continue;
+            };
+            let lk = sf.lock_fields.get(&field).map(String::as_str);
+            match acq.kind {
+                AcqKind::Read | AcqKind::Write if lk != Some("RwLock") => continue,
+                AcqKind::Lock | AcqKind::Unpoisoned if lk == Some("RwLock") => {
+                    continue
+                }
+                _ => {}
+            }
+            let line = seg_line0 + count_newlines(&seg[..acq.start.min(seg.len())]);
+            let c = canon(&field);
+            for h in held.iter().chain(seg_temps.iter()) {
+                events.edges.push(Edge {
+                    frm: h.canon.clone(),
+                    to: c.clone(),
+                    file: sf.rel.clone(),
+                    line,
+                    via: None,
+                });
+            }
+            events.acquisitions.push((c.clone(), line));
+            if letm.is_some() && allowed_suffix(&flat[acq.end.min(flat.len())..]) {
+                held.push(Guard {
+                    canon: c,
+                    var: letm.clone(),
+                    bind_depth: depth,
+                });
+            } else {
+                seg_temps.push(Guard {
+                    canon: c,
+                    var: None,
+                    bind_depth: depth,
+                });
+            }
+        }
+
+        for call in call_matches(&flat) {
+            if KEYWORDS.contains(&call.name.as_str()) {
+                continue;
+            }
+            if call.recv == Recv::Bare {
+                // skip nested `fn name(..)` definitions
+                let e = skip_ws_back(&flat, call.start);
+                if e >= 2 && word_at(&flat, e - 2, "fn") {
+                    continue;
+                }
+            }
+            let Some(callee) = resolve_call(&call.name, &call.recv, &sf.rel, fn_index)
+            else {
+                continue;
+            };
+            let line = seg_line0 + count_newlines(&seg[..call.start.min(seg.len())]);
+            let hold_now: Vec<String> = held
+                .iter()
+                .chain(seg_temps.iter())
+                .map(|h| h.canon.clone())
+                .collect();
+            events.calls.push((callee, hold_now, line));
+        }
+
+        match ch {
+            b'{' => {
+                // Scrutinee / condition guards live through the block.
+                for mut t in seg_temps {
+                    t.bind_depth = depth + 1;
+                    held.push(t);
+                }
+                depth += 1;
+            }
+            b'}' => {
+                depth -= 1;
+                held.retain(|h| h.bind_depth <= depth);
+            }
+            _ => {} // ';' — seg_temps die here
+        }
+        seg_start = i + 1;
+        seg_nl = nl;
+        i += 1;
+    }
+    events
+}
+
+/// Build the full lock analysis for a set of files.
+pub fn analyze(files: &[SourceFile]) -> LockAnalysis {
+    let mut fn_index: HashMap<String, Vec<FnKey>> = HashMap::new();
+    for sf in files {
+        for f in &sf.fns {
+            if !sf.in_test(f.start_line) {
+                fn_index.entry(f.name.clone()).or_default().push(FnKey {
+                    file: sf.rel.clone(),
+                    name: f.name.clone(),
+                    start_line: f.start_line,
+                });
+            }
+        }
+    }
+
+    let mut per_fn: Vec<(FnKey, FnEvents)> = Vec::new();
+    for sf in files {
+        for f in &sf.fns {
+            let key = FnKey {
+                file: sf.rel.clone(),
+                name: f.name.clone(),
+                start_line: f.start_line,
+            };
+            per_fn.push((key, walk_fn(sf, f, &fn_index)));
+        }
+    }
+
+    let mut summaries: HashMap<FnKey, BTreeSet<String>> = per_fn
+        .iter()
+        .map(|(k, v)| {
+            (
+                k.clone(),
+                v.acquisitions.iter().map(|(l, _)| l.clone()).collect(),
+            )
+        })
+        .collect();
+    loop {
+        let mut changed = false;
+        for (k, v) in &per_fn {
+            for (callee, _held, _ln) in &v.calls {
+                let add: Vec<String> = summaries
+                    .get(callee)
+                    .map(|s| s.iter().cloned().collect())
+                    .unwrap_or_default();
+                let mine = summaries.get_mut(k).expect("summary exists");
+                for l in add {
+                    if mine.insert(l) {
+                        changed = true;
+                    }
+                }
+            }
+        }
+        if !changed {
+            break;
+        }
+    }
+
+    let mut edges: Vec<Edge> = Vec::new();
+    for (k, v) in &per_fn {
+        edges.extend(v.edges.iter().cloned());
+        for (callee, held, ln) in &v.calls {
+            if let Some(locks) = summaries.get(callee) {
+                for lock in locks {
+                    for h in held {
+                        edges.push(Edge {
+                            frm: h.clone(),
+                            to: lock.clone(),
+                            file: k.file.clone(),
+                            line: *ln,
+                            via: Some(callee.name.clone()),
+                        });
+                    }
+                }
+            }
+        }
+    }
+
+    let mut seen: HashSet<(String, String)> = HashSet::new();
+    let mut deduped: Vec<Edge> = Vec::new();
+    for e in edges {
+        if seen.insert((e.frm.clone(), e.to.clone())) {
+            deduped.push(e);
+        }
+    }
+
+    let unresolved = per_fn.iter().map(|(_, v)| v.unresolved).sum();
+    LockAnalysis {
+        edges: deduped,
+        summaries,
+        unresolved,
+        total_fns: per_fn.len(),
+    }
+}
+
+/// First cycle in the deduped edge set, as a lock-name path `a -> .. -> a`.
+pub fn find_cycle(edges: &[Edge]) -> Option<Vec<String>> {
+    let mut adj: BTreeMap<&str, BTreeSet<&str>> = BTreeMap::new();
+    for e in edges {
+        adj.entry(&e.frm).or_default().insert(&e.to);
+    }
+    #[derive(Clone, Copy, PartialEq)]
+    enum Color {
+        White,
+        Gray,
+        Black,
+    }
+    fn dfs<'a>(
+        u: &'a str,
+        adj: &BTreeMap<&'a str, BTreeSet<&'a str>>,
+        color: &mut HashMap<&'a str, Color>,
+        stack: &mut Vec<&'a str>,
+    ) -> Option<Vec<String>> {
+        color.insert(u, Color::Gray);
+        stack.push(u);
+        if let Some(next) = adj.get(u) {
+            for &v in next {
+                match color.get(v).copied().unwrap_or(Color::White) {
+                    Color::Gray => {
+                        let pos = stack.iter().position(|&x| x == v).unwrap_or(0);
+                        let mut cyc: Vec<String> =
+                            stack[pos..].iter().map(|s| s.to_string()).collect();
+                        cyc.push(v.to_string());
+                        return Some(cyc);
+                    }
+                    Color::White => {
+                        if let Some(c) = dfs(v, adj, color, stack) {
+                            return Some(c);
+                        }
+                    }
+                    Color::Black => {}
+                }
+            }
+        }
+        stack.pop();
+        color.insert(u, Color::Black);
+        None
+    }
+    let mut color: HashMap<&str, Color> = HashMap::new();
+    let roots: Vec<&str> = adj.keys().copied().collect();
+    for u in roots {
+        if color.get(u).copied().unwrap_or(Color::White) == Color::White {
+            let mut stack = Vec::new();
+            if let Some(c) = dfs(u, &adj, &mut color, &mut stack) {
+                return Some(c);
+            }
+        }
+    }
+    None
+}
+
+/// Parse `lock-order.txt`: `<rank> <lock>` per line, `#` comments.
+pub fn parse_lock_order(text: &str) -> anyhow::Result<Vec<(String, i64)>> {
+    let mut out = Vec::new();
+    for (idx, raw) in text.lines().enumerate() {
+        let line = raw.split('#').next().unwrap_or("").trim();
+        if line.is_empty() {
+            continue;
+        }
+        let mut parts = line.split_whitespace();
+        let (Some(rank), Some(name)) = (parts.next(), parts.next()) else {
+            anyhow::bail!("lock-order.txt:{}: malformed line", idx + 1);
+        };
+        let rank: i64 = rank.parse().map_err(|_| {
+            anyhow::anyhow!("lock-order.txt:{}: bad rank {rank:?}", idx + 1)
+        })?;
+        if parts.next().is_some() {
+            anyhow::bail!("lock-order.txt:{}: trailing tokens", idx + 1);
+        }
+        out.push((name.to_string(), rank));
+    }
+    Ok(out)
+}
+
+/// Check the observed graph against the checked-in hierarchy.
+pub fn hierarchy_findings(
+    order: &[(String, i64)],
+    order_display: &str,
+    all_locks: &BTreeSet<String>,
+    edges: &[Edge],
+) -> Vec<Finding> {
+    let ranks: HashMap<&str, i64> =
+        order.iter().map(|(n, r)| (n.as_str(), *r)).collect();
+    let mut out = Vec::new();
+    for lk in all_locks {
+        if !ranks.contains_key(lk.as_str()) {
+            out.push(Finding::new(
+                "lock-unranked",
+                lk.clone(),
+                order_display,
+                0,
+                format!("lock {lk} has no rank in the checked-in hierarchy"),
+            ));
+        }
+    }
+    for (name, _) in order {
+        if !all_locks.contains(name) {
+            out.push(Finding::new(
+                "rank-stale",
+                name.clone(),
+                order_display,
+                0,
+                format!("ranked lock {name} no longer exists in the tree"),
+            ));
+        }
+    }
+    let mut sorted: Vec<&Edge> = edges.iter().collect();
+    sorted.sort_by(|a, b| (&a.frm, &a.to).cmp(&(&b.frm, &b.to)));
+    for e in sorted {
+        let key = format!("{}->{}", e.frm, e.to);
+        let via = e
+            .via
+            .as_ref()
+            .map(|v| format!(" via {v}()"))
+            .unwrap_or_default();
+        if e.frm == e.to {
+            out.push(Finding::new(
+                "lock-self-edge",
+                key,
+                &e.file,
+                e.line,
+                format!("{} re-acquired while already held{via}", e.frm),
+            ));
+        } else if let (Some(rf), Some(rt)) =
+            (ranks.get(e.frm.as_str()), ranks.get(e.to.as_str()))
+        {
+            if rf >= rt {
+                out.push(Finding::new(
+                    "lock-order",
+                    key,
+                    &e.file,
+                    e.line,
+                    format!(
+                        "{}(rank {rf}) acquired before {}(rank {rt}){via}: \
+                         violates the lock hierarchy",
+                        e.frm, e.to
+                    ),
+                ));
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn file(rel: &str, src: &str) -> SourceFile {
+        SourceFile::parse(rel, src.as_bytes())
+    }
+
+    #[test]
+    fn acq_matcher_forms() {
+        let flat = b"let g = self.files.lock().unwrap(); let h = lock_unpoisoned(&self.index); x.read()";
+        let acqs = acq_matches(flat);
+        let recvs: Vec<&str> = acqs.iter().map(|a| a.recv.as_str()).collect();
+        assert_eq!(recvs, vec!["self.files", "self.index", "x"]);
+        assert_eq!(acqs[1].kind, AcqKind::Unpoisoned);
+    }
+
+    #[test]
+    fn allowed_suffix_forms() {
+        assert!(allowed_suffix(b".unwrap()"));
+        assert!(allowed_suffix(b".expect(\"poisoned\") "));
+        assert!(allowed_suffix(b".unwrap_or_else(PoisonError::into_inner)"));
+        assert!(allowed_suffix(b""));
+        assert!(!allowed_suffix(b".unwrap().len"));
+        assert!(!allowed_suffix(b" + 1"));
+    }
+
+    const STRUCT_AB: &str = "struct S {\n    a: Mutex<u8>,\n    b: Mutex<u8>,\n}\n";
+
+    #[test]
+    fn direct_nesting_produces_edge() {
+        let src = format!(
+            "{STRUCT_AB}\
+             impl S {{\n\
+                 fn f(&self) {{\n\
+                     let g = self.a.lock().unwrap();\n\
+                     let h = self.b.lock().unwrap();\n\
+                     drop(h);\n\
+                     drop(g);\n\
+                 }}\n\
+             }}\n"
+        );
+        let sf = file("m.rs", &src);
+        let a = analyze(&[sf]);
+        assert_eq!(a.edges.len(), 1);
+        assert_eq!(a.edges[0].frm, "m.a");
+        assert_eq!(a.edges[0].to, "m.b");
+    }
+
+    #[test]
+    fn guard_scope_ends_at_block() {
+        let src = format!(
+            "{STRUCT_AB}\
+             impl S {{\n\
+                 fn f(&self) {{\n\
+                     {{\n\
+                         let g = self.a.lock().unwrap();\n\
+                         let _x = *g;\n\
+                     }}\n\
+                     let h = self.b.lock().unwrap();\n\
+                     let _y = *h;\n\
+                 }}\n\
+             }}\n"
+        );
+        let sf = file("m.rs", &src);
+        let a = analyze(&[sf]);
+        assert!(a.edges.is_empty(), "edges: {:?}", a.edges);
+    }
+
+    #[test]
+    fn transitive_edge_via_callee_summary() {
+        let src = format!(
+            "{STRUCT_AB}\
+             impl S {{\n\
+                 fn inner(&self) {{\n\
+                     let g = self.b.lock().unwrap();\n\
+                     let _ = *g;\n\
+                 }}\n\
+                 fn outer(&self) {{\n\
+                     let g = self.a.lock().unwrap();\n\
+                     self.inner();\n\
+                     drop(g);\n\
+                 }}\n\
+             }}\n"
+        );
+        let sf = file("m.rs", &src);
+        let a = analyze(&[sf]);
+        let has = a
+            .edges
+            .iter()
+            .any(|e| e.frm == "m.a" && e.to == "m.b" && e.via.as_deref() == Some("inner"));
+        assert!(has, "edges: {:?}", a.edges);
+    }
+
+    #[test]
+    fn stoplist_blocks_receiver_resolution() {
+        // `x.clear()` must not resolve to a tree fn named `clear` in
+        // another file even when globally unique.
+        let f1 = file(
+            "a.rs",
+            "struct A {\n\
+                 l: Mutex<u8>,\n\
+             }\n\
+             impl A {\n\
+                 fn clear(&self) {\n\
+                     let g = self.l.lock().unwrap();\n\
+                     let _ = *g;\n\
+                 }\n\
+             }\n",
+        );
+        let f2 = file(
+            "b.rs",
+            "struct B {\n\
+                 m: Mutex<u8>,\n\
+             }\n\
+             impl B {\n\
+                 fn f(&self, x: &mut Vec<u8>) {\n\
+                     let g = self.m.lock().unwrap();\n\
+                     x.clear();\n\
+                     drop(g);\n\
+                 }\n\
+             }\n",
+        );
+        let a = analyze(&[f1, f2]);
+        assert!(
+            a.edges.iter().all(|e| !(e.frm == "b.m" && e.to == "a.l")),
+            "edges: {:?}",
+            a.edges
+        );
+    }
+
+    #[test]
+    fn cycle_detection() {
+        let mk = |frm: &str, to: &str| Edge {
+            frm: frm.into(),
+            to: to.into(),
+            file: "x.rs".into(),
+            line: 1,
+            via: None,
+        };
+        assert!(find_cycle(&[mk("a", "b"), mk("b", "c")]).is_none());
+        let cyc = find_cycle(&[mk("a", "b"), mk("b", "a")]).expect("cycle");
+        assert_eq!(cyc.first(), cyc.last());
+    }
+
+    #[test]
+    fn hierarchy_rank_violation() {
+        let order = vec![("m.a".to_string(), 10), ("m.b".to_string(), 20)];
+        let locks: BTreeSet<String> =
+            ["m.a".to_string(), "m.b".to_string()].into_iter().collect();
+        let bad = Edge {
+            frm: "m.b".into(),
+            to: "m.a".into(),
+            file: "m.rs".into(),
+            line: 4,
+            via: None,
+        };
+        let f = hierarchy_findings(&order, "lock-order.txt", &locks, &[bad]);
+        assert_eq!(f.len(), 1);
+        assert_eq!(f[0].rule, "lock-order");
+        assert_eq!(f[0].key, "m.b->m.a");
+    }
+}

@@ -1,0 +1,80 @@
+//! CLI: `cargo run -p sqemu-lint [-- --root <repo> --json <out.json>]`
+//!
+//! Exit codes: 0 clean, 1 findings, 2 usage/configuration error.
+
+use sqemu_lint::Config;
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+fn main() -> ExitCode {
+    let mut root = PathBuf::from(".");
+    let mut json: Option<PathBuf> = None;
+    let mut args = std::env::args().skip(1);
+    while let Some(a) = args.next() {
+        match a.as_str() {
+            "--root" => {
+                let Some(v) = args.next() else {
+                    eprintln!("sqemu-lint: --root needs a path");
+                    return ExitCode::from(2);
+                };
+                root = PathBuf::from(v);
+            }
+            "--json" => {
+                let Some(v) = args.next() else {
+                    eprintln!("sqemu-lint: --json needs a path");
+                    return ExitCode::from(2);
+                };
+                json = Some(PathBuf::from(v));
+            }
+            "--help" | "-h" => {
+                println!(
+                    "sqemu-lint — fleet invariant analyzer\n\n\
+                     USAGE: sqemu-lint [--root <repo>] [--json <out.json>]\n\n\
+                     Checks rust/src against the lock hierarchy \
+                     (tools/sqemu-lint/lock-order.txt), durability \
+                     annotations, and panic/serving cones. Exceptions: \
+                     tools/sqemu-lint/allowlist.txt."
+                );
+                return ExitCode::SUCCESS;
+            }
+            other => {
+                eprintln!("sqemu-lint: unknown argument {other:?}");
+                return ExitCode::from(2);
+            }
+        }
+    }
+
+    let cfg = Config::for_tree(&root);
+    if !cfg.src_dir.is_dir() {
+        eprintln!(
+            "sqemu-lint: {} is not a directory (run from the repo root \
+             or pass --root)",
+            cfg.src_dir.display()
+        );
+        return ExitCode::from(2);
+    }
+
+    match sqemu_lint::run_with(&cfg) {
+        Ok(report) => {
+            print!("{}", report.render_text());
+            if let Some(path) = json {
+                if let Err(e) = std::fs::write(&path, report.render_json()) {
+                    eprintln!(
+                        "sqemu-lint: writing {}: {e}",
+                        path.display()
+                    );
+                    return ExitCode::from(2);
+                }
+            }
+            if report.is_clean() {
+                ExitCode::SUCCESS
+            } else {
+                ExitCode::FAILURE
+            }
+        }
+        Err(e) => {
+            eprintln!("sqemu-lint: error: {e:#}");
+            ExitCode::from(2)
+        }
+    }
+}

@@ -1,0 +1,187 @@
+//! Findings, the aggregate report, and its JSON serialization.
+
+use std::fmt::Write as _;
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Finding {
+    /// Rule slug, e.g. `lock-order`, `panic-cone`, `durability-unpaired`.
+    pub rule: String,
+    /// Line-number-free identity used for allowlist matching.
+    pub key: String,
+    pub file: String,
+    pub line: usize,
+    pub message: String,
+}
+
+impl Finding {
+    pub fn new(
+        rule: &str,
+        key: String,
+        file: &str,
+        line: usize,
+        message: String,
+    ) -> Finding {
+        Finding {
+            rule: rule.to_string(),
+            key,
+            file: file.to_string(),
+            line,
+            message,
+        }
+    }
+}
+
+#[derive(Debug, Default, Clone)]
+pub struct Stats {
+    pub files: usize,
+    pub fns: usize,
+    pub locks: usize,
+    pub edges: usize,
+    pub unresolved_acquisitions: usize,
+}
+
+#[derive(Debug, Default)]
+pub struct Report {
+    /// Findings that fail the build.
+    pub findings: Vec<Finding>,
+    /// Findings matched (and justified) by the allowlist.
+    pub suppressed: Vec<Finding>,
+    pub stats: Stats,
+}
+
+impl Report {
+    pub fn is_clean(&self) -> bool {
+        self.findings.is_empty()
+    }
+
+    /// Human-readable listing for the terminal / CI log.
+    pub fn render_text(&self) -> String {
+        let mut out = String::new();
+        let s = &self.stats;
+        let _ = writeln!(
+            out,
+            "sqemu-lint: {} files, {} fns, {} locks, {} lock edges \
+             ({} unresolved acquisitions)",
+            s.files, s.fns, s.locks, s.edges, s.unresolved_acquisitions
+        );
+        for f in &self.findings {
+            let _ = writeln!(
+                out,
+                "error[{}]: {} ({}:{}) [key: {}]",
+                f.rule, f.message, f.file, f.line, f.key
+            );
+        }
+        for f in &self.suppressed {
+            let _ = writeln!(
+                out,
+                "allowed[{}]: {} ({}:{})",
+                f.rule, f.message, f.file, f.line
+            );
+        }
+        if self.findings.is_empty() {
+            let _ = writeln!(
+                out,
+                "OK: no findings ({} allowlisted)",
+                self.suppressed.len()
+            );
+        } else {
+            let _ = writeln!(
+                out,
+                "FAIL: {} finding(s) ({} allowlisted)",
+                self.findings.len(),
+                self.suppressed.len()
+            );
+        }
+        out
+    }
+
+    /// JSON artifact for CI upload. Hand-rolled: the tool is std-only.
+    pub fn render_json(&self) -> String {
+        let mut out = String::new();
+        out.push_str("{\n  \"stats\": {");
+        let s = &self.stats;
+        let _ = write!(
+            out,
+            "\"files\": {}, \"fns\": {}, \"locks\": {}, \"edges\": {}, \
+             \"unresolved_acquisitions\": {}",
+            s.files, s.fns, s.locks, s.edges, s.unresolved_acquisitions
+        );
+        out.push_str("},\n");
+        let section = |name: &str, list: &[Finding]| -> String {
+            let mut buf = String::new();
+            let _ = write!(buf, "  \"{name}\": [");
+            for (i, f) in list.iter().enumerate() {
+                if i > 0 {
+                    buf.push(',');
+                }
+                let _ = write!(
+                    buf,
+                    "\n    {{\"rule\": {}, \"key\": {}, \"file\": {}, \
+                     \"line\": {}, \"message\": {}}}",
+                    json_str(&f.rule),
+                    json_str(&f.key),
+                    json_str(&f.file),
+                    f.line,
+                    json_str(&f.message)
+                );
+            }
+            if !list.is_empty() {
+                buf.push_str("\n  ");
+            }
+            buf.push(']');
+            buf
+        };
+        out.push_str(&section("findings", &self.findings));
+        out.push_str(",\n");
+        out.push_str(&section("suppressed", &self.suppressed));
+        out.push_str("\n}\n");
+        out
+    }
+}
+
+/// Minimal JSON string escaping (quotes, backslash, control chars).
+pub fn json_str(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            '\r' => out.push_str("\\r"),
+            c if (c as u32) < 0x20 => {
+                let _ = write!(out, "\\u{:04x}", c as u32);
+            }
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn json_escapes() {
+        assert_eq!(json_str("a\"b\\c\nd"), "\"a\\\"b\\\\c\\nd\"");
+    }
+
+    #[test]
+    fn json_shape() {
+        let mut r = Report::default();
+        r.findings.push(Finding::new(
+            "lock-order",
+            "a->b".to_string(),
+            "x.rs",
+            3,
+            "bad".to_string(),
+        ));
+        let j = r.render_json();
+        assert!(j.contains("\"rule\": \"lock-order\""));
+        assert!(j.contains("\"line\": 3"));
+        assert!(j.contains("\"suppressed\": []"));
+    }
+}

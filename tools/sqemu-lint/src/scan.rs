@@ -1,0 +1,663 @@
+//! Source scanning: comment/string stripping and the per-file model
+//! (functions, lock fields, test spans, `// lint:` annotations).
+//!
+//! Everything downstream works on `code` — the original text with
+//! comments and string/char literals blanked to spaces (newlines kept),
+//! so byte offsets and line numbers always refer to the real file.
+//! The mirror image, `comments`, keeps only comment text and is where
+//! annotations are read from, so an annotation can never be spoofed
+//! from inside a string literal (nor a lock hidden inside a comment).
+
+use std::collections::{BTreeMap, HashMap};
+
+/// Identifier byte: `[A-Za-z0-9_]`.
+pub fn is_ident(b: u8) -> bool {
+    b == b'_' || b.is_ascii_alphanumeric()
+}
+
+/// Advance past ASCII whitespace.
+pub fn skip_ws(s: &[u8], mut i: usize) -> usize {
+    while i < s.len() && s[i].is_ascii_whitespace() {
+        i += 1;
+    }
+    i
+}
+
+/// Walk backwards past ASCII whitespace. Returns the index one past the
+/// last non-whitespace byte at or before `i` (i.e. an exclusive end).
+pub fn skip_ws_back(s: &[u8], mut i: usize) -> usize {
+    while i > 0 && s[i - 1].is_ascii_whitespace() {
+        i -= 1;
+    }
+    i
+}
+
+/// Parse an identifier starting exactly at `i`; returns (end, name).
+pub fn ident_at(s: &[u8], i: usize) -> Option<(usize, String)> {
+    let mut j = i;
+    while j < s.len() && is_ident(s[j]) {
+        j += 1;
+    }
+    if j == i {
+        return None;
+    }
+    Some((j, String::from_utf8_lossy(&s[i..j]).into_owned()))
+}
+
+/// Is `word` present at offset `i` with word boundaries on both sides?
+pub fn word_at(s: &[u8], i: usize, word: &str) -> bool {
+    let w = word.as_bytes();
+    if i + w.len() > s.len() || &s[i..i + w.len()] != w {
+        return false;
+    }
+    if i > 0 && is_ident(s[i - 1]) {
+        return false;
+    }
+    if i + w.len() < s.len() && is_ident(s[i + w.len()]) {
+        return false;
+    }
+    true
+}
+
+/// Offsets of all word-boundary occurrences of `word` in `s`.
+pub fn find_words(s: &[u8], word: &str) -> Vec<usize> {
+    let mut out = Vec::new();
+    if word.is_empty() || s.len() < word.len() {
+        return out;
+    }
+    for i in 0..=s.len() - word.len() {
+        if word_at(s, i, word) {
+            out.push(i);
+        }
+    }
+    out
+}
+
+pub fn count_newlines(s: &[u8]) -> usize {
+    s.iter().filter(|&&b| b == b'\n').count()
+}
+
+/// Blank comments and string/char literals out of `text`.
+///
+/// Returns `(code, comments)`, both the same byte length as the input:
+/// `code` keeps code bytes (literal/comment bytes become spaces),
+/// `comments` keeps comment bytes (everything else becomes spaces).
+/// Newlines survive in both so line numbers stay aligned.
+pub fn strip_code(text: &[u8]) -> (Vec<u8>, Vec<u8>) {
+    #[derive(PartialEq)]
+    enum Mode {
+        Code,
+        LineComment,
+        BlockComment,
+        Str,
+        RawStr,
+    }
+    let n = text.len();
+    let mut code = Vec::with_capacity(n);
+    let mut comments = Vec::with_capacity(n);
+    let mut mode = Mode::Code;
+    let mut block_depth = 0usize;
+    let mut raw_hashes = 0usize;
+    let mut i = 0usize;
+    while i < n {
+        let c = text[i];
+        let nxt = if i + 1 < n { text[i + 1] } else { 0 };
+        match mode {
+            Mode::Code => {
+                if c == b'/' && nxt == b'/' {
+                    mode = Mode::LineComment;
+                    code.extend_from_slice(b"  ");
+                    comments.extend_from_slice(b"//");
+                    i += 2;
+                    continue;
+                }
+                if c == b'/' && nxt == b'*' {
+                    mode = Mode::BlockComment;
+                    block_depth = 1;
+                    code.extend_from_slice(b"  ");
+                    comments.extend_from_slice(b"  ");
+                    i += 2;
+                    continue;
+                }
+                if c == b'"' || (c == b'b' && nxt == b'"') {
+                    if c == b'b' {
+                        code.push(b'b');
+                        comments.push(b' ');
+                        i += 1;
+                    }
+                    mode = Mode::Str;
+                    code.push(b'"');
+                    comments.push(b' ');
+                    i += 1;
+                    continue;
+                }
+                if c == b'r' && (nxt == b'"' || nxt == b'#') {
+                    let mut j = i + 1;
+                    let mut h = 0usize;
+                    while j < n && text[j] == b'#' {
+                        h += 1;
+                        j += 1;
+                    }
+                    if j < n && text[j] == b'"' {
+                        raw_hashes = h;
+                        mode = Mode::RawStr;
+                        for k in i..=j {
+                            code.push(if text[k] == b'\n' { b'\n' } else { b' ' });
+                            comments.push(b' ');
+                        }
+                        i = j + 1;
+                        continue;
+                    }
+                }
+                if c == b'\'' {
+                    // Char literal ('x', '\n', '\u{..}') vs lifetime ('a).
+                    let j = i + 1;
+                    if j < n && text[j] == b'\\' {
+                        let mut k = j + 1;
+                        while k < n && text[k] != b'\'' {
+                            k += 1;
+                        }
+                        let stop = (k + 1).min(n);
+                        for _ in i..stop {
+                            code.push(b' ');
+                            comments.push(b' ');
+                        }
+                        i = k + 1;
+                        continue;
+                    }
+                    if j + 1 < n && text[j + 1] == b'\'' {
+                        code.extend_from_slice(b"   ");
+                        comments.extend_from_slice(b"   ");
+                        i = j + 2;
+                        continue;
+                    }
+                    // Lifetime: keep the quote (harmless to downstream).
+                    code.push(b'\'');
+                    comments.push(b' ');
+                    i += 1;
+                    continue;
+                }
+                code.push(c);
+                comments.push(if c == b'\n' { b'\n' } else { b' ' });
+                i += 1;
+            }
+            Mode::LineComment => {
+                if c == b'\n' {
+                    mode = Mode::Code;
+                    code.push(b'\n');
+                    comments.push(b'\n');
+                } else {
+                    code.push(b' ');
+                    comments.push(c);
+                }
+                i += 1;
+            }
+            Mode::BlockComment => {
+                if c == b'/' && nxt == b'*' {
+                    block_depth += 1;
+                    code.extend_from_slice(b"  ");
+                    comments.extend_from_slice(b"  ");
+                    i += 2;
+                    continue;
+                }
+                if c == b'*' && nxt == b'/' {
+                    block_depth -= 1;
+                    code.extend_from_slice(b"  ");
+                    comments.extend_from_slice(b"  ");
+                    i += 2;
+                    if block_depth == 0 {
+                        mode = Mode::Code;
+                    }
+                    continue;
+                }
+                code.push(if c == b'\n' { b'\n' } else { b' ' });
+                comments.push(c);
+                i += 1;
+            }
+            Mode::Str => {
+                if c == b'\\' {
+                    if nxt == b'\n' {
+                        code.extend_from_slice(b" \n");
+                        comments.extend_from_slice(b" \n");
+                    } else {
+                        // Escape at EOF still emits two bytes in Python's
+                        // reference; clamp so lengths match the input.
+                        let take = if i + 1 < n { 2 } else { 1 };
+                        for _ in 0..take {
+                            code.push(b' ');
+                            comments.push(b' ');
+                        }
+                    }
+                    i += 2;
+                    continue;
+                }
+                if c == b'"' {
+                    mode = Mode::Code;
+                    code.push(b'"');
+                    comments.push(b' ');
+                    i += 1;
+                    continue;
+                }
+                code.push(if c == b'\n' { b'\n' } else { b' ' });
+                comments.push(if c == b'\n' { b'\n' } else { b' ' });
+                i += 1;
+            }
+            Mode::RawStr => {
+                if c == b'"' {
+                    let mut j = i + 1;
+                    let mut h = 0usize;
+                    while j < n && text[j] == b'#' && h < raw_hashes {
+                        h += 1;
+                        j += 1;
+                    }
+                    if h == raw_hashes {
+                        mode = Mode::Code;
+                        for _ in i..j {
+                            code.push(b' ');
+                            comments.push(b' ');
+                        }
+                        i = j;
+                        continue;
+                    }
+                }
+                code.push(if c == b'\n' { b'\n' } else { b' ' });
+                comments.push(if c == b'\n' { b'\n' } else { b' ' });
+                i += 1;
+            }
+        }
+    }
+    (code, comments)
+}
+
+#[derive(Debug, Clone)]
+pub struct FnInfo {
+    pub name: String,
+    /// Byte offset of the `fn` keyword in `code`.
+    pub start: usize,
+    /// Byte offset of the body's `{`.
+    pub body: usize,
+    /// Byte offset of the body's matching `}`.
+    pub end: usize,
+    pub start_line: usize,
+    pub end_line: usize,
+}
+
+pub struct SourceFile {
+    /// Path relative to the source root, e.g. `coordinator/server.rs`.
+    pub rel: String,
+    /// Module path used in canonical lock names, e.g. `coordinator/server`
+    /// (`/mod` collapsed to the directory name).
+    pub module: String,
+    pub code: Vec<u8>,
+    pub code_lines: Vec<String>,
+    pub comment_lines: Vec<String>,
+    /// 1-based inclusive line spans of `#[cfg(test)]` items.
+    pub test_spans: Vec<(usize, usize)>,
+    pub fns: Vec<FnInfo>,
+    /// Lock field name -> "Mutex" | "RwLock".
+    pub lock_fields: BTreeMap<String, String>,
+    /// Code line -> `// lint:` annotations attached to it.
+    pub annotations: HashMap<usize, Vec<(String, String)>>,
+    /// Byte offsets of every `\n` in `code`, for offset->line lookups.
+    newline_pos: Vec<usize>,
+}
+
+impl SourceFile {
+    pub fn parse(rel: &str, text: &[u8]) -> SourceFile {
+        let (code, comments) = strip_code(text);
+        let mut module = rel.strip_suffix(".rs").unwrap_or(rel).to_string();
+        if let Some(m) = module.strip_suffix("/mod") {
+            module = m.to_string();
+        }
+        let to_lines = |buf: &[u8]| -> Vec<String> {
+            String::from_utf8_lossy(buf)
+                .split('\n')
+                .map(|l| l.to_string())
+                .collect()
+        };
+        let code_lines = to_lines(&code);
+        let comment_lines = to_lines(&comments);
+        let newline_pos: Vec<usize> = code
+            .iter()
+            .enumerate()
+            .filter(|(_, &b)| b == b'\n')
+            .map(|(i, _)| i)
+            .collect();
+        let mut sf = SourceFile {
+            rel: rel.to_string(),
+            module,
+            code,
+            code_lines,
+            comment_lines,
+            test_spans: Vec::new(),
+            fns: Vec::new(),
+            lock_fields: BTreeMap::new(),
+            annotations: HashMap::new(),
+            newline_pos,
+        };
+        sf.test_spans = sf.find_test_spans();
+        sf.fns = sf.find_functions();
+        sf.lock_fields = sf.find_lock_fields();
+        sf.annotations = sf.find_annotations();
+        sf
+    }
+
+    /// 1-based line number of a byte offset into `code`.
+    pub fn line_of(&self, offset: usize) -> usize {
+        self.newline_pos.partition_point(|&p| p < offset) + 1
+    }
+
+    pub fn in_test(&self, line: usize) -> bool {
+        self.test_spans.iter().any(|&(a, b)| a <= line && line <= b)
+    }
+
+    fn find_test_spans(&self) -> Vec<(usize, usize)> {
+        let mut spans = Vec::new();
+        let lines = &self.code_lines;
+        for (idx, line) in lines.iter().enumerate() {
+            if !line.contains("#[cfg(test)]") {
+                continue;
+            }
+            let mut j = idx;
+            while j < lines.len() && !lines[j].contains('{') {
+                j += 1;
+            }
+            if j >= lines.len() {
+                continue;
+            }
+            let mut depth: i64 = 0;
+            for (k, lk) in lines.iter().enumerate().skip(j) {
+                depth += lk.matches('{').count() as i64;
+                depth -= lk.matches('}').count() as i64;
+                if depth <= 0 {
+                    spans.push((idx + 1, k + 1));
+                    break;
+                }
+            }
+        }
+        spans
+    }
+
+    fn find_functions(&self) -> Vec<FnInfo> {
+        let code = &self.code;
+        let mut fns: Vec<FnInfo> = Vec::new();
+        for p in find_words(code, "fn") {
+            // `fn` then at least one whitespace byte, then the name.
+            let q = skip_ws(code, p + 2);
+            if q == p + 2 {
+                continue;
+            }
+            let Some((name_end, name)) = ident_at(code, q) else {
+                continue;
+            };
+            // Body start: the next `{` before any `;` (skips trait decls).
+            let mut j = name_end;
+            let mut body = None;
+            while j < code.len() {
+                match code[j] {
+                    b';' => break,
+                    b'{' => {
+                        body = Some(j);
+                        break;
+                    }
+                    _ => j += 1,
+                }
+            }
+            let Some(body) = body else { continue };
+            let mut depth: i64 = 0;
+            let mut k = body;
+            while k < code.len() {
+                match code[k] {
+                    b'{' => depth += 1,
+                    b'}' => {
+                        depth -= 1;
+                        if depth == 0 {
+                            break;
+                        }
+                    }
+                    _ => {}
+                }
+                k += 1;
+            }
+            fns.push(FnInfo {
+                name,
+                start: p,
+                body,
+                end: k,
+                start_line: self.line_of(p),
+                end_line: self.line_of(k),
+            });
+        }
+        // Drop fns nested inside another fn's body: only the outermost
+        // definitions take part in call resolution.
+        let keep: Vec<bool> = fns
+            .iter()
+            .map(|f| {
+                !fns.iter()
+                    .any(|g| g.start < f.start && g.end > f.end)
+            })
+            .collect();
+        fns.into_iter()
+            .zip(keep)
+            .filter(|(_, k)| *k)
+            .map(|(f, _)| f)
+            .collect()
+    }
+
+    /// Match a struct-field lock declaration on one line:
+    /// `^\s*(pub(...)?\s+)?NAME\s*:\s*(Arc<)?(Vec<)?(Mutex|RwLock)<`.
+    fn lock_field_on_line(line: &str) -> Option<(String, String)> {
+        let s = line.as_bytes();
+        let mut i = skip_ws(s, 0);
+        if word_at(s, i, "pub") {
+            let mut j = i + 3;
+            if j < s.len() && s[j] == b'(' {
+                j += 1;
+                while j < s.len()
+                    && (s[j].is_ascii_lowercase() || s[j] == b'_' || s[j] == b':')
+                {
+                    j += 1;
+                }
+                if j >= s.len() || s[j] != b')' {
+                    return None;
+                }
+                j += 1;
+            }
+            let k = skip_ws(s, j);
+            if k == j {
+                return None; // need whitespace after `pub` / `pub(..)`
+            }
+            i = k;
+        }
+        let (mut j, name) = ident_at(s, i)?;
+        j = skip_ws(s, j);
+        if j >= s.len() || s[j] != b':' {
+            return None;
+        }
+        j = skip_ws(s, j + 1);
+        let rest = &s[j..];
+        let rest = rest.strip_prefix(b"Arc<").unwrap_or(rest);
+        let rest = rest.strip_prefix(b"Vec<").unwrap_or(rest);
+        if rest.starts_with(b"Mutex<") {
+            Some((name, "Mutex".to_string()))
+        } else if rest.starts_with(b"RwLock<") {
+            Some((name, "RwLock".to_string()))
+        } else {
+            None
+        }
+    }
+
+    fn find_lock_fields(&self) -> BTreeMap<String, String> {
+        let mut fields = BTreeMap::new();
+        for (idx, line) in self.code_lines.iter().enumerate() {
+            let ln = idx + 1;
+            if self.in_test(ln) {
+                continue;
+            }
+            if self
+                .fns
+                .iter()
+                .any(|f| f.start_line <= ln && ln <= f.end_line)
+            {
+                continue;
+            }
+            if let Some((name, kind)) = Self::lock_field_on_line(line) {
+                fields.insert(name, kind);
+            }
+        }
+        fields
+    }
+
+    /// All `lint: name(arg)` annotations in one comment line.
+    fn annotations_on_line(line: &str) -> Vec<(String, String)> {
+        let s = line.as_bytes();
+        let mut out = Vec::new();
+        let mut i = 0usize;
+        while i + 5 <= s.len() {
+            if &s[i..i + 5] != b"lint:" {
+                i += 1;
+                continue;
+            }
+            let mut j = skip_ws(s, i + 5);
+            let name_start = j;
+            while j < s.len() && (s[j].is_ascii_lowercase() || s[j] == b'-') {
+                j += 1;
+            }
+            if j == name_start {
+                i += 5;
+                continue;
+            }
+            let name = String::from_utf8_lossy(&s[name_start..j]).into_owned();
+            let mut arg = String::new();
+            if j < s.len() && s[j] == b'(' {
+                let arg_start = j + 1;
+                let mut k = arg_start;
+                while k < s.len()
+                    && (s[k].is_ascii_lowercase()
+                        || s[k].is_ascii_digit()
+                        || s[k] == b'_'
+                        || s[k] == b'-')
+                {
+                    k += 1;
+                }
+                if k > arg_start && k < s.len() && s[k] == b')' {
+                    arg = String::from_utf8_lossy(&s[arg_start..k]).into_owned();
+                    j = k + 1;
+                }
+            }
+            out.push((name, arg));
+            i = j;
+        }
+        out
+    }
+
+    fn find_annotations(&self) -> HashMap<usize, Vec<(String, String)>> {
+        let mut anns: HashMap<usize, Vec<(String, String)>> = HashMap::new();
+        let mut pending: Vec<(String, String)> = Vec::new();
+        for idx in 0..self.comment_lines.len() {
+            let ln = idx + 1;
+            let found = Self::annotations_on_line(&self.comment_lines[idx]);
+            let has_code = !self.code_lines[idx].trim().is_empty();
+            if !found.is_empty() && has_code {
+                anns.entry(ln).or_default().extend(found);
+            } else if !found.is_empty() {
+                pending.extend(found);
+            } else if has_code && !pending.is_empty() {
+                anns.entry(ln).or_default().extend(std::mem::take(&mut pending));
+            }
+        }
+        anns
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn strip_preserves_length_and_blanks_strings() {
+        let src = br#"let s = "a // not a comment"; // real comment"#;
+        let (code, comments) = strip_code(src);
+        assert_eq!(code.len(), src.len());
+        assert_eq!(comments.len(), src.len());
+        let code_s = String::from_utf8_lossy(&code).into_owned();
+        assert!(!code_s.contains("not a comment"));
+        assert!(code_s.contains("let s"));
+        let com_s = String::from_utf8_lossy(&comments).into_owned();
+        assert!(com_s.contains("real comment"));
+    }
+
+    #[test]
+    fn strip_handles_nested_block_comments_and_raw_strings() {
+        let src = b"a /* x /* y */ z */ b r#\"quote \" inside\"# c";
+        let (code, _) = strip_code(src);
+        let code_s = String::from_utf8_lossy(&code).into_owned();
+        assert!(code_s.contains('a'));
+        assert!(code_s.contains('b'));
+        assert!(code_s.contains('c'));
+        assert!(!code_s.contains('y'));
+        assert!(!code_s.contains("inside"));
+    }
+
+    #[test]
+    fn strip_char_literals_but_not_lifetimes() {
+        let src = b"match c { '{' => 1, _ => 0 }; fn f<'a>(x: &'a u8) {}";
+        let (code, _) = strip_code(src);
+        let code_s = String::from_utf8_lossy(&code).into_owned();
+        // The '{' literal must not unbalance brace matching.
+        let opens = code_s.matches('{').count();
+        let closes = code_s.matches('}').count();
+        assert_eq!(opens, closes);
+        assert!(code_s.contains("'a"));
+    }
+
+    #[test]
+    fn lock_field_parsing() {
+        let cases = [
+            ("    files: Mutex<HashMap<u32, File>>,", Some(("files", "Mutex"))),
+            ("    pub l1: RwLock<Vec<u64>>,", Some(("l1", "RwLock"))),
+            ("    pub(crate) inner: Mutex<Inner>,", Some(("inner", "Mutex"))),
+            ("    shards: Vec<Mutex<Shard>>,", Some(("shards", "Mutex"))),
+            ("    index: Arc<Mutex<Index>>,", Some(("index", "Mutex"))),
+            ("    name: String,", None),
+            ("    // files: Mutex<...> in a comment", None),
+        ];
+        for (line, want) in cases {
+            let got = SourceFile::lock_field_on_line(line);
+            match want {
+                Some((f, k)) => {
+                    let (gf, gk) = got.expect(line);
+                    assert_eq!((gf.as_str(), gk.as_str()), (f, k), "{line}");
+                }
+                None => assert!(got.is_none(), "{line}"),
+            }
+        }
+    }
+
+    #[test]
+    fn annotations_attach_to_next_code_line() {
+        let src = b"// lint: durable-before(job)\nstore.persist(&rec);\nlet x = 1; // lint: mutates(job)\n";
+        let sf = SourceFile::parse("a.rs", src);
+        assert_eq!(
+            sf.annotations.get(&2),
+            Some(&vec![("durable-before".to_string(), "job".to_string())])
+        );
+        assert_eq!(
+            sf.annotations.get(&3),
+            Some(&vec![("mutates".to_string(), "job".to_string())])
+        );
+    }
+
+    #[test]
+    fn fn_spans_and_test_spans() {
+        let src = b"fn outer(a: u8) -> u8 {\n    let f = |x: u8| x + 1;\n    f(a)\n}\n\n#[cfg(test)]\nmod tests {\n    #[test]\n    fn inner() { assert!(true); }\n}\n";
+        let sf = SourceFile::parse("m.rs", src);
+        let names: Vec<&str> = sf.fns.iter().map(|f| f.name.as_str()).collect();
+        assert!(names.contains(&"outer"));
+        let outer = sf.fns.iter().find(|f| f.name == "outer").unwrap();
+        assert_eq!(outer.start_line, 1);
+        assert_eq!(outer.end_line, 4);
+        assert!(sf.in_test(9));
+        assert!(!sf.in_test(1));
+    }
+}

@@ -1,0 +1,156 @@
+//! Fixture tests proving every lint class fires (and stays quiet on a
+//! clean tree), plus the real-tree gate: the checked-in rust/src must
+//! analyze clean against the checked-in hierarchy and allowlist.
+
+use sqemu_lint::{run_with, Config, Report};
+use std::path::{Path, PathBuf};
+
+fn fixture(name: &str) -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("fixtures")
+        .join(name)
+}
+
+fn run_fixture(name: &str, tweak: impl FnOnce(&mut Config)) -> Report {
+    let dir = fixture(name);
+    let mut cfg = Config::bare(dir.join("src"));
+    let order = dir.join("lock-order.txt");
+    if order.exists() {
+        cfg.lock_order = Some(order);
+    }
+    let allow = dir.join("allowlist.txt");
+    if allow.exists() {
+        cfg.allowlist = Some(allow);
+    }
+    tweak(&mut cfg);
+    run_with(&cfg).expect("fixture analysis runs")
+}
+
+fn rules(report: &Report) -> Vec<&str> {
+    report.findings.iter().map(|f| f.rule.as_str()).collect()
+}
+
+#[test]
+fn cycle_fixture_reports_lock_cycle() {
+    let r = run_fixture("cycle", |_| {});
+    assert_eq!(rules(&r), vec!["lock-cycle"], "{:#?}", r.findings);
+    let f = &r.findings[0];
+    assert!(f.key.contains("m.a") && f.key.contains("m.b"), "{f:?}");
+}
+
+#[test]
+fn order_fixture_reports_hierarchy_violations() {
+    let r = run_fixture("order", |_| {});
+    let rs = rules(&r);
+    assert!(rs.contains(&"lock-order"), "{:#?}", r.findings);
+    assert!(rs.contains(&"lock-unranked"), "{:#?}", r.findings);
+    assert!(rs.contains(&"rank-stale"), "{:#?}", r.findings);
+    assert_eq!(r.findings.len(), 3, "{:#?}", r.findings);
+    let order = r.findings.iter().find(|f| f.rule == "lock-order").unwrap();
+    assert_eq!(order.key, "m.a->m.b");
+    let unranked = r.findings.iter().find(|f| f.rule == "lock-unranked").unwrap();
+    assert_eq!(unranked.key, "m.c");
+    let stale = r.findings.iter().find(|f| f.rule == "rank-stale").unwrap();
+    assert_eq!(stale.key, "m.zz");
+}
+
+#[test]
+fn durability_fixture_reports_each_case_once() {
+    let r = run_fixture("durability", |cfg| {
+        cfg.dur_dirs = vec!["control/".to_string()];
+    });
+    let mut rs = rules(&r);
+    rs.sort_unstable();
+    assert_eq!(
+        rs,
+        vec![
+            "durability-flip-unflagged",
+            "durability-missing-flush",
+            "durability-unannotated",
+            "durability-unpaired",
+        ],
+        "{:#?}",
+        r.findings
+    );
+    for (rule, fun) in [
+        ("durability-unannotated", "unannotated"),
+        ("durability-unpaired", "unpaired"),
+        ("durability-flip-unflagged", "flip_unflagged"),
+        ("durability-missing-flush", "flip_unflushed"),
+    ] {
+        let f = r.findings.iter().find(|f| f.rule == rule).unwrap();
+        assert_eq!(f.key, format!("control/store.rs:{fun}"), "{f:?}");
+    }
+}
+
+#[test]
+fn cones_fixture_reports_panic_and_index() {
+    let r = run_fixture("cones", |cfg| {
+        cfg.panic_files = vec!["recover.rs".to_string()];
+        cfg.index_files = vec!["recover.rs".to_string()];
+    });
+    let mut rs = rules(&r);
+    rs.sort_unstable();
+    assert_eq!(rs, vec!["index-cone", "panic-cone"], "{:#?}", r.findings);
+    for f in &r.findings {
+        assert_eq!(f.key, "recover.rs:recover_index", "{f:?}");
+    }
+}
+
+#[test]
+fn serving_fixture_reports_transitive_lock() {
+    let r = run_fixture("serving", |cfg| {
+        cfg.serving_file = "shard.rs".to_string();
+        cfg.serving_fns = vec!["serve".to_string()];
+    });
+    assert_eq!(rules(&r), vec!["serving-lock"], "{:#?}", r.findings);
+    assert_eq!(r.findings[0].key, "serve:shard.stash");
+}
+
+#[test]
+fn allowlist_suppresses_and_flags_stale_entries() {
+    let r = run_fixture("allow_stale", |cfg| {
+        cfg.serving_file = "shard.rs".to_string();
+        cfg.serving_fns = vec!["serve".to_string()];
+    });
+    assert_eq!(rules(&r), vec!["allowlist-stale"], "{:#?}", r.findings);
+    assert!(r.findings[0].key.contains("m.x->m.y"), "{:?}", r.findings[0]);
+    assert_eq!(r.suppressed.len(), 1, "{:#?}", r.suppressed);
+    assert_eq!(r.suppressed[0].rule, "serving-lock");
+}
+
+#[test]
+fn clean_fixture_has_no_findings() {
+    let r = run_fixture("clean", |cfg| {
+        cfg.dur_dirs = vec![String::new()];
+    });
+    assert!(r.findings.is_empty(), "{:#?}", r.findings);
+    assert!(r.suppressed.is_empty(), "{:#?}", r.suppressed);
+    assert_eq!(r.stats.locks, 2);
+    assert_eq!(r.stats.edges, 1);
+}
+
+/// The gate the CI job enforces: the real tree, with its checked-in
+/// hierarchy and allowlist, must be clean — and the allowlist must be
+/// fully live (exactly the serve_slot stash exception).
+#[test]
+fn real_tree_is_clean() {
+    let root = Path::new(env!("CARGO_MANIFEST_DIR")).join("../..");
+    let cfg = Config::for_tree(&root);
+    let report = run_with(&cfg).expect("real-tree analysis runs");
+    assert!(
+        report.findings.is_empty(),
+        "sqemu-lint findings on the real tree:\n{:#?}",
+        report.findings
+    );
+    assert_eq!(
+        report.suppressed.len(),
+        1,
+        "expected exactly the serve_slot stash exception:\n{:#?}",
+        report.suppressed
+    );
+    assert_eq!(report.suppressed[0].rule, "serving-lock");
+    assert_eq!(report.suppressed[0].key, "serve_slot:coordinator/ring.stash");
+    assert!(report.stats.locks >= 25, "stats: {:?}", report.stats);
+    assert!(report.stats.edges >= 10, "stats: {:?}", report.stats);
+}

@@ -179,6 +179,41 @@ fn run(total_vms: usize, wave: usize, threads: usize) -> Outcome {
         shard_wakeups: shards.iter().map(|s| s.wakeups).sum(),
         shard_passes: shards.iter().map(|s| s.passes).sum(),
     };
+    // the telemetry registry must agree with the private tally above:
+    // re-derive device-time utilization from the Prometheus scrape and
+    // hold the two within 1% (they read the same schedulers, so any
+    // divergence is an exporter bug, not noise)
+    let text = coord.telemetry().render();
+    let sum_family = |name: &str| -> u64 {
+        text.lines()
+            .filter(|l| l.starts_with(name) && l.contains('{'))
+            .map(|l| {
+                l.split_whitespace()
+                    .nth(1)
+                    .and_then(|v| v.parse::<u64>().ok())
+                    .unwrap_or_else(|| panic!("unparsable scrape line: {l}"))
+            })
+            .sum()
+    };
+    let reg_busy = sum_family("sqemu_iosched_busy_ns_total");
+    let reg_fresh = sum_family("sqemu_iosched_fresh_bytes_total");
+    assert!(reg_busy > 0, "registry exported no device-busy time");
+    let reg_xfer = cost.io_ns(reg_fresh) - cost.io_ns(0);
+    let reg_util = reg_xfer as f64 / reg_busy as f64;
+    let divergence =
+        (reg_util - outcome.utilization).abs() / outcome.utilization.max(1e-9);
+    println!(
+        "telemetry cross-check: registry utilization {reg_util:.4} vs tallied \
+         {:.4} ({:.3}% divergence)",
+        outcome.utilization,
+        divergence * 100.0,
+    );
+    assert!(
+        divergence <= 0.01,
+        "registry-derived utilization diverges from the private tally by \
+         {:.3}% (> 1%)",
+        divergence * 100.0,
+    );
     coord.shutdown();
     outcome
 }

@@ -550,15 +550,31 @@ pub fn characterize(args: &Args) -> Result<()> {
 }
 
 pub fn serve(args: &Args) -> Result<()> {
+    use crate::coordinator::server::CoordinatorConfig;
+    use crate::coordinator::NodeSet;
+    use crate::metrics::clock::{CostModel, VirtClock};
+    use crate::storage::node::StorageNode;
     let vms = args.u64_or("vms", 4)?;
     let chain_len = args.u64_or("chain", 50)? as usize;
     let requests = args.u64_or("requests", 2_000)?;
+    let trace_sample = args.u64_or("trace-sample", 0)?;
     let kind = if args.bool("vanilla") {
         DriverKind::Vanilla
     } else {
         DriverKind::Scalable
     };
-    let coord = Coordinator::with_fresh_nodes(3)?;
+    let clock = VirtClock::new();
+    let nodes = (0..3)
+        .map(|i| {
+            StorageNode::new(&format!("node-{i}"), clock.clone(), CostModel::default())
+        })
+        .collect();
+    let coord = Coordinator::new(
+        std::sync::Arc::new(NodeSet::new(nodes)?),
+        clock,
+        CoordinatorConfig { trace_sample, ..Default::default() },
+        RuntimeService::try_default(),
+    );
     println!(
         "coordinator: 3 storage nodes, {vms} x {} VMs on chains of {chain_len}",
         kind.name()
@@ -644,6 +660,21 @@ pub fn serve(args: &Args) -> Result<()> {
             s.passes,
             s.served as f64 / s.passes.max(1) as f64,
             s.wakeups,
+        );
+    }
+    if let Some(path) = args.get("metrics") {
+        std::fs::write(path, coord.telemetry().render())?;
+        println!("metrics scrape written to {path}");
+    }
+    if let Some(path) = args.get("trace") {
+        let ring = coord.trace_ring();
+        std::fs::write(path, ring.to_json())?;
+        println!(
+            "trace dump written to {path} ({} spans buffered of {} recorded, \
+             {} dropped)",
+            ring.len(),
+            ring.total(),
+            ring.dropped(),
         );
     }
     coord.shutdown();
@@ -1044,6 +1075,275 @@ fn print_control_status(st: &crate::control::StoreStatus) {
          flight, clean shutdown: {}",
         st.vms, st.leases, st.jobs, st.migrations, st.clean_shutdown,
     );
+}
+
+/// `sqemu metrics [--vms N] [--nodes K] [--requests R] [--names]
+/// [--out FILE] [--trace FILE]`: run a full-featured fleet — capacity
+/// subsystem on, HA control plane attached, trace sampling, guest load,
+/// a stream job, a live migration and a GC sweep — and emit one
+/// Prometheus-text scrape of the telemetry registry. Every subsystem
+/// exports, so the scrape (and `--names`, the sorted metric-name
+/// inventory CI diffs against `telemetry/metrics.txt`) covers the whole
+/// family set.
+pub fn metrics(args: &Args) -> Result<()> {
+    use crate::control::StateStore;
+    use crate::coordinator::server::CoordinatorConfig;
+    use crate::coordinator::{JobSpec, NodeSet};
+    use crate::metrics::clock::{CostModel, VirtClock};
+    use crate::storage::node::StorageNode;
+    const CS: u64 = 64 << 10;
+    let n_nodes = (args.u64_or("nodes", 2)? as usize).max(2);
+    let vms = (args.u64_or("vms", 8)? as usize).max(2);
+    let requests = args.u64_or("requests", 64)?;
+    let clock = VirtClock::new();
+    let data_nodes = (0..n_nodes)
+        .map(|i| {
+            StorageNode::new(&format!("node-{i}"), clock.clone(), CostModel::default())
+        })
+        .collect();
+    let nodes = std::sync::Arc::new(NodeSet::new(data_nodes)?);
+    // the control log lives off the data plane, on its own metadata node
+    let meta = StorageNode::new("meta-0", clock.clone(), CostModel::default());
+    let store = StateStore::open(std::sync::Arc::clone(&meta))?;
+    let coord = Coordinator::new(
+        std::sync::Arc::clone(&nodes),
+        clock,
+        CoordinatorConfig {
+            capacity: true,
+            trace_sample: 4,
+            lease_ttl_ns: 5_000_000_000,
+            ..Default::default()
+        },
+        None,
+    );
+    coord.attach_control(store, "coord-0")?;
+    coord.campaign()?;
+    for v in 0..vms {
+        let name = format!("vm-{v}");
+        let pin = nodes.pinned(&format!("node-{}", v % n_nodes))?;
+        crate::chaingen::generate(
+            &pin,
+            &ChainSpec {
+                disk_size: 16 << 20,
+                chain_len: 3,
+                populated: 0.3,
+                stamped: true,
+                data_mode: DataMode::Synthetic,
+                prefix: name.clone(),
+                seed: 0x3E7 ^ v as u64,
+                ..Default::default()
+            },
+        )?;
+        coord.launch_vm(
+            &name,
+            VmConfig {
+                driver: DriverKind::Scalable,
+                cache: CacheConfig::new(128, 2 << 20),
+                chain: VmChain::Existing {
+                    active_name: format!("{name}-2"),
+                    data_mode: DataMode::Synthetic,
+                },
+            },
+        )?;
+    }
+    // guest load: zero and duplicate-content cluster writes (dedup
+    // food), vectored bursts (coalescer food), scattered reads
+    let clusters = (16u64 << 20) / CS;
+    for name in coord.vm_names() {
+        let client = coord.client(&name)?;
+        let mut rng = crate::util::rng::Rng::new(fxhash(name.as_bytes()));
+        for i in 0..requests {
+            let vc = rng.below(clusters - 1);
+            match i % 4 {
+                0 => client.write(vc * CS, vec![0u8; CS as usize])?,
+                1 => client.write(vc * CS, vec![(i % 5) as u8 + 1; CS as usize])?,
+                2 => {
+                    let reqs: Vec<(u64, usize)> =
+                        (0..8).map(|k| (vc * CS + k * 4096, 4096)).collect();
+                    client.readv(&reqs)?;
+                }
+                _ => {
+                    client.read(vc * CS, 4096)?;
+                }
+            }
+        }
+        client.flush()?;
+    }
+    // exercise the job, migrate and gc subsystems so their counters move
+    let job = coord.start_job("vm-0", JobSpec::stream(0))?;
+    coord.wait_job(&job);
+    let mig = coord.migrate_vm("vm-1", "node-0", 0)?;
+    let guest = coord.client("vm-1")?;
+    let mut served = 0u64;
+    while !mig.state().is_terminal() {
+        guest.read((served % 32) * 4096, 4096)?;
+        served += 1;
+    }
+    coord.wait_job(&mig);
+    coord.run_gc(0)?;
+    coord.snapshot_vm("vm-0", "vm-0-metrics-snap")?;
+    coord.renew_leases()?;
+
+    let reg = coord.telemetry();
+    if args.bool("names") {
+        // the sorted metric-name inventory (CI diffs this against the
+        // checked-in telemetry/metrics.txt) — nothing else on stdout
+        for n in reg.metric_names() {
+            println!("{n}");
+        }
+    } else {
+        let text = reg.render();
+        match args.get("out") {
+            Some(path) if path != "true" => {
+                std::fs::write(path, &text)?;
+                println!(
+                    "scrape written to {path}: {} families, {} lines, {} VMs, \
+                     {} node(s) + meta",
+                    reg.metric_names().len(),
+                    text.lines().count(),
+                    vms,
+                    n_nodes,
+                );
+            }
+            _ => print!("{text}"),
+        }
+    }
+    if let Some(path) = args.get("trace") {
+        if path != "true" {
+            std::fs::write(path, coord.trace_ring().to_json())?;
+        }
+    }
+    coord.shutdown_clean()?;
+    Ok(())
+}
+
+/// `sqemu top [--vms N] [--iterations I] [--interval-ms MS]`: a live
+/// fleet view refreshed from the telemetry registry while a background
+/// workload runs — per-VM request p50/p99 and throughput counters,
+/// per-node device utilization, per-shard queue depth. Everything shown
+/// comes from [`Registry::gather`]: `top` is a registry consumer, not
+/// another stats path.
+///
+/// [`Registry::gather`]: crate::telemetry::Registry::gather
+pub fn top(args: &Args) -> Result<()> {
+    use std::sync::atomic::{AtomicBool, Ordering};
+    let vms = (args.u64_or("vms", 4)? as usize).max(1);
+    let iterations = args.u64_or("iterations", 5)?;
+    let interval = args.u64_or("interval-ms", 200)?;
+    let coord = Coordinator::with_fresh_nodes(3)?;
+    for v in 0..vms {
+        let name = format!("vm-{v}");
+        coord.launch_vm(
+            &name,
+            VmConfig {
+                driver: DriverKind::Scalable,
+                cache: CacheConfig::new(128, 2 << 20),
+                chain: VmChain::Generate(ChainSpec {
+                    disk_size: 64 << 20,
+                    chain_len: 8,
+                    populated: 0.4,
+                    stamped: true,
+                    data_mode: DataMode::Synthetic,
+                    prefix: name.clone(),
+                    seed: 0x701 ^ v as u64,
+                    ..Default::default()
+                }),
+            },
+        )?;
+    }
+    let stop = std::sync::Arc::new(AtomicBool::new(false));
+    let mut workers = Vec::new();
+    for name in coord.vm_names() {
+        let client = coord.client(&name)?;
+        let stop = std::sync::Arc::clone(&stop);
+        workers.push(std::thread::spawn(move || {
+            let mut rng = crate::util::rng::Rng::new(fxhash(name.as_bytes()));
+            while !stop.load(Ordering::Relaxed) {
+                let voff = rng.below((64 << 20) - (64 << 10));
+                let done = if rng.chance(0.25) {
+                    client.write(voff, vec![0x5A; 512]).is_ok()
+                } else {
+                    client.read(voff, 4096).is_ok()
+                };
+                if !done {
+                    break; // fleet shutting down under us
+                }
+            }
+        }));
+    }
+    for frame in 0..iterations {
+        std::thread::sleep(std::time::Duration::from_millis(interval));
+        let fams = coord.telemetry().gather();
+        println!(
+            "--- sqemu top: frame {}/{iterations}, virtual time {} ---",
+            frame + 1,
+            human_ns(coord.clock.now()),
+        );
+        let reads = family_values(&fams, "sqemu_guest_reads_total");
+        let writes = family_values(&fams, "sqemu_guest_writes_total");
+        let p99 = family_values(&fams, "sqemu_guest_req_p99_ns");
+        let at = |m: &[(String, f64)], key: &str| {
+            m.iter().find(|(k, _)| k == key).map(|(_, v)| *v).unwrap_or(0.0)
+        };
+        println!(
+            "{:<10} {:>10} {:>10} {:>10} {:>10}",
+            "VM", "reads", "writes", "p50_us", "p99_us"
+        );
+        for (vm, p50) in family_values(&fams, "sqemu_guest_req_p50_ns") {
+            println!(
+                "{:<10} {:>10} {:>10} {:>10.1} {:>10.1}",
+                vm,
+                at(&reads, &vm) as u64,
+                at(&writes, &vm) as u64,
+                p50 / 1e3,
+                at(&p99, &vm) / 1e3,
+            );
+        }
+        println!("{:<10} {:>12}", "NODE", "device_util");
+        for (node, util) in family_values(&fams, "sqemu_node_device_utilization") {
+            println!("{:<10} {:>11.1}%", node, util * 100.0);
+        }
+        let shard_vms = family_values(&fams, "sqemu_shard_vms");
+        println!("{:<10} {:>8} {:>8}", "SHARD", "depth", "vms");
+        for (shard, depth) in family_values(&fams, "sqemu_shard_queue_depth") {
+            println!(
+                "{:<10} {:>8} {:>8}",
+                format!("shard-{shard}"),
+                depth as u64,
+                at(&shard_vms, &shard) as u64,
+            );
+        }
+    }
+    stop.store(true, Ordering::Relaxed);
+    for w in workers {
+        let _ = w.join();
+    }
+    coord.shutdown();
+    Ok(())
+}
+
+/// First-label-value -> numeric value for one gathered family, in
+/// sample order (the `top` frame extractor).
+fn family_values(
+    fams: &[crate::telemetry::Family],
+    name: &str,
+) -> Vec<(String, f64)> {
+    use crate::telemetry::SampleValue;
+    let Some(f) = fams.iter().find(|f| f.name == name) else {
+        return Vec::new();
+    };
+    f.samples
+        .iter()
+        .filter_map(|s| {
+            let label =
+                s.labels.first().map(|(_, v)| v.clone()).unwrap_or_default();
+            match &s.value {
+                SampleValue::Counter(v) => Some((label, *v as f64)),
+                SampleValue::Gauge(v) => Some((label, *v)),
+                SampleValue::Histo(_) => None,
+            }
+        })
+        .collect()
 }
 
 /// `sqemu migrate --vm V --to NODE [--rate 64M]`: live-migrate one VM's

@@ -16,7 +16,9 @@
 //! sqemu info    --dir D --name N
 //! sqemu check   --dir D --active N [--repair] # verify; --repair recovers
 //! sqemu characterize [--chains N]             # §3 figures
-//! sqemu serve   [--vms N] [--chain L]         # coordinator demo + ring stats
+//! sqemu serve   [--vms N] [--chain L] [--metrics F] [--trace F] [--trace-sample N]
+//! sqemu metrics [--vms N] [--names] [--out F] [--trace F]  # telemetry scrape
+//! sqemu top     [--vms N] [--iterations I] [--interval-ms MS]  # live fleet view
 //! sqemu migrate --to node-1 [--vm vm-0] [--rate 64M]  # live-migrate a chain
 //! sqemu rebalance [--dry-run] [--threshold 1.5]       # fleet rebalancer
 //! sqemu node status [--nodes N] [--vms V]     # per-node capacity + per-shard queues
@@ -87,6 +89,8 @@ pub fn run(argv: Vec<String>) -> Result<()> {
         "check" => commands::check(&args),
         "characterize" => commands::characterize(&args),
         "serve" => commands::serve(&args),
+        "metrics" => commands::metrics(&args),
+        "top" => commands::top(&args),
         "migrate" => commands::migrate(&args),
         "rebalance" => commands::rebalance(&args),
         "bench" => commands::bench(&args),
@@ -119,7 +123,11 @@ fn print_usage() {
          \n\
          study & demo:\n\
          \x20 characterize [--chains N] [--days N]\n\
-         \x20 serve [--vms N] [--chain L] [--requests R] [--vanilla]\n\
+         \x20 serve [--vms N] [--chain L] [--requests R] [--vanilla] \
+         [--metrics FILE] [--trace FILE] [--trace-sample N]\n\
+         \x20 metrics [--vms N] [--nodes K] [--requests R] [--names] \
+         [--out FILE] [--trace FILE]   # Prometheus-text scrape\n\
+         \x20 top [--vms N] [--iterations I] [--interval-ms MS]   # live fleet view\n\
          \x20 migrate --to node-1 [--vm vm-0] [--rate 64M] [--vms N] [--chain L]\n\
          \x20 rebalance [--dry-run] [--threshold 1.5] [--rate 256M]\n\
          \x20 node status [--nodes N] [--vms V] [--chain L]\n\

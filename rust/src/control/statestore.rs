@@ -283,7 +283,11 @@ impl FleetView {
     }
 }
 
-/// Health/identity summary for `sqemu control status`.
+/// Health/identity summary for `sqemu control status` and the
+/// `sqemu_control_*` telemetry families. The operation counters
+/// (`appends`, `compactions`, `lease_renewals`) count since this store
+/// handle last replayed the log — a `reopen()` (standby tailing,
+/// takeover) restarts them.
 #[derive(Clone, Debug)]
 pub struct StoreStatus {
     pub generation: u64,
@@ -297,6 +301,12 @@ pub struct StoreStatus {
     pub migrations: usize,
     pub wedged: bool,
     pub clean_shutdown: bool,
+    /// Records appended through this handle.
+    pub appends: u64,
+    /// Compactions completed through this handle.
+    pub compactions: u64,
+    /// Lease renewals granted through this handle.
+    pub lease_renewals: u64,
 }
 
 struct Inner {
@@ -308,6 +318,10 @@ struct Inner {
     len: u64,
     since_snapshot: u64,
     appends: u64,
+    /// Compactions completed (telemetry).
+    compactions: u64,
+    /// Lease renewals granted (telemetry).
+    lease_renewals: u64,
     /// A durable write failed: the disk suffix is untrusted until
     /// `reopen()` re-replays it.
     wedged: bool,
@@ -384,6 +398,8 @@ impl StateStore {
             len,
             since_snapshot: 0,
             appends: 0,
+            compactions: 0,
+            lease_renewals: 0,
             wedged: false,
             view,
         })
@@ -488,6 +504,7 @@ impl StateStore {
                 inner.log = log;
                 inner.len = len;
                 inner.since_snapshot = 0;
+                inner.compactions += 1;
                 // the fresh generation replays these records
                 inner.view.records = inner.view.snapshot_records().len() as u64;
                 Ok(())
@@ -616,6 +633,7 @@ impl StateStore {
                 expires_ns,
             },
         )?;
+        inner.lease_renewals += 1;
         self.maybe_compact_locked(&mut inner);
         Ok(expires_ns)
     }
@@ -709,6 +727,9 @@ impl StateStore {
             migrations: inner.view.migrations.len(),
             wedged: inner.wedged,
             clean_shutdown: inner.view.clean_shutdown,
+            appends: inner.appends,
+            compactions: inner.compactions,
+            lease_renewals: inner.lease_renewals,
         }
     }
 }

@@ -52,6 +52,14 @@
 //!   leases) instead of scanning every node;
 //!   [`server::Coordinator::takeover`] is the live-failover analogue
 //!   for a standby coordinator.
+//! * telemetry — the coordinator owns the fleet
+//!   [`crate::telemetry::Registry`] and the span-trace
+//!   [`crate::telemetry::TraceRing`]; `Coordinator::new` registers the
+//!   standard collector set ([`crate::telemetry::fleet`]) so a scrape
+//!   (`sqemu metrics`, `Registry::render`) sees every subsystem without
+//!   any of them growing scrape-side state. Trace-sampled VM slots
+//!   (one per `CoordinatorConfig::trace_sample` launches) record span
+//!   events into executor-owned buffers the stats reaper drains.
 //!
 //! [`FileStore`]: crate::storage::store::FileStore
 

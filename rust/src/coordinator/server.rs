@@ -109,6 +109,11 @@ pub struct CoordinatorConfig {
     /// must wait out the remainder before re-adopting
     /// ([`Coordinator::takeover`]).
     pub lease_ttl_ns: u64,
+    /// Span-trace sampling: every Nth launched VM carries a
+    /// [`crate::telemetry::TraceBuf`] and records request→shard→node hop
+    /// timestamps into the coordinator's trace ring. 0 disables tracing
+    /// (the default); 1 traces every VM.
+    pub trace_sample: u64,
 }
 
 impl Default for CoordinatorConfig {
@@ -121,6 +126,7 @@ impl Default for CoordinatorConfig {
             job_increment_clusters: 32,
             capacity: false,
             lease_ttl_ns: 30_000_000_000,
+            trace_sample: 0,
         }
     }
 }
@@ -286,6 +292,14 @@ pub struct Coordinator {
     /// HA control plane, when attached: write-ahead state log, lease
     /// table and epoch fence ([`Coordinator::attach_control`]).
     control: Mutex<Option<ControlHandle>>,
+    /// The fleet metrics registry ([`crate::telemetry`]): every
+    /// subsystem's collector is registered at construction; `sqemu
+    /// metrics` and the serve scrape hook render it.
+    telemetry: Arc<crate::telemetry::Registry>,
+    /// Shared span-event ring for trace-sampled VMs.
+    trace: Arc<crate::telemetry::TraceRing>,
+    /// Launches seen, for the every-Nth trace-sampling decision.
+    trace_seq: AtomicU64,
 }
 
 impl Coordinator {
@@ -320,7 +334,8 @@ impl Coordinator {
                 )
             })
             .collect();
-        Arc::new(Coordinator {
+        let telemetry = crate::telemetry::Registry::new(Arc::clone(&clock));
+        let coord = Arc::new(Coordinator {
             nodes,
             clock,
             acct: MemoryAccountant::new(),
@@ -334,7 +349,42 @@ impl Coordinator {
             gc,
             dedup: Arc::new(DedupIndex::new()),
             control: Mutex::new(None),
-        })
+            telemetry,
+            trace: crate::telemetry::TraceRing::new(65_536),
+            trace_seq: AtomicU64::new(0),
+        });
+        // collectors hold Weak<Coordinator> / subsystem Arcs, so this
+        // registration after Arc::new creates no cycle
+        crate::telemetry::fleet::register_fleet(&coord);
+        coord
+    }
+
+    /// The fleet metrics registry (`sqemu metrics` renders it).
+    pub fn telemetry(&self) -> &Arc<crate::telemetry::Registry> {
+        &self.telemetry
+    }
+
+    /// The shared span-trace ring (`--trace FILE` dumps it).
+    pub fn trace_ring(&self) -> &Arc<crate::telemetry::TraceRing> {
+        &self.trace
+    }
+
+    /// Every VM's shared stats handle, without a shard barrier — the
+    /// telemetry scrape path (a scrape may lag in-flight deltas by one
+    /// reaper flush, which a monotone exporter can't observe).
+    pub(crate) fn vm_stat_handles(&self) -> Vec<(String, Arc<VmStats>)> {
+        let mut out: Vec<(String, Arc<VmStats>)> = self
+            .vms
+            .iter()
+            .flat_map(|t| {
+                lock_unpoisoned(t)
+                    .iter()
+                    .map(|(name, m)| (name.clone(), Arc::clone(&m.stats)))
+                    .collect::<Vec<_>>()
+            })
+            .collect();
+        out.sort_by(|a, b| a.0.cmp(&b.0));
+        out
     }
 
     /// The fleet dedup index (`sqemu dedup status` reads it).
@@ -586,6 +636,16 @@ impl Coordinator {
             return Err(e);
         }
         let driver = self.build_driver(chain, &cfg);
+        // every-Nth sampling decision is made here, at launch: the slot
+        // either carries a TraceBuf for its whole life or never pays
+        // more than one is_some() branch per request
+        let seq = self.trace_seq.fetch_add(1, Relaxed);
+        let trace = if self.cfg.trace_sample > 0 && seq % self.cfg.trace_sample == 0
+        {
+            Some(crate::telemetry::TraceBuf::new(name, Arc::clone(&self.trace)))
+        } else {
+            None
+        };
         let (reply, rx) = sync_channel(1);
         let adopted = self
             .shards[shard]
@@ -594,6 +654,7 @@ impl Coordinator {
                 driver,
                 rings: Arc::clone(&rings),
                 stats,
+                trace,
                 reply,
             })
             .and_then(|()| {

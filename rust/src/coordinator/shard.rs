@@ -30,8 +30,9 @@ use crate::metrics::clock::VirtClock;
 use crate::metrics::counters::CounterSnapshot;
 use crate::qcow::Chain;
 use crate::storage::iosched::{IoScheduler, MergeWindow};
+use crate::telemetry::trace::TraceBuf;
 use crate::util::Notify;
-use crate::vdisk::{DiskOp, Driver};
+use crate::vdisk::{DiskOp, Driver, VecIoSnapshot};
 use anyhow::{anyhow, Result};
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicU64, Ordering::Relaxed};
@@ -70,6 +71,9 @@ pub(crate) enum ShardControl {
         driver: Box<dyn Driver + Send>,
         rings: Arc<VmRings>,
         stats: Arc<VmStats>,
+        /// Span-event buffer for a trace-sampled VM (`None` for the
+        /// unsampled majority — the label-cardinality rule).
+        trace: Option<crate::telemetry::trace::TraceBuf>,
         reply: SyncSender<Result<()>>,
     },
     /// Stop a VM: serve what its clients already queued, flush, cancel
@@ -218,14 +222,24 @@ struct VmSlot {
     rings: Arc<VmRings>,
     stats: Arc<VmStats>,
     delta: StatsDelta,
+    /// Driver coalescer totals at the last reap — the watermark that
+    /// turns the driver-lifetime `vec_io()` counters into monotone
+    /// deltas on the shared stats (exporter-safe, panic-safe).
+    vec_io_seen: VecIoSnapshot,
+    /// Span-event buffer when this VM is trace-sampled (`None` for the
+    /// unsampled majority: one branch per request, no other cost).
+    trace: Option<TraceBuf>,
     runner: Option<JobRunner>,
     dead: bool,
 }
 
 /// A panic reached this VM: record it, fail its clients, cancel its
 /// job. The slot is removed by the caller; the shard lives on.
+/// Completions the clients could already reap are flushed first — a
+/// mid-pass panic must not make delivered results invisible to stats.
 fn kill_slot(slot: &mut VmSlot) {
     slot.dead = true;
+    reap_slot_stats(slot);
     slot.stats.worker_panics.fetch_add(1, Relaxed);
     slot.rings.mark_dead();
     if let Some(r) = slot.runner.take() {
@@ -236,13 +250,32 @@ fn kill_slot(slot: &mut VmSlot) {
     }
 }
 
-/// Flush a slot's accumulated delta and mirrored ring counters into the
-/// shared stats (the reaper step).
+/// Flush a slot's accumulated delta, mirrored ring counters, coalescer
+/// watermark and pending trace events into the shared state (the reaper
+/// step — the only place per-pass accumulation crosses a lock/atomic).
 fn reap_slot_stats(slot: &mut VmSlot) {
     slot.delta.flush_into(&slot.stats);
+    // the driver's coalescer counters are driver-lifetime totals:
+    // publish the growth since the last reap as a fetch_add, so the
+    // shared counters are monotone (exporter-safe) and never stale
+    // between passes
+    let v = slot.driver.vec_io();
+    let d_ios = v.merged_ios.saturating_sub(slot.vec_io_seen.merged_ios);
+    let d_bytes =
+        v.coalesced_bytes.saturating_sub(slot.vec_io_seen.coalesced_bytes);
+    if d_ios > 0 {
+        slot.stats.merged_ios.fetch_add(d_ios, Relaxed);
+    }
+    if d_bytes > 0 {
+        slot.stats.coalesced_bytes.fetch_add(d_bytes, Relaxed);
+    }
+    slot.vec_io_seen = v;
     slot.stats
         .backpressure
         .store(slot.rings.backpressure.load(Relaxed), Relaxed);
+    if let Some(t) = slot.trace.as_mut() {
+        t.flush();
+    }
 }
 
 fn shard_loop(
@@ -393,13 +426,18 @@ fn handle_control(
     clock: &Arc<VirtClock>,
 ) {
     match c {
-        ShardControl::AddVm { name, driver, rings, stats, reply } => {
+        ShardControl::AddVm { name, driver, rings, stats, trace, reply } => {
+            // the watermark starts at the driver's current totals, so a
+            // re-adopted driver doesn't re-publish its history
+            let vec_io_seen = driver.vec_io();
             vms.push(VmSlot {
                 name,
                 driver,
                 rings,
                 stats,
                 delta: StatsDelta::default(),
+                vec_io_seen,
+                trace,
                 runner: None,
                 dead: false,
             });
@@ -568,36 +606,48 @@ fn serve_slot(slot: &mut VmSlot, clock: &VirtClock) -> u64 {
                 serve_writes(slot, writes, clock);
             }
             SqEntry::Batch { tag, ops, t_enq } => {
+                let t_serve = clock.now();
+                let n_ops = ops.len() as u64;
                 let r = run_batch(&mut *slot.driver, &mut slot.delta, ops);
-                slot.delta.record_latency(clock.now().saturating_sub(t_enq));
+                let done = clock.now();
+                slot.delta.record_latency(done.saturating_sub(t_enq));
+                if let Some(t) = slot.trace.as_mut() {
+                    t.record(tag, "batch", n_ops, t_enq, t_serve, done);
+                }
                 slot.rings.complete(tag, RingReply::Batch(r));
             }
-            SqEntry::Flush { tag, .. } => {
+            SqEntry::Flush { tag, t_enq } => {
                 // a flush completes only after everything before it in
                 // the ring — guaranteed by in-order execution here
+                let t_serve = clock.now();
                 let r = slot.driver.flush();
+                if let Some(t) = slot.trace.as_mut() {
+                    t.record(tag, "flush", 0, t_enq, t_serve, clock.now());
+                }
                 slot.rings.complete(tag, RingReply::Flush(r));
             }
         }
     }
-    // mirror the driver's coalescer counters (a driver-lifetime total,
-    // hence store not add)
-    let v = slot.driver.vec_io();
-    slot.stats.merged_ios.store(v.merged_ios, Relaxed);
-    slot.stats.coalesced_bytes.store(v.coalesced_bytes, Relaxed);
+    // coalescer counters and the StatsDelta are published together by
+    // the per-pass reaper (reap_slot_stats), not here
     slot.rings.wake_reapers();
     served
 }
 
 fn serve_reads(slot: &mut VmSlot, reads: Vec<ReadReq>, clock: &VirtClock) {
+    let t_serve = clock.now();
     if reads.len() == 1 {
         // lone request: the classic scalar path
         let (tag, voff, len, t_enq) = reads.into_iter().next().expect("one read");
         let mut buf = vec![0u8; len];
         let r = slot.driver.read(voff, &mut buf).map(|()| buf);
+        let done = clock.now();
         slot.delta.reads += 1;
         slot.delta.bytes_read += len as u64;
-        slot.delta.record_latency(clock.now().saturating_sub(t_enq));
+        slot.delta.record_latency(done.saturating_sub(t_enq));
+        if let Some(t) = slot.trace.as_mut() {
+            t.record(tag, "read", len as u64, t_enq, t_serve, done);
+        }
         slot.rings.complete(tag, RingReply::Read(r));
         return;
     }
@@ -616,8 +666,12 @@ fn serve_reads(slot: &mut VmSlot, reads: Vec<ReadReq>, clock: &VirtClock) {
             slot.delta.reads += n;
             slot.delta.batched_ops += n;
             for ((tag, _voff, len, t_enq), buf) in reads.into_iter().zip(bufs) {
+                let done = clock.now();
                 slot.delta.bytes_read += len as u64;
-                slot.delta.record_latency(clock.now().saturating_sub(t_enq));
+                slot.delta.record_latency(done.saturating_sub(t_enq));
+                if let Some(t) = slot.trace.as_mut() {
+                    t.record(tag, "read", len as u64, t_enq, t_serve, done);
+                }
                 slot.rings.complete(tag, RingReply::Read(Ok(buf)));
             }
         }
@@ -628,9 +682,13 @@ fn serve_reads(slot: &mut VmSlot, reads: Vec<ReadReq>, clock: &VirtClock) {
             for (tag, voff, len, t_enq) in reads {
                 let mut buf = vec![0u8; len];
                 let r = slot.driver.read(voff, &mut buf).map(|()| buf);
+                let done = clock.now();
                 slot.delta.reads += 1;
                 slot.delta.bytes_read += len as u64;
-                slot.delta.record_latency(clock.now().saturating_sub(t_enq));
+                slot.delta.record_latency(done.saturating_sub(t_enq));
+                if let Some(t) = slot.trace.as_mut() {
+                    t.record(tag, "read", len as u64, t_enq, t_serve, done);
+                }
                 slot.rings.complete(tag, RingReply::Read(r));
             }
         }
@@ -638,14 +696,19 @@ fn serve_reads(slot: &mut VmSlot, reads: Vec<ReadReq>, clock: &VirtClock) {
 }
 
 fn serve_writes(slot: &mut VmSlot, writes: Vec<WriteReq>, clock: &VirtClock) {
+    let t_serve = clock.now();
     if writes.len() == 1 {
         let (tag, voff, data, t_enq) =
             writes.into_iter().next().expect("one write");
         let n = data.len() as u64;
         let r = slot.driver.write(voff, &data);
+        let done = clock.now();
         slot.delta.writes += 1;
         slot.delta.bytes_written += n;
-        slot.delta.record_latency(clock.now().saturating_sub(t_enq));
+        slot.delta.record_latency(done.saturating_sub(t_enq));
+        if let Some(t) = slot.trace.as_mut() {
+            t.record(tag, "write", n, t_enq, t_serve, done);
+        }
         slot.rings.complete(tag, RingReply::Write(r));
         return;
     }
@@ -660,8 +723,13 @@ fn serve_writes(slot: &mut VmSlot, writes: Vec<WriteReq>, clock: &VirtClock) {
             slot.delta.writes += n;
             slot.delta.batched_ops += n;
             for (tag, _voff, data, t_enq) in writes {
-                slot.delta.bytes_written += data.len() as u64;
-                slot.delta.record_latency(clock.now().saturating_sub(t_enq));
+                let done = clock.now();
+                let n = data.len() as u64;
+                slot.delta.bytes_written += n;
+                slot.delta.record_latency(done.saturating_sub(t_enq));
+                if let Some(t) = slot.trace.as_mut() {
+                    t.record(tag, "write", n, t_enq, t_serve, done);
+                }
                 slot.rings.complete(tag, RingReply::Write(Ok(())));
             }
         }
@@ -673,9 +741,13 @@ fn serve_writes(slot: &mut VmSlot, writes: Vec<WriteReq>, clock: &VirtClock) {
             for (tag, voff, data, t_enq) in writes {
                 let n = data.len() as u64;
                 let r = slot.driver.write(voff, &data);
+                let done = clock.now();
                 slot.delta.writes += 1;
                 slot.delta.bytes_written += n;
-                slot.delta.record_latency(clock.now().saturating_sub(t_enq));
+                slot.delta.record_latency(done.saturating_sub(t_enq));
+                if let Some(t) = slot.trace.as_mut() {
+                    t.record(tag, "write", n, t_enq, t_serve, done);
+                }
                 slot.rings.complete(tag, RingReply::Write(r));
             }
         }
@@ -742,6 +814,131 @@ fn run_batch(
             BatchOp::Write { .. } => BatchReply::Write,
         })
         .collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cache::CacheConfig;
+    use crate::chaingen::{generate, ChainSpec};
+    use crate::metrics::clock::CostModel;
+    use crate::metrics::memory::MemoryAccountant;
+    use crate::qcow::image::DataMode;
+    use crate::storage::node::StorageNode;
+    use crate::vdisk::scalable::ScalableDriver;
+
+    fn test_slot() -> (Arc<StorageNode>, VmSlot, Arc<VirtClock>) {
+        let clock = VirtClock::new();
+        let node = StorageNode::new("s", clock.clone(), CostModel::default());
+        let chain = generate(
+            &*node,
+            &ChainSpec {
+                disk_size: 8 << 20,
+                chain_len: 1,
+                populated: 1.0,
+                stamped: true,
+                data_mode: DataMode::Real,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        let driver = ScalableDriver::new(
+            chain,
+            CacheConfig::new(32, 1 << 20),
+            clock.clone(),
+            CostModel::default(),
+            MemoryAccountant::new(),
+        );
+        let rings = VmRings::new(64, Arc::new(Notify::new()));
+        let slot = VmSlot {
+            name: "vm".into(),
+            driver: Box::new(driver),
+            rings,
+            stats: Arc::new(VmStats::default()),
+            delta: StatsDelta::default(),
+            vec_io_seen: VecIoSnapshot::default(),
+            trace: None,
+            runner: None,
+            dead: false,
+        };
+        (node, slot, clock)
+    }
+
+    fn submit_read(slot: &VmSlot, voff: u64, len: usize) {
+        let tag = slot.rings.next_tag();
+        slot.rings
+            .submit(SqEntry::Read { tag, voff, len, t_enq: 0 })
+            .unwrap();
+    }
+
+    /// Regression (coalescer-counter staleness): completions a client has
+    /// already reaped must be visible in the shared stats even when the
+    /// serving pass panics later in the same burst — the old code only
+    /// mirrored `vec_io()` at the *end* of `serve_slot`, so a panic (and
+    /// `kill_slot`) dropped both the StatsDelta and the coalescer
+    /// counters of every request that had already completed.
+    #[test]
+    fn panic_mid_pass_does_not_lose_observed_completions() {
+        let (_node, mut slot, clock) = test_slot();
+        // a coalescible burst: 8 contiguous reads -> one merged device read
+        for i in 0..8u64 {
+            submit_read(&slot, i * 4096, 4096);
+        }
+        // a lone write breaks the read run, so the burst above completes
+        // (and its replies are reapable) before the poison entry runs ...
+        let wtag = slot.rings.next_tag();
+        slot.rings
+            .submit(SqEntry::Write {
+                tag: wtag,
+                voff: 0,
+                data: vec![1u8; 512],
+                t_enq: 0,
+            })
+            .unwrap();
+        // ... and a read whose buffer cannot be allocated panics the pass
+        submit_read(&slot, 0, usize::MAX);
+        let res = catch_unwind(AssertUnwindSafe(|| serve_slot(&mut slot, &clock)));
+        assert!(res.is_err(), "the poison read must panic the pass");
+        // the shard loop's panic containment: kill the slot, fleet lives on
+        kill_slot(&mut slot);
+        let snap = slot.stats.snapshot();
+        assert_eq!(snap.reads, 8, "8 read completions were delivered");
+        assert_eq!(snap.writes, 1, "the write completion was delivered");
+        assert!(
+            snap.merged_ios > 0,
+            "the burst's merged device reads must survive the panic"
+        );
+        assert!(snap.coalesced_bytes > 0);
+    }
+
+    /// The coalescer counters flow through the same per-pass reap as
+    /// `StatsDelta` — and re-reaping an idle slot must not double-count
+    /// (delta watermark, not a lifetime-total store).
+    #[test]
+    fn coalescer_counters_reap_with_the_pass_flush() {
+        let (_node, mut slot, clock) = test_slot();
+        for i in 0..8u64 {
+            submit_read(&slot, i * 4096, 4096);
+        }
+        assert_eq!(serve_slot(&mut slot, &clock), 8);
+        reap_slot_stats(&mut slot);
+        let first = slot.stats.snapshot();
+        assert_eq!(first.reads, 8);
+        assert!(first.merged_ios > 0, "contiguous burst coalesced");
+        // idle pass: nothing new to reap
+        reap_slot_stats(&mut slot);
+        let second = slot.stats.snapshot();
+        assert_eq!(second.merged_ios, first.merged_ios, "no double count");
+        assert_eq!(second.coalesced_bytes, first.coalesced_bytes);
+        // a second burst adds on top (monotone counters, exporter-safe)
+        for i in 0..8u64 {
+            submit_read(&slot, i * 4096, 4096);
+        }
+        assert_eq!(serve_slot(&mut slot, &clock), 8);
+        reap_slot_stats(&mut slot);
+        let third = slot.stats.snapshot();
+        assert!(third.merged_ios > second.merged_ios);
+    }
 }
 
 /// Account a finished job and drop its runner. A *completed* job

@@ -31,8 +31,10 @@ pub struct VmStats {
     /// `Request::Batch` submissions plus worker-drained bursts).
     pub batched_ops: AtomicU64,
     /// Mirror of the driver's coalescer counters (device reads that
-    /// merged >= 2 cluster segments, and their bytes), refreshed after
-    /// every batched request.
+    /// merged >= 2 cluster segments, and their bytes). Watermark-reaped:
+    /// the shard's per-pass stats reaper fetch-adds the delta since the
+    /// last flush, so the counters stay monotone for the exporter and
+    /// never go stale between batched requests.
     pub merged_ios: AtomicU64,
     pub coalesced_bytes: AtomicU64,
     /// Worker threads of this VM that died panicking: the VM is dead
@@ -46,6 +48,12 @@ pub struct VmStats {
 impl VmStats {
     pub fn record_latency(&self, ns: u64) {
         lock_unpoisoned(&self.req_latency).record(ns);
+    }
+
+    /// A copy of the full latency distribution (the telemetry fleet
+    /// aggregate merges these across VMs at scrape time).
+    pub fn latency_histogram(&self) -> Histogram {
+        lock_unpoisoned(&self.req_latency).clone()
     }
 
     pub fn snapshot(&self) -> VmStatsSnapshot {

@@ -50,6 +50,21 @@ struct Inner {
     by_loc: BTreeMap<(String, String, u64), u64>,
     /// node -> logical bytes served by sharing instead of allocation.
     saved_bytes: HashMap<String, u64>,
+    /// Lifetime operation counters (telemetry): dedup hits that shared
+    /// an extent, CoW reference releases, and in-place retirements.
+    ops: DedupOps,
+}
+
+/// Cumulative dedup operation counters (the telemetry
+/// hit/share/CoW/reclaim families). Monotone for the exporter.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct DedupOps {
+    /// Writes served by taking a reference on an existing extent.
+    pub shares: u64,
+    /// References dropped by overwrite/free (the CoW break path).
+    pub releases: u64,
+    /// Extents withdrawn from sharing by in-place overwrite.
+    pub retires: u64,
 }
 
 /// Per-node / fleet dedup counters for status output.
@@ -110,6 +125,7 @@ impl DedupIndex {
         e.refs += 1;
         let out = e.clone();
         *inner.saved_bytes.entry(node.to_string()).or_default() += bytes;
+        inner.ops.shares += 1;
         Some(out)
     }
 
@@ -129,6 +145,7 @@ impl DedupIndex {
             inner.extents.remove(&key);
             inner.by_loc.remove(&loc);
         }
+        inner.ops.releases += 1;
         Some(left)
     }
 
@@ -142,6 +159,7 @@ impl DedupIndex {
         let loc = (node.to_string(), file.to_string(), word);
         if let Some(hash) = inner.by_loc.remove(&loc) {
             inner.extents.remove(&(node.to_string(), hash));
+            inner.ops.retires += 1;
         }
     }
 
@@ -202,6 +220,11 @@ impl DedupIndex {
         }
     }
 
+    /// Lifetime operation counters (telemetry hit/CoW/reclaim families).
+    pub fn op_counts(&self) -> DedupOps {
+        self.inner.lock().unwrap().ops
+    }
+
     /// Audit hook: extents whose backing file fails `exists` — should
     /// always be empty when the sweep wiring is correct.
     pub fn stale_extents(&self, exists: impl Fn(&str) -> bool) -> Vec<(String, u64)> {
@@ -254,6 +277,8 @@ mod tests {
         assert_eq!(ix.release("n0", "base-0", 7 << 16), Some(0));
         assert!(ix.lookup("n0", h).is_none());
         assert_eq!(ix.release("n0", "base-0", 7 << 16), None, "idempotent");
+        let ops = ix.op_counts();
+        assert_eq!((ops.shares, ops.releases, ops.retires), (1, 2, 0));
     }
 
     #[test]
@@ -284,6 +309,7 @@ mod tests {
         let h2 = content_hash(b"v2");
         ix.declare("n0", h2, "head-1", 5 << 16);
         assert!(ix.lookup("n0", h2).is_some());
+        assert_eq!(ix.op_counts().retires, 1);
     }
 
     #[test]

@@ -35,6 +35,9 @@
 //! * [`runtime`] — PJRT artifact loading/execution (the AOT bridge).
 //! * [`coordinator`] — the multi-VM storage node: router, batcher,
 //!   streaming orchestrator, placement.
+//! * [`telemetry`] — the fleet observability plane: pull-based metrics
+//!   registry + Prometheus-text exporter over every subsystem's existing
+//!   stats, and ring-buffered span tracing for sampled VMs.
 //! * [`bench`] — the figure-regeneration harness used by `cargo bench`.
 
 pub mod bench;
@@ -53,6 +56,7 @@ pub mod migrate;
 pub mod qcow;
 pub mod runtime;
 pub mod storage;
+pub mod telemetry;
 pub mod util;
 pub mod vdisk;
 

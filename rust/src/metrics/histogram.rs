@@ -66,6 +66,39 @@ impl Histogram {
         self.total
     }
 
+    /// Sum of all recorded values (the exporter's `_sum` line).
+    pub fn sum(&self) -> u128 {
+        self.sum
+    }
+
+    /// Cumulative counts at fixed, data-independent bucket bounds — the
+    /// exporter's `_bucket{le=...}` series. One bound per octave
+    /// (inclusive upper bounds `15, 31, 63, ...`), so buckets from any
+    /// two histograms align and merge exactly. The series is trimmed
+    /// after the first bound that already covers every recorded value
+    /// (the exporter appends `+Inf` itself); an empty histogram yields
+    /// one zero bucket.
+    pub fn buckets(&self) -> Vec<(u64, u64)> {
+        let mut out = Vec::new();
+        let mut cum = 0u64;
+        let groups = BUCKETS / SUB as usize;
+        for g in 0..groups {
+            let lo = g * SUB as usize;
+            let hi = lo + SUB as usize;
+            cum += self.counts[lo..hi].iter().sum::<u64>();
+            let bound = if hi >= BUCKETS {
+                u64::MAX
+            } else {
+                Self::bucket_value(hi) - 1
+            };
+            out.push((bound, cum));
+            if cum == self.total && bound >= self.max {
+                break;
+            }
+        }
+        out
+    }
+
     pub fn mean(&self) -> f64 {
         if self.total == 0 {
             0.0
@@ -193,6 +226,96 @@ mod tests {
         }
         let modes = h.modes(0.1);
         assert_eq!(modes.len(), 2, "modes={modes:?}");
+    }
+
+    #[test]
+    fn buckets_are_fixed_cumulative_and_trimmed() {
+        let mut h = Histogram::new();
+        for v in [3u64, 14, 20, 500, 500, 70_000] {
+            h.record(v);
+        }
+        let b = h.buckets();
+        // fixed octave bounds: 15, 31, 63, ...
+        assert_eq!(b[0].0, 15);
+        assert_eq!(b[1].0, 31);
+        assert_eq!(b[0].1, 2, "3 and 14 fall in the first octave");
+        assert_eq!(b[1].1, 3, "20 joins cumulatively");
+        // cumulative and monotone, ending at the total
+        let mut last = 0;
+        for &(_, c) in &b {
+            assert!(c >= last);
+            last = c;
+        }
+        assert_eq!(b.last().unwrap().1, h.count());
+        assert!(b.last().unwrap().0 >= h.max(), "trimmed after covering max");
+        // empty histogram still yields one zero bucket
+        assert_eq!(Histogram::new().buckets(), vec![(15, 0)]);
+    }
+
+    /// Property (merge ≡ whole): recording a random sample set into one
+    /// histogram must be indistinguishable — buckets, quantiles, count,
+    /// sum, min, max — from recording disjoint parts and merging.
+    #[test]
+    fn merge_of_parts_equals_whole_property() {
+        let mut rng = crate::util::rng::Rng::new(0x9157_0661);
+        for round in 0..20 {
+            let n = 1 + rng.below(400) as usize;
+            let parts = 1 + rng.below(5) as usize;
+            let mut whole = Histogram::new();
+            let mut shards: Vec<Histogram> =
+                (0..parts).map(|_| Histogram::new()).collect();
+            for i in 0..n {
+                // spread magnitudes across many octaves
+                let v = rng.below(1 << (1 + rng.below(40)));
+                whole.record(v);
+                shards[i % parts].record(v);
+            }
+            let mut merged = Histogram::new();
+            for s in &shards {
+                merged.merge(s);
+            }
+            assert_eq!(merged.count(), whole.count(), "round {round}");
+            assert_eq!(merged.sum(), whole.sum());
+            assert_eq!(merged.min(), whole.min());
+            assert_eq!(merged.max(), whole.max());
+            assert_eq!(merged.buckets(), whole.buckets());
+            for q in [0.0, 0.01, 0.25, 0.5, 0.9, 0.99, 0.999, 1.0] {
+                assert_eq!(
+                    merged.quantile(q),
+                    whole.quantile(q),
+                    "round {round} q {q}"
+                );
+            }
+        }
+    }
+
+    /// Property (quantile ≡ bucketed rank): `quantile(q)` returns
+    /// exactly the lower bound of the bucket holding the rank-`q`
+    /// sample of the sorted data (≤ the true value, within one
+    /// sub-bucket of resolution).
+    #[test]
+    fn quantile_matches_sorted_rank_property() {
+        let mut rng = crate::util::rng::Rng::new(0xC0FF_EE00);
+        for _ in 0..10 {
+            let n = 1 + rng.below(300) as usize;
+            let mut h = Histogram::new();
+            let mut vals = Vec::with_capacity(n);
+            for _ in 0..n {
+                let v = rng.below(1 << (1 + rng.below(36)));
+                h.record(v);
+                vals.push(v);
+            }
+            vals.sort_unstable();
+            for q in [0.01f64, 0.1, 0.5, 0.9, 0.99, 1.0] {
+                let target =
+                    ((q * n as f64).ceil().max(1.0) as usize).min(n) - 1;
+                let truth = vals[target];
+                let got = h.quantile(q);
+                let expect = Histogram::bucket_value(Histogram::index(truth));
+                assert_eq!(got, expect, "q={q} truth={truth}");
+                assert!(got <= truth);
+            }
+        }
     }
 
     #[test]

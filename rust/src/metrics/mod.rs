@@ -1,6 +1,11 @@
 //! Measurement substrate: virtual time, counters, latency histograms and
 //! the explicit memory accountant that stands in for the paper's RSS
 //! measurements (§4.3, Fig 10/12).
+//!
+//! These are the primitives the fleet telemetry plane
+//! ([`crate::telemetry`]) exports: [`Histogram`] renders as cumulative
+//! Prometheus buckets via [`histogram::Histogram::buckets`], and
+//! [`VirtClock`] stamps every scrape sample.
 
 pub mod clock;
 pub mod counters;

@@ -1,0 +1,357 @@
+//! The standard collector set over a [`Coordinator`]: every subsystem's
+//! existing stats surfaced as one registry.
+//!
+//! [`register_fleet`] wires eight collectors into the coordinator's
+//! registry, one per subsystem:
+//!
+//! | collector   | family prefix                  | source                    |
+//! |-------------|--------------------------------|---------------------------|
+//! | guest       | `sqemu_guest_`                 | per-VM [`VmStats`]        |
+//! | coordinator | `sqemu_shard_`                 | shard executor stats      |
+//! | storage     | `sqemu_node_`, `sqemu_iosched_`| nodes + I/O schedulers    |
+//! | blockjob    | `sqemu_jobs_`, `sqemu_job_`    | the sharded job ledgers   |
+//! | migrate     | `sqemu_migrate_`               | mirror-job convergence    |
+//! | gc          | `sqemu_gc_`                    | [`GcRegistry`] totals     |
+//! | dedup       | `sqemu_dedup_`                 | [`DedupIndex`] stats+ops  |
+//! | control     | `sqemu_control_`               | [`StateStore`] status     |
+//! | trace       | `sqemu_trace_`                 | the shared [`TraceRing`]  |
+//!
+//! Ownership: collectors for coordinator-level views hold a
+//! `Weak<Coordinator>` (the coordinator owns the registry, so a strong
+//! reference here would be a leak cycle); collectors over free-standing
+//! subsystems (nodes, GC, dedup, trace) hold their `Arc` directly.
+//!
+//! Cardinality contract (DESIGN.md §17): per-VM families export scalar
+//! counters and p50/p99 gauges only — the full latency histogram is
+//! fleet-aggregated, so label count grows O(vms) in lines, never
+//! O(vms × buckets). Job families are emitted for every [`JobKind`]
+//! even at zero, so the metric-name inventory is load-independent.
+//!
+//! Collection cost: scrape-time reads of shared atomics plus brief leaf
+//! locks (per-VM latency histograms, subsystem tables). Guest counters
+//! are read without a shard stats barrier — a scrape may lag the
+//! serving pass that is currently batching deltas by one flush, which
+//! is invisible to a monotone exporter. Nothing here runs on, or locks
+//! against, the serving cone.
+
+use super::registry::{Collector, Registry, SampleSet};
+use super::trace::TraceRing;
+use crate::blockjob::{JobKind, JobState};
+use crate::coordinator::placement::NodeSet;
+use crate::coordinator::server::Coordinator;
+use crate::dedup::DedupIndex;
+use crate::gc::GcRegistry;
+use crate::metrics::histogram::Histogram;
+use std::sync::{Arc, Weak};
+
+/// Register the standard fleet collectors into `coord`'s registry.
+/// Called once by [`Coordinator::new`] right after the coordinator is
+/// in its `Arc`.
+pub fn register_fleet(coord: &Arc<Coordinator>) {
+    let reg: Arc<Registry> = Arc::clone(coord.telemetry());
+    let weak = Arc::downgrade(coord);
+    reg.register(Arc::new(GuestCollector { coord: weak.clone() }));
+    reg.register(Arc::new(ShardCollector { coord: weak.clone() }));
+    reg.register(Arc::new(NodeCollector { nodes: Arc::clone(&coord.nodes) }));
+    reg.register(Arc::new(JobCollector { coord: weak.clone() }));
+    reg.register(Arc::new(GcCollector {
+        gc: Arc::clone(coord.gc_registry()),
+    }));
+    reg.register(Arc::new(DedupCollector {
+        dedup: Arc::clone(coord.dedup_index()),
+    }));
+    reg.register(Arc::new(ControlCollector { coord: weak }));
+    reg.register(Arc::new(TraceCollector {
+        ring: Arc::clone(coord.trace_ring()),
+    }));
+}
+
+// ------------------------------------------------------------- guest
+
+/// Per-VM service counters plus the fleet-aggregated latency histogram.
+struct GuestCollector {
+    coord: Weak<Coordinator>,
+}
+
+impl Collector for GuestCollector {
+    fn collect(&self, out: &mut SampleSet) {
+        let Some(coord) = self.coord.upgrade() else { return };
+        let mut fleet_latency = Histogram::new();
+        for (vm, stats) in coord.vm_stat_handles() {
+            let s = stats.snapshot();
+            let l = &[("vm", vm.as_str())];
+            out.counter("sqemu_guest_reads_total", "Guest read requests served.", l, s.reads);
+            out.counter("sqemu_guest_writes_total", "Guest write requests served.", l, s.writes);
+            out.counter("sqemu_guest_read_bytes_total", "Guest bytes read.", l, s.bytes_read);
+            out.counter("sqemu_guest_written_bytes_total", "Guest bytes written.", l, s.bytes_written);
+            out.counter("sqemu_guest_batched_ops_total", "Guest ops served through the vectored path.", l, s.batched_ops);
+            out.counter("sqemu_guest_merged_ios_total", "Device reads that merged >= 2 cluster segments.", l, s.merged_ios);
+            out.counter("sqemu_guest_coalesced_bytes_total", "Bytes moved by merged device reads.", l, s.coalesced_bytes);
+            out.counter("sqemu_guest_backpressure_total", "Requests blocked on a full submission ring.", l, s.backpressure);
+            out.counter("sqemu_guest_snapshots_total", "Live snapshots taken.", l, s.snapshots);
+            out.counter("sqemu_guest_streams_total", "Offline stream-merges run.", l, s.streams);
+            out.counter("sqemu_guest_worker_panics_total", "VM workers lost to a panic.", l, s.worker_panics);
+            out.gauge("sqemu_guest_req_p50_ns", "Median guest request latency (virtual ns).", l, s.req_p50_ns as f64);
+            out.gauge("sqemu_guest_req_p99_ns", "p99 guest request latency (virtual ns).", l, s.req_p99_ns as f64);
+            fleet_latency.merge(&stats.latency_histogram());
+        }
+        // one histogram for the whole fleet: per-VM bucket series would
+        // be O(vms x buckets) lines (the cardinality rule)
+        out.histogram(
+            "sqemu_guest_req_latency_ns",
+            "Guest request latency, enqueue to reply, all VMs (virtual ns).",
+            &[],
+            &fleet_latency,
+        );
+    }
+}
+
+// ------------------------------------------------------- coordinator
+
+/// Shard executor stats: the `sqemu serve` shard table as families.
+struct ShardCollector {
+    coord: Weak<Coordinator>,
+}
+
+impl Collector for ShardCollector {
+    fn collect(&self, out: &mut SampleSet) {
+        let Some(coord) = self.coord.upgrade() else { return };
+        for s in coord.shard_stats() {
+            let shard = s.shard.to_string();
+            let l = &[("shard", shard.as_str())];
+            out.gauge("sqemu_shard_vms", "VMs owned by this shard executor.", l, s.vms as f64);
+            out.gauge("sqemu_shard_queue_depth", "Live submission-ring occupancy across this shard's VMs.", l, s.queued as f64);
+            out.counter("sqemu_shard_served_total", "Guest submissions served by this shard.", l, s.served);
+            out.counter("sqemu_shard_passes_total", "Serving passes run by this shard.", l, s.passes);
+            out.counter("sqemu_shard_wakeups_total", "Park wakeups taken by this shard.", l, s.wakeups);
+        }
+    }
+}
+
+// ----------------------------------------------------------- storage
+
+/// Per-node capacity levels and I/O-scheduler device counters.
+struct NodeCollector {
+    nodes: Arc<NodeSet>,
+}
+
+impl Collector for NodeCollector {
+    fn collect(&self, out: &mut SampleSet) {
+        for n in self.nodes.nodes() {
+            let l = &[("node", n.name.as_str())];
+            out.gauge("sqemu_node_used_bytes", "Stored bytes across this node's files.", l, n.used_bytes() as f64);
+            out.gauge("sqemu_node_pressure_bytes", "Stored bytes minus condemned (what GC cannot yet reclaim).", l, n.pressure_bytes() as f64);
+            out.gauge("sqemu_node_reserved_bytes", "Capacity reserved by admitted migrations.", l, n.reserved_bytes() as f64);
+            out.gauge("sqemu_node_condemned_bytes", "Bytes awaiting deferred deletion.", l, n.condemned_bytes() as f64);
+            out.gauge("sqemu_node_logical_bytes", "Guest-addressable mapped bytes attributed to this node.", l, n.logical_bytes() as f64);
+            out.counter("sqemu_node_reclaimed_bytes_total", "Bytes physically reclaimed by GC sweeps.", l, n.reclaimed_bytes());
+            out.counter("sqemu_node_gc_deletes_total", "Files GC physically deleted.", l, n.gc_deletes());
+            out.counter("sqemu_node_list_ops_total", "Directory listings served (the paper's list-op cost).", l, n.list_ops());
+            let io = n.scheduler().snapshot();
+            out.counter("sqemu_iosched_busy_ns_total", "Device-busy virtual ns billed by the cost model.", l, io.busy_ns);
+            out.counter("sqemu_iosched_fresh_bytes_total", "Bytes transferred at device bandwidth.", l, io.fresh_bytes);
+            out.counter("sqemu_iosched_seeks_total", "Seeks billed.", l, io.seeks);
+            out.counter("sqemu_iosched_merged_seeks_total", "Seeks elided by cross-VM extent merging.", l, io.merged_seeks);
+            out.counter("sqemu_iosched_window_opens_total", "Merge windows opened.", l, io.window_opens);
+            out.gauge("sqemu_node_device_utilization", "Fraction of device-busy time spent transferring bytes.", l, n.scheduler().utilization());
+        }
+    }
+}
+
+// ---------------------------------------------------- blockjob + migrate
+
+/// The sharded job ledgers, tallied per kind — plus the migrate view
+/// (mirror counts and convergence lag) derived from the same ledger.
+struct JobCollector {
+    coord: Weak<Coordinator>,
+}
+
+impl Collector for JobCollector {
+    fn collect(&self, out: &mut SampleSet) {
+        let Some(coord) = self.coord.upgrade() else { return };
+        const KINDS: [JobKind; 5] = [
+            JobKind::Stream,
+            JobKind::Stamp,
+            JobKind::Gc,
+            JobKind::Mirror,
+            JobKind::Scan,
+        ];
+        #[derive(Default)]
+        struct Tally {
+            started: u64,
+            running: u64,
+            completed: u64,
+            failed: u64,
+            cancelled: u64,
+            increments: u64,
+            copied_bytes: u64,
+            processed: u64,
+        }
+        let mut per_kind: [Tally; 5] = Default::default();
+        let mut lag = 0u64;
+        let mut mirrors_done = 0u64;
+        for (_, st) in coord.list_jobs() {
+            let t = &mut per_kind[KINDS.iter().position(|k| *k == st.kind).unwrap_or(0)];
+            t.started += 1;
+            match st.state {
+                JobState::Running | JobState::Paused => t.running += 1,
+                JobState::Completed => t.completed += 1,
+                JobState::Failed => t.failed += 1,
+                JobState::Cancelled => t.cancelled += 1,
+            }
+            t.increments += st.increments;
+            t.copied_bytes += st.bytes_copied;
+            t.processed += st.processed;
+            if st.kind == JobKind::Mirror {
+                if st.state.is_terminal() {
+                    mirrors_done += 1;
+                } else {
+                    // clusters the mirror still has to drain before it
+                    // can converge and switch over
+                    lag += st.total.saturating_sub(st.processed);
+                }
+            }
+        }
+        // every kind is always emitted (zeros included) so the exported
+        // name/label inventory does not depend on what jobs have run
+        for (kind, t) in KINDS.iter().zip(&per_kind) {
+            let l = &[("kind", kind.name())];
+            out.counter("sqemu_jobs_started_total", "Block jobs ever started.", l, t.started);
+            out.counter("sqemu_jobs_completed_total", "Block jobs finished successfully.", l, t.completed);
+            out.counter("sqemu_jobs_failed_total", "Block jobs ended in failure.", l, t.failed);
+            out.counter("sqemu_jobs_cancelled_total", "Block jobs cancelled.", l, t.cancelled);
+            out.gauge("sqemu_jobs_running", "Block jobs currently live (running or paused).", l, t.running as f64);
+            out.counter("sqemu_job_increments_total", "Bounded job increments executed.", l, t.increments);
+            out.counter("sqemu_job_copied_bytes_total", "Bytes copied by job increments.", l, t.copied_bytes);
+            out.counter("sqemu_job_processed_clusters_total", "Virtual clusters examined by job increments.", l, t.processed);
+        }
+        out.counter(
+            "sqemu_migrate_mirrors_completed_total",
+            "Mirror migrations that reached switchover (terminal).",
+            &[],
+            mirrors_done,
+        );
+        out.gauge(
+            "sqemu_migrate_convergence_lag_clusters",
+            "Clusters live mirrors still have to drain before switchover.",
+            &[],
+            lag as f64,
+        );
+    }
+}
+
+// ---------------------------------------------------------------- gc
+
+struct GcCollector {
+    gc: Arc<GcRegistry>,
+}
+
+impl Collector for GcCollector {
+    fn collect(&self, out: &mut SampleSet) {
+        out.counter("sqemu_gc_runs_total", "GC sweeps run.", &[], self.gc.gc_runs());
+        out.counter("sqemu_gc_reclaimed_bytes_total", "Bytes reclaimed by GC sweeps.", &[], self.gc.reclaimed_total());
+        out.counter("sqemu_gc_files_deleted_total", "Files GC deleted.", &[], self.gc.files_deleted());
+        out.gauge("sqemu_gc_condemned_files", "Files in the deferred-delete set.", &[], self.gc.condemned_count() as f64);
+        out.gauge("sqemu_gc_condemned_bytes", "Bytes in the deferred-delete set.", &[], self.gc.condemned_bytes() as f64);
+    }
+}
+
+// ------------------------------------------------------------- dedup
+
+struct DedupCollector {
+    dedup: Arc<DedupIndex>,
+}
+
+impl Collector for DedupCollector {
+    fn collect(&self, out: &mut SampleSet) {
+        let s = self.dedup.fleet_stats();
+        let ops = self.dedup.op_counts();
+        out.gauge("sqemu_dedup_extents", "Shareable extents currently indexed.", &[], s.extents as f64);
+        out.gauge("sqemu_dedup_refs", "Total sharers across indexed extents.", &[], s.refs as f64);
+        out.counter("sqemu_dedup_saved_bytes_total", "Guest bytes served by sharing instead of allocation.", &[], s.saved_bytes);
+        out.counter("sqemu_dedup_shares_total", "Writes served by referencing an existing extent (hits).", &[], ops.shares);
+        out.counter("sqemu_dedup_cow_releases_total", "Extent references dropped by overwrite/free (CoW breaks).", &[], ops.releases);
+        out.counter("sqemu_dedup_retires_total", "Extents withdrawn from sharing by in-place overwrite.", &[], ops.retires);
+    }
+}
+
+// ----------------------------------------------------------- control
+
+/// StateStore status, when a control plane is attached. A fleet without
+/// one exports no `sqemu_control_` families — attachment is itself the
+/// signal.
+struct ControlCollector {
+    coord: Weak<Coordinator>,
+}
+
+impl Collector for ControlCollector {
+    fn collect(&self, out: &mut SampleSet) {
+        let Some(coord) = self.coord.upgrade() else { return };
+        let Ok(st) = coord.control_status() else { return };
+        out.gauge("sqemu_control_epoch", "Leadership epoch of the attached control plane.", &[], st.epoch as f64);
+        out.gauge("sqemu_control_generation", "Log compaction generation.", &[], st.generation as f64);
+        out.gauge("sqemu_control_log_bytes", "Bytes in the active control log.", &[], st.log_bytes as f64);
+        out.gauge("sqemu_control_records", "Records in the active control log.", &[], st.records as f64);
+        out.gauge("sqemu_control_leases", "VM ownership leases currently held.", &[], st.leases as f64);
+        out.gauge("sqemu_control_wedged", "1 when the store refused further appends after torn I/O.", &[], if st.wedged { 1.0 } else { 0.0 });
+        out.counter("sqemu_control_appends_total", "Records appended to the control log.", &[], st.appends);
+        out.counter("sqemu_control_compactions_total", "Log compactions completed.", &[], st.compactions);
+        out.counter("sqemu_control_lease_renewals_total", "Lease renewals granted.", &[], st.lease_renewals);
+    }
+}
+
+// ------------------------------------------------------------- trace
+
+struct TraceCollector {
+    ring: Arc<TraceRing>,
+}
+
+impl Collector for TraceCollector {
+    fn collect(&self, out: &mut SampleSet) {
+        out.counter("sqemu_trace_events_total", "Span events ever recorded by sampled VMs.", &[], self.ring.total());
+        out.counter("sqemu_trace_dropped_total", "Span events lost to ring eviction or slot overflow.", &[], self.ring.dropped());
+        out.gauge("sqemu_trace_buffered", "Span events currently buffered in the ring.", &[], self.ring.len() as f64);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::coordinator::server::Coordinator;
+
+    #[test]
+    fn fresh_fleet_exports_core_subsystems() {
+        let coord = Coordinator::with_fresh_nodes(2).unwrap();
+        let names = coord.telemetry().metric_names();
+        for prefix in [
+            "sqemu_shard_",
+            "sqemu_node_",
+            "sqemu_iosched_",
+            "sqemu_jobs_",
+            "sqemu_job_",
+            "sqemu_migrate_",
+            "sqemu_gc_",
+            "sqemu_dedup_",
+            "sqemu_trace_",
+        ] {
+            assert!(
+                names.iter().any(|n| n.starts_with(prefix)),
+                "no family with prefix {prefix}: {names:?}"
+            );
+        }
+        // guest families appear with VMs; the fleet aggregate is always on
+        assert!(names.contains(&"sqemu_guest_req_latency_ns".to_string()));
+        // no control plane attached: no control families
+        assert!(!names.iter().any(|n| n.starts_with("sqemu_control_")));
+        coord.shutdown();
+    }
+
+    #[test]
+    fn render_is_nonempty_and_well_typed() {
+        let coord = Coordinator::with_fresh_nodes(1).unwrap();
+        let text = coord.telemetry().render();
+        assert!(text.contains("# TYPE sqemu_node_used_bytes gauge"));
+        assert!(text.contains("# TYPE sqemu_gc_runs_total counter"));
+        assert!(text.contains("sqemu_jobs_started_total{kind=\"mirror\"} 0 "));
+        coord.shutdown();
+    }
+}

@@ -1,0 +1,37 @@
+//! Fleet telemetry plane: one observable surface over every subsystem.
+//!
+//! The paper's argument is quantitative (chain-length effects on
+//! latency, memory and device utilization), and every PR since has
+//! grown its own ad-hoc stats struct — `VmStats`, `NodeStats`, shard
+//! tables, GC/dedup/control totals — each printable only by its own CLI
+//! verb or bench. This module unifies them:
+//!
+//! * [`registry::Registry`] — a pull-based metrics registry. Subsystems
+//!   register [`registry::Collector`]s that snapshot their *existing*
+//!   shared counters (the `Arc`'d atomics the reaper pattern already
+//!   maintains) at scrape time; nothing new runs on the serve path.
+//!   [`registry::Registry::render`] emits Prometheus text format with
+//!   virtual-clock timestamps (`sqemu metrics`, the `sqemu serve`
+//!   scrape hook, the `observability` CI job).
+//! * [`trace`] — ring-buffered span events for request→shard→node hops
+//!   on trace-sampled VMs. The per-VM [`trace::TraceBuf`] is plain
+//!   executor-owned state (no locks on the serve path); the shard's
+//!   stats reaper flushes it into the shared [`trace::TraceRing`] once
+//!   per serving pass, exactly like [`crate::coordinator::stats::StatsDelta`].
+//! * [`fleet`] — the standard collector set over a
+//!   [`crate::coordinator::Coordinator`]: coordinator shards, storage
+//!   nodes + I/O schedulers, block jobs, GC, dedup, migration, the HA
+//!   control plane, and per-VM guest service stats.
+//!
+//! Collection contract (DESIGN.md §17): scrape-time reads of shared
+//! atomics and brief control-plane locks only — the shard serving cone
+//! (`sqemu-lint` `serving-lock`) stays lock-free, and per-VM label
+//! cardinality is bounded (per-VM families export scalars; full
+//! latency histograms are fleet-aggregated; tracing is sampled).
+
+pub mod fleet;
+pub mod registry;
+pub mod trace;
+
+pub use registry::{Collector, Family, Kind, Registry, Sample, SampleSet, SampleValue};
+pub use trace::{SpanEvent, TraceBuf, TraceRing};

@@ -1,0 +1,365 @@
+//! Typed metric families and the Prometheus-text-format exporter.
+//!
+//! Pull model: a [`Collector`] owns (or weakly references) a
+//! subsystem's existing stats and, at scrape time, pushes point-in-time
+//! [`Sample`]s into a [`SampleSet`]. The registry itself holds no
+//! metric state — every value is read fresh from the same shared
+//! counters the subsystem already maintains, so registering a
+//! collector adds zero work to any hot path.
+//!
+//! Rendering follows the Prometheus text exposition format: `# HELP` /
+//! `# TYPE` per family, escaped label values, cumulative `_bucket`
+//! lines (from [`Histogram::buckets`]) plus `_sum`/`_count` for
+//! histograms, and a virtual-clock timestamp (milliseconds) on every
+//! sample line.
+
+use crate::metrics::clock::VirtClock;
+use crate::metrics::histogram::Histogram;
+use crate::util::lock_unpoisoned;
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+use std::sync::{Arc, Mutex};
+
+/// Metric family type, as rendered in `# TYPE`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Kind {
+    Counter,
+    Gauge,
+    Histogram,
+}
+
+impl Kind {
+    fn name(self) -> &'static str {
+        match self {
+            Kind::Counter => "counter",
+            Kind::Gauge => "gauge",
+            Kind::Histogram => "histogram",
+        }
+    }
+}
+
+/// One sample's value.
+#[derive(Clone, Debug)]
+pub enum SampleValue {
+    /// Monotone cumulative count (name should end in `_total`).
+    Counter(u64),
+    /// Point-in-time level.
+    Gauge(f64),
+    /// Full distribution; rendered as `_bucket`/`_sum`/`_count`.
+    Histo(Histogram),
+}
+
+/// One labelled sample of a family.
+#[derive(Clone, Debug)]
+pub struct Sample {
+    /// Label pairs in insertion order (callers keep them sorted enough;
+    /// uniqueness per family is the caller's cardinality contract).
+    pub labels: Vec<(String, String)>,
+    pub value: SampleValue,
+}
+
+/// A named family: `# HELP`/`# TYPE` plus its samples.
+#[derive(Clone, Debug)]
+pub struct Family {
+    pub name: String,
+    pub help: String,
+    pub kind: Kind,
+    pub samples: Vec<Sample>,
+}
+
+/// Scrape-time accumulator handed to every collector. Families are
+/// keyed by name; two collectors contributing to the same family must
+/// agree on its kind (debug-asserted).
+#[derive(Default)]
+pub struct SampleSet {
+    families: BTreeMap<String, Family>,
+}
+
+impl SampleSet {
+    fn family(&mut self, name: &str, help: &str, kind: Kind) -> &mut Family {
+        debug_assert!(valid_name(name), "invalid metric name '{name}'");
+        let f = self.families.entry(name.to_string()).or_insert_with(|| Family {
+            name: name.to_string(),
+            help: help.to_string(),
+            kind,
+            samples: Vec::new(),
+        });
+        debug_assert_eq!(f.kind, kind, "family '{name}' registered twice with different kinds");
+        f
+    }
+
+    pub fn counter(&mut self, name: &str, help: &str, labels: &[(&str, &str)], v: u64) {
+        self.family(name, help, Kind::Counter)
+            .samples
+            .push(Sample { labels: own(labels), value: SampleValue::Counter(v) });
+    }
+
+    pub fn gauge(&mut self, name: &str, help: &str, labels: &[(&str, &str)], v: f64) {
+        self.family(name, help, Kind::Gauge)
+            .samples
+            .push(Sample { labels: own(labels), value: SampleValue::Gauge(v) });
+    }
+
+    pub fn histogram(
+        &mut self,
+        name: &str,
+        help: &str,
+        labels: &[(&str, &str)],
+        h: &Histogram,
+    ) {
+        self.family(name, help, Kind::Histogram)
+            .samples
+            .push(Sample { labels: own(labels), value: SampleValue::Histo(h.clone()) });
+    }
+}
+
+fn own(labels: &[(&str, &str)]) -> Vec<(String, String)> {
+    labels.iter().map(|(k, v)| (k.to_string(), v.to_string())).collect()
+}
+
+fn valid_name(name: &str) -> bool {
+    let mut chars = name.chars();
+    match chars.next() {
+        Some(c) if c.is_ascii_alphabetic() || c == '_' || c == ':' => {}
+        _ => return false,
+    }
+    chars.all(|c| c.is_ascii_alphanumeric() || c == '_' || c == ':')
+}
+
+/// A subsystem's scrape hook. Implementations read existing shared
+/// state (atomics, brief control-plane locks) — they must not hold
+/// anything across the call that a serving pass could block on.
+pub trait Collector: Send + Sync {
+    fn collect(&self, out: &mut SampleSet);
+}
+
+/// The fleet-wide registry. One per coordinator; subsystems register at
+/// construction, exporters call [`Registry::render`].
+pub struct Registry {
+    clock: Arc<VirtClock>,
+    /// Registered collectors. Cloned out before collecting so the lock
+    /// is never held while a collector takes subsystem locks (it stays
+    /// a leaf in the lock hierarchy).
+    collectors: Mutex<Vec<Arc<dyn Collector>>>,
+}
+
+impl Registry {
+    pub fn new(clock: Arc<VirtClock>) -> Arc<Registry> {
+        Arc::new(Registry { clock, collectors: Mutex::new(Vec::new()) })
+    }
+
+    pub fn register(&self, c: Arc<dyn Collector>) {
+        lock_unpoisoned(&self.collectors).push(c);
+    }
+
+    /// Snapshot every collector into sorted families.
+    pub fn gather(&self) -> Vec<Family> {
+        let collectors: Vec<Arc<dyn Collector>> =
+            lock_unpoisoned(&self.collectors).clone();
+        let mut set = SampleSet::default();
+        for c in &collectors {
+            c.collect(&mut set);
+        }
+        set.families.into_values().collect()
+    }
+
+    /// Sorted family names — the metric-name inventory
+    /// (`telemetry/metrics.txt`, the CI `observability` diff).
+    pub fn metric_names(&self) -> Vec<String> {
+        self.gather().into_iter().map(|f| f.name).collect()
+    }
+
+    /// Render a scrape in Prometheus text exposition format. Timestamps
+    /// are the virtual clock at gather time, in milliseconds.
+    pub fn render(&self) -> String {
+        let ts = self.clock.now() / 1_000_000;
+        let mut out = String::new();
+        for f in self.gather() {
+            let _ = writeln!(out, "# HELP {} {}", f.name, escape_help(&f.help));
+            let _ = writeln!(out, "# TYPE {} {}", f.name, f.kind.name());
+            for s in &f.samples {
+                render_sample(&mut out, &f.name, s, ts);
+            }
+        }
+        out
+    }
+}
+
+fn render_sample(out: &mut String, name: &str, s: &Sample, ts: u64) {
+    match &s.value {
+        SampleValue::Counter(v) => {
+            let _ = writeln!(out, "{name}{} {v} {ts}", label_block(&s.labels, None));
+        }
+        SampleValue::Gauge(v) => {
+            let _ = writeln!(
+                out,
+                "{name}{} {} {ts}",
+                label_block(&s.labels, None),
+                fmt_f64(*v)
+            );
+        }
+        SampleValue::Histo(h) => {
+            for (le, cum) in h.buckets() {
+                let _ = writeln!(
+                    out,
+                    "{name}_bucket{} {cum} {ts}",
+                    label_block(&s.labels, Some(&le.to_string()))
+                );
+            }
+            let _ = writeln!(
+                out,
+                "{name}_bucket{} {} {ts}",
+                label_block(&s.labels, Some("+Inf")),
+                h.count()
+            );
+            let _ = writeln!(
+                out,
+                "{name}_sum{} {} {ts}",
+                label_block(&s.labels, None),
+                h.sum()
+            );
+            let _ = writeln!(
+                out,
+                "{name}_count{} {} {ts}",
+                label_block(&s.labels, None),
+                h.count()
+            );
+        }
+    }
+}
+
+/// Gauges may be fractional; render integers without the trailing `.0`
+/// noise and non-finite values per the text-format spec.
+fn fmt_f64(v: f64) -> String {
+    if v.is_nan() {
+        "NaN".to_string()
+    } else if v.is_infinite() {
+        if v > 0.0 { "+Inf".to_string() } else { "-Inf".to_string() }
+    } else if v == v.trunc() && v.abs() < 1e15 {
+        format!("{}", v as i64)
+    } else {
+        format!("{v}")
+    }
+}
+
+fn label_block(labels: &[(String, String)], le: Option<&str>) -> String {
+    if labels.is_empty() && le.is_none() {
+        return String::new();
+    }
+    let mut out = String::from("{");
+    let mut first = true;
+    for (k, v) in labels {
+        if !first {
+            out.push(',');
+        }
+        first = false;
+        let _ = write!(out, "{k}=\"{}\"", escape_label(v));
+    }
+    if let Some(le) = le {
+        if !first {
+            out.push(',');
+        }
+        let _ = write!(out, "le=\"{le}\"");
+    }
+    out.push('}');
+    out
+}
+
+/// Label-value escaping per the text format: backslash, double-quote
+/// and newline.
+fn escape_label(v: &str) -> String {
+    let mut out = String::with_capacity(v.len());
+    for c in v.chars() {
+        match c {
+            '\\' => out.push_str("\\\\"),
+            '"' => out.push_str("\\\""),
+            '\n' => out.push_str("\\n"),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// HELP escaping: backslash and newline (quotes are legal there).
+fn escape_help(v: &str) -> String {
+    let mut out = String::with_capacity(v.len());
+    for c in v.chars() {
+        match c {
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    struct One;
+    impl Collector for One {
+        fn collect(&self, out: &mut SampleSet) {
+            out.counter("t_reads_total", "reads", &[("vm", "a")], 7);
+            out.gauge("t_depth", "queue depth", &[], 2.5);
+            let mut h = Histogram::new();
+            h.record(100);
+            h.record(200_000);
+            out.histogram("t_lat_ns", "latency", &[("vm", "a")], &h);
+        }
+    }
+
+    fn reg() -> Arc<Registry> {
+        let r = Registry::new(VirtClock::new());
+        r.register(Arc::new(One));
+        r
+    }
+
+    #[test]
+    fn renders_help_type_and_samples() {
+        let text = reg().render();
+        assert!(text.contains("# HELP t_reads_total reads"));
+        assert!(text.contains("# TYPE t_reads_total counter"));
+        assert!(text.contains("t_reads_total{vm=\"a\"} 7 "));
+        assert!(text.contains("# TYPE t_depth gauge"));
+        assert!(text.contains("t_depth 2.5 "));
+    }
+
+    #[test]
+    fn histogram_renders_cumulative_buckets_sum_count() {
+        let text = reg().render();
+        assert!(text.contains("# TYPE t_lat_ns histogram"));
+        assert!(text.contains("t_lat_ns_bucket{vm=\"a\",le=\"+Inf\"} 2 "));
+        assert!(text.contains("t_lat_ns_sum{vm=\"a\"} 200100 "));
+        assert!(text.contains("t_lat_ns_count{vm=\"a\"} 2 "));
+        // cumulative: counts along le never decrease
+        let mut last = 0u64;
+        for l in text.lines().filter(|l| l.starts_with("t_lat_ns_bucket")) {
+            let v: u64 = l.split_whitespace().nth(1).unwrap().parse().unwrap();
+            assert!(v >= last, "non-cumulative bucket line: {l}");
+            last = v;
+        }
+    }
+
+    #[test]
+    fn label_escaping() {
+        assert_eq!(escape_label("a\"b\\c\nd"), "a\\\"b\\\\c\\nd");
+        let block = label_block(&[("vm".into(), "x\"y".into())], None);
+        assert_eq!(block, "{vm=\"x\\\"y\"}");
+    }
+
+    #[test]
+    fn metric_names_sorted_unique() {
+        let names = reg().metric_names();
+        assert_eq!(names, vec!["t_depth", "t_lat_ns", "t_reads_total"]);
+    }
+
+    #[test]
+    fn name_validation() {
+        assert!(valid_name("sqemu_node_used_bytes"));
+        assert!(valid_name("_x:y"));
+        assert!(!valid_name("9abc"));
+        assert!(!valid_name("a-b"));
+        assert!(!valid_name(""));
+    }
+}

@@ -1,0 +1,286 @@
+//! Ring-buffered span events for trace-sampled VMs.
+//!
+//! A sampled VM's shard slot carries a [`TraceBuf`]: plain
+//! executor-owned state the serving pass appends to with no locks or
+//! atomics (the [`crate::coordinator::stats::StatsDelta`] discipline).
+//! The shard's per-pass stats reaper flushes pending events into the
+//! fleet-shared [`TraceRing`], a bounded mutex-guarded ring that drops
+//! the oldest events under pressure and is dumpable as JSON
+//! (`sqemu serve --trace FILE`, `sqemu metrics --trace FILE`).
+//!
+//! Cardinality rule: per-VM tracing is *sampled*
+//! ([`crate::coordinator::CoordinatorConfig::trace_sample`] picks every
+//! Nth launched VM); the unsampled majority carries `None` and pays one
+//! branch per request.
+
+use crate::util::lock_unpoisoned;
+use std::collections::VecDeque;
+use std::fmt::Write as _;
+use std::sync::{Arc, Mutex};
+
+/// Pending events one slot may hold between reaper flushes; beyond
+/// this the serving pass drops (counted) rather than grow unbounded.
+const PENDING_CAP: usize = 4096;
+
+/// One traced request: the request→shard→node hop timestamps of a
+/// single ring submission, in virtual ns.
+#[derive(Clone, Debug)]
+pub struct SpanEvent {
+    /// Owning VM (shared; one allocation per sampled VM, not per event).
+    pub vm: Arc<str>,
+    /// Ring tag of the submission.
+    pub tag: u64,
+    /// Request kind: "read", "write", "batch" or "flush".
+    pub kind: &'static str,
+    /// Payload bytes (ops count for "batch", 0 for "flush").
+    pub len: u64,
+    /// Guest enqueue into the submission ring.
+    pub enq_ns: u64,
+    /// Shard executor dequeued it (start of service).
+    pub serve_ns: u64,
+    /// Storage-node completion posted back to the guest.
+    pub done_ns: u64,
+}
+
+struct RingInner {
+    events: VecDeque<SpanEvent>,
+    /// Events ever recorded (kept + evicted + slot-dropped).
+    total: u64,
+    /// Events lost to ring eviction or a full pending buffer.
+    dropped: u64,
+}
+
+/// Fleet-shared bounded event ring. The mutex is a leaf lock touched
+/// only by per-pass reaper flushes and dump/scrape readers — never by
+/// a serving pass.
+pub struct TraceRing {
+    cap: usize,
+    inner: Mutex<RingInner>,
+}
+
+impl TraceRing {
+    pub fn new(cap: usize) -> Arc<TraceRing> {
+        Arc::new(TraceRing {
+            cap: cap.max(1),
+            inner: Mutex::new(RingInner {
+                events: VecDeque::new(),
+                total: 0,
+                dropped: 0,
+            }),
+        })
+    }
+
+    /// Reaper-side bulk append (plus `slot_dropped` events a full
+    /// pending buffer discarded before they got here).
+    pub fn extend(&self, events: impl IntoIterator<Item = SpanEvent>, slot_dropped: u64) {
+        let mut inner = lock_unpoisoned(&self.inner);
+        inner.total += slot_dropped;
+        inner.dropped += slot_dropped;
+        for e in events {
+            inner.total += 1;
+            if inner.events.len() >= self.cap {
+                inner.events.pop_front();
+                inner.dropped += 1;
+            }
+            inner.events.push_back(e);
+        }
+    }
+
+    /// Events currently buffered.
+    pub fn len(&self) -> usize {
+        lock_unpoisoned(&self.inner).events.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Events ever recorded (including dropped).
+    pub fn total(&self) -> u64 {
+        lock_unpoisoned(&self.inner).total
+    }
+
+    /// Events lost to eviction or slot-buffer overflow.
+    pub fn dropped(&self) -> u64 {
+        lock_unpoisoned(&self.inner).dropped
+    }
+
+    /// Copy out the buffered events, oldest first.
+    pub fn snapshot(&self) -> Vec<SpanEvent> {
+        lock_unpoisoned(&self.inner).events.iter().cloned().collect()
+    }
+
+    /// Dump the buffered spans as a JSON document.
+    pub fn to_json(&self) -> String {
+        let (events, total, dropped) = {
+            let inner = lock_unpoisoned(&self.inner);
+            (
+                inner.events.iter().cloned().collect::<Vec<_>>(),
+                inner.total,
+                inner.dropped,
+            )
+        };
+        let mut out = String::new();
+        let _ = writeln!(out, "{{");
+        let _ = writeln!(out, "  \"schema\": \"sqemu-trace/1\",");
+        let _ = writeln!(out, "  \"total\": {total},");
+        let _ = writeln!(out, "  \"dropped\": {dropped},");
+        let _ = writeln!(out, "  \"spans\": [");
+        for (i, e) in events.iter().enumerate() {
+            let _ = write!(
+                out,
+                "    {{\"vm\": \"{}\", \"tag\": {}, \"kind\": \"{}\", \
+                 \"len\": {}, \"enq_ns\": {}, \"serve_ns\": {}, \
+                 \"done_ns\": {}}}",
+                json_escape(&e.vm),
+                e.tag,
+                e.kind,
+                e.len,
+                e.enq_ns,
+                e.serve_ns,
+                e.done_ns,
+            );
+            let _ = writeln!(out, "{}", if i + 1 < events.len() { "," } else { "" });
+        }
+        let _ = writeln!(out, "  ]");
+        let _ = writeln!(out, "}}");
+        out
+    }
+}
+
+fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            c if (c as u32) < 0x20 => {
+                let _ = write!(out, "\\u{:04x}", c as u32);
+            }
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// Per-slot event accumulator for one trace-sampled VM. Owned by the
+/// VM's shard executor: `record` is called from the serving pass (plain
+/// vec push, bounded), `flush` from the per-pass stats reaper.
+pub struct TraceBuf {
+    vm: Arc<str>,
+    ring: Arc<TraceRing>,
+    pending: Vec<SpanEvent>,
+    dropped: u64,
+}
+
+impl TraceBuf {
+    pub fn new(vm: &str, ring: Arc<TraceRing>) -> TraceBuf {
+        TraceBuf { vm: Arc::from(vm), ring, pending: Vec::new(), dropped: 0 }
+    }
+
+    /// Record one served request's hop timestamps (serving pass; no
+    /// locks — drops beyond [`PENDING_CAP`] until the next flush).
+    pub fn record(
+        &mut self,
+        tag: u64,
+        kind: &'static str,
+        len: u64,
+        enq_ns: u64,
+        serve_ns: u64,
+        done_ns: u64,
+    ) {
+        if self.pending.len() >= PENDING_CAP {
+            self.dropped += 1;
+            return;
+        }
+        self.pending.push(SpanEvent {
+            vm: Arc::clone(&self.vm),
+            tag,
+            kind,
+            len,
+            enq_ns,
+            serve_ns,
+            done_ns,
+        });
+    }
+
+    /// Drain pending events into the shared ring (reaper path).
+    pub fn flush(&mut self) {
+        if self.pending.is_empty() && self.dropped == 0 {
+            return;
+        }
+        let dropped = std::mem::take(&mut self.dropped);
+        self.ring.extend(self.pending.drain(..), dropped);
+    }
+}
+
+impl Drop for TraceBuf {
+    fn drop(&mut self) {
+        self.flush();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn buf(ring: &Arc<TraceRing>) -> TraceBuf {
+        TraceBuf::new("vm-0", Arc::clone(ring))
+    }
+
+    #[test]
+    fn record_flush_snapshot_roundtrip() {
+        let ring = TraceRing::new(16);
+        let mut b = buf(&ring);
+        b.record(1, "read", 4096, 10, 20, 30);
+        b.record(2, "write", 512, 11, 21, 31);
+        assert_eq!(ring.len(), 0, "nothing shared before the reaper flush");
+        b.flush();
+        let spans = ring.snapshot();
+        assert_eq!(spans.len(), 2);
+        assert_eq!(&*spans[0].vm, "vm-0");
+        assert_eq!(spans[1].kind, "write");
+        assert!(spans[0].enq_ns <= spans[0].serve_ns);
+        assert_eq!(ring.total(), 2);
+        assert_eq!(ring.dropped(), 0);
+    }
+
+    #[test]
+    fn ring_bounds_and_counts_drops() {
+        let ring = TraceRing::new(4);
+        let mut b = buf(&ring);
+        for i in 0..10 {
+            b.record(i, "read", 4096, i, i, i);
+        }
+        b.flush();
+        assert_eq!(ring.len(), 4, "bounded");
+        assert_eq!(ring.total(), 10);
+        assert_eq!(ring.dropped(), 6);
+        // oldest evicted: the survivors are the newest four
+        assert_eq!(ring.snapshot()[0].tag, 6);
+    }
+
+    #[test]
+    fn json_dump_is_well_formed_enough() {
+        let ring = TraceRing::new(8);
+        let mut b = TraceBuf::new("vm\"x", Arc::clone(&ring));
+        b.record(7, "flush", 0, 1, 2, 3);
+        b.flush();
+        let j = ring.to_json();
+        assert!(j.contains("\"schema\": \"sqemu-trace/1\""));
+        assert!(j.contains("\\\"x"), "vm name escaped: {j}");
+        assert!(j.contains("\"tag\": 7"));
+        assert_eq!(j.matches('{').count(), j.matches('}').count());
+    }
+
+    #[test]
+    fn drop_flushes_pending() {
+        let ring = TraceRing::new(8);
+        {
+            let mut b = buf(&ring);
+            b.record(1, "read", 1, 1, 1, 1);
+        }
+        assert_eq!(ring.len(), 1, "TraceBuf::drop flushed");
+    }
+}

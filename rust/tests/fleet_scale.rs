@@ -189,6 +189,85 @@ fn sharded_execution_matches_single_executor() {
     single.shutdown();
 }
 
+/// Telemetry must be invisible to the data plane: the same deterministic
+/// scripts on a fleet with tracing sampled at every VM — and a scraper
+/// thread hammering the exporter throughout — leave byte-identical disks
+/// and identical service counters to a telemetry-quiet fleet.
+#[test]
+fn telemetry_and_tracing_do_not_perturb_execution() {
+    const FLEET: usize = 32;
+    let plain = coordinator(2, 4);
+    let clock = VirtClock::new();
+    let set = (0..2)
+        .map(|i| {
+            StorageNode::new(&format!("node-{i}"), clock.clone(), CostModel::default())
+        })
+        .collect();
+    let traced = Coordinator::new(
+        Arc::new(NodeSet::new(set).unwrap()),
+        clock,
+        CoordinatorConfig { shards: 4, trace_sample: 1, ..Default::default() },
+        RuntimeService::try_default(),
+    );
+    for (coord, scrape) in [(&plain, false), (&traced, true)] {
+        let stop = Arc::new(AtomicBool::new(false));
+        let scraper = scrape.then(|| {
+            let coord = Arc::clone(coord);
+            let stop = Arc::clone(&stop);
+            std::thread::spawn(move || {
+                let mut scrapes = 0u64;
+                while !stop.load(Ordering::Relaxed) {
+                    let text = coord.telemetry().render();
+                    assert!(text.contains("# TYPE sqemu_shard_vms gauge"));
+                    scrapes += 1;
+                }
+                scrapes
+            })
+        });
+        let mut handles = Vec::new();
+        for t in 0..4usize {
+            let coord = Arc::clone(coord);
+            handles.push(std::thread::spawn(move || {
+                for i in (t..FLEET).step_by(4) {
+                    let name = format!("tel-{i:03}");
+                    let client =
+                        coord.launch_vm(&name, tiny_vm(&name, i as u64, 1)).unwrap();
+                    run_script(&client, i as u64);
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        stop.store(true, Ordering::Relaxed);
+        if let Some(s) = scraper {
+            assert!(s.join().unwrap() > 0, "the scraper thread never ran");
+        }
+    }
+    for i in 0..FLEET {
+        let name = format!("tel-{i:03}");
+        let (a, b) = (plain.client(&name).unwrap(), traced.client(&name).unwrap());
+        for k in 0..14u64 {
+            assert_eq!(
+                a.read(k * CLUSTER, 512).unwrap(),
+                b.read(k * CLUSTER, 512).unwrap(),
+                "{name} cluster {k} diverged with telemetry enabled"
+            );
+        }
+        let (sa, sb) =
+            (plain.vm_stats(&name).unwrap(), traced.vm_stats(&name).unwrap());
+        assert_eq!(
+            (sa.reads, sa.writes, sa.bytes_read, sa.bytes_written),
+            (sb.reads, sb.writes, sb.bytes_read, sb.bytes_written),
+            "{name} service counters diverged with telemetry enabled"
+        );
+    }
+    // every VM was trace-sampled: real spans reached the shared ring
+    assert!(traced.trace_ring().total() > 0, "no spans were recorded");
+    plain.shutdown();
+    traced.shutdown();
+}
+
 /// Async half of the client: many operations in flight on one VM,
 /// completions reaped out of order, program order still governs the
 /// bytes (read-your-writes through the ring).

@@ -1,0 +1,356 @@
+//! The fleet telemetry plane, end to end: the Prometheus-text scrape
+//! must parse, counters must stay monotone while the fleet serves, a
+//! 64-VM control-attached fleet must export families from every
+//! subsystem, and the exported metric-name inventory must match the
+//! checked-in `telemetry/metrics.txt` (the CI `observability` diff).
+
+use sqemu::cache::CacheConfig;
+use sqemu::chaingen::{generate, ChainSpec};
+use sqemu::control::StateStore;
+use sqemu::coordinator::server::VmChain;
+use sqemu::coordinator::{
+    Coordinator, CoordinatorConfig, JobSpec, NodeSet, VmConfig,
+};
+use sqemu::metrics::clock::{CostModel, VirtClock};
+use sqemu::qcow::image::DataMode;
+use sqemu::storage::node::StorageNode;
+use sqemu::vdisk::DriverKind;
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+const CS: u64 = 64 << 10;
+
+/// A control-attached fleet: `vms` 2-deep synthetic chains spread over
+/// `n_nodes` data nodes, capacity subsystem on, every 8th VM
+/// trace-sampled — the full-featured shape `sqemu metrics` runs.
+fn control_fleet(n_nodes: usize, vms: usize) -> Arc<Coordinator> {
+    let clock = VirtClock::new();
+    let data = (0..n_nodes)
+        .map(|i| {
+            StorageNode::new(&format!("node-{i}"), clock.clone(), CostModel::default())
+        })
+        .collect();
+    let nodes = Arc::new(NodeSet::new(data).unwrap());
+    let meta = StorageNode::new("meta-0", clock.clone(), CostModel::default());
+    let store = StateStore::open(meta).unwrap();
+    let coord = Coordinator::new(
+        Arc::clone(&nodes),
+        clock,
+        CoordinatorConfig {
+            capacity: true,
+            trace_sample: 8,
+            lease_ttl_ns: 10_000_000_000,
+            ..Default::default()
+        },
+        None,
+    );
+    coord.attach_control(store, "coord-test").unwrap();
+    coord.campaign().unwrap();
+    let threads = 8.min(vms.max(1));
+    let mut handles = Vec::new();
+    for t in 0..threads {
+        let coord = Arc::clone(&coord);
+        let nodes = Arc::clone(&nodes);
+        handles.push(std::thread::spawn(move || {
+            for v in (t..vms).step_by(threads) {
+                let name = format!("tvm-{v:02}");
+                let pin = nodes.pinned(&format!("node-{}", v % n_nodes)).unwrap();
+                generate(
+                    &pin,
+                    &ChainSpec {
+                        disk_size: 1 << 20,
+                        chain_len: 2,
+                        populated: 0.2,
+                        stamped: true,
+                        data_mode: DataMode::Synthetic,
+                        prefix: name.clone(),
+                        seed: 0x7E1E ^ v as u64,
+                        ..Default::default()
+                    },
+                )
+                .unwrap();
+                coord
+                    .launch_vm(
+                        &name,
+                        VmConfig {
+                            driver: DriverKind::Scalable,
+                            cache: CacheConfig::new(16, 32 << 10),
+                            chain: VmChain::Existing {
+                                active_name: format!("{name}-1"),
+                                data_mode: DataMode::Synthetic,
+                            },
+                        },
+                    )
+                    .unwrap();
+            }
+        }));
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+    coord
+}
+
+/// A plain (no control plane) fleet with generated chains and a little
+/// guest traffic, for the parser/monotonicity tests.
+fn busy_fleet(vms: usize) -> Arc<Coordinator> {
+    let coord = Coordinator::with_fresh_nodes(2).unwrap();
+    for v in 0..vms {
+        let name = format!("vm-{v}");
+        let client = coord
+            .launch_vm(
+                &name,
+                VmConfig {
+                    driver: DriverKind::Scalable,
+                    cache: CacheConfig::new(16, 32 << 10),
+                    chain: VmChain::Generate(ChainSpec {
+                        disk_size: 4 << 20,
+                        chain_len: 2,
+                        populated: 0.2,
+                        stamped: true,
+                        data_mode: DataMode::Synthetic,
+                        prefix: name.clone(),
+                        seed: 0xBEE ^ v as u64,
+                        ..Default::default()
+                    }),
+                },
+            )
+            .unwrap();
+        for k in 0..8u64 {
+            client.write(k * CS, vec![v as u8; 512]).unwrap();
+            client.read(k * CS, 4096).unwrap();
+        }
+        client.flush().unwrap();
+    }
+    coord
+}
+
+/// Golden parse: every line of a real scrape is either a well-formed
+/// comment or a `series value timestamp` sample whose family was
+/// declared, typed, and (for counters) named `*_total`; histogram
+/// buckets are cumulative and agree with `_count`.
+#[test]
+fn scrape_parses_as_prometheus_text() {
+    let coord = busy_fleet(4);
+    let text = coord.telemetry().render();
+    let mut typed: BTreeMap<String, String> = BTreeMap::new();
+    let mut helped = 0usize;
+    let mut samples = 0usize;
+    for line in text.lines() {
+        if let Some(rest) = line.strip_prefix("# HELP ") {
+            let (name, help) = rest.split_once(' ').expect("HELP has name + text");
+            assert!(!name.is_empty() && !help.is_empty(), "bare HELP: {line}");
+            helped += 1;
+        } else if let Some(rest) = line.strip_prefix("# TYPE ") {
+            let (name, kind) = rest.split_once(' ').expect("TYPE has name + kind");
+            assert!(
+                ["counter", "gauge", "histogram"].contains(&kind),
+                "unknown TYPE kind: {line}"
+            );
+            assert!(
+                typed.insert(name.to_string(), kind.to_string()).is_none(),
+                "family typed twice: {name}"
+            );
+        } else {
+            assert!(!line.is_empty(), "blank line in scrape");
+            let fields: Vec<&str> = line.split_whitespace().collect();
+            assert_eq!(fields.len(), 3, "sample is `series value ts`: {line}");
+            let series = fields[0];
+            let name = series.split('{').next().unwrap();
+            // histogram sample names carry a suffix over the family name
+            let family = ["_bucket", "_sum", "_count"]
+                .iter()
+                .find_map(|s| {
+                    name.strip_suffix(s).filter(|f| typed.contains_key(*f))
+                })
+                .unwrap_or(name);
+            let kind = typed
+                .get(family)
+                .unwrap_or_else(|| panic!("sample before its TYPE: {line}"));
+            if kind == "counter" {
+                assert!(
+                    family.ends_with("_total"),
+                    "counter family must end in _total: {family}"
+                );
+                fields[1].parse::<u64>().unwrap_or_else(|_| {
+                    panic!("counter value not a u64: {line}")
+                });
+            } else {
+                fields[1].parse::<f64>().unwrap_or_else(|_| {
+                    panic!("unparsable sample value: {line}")
+                });
+            }
+            fields[2].parse::<u64>().unwrap_or_else(|_| {
+                panic!("timestamp not integer milliseconds: {line}")
+            });
+            if let Some(open) = series.find('{') {
+                assert!(series.ends_with('}'), "unterminated labels: {line}");
+                for pair in series[open + 1..series.len() - 1].split(',') {
+                    let (k, v) = pair.split_once('=').unwrap_or_else(|| {
+                        panic!("label pair without '=': {line}")
+                    });
+                    assert!(!k.is_empty(), "empty label key: {line}");
+                    assert!(
+                        v.starts_with('"') && v.ends_with('"') && v.len() >= 2,
+                        "unquoted label value: {line}"
+                    );
+                }
+            }
+            samples += 1;
+        }
+    }
+    assert_eq!(helped, typed.len(), "every family has HELP and TYPE");
+    assert!(samples > typed.len(), "families render at least one sample");
+
+    // histogram structure on the fleet latency aggregate: cumulative
+    // buckets, +Inf last, equal to _count
+    let buckets: Vec<u64> = text
+        .lines()
+        .filter(|l| l.starts_with("sqemu_guest_req_latency_ns_bucket"))
+        .map(|l| l.split_whitespace().nth(1).unwrap().parse().unwrap())
+        .collect();
+    assert!(buckets.len() >= 2, "latency histogram has buckets");
+    assert!(buckets.windows(2).all(|w| w[0] <= w[1]), "buckets cumulative");
+    let count: u64 = text
+        .lines()
+        .find(|l| l.starts_with("sqemu_guest_req_latency_ns_count"))
+        .map(|l| l.split_whitespace().nth(1).unwrap().parse().unwrap())
+        .unwrap();
+    assert_eq!(*buckets.last().unwrap(), count, "+Inf bucket equals _count");
+    assert!(count > 0, "the fleet served requests");
+    coord.shutdown();
+}
+
+/// Every `*_total` series key present in consecutive scrapes must never
+/// decrease while guest load runs (steady fleet, no decommission) — the
+/// watermark-reap and ledger designs exist for exactly this property.
+#[test]
+fn counters_stay_monotone_under_load() {
+    fn total_series(text: &str) -> BTreeMap<String, u64> {
+        text.lines()
+            .filter(|l| !l.starts_with('#'))
+            .filter_map(|l| {
+                let mut it = l.split_whitespace();
+                let series = it.next()?;
+                let value = it.next()?;
+                if !series.split('{').next().unwrap().ends_with("_total") {
+                    return None;
+                }
+                Some((series.to_string(), value.parse().ok()?))
+            })
+            .collect()
+    }
+    let coord = busy_fleet(4);
+    let stop = Arc::new(AtomicBool::new(false));
+    let mut workers = Vec::new();
+    for name in coord.vm_names() {
+        let client = coord.client(&name).unwrap();
+        let stop = Arc::clone(&stop);
+        workers.push(std::thread::spawn(move || {
+            let mut k = 0u64;
+            while !stop.load(Ordering::Relaxed) {
+                if client.write((k % 32) * CS, vec![0x42; 512]).is_err() {
+                    break;
+                }
+                let reqs: Vec<(u64, usize)> =
+                    (0..4).map(|j| ((k + j) % 32 * CS, 4096)).collect();
+                if client.readv(&reqs).is_err() {
+                    break;
+                }
+                k += 1;
+            }
+        }));
+    }
+    let mut prev = total_series(&coord.telemetry().render());
+    assert!(!prev.is_empty(), "no _total series in the scrape");
+    for scrape in 0..15 {
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        let next = total_series(&coord.telemetry().render());
+        for (key, old) in &prev {
+            if let Some(new) = next.get(key) {
+                assert!(
+                    new >= old,
+                    "counter went backwards on scrape {scrape}: {key} {old} -> {new}"
+                );
+            }
+        }
+        prev = next;
+    }
+    stop.store(true, Ordering::Relaxed);
+    for w in workers {
+        w.join().unwrap();
+    }
+    coord.shutdown();
+}
+
+/// The acceptance shape: a 64-VM control-attached fleet under load
+/// emits families from all eight subsystems in one scrape.
+#[test]
+fn sixty_four_vm_fleet_exports_all_eight_subsystems() {
+    let coord = control_fleet(2, 64);
+    for name in coord.vm_names() {
+        let client = coord.client(&name).unwrap();
+        for k in 0..4u64 {
+            client.write(k * CS, vec![0u8; CS as usize]).unwrap();
+            client.read(k * CS, 4096).unwrap();
+        }
+        client.flush().unwrap();
+    }
+    // move the job/gc counters: one live stream job plus a sweep
+    let job = coord.start_job("tvm-00", JobSpec::stream(0)).unwrap();
+    coord.wait_job(&job);
+    coord.run_gc(0).unwrap();
+
+    let text = coord.telemetry().render();
+    for family in [
+        "sqemu_guest_reads_total",            // guest counters
+        "sqemu_guest_req_latency_ns",         // guest latency aggregate
+        "sqemu_shard_served_total",           // coordinator shards
+        "sqemu_node_used_bytes",              // storage capacity
+        "sqemu_iosched_busy_ns_total",        // storage device time
+        "sqemu_jobs_started_total",           // blockjob ledger
+        "sqemu_gc_runs_total",                // gc
+        "sqemu_dedup_extents",                // dedup
+        "sqemu_migrate_convergence_lag_clusters", // migrate
+        "sqemu_control_epoch",                // control plane
+        "sqemu_trace_events_total",           // tracing
+    ] {
+        assert!(
+            text.contains(&format!("# TYPE {family} ")),
+            "missing family {family}"
+        );
+    }
+    assert_eq!(
+        text.matches("sqemu_guest_reads_total{vm=").count(),
+        64,
+        "one reads series per VM"
+    );
+    // the stream job landed in the ledger as a completed stream
+    let started: u64 = text
+        .lines()
+        .find(|l| l.starts_with("sqemu_jobs_started_total{kind=\"stream\"}"))
+        .map(|l| l.split_whitespace().nth(1).unwrap().parse().unwrap())
+        .unwrap();
+    assert!(started >= 1, "stream job missing from the jobs family");
+    coord.shutdown_clean().unwrap();
+}
+
+/// The exported family inventory IS the checked-in one. Regenerate with
+/// `cargo run --release -- metrics --names > telemetry/metrics.txt`
+/// whenever a collector adds or renames a family.
+#[test]
+fn metric_inventory_matches_checked_in_list() {
+    let expected: Vec<&str> = include_str!("../../telemetry/metrics.txt")
+        .lines()
+        .filter(|l| !l.is_empty())
+        .collect();
+    let coord = control_fleet(2, 2);
+    let names = coord.telemetry().metric_names();
+    assert_eq!(
+        names, expected,
+        "telemetry/metrics.txt is stale — regenerate it with \
+         `sqemu metrics --names`"
+    );
+    coord.shutdown_clean().unwrap();
+}
